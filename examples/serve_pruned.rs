@@ -1,0 +1,58 @@
+//! Serving scenario: the dynamic batcher over a CORP-pruned model.
+//!
+//! An open-loop Poisson arrival stream feeds the engine; requests are
+//! batched greedily with a wait bound and executed through PJRT. Compares
+//! dense vs pruned under the same load — the deployment story behind the
+//! paper's Table 5 throughput column.
+//!
+//! ```text
+//! cargo run --release --example serve_pruned -- --model vit_s --rate 120
+//! ```
+
+use corp::coordinator::Coordinator;
+use corp::data::VisionGen;
+use corp::model::{ModelConfig, Scope, Sparsity};
+use corp::prune::PruneOpts;
+use corp::serve::{run_batcher, BatcherOpts};
+use corp::util::cli::Command;
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("serve_pruned", "dynamic batcher demo")
+        .opt("model", "model name", "vit_s")
+        .opt("rate", "arrival rate, req/s", "120")
+        .opt("requests", "total requests", "192")
+        .opt("sparsity", "joint sparsity", "0.5");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cmd.parse(&argv).map_err(|e| anyhow::anyhow!("{e}\n{}", cmd.usage()))?;
+
+    let mut coord = Coordinator::new()?;
+    let cfg = ModelConfig::by_name(&args.str("model"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
+
+    let dense = coord.dense(cfg)?.clone();
+    let pruned = coord
+        .prune_job(cfg, &PruneOpts {
+            sparsity: Sparsity::of(Scope::Both, s10),
+            calib_batches: coord.scale.calib_batches,
+            ..PruneOpts::default()
+        })?
+        .weights;
+
+    let exec = coord.executor(cfg);
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let bopts = BatcherOpts {
+        rate: args.f64("rate")?,
+        requests: args.usize("requests")?,
+        ..Default::default()
+    };
+    println!("load: {} req at {:.0}/s, max batch {}, max wait {:.0}ms", bopts.requests, bopts.rate, bopts.max_batch, bopts.max_wait * 1e3);
+    for (label, w) in [("dense", &dense), ("pruned", &pruned)] {
+        let s = run_batcher(&exec, w, &gen, &bopts)?;
+        println!(
+            "{label:7}: served {} | p50 {:.1}ms p95 {:.1}ms | mean batch {:.1} | {:.0} req/s",
+            s.served, s.p50_ms, s.p95_ms, s.mean_batch, s.throughput_fps
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Sparsity sweep (the Figure 2 shape, as a user-facing example): accuracy
+//! vs sparsity for CORP and the no-compensation ablation on one model.
+//!
+//! ```text
+//! cargo run --release --example sparsity_sweep -- --model vit_s --scope both
+//! ```
+
+use corp::coordinator::Coordinator;
+use corp::model::{ModelConfig, Scope, Sparsity};
+use corp::prune::{Method, PruneOpts};
+use corp::util::cli::Command;
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("sparsity_sweep", "accuracy vs sparsity")
+        .opt("model", "model name", "vit_s")
+        .opt("scope", "mlp|attn|both", "both");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cmd.parse(&argv).map_err(|e| anyhow::anyhow!("{e}\n{}", cmd.usage()))?;
+    let scope = match args.str("scope").as_str() {
+        "mlp" => Scope::Mlp,
+        "attn" => Scope::Attn,
+        _ => Scope::Both,
+    };
+
+    let mut coord = Coordinator::new()?;
+    let cfg = ModelConfig::by_name(&args.str("model"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+
+    let dense = coord.dense(cfg)?.clone();
+    let dense_acc = coord.top1(cfg, &dense, 99)?;
+    println!("{} {} sweep (dense {dense_acc:.2}%)", cfg.name, scope.label());
+    println!("{:>8} | {:>8} | {:>8} | {:>7}", "sparsity", "CORP", "naive", "gap");
+    for s in [2u8, 4, 5, 6, 7] {
+        let sp = Sparsity::of(scope, s);
+        let (corp_acc, _, _, _) = coord.accuracy_at(cfg, sp, Method::Corp, &opts)?;
+        let (naive_acc, _, _, _) = coord.accuracy_at(cfg, sp, Method::Naive, &opts)?;
+        println!(
+            "{:8.1} | {corp_acc:8.2} | {naive_acc:8.2} | {:+7.2}",
+            s as f64 / 10.0,
+            corp_acc - naive_acc
+        );
+    }
+    Ok(())
+}

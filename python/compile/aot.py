@@ -1,0 +1,295 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Every graph takes its weights as arguments, so the Rust coordinator can run
+dense, pruned, and compensated variants from the same artifact family. The
+manifest records each artifact's input/output names+shapes in order; the
+Rust runtime is entirely manifest-driven.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--force] [--only NAME_SUBSTR]
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+TRAIN_CHUNK = 20  # steps per train-chunk call (mirrored in rust train/)
+EVAL_B = 16  # evaluation / calibration / throughput-serving batch
+LAT_B = 1  # latency-serving batch
+GPT_B = 8
+SPARSITIES = list(range(0, 8))  # s10 values: 0.0 .. 0.7
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Registry:
+    """Collects (name, fn, input specs, output names) graph definitions."""
+
+    def __init__(self):
+        self.entries = []
+
+    def add(self, name, fn, inputs, out_names):
+        """inputs: list of (name, shape, dtype-str)."""
+        self.entries.append({"name": name, "fn": fn, "inputs": inputs, "out_names": out_names})
+
+
+def block_inputs(cfg, dqk, o, batch):
+    ins = [("x", (batch, cfg.n_ctx, cfg.d), "f32")]
+    for n, shape in M.block_param_spec(cfg, dqk, o):
+        ins.append((n, shape, "f32"))
+    return ins
+
+
+def build_registry() -> Registry:
+    reg = Registry()
+
+    for cfg in M.CONFIGS.values():
+        causal = cfg.kind == "gpt"
+        batches = [GPT_B] if cfg.kind == "gpt" else [EVAL_B, LAT_B]
+
+        # ---- embed ----
+        for b in batches:
+            if cfg.kind == "vit":
+                ins = [("tokens", (b, cfg.patches, cfg.patch_dim), "f32")] + [
+                    (n, s, "f32") for n, s in M.embed_param_spec(cfg)
+                ]
+                fn = lambda tokens, we, be, cls, pos, _c=cfg: (
+                    jax.vmap(lambda t: M.vit_embed_one(t, we, be, cls, pos))(tokens),
+                )
+            else:
+                ins = [("ids", (b, cfg.n_ctx), "i32")] + [
+                    (n, s, "f32") for n, s in M.embed_param_spec(cfg)
+                ]
+                fn = lambda ids, wemb, pos, _c=cfg: (
+                    jax.vmap(lambda i: M.gpt_embed_one(i, wemb, pos))(ids),
+                )
+            reg.add(f"embed_{cfg.name}_b{b}", fn, ins, ["x"])
+
+        # ---- head ----
+        for b in batches:
+            ins = [("x", (b, cfg.n_ctx, cfg.d), "f32")] + [
+                (n, s, "f32") for n, s in M.head_param_spec(cfg)
+            ]
+
+            def head_fn(x, g, bb, w, bias, _c=cfg):
+                return (jax.vmap(lambda xx: M.head_one(xx, g, bb, w, bias, _c))(x),)
+
+            reg.add(f"head_{cfg.name}_b{b}", head_fn, ins, ["logits"])
+
+        # ---- final layernorm (feature extraction for dense tasks) ----
+        b0 = batches[0]
+        ins = [
+            ("x", (b0, cfg.n_ctx, cfg.d), "f32"),
+            ("g", (cfg.d,), "f32"),
+            ("b", (cfg.d,), "f32"),
+        ]
+        reg.add(
+            f"lnf_{cfg.name}_b{b0}",
+            lambda x, g, b: (jax.vmap(lambda xx: M.ln_one(xx, g, b))(x),),
+            ins,
+            ["features"],
+        )
+
+        # ---- capture block (dense shapes; calibration pass) ----
+        def cap_fn(x, *params, _c=cfg, _causal=causal):
+            names = [n for n, _ in M.block_param_spec(_c, _c.dh, _c.mlp)]
+
+            def one(xx):
+                p = dict(zip(names, params))
+                return M.block_one(xx, p, _c, _causal, capture=True)
+
+            y, hidden, q, k = jax.vmap(one)(x)
+            return (y, hidden, q, k)
+
+        reg.add(
+            f"blockcap_{cfg.name}_b{b0}",
+            cap_fn,
+            block_inputs(cfg, cfg.dh, cfg.mlp, b0),
+            ["y", "hidden", "q", "k"],
+        )
+
+        # ---- block variants ----
+        if cfg.kind == "vit":
+            shape_set = {(cfg.dh, cfg.mlp)}
+            for s in SPARSITIES[1:]:
+                shape_set.add((M.keep_count(cfg.dh, s), cfg.mlp))
+                shape_set.add((cfg.dh, M.keep_count(cfg.mlp, s)))
+                shape_set.add((M.keep_count(cfg.dh, s), M.keep_count(cfg.mlp, s)))
+            joint_set = {(cfg.dh, cfg.mlp)} | {
+                (M.keep_count(cfg.dh, s), M.keep_count(cfg.mlp, s)) for s in SPARSITIES[1:]
+            }
+        else:
+            s = 3  # OPT experiment: 30% sparsity
+            shape_set = {
+                (cfg.dh, cfg.mlp),
+                (M.keep_count(cfg.dh, s), cfg.mlp),
+                (cfg.dh, M.keep_count(cfg.mlp, s)),
+                (M.keep_count(cfg.dh, s), M.keep_count(cfg.mlp, s)),
+            }
+            joint_set = set()
+
+        def make_block_fn(dqk, o, _c=cfg, _causal=causal):
+            names = [n for n, _ in M.block_param_spec(_c, dqk, o)]
+
+            def fn(x, *params):
+                def one(xx):
+                    return M.block_one(xx, dict(zip(names, params)), _c, _causal)
+
+                return (jax.vmap(one)(x),)
+
+            return fn
+
+        for dqk, o in sorted(shape_set):
+            reg.add(
+                f"block_{cfg.name}_q{dqk}_o{o}_b{b0}",
+                make_block_fn(dqk, o),
+                block_inputs(cfg, dqk, o, b0),
+                ["y"],
+            )
+        if cfg.kind == "vit":
+            for dqk, o in sorted(joint_set):
+                reg.add(
+                    f"block_{cfg.name}_q{dqk}_o{o}_b{LAT_B}",
+                    make_block_fn(dqk, o),
+                    block_inputs(cfg, dqk, o, LAT_B),
+                    ["y"],
+                )
+
+        # ---- train step ----
+        tb = GPT_B if cfg.kind == "gpt" else EVAL_B
+        spec = M.param_spec(cfg)
+        if cfg.kind == "vit":
+            data_ins = [
+                ("tokens", (tb, cfg.patches, cfg.patch_dim), "f32"),
+                ("labels", (tb,), "i32"),
+            ]
+        else:
+            data_ins = [("ids", (tb, cfg.n_ctx), "i32"), ("labels", (tb, cfg.n_ctx), "i32")]
+        # Chunked training: K steps per call, data for all K steps as one
+        # input slab (keeps params/optimizer state on device; §Perf L3-1).
+        k = TRAIN_CHUNK
+        chunk_data = [(n, (k, *s), d) for n, s, d in data_ins]
+        train_ins = chunk_data + [("lrs", (k,), "f32"), ("t0", (), "f32")]
+        train_ins += [(n, s, "f32") for n, s in spec]
+        train_ins += [(f"adam_m.{n}", s, "f32") for n, s in spec]
+        train_ins += [(f"adam_v.{n}", s, "f32") for n, s in spec]
+        n_params = len(spec)
+
+        def train_fn(inputs, labels, lrs, t0, *rest, _c=cfg, _n=n_params):
+            params = list(rest[:_n])
+            m_state = list(rest[_n : 2 * _n])
+            v_state = list(rest[2 * _n :])
+            new_p, new_m, new_v, losses = M.train_chunk(_c, inputs, labels, lrs, t0, params, m_state, v_state)
+            return tuple(new_p) + tuple(new_m) + tuple(new_v) + (losses,)
+
+        out_names = (
+            [n for n, _ in spec]
+            + [f"adam_m.{n}" for n, _ in spec]
+            + [f"adam_v.{n}" for n, _ in spec]
+            + ["losses"]
+        )
+        reg.add(f"train_{cfg.name}", train_fn, train_ins, out_names)
+
+        # ---- eval loss graph (gpt perplexity / vit val loss) ----
+        def evloss_fn(inputs, labels, *params, _c=cfg):
+            return (M.loss_fn(_c, list(params), inputs, labels),)
+
+        reg.add(
+            f"evloss_{cfg.name}",
+            evloss_fn,
+            data_ins + [(n, s, "f32") for n, s in spec],
+            ["loss"],
+        )
+
+    # ---- DC-ViT-like attention-free blocks (vit_b only, pruned MLP grid) ----
+    cfg = M.CONFIGS["vit_b"]
+    for s in SPARSITIES:
+        o = M.keep_count(cfg.mlp, s) if s > 0 else cfg.mlp
+        names = [n for n, _ in M.block_param_spec(cfg, cfg.dh, o)]
+        mlp_names = ["ln2.g", "ln2.b", "mlp.w1", "mlp.b1", "mlp.w2", "mlp.b2"]
+        ins = [("x", (EVAL_B, cfg.n_ctx, cfg.d), "f32")] + [
+            (n, s2, "f32") for n, s2 in M.block_param_spec(cfg, cfg.dh, o) if n in mlp_names
+        ]
+
+        def mlponly_fn(x, g, b, w1, b1, w2, b2):
+            p = {"ln2.g": g, "ln2.b": b, "mlp.w1": w1, "mlp.b1": b1, "mlp.w2": w2, "mlp.b2": b2}
+            return (jax.vmap(lambda xx: M.mlponly_block_one(xx, p))(x),)
+
+        _ = names
+        reg.add(f"mlponly_{cfg.name}_o{o}_b{EVAL_B}", mlponly_fn, ins, ["y"])
+
+    return reg
+
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def lower_entry(entry, out_dir: Path, force: bool) -> dict:
+    path = out_dir / f"{entry['name']}.hlo.txt"
+    meta = {
+        "name": entry["name"],
+        "file": path.name,
+        "inputs": [
+            {"name": n, "shape": list(s), "dtype": d} for n, s, d in entry["inputs"]
+        ],
+        "outputs": entry["out_names"],
+    }
+    if path.exists() and not force:
+        return meta
+    args = [_sds(s, DTYPES[d]) for _, s, d in entry["inputs"]]
+    t0 = time.time()
+    lowered = jax.jit(entry["fn"]).lower(*args)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    print(f"  {entry['name']}: {len(text) / 1e6:.2f} MB in {time.time() - t0:.1f}s", flush=True)
+    return meta
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=str(Path(__file__).resolve().parents[2] / "artifacts"))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default="", help="substring filter on artifact names")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    reg = build_registry()
+    manifest = []
+    t0 = time.time()
+    for entry in reg.entries:
+        # --only limits which artifacts get (re)lowered, but the manifest
+        # always describes every artifact whose HLO file is present.
+        skip = bool(args.only) and args.only not in entry["name"]
+        if skip and not (out_dir / f"{entry['name']}.hlo.txt").exists():
+            continue
+        meta = lower_entry(entry, out_dir, args.force and not skip)
+        manifest.append(meta)
+    (out_dir / "manifest.json").write_text(json.dumps({"artifacts": manifest}, indent=1))
+    print(f"{len(manifest)} artifacts ready in {time.time() - t0:.1f}s -> {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel is written as a Pallas kernel with `interpret=True` so it lowers
+to plain HLO ops executable by the CPU PJRT client (real-TPU Mosaic
+custom-calls cannot run there; see DESIGN.md §Hardware-Adaptation). Each
+kernel has a pure-jnp oracle in `ref.py` that pytest compares against.
+"""
+
+from . import attention, layernorm, mlp, gram, ref  # noqa: F401

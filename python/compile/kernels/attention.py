@@ -1,0 +1,89 @@
+"""Pallas attention kernel (flash-style streaming softmax).
+
+One grid step per query block; keys/values are consumed in tiles with a
+running max / running denominator (the numerically stable flash recurrence),
+so the full [n, n] logit matrix never materializes.
+
+CORP-specific shape: q and k may have a *pruned* head dimension d'_qk smaller
+than v's head dimension d_v; the logit `scale` stays 1/sqrt(d_h of the dense
+model) so compensated logits live on the original scale (§3.4).
+
+TPU mapping: q/k/v tiles sized for VMEM; the QKᵀ tile and the PV tile are
+both MXU matmuls; the paper's CUDA framing (threadblocks over heads) becomes
+the Pallas grid over (head, query-block). interpret=True for CPU execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .layernorm import _pick_block
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, block_k, n_keys, q_offset_blocks):
+    q = q_ref[...] * jnp.asarray(scale, q_ref.dtype)  # [bq, dqk]
+    bq = q.shape[0]
+    dv = v_ref.shape[-1]
+    n_kb = n_keys // block_k
+    # Read the grid coordinate outside the fori_loop: interpret-mode lowering
+    # cannot substitute program_id inside control-flow bodies.
+    pid = pl.program_id(0)
+
+    def body(kb, carry):
+        acc, m_run, l_run = carry
+        k_tile = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        logits = q @ k_tile.T  # [bq, block_k]
+        if causal:
+            qi = pid * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+            qi = qi + q_offset_blocks * bq
+            kj = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+            logits = jnp.where(qi >= kj, logits, _NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, dv), q.dtype)
+    m0 = jnp.full((bq,), _NEG_INF, q.dtype)
+    l0 = jnp.zeros((bq,), q.dtype)
+    acc, _, l_run = jax.lax.fori_loop(0, n_kb, body, (acc0, m0, l0))
+    o_ref[...] = acc / l_run[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q", "block_k"))
+def attention(q, k, v, scale: float, causal: bool = False, block_q: int = 64, block_k: int = 64):
+    """Single-head attention. q,k: [n, dqk]; v: [n, dv] -> [n, dv]."""
+    n, _ = q.shape
+    dv = v.shape[-1]
+    bq = _pick_block(n, block_q)
+    bk = _pick_block(n, block_k)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, block_k=bk, n_keys=n, q_offset_blocks=0
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, q.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((n, k.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((n, dv), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dv), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def multi_head_attention(q, k, v, scale: float, causal: bool = False):
+    """vmap the single-head kernel over a leading heads axis.
+
+    q, k: [h, n, dqk]; v: [h, n, dv] -> [h, n, dv].
+    """
+    return jax.vmap(lambda qq, kk, vv: attention(qq, kk, vv, scale, causal))(q, k, v)

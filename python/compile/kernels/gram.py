@@ -1,0 +1,48 @@
+"""Pallas Gram-accumulation kernel: G = XᵀX over the sample axis.
+
+This is the calibration-statistics offload: the covariance blocks of CORP's
+ridge systems (Eq. 10) are assembled from Gram matrices of activation
+batches. The grid tiles (row-block i, col-block j, sample-block t) and
+accumulates partial products into the [d, d] output, mirroring how a TPU
+would keep a G tile resident in VMEM while streaming X from HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .layernorm import _pick_block
+
+
+def _gram_kernel(x_i_ref, x_j_ref, o_ref):
+    t = pl.program_id(2)
+    part = x_i_ref[...].T @ x_j_ref[...]
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(t != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n"))
+def gram(x, block_d: int = 128, block_n: int = 128):
+    """Gram matrix XᵀX. x: [n, d] -> [d, d]."""
+    n, d = x.shape
+    bd = _pick_block(d, block_d)
+    bn = _pick_block(n, block_n)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(d // bd, d // bd, n // bn),
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, t: (t, i)),
+            pl.BlockSpec((bn, bd), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bd, bd), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), x.dtype),
+        interpret=True,
+    )(x, x)

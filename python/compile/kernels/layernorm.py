@@ -1,0 +1,47 @@
+"""Pallas layernorm kernel.
+
+Tiles rows of the token matrix; each grid step normalizes a row block over
+the feature axis in VMEM. On TPU the row tile would be sized so that
+(block_rows × d × 4B) plus the γ/β vectors fit VMEM; in interpret mode the
+same BlockSpec structure runs on CPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (keeps grids exact)."""
+    for cand in range(min(n, target), 0, -1):
+        if n % cand == 0:
+            return cand
+    return n
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) / jnp.sqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def layernorm(x, gamma, beta, eps: float = 1e-6, block_rows: int = 32):
+    """LayerNorm over the trailing axis. x: [n, d]; gamma/beta: [d]."""
+    n, d = x.shape
+    bn = _pick_block(n, block_rows)
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,86 @@
+"""Pallas fused-MLP kernel: GELU(x·W1 + b1)·W2 + b2.
+
+The grid tiles the *hidden* dimension — the axis CORP prunes. Each grid step
+computes one hidden tile's contribution `gelu(x W1[:, t] + b1[t]) W2[t, :]`
+and accumulates into the output block, so removing hidden channels is
+literally removing grid steps. The bias b2 is added on the first step.
+
+TPU mapping: a hidden tile of 128 keeps both weight tiles MXU-shaped
+(d×128 and 128×d bf16 blocks) and the x row-block resident in VMEM across
+steps; interpret=True runs the identical schedule on CPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .layernorm import _pick_block
+
+
+def _gelu(x):
+    # Tanh-approximate GELU — the erf HLO opcode is rejected by the
+    # xla_extension 0.5.1 text parser (see ref.gelu).
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    t = pl.program_id(0)
+    h = _gelu(x_ref[...] @ w1_ref[...] + b1_ref[...])
+    contrib = h @ w2_ref[...]
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = contrib + b2_ref[...]
+
+    @pl.when(t != 0)
+    def _acc():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("block_hidden",))
+def mlp(x, w1, b1, w2, b2, block_hidden: int = 128):
+    """Fused MLP. x: [n, d], w1: [d, o], b1: [o], w2: [o, d], b2: [d]."""
+    n, d = x.shape
+    o = w1.shape[1]
+    bo = _pick_block(o, block_hidden)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=(o // bo,),
+        in_specs=[
+            pl.BlockSpec((n, d), lambda t: (0, 0)),
+            pl.BlockSpec((d, bo), lambda t: (0, t)),
+            pl.BlockSpec((bo,), lambda t: (t,)),
+            pl.BlockSpec((bo, d), lambda t: (t, 0)),
+            pl.BlockSpec((d,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, d), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+def _hidden_kernel(x_ref, w1_ref, b1_ref, o_ref):
+    o_ref[...] = _gelu(x_ref[...] @ w1_ref[...] + b1_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_hidden",))
+def mlp_hidden(x, w1, b1, block_hidden: int = 128):
+    """Hidden activation GELU(x W1 + b1) — what calibration captures."""
+    n, d = x.shape
+    o = w1.shape[1]
+    bo = _pick_block(o, block_hidden)
+    return pl.pallas_call(
+        _hidden_kernel,
+        grid=(o // bo,),
+        in_specs=[
+            pl.BlockSpec((n, d), lambda t: (0, 0)),
+            pl.BlockSpec((d, bo), lambda t: (0, t)),
+            pl.BlockSpec((bo,), lambda t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((n, bo), lambda t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((n, o), x.dtype),
+        interpret=True,
+    )(x, w1, b1)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+asserts allclose between each Pallas kernel (interpret mode) and the oracle
+over a sweep of shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-6):
+    """LayerNorm over the trailing dimension."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def gelu(x):
+    """Tanh-approximate GELU (jax.nn.gelu(approximate=True)).
+
+    The erf-based exact GELU lowers to the `erf` HLO opcode, which the
+    xla_extension 0.5.1 text parser rejects — the tanh form uses only
+    classic opcodes (multiply/add/tanh) and parses cleanly.
+    """
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def mlp(x, w1, b1, w2, b2):
+    """Transformer MLP: GELU(x W1 + b1) W2 + b2.
+
+    x: [n, d], w1: [d, o], b1: [o], w2: [o, d], b2: [d].
+    """
+    h = gelu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def mlp_hidden(x, w1, b1):
+    """The hidden activation the CORP calibration pass captures."""
+    return gelu(x @ w1 + b1)
+
+
+def attention(q, k, v, scale: float, causal: bool = False):
+    """Softmax attention for one head.
+
+    q, k: [n, dqk] (dqk may be pruned below dv), v: [n, dv].
+    `scale` multiplies the logits; CORP keeps 1/sqrt(d_h of the dense model)
+    after pruning so compensated logits stay on the original scale.
+    """
+    logits = (q @ k.T) * scale
+    if causal:
+        n = q.shape[0]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v
+
+
+def gram(x):
+    """Gram matrix XᵀX over the leading (sample) axis. x: [n, d] -> [d, d]."""
+    return x.T @ x

@@ -1,0 +1,307 @@
+"""Layer-2 JAX model definitions (build time only).
+
+Weights are *arguments* of every graph — the Rust coordinator owns the
+weights, so one HLO artifact per shape configuration serves any depth and
+any weight state (dense, pruned, compensated). Canonical parameter order is
+defined by `param_spec` and exported through the manifest.
+
+Inference / calibration graphs call the Layer-1 Pallas kernels; the training
+step uses the pure-jnp references (`kernels/ref.py`) because `pallas_call`
+has no autodiff rule — the serving path is the kernel path, the one-time
+training path is plain L2 JAX. Both are asserted equal by pytest.
+"""
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as katt
+from .kernels import layernorm as kln
+from .kernels import mlp as kmlp
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Configs (mirrored by rust/src/model/config.rs)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    kind: str  # "vit" | "gpt"
+    d: int
+    heads: int
+    layers: int
+    mlp: int
+    n_ctx: int  # vit: patches + 1 (CLS); gpt: sequence length
+    patches: int = 16
+    patch_dim: int = 48  # 4x4 patches, 3 channels
+    classes: int = 16
+    vocab: int = 96
+
+    @property
+    def dh(self) -> int:
+        assert self.d % self.heads == 0
+        return self.d // self.heads
+
+
+# The scaled DeiT family (CPU-feasible; see DESIGN.md §Substitutions) plus a
+# char-level GPT standing in for OPT.
+CONFIGS = {
+    "vit_t": ModelConfig("vit_t", "vit", d=96, heads=3, layers=6, mlp=384, n_ctx=17),
+    "vit_s": ModelConfig("vit_s", "vit", d=128, heads=4, layers=8, mlp=512, n_ctx=17),
+    "vit_b": ModelConfig("vit_b", "vit", d=192, heads=6, layers=10, mlp=768, n_ctx=17),
+    "vit_l": ModelConfig("vit_l", "vit", d=256, heads=8, layers=12, mlp=1024, n_ctx=17),
+    "vit_h": ModelConfig("vit_h", "vit", d=320, heads=10, layers=14, mlp=1280, n_ctx=17),
+    "gpt_s": ModelConfig("gpt_s", "gpt", d=128, heads=4, layers=6, mlp=512, n_ctx=64),
+}
+
+
+def keep_count(dim: int, s10: int) -> int:
+    """Kept size of a dimension at sparsity s10/10 (integer arithmetic so
+    Python and Rust agree bit-exactly)."""
+    assert 0 <= s10 <= 9
+    return max(1, (dim * (10 - s10) + 5) // 10)
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+
+def block_param_spec(cfg: ModelConfig, dqk: int, o: int) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Per-block parameters. dqk = per-head q/k dim (pruned or dense);
+    o = MLP hidden dim (pruned or dense). V keeps the dense head dim."""
+    d, h, dh = cfg.d, cfg.heads, cfg.dh
+    return [
+        ("ln1.g", (d,)),
+        ("ln1.b", (d,)),
+        ("attn.wq", (d, h * dqk)),
+        ("attn.bq", (h * dqk,)),
+        ("attn.wk", (d, h * dqk)),
+        ("attn.bk", (h * dqk,)),
+        ("attn.wv", (d, h * dh)),
+        ("attn.bv", (h * dh,)),
+        ("attn.wo", (h * dh, d)),
+        ("attn.bo", (d,)),
+        ("ln2.g", (d,)),
+        ("ln2.b", (d,)),
+        ("mlp.w1", (d, o)),
+        ("mlp.b1", (o,)),
+        ("mlp.w2", (o, d)),
+        ("mlp.b2", (d,)),
+    ]
+
+
+def embed_param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    if cfg.kind == "vit":
+        return [
+            ("embed.w", (cfg.patch_dim, cfg.d)),
+            ("embed.b", (cfg.d,)),
+            ("embed.cls", (cfg.d,)),
+            ("embed.pos", (cfg.n_ctx, cfg.d)),
+        ]
+    return [
+        ("embed.w", (cfg.vocab, cfg.d)),
+        ("embed.pos", (cfg.n_ctx, cfg.d)),
+    ]
+
+
+def head_param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = cfg.classes if cfg.kind == "vit" else cfg.vocab
+    return [
+        ("head.ln.g", (cfg.d,)),
+        ("head.ln.b", (cfg.d,)),
+        ("head.w", (cfg.d, out)),
+        ("head.b", (out,)),
+    ]
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical full-model (dense) parameter order."""
+    spec = list(embed_param_spec(cfg))
+    for layer in range(cfg.layers):
+        for name, shape in block_param_spec(cfg, cfg.dh, cfg.mlp):
+            spec.append((f"blocks.{layer}.{name}", shape))
+    spec.extend(head_param_spec(cfg))
+    return spec
+
+
+# --------------------------------------------------------------------------
+# Graph bodies (single example; vmapped over batch at the graph boundary)
+# --------------------------------------------------------------------------
+
+
+def vit_embed_one(tokens, we, be, cls, pos):
+    """tokens: [P, pd] -> [P+1, d]."""
+    x = tokens @ we + be
+    x = jnp.concatenate([cls[None, :], x], axis=0)
+    return x + pos
+
+
+def gpt_embed_one(ids, wemb, pos):
+    """ids: [n] int32 -> [n, d] (one-hot matmul keeps the graph gather-free)."""
+    onehot = jax.nn.one_hot(ids, wemb.shape[0], dtype=wemb.dtype)
+    return onehot @ wemb + pos
+
+
+def _split_heads(x, h):
+    n, hd = x.shape
+    return x.reshape(n, h, hd // h).transpose(1, 0, 2)  # [h, n, dh]
+
+
+def _merge_heads(x):
+    h, n, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(n, h * dh)
+
+
+def block_one(x, p, cfg: ModelConfig, causal: bool, use_pallas: bool = True, capture: bool = False):
+    """One transformer block on a single example x: [n, d].
+
+    p: dict of per-block params (pruned shapes allowed for wq/wk/w1/w2).
+    Returns y, or (y, hidden, Q, K) when capture=True.
+    """
+    scale = 1.0 / math.sqrt(cfg.dh)  # dense-head scale even when dqk < dh (§3.4)
+    h = cfg.heads
+    if use_pallas:
+        xn = kln.layernorm(x, p["ln1.g"], p["ln1.b"])
+    else:
+        xn = ref.layernorm(x, p["ln1.g"], p["ln1.b"])
+    q = _split_heads(xn @ p["attn.wq"] + p["attn.bq"], h)  # [h, n, dqk]
+    k = _split_heads(xn @ p["attn.wk"] + p["attn.bk"], h)
+    v = _split_heads(xn @ p["attn.wv"] + p["attn.bv"], h)  # [h, n, dh]
+    if use_pallas:
+        att = katt.multi_head_attention(q, k, v, scale, causal)
+    else:
+        att = jnp.stack([ref.attention(q[i], k[i], v[i], scale, causal) for i in range(h)])
+    y = x + (_merge_heads(att) @ p["attn.wo"] + p["attn.bo"])
+    if use_pallas:
+        yn = kln.layernorm(y, p["ln2.g"], p["ln2.b"])
+        hidden = kmlp.mlp_hidden(yn, p["mlp.w1"], p["mlp.b1"])
+    else:
+        yn = ref.layernorm(y, p["ln2.g"], p["ln2.b"])
+        hidden = ref.mlp_hidden(yn, p["mlp.w1"], p["mlp.b1"])
+    z = y + (hidden @ p["mlp.w2"] + p["mlp.b2"])
+    if capture:
+        return z, hidden, q, k
+    return z
+
+
+def mlponly_block_one(x, p, use_pallas: bool = True):
+    """DC-ViT-like block with the attention module removed."""
+    if use_pallas:
+        yn = kln.layernorm(x, p["ln2.g"], p["ln2.b"])
+        return x + kmlp.mlp(yn, p["mlp.w1"], p["mlp.b1"], p["mlp.w2"], p["mlp.b2"])
+    yn = ref.layernorm(x, p["ln2.g"], p["ln2.b"])
+    return x + ref.mlp(yn, p["mlp.w1"], p["mlp.b1"], p["mlp.w2"], p["mlp.b2"])
+
+
+def head_one(x, g, b, w, bias, cfg: ModelConfig, use_pallas: bool = True):
+    """Classification / LM head on [n, d]."""
+    if use_pallas:
+        xn = kln.layernorm(x, g, b)
+    else:
+        xn = ref.layernorm(x, g, b)
+    if cfg.kind == "vit":
+        return xn[0] @ w + bias  # CLS token logits [classes]
+    return xn @ w + bias  # per-position logits [n, vocab]
+
+
+def ln_one(x, g, b, use_pallas: bool = True):
+    if use_pallas:
+        return kln.layernorm(x, g, b)
+    return ref.layernorm(x, g, b)
+
+
+# --------------------------------------------------------------------------
+# Full forward + loss (train path: pure-jnp, differentiable)
+# --------------------------------------------------------------------------
+
+
+def _params_to_tree(cfg: ModelConfig, flat: List[jnp.ndarray]):
+    """Flat canonical list -> (embed dict, [block dicts], head dict)."""
+    spec = param_spec(cfg)
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    named = dict(zip([n for n, _ in spec], flat))
+    embed = {n.split("embed.")[1]: named[n] for n, _ in embed_param_spec(cfg) for n in [n]}
+    blocks = []
+    for layer in range(cfg.layers):
+        blocks.append(
+            {n: named[f"blocks.{layer}.{n}"] for n, _ in block_param_spec(cfg, cfg.dh, cfg.mlp)}
+        )
+    head = {n: named[n] for n, _ in head_param_spec(cfg)}
+    return embed, blocks, head
+
+
+def forward_one(cfg: ModelConfig, flat_params, inp, use_pallas: bool = False):
+    """Full dense forward for a single example (train path)."""
+    embed, blocks, head = _params_to_tree(cfg, flat_params)
+    if cfg.kind == "vit":
+        x = vit_embed_one(inp, embed["w"], embed["b"], embed["cls"], embed["pos"])
+        causal = False
+    else:
+        x = gpt_embed_one(inp, embed["w"], embed["pos"])
+        causal = True
+    for p in blocks:
+        x = block_one(x, p, cfg, causal, use_pallas=use_pallas)
+    return head_one(x, head["head.ln.g"], head["head.ln.b"], head["head.w"], head["head.b"], cfg, use_pallas=use_pallas)
+
+
+def loss_fn(cfg: ModelConfig, flat_params, inputs, labels):
+    """Mean cross-entropy. vit: labels [B]; gpt: labels [B, n] (next tokens)."""
+    logits = jax.vmap(lambda i: forward_one(cfg, flat_params, i))(inputs)
+    if cfg.kind == "vit":
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def train_chunk(cfg: ModelConfig, inputs, labels, lrs, t0, flat_params, m_state, v_state):
+    """K Adam steps in one graph via lax.scan.
+
+    inputs: [K, B, ...] per-step batches, labels: [K, B, ...], lrs: [K],
+    t0: scalar f32 (1-based Adam step counter at chunk start).
+    Returns (params', m', v', losses [K]).
+
+    Running K steps per PJRT call keeps parameters and optimizer state on
+    device across the chunk — the per-step host↔device round trip of the
+    whole parameter set was the dominant training cost (§Perf L3-1).
+    """
+    n_p = len(flat_params)
+
+    def body(carry, xs):
+        params, m, v = carry[:n_p], carry[n_p : 2 * n_p], carry[2 * n_p :]
+        inp, lab, lr, i = xs
+        new_p, new_m, new_v, loss = train_step(cfg, inp, lab, lr, t0 + i, list(params), list(m), list(v))
+        return tuple(new_p) + tuple(new_m) + tuple(new_v), loss
+
+    k = inputs.shape[0]
+    carry0 = tuple(flat_params) + tuple(m_state) + tuple(v_state)
+    carry, losses = jax.lax.scan(body, carry0, (inputs, labels, lrs, jnp.arange(k, dtype=jnp.float32)))
+    return list(carry[:n_p]), list(carry[n_p : 2 * n_p]), list(carry[2 * n_p :]), losses
+
+
+def train_step(cfg: ModelConfig, inputs, labels, lr, t, flat_params, m_state, v_state):
+    """One Adam step (β1=0.9, β2=0.999) with bias correction at step `t`
+    (1-based, f32 scalar). Returns (params', m', v', loss).
+
+    SGD+momentum fails to train these transformers on the synthetic task
+    (loss plateaus at ln(classes)); Adam is the standard ViT recipe.
+    """
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, inputs, labels))(flat_params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    new_m = [b1 * mi + (1 - b1) * g for mi, g in zip(m_state, grads)]
+    new_v = [b2 * vi + (1 - b2) * g * g for vi, g in zip(v_state, grads)]
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    new_params = [
+        p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        for p, mi, vi in zip(flat_params, new_m, new_v)
+    ]
+    return new_params, new_m, new_v, loss

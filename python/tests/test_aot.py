@@ -1,0 +1,76 @@
+"""AOT registry / manifest checks (no lowering — fast)."""
+
+import json
+from pathlib import Path
+
+from compile import aot
+from compile import model as M
+
+
+def test_registry_names_unique():
+    reg = aot.build_registry()
+    names = [e["name"] for e in reg.entries]
+    assert len(set(names)) == len(names)
+
+
+def test_registry_covers_all_models():
+    reg = aot.build_registry()
+    names = {e["name"] for e in reg.entries}
+    for cfg in M.CONFIGS.values():
+        b = aot.GPT_B if cfg.kind == "gpt" else aot.EVAL_B
+        assert f"embed_{cfg.name}_b{b}" in names
+        assert f"head_{cfg.name}_b{b}" in names
+        assert f"blockcap_{cfg.name}_b{b}" in names
+        assert f"train_{cfg.name}" in names
+        assert f"evloss_{cfg.name}" in names
+        assert f"block_{cfg.name}_q{cfg.dh}_o{cfg.mlp}_b{b}" in names
+
+
+def test_registry_has_joint_sparsity_grid():
+    reg = aot.build_registry()
+    names = {e["name"] for e in reg.entries}
+    for cfg in [M.CONFIGS["vit_l"], M.CONFIGS["vit_h"]]:
+        for s in range(1, 8):
+            q = M.keep_count(cfg.dh, s)
+            o = M.keep_count(cfg.mlp, s)
+            assert f"block_{cfg.name}_q{q}_o{o}_b{aot.EVAL_B}" in names, (cfg.name, s)
+            assert f"block_{cfg.name}_q{cfg.dh}_o{o}_b{aot.EVAL_B}" in names
+            assert f"block_{cfg.name}_q{q}_o{cfg.mlp}_b{aot.EVAL_B}" in names
+
+
+def test_block_inputs_order_matches_param_spec():
+    cfg = M.CONFIGS["vit_t"]
+    ins = aot.block_inputs(cfg, cfg.dh, cfg.mlp, 4)
+    assert ins[0][0] == "x"
+    expect = [n for n, _ in M.block_param_spec(cfg, cfg.dh, cfg.mlp)]
+    assert [n for n, _, _ in ins[1:]] == expect
+
+
+def test_train_entry_io_symmetry():
+    reg = aot.build_registry()
+    entry = next(e for e in reg.entries if e["name"] == "train_vit_t")
+    cfg = M.CONFIGS["vit_t"]
+    n = len(M.param_spec(cfg))
+    # inputs: tokens, labels, lrs, t0, params…, adam_m…, adam_v…
+    assert len(entry["inputs"]) == 4 + 3 * n
+    # chunked data: leading K axis on tokens/labels and lrs[K]
+    assert entry["inputs"][0][1][0] == aot.TRAIN_CHUNK
+    assert entry["inputs"][2][1] == (aot.TRAIN_CHUNK,)
+    # outputs: params…, adam_m…, adam_v…, losses
+    assert len(entry["out_names"]) == 3 * n + 1
+    assert entry["out_names"][-1] == "losses"
+    in_param_names = [i[0] for i in entry["inputs"][4 : 4 + n]]
+    assert entry["out_names"][:n] == in_param_names
+
+
+def test_manifest_file_valid_if_present():
+    path = Path(__file__).resolve().parents[2] / "artifacts" / "manifest.json"
+    if not path.exists():
+        return  # `make artifacts` not run yet
+    data = json.loads(path.read_text())
+    assert "artifacts" in data
+    for art in data["artifacts"]:
+        assert set(art) >= {"name", "file", "inputs", "outputs"}
+        for i in art["inputs"]:
+            assert i["dtype"] in ("f32", "i32")
+            assert all(isinstance(s, int) for s in i["shape"])

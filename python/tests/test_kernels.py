@@ -1,0 +1,170 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the causal flag / block sizes) so the kernels
+are exercised across uneven grids, single-row inputs, and pruned QK dims.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, gram, layernorm, mlp, ref
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    d=st.integers(1, 70),
+    block=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(n, d, block, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, n, d)
+    g = _arr(rng, d)
+    b = _arr(rng, d)
+    got = layernorm.layernorm(x, g, b, block_rows=block)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 24),
+    d=st.integers(1, 48),
+    o=st.integers(1, 96),
+    block=st.sampled_from([8, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_matches_ref(n, d, o, block, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, n, d)
+    w1 = _arr(rng, d, o, scale=0.3)
+    b1 = _arr(rng, o, scale=0.3)
+    w2 = _arr(rng, o, d, scale=0.3)
+    b2 = _arr(rng, d, scale=0.3)
+    got = mlp.mlp(x, w1, b1, w2, b2, block_hidden=block)
+    want = ref.mlp(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 24),
+    d=st.integers(1, 48),
+    o=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_hidden_matches_ref(n, d, o, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, n, d)
+    w1 = _arr(rng, d, o, scale=0.3)
+    b1 = _arr(rng, o, scale=0.3)
+    got = mlp.mlp_hidden(x, w1, b1)
+    want = ref.mlp_hidden(x, w1, b1)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    dqk=st.integers(1, 40),
+    dv=st.integers(1, 40),
+    causal=st.booleans(),
+    bq=st.sampled_from([4, 16, 64]),
+    bk=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(n, dqk, dv, causal, bq, bk, seed):
+    rng = np.random.default_rng(seed)
+    q = _arr(rng, n, dqk)
+    k = _arr(rng, n, dqk)
+    v = _arr(rng, n, dv)
+    scale = 1.0 / np.sqrt(max(dqk, 1))
+    got = attention.attention(q, k, v, scale, causal=causal, block_q=bq, block_k=bk)
+    want = ref.attention(q, k, v, scale, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_pruned_qk_dim_smaller_than_v():
+    """The CORP shape: q/k pruned to d' < dv, scale from the dense head."""
+    rng = np.random.default_rng(0)
+    q = _arr(rng, 17, 13)
+    k = _arr(rng, 17, 13)
+    v = _arr(rng, 17, 32)
+    scale = 1.0 / np.sqrt(32)
+    got = attention.attention(q, k, v, scale)
+    want = ref.attention(q, k, v, scale)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_multi_head_attention_vmap():
+    rng = np.random.default_rng(1)
+    q = _arr(rng, 4, 17, 8)
+    k = _arr(rng, 4, 17, 8)
+    v = _arr(rng, 4, 17, 16)
+    got = attention.multi_head_attention(q, k, v, 0.35)
+    want = jnp.stack([ref.attention(q[i], k[i], v[i], 0.35) for i in range(4)])
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 60),
+    d=st.integers(1, 48),
+    bd=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(n, d, bd, bn, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, n, d)
+    got = gram.gram(x, block_d=bd, block_n=bn)
+    want = ref.gram(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gram_symmetric():
+    rng = np.random.default_rng(2)
+    x = _arr(rng, 33, 20)
+    g = np.asarray(gram.gram(x))
+    np.testing.assert_allclose(g, g.T, rtol=1e-6, atol=1e-6)
+
+
+def test_attention_rows_sum_via_uniform_v():
+    """With v = all-ones, output must be exactly ones (softmax normalizes)."""
+    rng = np.random.default_rng(3)
+    q = _arr(rng, 9, 5)
+    k = _arr(rng, 9, 5)
+    v = jnp.ones((9, 7), jnp.float32)
+    out = attention.attention(q, k, v, 0.4)
+    np.testing.assert_allclose(out, np.ones((9, 7)), rtol=1e-5, atol=1e-5)
+
+
+def test_causal_first_row_equals_v0():
+    """Causal attention at position 0 can only attend to key 0."""
+    rng = np.random.default_rng(4)
+    q = _arr(rng, 8, 6)
+    k = _arr(rng, 8, 6)
+    v = _arr(rng, 8, 6)
+    out = attention.attention(q, k, v, 0.3, causal=True)
+    np.testing.assert_allclose(out[0], v[0], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_layernorm_zero_variance_row(dtype):
+    """Constant rows must not produce NaNs (eps guards the rsqrt)."""
+    x = jnp.full((3, 10), 2.5, dtype)
+    g = jnp.ones((10,), dtype)
+    b = jnp.zeros((10,), dtype)
+    out = layernorm.layernorm(x, g, b)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, np.zeros((3, 10)), atol=1e-3)

@@ -1,0 +1,7 @@
+//! Bench: regenerates the paper's fig5 (see DESIGN.md §6).
+//! Scale with CORP_BENCH_MODE={smoke,fast,full}; CSV lands in results/.
+
+fn main() {
+    let mut coord = corp::coordinator::Coordinator::new().expect("runtime (run `make artifacts` first)");
+    corp::bench_tables::tables::fig5(&mut coord).expect("fig5");
+}

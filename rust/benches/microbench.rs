@@ -1,0 +1,95 @@
+//! Microbenchmarks of the L3 hot paths (the §Perf targets): GEMM / Gram
+//! accumulation, the Kronecker-ridge assembly+solve, Cholesky, SVD, and the
+//! per-block PJRT execute round-trip overhead.
+
+use corp::linalg::gemm::{matmul_f32, syrk_upper_f32};
+use corp::linalg::kron::KronRidge;
+use corp::linalg::{Cholesky, Mat};
+use corp::util::bench::{bench, CsvWriter};
+use corp::util::prop::gen;
+use corp::util::Pcg64;
+
+fn main() {
+    let mut csv = CsvWriter::new("microbench", "name,mean_s,p50_s,flops,gflops_per_s");
+    let mut rng = Pcg64::new(1);
+
+    // GEMM 256x256x256 (the calibration workhorse shape class).
+    {
+        let n = 256;
+        let a = gen::matrix(&mut rng, n, n, 1.0);
+        let b = gen::matrix(&mut rng, n, n, 1.0);
+        let mut c = vec![0.0f32; n * n];
+        let s = bench("gemm_256", 2, 10, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            matmul_f32(&a, &b, &mut c, n, n, n);
+        });
+        let flops = 2.0 * (n * n * n) as f64;
+        println!("{:24} {:9.4} ms  {:6.2} GFLOP/s", s.name, s.mean_s * 1e3, flops / s.mean_s / 1e9);
+        csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), format!("{flops}"), format!("{:.3}", flops / s.mean_s / 1e9)]);
+    }
+
+    // Gram accumulation: 2048 rows x 768 channels (vit_b hidden slab).
+    {
+        let (rows, n) = (2048, 768);
+        let x = gen::matrix(&mut rng, rows, n, 1.0);
+        let mut c = vec![0.0f32; n * n];
+        let s = bench("syrk_2048x768", 1, 5, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            syrk_upper_f32(&x, &mut c, rows, n);
+        });
+        let flops = (rows * n * n) as f64; // ~half of full gemm
+        println!("{:24} {:9.4} ms  {:6.2} GFLOP/s", s.name, s.mean_s * 1e3, flops / s.mean_s / 1e9);
+        csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), format!("{flops}"), format!("{:.3}", flops / s.mean_s / 1e9)]);
+    }
+
+    // Kronecker accumulate+solve at the 50%-pruned head size (d' = 16).
+    {
+        let d = 16;
+        let n_tok = 17;
+        let samples = 64;
+        let mats: Vec<(Mat, Mat, Mat)> = (0..samples)
+            .map(|_| {
+                let qs = Mat::from_f32(n_tok, d, &gen::matrix(&mut rng, n_tok, d, 1.0));
+                let ks = Mat::from_f32(n_tok, d, &gen::matrix(&mut rng, n_tok, d, 1.0));
+                let r = Mat::from_f32(d, d, &gen::matrix(&mut rng, d, d, 1.0));
+                (qs.t().mul(&qs), ks.t().mul(&ks), r)
+            })
+            .collect();
+        let s = bench("kron_accum_solve_d16", 1, 5, || {
+            let mut acc = KronRidge::new(d);
+            for (qq, kk, r) in &mats {
+                acc.accumulate(kk, qq, r, 1.0);
+            }
+            acc.solve(1e-2)
+        });
+        println!("{:24} {:9.4} ms  ({} samples)", s.name, s.mean_s * 1e3, samples);
+        csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), "0".into(), "0".into()]);
+    }
+
+    // Cholesky solve at MLP-compensation size (768 kept of 1280).
+    {
+        let n = 640;
+        let a = Mat::from_f32(n, n, &gen::spd(&mut rng, n, 0.5));
+        let s = bench("cholesky_640", 1, 3, || Cholesky::new(&a).unwrap());
+        let flops = (n * n * n) as f64 / 3.0;
+        println!("{:24} {:9.4} ms  {:6.2} GFLOP/s", s.name, s.mean_s * 1e3, flops / s.mean_s / 1e9);
+        csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), format!("{flops}"), format!("{:.3}", flops / s.mean_s / 1e9)]);
+    }
+
+    // PJRT per-call overhead: smallest block artifact, batch 1.
+    if let Ok(coord) = corp::coordinator::Coordinator::new() {
+        let cfg = corp::model::ModelConfig::by_name("vit_t").unwrap();
+        let exec = coord.executor(cfg);
+        let w = corp::model::WeightStore::init(cfg, 1);
+        let gen_v = corp::data::VisionGen::new(0);
+        let (tokens, _) = gen_v.batch(corp::data::Split::Eval, 0, 1);
+        let x = exec.embed(&w, &tokens, 1).unwrap();
+        let s = bench("pjrt_block_vit_t_b1", 3, 30, || exec.block(&w, 0, &x, 1).unwrap());
+        println!("{:24} {:9.4} ms  (per-block PJRT round trip)", s.name, s.mean_s * 1e3);
+        csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), "0".into(), "0".into()]);
+    } else {
+        eprintln!("pjrt microbench skipped: artifacts not built");
+    }
+
+    csv.flush().unwrap();
+}

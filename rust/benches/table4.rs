@@ -1,0 +1,7 @@
+//! Bench: regenerates Tables 4a (vs SNOWS/GRAIL) and 4b (vs DC-ViT).
+
+fn main() {
+    let mut coord = corp::coordinator::Coordinator::new().expect("runtime (run `make artifacts` first)");
+    corp::bench_tables::tables::table4a(&mut coord).expect("table4a");
+    corp::bench_tables::tables::table4b(&mut coord).expect("table4b");
+}

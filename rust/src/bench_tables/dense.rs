@@ -1,0 +1,108 @@
+//! Table 8: dense-prediction transfer (DINOv2 substitute).
+//!
+//! Protocol (matching the paper): fit depth + segmentation heads closed-form
+//! on *dense* backbone features, freeze them, prune the backbone only at 50%
+//! joint sparsity, and compare downstream metrics.
+
+use anyhow::Result;
+
+use super::vit_sizes;
+use crate::coordinator::Coordinator;
+use crate::data::dense_task::{argmax_rows, depth_metrics, mean_iou, one_hot, LinearHead};
+use crate::data::vision::{CLASSES, PATCHES};
+use crate::data::{Split, VisionGen};
+use crate::exec::Executor;
+use crate::linalg::Mat;
+use crate::model::{ModelConfig, Scope, Sparsity, WeightStore};
+use crate::prune::{Method, PruneOpts};
+use crate::util::bench::CsvWriter;
+
+/// Extract per-patch features [B*PATCHES, d] (CLS token dropped) and the
+/// aligned dense targets over `n_batches` of a split.
+fn patch_features(
+    exec: &Executor<'_>,
+    w: &WeightStore,
+    gen: &VisionGen,
+    split: Split,
+    n_batches: usize,
+) -> Result<(Mat, Vec<f32>, Vec<i32>)> {
+    let cfg = exec.cfg;
+    let b = cfg.eval_batch();
+    let d = cfg.d;
+    let mut feats: Vec<f64> = Vec::new();
+    let mut depth = Vec::new();
+    let mut seg = Vec::new();
+    for i in 0..n_batches {
+        let (tokens, targets) = gen.batch_dense(split, i as u64, b);
+        let x = exec.features(w, &tokens, b)?; // [b, n_ctx, d]
+        for s in 0..b {
+            for p in 0..PATCHES {
+                // token index p+1 (skip CLS)
+                let base = (s * cfg.n_ctx + p + 1) * d;
+                feats.extend(x.data()[base..base + d].iter().map(|&v| v as f64));
+            }
+        }
+        depth.extend_from_slice(&targets.depth);
+        seg.extend_from_slice(&targets.seg);
+    }
+    let rows = depth.len();
+    Ok((Mat::from_rows(rows, d, feats), depth, seg))
+}
+
+/// Table 8 generator.
+pub fn table8(coord: &mut Coordinator) -> Result<()> {
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    let gen = VisionGen::new(crate::data::DATA_SEED);
+    let fit_batches = coord.scale.eval_batches.max(8);
+    let eval_batches = coord.scale.eval_batches;
+    let mut csv = CsvWriter::new(
+        "table8",
+        "model,variant,params_m,rmse,delta1,miou",
+    );
+    println!("Table 8 — dense-prediction transfer, backbone pruned 50% joint");
+    println!("{:7} {:7} | {:>9} | {:>7} {:>7} {:>7}", "model", "variant", "params M", "RMSE", "δ1", "mIoU");
+
+    for cfg in vit_sizes() {
+        let dense_w = coord.dense(cfg)?.clone();
+        let pruned = {
+            let o = PruneOpts {
+                sparsity: Sparsity::of(Scope::Both, 5),
+                method: Method::Corp,
+                ..opts.clone()
+            };
+            coord.prune_job(cfg, &o)?.weights
+        };
+        let exec = Executor::new(&coord.rt, cfg);
+
+        // Fit heads on dense train-split features (closed form).
+        let (ftr, dtr, str_) = patch_features(&exec, &dense_w, &gen, Split::Train, fit_batches)?;
+        let depth_head = LinearHead::fit(&ftr, &Mat::from_rows(dtr.len(), 1, dtr.iter().map(|&v| v as f64).collect()), 1e-2);
+        let seg_head = LinearHead::fit(&ftr, &one_hot(&str_, CLASSES), 1e-2);
+
+        // Evaluate a backbone variant with the frozen heads.
+        let eval_variant = |w: &WeightStore| -> Result<(f64, f64, f64)> {
+            let (fe, de, se) = patch_features(&exec, w, &gen, Split::Eval, eval_batches)?;
+            let dp = depth_head.apply(&fe);
+            let pred: Vec<f64> = (0..dp.r).map(|i| dp.at(i, 0)).collect();
+            let (rmse, d1) = depth_metrics(&pred, &de);
+            let sp = argmax_rows(&seg_head.apply(&fe));
+            let miou = mean_iou(&sp, &se, CLASSES);
+            Ok((rmse, d1, miou))
+        };
+
+        let (rmse_d, d1_d, miou_d) = eval_variant(&dense_w)?;
+        let (rmse_p, d1_p, miou_p) = eval_variant(&pruned)?;
+
+        let pd = crate::flops::params(cfg, Sparsity::dense()) as f64 / 1e6;
+        let pp = crate::flops::params(cfg, Sparsity::of(Scope::Both, 5)) as f64 / 1e6;
+        println!("{:7} {:7} | {:9.3} | {:7.4} {:7.4} {:7.4}", cfg.name, "dense", pd, rmse_d, d1_d, miou_d);
+        println!("{:7} {:7} | {:9.3} | {:7.4} {:7.4} {:7.4}", cfg.name, "pruned", pp, rmse_p, d1_p, miou_p);
+        csv.row(&[cfg.name.into(), "dense".into(), format!("{pd:.3}"), format!("{rmse_d:.4}"), format!("{d1_d:.4}"), format!("{miou_d:.4}")]);
+        csv.row(&[cfg.name.into(), "pruned".into(), format!("{pp:.3}"), format!("{rmse_p:.4}"), format!("{d1_p:.4}"), format!("{miou_p:.4}")]);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+#[allow(unused)]
+fn _silence(_: &ModelConfig) {}

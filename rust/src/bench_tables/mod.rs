@@ -1,0 +1,54 @@
+//! Generators for every table and figure in the paper's evaluation section
+//! (see DESIGN.md §6 for the experiment index). Each generator prints
+//! paper-shaped rows and writes a CSV under `results/`; the thin wrappers in
+//! `rust/benches/` call straight into these.
+
+pub mod tables;
+pub mod nlp;
+pub mod dense;
+
+use crate::model::config::FAMILY;
+use crate::model::{ModelConfig, ModelKind};
+use crate::util::bench::{bench_mode, BenchMode};
+
+/// Which ViT sizes a bench sweeps, by mode.
+pub fn vit_sizes() -> Vec<&'static ModelConfig> {
+    let all: Vec<&'static ModelConfig> =
+        FAMILY.iter().filter(|c| c.kind == ModelKind::Vit).collect();
+    match bench_mode() {
+        BenchMode::Smoke => all[..1].to_vec(),
+        BenchMode::Fast => all[..3].to_vec(),
+        BenchMode::Full => all,
+    }
+}
+
+/// Sparsity grid (s10 values) for sweep figures, by mode.
+pub fn sparsity_grid() -> Vec<u8> {
+    match bench_mode() {
+        BenchMode::Smoke => vec![0, 5],
+        BenchMode::Fast => vec![0, 4, 5, 7],
+        BenchMode::Full => vec![0, 1, 2, 3, 4, 5, 6, 7],
+    }
+}
+
+/// The "large" model for single-model tables (4a, fig2), by mode.
+pub fn large_model() -> &'static ModelConfig {
+    match bench_mode() {
+        BenchMode::Smoke => ModelConfig::by_name("vit_t").unwrap(),
+        BenchMode::Fast => ModelConfig::by_name("vit_b").unwrap(),
+        BenchMode::Full => ModelConfig::by_name("vit_l").unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_nonempty() {
+        assert!(!vit_sizes().is_empty());
+        let g = sparsity_grid();
+        assert!(g.contains(&0));
+        assert!(g.iter().all(|&s| s <= 7));
+    }
+}

@@ -1,0 +1,59 @@
+//! Table 7: language-model pruning (OPT-1.3B → char-GPT substitute).
+
+use anyhow::Result;
+
+use crate::coordinator::Coordinator;
+use crate::data::TextGen;
+use crate::exec::Executor;
+use crate::flops::{flops, params, reduction_pct};
+use crate::model::{ModelConfig, Scope, Sparsity};
+use crate::prune::PruneOpts;
+use crate::util::bench::CsvWriter;
+
+/// Table 7: perplexity + FLOPs/params at 30% sparsity for MLP / Attn / Both.
+/// Calibration uses the Calib split; evaluation the Eval split — the same
+/// calibration–evaluation mismatch the paper probes with C4 → WikiText-2.
+pub fn table7(coord: &mut Coordinator) -> Result<()> {
+    let cfg = ModelConfig::by_name("gpt_s").unwrap();
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    let dense = coord.dense(cfg)?.clone();
+    // Prune all three scopes up front (prune_job needs &mut coord).
+    let mut pruned = Vec::new();
+    for scope in [Scope::Mlp, Scope::Attn, Scope::Both] {
+        let o = PruneOpts { sparsity: Sparsity::of(scope, 3), ..opts.clone() };
+        pruned.push(coord.prune_job(cfg, &o)?.weights);
+    }
+    let exec = Executor::new(&coord.rt, cfg);
+    let gen = TextGen::new(crate::data::DATA_SEED);
+    let n_eval = coord.scale.eval_batches;
+    let fd = flops(cfg, Sparsity::dense());
+    let pd = params(cfg, Sparsity::dense());
+    let mut csv = CsvWriter::new("table7", "target,ppl,flops_m,flops_red,params_m,params_red");
+    println!("Table 7 — char-GPT (OPT substitute) at 30% sparsity");
+    println!("{:9} | {:>7} | {:>9} {:>6} | {:>9} {:>6}", "target", "ppl", "MFLOPs", "red%", "params M", "red%");
+
+    let base_ppl = crate::eval::ppl_stitched(&exec, &dense, &gen, n_eval)?;
+    println!("{:9} | {:7.3} | {:9.1} {:>6} | {:9.3} {:>6}", "baseline", base_ppl, fd as f64 / 1e6, "-", pd as f64 / 1e6, "-");
+    csv.row(&["baseline".into(), format!("{base_ppl:.4}"), format!("{:.3}", fd as f64 / 1e6), "0".into(),
+        format!("{:.3}", pd as f64 / 1e6), "0".into()]);
+
+    for ((scope, label), weights) in
+        [(Scope::Mlp, "mlp"), (Scope::Attn, "attn"), (Scope::Both, "both")].into_iter().zip(&pruned)
+    {
+        let sp = Sparsity::of(scope, 3);
+        let ppl = crate::eval::ppl_stitched(&exec, weights, &gen, n_eval)?;
+        let f = flops(cfg, sp);
+        let p = params(cfg, sp);
+        println!(
+            "{label:9} | {ppl:7.3} | {:9.1} {:5.1}% | {:9.3} {:5.1}%",
+            f as f64 / 1e6, reduction_pct(fd, f),
+            p as f64 / 1e6, reduction_pct(pd, p)
+        );
+        csv.row(&[label.into(), format!("{ppl:.4}"), format!("{:.3}", f as f64 / 1e6),
+            format!("{:.2}", reduction_pct(fd, f)), format!("{:.3}", p as f64 / 1e6),
+            format!("{:.2}", reduction_pct(pd, p))]);
+    }
+    println!("(source entropy floor: ppl ≈ {:.2})", TextGen::entropy_floor().exp());
+    csv.flush()?;
+    Ok(())
+}

@@ -1,0 +1,433 @@
+//! Vision tables & figures: Table 2/3/4a/4b/5/6/9/10, Figures 2/3/4/5.
+
+use anyhow::Result;
+
+use super::{large_model, sparsity_grid, vit_sizes};
+use crate::coordinator::Coordinator;
+use crate::data::VisionGen;
+use crate::exec::Executor;
+use crate::flops::{flops, params, reduction_pct};
+use crate::model::{ModelConfig, Scope, Sparsity};
+use crate::prune::{baselines, Method, PruneOpts};
+use crate::rank::MlpCriterion;
+use crate::util::bench::CsvWriter;
+
+const EVAL_SEED: u64 = 99;
+
+/// Table 2: Top-1 / FLOPs / params for every size × {MLP, Attn, Both} @50%.
+pub fn table2(coord: &mut Coordinator) -> Result<()> {
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    let mut csv = CsvWriter::new("table2", "model,scope,top1,flops_m,flops_red,params_m,params_red");
+    println!("Table 2 — 50% structured sparsity (CORP)");
+    println!("{:7} {:5} | {:>6} | {:>9} {:>7} | {:>9} {:>7}", "model", "scope", "top1", "GFLOPs", "red%", "params M", "red%");
+    for cfg in vit_sizes() {
+        let dense_w = coord.dense(cfg)?.clone();
+        let dense_acc = coord.top1(cfg, &dense_w, EVAL_SEED)?;
+        let fd = flops(cfg, Sparsity::dense());
+        let pd = params(cfg, Sparsity::dense());
+        println!(
+            "{:7} {:5} | {:6.2} | {:9.1} {:>7} | {:9.3} {:>7}",
+            cfg.name, "dense", dense_acc, fd as f64 / 1e6, "-", pd as f64 / 1e6, "-"
+        );
+        csv.row(&[cfg.name.into(), "dense".into(), format!("{dense_acc:.2}"),
+            format!("{:.3}", fd as f64 / 1e6), "0".into(), format!("{:.3}", pd as f64 / 1e6), "0".into()]);
+        for scope in [Scope::Mlp, Scope::Attn, Scope::Both] {
+            let sp = Sparsity::of(scope, 5);
+            let (acc, p, f, _) = coord.accuracy_at(cfg, sp, Method::Corp, &opts)?;
+            println!(
+                "{:7} {:5} | {:6.2} | {:9.1} {:6.1}% | {:9.3} {:6.1}%",
+                cfg.name, scope.label(), acc,
+                f as f64 / 1e6, reduction_pct(fd, f),
+                p as f64 / 1e6, reduction_pct(pd, p)
+            );
+            csv.row(&[cfg.name.into(), scope.label().into(), format!("{acc:.2}"),
+                format!("{:.3}", f as f64 / 1e6), format!("{:.2}", reduction_pct(fd, f)),
+                format!("{:.3}", p as f64 / 1e6), format!("{:.2}", reduction_pct(pd, p))]);
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Table 3: calibration-size sweep at 50% joint sparsity.
+pub fn table3(coord: &mut Coordinator) -> Result<()> {
+    let grid: &[usize] = match crate::util::bench::bench_mode() {
+        crate::util::bench::BenchMode::Smoke => &[2, 4],
+        crate::util::bench::BenchMode::Fast => &[2, 4, 8],
+        crate::util::bench::BenchMode::Full => &[2, 4, 8, 16, 32],
+    };
+    let mut csv = CsvWriter::new("table3", "model,calib_images,top1");
+    println!("Table 3 — calibration-size sensitivity (50% joint, CORP)");
+    print!("{:>8}", "calib");
+    let sizes = vit_sizes();
+    for cfg in &sizes {
+        print!(" {:>8}", cfg.name);
+    }
+    println!();
+    for &batches in grid {
+        print!("{:>8}", batches * 16);
+        for cfg in &sizes {
+            let opts = PruneOpts { calib_batches: batches, ..PruneOpts::default() };
+            let (acc, _, _, _) =
+                coord.accuracy_at(cfg, Sparsity::of(Scope::Both, 5), Method::Corp, &opts)?;
+            print!(" {:8.2}", acc);
+            csv.row(&[cfg.name.into(), (batches * 16).to_string(), format!("{acc:.2}")]);
+        }
+        println!();
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Table 4a: CORP vs GRAIL-like vs SNOWS-like on the large model, MLP/Attn.
+pub fn table4a(coord: &mut Coordinator) -> Result<()> {
+    let cfg = large_model();
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    let dense_w = coord.dense(cfg)?.clone();
+    let dense_acc = coord.top1(cfg, &dense_w, EVAL_SEED)?;
+    let mut csv = CsvWriter::new("table4a", "method,scope,top1,delta");
+    println!("Table 4a — {} (dense {dense_acc:.2}%)", cfg.name);
+    println!("{:11} {:5} | {:>6} {:>7}", "method", "scope", "top1", "delta");
+
+    let row = |m: &str, s: &str, acc: f64, csv: &mut CsvWriter| {
+        println!("{m:11} {s:5} | {acc:6.2} {:7.2}", acc - dense_acc);
+        csv.row(&[m.into(), s.into(), format!("{acc:.2}"), format!("{:.2}", acc - dense_acc)]);
+    };
+
+    for (scope, label) in [(Scope::Attn, "attn"), (Scope::Mlp, "mlp")] {
+        // SNOWS-like 2:4 with recovery (dense shapes).
+        {
+            coord.calib(cfg, &opts)?;
+            let dense = coord.dense(cfg)?.clone();
+            let key = format!("{}@{}", cfg.name, opts.calib_batches);
+            let stats = coord.calib_stats(&key);
+            let exec = Executor::new(&coord.rt, cfg);
+            let res = baselines::prune_snows24(&exec, &dense, stats, &opts, scope == Scope::Mlp)?;
+            let acc = coord.top1(cfg, &res.weights, EVAL_SEED)?;
+            row("SNOWS-2:4", label, acc, &mut csv);
+        }
+        // GRAIL-like at 50%.
+        let (acc, _, _, _) = coord.accuracy_at(cfg, Sparsity::of(scope, 5), Method::Grail, &opts)?;
+        row("GRAIL-like", label, acc, &mut csv);
+        // CORP at 50%.
+        let (acc, _, _, _) = coord.accuracy_at(cfg, Sparsity::of(scope, 5), Method::Corp, &opts)?;
+        row("CORP", label, acc, &mut csv);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Table 4b: CORP vs DC-ViT-like at matched FLOPs reduction (vit_b).
+pub fn table4b(coord: &mut Coordinator) -> Result<()> {
+    let cfg = ModelConfig::by_name("vit_b").unwrap();
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    let dense_w = coord.dense(cfg)?.clone();
+    let dense_acc = coord.top1(cfg, &dense_w, EVAL_SEED)?;
+    let fd = flops(cfg, Sparsity::dense());
+    let mut csv = CsvWriter::new("table4b", "method,flops_red,top1,delta");
+    println!("Table 4b — matched FLOPs reduction on {} (dense {dense_acc:.2}%)", cfg.name);
+
+    // DC-ViT-like: (removed attention layers, mlp sparsity) pairs.
+    let dc_settings: &[(usize, u8)] = &[(2, 1), (3, 2), (4, 4)];
+    // CORP joint sparsities with roughly matching FLOPs cuts.
+    let corp_settings: &[u8] = &[1, 2, 4];
+
+    for (&(removed, mlp_s10), &corp_s10) in dc_settings.iter().zip(corp_settings) {
+        // --- DC-ViT-like ---
+        coord.calib(cfg, &opts)?;
+        let dense = coord.dense(cfg)?.clone();
+        let key = format!("{}@{}", cfg.name, opts.calib_batches);
+        let stats = coord.calib_stats(&key);
+        let exec = Executor::new(&coord.rt, cfg);
+        let dc_opts = PruneOpts {
+            sparsity: Sparsity { mlp_s10, attn_s10: 0 },
+            ..opts.clone()
+        };
+        let (res, skipped) = baselines::prune_dcvit(&exec, &dense, stats, &dc_opts, removed)?;
+        let acc = eval_mlponly(coord, cfg, &res.weights, &skipped)?;
+        let f_dc = flops_dcvit(cfg, mlp_s10, &skipped);
+        println!(
+            "DC-ViT-like  flops -{:5.1}% | top1 {acc:6.2} Δ{:6.2}  (attn removed from {} blocks)",
+            reduction_pct(fd, f_dc), acc - dense_acc, skipped.len()
+        );
+        csv.row(&["dcvit".into(), format!("{:.2}", reduction_pct(fd, f_dc)), format!("{acc:.2}"), format!("{:.2}", acc - dense_acc)]);
+        // --- CORP ---
+        let sp = Sparsity::of(Scope::Both, corp_s10);
+        let (acc, _, f, _) = coord.accuracy_at(cfg, sp, Method::Corp, &opts)?;
+        println!(
+            "CORP         flops -{:5.1}% | top1 {acc:6.2} Δ{:6.2}",
+            reduction_pct(fd, f), acc - dense_acc
+        );
+        csv.row(&["corp".into(), format!("{:.2}", reduction_pct(fd, f)), format!("{acc:.2}"), format!("{:.2}", acc - dense_acc)]);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// FLOPs of a DC-ViT-like configuration: MLP pruned everywhere, attention
+/// removed from `skipped` blocks.
+pub fn flops_dcvit(cfg: &ModelConfig, mlp_s10: u8, skipped: &[usize]) -> usize {
+    let base = flops(cfg, Sparsity { mlp_s10, attn_s10: 0 });
+    // Attention cost per block (dense dqk).
+    let n = cfg.n_ctx;
+    let (d, h, dh) = (cfg.d, cfg.heads, cfg.dh());
+    let attn = 2 * n * d * (h * dh) * 3 + 2 * n * n * (h * dh) * 2 + 2 * n * (h * dh) * d;
+    base - attn * skipped.len()
+}
+
+/// Evaluate a model whose `skipped` layers use the attention-free artifact.
+fn eval_mlponly(
+    coord: &Coordinator,
+    cfg: &'static ModelConfig,
+    w: &crate::model::WeightStore,
+    skipped: &[usize],
+) -> Result<f64> {
+    let exec = Executor::new(&coord.rt, cfg);
+    let gen = VisionGen::new(crate::data::DATA_SEED);
+    let b = cfg.eval_batch();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..coord.scale.eval_batches {
+        let (tokens, labels) = gen.batch(crate::data::Split::Eval, i as u64, b);
+        let mut x = exec.embed(w, &tokens, b)?;
+        for l in 0..cfg.layers {
+            if skipped.contains(&l) {
+                x = exec.block_mlponly(w, l, &x, b)?;
+            } else {
+                x = exec.block(w, l, &x, b)?;
+            }
+        }
+        let logits = exec.head(w, &x, b)?;
+        let c = cfg.classes;
+        for (j, &label) in labels.iter().enumerate() {
+            let rowv = &logits.data()[j * c..(j + 1) * c];
+            let best = (0..c).max_by(|&a, &bb| rowv[a].partial_cmp(&rowv[bb]).unwrap()).unwrap();
+            if best == label as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(100.0 * correct as f64 / total as f64)
+}
+
+/// Tables 5 & 10: accuracy + efficiency across sparsity levels (joint scope).
+/// Table 5 is the largest model's slice of Table 10.
+pub fn table10(coord: &mut Coordinator) -> Result<()> {
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    let mut csv = CsvWriter::new(
+        "table10",
+        "model,sparsity,top1,params_m,flops_m,p50_ms,fps,params_red,flops_red,tp_speedup",
+    );
+    println!("Table 5/10 — accuracy & efficiency across sparsity (joint, CORP)");
+    println!(
+        "{:7} {:>4} | {:>6} {:>9} {:>9} {:>8} {:>7} | {:>6} {:>6} {:>5}",
+        "model", "s", "top1", "params M", "GFLOPs", "p50 ms", "fps", "par↓%", "fl↓%", "TP×"
+    );
+    for cfg in vit_sizes() {
+        let fd = flops(cfg, Sparsity::dense());
+        let pd = params(cfg, Sparsity::dense());
+        let mut fps_dense = 0.0;
+        for &s in &sparsity_grid() {
+            let sp = Sparsity::of(Scope::Both, s);
+            let weights = if s == 0 {
+                coord.dense(cfg)?.clone()
+            } else {
+                let o = PruneOpts { sparsity: sp, ..opts.clone() };
+                coord.prune_job(cfg, &o)?.weights
+            };
+            let acc = coord.top1(cfg, &weights, EVAL_SEED)?;
+            let exec = Executor::new(&coord.rt, cfg);
+            let gen = VisionGen::new(crate::data::DATA_SEED);
+            let stats = crate::serve::measure(&exec, &weights, &gen, coord.scale.serve_iters, coord.scale.serve_iters)?;
+            if s == 0 {
+                fps_dense = stats.throughput_fps;
+            }
+            let p = params(cfg, sp);
+            let f = flops(cfg, sp);
+            let speedup = if fps_dense > 0.0 { stats.throughput_fps / fps_dense } else { 1.0 };
+            println!(
+                "{:7} {:>4.1} | {:6.2} {:9.3} {:9.1} {:8.2} {:7.0} | {:6.1} {:6.1} {:5.2}",
+                cfg.name, s as f64 / 10.0, acc,
+                p as f64 / 1e6, f as f64 / 1e6,
+                stats.p50_ms, stats.throughput_fps,
+                reduction_pct(pd, p), reduction_pct(fd, f), speedup
+            );
+            csv.row(&[cfg.name.into(), format!("{:.1}", s as f64 / 10.0), format!("{acc:.2}"),
+                format!("{:.3}", p as f64 / 1e6), format!("{:.3}", f as f64 / 1e6),
+                format!("{:.3}", stats.p50_ms), format!("{:.1}", stats.throughput_fps),
+                format!("{:.2}", reduction_pct(pd, p)), format!("{:.2}", reduction_pct(fd, f)),
+                format!("{:.3}", speedup)]);
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Table 6: pipeline runtime breakdown per model size.
+pub fn table6(coord: &mut Coordinator) -> Result<()> {
+    let mut csv = CsvWriter::new("table6", "model,params_m,calibration_s,ranking_s,compensation_s,total_s");
+    println!("Table 6 — pipeline runtime breakdown (50% joint)");
+    println!("{:7} {:>9} | {:>8} {:>7} {:>7} {:>8}", "model", "params M", "calib s", "rank s", "comp s", "total s");
+    for cfg in vit_sizes() {
+        // Fresh calibration per model (do not reuse the cache — we time it).
+        let opts = PruneOpts {
+            calib_batches: coord.scale.calib_batches,
+            sparsity: Sparsity::of(Scope::Both, 5),
+            ..PruneOpts::default()
+        };
+        let dense = coord.dense(cfg)?.clone();
+        let exec = Executor::new(&coord.rt, cfg);
+        let result = crate::prune::run_pipeline(&exec, &dense, &opts)?;
+        let s = &result.sections;
+        let (cal, rank, comp) = (s.get("calibration"), s.get("ranking"), s.get("compensation"));
+        println!(
+            "{:7} {:9.3} | {:8.2} {:7.3} {:7.2} {:8.2}",
+            cfg.name, params(cfg, Sparsity::dense()) as f64 / 1e6, cal, rank, comp, cal + rank + comp
+        );
+        csv.row(&[cfg.name.into(), format!("{:.3}", params(cfg, Sparsity::dense()) as f64 / 1e6),
+            format!("{cal:.3}"), format!("{rank:.4}"), format!("{comp:.3}"), format!("{:.3}", cal + rank + comp)]);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Table 9: MLP redundancy statistics per block (vit_b analogue of DeiT-B).
+pub fn table9(coord: &mut Coordinator) -> Result<()> {
+    let cfg = match crate::util::bench::bench_mode() {
+        crate::util::bench::BenchMode::Smoke => ModelConfig::by_name("vit_t").unwrap(),
+        _ => ModelConfig::by_name("vit_b").unwrap(),
+    };
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    coord.dense(cfg)?;
+    coord.calib(cfg, &opts)?;
+    let key = format!("{}@{}", cfg.name, opts.calib_batches);
+    let stats = coord.calib_stats(&key);
+    let mut csv = CsvWriter::new("table9", "layer,dim,eff_rank,rank_ratio,k95,k95_ratio,act_sparsity");
+    println!("Table 9 — MLP activation redundancy ({})", cfg.name);
+    println!("{:>5} {:>5} {:>9} {:>6} {:>5} {:>6} {:>9}", "layer", "dim", "eff.rank", "ratio", "k95", "ratio", "sparsity");
+    for (l, ls) in stats.layers.iter().enumerate() {
+        let red = crate::stats::redundancy(&ls.hidden.covariance());
+        let sp = ls.active.sparsity();
+        println!(
+            "{l:>5} {:>5} {:>9.1} {:>6.3} {:>5} {:>6.3} {:>9.2}",
+            cfg.mlp, red.effective_rank, red.rank_ratio, red.k95, red.k95_ratio, sp
+        );
+        csv.row(&[l.to_string(), cfg.mlp.to_string(), format!("{:.1}", red.effective_rank),
+            format!("{:.3}", red.rank_ratio), red.k95.to_string(), format!("{:.3}", red.k95_ratio),
+            format!("{sp:.3}")]);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 2: accuracy vs sparsity with/without compensation, 3 scopes.
+pub fn fig2(coord: &mut Coordinator) -> Result<()> {
+    let cfg = large_model();
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    let mut csv = CsvWriter::new("fig2", "model,scope,sparsity,method,top1");
+    println!("Figure 2 — accuracy vs sparsity, comp vs no-comp ({})", cfg.name);
+    for scope in [Scope::Mlp, Scope::Attn, Scope::Both] {
+        for method in [Method::Corp, Method::Naive] {
+            print!("{:5} {:6}:", scope.label(), method.label());
+            for &s in &sparsity_grid() {
+                let (acc, _, _, _) =
+                    coord.accuracy_at(cfg, Sparsity::of(scope, s), method, &opts)?;
+                print!(" {:.0}%@{:.1}", acc, s as f64 / 10.0);
+                csv.row(&[cfg.name.into(), scope.label().into(), format!("{:.1}", s as f64 / 10.0),
+                    method.label().into(), format!("{acc:.2}")]);
+            }
+            println!();
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 3: CORP vs VBP-like vs GRAIL-like, MLP-only, per size.
+pub fn fig3(coord: &mut Coordinator) -> Result<()> {
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    let mut csv = CsvWriter::new("fig3", "model,method,sparsity,top1");
+    println!("Figure 3 — MLP-only pruning: CORP vs VBP-like vs GRAIL-like");
+    for cfg in vit_sizes() {
+        for method in [Method::Corp, Method::Grail, Method::Vbp] {
+            print!("{:7} {:10}:", cfg.name, method.label());
+            for &s in &sparsity_grid() {
+                if s == 0 {
+                    continue;
+                }
+                let (acc, _, _, _) =
+                    coord.accuracy_at(cfg, Sparsity::of(Scope::Mlp, s), method, &opts)?;
+                print!(" {:.1}@{:.1}", acc, s as f64 / 10.0);
+                csv.row(&[cfg.name.into(), method.label().into(), format!("{:.1}", s as f64 / 10.0), format!("{acc:.2}")]);
+            }
+            println!();
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 4: matched-FLOPs comparison — CORP prunes both scopes, baselines
+/// MLP-only; accuracy at each *FLOPs reduction* level.
+pub fn fig4(coord: &mut Coordinator) -> Result<()> {
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    let mut csv = CsvWriter::new("fig4", "model,method,flops_red,top1");
+    println!("Figure 4 — accuracy at matched FLOPs reduction");
+    for cfg in vit_sizes() {
+        let fd = flops(cfg, Sparsity::dense());
+        // CORP joint at grid sparsities; baselines MLP-only at the sparsity
+        // that produces the closest FLOPs cut.
+        for &s in &sparsity_grid() {
+            if s == 0 {
+                continue;
+            }
+            let sp_joint = Sparsity::of(Scope::Both, s);
+            let target_red = reduction_pct(fd, flops(cfg, sp_joint));
+            let (acc_corp, _, _, _) = coord.accuracy_at(cfg, sp_joint, Method::Corp, &opts)?;
+            // Find MLP-only sparsity matching target_red (may cap at 0.7).
+            let mut best = (7u8, f64::MAX);
+            for cand in 1..=7u8 {
+                let red = reduction_pct(fd, flops(cfg, Sparsity::of(Scope::Mlp, cand)));
+                let gap = (red - target_red).abs();
+                if gap < best.1 {
+                    best = (cand, gap);
+                }
+            }
+            let sp_mlp = Sparsity::of(Scope::Mlp, best.0);
+            let (acc_grail, _, _, _) = coord.accuracy_at(cfg, sp_mlp, Method::Grail, &opts)?;
+            let (acc_vbp, _, _, _) = coord.accuracy_at(cfg, sp_mlp, Method::Vbp, &opts)?;
+            println!(
+                "{:7} flops -{target_red:5.1}% | CORP(joint) {acc_corp:6.2} GRAIL(mlp@{:.1}) {acc_grail:6.2} VBP(mlp@{:.1}) {acc_vbp:6.2}",
+                cfg.name, best.0 as f64 / 10.0, best.0 as f64 / 10.0
+            );
+            for (m, a) in [("corp", acc_corp), ("grail", acc_grail), ("vbp", acc_vbp)] {
+                csv.row(&[cfg.name.into(), m.into(), format!("{target_red:.2}"), format!("{a:.2}")]);
+            }
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 5: ranking-criterion ablation × compensation at 50% joint.
+pub fn fig5(coord: &mut Coordinator) -> Result<()> {
+    let cfg = large_model();
+    let opts = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    let mut csv = CsvWriter::new("fig5", "model,criterion,method,top1");
+    println!("Figure 5 — ranking ablation × compensation ({}, 50% joint)", cfg.name);
+    println!("{:9} | {:>8} {:>8}", "criterion", "comp", "no-comp");
+    for crit in MlpCriterion::all() {
+        let mut accs = Vec::new();
+        for method in [Method::Corp, Method::Naive] {
+            let o = PruneOpts { criterion: crit, ..opts.clone() };
+            let (acc, _, _, _) =
+                coord.accuracy_at(cfg, Sparsity::of(Scope::Both, 5), method, &o)?;
+            csv.row(&[cfg.name.into(), crit.label().into(), method.label().into(), format!("{acc:.2}")]);
+            accs.push(acc);
+        }
+        println!("{:9} | {:8.2} {:8.2}", crit.label(), accs[0], accs[1]);
+    }
+    csv.flush()?;
+    Ok(())
+}

@@ -1,0 +1,263 @@
+//! CLI dispatch for the `corp` binary.
+//!
+//! Subcommands:
+//!   train   — train (or load) a dense checkpoint, print the loss curve tail
+//!   prune   — run the CORP pipeline at a sparsity/method and report accuracy
+//!   eval    — evaluate a checkpoint (dense or pruned) on the eval split
+//!   serve   — run the dynamic batcher on a (pruned) model
+//!   stats   — print the Table-9 redundancy statistics for a model
+//!   list    — list models and artifact status
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Coordinator;
+use crate::data::VisionGen;
+use crate::model::{ModelConfig, Scope, Sparsity};
+use crate::prune::{Method, PruneOpts};
+use crate::rank::MlpCriterion;
+use crate::util::cli::Command;
+
+fn parse_scope(s: &str) -> Result<Scope> {
+    Ok(match s {
+        "mlp" => Scope::Mlp,
+        "attn" => Scope::Attn,
+        "both" => Scope::Both,
+        _ => bail!("scope must be mlp|attn|both, got '{s}'"),
+    })
+}
+
+fn parse_method(s: &str) -> Result<Method> {
+    Ok(match s {
+        "corp" => Method::Corp,
+        "naive" => Method::Naive,
+        "grail" => Method::Grail,
+        "vbp" => Method::Vbp,
+        _ => bail!("method must be corp|naive|grail|vbp, got '{s}'"),
+    })
+}
+
+fn parse_criterion(s: &str) -> Result<MlpCriterion> {
+    Ok(match s {
+        "act" => MlpCriterion::ActEnergy,
+        "mag" => MlpCriterion::Magnitude,
+        "combined" => MlpCriterion::Combined,
+        "active" => MlpCriterion::ActiveProb,
+        _ => bail!("criterion must be act|mag|combined|active, got '{s}'"),
+    })
+}
+
+fn cfg_of(name: &str) -> Result<&'static ModelConfig> {
+    ModelConfig::by_name(name).with_context(|| format!("unknown model '{name}'"))
+}
+
+pub fn run_cli(argv: &[String]) -> Result<()> {
+    let Some(sub) = argv.first().map(|s| s.as_str()) else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match sub {
+        "train" => cmd_train(rest),
+        "prune" => cmd_prune(rest),
+        "serve" => cmd_serve(rest),
+        "stats" => cmd_stats(rest),
+        "list" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `corp help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "corp — CORP one-shot structured pruning (paper reproduction)\n\n\
+         subcommands:\n  \
+         train  --model vit_b [--steps N]        train/load the dense checkpoint\n  \
+         prune  --model vit_b --scope both --sparsity 0.5 [--method corp] [--criterion combined]\n  \
+         serve  --model vit_b --sparsity 0.5 [--rate 200]\n  \
+         stats  --model vit_b                    Table-9 redundancy statistics\n  \
+         list                                    models + artifact status"
+    );
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "train or load a dense checkpoint")
+        .opt("model", "model name", "vit_b")
+        .opt("steps", "training steps (0 = mode default)", "0");
+    let args = cmd.parse(argv)?;
+    let cfg = cfg_of(&args.str("model"))?;
+    let mut coord = Coordinator::new()?;
+    let steps = args.usize("steps")?;
+    let w = if steps > 0 {
+        let opts = crate::train::TrainOpts { steps, ..coord.train_opts(cfg) };
+        crate::train::ensure_checkpoint(&coord.rt, cfg, &opts)?
+    } else {
+        coord.dense(cfg)?.clone()
+    };
+    match cfg.kind {
+        crate::model::ModelKind::Vit => {
+            let acc = coord.top1(cfg, &w, 99)?;
+            println!("{}: {} params, top-1 {acc:.2}%", cfg.name, w.param_count());
+        }
+        crate::model::ModelKind::Gpt => {
+            let exec = coord.executor(cfg);
+            let gen = crate::data::TextGen::new(crate::data::DATA_SEED);
+            let ppl = crate::eval::ppl_stitched(&exec, &w, &gen, 8)?;
+            println!("{}: {} params, eval ppl {ppl:.3}", cfg.name, w.param_count());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_prune(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("prune", "run the one-shot pruning pipeline")
+        .opt("model", "model name", "vit_b")
+        .opt("scope", "mlp|attn|both", "both")
+        .opt("sparsity", "0.0-0.7", "0.5")
+        .opt("method", "corp|naive|grail|vbp", "corp")
+        .opt("criterion", "act|mag|combined|active", "combined")
+        .opt("lambda", "ridge strength", "0.01")
+        .opt("calib", "calibration batches", "16");
+    let args = cmd.parse(argv)?;
+    let cfg = cfg_of(&args.str("model"))?;
+    let scope = parse_scope(&args.str("scope"))?;
+    let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
+    if s10 > 7 {
+        bail!("sparsity must be <= 0.7 (artifact grid)");
+    }
+    let mut coord = Coordinator::new()?;
+    let opts = PruneOpts {
+        method: parse_method(&args.str("method"))?,
+        criterion: parse_criterion(&args.str("criterion"))?,
+        lambda: args.f64("lambda")?,
+        calib_batches: args.usize("calib")?,
+        ..PruneOpts::default()
+    };
+    let dense_acc = {
+        let w = coord.dense(cfg)?.clone();
+        coord.top1(cfg, &w, 99)?
+    };
+    let sp = Sparsity::of(scope, s10);
+    let (acc, p, f, sections) = coord.accuracy_at(cfg, sp, opts.method, &opts)?;
+    let pd = crate::flops::params(cfg, Sparsity::dense());
+    let fd = crate::flops::flops(cfg, Sparsity::dense());
+    println!(
+        "{} {} s={:.1} [{}]: top-1 {acc:.2}% (dense {dense_acc:.2}%)  params {:.2}M (-{:.1}%)  flops {:.1}M (-{:.1}%)",
+        cfg.name,
+        scope.label(),
+        s10 as f64 / 10.0,
+        opts.method.label(),
+        p as f64 / 1e6,
+        crate::flops::reduction_pct(pd, p),
+        f as f64 / 1e6,
+        crate::flops::reduction_pct(fd, f),
+    );
+    println!(
+        "pipeline: calibration {:.2}s  ranking {:.3}s  compensation {:.2}s",
+        sections.get("calibration"),
+        sections.get("ranking"),
+        sections.get("compensation")
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "dynamic-batcher serving demo")
+        .opt("model", "model name", "vit_b")
+        .opt("sparsity", "joint sparsity 0.0-0.7", "0.5")
+        .opt("rate", "arrival rate req/s", "200")
+        .opt("requests", "total requests", "256");
+    let args = cmd.parse(argv)?;
+    let cfg = cfg_of(&args.str("model"))?;
+    let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
+    let mut coord = Coordinator::new()?;
+    let opts = PruneOpts::default();
+    let weights = if s10 == 0 {
+        coord.dense(cfg)?.clone()
+    } else {
+        let o = PruneOpts { sparsity: Sparsity::of(Scope::Both, s10), ..opts };
+        coord.prune_job(cfg, &o)?.weights
+    };
+    let exec = coord.executor(cfg);
+    let gen = VisionGen::new(crate::data::DATA_SEED);
+    let bopts = crate::serve::BatcherOpts {
+        rate: args.f64("rate")?,
+        requests: args.usize("requests")?,
+        ..Default::default()
+    };
+    let stats = crate::serve::run_batcher(&exec, &weights, &gen, &bopts)?;
+    println!(
+        "served {} requests: p50 {:.2}ms p95 {:.2}ms mean-batch {:.1} throughput {:.0} fps",
+        stats.served, stats.p50_ms, stats.p95_ms, stats.mean_batch, stats.throughput_fps
+    );
+    Ok(())
+}
+
+fn cmd_stats(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("stats", "Table-9 redundancy statistics")
+        .opt("model", "model name", "vit_b")
+        .opt("calib", "calibration batches", "16");
+    let args = cmd.parse(argv)?;
+    let cfg = cfg_of(&args.str("model"))?;
+    let mut coord = Coordinator::new()?;
+    let opts = PruneOpts { calib_batches: args.usize("calib")?, ..PruneOpts::default() };
+    coord.dense(cfg)?;
+    let stats = coord.calib(cfg, &opts)?;
+    println!("layer | dim | eff.rank | ratio | k95 | k95-ratio | act.sparsity");
+    for (l, ls) in stats.layers.iter().enumerate() {
+        let red = crate::stats::redundancy(&ls.hidden.covariance());
+        println!(
+            "{l:5} | {:4} | {:8.1} | {:.3} | {:3} | {:.3}     | {:.2}",
+            cfg.mlp, red.effective_rank, red.rank_ratio, red.k95, red.k95_ratio, ls.active.sparsity()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let rt = crate::runtime::Runtime::from_default_dir()?;
+    println!("artifacts: {} in manifest", rt.manifest().len());
+    for cfg in crate::model::config::FAMILY {
+        let dense = Sparsity::dense();
+        println!(
+            "{:6} {:?} d={} h={} L={} mlp={}  params {:.2}M flops {:.1}M  artifacts: {}",
+            cfg.name,
+            cfg.kind,
+            cfg.d,
+            cfg.heads,
+            cfg.layers,
+            cfg.mlp,
+            crate::flops::params(cfg, dense) as f64 / 1e6,
+            crate::flops::flops(cfg, dense) as f64 / 1e6,
+            rt.has_artifact(&cfg.block_artifact(cfg.dh(), cfg.mlp, cfg.eval_batch())),
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parsers() {
+        assert_eq!(parse_scope("mlp").unwrap(), Scope::Mlp);
+        assert!(parse_scope("bogus").is_err());
+        assert_eq!(parse_method("corp").unwrap(), Method::Corp);
+        assert!(parse_method("x").is_err());
+        assert_eq!(parse_criterion("combined").unwrap(), MlpCriterion::Combined);
+        assert!(parse_criterion("y").is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(run_cli(&["nope".to_string()]).is_err());
+    }
+
+    #[test]
+    fn no_args_prints_usage() {
+        run_cli(&[]).unwrap();
+    }
+}

@@ -1,0 +1,263 @@
+//! Attention Q/K logit compensation (Alg. 5, App. B.2).
+//!
+//! Per layer and head: accumulate the Kronecker ridge system over
+//! calibration samples, solve for M, factor I + M = U Σ Vᵀ, and fold
+//! U Σ^{1/2} / V Σ^{1/2} into the kept query/key projection columns (and
+//! biases — Q̂_S = Q_S P means b̂_q = Pᵀ b_{q,S}).
+
+use crate::linalg::kron::KronRidge;
+use crate::linalg::svd::sqrt_split;
+use crate::linalg::Mat;
+use crate::tensor::Tensor;
+
+/// Compensated per-head projections + diagnostics.
+pub struct AttnCompensation {
+    /// New kept-dim query projection block [d, d'].
+    pub wq: Mat,
+    /// New query bias [d'].
+    pub bq: Vec<f64>,
+    /// New kept-dim key projection block [d, d'].
+    pub wk: Mat,
+    /// New key bias [d'].
+    pub bk: Vec<f64>,
+    /// Compensation gain hᵀ(G+λI)⁻¹h ≥ 0 (Prop. C.2.2).
+    pub gain: f64,
+    /// Bilinear R²: gain / Σ‖T_b‖² (Eq. 93).
+    pub rho2: f64,
+    /// Uncompensated logit energy Σ_b ‖Q_P K_Pᵀ‖²_F.
+    pub t_energy: f64,
+}
+
+/// Gather columns `idx` of a per-sample activation slab.
+/// `qk`: [B, n, dh] row-major; returns per-sample [n, |idx|] matrices.
+fn sample_mat(qk: &Tensor, sample: usize, idx: &[usize]) -> Mat {
+    let shape = qk.shape();
+    let (n, dh) = (shape[1], shape[2]);
+    let mut m = Mat::zeros(n, idx.len());
+    let base = sample * n * dh;
+    for t in 0..n {
+        for (j, &c) in idx.iter().enumerate() {
+            m.set(t, j, qk.data()[base + t * dh + c] as f64);
+        }
+    }
+    m
+}
+
+/// Compensate one attention head.
+///
+/// * `q`, `k`: captured dense per-head activations [B, n, dh];
+/// * `kept` / `pruned`: dh-index partition from Alg. 4;
+/// * `wq_head`, `wk_head`: dense projection blocks [d, dh] for this head;
+/// * `bq_head`, `bk_head`: dense biases [dh];
+/// * `lambda`: ridge strength;
+/// * `max_samples`: cap on calibration samples for the Kronecker
+///   accumulation (the compensator has only d'² parameters — Prop. C.2.3's
+///   d'²/N rate — so a modest cap loses nothing and bounds the d'⁴ cost).
+#[allow(clippy::too_many_arguments)]
+pub fn compensate_attn_head(
+    q: &Tensor,
+    k: &Tensor,
+    kept: &[usize],
+    pruned: &[usize],
+    wq_head: &Mat,
+    bq_head: &[f64],
+    wk_head: &Mat,
+    bk_head: &[f64],
+    lambda: f64,
+    max_samples: usize,
+) -> AttnCompensation {
+    let dp = kept.len();
+    let b_total = q.shape()[0].min(max_samples);
+
+    // Kept-column projections (pre-compensation).
+    let wq_s = gather_cols(wq_head, kept);
+    let wk_s = gather_cols(wk_head, kept);
+    let bq_s: Vec<f64> = kept.iter().map(|&i| bq_head[i]).collect();
+    let bk_s: Vec<f64> = kept.iter().map(|&i| bk_head[i]).collect();
+
+    if pruned.is_empty() {
+        return AttnCompensation {
+            wq: wq_s,
+            bq: bq_s,
+            wk: wk_s,
+            bk: bk_s,
+            gain: 0.0,
+            rho2: 0.0,
+            t_energy: 0.0,
+        };
+    }
+
+    // Accumulate the per-head Kronecker ridge system (Eq. 15).
+    let mut acc = KronRidge::new(dp);
+    for b in 0..b_total {
+        let qs = sample_mat(q, b, kept);
+        let qp = sample_mat(q, b, pruned);
+        let ks = sample_mat(k, b, kept);
+        let kp = sample_mat(k, b, pruned);
+        let kk = ks.t().mul(&ks);
+        let qq = qs.t().mul(&qs);
+        let r = qs.t().mul(&qp).mul(&kp.t().mul(&ks));
+        // ‖Q_P K_Pᵀ‖²_F = tr((Q_PᵀQ_P)(K_PᵀK_P)) — no n×n materialization.
+        let qqp = qp.t().mul(&qp);
+        let kkp = kp.t().mul(&kp);
+        let t_sq = qqp.mul(&kkp).trace();
+        acc.accumulate(&kk, &qq, &r, t_sq);
+    }
+    let m = acc.solve(lambda);
+    let (gain, rho2) = acc.gain_and_rho2(lambda);
+
+    // Fold I + M = U Σ Vᵀ into the projections (Eq. 16).
+    let i_plus_m = Mat::eye(dp).add(&m);
+    let (p, qfac) = sqrt_split(&i_plus_m); // P Qᵀ = I + M
+    let wq_new = wq_s.mul(&p);
+    let wk_new = wk_s.mul(&qfac);
+    let bq_new = vec_mat(&bq_s, &p);
+    let bk_new = vec_mat(&bk_s, &qfac);
+
+    AttnCompensation {
+        wq: wq_new,
+        bq: bq_new,
+        wk: wk_new,
+        bk: bk_new,
+        gain,
+        rho2,
+        t_energy: acc.t_energy,
+    }
+}
+
+fn gather_cols(m: &Mat, idx: &[usize]) -> Mat {
+    let mut out = Mat::zeros(m.r, idx.len());
+    for r in 0..m.r {
+        for (j, &c) in idx.iter().enumerate() {
+            out.set(r, j, m.at(r, c));
+        }
+    }
+    out
+}
+
+/// vᵀ P as a vector (bias transform).
+fn vec_mat(v: &[f64], p: &Mat) -> Vec<f64> {
+    assert_eq!(v.len(), p.r);
+    (0..p.c).map(|j| (0..p.r).map(|i| v[i] * p.at(i, j)).sum()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::gen;
+    use crate::util::Pcg64;
+
+    /// Build Q/K activations whose pruned-dim logits are exactly
+    /// representable in the kept bilinear span — compensation must recover
+    /// the full logits through the folded projections.
+    #[test]
+    fn folded_projections_recover_logits() {
+        let mut rng = Pcg64::new(8);
+        let (d, dh, n, bsz) = (10, 6, 7, 24);
+        let kept: Vec<usize> = vec![0, 1, 2, 3];
+        let pruned: Vec<usize> = vec![4, 5];
+        // Projections.
+        let wq = Mat::from_f32(d, dh, &gen::matrix(&mut rng, d, dh, 0.5));
+        let wk = Mat::from_f32(d, dh, &gen::matrix(&mut rng, d, dh, 0.5));
+        let bq = vec![0.1; dh];
+        let bk = vec![-0.05; dh];
+        // Inputs and captured Q/K = XW + b.
+        let mut qdata = vec![0.0f32; bsz * n * dh];
+        let mut kdata = vec![0.0f32; bsz * n * dh];
+        let mut xs = Vec::new();
+        for b in 0..bsz {
+            let x = Mat::from_f32(n, d, &gen::matrix(&mut rng, n, d, 1.0));
+            for t in 0..n {
+                for j in 0..dh {
+                    let mut qv = bq[j];
+                    let mut kv = bk[j];
+                    for c in 0..d {
+                        qv += x.at(t, c) * wq.at(c, j);
+                        kv += x.at(t, c) * wk.at(c, j);
+                    }
+                    qdata[(b * n + t) * dh + j] = qv as f32;
+                    kdata[(b * n + t) * dh + j] = kv as f32;
+                }
+            }
+            xs.push(x);
+        }
+        let q = Tensor::from_vec(&[bsz, n, dh], qdata);
+        let k = Tensor::from_vec(&[bsz, n, dh], kdata);
+        let comp = compensate_attn_head(&q, &k, &kept, &pruned, &wq, &bq, &wk, &bk, 1e-6, bsz);
+
+        // Measure total logit error with and without compensation on the
+        // calibration samples.
+        let mut err_comp = 0.0f64;
+        let mut err_naive = 0.0f64;
+        let mut total = 0.0f64;
+        for (b, x) in xs.iter().enumerate() {
+            // Full logits.
+            let qfull = x.mul(&wq).add(&row_bias(n, &bq));
+            let kfull = x.mul(&wk).add(&row_bias(n, &bk));
+            let l_full = qfull.mul(&kfull.t());
+            // Compensated kept logits.
+            let qc = x.mul(&comp.wq).add(&row_bias(n, &comp.bq));
+            let kc = x.mul(&comp.wk).add(&row_bias(n, &comp.bk));
+            let l_comp = qc.mul(&kc.t());
+            // Naive kept logits.
+            let qs = sample_mat(&q, b, &kept);
+            let ks = sample_mat(&k, b, &kept);
+            let l_naive = qs.mul(&ks.t());
+            err_comp += l_full.sub(&l_comp).frob().powi(2);
+            err_naive += l_full.sub(&l_naive).frob().powi(2);
+            total += l_full.frob().powi(2);
+        }
+        assert!(err_comp < err_naive * 0.9, "comp {err_comp} vs naive {err_naive}");
+        assert!(err_comp / total < 0.5);
+        assert!(comp.gain > 0.0);
+        assert!((0.0..=1.0).contains(&comp.rho2));
+    }
+
+    fn row_bias(n: usize, b: &[f64]) -> Mat {
+        let mut m = Mat::zeros(n, b.len());
+        for t in 0..n {
+            for j in 0..b.len() {
+                m.set(t, j, b[j]);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn no_pruning_returns_kept_projections() {
+        let mut rng = Pcg64::new(3);
+        let (d, dh, n, bsz) = (4, 3, 5, 4);
+        let wq = Mat::from_f32(d, dh, &gen::matrix(&mut rng, d, dh, 1.0));
+        let wk = Mat::from_f32(d, dh, &gen::matrix(&mut rng, d, dh, 1.0));
+        let q = Tensor::from_vec(&[bsz, n, dh], gen::matrix(&mut rng, bsz * n, dh, 1.0));
+        let k = Tensor::from_vec(&[bsz, n, dh], gen::matrix(&mut rng, bsz * n, dh, 1.0));
+        let kept: Vec<usize> = (0..dh).collect();
+        let comp = compensate_attn_head(&q, &k, &kept, &[], &wq, &[0.0; 3], &wk, &[0.0; 3], 1e-6, bsz);
+        assert!(comp.wq.max_abs_diff(&wq) < 1e-12);
+        assert_eq!(comp.gain, 0.0);
+    }
+
+    #[test]
+    fn bias_transform_orientation() {
+        // vᵀP with P = 2I doubles the bias.
+        let p = Mat::eye(3).scale(2.0);
+        let out = vec_mat(&[1.0, 2.0, 3.0], &p);
+        assert_eq!(out, vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn t_energy_positive_when_pruning() {
+        let mut rng = Pcg64::new(9);
+        let (d, dh, n, bsz) = (6, 4, 5, 8);
+        let wq = Mat::from_f32(d, dh, &gen::matrix(&mut rng, d, dh, 1.0));
+        let wk = Mat::from_f32(d, dh, &gen::matrix(&mut rng, d, dh, 1.0));
+        let q = Tensor::from_vec(&[bsz, n, dh], gen::matrix(&mut rng, bsz * n, dh, 1.0));
+        let k = Tensor::from_vec(&[bsz, n, dh], gen::matrix(&mut rng, bsz * n, dh, 1.0));
+        let comp = compensate_attn_head(
+            &q, &k, &[0, 1], &[2, 3], &wq, &[0.0; 4], &wk, &[0.0; 4], 1e-4, bsz,
+        );
+        assert!(comp.t_energy > 0.0);
+        assert_eq!(comp.wq.c, 2);
+        assert_eq!(comp.bq.len(), 2);
+    }
+}

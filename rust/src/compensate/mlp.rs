@@ -1,0 +1,313 @@
+//! MLP affine compensation (Alg. 3, App. B.1) and the distortion identities
+//! of Props. C.1.1 / C.1.2.
+
+use crate::linalg::ridge::ridge_right;
+use crate::linalg::{sym_pinv, Mat};
+use crate::stats::CovBlocks;
+use crate::tensor::Tensor;
+
+/// Result of compensating one MLP block's second linear layer.
+pub struct MlpCompensation {
+    /// Compensated kept weights Ŵ_S = W_S + W_P B, stored [|S|, d] in the
+    /// w2 row-layout (rows are hidden channels).
+    pub w2_hat: Tensor,
+    /// Compensated bias b̂ = b + W_P c, [d].
+    pub b2_hat: Tensor,
+    /// ρ²_{W_P}: fraction of pruned-channel variance (in W_P directions)
+    /// linearly explained by kept channels (Eq. 65) — a free diagnostic.
+    pub rho2: f64,
+    /// Predicted optimal distortion J*_D = tr(W_P Σ_{P|S} W_Pᵀ) (Eq. 11).
+    pub j_star: f64,
+    /// Uncompensated distortion J_uncomp (Eq. 63).
+    pub j_uncomp: f64,
+}
+
+/// Compensate the second MLP linear layer.
+///
+/// `w2` [o, d] (row i = output contribution of hidden channel i — the
+/// *columns* W_{:,i} of the paper's y = Wx view), `b2` [d];
+/// `blocks` = covariance blocks of the hidden activations for the
+/// (kept, pruned) partition; `lambda` = ridge strength.
+///
+/// Returns pruned + compensated (Ŵ_S, b̂) plus diagnostics. Rows of `w2_hat`
+/// correspond to `kept` in ascending index order.
+pub fn compensate_mlp(
+    w2: &Tensor,
+    b2: &Tensor,
+    kept: &[usize],
+    pruned: &[usize],
+    blocks: &CovBlocks,
+    lambda: f64,
+) -> MlpCompensation {
+    compensate_mlp_opts(w2, b2, kept, pruned, blocks, lambda, true)
+}
+
+/// `compensate_mlp` with the distortion diagnostics optional: the ρ²/J*
+/// computation needs a pseudo-inverse of Σ_SS (a |S|³·sweeps Jacobi eigen
+/// solve) and dominated pipeline time at larger sizes (§Perf L3-2) — the
+/// *solve itself* is a single Cholesky. Production pruning passes
+/// `diagnostics = false`.
+#[allow(clippy::too_many_arguments)]
+pub fn compensate_mlp_opts(
+    w2: &Tensor,
+    b2: &Tensor,
+    kept: &[usize],
+    pruned: &[usize],
+    blocks: &CovBlocks,
+    lambda: f64,
+    diagnostics: bool,
+) -> MlpCompensation {
+    let d = w2.shape()[1];
+    assert_eq!(b2.shape(), &[d]);
+    // W_P as a Mat [d, |P|]: column j = w2 row pruned[j] (paper orientation
+    // y = W x has W [d, o]; our storage is the transpose).
+    let wp = gather_wt(w2, pruned); // [d, |P|]
+    let ws = gather_wt(w2, kept); // [d, |S|]
+
+    // B = Σ_PS (Σ_SS + λI)⁻¹, c = μ_P − B μ_S   (Eq. 9)
+    let b_mat = ridge_right(&blocks.ps, &blocks.ss, lambda); // [|P|, |S|]
+    let c: Vec<f64> = (0..pruned.len())
+        .map(|i| {
+            blocks.mu_p[i]
+                - (0..kept.len()).map(|j| b_mat.at(i, j) * blocks.mu_s[j]).sum::<f64>()
+        })
+        .collect();
+
+    // Fold: Ŵ_S = W_S + W_P B  ([d, |S|]), b̂ = b + W_P c.
+    let ws_hat = ws.add(&wp.mul(&b_mat));
+    let mut b_hat = vec![0.0f64; d];
+    for r in 0..d {
+        b_hat[r] = b2.data()[r] as f64 + (0..pruned.len()).map(|i| wp.at(r, i) * c[i]).sum::<f64>();
+    }
+
+    // Diagnostics (Props. C.1.1 / C.1.2) — optional on the hot path.
+    let (j_star, j_uncomp, rho2) =
+        if diagnostics { mlp_distortion(&wp, blocks) } else { (0.0, 0.0, 0.0) };
+
+    // Back to w2 row layout: w2_hat [|S|, d] with row k = column k of Ŵ_S.
+    let mut w2_hat = vec![0.0f32; kept.len() * d];
+    for k in 0..kept.len() {
+        for r in 0..d {
+            w2_hat[k * d + r] = ws_hat.at(r, k) as f32;
+        }
+    }
+    MlpCompensation {
+        w2_hat: Tensor::from_vec(&[kept.len(), d], w2_hat),
+        b2_hat: Tensor::from_vec(&[d], b_hat.iter().map(|&v| v as f32).collect()),
+        rho2,
+        j_star,
+        j_uncomp,
+    }
+}
+
+/// Gather hidden-channel rows of w2 [o, d] into a [d, k] Mat (transposed to
+/// the paper's W orientation).
+fn gather_wt(w2: &Tensor, idx: &[usize]) -> Mat {
+    let d = w2.shape()[1];
+    let mut m = Mat::zeros(d, idx.len());
+    for (j, &i) in idx.iter().enumerate() {
+        let row = w2.row(i);
+        for r in 0..d {
+            m.set(r, j, row[r] as f64);
+        }
+    }
+    m
+}
+
+/// Distortion identities: returns (J*_D, J_uncomp, ρ²_{W_P}).
+///
+/// J*_D   = tr(W_P Σ_{P|S} W_Pᵀ),  Σ_{P|S} = Σ_PP − Σ_PS Σ_SS† Σ_SP   (Eq. 11)
+/// J_unc  = tr(W_P Σ_PP W_Pᵀ) + ‖W_P μ_P‖²                            (Eq. 63)
+/// ρ²     = tr(W_P Σ_PS Σ_SS† Σ_SP W_Pᵀ) / tr(W_P Σ_PP W_Pᵀ)          (Eq. 65)
+pub fn mlp_distortion(wp: &Mat, blocks: &CovBlocks) -> (f64, f64, f64) {
+    if wp.c == 0 {
+        return (0.0, 0.0, 0.0);
+    }
+    let ss_pinv = sym_pinv(&blocks.ss, 1e-10);
+    let explained = blocks.ps.mul(&ss_pinv).mul(&blocks.ps.t()); // Σ_PS Σ_SS† Σ_SP
+    let sigma_cond = blocks.pp.sub(&explained);
+    let j_star = trace_wswt(wp, &sigma_cond).max(0.0);
+    let var_term = trace_wswt(wp, &blocks.pp);
+    // ‖W_P μ_P‖²
+    let mut mean_term = 0.0;
+    for r in 0..wp.r {
+        let mut s = 0.0;
+        for i in 0..wp.c {
+            s += wp.at(r, i) * blocks.mu_p[i];
+        }
+        mean_term += s * s;
+    }
+    let j_uncomp = var_term + mean_term;
+    let rho2 = if var_term > 0.0 {
+        (trace_wswt(wp, &explained) / var_term).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    (j_star, j_uncomp, rho2)
+}
+
+/// tr(W S Wᵀ) for W [d, k], S [k, k].
+fn trace_wswt(w: &Mat, s: &Mat) -> f64 {
+    let ws = w.mul(s);
+    let mut tr = 0.0;
+    for r in 0..w.r {
+        for i in 0..w.c {
+            tr += ws.at(r, i) * w.at(r, i);
+        }
+    }
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{cov_blocks, MomentAccumulator};
+    use crate::util::prop::{gen, run_prop};
+    use crate::util::Pcg64;
+
+    /// Build synthetic activations where pruned channels are exact affine
+    /// functions of kept ones: compensation must be (near) lossless.
+    #[test]
+    fn lossless_when_pruned_is_affine_of_kept() {
+        let mut rng = Pcg64::new(3);
+        let (s_n, p_n, d, rows) = (5, 3, 4, 400);
+        let o = s_n + p_n;
+        let b_true = gen::matrix(&mut rng, p_n, s_n, 0.7);
+        let c_true: Vec<f32> = (0..p_n).map(|_| rng.normal_f32(0.5, 0.3)).collect();
+        // Activations: kept random; pruned = B xS + c (no noise).
+        let mut x = vec![0.0f32; rows * o];
+        for r in 0..rows {
+            for j in 0..s_n {
+                x[r * o + j] = rng.normal_f32(0.3, 1.0);
+            }
+            for i in 0..p_n {
+                let mut v = c_true[i];
+                for j in 0..s_n {
+                    v += b_true[i * s_n + j] * x[r * o + j];
+                }
+                x[r * o + s_n + i] = v;
+            }
+        }
+        let mut acc = MomentAccumulator::new(o);
+        acc.add_batch(&x, rows);
+        let cov = acc.covariance();
+        let mean = acc.mean();
+        let kept: Vec<usize> = (0..s_n).collect();
+        let pruned: Vec<usize> = (s_n..o).collect();
+        let blocks = cov_blocks(&cov, &mean, &kept, &pruned);
+        let w2 = Tensor::from_vec(&[o, d], gen::matrix(&mut rng, o, d, 0.5));
+        let b2 = Tensor::from_vec(&[d], vec![0.1; d]);
+        let comp = compensate_mlp(&w2, &b2, &kept, &pruned, &blocks, 1e-8);
+
+        // Validate on fresh samples from the same process: y_full == y_comp.
+        let mut max_err = 0.0f64;
+        for _ in 0..50 {
+            let mut xs = vec![0.0f32; o];
+            for j in 0..s_n {
+                xs[j] = rng.normal_f32(0.3, 1.0);
+            }
+            for i in 0..p_n {
+                let mut v = c_true[i];
+                for j in 0..s_n {
+                    v += b_true[i * s_n + j] * xs[j];
+                }
+                xs[s_n + i] = v;
+            }
+            for col in 0..d {
+                let full: f64 = (0..o).map(|i| (xs[i] * w2.at2(i, col)) as f64).sum::<f64>()
+                    + b2.data()[col] as f64;
+                let compv: f64 = (0..s_n)
+                    .map(|k| (xs[kept[k]] * comp.w2_hat.at2(k, col)) as f64)
+                    .sum::<f64>()
+                    + comp.b2_hat.data()[col] as f64;
+                max_err = max_err.max((full - compv).abs());
+            }
+        }
+        assert!(max_err < 1e-3, "max_err={max_err}");
+        assert!(comp.rho2 > 0.99, "rho2={}", comp.rho2);
+        assert!(comp.j_star < 1e-4 * comp.j_uncomp.max(1e-12));
+    }
+
+    /// The closed-form distortion (Eq. 11) must match the empirical layer
+    /// error measured on the calibration data itself.
+    #[test]
+    fn distortion_identity_matches_empirical() {
+        run_prop("mlp.distortion identity", 8, |rng| {
+            let o = 4 + rng.below(6);
+            let d = 2 + rng.below(4);
+            let rows = 300;
+            let x = gen::matrix(rng, rows, o, 1.0);
+            let mut acc = MomentAccumulator::new(o);
+            acc.add_batch(&x, rows);
+            let cov = acc.covariance();
+            let mean = acc.mean();
+            let k = 1 + rng.below(o - 1);
+            let kept: Vec<usize> = (0..k).collect();
+            let pruned: Vec<usize> = (k..o).collect();
+            let blocks = cov_blocks(&cov, &mean, &kept, &pruned);
+            let w2 = Tensor::from_vec(&[o, d], gen::matrix(rng, o, d, 1.0));
+            let b2 = Tensor::from_vec(&[d], vec![0.0; d]);
+            let comp = compensate_mlp(&w2, &b2, &kept, &pruned, &blocks, 1e-9);
+            // Empirical error of the compensated layer on the calibration set.
+            let mut emp = 0.0f64;
+            for r in 0..rows {
+                let xr = &x[r * o..(r + 1) * o];
+                for col in 0..d {
+                    let full: f64 = (0..o).map(|i| (xr[i] * w2.at2(i, col)) as f64).sum();
+                    let cv: f64 = (0..k)
+                        .map(|j| (xr[kept[j]] * comp.w2_hat.at2(j, col)) as f64)
+                        .sum::<f64>()
+                        + comp.b2_hat.data()[col] as f64
+                        - b2.data()[col] as f64;
+                    let e = full - cv;
+                    emp += e * e;
+                }
+            }
+            emp /= rows as f64;
+            // J* from the identity (λ→0 limit; small λ used in solve).
+            let rel = (emp - comp.j_star).abs() / (1.0 + comp.j_star);
+            assert!(rel < 0.05, "emp={emp} j_star={} rel={rel}", comp.j_star);
+        });
+    }
+
+    /// Compensation gain is non-negative: J_uncomp >= J* (Prop. C.1.2).
+    #[test]
+    fn gain_nonnegative_prop() {
+        run_prop("mlp.gain >= 0", 10, |rng| {
+            let o = 3 + rng.below(8);
+            let d = 1 + rng.below(4);
+            let rows = 120;
+            let x = gen::matrix(rng, rows, o, 1.0);
+            let mut acc = MomentAccumulator::new(o);
+            acc.add_batch(&x, rows);
+            let k = 1 + rng.below(o - 1);
+            let kept: Vec<usize> = (0..k).collect();
+            let pruned: Vec<usize> = (k..o).collect();
+            let blocks = cov_blocks(&acc.covariance(), &acc.mean(), &kept, &pruned);
+            let w2 = Tensor::from_vec(&[o, d], gen::matrix(rng, o, d, 1.0));
+            let wp = super::gather_wt(&w2, &pruned);
+            let (j_star, j_uncomp, rho2) = mlp_distortion(&wp, &blocks);
+            assert!(j_uncomp >= j_star - 1e-9 * j_uncomp.abs());
+            assert!((0.0..=1.0).contains(&rho2));
+        });
+    }
+
+    #[test]
+    fn empty_prune_set_is_identity() {
+        let o = 4;
+        let d = 3;
+        let mut rng = Pcg64::new(5);
+        let x = gen::matrix(&mut rng, 50, o, 1.0);
+        let mut acc = MomentAccumulator::new(o);
+        acc.add_batch(&x, 50);
+        let kept: Vec<usize> = (0..o).collect();
+        let pruned: Vec<usize> = vec![];
+        let blocks = cov_blocks(&acc.covariance(), &acc.mean(), &kept, &pruned);
+        let w2 = Tensor::from_vec(&[o, d], gen::matrix(&mut rng, o, d, 1.0));
+        let b2 = Tensor::from_vec(&[d], vec![0.5; d]);
+        let comp = compensate_mlp(&w2, &b2, &kept, &pruned, &blocks, 1e-6);
+        assert!(comp.w2_hat.max_abs_diff(&w2) < 1e-6);
+        assert!(comp.b2_hat.max_abs_diff(&b2) < 1e-6);
+        assert_eq!(comp.j_star, 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Closed-form compensation (the core of CORP, §3.4 + App. B).
+//!
+//! * [`mlp`]: affine compensator x_P ≈ B x_S + c folded into the second
+//!   linear layer: Ŵ_S = W_S + W_P B, b̂ = b + W_P c (Alg. 3).
+//! * [`attn`]: logit compensator Q_P K_Pᵀ ≈ Q_S M K_Sᵀ solved per head from
+//!   the Kronecker ridge system and folded into the Q/K projections via the
+//!   SVD of I + M (Alg. 5).
+//!
+//! Both expose the paper's exact distortion diagnostics (Props. C.1.1–C.2.2)
+//! which the test-suite checks against brute-force objectives.
+
+pub mod mlp;
+pub mod attn;
+
+pub use attn::{compensate_attn_head, AttnCompensation};
+pub use mlp::{compensate_mlp, mlp_distortion, MlpCompensation};

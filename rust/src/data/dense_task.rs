@@ -1,0 +1,167 @@
+//! Dense-prediction task heads (DINOv2-substitute, Table 8 analogue).
+//!
+//! Given frozen backbone patch features, fit two closed-form heads:
+//! * depth: per-patch ridge regression feature → scalar;
+//! * segmentation: per-patch one-vs-rest ridge scores, argmax label.
+//!
+//! Heads are fitted once on the *dense* backbone and kept frozen while the
+//! backbone is pruned — exactly the paper's protocol (prune backbone only,
+//! keep task heads unchanged).
+
+use crate::linalg::ridge::ridge_fit_affine;
+use crate::linalg::Mat;
+
+/// A fitted linear head: y = x·W + b.
+pub struct LinearHead {
+    pub w: Mat,          // [d, k]
+    pub b: Vec<f64>,     // [k]
+}
+
+impl LinearHead {
+    /// Fit with ridge on features [n, d] and targets [n, k].
+    pub fn fit(features: &Mat, targets: &Mat, lambda: f64) -> Self {
+        let (w, b) = ridge_fit_affine(features, targets, lambda);
+        Self { w, b }
+    }
+
+    /// Apply to features [n, d] -> [n, k].
+    pub fn apply(&self, features: &Mat) -> Mat {
+        let mut out = features.mul(&self.w);
+        for i in 0..out.r {
+            for j in 0..out.c {
+                out.a[i * out.c + j] += self.b[j];
+            }
+        }
+        out
+    }
+}
+
+/// One-hot encode labels [n] -> [n, k].
+pub fn one_hot(labels: &[i32], k: usize) -> Mat {
+    let mut out = Mat::zeros(labels.len(), k);
+    for (i, &l) in labels.iter().enumerate() {
+        out.set(i, l as usize, 1.0);
+    }
+    out
+}
+
+/// Depth metrics: RMSE and δ1 = fraction with max(pred/gt, gt/pred) < 1.25.
+pub fn depth_metrics(pred: &[f64], gt: &[f32]) -> (f64, f64) {
+    assert_eq!(pred.len(), gt.len());
+    let n = pred.len() as f64;
+    let mut se = 0.0;
+    let mut d1 = 0usize;
+    for (&p, &g) in pred.iter().zip(gt) {
+        let g = g as f64;
+        let p = p.clamp(1e-6, 1.0);
+        let g2 = g.max(1e-6);
+        se += (p - g) * (p - g);
+        let ratio = (p / g2).max(g2 / p);
+        if ratio < 1.25 {
+            d1 += 1;
+        }
+    }
+    ((se / n).sqrt(), d1 as f64 / n)
+}
+
+/// Mean IoU over classes for predicted/gt label maps.
+pub fn mean_iou(pred: &[i32], gt: &[i32], k: usize) -> f64 {
+    assert_eq!(pred.len(), gt.len());
+    let mut inter = vec![0usize; k];
+    let mut uni = vec![0usize; k];
+    for (&p, &g) in pred.iter().zip(gt) {
+        if p == g {
+            inter[g as usize] += 1;
+            uni[g as usize] += 1;
+        } else {
+            uni[p as usize] += 1;
+            uni[g as usize] += 1;
+        }
+    }
+    let mut sum = 0.0;
+    let mut count = 0;
+    for c in 0..k {
+        if uni[c] > 0 {
+            sum += inter[c] as f64 / uni[c] as f64;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        0.0
+    } else {
+        sum / count as f64
+    }
+}
+
+/// Argmax rows of a score matrix.
+pub fn argmax_rows(scores: &Mat) -> Vec<i32> {
+    (0..scores.r)
+        .map(|i| {
+            let row = scores.row(i);
+            let mut best = 0usize;
+            for j in 1..row.len() {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            best as i32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::gen;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn head_fits_linear_targets() {
+        let mut rng = Pcg64::new(1);
+        let x = Mat::from_f32(60, 5, &gen::matrix(&mut rng, 60, 5, 1.0));
+        let w = Mat::from_f32(5, 2, &gen::matrix(&mut rng, 5, 2, 1.0));
+        let y = x.mul(&w);
+        let head = LinearHead::fit(&x, &y, 1e-8);
+        let pred = head.apply(&x);
+        assert!(pred.max_abs_diff(&y) < 1e-4);
+    }
+
+    #[test]
+    fn one_hot_rows() {
+        let m = one_hot(&[0, 2, 1], 3);
+        assert_eq!(m.row(0), &[1.0, 0.0, 0.0]);
+        assert_eq!(m.row(1), &[0.0, 0.0, 1.0]);
+        assert_eq!(m.row(2), &[0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn depth_metrics_perfect() {
+        let gt = vec![0.2f32, 0.5, 0.9];
+        let pred = vec![0.2f64, 0.5, 0.9];
+        let (rmse, d1) = depth_metrics(&pred, &gt);
+        assert!(rmse < 1e-6); // f32→f64 widening leaves ~1e-8 residue
+        assert_eq!(d1, 1.0);
+    }
+
+    #[test]
+    fn depth_metrics_detects_error() {
+        let gt = vec![0.5f32; 10];
+        let pred = vec![0.9f64; 10];
+        let (rmse, d1) = depth_metrics(&pred, &gt);
+        assert!((rmse - 0.4).abs() < 1e-9);
+        assert_eq!(d1, 0.0); // 0.9/0.5 = 1.8 > 1.25
+    }
+
+    #[test]
+    fn miou_perfect_and_disjoint() {
+        assert_eq!(mean_iou(&[0, 1, 1], &[0, 1, 1], 2), 1.0);
+        let m = mean_iou(&[0, 0], &[1, 1], 2);
+        assert_eq!(m, 0.0);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        let m = Mat::from_rows(2, 3, vec![0.1, 0.9, 0.2, 5.0, -1.0, 2.0]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+    }
+}

@@ -1,0 +1,38 @@
+//! Synthetic datasets (ImageNet / C4-WikiText / NYUv2+ADE20k substitutes —
+//! see DESIGN.md §Substitutions).
+//!
+//! All generators are deterministic from a seed, stream batches on demand
+//! (nothing is materialized beyond the batch), and expose disjoint train /
+//! calibration / eval splits via independent seed domains.
+
+pub mod vision;
+pub mod text;
+pub mod dense_task;
+
+pub use text::TextGen;
+pub use vision::VisionGen;
+
+/// Canonical dataset seed. The generator seed defines the *task* (class
+/// prototypes, Markov transition structure); train / calibration / eval
+/// draw disjoint example streams from the same task via [`Split`]. Every
+/// component must build generators from this seed or models will be
+/// evaluated on a different task than they were trained on.
+pub const DATA_SEED: u64 = 17;
+
+/// Split tag — maps to an independent RNG stream so splits never overlap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Calib,
+    Eval,
+}
+
+impl Split {
+    pub(crate) fn salt(self) -> u64 {
+        match self {
+            Split::Train => 0x7261696e,
+            Split::Calib => 0x63616c69,
+            Split::Eval => 0x6576616c,
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Evaluation harness: top-1 accuracy, perplexity, dense-task metrics.
+
+use anyhow::Result;
+
+use crate::data::{Split, TextGen, VisionGen};
+use crate::exec::Executor;
+use crate::model::{ModelKind, WeightStore};
+
+/// Top-1 accuracy of a (possibly pruned) ViT over `n_batches` eval batches.
+pub fn top1(
+    exec: &Executor<'_>,
+    w: &WeightStore,
+    gen: &VisionGen,
+    n_batches: usize,
+) -> Result<f64> {
+    assert_eq!(exec.cfg.kind, ModelKind::Vit);
+    let b = exec.cfg.eval_batch();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..n_batches {
+        let (tokens, labels) = gen.batch(Split::Eval, i as u64, b);
+        let logits = exec.forward_vit(w, &tokens, b)?;
+        let c = exec.cfg.classes;
+        for (j, &label) in labels.iter().enumerate() {
+            let row = &logits.data()[j * c..(j + 1) * c];
+            let mut best = 0usize;
+            for k in 1..c {
+                if row[k] > row[best] {
+                    best = k;
+                }
+            }
+            if best == label as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(100.0 * correct as f64 / total as f64)
+}
+
+/// Perplexity of a *dense* GPT via the evloss artifact.
+///
+/// Note: the evloss graph carries the full dense parameter spec, so it is
+/// only valid for dense weights; pruned GPT perplexity uses `ppl_stitched`.
+pub fn ppl_dense(
+    exec: &Executor<'_>,
+    w: &WeightStore,
+    gen: &TextGen,
+    n_batches: usize,
+) -> Result<f64> {
+    assert_eq!(exec.cfg.kind, ModelKind::Gpt);
+    let b = exec.cfg.eval_batch();
+    let mut total = 0.0f64;
+    for i in 0..n_batches {
+        let (ids, targets) = gen.batch(Split::Eval, i as u64, b, exec.cfg.n_ctx);
+        let loss = exec.eval_loss(w, None, Some(&ids), &targets)?;
+        total += loss as f64;
+    }
+    Ok((total / n_batches as f64).exp())
+}
+
+/// Perplexity via the stitched per-block forward (works for pruned weights):
+/// cross-entropy computed in Rust from the head logits.
+pub fn ppl_stitched(
+    exec: &Executor<'_>,
+    w: &WeightStore,
+    gen: &TextGen,
+    n_batches: usize,
+) -> Result<f64> {
+    assert_eq!(exec.cfg.kind, ModelKind::Gpt);
+    let b = exec.cfg.eval_batch();
+    let n = exec.cfg.n_ctx;
+    let v = exec.cfg.vocab;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for i in 0..n_batches {
+        let (ids, targets) = gen.batch(Split::Eval, i as u64, b, n);
+        let logits = exec.forward_gpt(w, &ids, b)?;
+        let data = logits.data();
+        for row in 0..b * n {
+            let lr = &data[row * v..(row + 1) * v];
+            // log-softmax pick
+            let m = lr.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let lse: f32 = lr.iter().map(|&x| (x - m).exp()).sum::<f32>().ln() + m;
+            let t = targets[row] as usize;
+            total += (lse - lr[t]) as f64;
+            count += 1;
+        }
+    }
+    Ok((total / count as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    // Covered by the integration tests in rust/tests/ (requires artifacts).
+}

@@ -1,0 +1,227 @@
+//! Model executor: stitches embed → blocks → head from per-block artifacts.
+//!
+//! Because weights are graph *arguments*, the same executor runs dense,
+//! pruned, and compensated models — it derives the artifact shape key from
+//! the actual weight shapes in the store. Capture mode additionally returns
+//! each layer's MLP hidden activations and per-head Q/K (the calibration
+//! signals of Alg. 1).
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{ModelConfig, ModelKind, WeightStore};
+use crate::runtime::{Input, Runtime};
+use crate::tensor::Tensor;
+
+/// Per-layer calibration capture (dense model).
+pub struct LayerCapture {
+    /// Post-GELU MLP hidden activations [B, n, o].
+    pub hidden: Tensor,
+    /// Per-head queries [B, h, n, dh] (pre-scale, bias included).
+    pub q: Tensor,
+    /// Per-head keys [B, h, n, dh].
+    pub k: Tensor,
+}
+
+pub struct Executor<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: &'static ModelConfig,
+}
+
+impl<'rt> Executor<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: &'static ModelConfig) -> Self {
+        Self { rt, cfg }
+    }
+
+    /// Infer (dqk, o) from the stored block-0 weight shapes.
+    pub fn stored_dims(&self, w: &WeightStore) -> Result<(usize, usize)> {
+        let wq = w.expect("blocks.0.attn.wq")?;
+        let w1 = w.expect("blocks.0.mlp.w1")?;
+        Ok((wq.shape()[1] / self.cfg.heads, w1.shape()[1]))
+    }
+
+    fn push_params<'a>(
+        &self,
+        w: &'a WeightStore,
+        names: impl Iterator<Item = String>,
+        inputs: &mut Vec<Input<'a>>,
+    ) -> Result<()> {
+        for name in names {
+            let t = w.expect(&name)?;
+            inputs.push(Input::F32(t));
+        }
+        Ok(())
+    }
+
+    /// Run the embedding graph. vit: `tokens` [B, P, pd]; gpt: `ids` via
+    /// `forward_gpt`.
+    pub fn embed(&self, w: &WeightStore, tokens: &Tensor, batch: usize) -> Result<Tensor> {
+        let art = self.cfg.embed_artifact(batch);
+        let mut inputs: Vec<Input> = vec![Input::F32(tokens)];
+        self.push_params(w, self.cfg.embed_param_spec().into_iter().map(|(n, _)| n), &mut inputs)?;
+        let mut out = self.rt.execute(&art, &inputs)?;
+        Ok(out.remove(0))
+    }
+
+    pub fn embed_gpt(&self, w: &WeightStore, ids: &[i32], batch: usize) -> Result<Tensor> {
+        if self.cfg.kind != ModelKind::Gpt {
+            bail!("embed_gpt on a vit config");
+        }
+        let art = self.cfg.embed_artifact(batch);
+        let shape = vec![batch, self.cfg.n_ctx];
+        let mut inputs: Vec<Input> = vec![Input::I32(ids, shape)];
+        self.push_params(w, self.cfg.embed_param_spec().into_iter().map(|(n, _)| n), &mut inputs)?;
+        let mut out = self.rt.execute(&art, &inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// Run one block (layer index `l`) on x [B, n, d].
+    pub fn block(&self, w: &WeightStore, l: usize, x: &Tensor, batch: usize) -> Result<Tensor> {
+        let (dqk, o) = self.stored_dims(w)?;
+        let art = self.cfg.block_artifact(dqk, o, batch);
+        let mut inputs: Vec<Input> = vec![Input::F32(x)];
+        self.push_params(
+            w,
+            self.cfg.block_param_spec(dqk, o).into_iter().map(|(n, _)| format!("blocks.{l}.{n}")),
+            &mut inputs,
+        )?;
+        let mut out = self
+            .rt
+            .execute(&art, &inputs)
+            .with_context(|| format!("block layer {l} artifact {art}"))?;
+        Ok(out.remove(0))
+    }
+
+    /// Run one block through the attention-free (DC-ViT-like) artifact.
+    pub fn block_mlponly(&self, w: &WeightStore, l: usize, x: &Tensor, batch: usize) -> Result<Tensor> {
+        let w1 = w.expect(&format!("blocks.{l}.mlp.w1"))?;
+        let o = w1.shape()[1];
+        let art = format!("mlponly_{}_o{o}_b{batch}", self.cfg.name);
+        let mut inputs: Vec<Input> = vec![Input::F32(x)];
+        for n in ["ln2.g", "ln2.b", "mlp.w1", "mlp.b1", "mlp.w2", "mlp.b2"] {
+            inputs.push(Input::F32(w.expect(&format!("blocks.{l}.{n}"))?));
+        }
+        let mut out = self.rt.execute(&art, &inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// Run one block in capture mode (dense shapes only).
+    pub fn block_capture(
+        &self,
+        w: &WeightStore,
+        l: usize,
+        x: &Tensor,
+    ) -> Result<(Tensor, LayerCapture)> {
+        let art = self.cfg.blockcap_artifact();
+        let (dqk, o) = (self.cfg.dh(), self.cfg.mlp);
+        let mut inputs: Vec<Input> = vec![Input::F32(x)];
+        self.push_params(
+            w,
+            self.cfg.block_param_spec(dqk, o).into_iter().map(|(n, _)| format!("blocks.{l}.{n}")),
+            &mut inputs,
+        )?;
+        let mut out = self.rt.execute(&art, &inputs)?;
+        if out.len() != 4 {
+            bail!("capture artifact returned {} outputs", out.len());
+        }
+        let k = out.remove(3);
+        let q = out.remove(2);
+        let hidden = out.remove(1);
+        let y = out.remove(0);
+        Ok((y, LayerCapture { hidden, q, k }))
+    }
+
+    /// Run the classification / LM head on x [B, n, d].
+    pub fn head(&self, w: &WeightStore, x: &Tensor, batch: usize) -> Result<Tensor> {
+        let art = self.cfg.head_artifact(batch);
+        let mut inputs: Vec<Input> = vec![Input::F32(x)];
+        self.push_params(w, self.cfg.head_param_spec().into_iter().map(|(n, _)| n), &mut inputs)?;
+        let mut out = self.rt.execute(&art, &inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// Final-layernorm features [B, n, d] (dense-task backbone output).
+    pub fn features(&self, w: &WeightStore, tokens: &Tensor, batch: usize) -> Result<Tensor> {
+        let x = self.forward_backbone(w, tokens, batch)?;
+        let art = self.cfg.lnf_artifact();
+        let inputs: Vec<Input> = vec![
+            Input::F32(&x),
+            Input::F32(w.expect("head.ln.g")?),
+            Input::F32(w.expect("head.ln.b")?),
+        ];
+        let mut out = self.rt.execute(&art, &inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// embed + all blocks (no head).
+    pub fn forward_backbone(&self, w: &WeightStore, tokens: &Tensor, batch: usize) -> Result<Tensor> {
+        let mut x = self.embed(w, tokens, batch)?;
+        for l in 0..self.cfg.layers {
+            x = self.block(w, l, &x, batch)?;
+        }
+        Ok(x)
+    }
+
+    /// Full forward: vit logits [B, classes].
+    pub fn forward_vit(&self, w: &WeightStore, tokens: &Tensor, batch: usize) -> Result<Tensor> {
+        let x = self.forward_backbone(w, tokens, batch)?;
+        self.head(w, &x, batch)
+    }
+
+    /// Full forward: gpt logits [B, n, vocab].
+    pub fn forward_gpt(&self, w: &WeightStore, ids: &[i32], batch: usize) -> Result<Tensor> {
+        let mut x = self.embed_gpt(w, ids, batch)?;
+        for l in 0..self.cfg.layers {
+            x = self.block(w, l, &x, batch)?;
+        }
+        self.head(w, &x, batch)
+    }
+
+    /// Full dense forward with per-layer capture.
+    pub fn forward_capture(
+        &self,
+        w: &WeightStore,
+        tokens: Option<&Tensor>,
+        ids: Option<&[i32]>,
+    ) -> Result<(Tensor, Vec<LayerCapture>)> {
+        let batch = self.cfg.eval_batch();
+        let mut x = match self.cfg.kind {
+            ModelKind::Vit => self.embed(w, tokens.context("vit capture needs tokens")?, batch)?,
+            ModelKind::Gpt => self.embed_gpt(w, ids.context("gpt capture needs ids")?, batch)?,
+        };
+        let mut caps = Vec::with_capacity(self.cfg.layers);
+        for l in 0..self.cfg.layers {
+            let (y, cap) = self.block_capture(w, l, &x)?;
+            x = y;
+            caps.push(cap);
+        }
+        let logits = self.head(w, &x, batch)?;
+        Ok((logits, caps))
+    }
+
+    /// Mean cross-entropy via the `evloss` artifact (dense shapes only —
+    /// used for GPT perplexity and ViT validation loss).
+    pub fn eval_loss(
+        &self,
+        w: &WeightStore,
+        tokens: Option<&Tensor>,
+        ids: Option<&[i32]>,
+        labels: &[i32],
+    ) -> Result<f32> {
+        let art = self.cfg.evloss_artifact();
+        let batch = self.cfg.eval_batch();
+        let mut inputs: Vec<Input> = Vec::new();
+        match self.cfg.kind {
+            ModelKind::Vit => {
+                inputs.push(Input::F32(tokens.context("vit evloss needs tokens")?));
+                inputs.push(Input::I32(labels, vec![batch]));
+            }
+            ModelKind::Gpt => {
+                inputs.push(Input::I32(ids.context("gpt evloss needs ids")?, vec![batch, self.cfg.n_ctx]));
+                inputs.push(Input::I32(labels, vec![batch, self.cfg.n_ctx]));
+            }
+        }
+        self.push_params(w, self.cfg.param_spec().into_iter().map(|(n, _)| n), &mut inputs)?;
+        let out = self.rt.execute(&art, &inputs)?;
+        Ok(out[0].data()[0])
+    }
+}

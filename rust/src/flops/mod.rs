@@ -1,0 +1,114 @@
+//! Analytic parameter and FLOPs accounting (the Params / FLOPs / ↓ columns
+//! of Tables 2, 5, 7, 10).
+//!
+//! FLOPs count multiply–adds as 2 ops, per forward pass of one example, for
+//! the exact pruned shapes the runtime executes.
+
+use crate::model::{ModelConfig, ModelKind, Sparsity};
+
+/// Total parameter count at a sparsity setting.
+pub fn params(cfg: &ModelConfig, sp: Sparsity) -> usize {
+    let (dqk, o) = cfg.pruned_dims(sp);
+    let embed: usize =
+        cfg.embed_param_spec().iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    let per_block: usize =
+        cfg.block_param_spec(dqk, o).iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    let head: usize =
+        cfg.head_param_spec().iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    embed + per_block * cfg.layers + head
+}
+
+/// Forward FLOPs for one example at a sparsity setting.
+pub fn flops(cfg: &ModelConfig, sp: Sparsity) -> usize {
+    let (dqk, o) = cfg.pruned_dims(sp);
+    let n = cfg.n_ctx;
+    let d = cfg.d;
+    let h = cfg.heads;
+    let dh = cfg.dh();
+    let mut f = 0usize;
+
+    // Embedding.
+    f += match cfg.kind {
+        ModelKind::Vit => 2 * cfg.patches * cfg.patch_dim * d,
+        // one-hot matmul is a gather in practice; count the gather-free cost
+        // of the d-dim add + pos add only.
+        ModelKind::Gpt => 2 * n * d,
+    };
+
+    // Per block.
+    let mut blk = 0usize;
+    blk += 2 * n * d * (h * dqk) * 2; // Q, K projections
+    blk += 2 * n * d * (h * dh); // V projection
+    blk += 2 * n * n * (h * dqk); // QKᵀ logits
+    blk += 2 * n * n * (h * dh); // PV
+    blk += 2 * n * (h * dh) * d; // output projection
+    blk += 2 * n * d * o * 2; // MLP in + out
+    blk += 8 * n * d + 5 * n * o; // layernorms + GELU (approximate elementwise)
+    f += blk * cfg.layers;
+
+    // Head.
+    f += match cfg.kind {
+        ModelKind::Vit => 2 * d * cfg.classes,
+        ModelKind::Gpt => 2 * n * d * cfg.vocab,
+    };
+    f
+}
+
+/// Percentage reduction of `pruned` relative to `dense`.
+pub fn reduction_pct(dense: usize, pruned: usize) -> f64 {
+    if dense == 0 {
+        return 0.0;
+    }
+    100.0 * (1.0 - pruned as f64 / dense as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Scope};
+
+    #[test]
+    fn params_match_weight_store() {
+        for name in ["vit_t", "vit_b", "gpt_s"] {
+            let cfg = ModelConfig::by_name(name).unwrap();
+            let w = crate::model::WeightStore::init(cfg, 1);
+            assert_eq!(w.param_count(), params(cfg, Sparsity::dense()), "{name}");
+        }
+    }
+
+    #[test]
+    fn pruning_reduces_counts_monotonically() {
+        let cfg = ModelConfig::by_name("vit_h").unwrap();
+        let mut prev_p = usize::MAX;
+        let mut prev_f = usize::MAX;
+        for s in 0..=7u8 {
+            let sp = Sparsity::of(Scope::Both, s);
+            let p = params(cfg, sp);
+            let f = flops(cfg, sp);
+            assert!(p <= prev_p && f <= prev_f, "s={s}");
+            prev_p = p;
+            prev_f = f;
+        }
+    }
+
+    #[test]
+    fn mlp_dominates_flops_reduction() {
+        // Paper: MLP ≈ 30% of FLOPs, attention QK-dim pruning ≈ 12% — at 50%
+        // sparsity the MLP scope must cut more FLOPs than the attn scope.
+        let cfg = ModelConfig::by_name("vit_b").unwrap();
+        let dense = flops(cfg, Sparsity::dense());
+        let mlp50 = flops(cfg, Sparsity::of(Scope::Mlp, 5));
+        let attn50 = flops(cfg, Sparsity::of(Scope::Attn, 5));
+        let rd_mlp = reduction_pct(dense, mlp50);
+        let rd_attn = reduction_pct(dense, attn50);
+        assert!(rd_mlp > rd_attn, "mlp {rd_mlp:.1}% vs attn {rd_attn:.1}%");
+        assert!(rd_mlp > 15.0 && rd_mlp < 45.0, "{rd_mlp}");
+        assert!(rd_attn > 3.0 && rd_attn < 25.0, "{rd_attn}");
+    }
+
+    #[test]
+    fn reduction_pct_basic() {
+        assert_eq!(reduction_pct(100, 50), 50.0);
+        assert_eq!(reduction_pct(0, 0), 0.0);
+    }
+}

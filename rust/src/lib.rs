@@ -1,0 +1,33 @@
+//! CORP: Closed-form One-shot Representation-Preserving Structured Pruning.
+//!
+//! Three-layer reproduction of the CORP paper (Zhang & Yang, 2026):
+//!
+//! * **Layer 1** (build time): Pallas kernels for attention / MLP / layernorm /
+//!   Gram accumulation, lowered inside the Layer-2 JAX graphs.
+//! * **Layer 2** (build time): JAX transformer blocks, AOT-lowered to HLO text
+//!   artifacts (`make artifacts`).
+//! * **Layer 3** (this crate): the Rust coordinator — it owns the weights, the
+//!   calibration pipeline, ranking, the closed-form ridge compensation solvers,
+//!   weight folding, the batched inference engine and the evaluation harness.
+//!   Python never runs on the request path.
+
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod stats;
+pub mod model;
+pub mod runtime;
+pub mod exec;
+pub mod data;
+pub mod train;
+pub mod rank;
+pub mod compensate;
+pub mod prune;
+pub mod eval;
+pub mod serve;
+pub mod coordinator;
+pub mod flops;
+pub mod bench_tables;
+
+pub mod cli_main;
+pub use cli_main::run_cli;

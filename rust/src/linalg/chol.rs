@@ -1,0 +1,182 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! All ridge systems in CORP are symmetric positive definite once λI is
+//! added, so Cholesky is the workhorse solver for both the MLP compensator
+//! `B (Σ_SS + λI) = Σ_PS` and the Kronecker system `(G + λI) vec(M) = h`.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor L with A = L Lᵀ.
+pub struct Cholesky {
+    n: usize,
+    l: Vec<f64>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("matrix is not positive definite (pivot {pivot} at index {index})")]
+pub struct NotSpd {
+    pub index: usize,
+    pub pivot: f64,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix.
+    pub fn new(a: &Mat) -> Result<Self, NotSpd> {
+        assert_eq!(a.r, a.c);
+        let n = a.r;
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a.at(i, j);
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return Err(NotSpd { index: i, pivot: s });
+                    }
+                    l[i * n + i] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Ok(Self { n, l })
+    }
+
+    /// Factor with escalating diagonal jitter if the matrix is numerically
+    /// semi-definite (rank-deficient calibration covariances at high keep
+    /// ratios). Returns the factor and the jitter that was applied.
+    pub fn new_with_jitter(a: &Mat) -> (Self, f64) {
+        let scale = a.trace().abs().max(1e-30) / a.r as f64;
+        let mut jitter = 0.0f64;
+        loop {
+            let candidate = if jitter == 0.0 { a.clone() } else { a.add_diag(jitter * scale) };
+            match Self::new(&candidate) {
+                Ok(f) => return (f, jitter * scale),
+                Err(_) => {
+                    jitter = if jitter == 0.0 { 1e-10 } else { jitter * 10.0 };
+                    assert!(jitter < 1.0, "cholesky jitter escalation failed");
+                }
+            }
+        }
+    }
+
+    /// Solve A x = b for a single right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        let l = &self.l;
+        // forward: L y = b
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let mut s = y[i];
+            for k in 0..i {
+                s -= l[i * n + k] * y[k];
+            }
+            y[i] = s / l[i * n + i];
+        }
+        // backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= l[k * n + i] * y[k];
+            }
+            y[i] = s / l[i * n + i];
+        }
+        y
+    }
+
+    /// Solve A X = B (column-block solve).
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.r, self.n);
+        let mut out = Mat::zeros(b.r, b.c);
+        // Solve per column to keep the memory profile flat.
+        let mut col = vec![0.0f64; self.n];
+        for j in 0..b.c {
+            for i in 0..self.n {
+                col[i] = b.at(i, j);
+            }
+            let x = self.solve_vec(&col);
+            for i in 0..self.n {
+                out.set(i, j, x[i]);
+            }
+        }
+        out
+    }
+
+    /// Solve X A = B, i.e. X = B A⁻¹ (the orientation of the MLP ridge
+    /// normal equations, Eq. (24): B (Σ_SS + λI) = Σ_PS).
+    pub fn solve_right(&self, b: &Mat) -> Mat {
+        assert_eq!(b.c, self.n);
+        // (X A)ᵀ = Aᵀ Xᵀ = A Xᵀ (A symmetric) → solve A Xᵀ = Bᵀ.
+        self.solve_mat(&b.t()).t()
+    }
+
+    pub fn log_det(&self) -> f64 {
+        (0..self.n).map(|i| self.l[i * self.n + i].ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// Convenience: solve (A) x = b for SPD A.
+pub fn cholesky_solve(a: &Mat, b: &Mat) -> Mat {
+    let (f, _) = Cholesky::new_with_jitter(a);
+    f.solve_mat(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, run_prop};
+
+    #[test]
+    fn solve_recovers_known_solution() {
+        run_prop("chol.solve recovers x", 20, |rng| {
+            let n = gen::dim(rng, 1, 12);
+            let a = Mat::from_f32(n, n, &gen::spd(rng, n, 0.5));
+            let x_true = Mat::from_f32(n, 3, &gen::matrix(rng, n, 3, 1.0));
+            let b = a.mul(&x_true);
+            let f = Cholesky::new(&a).unwrap();
+            let x = f.solve_mat(&b);
+            assert!(x.max_abs_diff(&x_true) < 1e-5, "n={n}");
+        });
+    }
+
+    #[test]
+    fn solve_right_orientation() {
+        run_prop("chol.solve_right = B A^-1", 15, |rng| {
+            let n = gen::dim(rng, 1, 10);
+            let a = Mat::from_f32(n, n, &gen::spd(rng, n, 0.5));
+            let x_true = Mat::from_f32(4, n, &gen::matrix(rng, 4, n, 1.0));
+            let b = x_true.mul(&a);
+            let f = Cholesky::new(&a).unwrap();
+            let x = f.solve_right(&b);
+            assert!(x.max_abs_diff(&x_true) < 1e-5);
+        });
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(2, 2, vec![1., 2., 2., 1.]); // eigenvalues 3, -1
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_handles_semidefinite() {
+        // Rank-1 PSD matrix.
+        let a = Mat::from_rows(2, 2, vec![1., 1., 1., 1.]);
+        let (f, jitter) = Cholesky::new_with_jitter(&a);
+        assert!(jitter > 0.0);
+        // Solution should satisfy (A + jI) x = b approximately.
+        let b = vec![2.0, 2.0];
+        let x = f.solve_vec(&b);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn log_det_of_diagonal() {
+        let a = Mat::from_rows(2, 2, vec![4., 0., 0., 9.]);
+        let f = Cholesky::new(&a).unwrap();
+        assert!((f.log_det() - (36.0f64).ln()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Used for: pseudo-inverses of possibly-singular covariance blocks
+//! (distortion diagnostics), effective-rank / k95 statistics (Table 9), and
+//! as the backend of the small SVDs that fold `I + M` into the Q/K
+//! projections (Alg. 5).
+
+use super::Mat;
+
+/// Eigendecomposition of a symmetric matrix: returns (eigenvalues, V) with
+/// A = V diag(vals) Vᵀ. Eigenvalues are sorted descending; V's columns are
+/// the corresponding orthonormal eigenvectors.
+pub fn sym_eig(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.r, a.c);
+    let n = a.r;
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.at(i, j) * m.at(i, j);
+            }
+        }
+        let scale = m.frob().max(1e-300);
+        if off.sqrt() <= 1e-14 * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation J(p,q,θ) on both sides of m and on v.
+                for k in 0..n {
+                    let mkp = m.at(k, p);
+                    let mkq = m.at(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.at(p, k);
+                    let mqk = m.at(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let mut vals: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
+    // Sort descending, permuting V's columns accordingly.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
+    let sorted_vals: Vec<f64> = order.iter().map(|&i| vals[i]).collect();
+    let mut sorted_v = Mat::zeros(n, n);
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for r in 0..n {
+            sorted_v.set(r, new_c, v.at(r, old_c));
+        }
+    }
+    vals = sorted_vals;
+    (vals, sorted_v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, run_prop};
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_rows(3, 3, vec![3., 0., 0., 0., 1., 0., 0., 0., 2.]);
+        let (vals, _) = sym_eig(&a);
+        assert!((vals[0] - 3.0).abs() < 1e-12);
+        assert!((vals[1] - 2.0).abs() < 1e-12);
+        assert!((vals[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_prop() {
+        run_prop("eig.A = V D V^T", 15, |rng| {
+            let n = gen::dim(rng, 1, 12);
+            let mut a = Mat::from_f32(n, n, &gen::matrix(rng, n, n, 1.0));
+            a.symmetrize();
+            let (vals, v) = sym_eig(&a);
+            // rebuild
+            let mut d = Mat::zeros(n, n);
+            for i in 0..n {
+                d.set(i, i, vals[i]);
+            }
+            let rebuilt = v.mul(&d).mul(&v.t());
+            assert!(rebuilt.max_abs_diff(&a) < 1e-8 * (1.0 + a.max_abs()), "n={n}");
+        });
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal_prop() {
+        run_prop("eig.V^T V = I", 15, |rng| {
+            let n = gen::dim(rng, 1, 12);
+            let mut a = Mat::from_f32(n, n, &gen::matrix(rng, n, n, 1.0));
+            a.symmetrize();
+            let (_, v) = sym_eig(&a);
+            assert!(v.t().mul(&v).max_abs_diff(&Mat::eye(n)) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn psd_eigenvalues_nonnegative() {
+        run_prop("eig.PSD => vals >= 0", 10, |rng| {
+            let n = gen::dim(rng, 2, 10);
+            let a = Mat::from_f32(n, n, &gen::spd(rng, n, 0.0));
+            let (vals, _) = sym_eig(&a);
+            for v in vals {
+                assert!(v > -1e-8, "negative eigenvalue {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 3 and 1.
+        let a = Mat::from_rows(2, 2, vec![2., 1., 1., 2.]);
+        let (vals, v) = sym_eig(&a);
+        assert!((vals[0] - 3.0).abs() < 1e-12);
+        assert!((vals[1] - 1.0).abs() < 1e-12);
+        // eigenvector for 3 is [1,1]/sqrt2 up to sign
+        let e = (v.at(0, 0) * v.at(1, 0)).signum();
+        assert!(e > 0.0);
+    }
+}

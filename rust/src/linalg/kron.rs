@@ -1,0 +1,274 @@
+//! Kronecker-structured ridge system for the attention logit compensator
+//! (App. B.2).
+//!
+//! Per layer and head, CORP accumulates over calibration samples b:
+//!
+//!   G += (K_S,bᵀ K_S,b) ⊗ (Q_S,bᵀ Q_S,b)            ∈ R^{d'² × d'²}
+//!   h += vec( (Q_S,bᵀ Q_P,b)(K_P,bᵀ K_S,b) )        ∈ R^{d'²}
+//!
+//! then solves (G + λI) vec(M) = h. vec(·) is **column-major** (the
+//! convention under which vec(AMBᵀ) = (B ⊗ A) vec(M) holds).
+
+use super::chol::Cholesky;
+use super::Mat;
+
+/// Accumulator for the per-head Kronecker ridge system.
+pub struct KronRidge {
+    /// Kept dimension d'_h.
+    pub d: usize,
+    /// Gram tensor G, [d'², d'²].
+    pub g: Mat,
+    /// Right-hand side h, length d'².
+    pub h: Vec<f64>,
+    /// Running uncompensated energy Σ_b ‖T_b‖²_F (for the exact distortion
+    /// identity of Prop. C.2.1 — available "at no additional cost").
+    pub t_energy: f64,
+    /// Number of accumulated samples.
+    pub count: usize,
+}
+
+impl KronRidge {
+    pub fn new(d: usize) -> Self {
+        Self { d, g: Mat::zeros(d * d, d * d), h: vec![0.0; d * d], t_energy: 0.0, count: 0 }
+    }
+
+    /// Accumulate one calibration sample's contribution.
+    ///
+    /// `kk` = K_Sᵀ K_S [d,d], `qq` = Q_Sᵀ Q_S [d,d],
+    /// `r`  = (Q_Sᵀ Q_P)(K_Pᵀ K_S) [d,d],
+    /// `t_sq` = ‖Q_P K_Pᵀ‖²_F for this sample.
+    pub fn accumulate(&mut self, kk: &Mat, qq: &Mat, r: &Mat, t_sq: f64) {
+        let d = self.d;
+        assert_eq!((kk.r, kk.c, qq.r, qq.c, r.r, r.c), (d, d, d, d, d, d));
+        let n = d * d;
+        // G[(j*d + i), (l*d + k)] += KK[j,l] * QQ[i,k]   (column-major vec)
+        for j in 0..d {
+            for l in 0..d {
+                let s = kk.at(j, l);
+                if s == 0.0 {
+                    continue;
+                }
+                // dense block add: rows j*d..j*d+d, cols l*d..l*d+d
+                for i in 0..d {
+                    let grow = &mut self.g.a[(j * d + i) * n + l * d..(j * d + i) * n + l * d + d];
+                    let qrow = &qq.a[i * d..(i + 1) * d];
+                    for k in 0..d {
+                        grow[k] += s * qrow[k];
+                    }
+                }
+            }
+        }
+        // h[j*d + i] += R[i, j]
+        for j in 0..d {
+            for i in 0..d {
+                self.h[j * d + i] += r.at(i, j);
+            }
+        }
+        self.t_energy += t_sq;
+        self.count += 1;
+    }
+
+    /// Solve (G + λ·scale·I) vec(M) = h and return M [d, d].
+    /// λ is normalized by the mean diagonal of G, as in `ridge_right`.
+    pub fn solve(&self, lambda: f64) -> Mat {
+        let d = self.d;
+        let n = d * d;
+        let scale = (self.g.trace() / n as f64).max(1e-12);
+        let reg = self.g.add_diag(lambda * scale);
+        let (f, _) = Cholesky::new_with_jitter(&reg);
+        let m_vec = f.solve_vec(&self.h);
+        let mut m = Mat::zeros(d, d);
+        for j in 0..d {
+            for i in 0..d {
+                m.set(i, j, m_vec[j * d + i]);
+            }
+        }
+        m
+    }
+
+    /// Exact compensated distortion J_D(M) = Σ‖T_b‖² − 2 hᵀm + mᵀG m
+    /// (Prop. C.2.1 Eq. 81 without the regularizer term).
+    pub fn distortion(&self, m: &Mat) -> f64 {
+        let d = self.d;
+        let n = d * d;
+        let mut mv = vec![0.0; n];
+        for j in 0..d {
+            for i in 0..d {
+                mv[j * d + i] = m.at(i, j);
+            }
+        }
+        let mut gm = vec![0.0; n];
+        for i in 0..n {
+            let row = &self.g.a[i * n..(i + 1) * n];
+            gm[i] = row.iter().zip(&mv).map(|(a, b)| a * b).sum();
+        }
+        let h_m: f64 = self.h.iter().zip(&mv).map(|(a, b)| a * b).sum();
+        let m_gm: f64 = mv.iter().zip(&gm).map(|(a, b)| a * b).sum();
+        self.t_energy - 2.0 * h_m + m_gm
+    }
+
+    /// Compensation gain hᵀ (G+λI)⁻¹ h ≥ 0 (Prop. C.2.2 with ridge), and the
+    /// bilinear coefficient of determination ρ²_attn = gain / Σ‖T_b‖².
+    pub fn gain_and_rho2(&self, lambda: f64) -> (f64, f64) {
+        let m = self.solve(lambda);
+        let j_comp = self.distortion(&m);
+        let gain = (self.t_energy - j_comp).max(0.0);
+        let rho2 = if self.t_energy > 0.0 { (gain / self.t_energy).clamp(0.0, 1.0) } else { 0.0 };
+        (gain, rho2)
+    }
+}
+
+/// Dense Kronecker product B ⊗ A (test/diagnostic helper; the accumulator
+/// above never materializes per-sample Kroneckers separately).
+pub fn kron(b: &Mat, a: &Mat) -> Mat {
+    let mut out = Mat::zeros(b.r * a.r, b.c * a.c);
+    for i in 0..b.r {
+        for j in 0..b.c {
+            let s = b.at(i, j);
+            for p in 0..a.r {
+                for q in 0..a.c {
+                    out.set(i * a.r + p, j * a.c + q, s * a.at(p, q));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, run_prop};
+
+    /// Reference: build T = Q_P K_Pᵀ approximation objective directly and
+    /// verify the normal-equation solution matches a brute-force vec solve.
+    #[test]
+    fn kron_identity_vec_amb() {
+        run_prop("kron.vec(AMB^T)=(B⊗A)vec(M)", 15, |rng| {
+            let d = gen::dim(rng, 1, 4);
+            let n_tok = gen::dim(rng, 2, 6);
+            let a = Mat::from_f32(n_tok, d, &gen::matrix(rng, n_tok, d, 1.0));
+            let b = Mat::from_f32(n_tok, d, &gen::matrix(rng, n_tok, d, 1.0));
+            let m = Mat::from_f32(d, d, &gen::matrix(rng, d, d, 1.0));
+            let lhs = a.mul(&m).mul(&b.t()); // [n_tok, n_tok]
+            // rhs: (B ⊗ A) vec(M), column-major vecs
+            let kab = kron(&b, &a);
+            let mut mv = vec![0.0; d * d];
+            for j in 0..d {
+                for i in 0..d {
+                    mv[j * d + i] = m.at(i, j);
+                }
+            }
+            let mut out = vec![0.0; n_tok * n_tok];
+            for i in 0..n_tok * n_tok {
+                out[i] = kab.row(i).iter().zip(&mv).map(|(x, y)| x * y).sum();
+            }
+            // compare: vec_cm(lhs)[j*n + i] = lhs[i, j]
+            for j in 0..n_tok {
+                for i in 0..n_tok {
+                    assert!((out[j * n_tok + i] - lhs.at(i, j)).abs() < 1e-8);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn solve_recovers_planted_m() {
+        // If T_b = Q_S M* K_Sᵀ exactly, the solver must recover M* (λ→0).
+        run_prop("kron.recovers planted M", 10, |rng| {
+            let d = gen::dim(rng, 1, 4);
+            let m_true = Mat::from_f32(d, d, &gen::matrix(rng, d, d, 1.0));
+            let mut acc = KronRidge::new(d);
+            for _ in 0..6 {
+                let n_tok = 8;
+                let qs = Mat::from_f32(n_tok, d, &gen::matrix(rng, n_tok, d, 1.0));
+                let ks = Mat::from_f32(n_tok, d, &gen::matrix(rng, n_tok, d, 1.0));
+                let t = qs.mul(&m_true).mul(&ks.t());
+                let kk = ks.t().mul(&ks);
+                let qq = qs.t().mul(&qs);
+                // r = Q_Sᵀ T K_S
+                let r = qs.t().mul(&t).mul(&ks);
+                acc.accumulate(&kk, &qq, &r, t.frob().powi(2));
+            }
+            let m = acc.solve(1e-9);
+            assert!(m.max_abs_diff(&m_true) < 1e-4, "d={d}");
+        });
+    }
+
+    #[test]
+    fn distortion_matches_direct_objective() {
+        run_prop("kron.distortion identity", 10, |rng| {
+            let d = gen::dim(rng, 1, 3);
+            let dp = gen::dim(rng, 1, 3); // pruned dim
+            let mut acc = KronRidge::new(d);
+            let mut samples = Vec::new();
+            for _ in 0..4 {
+                let n_tok = 6;
+                let qs = Mat::from_f32(n_tok, d, &gen::matrix(rng, n_tok, d, 1.0));
+                let ks = Mat::from_f32(n_tok, d, &gen::matrix(rng, n_tok, d, 1.0));
+                let qp = Mat::from_f32(n_tok, dp, &gen::matrix(rng, n_tok, dp, 1.0));
+                let kp = Mat::from_f32(n_tok, dp, &gen::matrix(rng, n_tok, dp, 1.0));
+                let t = qp.mul(&kp.t());
+                let kk = ks.t().mul(&ks);
+                let qq = qs.t().mul(&qs);
+                let r = qs.t().mul(&qp).mul(&kp.t().mul(&ks));
+                acc.accumulate(&kk, &qq, &r, t.frob().powi(2));
+                samples.push((qs, ks, t));
+            }
+            let m = acc.solve(1e-3);
+            // direct objective
+            let direct: f64 = samples
+                .iter()
+                .map(|(qs, ks, t)| {
+                    let approx = qs.mul(&m).mul(&ks.t());
+                    t.sub(&approx).frob().powi(2)
+                })
+                .sum();
+            let viaformula = acc.distortion(&m);
+            assert!((direct - viaformula).abs() < 1e-6 * (1.0 + direct), "{direct} vs {viaformula}");
+        });
+    }
+
+    #[test]
+    fn gain_nonnegative_and_rho_bounded() {
+        run_prop("kron.gain >= 0, rho2 in [0,1]", 10, |rng| {
+            let d = gen::dim(rng, 1, 3);
+            let mut acc = KronRidge::new(d);
+            for _ in 0..3 {
+                let n_tok = 5;
+                let qs = Mat::from_f32(n_tok, d, &gen::matrix(rng, n_tok, d, 1.0));
+                let ks = Mat::from_f32(n_tok, d, &gen::matrix(rng, n_tok, d, 1.0));
+                let qp = Mat::from_f32(n_tok, 2, &gen::matrix(rng, n_tok, 2, 1.0));
+                let kp = Mat::from_f32(n_tok, 2, &gen::matrix(rng, n_tok, 2, 1.0));
+                let t = qp.mul(&kp.t());
+                acc.accumulate(
+                    &ks.t().mul(&ks),
+                    &qs.t().mul(&qs),
+                    &qs.t().mul(&qp).mul(&kp.t().mul(&ks)),
+                    t.frob().powi(2),
+                );
+            }
+            let (gain, rho2) = acc.gain_and_rho2(1e-6);
+            assert!(gain >= 0.0);
+            assert!((0.0..=1.0).contains(&rho2));
+        });
+    }
+
+    #[test]
+    fn g_matches_dense_kron_sum() {
+        let mut rng = crate::util::Pcg64::new(77);
+        let d = 3;
+        let mut acc = KronRidge::new(d);
+        let mut dense = Mat::zeros(d * d, d * d);
+        for _ in 0..3 {
+            let n_tok = 5;
+            let qs = Mat::from_f32(n_tok, d, &gen::matrix(&mut rng, n_tok, d, 1.0));
+            let ks = Mat::from_f32(n_tok, d, &gen::matrix(&mut rng, n_tok, d, 1.0));
+            let kk = ks.t().mul(&ks);
+            let qq = qs.t().mul(&qs);
+            dense = dense.add(&kron(&kk, &qq));
+            acc.accumulate(&kk, &qq, &Mat::zeros(d, d), 0.0);
+        }
+        assert!(acc.g.max_abs_diff(&dense) < 1e-9);
+    }
+}

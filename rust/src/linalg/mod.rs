@@ -1,0 +1,269 @@
+//! Dense linear algebra built from scratch (no BLAS/LAPACK available).
+//!
+//! Solvers run in f64 for numerical robustness (the paper computes
+//! compensation in float32; we accumulate and solve in f64 and cast back,
+//! which only tightens the closed-form identities the tests check). The
+//! f32 GEMM in [`gemm`] is the calibration-statistics hot path and is the
+//! Layer-3 target of the §Perf pass.
+
+pub mod gemm;
+pub mod chol;
+pub mod eig;
+pub mod svd;
+pub mod ridge;
+pub mod kron;
+
+pub use chol::{cholesky_solve, Cholesky};
+pub use eig::sym_eig;
+pub use gemm::{matmul_f32, matmul_tn_f32, syrk_upper_f32};
+pub use svd::svd;
+
+use std::fmt;
+
+/// Dense row-major f64 matrix used by the solvers.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub r: usize,
+    pub c: usize,
+    pub a: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat[{}x{}]", self.r, self.c)
+    }
+}
+
+impl Mat {
+    pub fn zeros(r: usize, c: usize) -> Self {
+        Self { r, c, a: vec![0.0; r * c] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.a[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(r: usize, c: usize, a: Vec<f64>) -> Self {
+        assert_eq!(a.len(), r * c);
+        Self { r, c, a }
+    }
+
+    pub fn from_f32(r: usize, c: usize, a: &[f32]) -> Self {
+        assert_eq!(a.len(), r * c);
+        Self { r, c, a: a.iter().map(|&v| v as f64).collect() }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.a.iter().map(|&v| v as f32).collect()
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.c + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.c + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.a[i * self.c..(i + 1) * self.c]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.c, self.r);
+        for i in 0..self.r {
+            for j in 0..self.c {
+                out.a[j * self.r + i] = self.a[i * self.c + j];
+            }
+        }
+        out
+    }
+
+    /// self * other.
+    pub fn mul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.c, other.r, "mul dims {}x{} * {}x{}", self.r, self.c, other.r, other.c);
+        let mut out = Mat::zeros(self.r, other.c);
+        // ikj loop order: streams rows of `other`, decent cache behaviour.
+        for i in 0..self.r {
+            for k in 0..self.c {
+                let aik = self.a[i * self.c + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let orow = &other.a[k * other.c..(k + 1) * other.c];
+                let dst = &mut out.a[i * other.c..(i + 1) * other.c];
+                for j in 0..other.c {
+                    dst[j] += aik * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.r, self.c), (other.r, other.c));
+        let a = self.a.iter().zip(&other.a).map(|(x, y)| x + y).collect();
+        Mat { r: self.r, c: self.c, a }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.r, self.c), (other.r, other.c));
+        let a = self.a.iter().zip(&other.a).map(|(x, y)| x - y).collect();
+        Mat { r: self.r, c: self.c, a }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat { r: self.r, c: self.c, a: self.a.iter().map(|x| x * s).collect() }
+    }
+
+    /// Add s to the diagonal (ridge).
+    pub fn add_diag(&self, s: f64) -> Mat {
+        assert_eq!(self.r, self.c);
+        let mut out = self.clone();
+        for i in 0..self.r {
+            out.a[i * self.c + i] += s;
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.r, self.c);
+        (0..self.r).map(|i| self.a[i * self.c + i]).sum()
+    }
+
+    pub fn frob(&self) -> f64 {
+        self.a.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.a.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    /// Max |self - other|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.r, self.c), (other.r, other.c));
+        self.a.iter().zip(&other.a).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    /// Symmetrize in place: (A + Aᵀ)/2 — drifts from accumulation order are
+    /// removed before Cholesky/eigen decompositions.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.r, self.c);
+        for i in 0..self.r {
+            for j in (i + 1)..self.c {
+                let m = 0.5 * (self.a[i * self.c + j] + self.a[j * self.c + i]);
+                self.a[i * self.c + j] = m;
+                self.a[j * self.c + i] = m;
+            }
+        }
+    }
+
+    /// Extract submatrix rows×cols by index lists.
+    pub fn submatrix(&self, rows: &[usize], cols: &[usize]) -> Mat {
+        let mut out = Mat::zeros(rows.len(), cols.len());
+        for (oi, &i) in rows.iter().enumerate() {
+            for (oj, &j) in cols.iter().enumerate() {
+                out.a[oi * cols.len() + oj] = self.at(i, j);
+            }
+        }
+        out
+    }
+}
+
+/// Moore–Penrose pseudo-inverse of a symmetric PSD matrix via eigen
+/// decomposition, used by the distortion diagnostics (Σ_SS† in Prop. C.1.1).
+pub fn sym_pinv(a: &Mat, rcond: f64) -> Mat {
+    let (vals, vecs) = sym_eig(a);
+    let vmax = vals.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    let tol = vmax * rcond;
+    let n = a.r;
+    let mut out = Mat::zeros(n, n);
+    for k in 0..n {
+        if vals[k].abs() <= tol {
+            continue;
+        }
+        let inv = 1.0 / vals[k];
+        for i in 0..n {
+            let vik = vecs.at(i, k);
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out.a[i * n + j] += inv * vik * vecs.at(j, k);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, run_prop};
+
+    #[test]
+    fn mul_identity() {
+        let a = Mat::from_rows(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let i3 = Mat::eye(3);
+        assert!(a.mul(&i3).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn mul_known() {
+        let a = Mat::from_rows(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_rows(2, 2, vec![5., 6., 7., 8.]);
+        let c = a.mul(&b);
+        assert_eq!(c.a, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose_mul_assoc_prop() {
+        run_prop("linalg.(AB)^T=B^T A^T", 20, |rng| {
+            let (m, k, n) = (gen::dim(rng, 1, 8), gen::dim(rng, 1, 8), gen::dim(rng, 1, 8));
+            let a = Mat::from_f32(m, k, &gen::matrix(rng, m, k, 1.0));
+            let b = Mat::from_f32(k, n, &gen::matrix(rng, k, n, 1.0));
+            let lhs = a.mul(&b).t();
+            let rhs = b.t().mul(&a.t());
+            assert!(lhs.max_abs_diff(&rhs) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn sym_pinv_recovers_inverse_on_spd() {
+        run_prop("linalg.pinv=inv on SPD", 10, |rng| {
+            let n = gen::dim(rng, 2, 10);
+            let a = Mat::from_f32(n, n, &gen::spd(rng, n, 0.5));
+            let p = sym_pinv(&a, 1e-12);
+            let should_be_eye = a.mul(&p);
+            assert!(should_be_eye.max_abs_diff(&Mat::eye(n)) < 1e-6, "n={n}");
+        });
+    }
+
+    #[test]
+    fn sym_pinv_projects_on_singular() {
+        // A = diag(2, 0): pinv = diag(0.5, 0); A·A⁺·A = A.
+        let a = Mat::from_rows(2, 2, vec![2., 0., 0., 0.]);
+        let p = sym_pinv(&a, 1e-12);
+        let apa = a.mul(&p).mul(&a);
+        assert!(apa.max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn add_diag_and_trace() {
+        let a = Mat::eye(3).scale(2.0).add_diag(0.5);
+        assert!((a.trace() - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn submatrix_picks() {
+        let a = Mat::from_rows(3, 3, (0..9).map(|v| v as f64).collect());
+        let s = a.submatrix(&[0, 2], &[1]);
+        assert_eq!(s.a, vec![1., 7.]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Ridge regression in the exact form CORP uses.
+//!
+//! MLP compensation (App. B.1):  min_B ‖X̄_P − B X̄_S‖²_F + λ‖B‖²_F with the
+//! closed form B = Σ_PS (Σ_SS + λI)⁻¹, solved here from the (already
+//! accumulated) covariance blocks via Cholesky.
+
+use super::chol::Cholesky;
+use super::Mat;
+
+/// Solve B = C_ps (C_ss + λ·scale·I)⁻¹ where `scale` normalizes λ by the mean
+/// diagonal of C_ss so a single λ works across layers of different magnitude
+/// (the practical convention; λ is still reported in absolute terms in
+/// diagnostics).
+pub fn ridge_right(c_ps: &Mat, c_ss: &Mat, lambda: f64) -> Mat {
+    assert_eq!(c_ss.r, c_ss.c);
+    assert_eq!(c_ps.c, c_ss.r);
+    let scale = (c_ss.trace() / c_ss.r.max(1) as f64).max(1e-12);
+    let reg = c_ss.add_diag(lambda * scale);
+    let (f, _jitter) = Cholesky::new_with_jitter(&reg);
+    f.solve_right(c_ps)
+}
+
+/// Standard ridge for design-matrix inputs: min_w ‖y − Xw‖² + λ‖w‖², used by
+/// baselines (GRAIL-like output reconstruction, SNOWS-like row recovery) and
+/// by the dense-task heads. X is [n, d], Y is [n, k]; returns W [d, k].
+pub fn ridge_fit(x: &Mat, y: &Mat, lambda: f64) -> Mat {
+    assert_eq!(x.r, y.r);
+    let xtx = x.t().mul(x);
+    let xty = x.t().mul(y);
+    let scale = (xtx.trace() / xtx.r.max(1) as f64).max(1e-12);
+    let reg = xtx.add_diag(lambda * scale);
+    let (f, _) = Cholesky::new_with_jitter(&reg);
+    f.solve_mat(&xty)
+}
+
+/// Affine ridge fit with intercept: returns (W, b) minimizing
+/// ‖Y − XW − 1bᵀ‖² + λ‖W‖², via centering (App. B.1 Eq. 22).
+pub fn ridge_fit_affine(x: &Mat, y: &Mat, lambda: f64) -> (Mat, Vec<f64>) {
+    let n = x.r as f64;
+    let mu_x: Vec<f64> = (0..x.c).map(|j| (0..x.r).map(|i| x.at(i, j)).sum::<f64>() / n).collect();
+    let mu_y: Vec<f64> = (0..y.c).map(|j| (0..y.r).map(|i| y.at(i, j)).sum::<f64>() / n).collect();
+    let mut xc = x.clone();
+    for i in 0..x.r {
+        for j in 0..x.c {
+            xc.a[i * x.c + j] -= mu_x[j];
+        }
+    }
+    let mut yc = y.clone();
+    for i in 0..y.r {
+        for j in 0..y.c {
+            yc.a[i * y.c + j] -= mu_y[j];
+        }
+    }
+    let w = ridge_fit(&xc, &yc, lambda);
+    // b = mu_y - Wᵀ mu_x
+    let b: Vec<f64> = (0..y.c)
+        .map(|j| mu_y[j] - (0..x.c).map(|i| w.at(i, j) * mu_x[i]).sum::<f64>())
+        .collect();
+    (w, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, run_prop};
+
+    #[test]
+    fn ridge_right_matches_normal_equations() {
+        run_prop("ridge.right normal eq", 15, |rng| {
+            let (p, s) = (gen::dim(rng, 1, 6), gen::dim(rng, 1, 8));
+            let c_ss = Mat::from_f32(s, s, &gen::spd(rng, s, 0.3));
+            let c_ps = Mat::from_f32(p, s, &gen::matrix(rng, p, s, 1.0));
+            let lambda = 0.01;
+            let b = ridge_right(&c_ps, &c_ss, lambda);
+            // Check B (C_ss + λ scale I) = C_ps.
+            let scale = c_ss.trace() / s as f64;
+            let lhs = b.mul(&c_ss.add_diag(lambda * scale));
+            assert!(lhs.max_abs_diff(&c_ps) < 1e-7);
+        });
+    }
+
+    #[test]
+    fn ridge_fit_zero_lambda_interpolates() {
+        run_prop("ridge.fit recovers W on exact data", 10, |rng| {
+            let (n, d, k) = (30, gen::dim(rng, 1, 5), gen::dim(rng, 1, 3));
+            let x = Mat::from_f32(n, d, &gen::matrix(rng, n, d, 1.0));
+            let w_true = Mat::from_f32(d, k, &gen::matrix(rng, d, k, 1.0));
+            let y = x.mul(&w_true);
+            let w = ridge_fit(&x, &y, 1e-10);
+            assert!(w.max_abs_diff(&w_true) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn ridge_shrinks_with_lambda() {
+        let mut rng = crate::util::Pcg64::new(5);
+        let x = Mat::from_f32(50, 4, &gen::matrix(&mut rng, 50, 4, 1.0));
+        let w_true = Mat::from_f32(4, 1, &gen::matrix(&mut rng, 4, 1, 1.0));
+        let y = x.mul(&w_true);
+        let w_small = ridge_fit(&x, &y, 1e-6);
+        let w_big = ridge_fit(&x, &y, 100.0);
+        assert!(w_big.frob() < w_small.frob());
+    }
+
+    #[test]
+    fn affine_fit_recovers_intercept() {
+        run_prop("ridge.affine recovers (W, b)", 10, |rng| {
+            let (n, d, k) = (40, gen::dim(rng, 1, 4), gen::dim(rng, 1, 3));
+            let x = Mat::from_f32(n, d, &gen::matrix(rng, n, d, 1.0));
+            let w_true = Mat::from_f32(d, k, &gen::matrix(rng, d, k, 1.0));
+            let b_true: Vec<f64> = (0..k).map(|i| (i as f64 + 1.0) * 0.7).collect();
+            let mut y = x.mul(&w_true);
+            for i in 0..n {
+                for j in 0..k {
+                    y.a[i * k + j] += b_true[j];
+                }
+            }
+            let (w, b) = ridge_fit_affine(&x, &y, 1e-10);
+            assert!(w.max_abs_diff(&w_true) < 1e-4);
+            for j in 0..k {
+                assert!((b[j] - b_true[j]).abs() < 1e-4);
+            }
+        });
+    }
+}

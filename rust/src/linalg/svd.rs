@@ -1,0 +1,159 @@
+//! Singular value decomposition.
+//!
+//! CORP needs the SVD of `I + M` (a small d'_h × d'_h matrix, Alg. 5) to
+//! split the logit compensator symmetrically into the query and key
+//! projections. We compute it from the symmetric eigendecompositions of
+//! AᵀA (right vectors) with left vectors recovered as U = A V Σ⁻¹, plus a
+//! null-space completion for rank-deficient inputs.
+
+use super::eig::sym_eig;
+use super::Mat;
+
+/// Full SVD of a square matrix A = U Σ Vᵀ. Returns (U, σ, V) with σ sorted
+/// descending and U, V orthogonal.
+pub fn svd(a: &Mat) -> (Mat, Vec<f64>, Mat) {
+    assert_eq!(a.r, a.c, "svd: only square inputs needed by CORP");
+    let n = a.r;
+    // Right singular vectors from AᵀA.
+    let ata = a.t().mul(a);
+    let (vals, v) = sym_eig(&ata);
+    let sigma: Vec<f64> = vals.iter().map(|&l| l.max(0.0).sqrt()).collect();
+    // U columns: A v_i / σ_i for non-trivial σ; complete the rest to an
+    // orthonormal basis with modified Gram–Schmidt against existing columns.
+    let tol = sigma.first().copied().unwrap_or(0.0) * 1e-12;
+    let av = a.mul(&v);
+    let mut u = Mat::zeros(n, n);
+    let mut fixed: Vec<usize> = Vec::new();
+    for i in 0..n {
+        if sigma[i] > tol && sigma[i] > 0.0 {
+            for r in 0..n {
+                u.set(r, i, av.at(r, i) / sigma[i]);
+            }
+            fixed.push(i);
+        }
+    }
+    // Null-space completion.
+    for i in 0..n {
+        if fixed.contains(&i) {
+            continue;
+        }
+        // start from a unit vector not in span(existing)
+        let mut best_col = vec![0.0f64; n];
+        let mut best_norm = -1.0f64;
+        for seed in 0..n {
+            let mut cand = vec![0.0f64; n];
+            cand[seed] = 1.0;
+            ortho_against(&mut cand, &u, &fixed);
+            let norm = cand.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > best_norm {
+                best_norm = norm;
+                best_col = cand;
+            }
+        }
+        assert!(best_norm > 1e-8, "svd: failed to complete orthonormal basis");
+        for r in 0..n {
+            u.set(r, i, best_col[r] / best_norm);
+        }
+        fixed.push(i);
+    }
+    (u, sigma, v)
+}
+
+fn ortho_against(x: &mut [f64], u: &Mat, cols: &[usize]) {
+    for &c in cols {
+        let mut dot = 0.0;
+        for r in 0..u.r {
+            dot += x[r] * u.at(r, c);
+        }
+        for r in 0..u.r {
+            x[r] -= dot * u.at(r, c);
+        }
+    }
+}
+
+/// Symmetric square-root split used by Alg. 5: given square A (here I + M),
+/// return (P, Q) with P Qᵀ = A, P = U Σ^{1/2}, Q = V Σ^{1/2}.
+pub fn sqrt_split(a: &Mat) -> (Mat, Mat) {
+    let (u, sigma, v) = svd(a);
+    let n = a.r;
+    let mut p = Mat::zeros(n, n);
+    let mut q = Mat::zeros(n, n);
+    for j in 0..n {
+        let s = sigma[j].max(0.0).sqrt();
+        for i in 0..n {
+            p.set(i, j, u.at(i, j) * s);
+            q.set(i, j, v.at(i, j) * s);
+        }
+    }
+    (p, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, run_prop};
+
+    #[test]
+    fn reconstruction_prop() {
+        run_prop("svd.A = U S V^T", 20, |rng| {
+            let n = gen::dim(rng, 1, 10);
+            let a = Mat::from_f32(n, n, &gen::matrix(rng, n, n, 1.0));
+            let (u, s, v) = svd(&a);
+            let mut d = Mat::zeros(n, n);
+            for i in 0..n {
+                d.set(i, i, s[i]);
+            }
+            let rebuilt = u.mul(&d).mul(&v.t());
+            assert!(rebuilt.max_abs_diff(&a) < 1e-7 * (1.0 + a.max_abs()), "n={n}");
+        });
+    }
+
+    #[test]
+    fn orthogonality_prop() {
+        run_prop("svd.U,V orthogonal", 15, |rng| {
+            let n = gen::dim(rng, 1, 10);
+            let a = Mat::from_f32(n, n, &gen::matrix(rng, n, n, 1.0));
+            let (u, _, v) = svd(&a);
+            assert!(u.t().mul(&u).max_abs_diff(&Mat::eye(n)) < 1e-8);
+            assert!(v.t().mul(&v).max_abs_diff(&Mat::eye(n)) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        run_prop("svd.sigma sorted", 10, |rng| {
+            let n = gen::dim(rng, 2, 10);
+            let a = Mat::from_f32(n, n, &gen::matrix(rng, n, n, 1.0));
+            let (_, s, _) = svd(&a);
+            for w in s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+            assert!(s.iter().all(|&x| x >= 0.0));
+        });
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // Rank-1 matrix: outer([1,2],[3,4]).
+        let a = Mat::from_rows(2, 2, vec![3., 4., 6., 8.]);
+        let (u, s, v) = svd(&a);
+        assert!(s[1].abs() < 1e-10);
+        let mut d = Mat::zeros(2, 2);
+        d.set(0, 0, s[0]);
+        assert!(u.mul(&d).mul(&v.t()).max_abs_diff(&a) < 1e-9);
+        // U still orthogonal despite null-space completion.
+        assert!(u.t().mul(&u).max_abs_diff(&Mat::eye(2)) < 1e-9);
+    }
+
+    #[test]
+    fn sqrt_split_reconstructs_prop() {
+        run_prop("svd.sqrt_split P Q^T = A", 15, |rng| {
+            let n = gen::dim(rng, 1, 8);
+            // I + M shape: identity plus a modest perturbation.
+            let m = gen::matrix(rng, n, n, 0.3);
+            let a = Mat::eye(n).add(&Mat::from_f32(n, n, &m));
+            let (p, q) = sqrt_split(&a);
+            assert!(p.mul(&q.t()).max_abs_diff(&a) < 1e-7);
+        });
+    }
+}

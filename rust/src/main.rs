@@ -1,0 +1,13 @@
+//! `corp` CLI — train / prune / eval / serve / tables from the terminal.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match corp::run_cli(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}

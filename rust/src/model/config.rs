@@ -1,0 +1,317 @@
+//! Model configurations — must mirror `python/compile/model.py` exactly
+//! (names, shapes, the canonical parameter order, and `keep_count`).
+
+/// Transformer kind.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ModelKind {
+    Vit,
+    Gpt,
+}
+
+/// Pruning scope (which substructures are removed).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Scope {
+    Mlp,
+    Attn,
+    Both,
+}
+
+impl Scope {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scope::Mlp => "mlp",
+            Scope::Attn => "attn",
+            Scope::Both => "both",
+        }
+    }
+}
+
+/// Uniform sparsity in tenths (s10 = 5 ⇒ 50%), per scope.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Sparsity {
+    pub mlp_s10: u8,
+    pub attn_s10: u8,
+}
+
+impl Sparsity {
+    pub fn dense() -> Self {
+        Self { mlp_s10: 0, attn_s10: 0 }
+    }
+
+    pub fn of(scope: Scope, s10: u8) -> Self {
+        match scope {
+            Scope::Mlp => Self { mlp_s10: s10, attn_s10: 0 },
+            Scope::Attn => Self { mlp_s10: 0, attn_s10: s10 },
+            Scope::Both => Self { mlp_s10: s10, attn_s10: s10 },
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.mlp_s10 == 0 && self.attn_s10 == 0
+    }
+}
+
+/// Kept size of a dimension at sparsity s10/10. Integer arithmetic identical
+/// to the Python side so artifact shapes agree bit-exactly.
+pub fn keep_count(dim: usize, s10: u8) -> usize {
+    assert!(s10 <= 9);
+    ((dim * (10 - s10 as usize) + 5) / 10).max(1)
+}
+
+/// Static model configuration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub kind: ModelKind,
+    pub d: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub mlp: usize,
+    /// vit: patches + 1 (CLS); gpt: sequence length.
+    pub n_ctx: usize,
+    pub patches: usize,
+    pub patch_dim: usize,
+    pub classes: usize,
+    pub vocab: usize,
+}
+
+impl ModelConfig {
+    /// Per-head q/k/v dimension of the dense model.
+    pub fn dh(&self) -> usize {
+        debug_assert_eq!(self.d % self.heads, 0);
+        self.d / self.heads
+    }
+
+    /// Batch size the eval/calibration/throughput artifacts were lowered at.
+    pub fn eval_batch(&self) -> usize {
+        match self.kind {
+            ModelKind::Vit => 16,
+            ModelKind::Gpt => 8,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<&'static ModelConfig> {
+        FAMILY.iter().find(|c| c.name == name)
+    }
+
+    /// Kept per-head q/k dim and MLP hidden dim at a sparsity setting.
+    pub fn pruned_dims(&self, sp: Sparsity) -> (usize, usize) {
+        let dqk = if sp.attn_s10 == 0 { self.dh() } else { keep_count(self.dh(), sp.attn_s10) };
+        let o = if sp.mlp_s10 == 0 { self.mlp } else { keep_count(self.mlp, sp.mlp_s10) };
+        (dqk, o)
+    }
+
+    /// Canonical full-model parameter order (names + shapes), mirroring
+    /// `model.param_spec`.
+    pub fn param_spec(&self) -> Vec<(String, Vec<usize>)> {
+        let mut spec = self.embed_param_spec();
+        for layer in 0..self.layers {
+            for (n, s) in self.block_param_spec(self.dh(), self.mlp) {
+                spec.push((format!("blocks.{layer}.{n}"), s));
+            }
+        }
+        spec.extend(self.head_param_spec());
+        spec
+    }
+
+    pub fn embed_param_spec(&self) -> Vec<(String, Vec<usize>)> {
+        match self.kind {
+            ModelKind::Vit => vec![
+                ("embed.w".into(), vec![self.patch_dim, self.d]),
+                ("embed.b".into(), vec![self.d]),
+                ("embed.cls".into(), vec![self.d]),
+                ("embed.pos".into(), vec![self.n_ctx, self.d]),
+            ],
+            ModelKind::Gpt => vec![
+                ("embed.w".into(), vec![self.vocab, self.d]),
+                ("embed.pos".into(), vec![self.n_ctx, self.d]),
+            ],
+        }
+    }
+
+    pub fn block_param_spec(&self, dqk: usize, o: usize) -> Vec<(String, Vec<usize>)> {
+        let (d, h, dh) = (self.d, self.heads, self.dh());
+        vec![
+            ("ln1.g".into(), vec![d]),
+            ("ln1.b".into(), vec![d]),
+            ("attn.wq".into(), vec![d, h * dqk]),
+            ("attn.bq".into(), vec![h * dqk]),
+            ("attn.wk".into(), vec![d, h * dqk]),
+            ("attn.bk".into(), vec![h * dqk]),
+            ("attn.wv".into(), vec![d, h * dh]),
+            ("attn.bv".into(), vec![h * dh]),
+            ("attn.wo".into(), vec![h * dh, d]),
+            ("attn.bo".into(), vec![d]),
+            ("ln2.g".into(), vec![d]),
+            ("ln2.b".into(), vec![d]),
+            ("mlp.w1".into(), vec![d, o]),
+            ("mlp.b1".into(), vec![o]),
+            ("mlp.w2".into(), vec![o, d]),
+            ("mlp.b2".into(), vec![d]),
+        ]
+    }
+
+    pub fn head_param_spec(&self) -> Vec<(String, Vec<usize>)> {
+        let out = match self.kind {
+            ModelKind::Vit => self.classes,
+            ModelKind::Gpt => self.vocab,
+        };
+        vec![
+            ("head.ln.g".into(), vec![self.d]),
+            ("head.ln.b".into(), vec![self.d]),
+            ("head.w".into(), vec![self.d, out]),
+            ("head.b".into(), vec![out]),
+        ]
+    }
+
+    /// Artifact names for this config at given pruned dims / batch.
+    pub fn block_artifact(&self, dqk: usize, o: usize, batch: usize) -> String {
+        format!("block_{}_q{dqk}_o{o}_b{batch}", self.name)
+    }
+
+    pub fn embed_artifact(&self, batch: usize) -> String {
+        format!("embed_{}_b{batch}", self.name)
+    }
+
+    pub fn head_artifact(&self, batch: usize) -> String {
+        format!("head_{}_b{batch}", self.name)
+    }
+
+    pub fn blockcap_artifact(&self) -> String {
+        format!("blockcap_{}_b{}", self.name, self.eval_batch())
+    }
+
+    pub fn train_artifact(&self) -> String {
+        format!("train_{}", self.name)
+    }
+
+    pub fn evloss_artifact(&self) -> String {
+        format!("evloss_{}", self.name)
+    }
+
+    pub fn lnf_artifact(&self) -> String {
+        format!("lnf_{}_b{}", self.name, self.eval_batch())
+    }
+}
+
+const fn vit(name: &'static str, d: usize, heads: usize, layers: usize, mlp: usize) -> ModelConfig {
+    ModelConfig {
+        name,
+        kind: ModelKind::Vit,
+        d,
+        heads,
+        layers,
+        mlp,
+        n_ctx: 17,
+        patches: 16,
+        patch_dim: 48,
+        classes: 16,
+        vocab: 0,
+    }
+}
+
+/// The scaled DeiT family + the OPT-substitute GPT (see DESIGN.md).
+pub static FAMILY: &[ModelConfig] = &[
+    vit("vit_t", 96, 3, 6, 384),
+    vit("vit_s", 128, 4, 8, 512),
+    vit("vit_b", 192, 6, 10, 768),
+    vit("vit_l", 256, 8, 12, 1024),
+    vit("vit_h", 320, 10, 14, 1280),
+    ModelConfig {
+        name: "gpt_s",
+        kind: ModelKind::Gpt,
+        d: 128,
+        heads: 4,
+        layers: 6,
+        mlp: 512,
+        n_ctx: 64,
+        patches: 0,
+        patch_dim: 0,
+        classes: 0,
+        vocab: 96,
+    },
+];
+
+/// The five ViT sizes in paper order (Tiny..Huge analogues).
+pub fn vit_family() -> Vec<&'static ModelConfig> {
+    FAMILY.iter().filter(|c| c.kind == ModelKind::Vit).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keep_count_matches_python() {
+        // Spot values must agree with model.keep_count (integer identical).
+        assert_eq!(keep_count(32, 0), 32);
+        assert_eq!(keep_count(32, 5), 16);
+        assert_eq!(keep_count(32, 3), 22);
+        assert_eq!(keep_count(32, 7), 10);
+        assert_eq!(keep_count(384, 5), 192);
+        assert_eq!(keep_count(768, 3), 538);
+        assert_eq!(keep_count(1, 7), 1); // floor at 1
+    }
+
+    #[test]
+    fn keep_count_monotone() {
+        for dim in [32usize, 384, 1280] {
+            let mut prev = dim + 1;
+            for s in 0..=7u8 {
+                let k = keep_count(dim, s);
+                assert!(k <= prev && k >= 1);
+                prev = k;
+            }
+        }
+    }
+
+    #[test]
+    fn family_heads_divide() {
+        for c in FAMILY {
+            assert_eq!(c.d % c.heads, 0);
+            assert_eq!(c.dh(), 32);
+        }
+    }
+
+    #[test]
+    fn param_spec_counts() {
+        let c = ModelConfig::by_name("vit_t").unwrap();
+        let spec = c.param_spec();
+        assert_eq!(spec.len(), 4 + 16 * c.layers + 4);
+        // Unique names.
+        let mut names: Vec<&str> = spec.iter().map(|(n, _)| n.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), spec.len());
+    }
+
+    #[test]
+    fn pruned_dims_per_scope() {
+        let c = ModelConfig::by_name("vit_b").unwrap();
+        let (q, o) = c.pruned_dims(Sparsity::of(Scope::Mlp, 5));
+        assert_eq!((q, o), (32, 384));
+        let (q, o) = c.pruned_dims(Sparsity::of(Scope::Attn, 5));
+        assert_eq!((q, o), (16, 768));
+        let (q, o) = c.pruned_dims(Sparsity::of(Scope::Both, 5));
+        assert_eq!((q, o), (16, 384));
+        let (q, o) = c.pruned_dims(Sparsity::dense());
+        assert_eq!((q, o), (32, 768));
+    }
+
+    #[test]
+    fn artifact_names() {
+        let c = ModelConfig::by_name("vit_t").unwrap();
+        assert_eq!(c.block_artifact(32, 384, 16), "block_vit_t_q32_o384_b16");
+        assert_eq!(c.embed_artifact(1), "embed_vit_t_b1");
+        assert_eq!(c.blockcap_artifact(), "blockcap_vit_t_b16");
+    }
+
+    #[test]
+    fn gpt_config() {
+        let g = ModelConfig::by_name("gpt_s").unwrap();
+        assert_eq!(g.kind, ModelKind::Gpt);
+        assert_eq!(g.eval_batch(), 8);
+        let spec = g.param_spec();
+        assert_eq!(spec.len(), 2 + 16 * g.layers + 4);
+    }
+}

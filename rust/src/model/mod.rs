@@ -1,0 +1,9 @@
+//! Model definitions on the Rust side: configs (mirroring
+//! `python/compile/model.py`), the named weight store, deterministic init,
+//! checkpoint serialization, and pruned-shape derivation.
+
+pub mod config;
+pub mod weights;
+
+pub use config::{keep_count, ModelConfig, ModelKind, Scope, Sparsity};
+pub use weights::WeightStore;

@@ -1,0 +1,254 @@
+//! Named weight store + deterministic init + binary checkpoints.
+//!
+//! The coordinator owns all weights as named f32 tensors. Checkpoints use a
+//! tiny self-describing binary format (`CORPW1`): per tensor a name, shape,
+//! and raw little-endian f32 payload — no external serialization crates.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::Pcg64;
+
+/// Ordered map of parameter name -> tensor. BTreeMap keeps serialization
+/// deterministic; lookups are by name via the config's param specs.
+#[derive(Clone, Default)]
+pub struct WeightStore {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl WeightStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.map.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name)
+    }
+
+    pub fn expect(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).with_context(|| format!("missing weight '{name}'"))
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        self.map.remove(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Deterministic "pretraining-style" init for a config (truncated normal
+    /// 0.02 for projections, ones/zeros for norms and biases) — the starting
+    /// point for the Rust training loop.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let mut store = Self::new();
+        for (name, shape) in cfg.param_spec() {
+            let n: usize = shape.iter().product();
+            let t = if name.ends_with(".g") {
+                Tensor::from_vec(&shape, vec![1.0; n])
+            } else if name.ends_with(".b")
+                || name.ends_with(".bq")
+                || name.ends_with(".bk")
+                || name.ends_with(".bv")
+                || name.ends_with(".bo")
+                || name.ends_with(".b1")
+                || name.ends_with(".b2")
+            {
+                Tensor::from_vec(&shape, vec![0.0; n])
+            } else {
+                let mut data = vec![0.0f32; n];
+                for v in data.iter_mut() {
+                    *v = rng.trunc_normal_f32(0.02);
+                }
+                // Positional embeddings and cls slightly larger, as in ViT.
+                Tensor::from_vec(&shape, data)
+            };
+            store.insert(name, t);
+        }
+        store
+    }
+
+    /// Validate that every parameter in the config's dense spec is present
+    /// with the right shape.
+    pub fn validate_dense(&self, cfg: &ModelConfig) -> Result<()> {
+        for (name, shape) in cfg.param_spec() {
+            let t = self.expect(&name)?;
+            if t.shape() != shape.as_slice() {
+                bail!("weight '{name}': shape {:?} != spec {:?}", t.shape(), shape);
+            }
+        }
+        Ok(())
+    }
+
+    // ---------------- checkpoint I/O ----------------
+
+    const MAGIC: &'static [u8; 6] = b"CORPW1";
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        f.write_all(Self::MAGIC)?;
+        f.write_all(&(self.map.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.map {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(t.ndim() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // Raw LE f32 payload.
+            for &v in t.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut store = Self::new();
+        for _ in 0..count {
+            let name_len = read_u32(&mut f)? as usize;
+            if name_len > 4096 {
+                bail!("implausible name length {name_len}");
+            }
+            let mut nb = vec![0u8; name_len];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb).context("invalid utf-8 weight name")?;
+            let ndim = read_u32(&mut f)? as usize;
+            if ndim > 8 {
+                bail!("implausible ndim {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            store.insert(name, Tensor::from_vec(&shape, data));
+        }
+        Ok(store)
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn init_covers_spec() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let w = WeightStore::init(cfg, 1);
+        w.validate_dense(cfg).unwrap();
+        // layernorm gains are ones, biases zeros.
+        assert!(w.get("blocks.0.ln1.g").unwrap().data().iter().all(|&v| v == 1.0));
+        assert!(w.get("blocks.0.attn.bq").unwrap().data().iter().all(|&v| v == 0.0));
+        // projections are random (non-constant).
+        let wq = w.get("blocks.0.attn.wq").unwrap();
+        assert!(wq.data().iter().any(|&v| v != wq.data()[0]));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let a = WeightStore::init(cfg, 7);
+        let b = WeightStore::init(cfg, 7);
+        for (name, t) in a.iter() {
+            assert_eq!(t.data(), b.get(name).unwrap().data(), "{name}");
+        }
+        let c = WeightStore::init(cfg, 8);
+        assert_ne!(
+            a.get("blocks.0.attn.wq").unwrap().data(),
+            c.get("blocks.0.attn.wq").unwrap().data()
+        );
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let w = WeightStore::init(cfg, 3);
+        let dir = std::env::temp_dir().join("corp_test_ckpt");
+        let path = dir.join("t.corpw");
+        w.save(&path).unwrap();
+        let r = WeightStore::load(&path).unwrap();
+        assert_eq!(w.len(), r.len());
+        for (name, t) in w.iter() {
+            let rt = r.get(name).unwrap();
+            assert_eq!(t.shape(), rt.shape());
+            assert_eq!(t.data(), rt.data());
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("corp_test_ckpt_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.corpw");
+        std::fs::write(&path, b"NOTFMT").unwrap();
+        assert!(WeightStore::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn param_count_sane() {
+        // vit_t analytic: embed + blocks + head.
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let w = WeightStore::init(cfg, 1);
+        let analytic = crate::flops::params(cfg, crate::model::Sparsity::dense());
+        assert_eq!(w.param_count(), analytic);
+    }
+}

@@ -1,0 +1,364 @@
+//! Baseline pruning methods (mechanism re-implementations; DESIGN.md §5).
+//!
+//! * GRAIL-like — post-hoc *uncentered* Gram-ridge reconstruction of the
+//!   module output through the second linear layer only; no bias/mean
+//!   modeling, no Q/K logit compensation (attention pruned naively).
+//! * VBP-like — activation-variance ranking, bias-only compensation
+//!   (b̂ = b + W_P μ_P), no B matrix; MLP scope only.
+//! * SNOWS-like — 2:4 semi-structured magnitude masking of W₂ rows with
+//!   per-output closed-form least-squares recovery on calibration Gram
+//!   statistics (keeps feature dims; no structural shrinkage).
+//! * DC-ViT-like — removes whole attention modules (by attention-output
+//!   energy) and prunes MLP channels, recovering with closed-form
+//!   feature-mimic ridge per modified block (substitute for DC-ViT's SGD
+//!   feature mimicking).
+
+use anyhow::Result;
+
+use super::{CalibStats, PruneOpts, PruneResult};
+use crate::exec::Executor;
+use crate::linalg::chol::Cholesky;
+use crate::linalg::Mat;
+use crate::model::WeightStore;
+use crate::rank::partition;
+
+use crate::tensor::Tensor;
+use crate::util::timer::Sections;
+
+/// GRAIL-like: for each MLP block, prune hidden channels (same combined
+/// ranking as CORP for comparability) and refit W₂ rows by uncentered ridge
+/// so that X_S Ŵ ≈ X W₂ on calibration data:
+///   Ŵ = (E[x_S x_Sᵀ] + λI)⁻¹ E[x_S xᵀ] W₂.
+/// Attention scope is pruned naively (GRAIL has no logit compensator).
+pub fn prune_grail(
+    exec: &Executor<'_>,
+    dense: &WeightStore,
+    stats: &CalibStats,
+    opts: &PruneOpts,
+) -> Result<PruneResult> {
+    // Start from the naive-pruned model (both scopes), then overwrite the
+    // MLP second layers with the Gram-ridge reconstruction.
+    let naive_opts = PruneOpts { method: super::Method::Naive, ..opts.clone() };
+    let mut result = super::prune_corp(exec, dense, stats, &naive_opts, false)?;
+    let cfg = exec.cfg;
+    let mut sections = Sections::new();
+
+    if opts.sparsity.mlp_s10 > 0 {
+        for l in 0..cfg.layers {
+            let ls = &stats.layers[l];
+            let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
+            let (kept, _pruned) = {
+                let scores = crate::rank::score_mlp(
+                    opts.criterion,
+                    &ls.hidden.energy(),
+                    &ls.active.active_prob(),
+                    w2,
+                );
+                partition(&scores, opts.sparsity.mlp_s10)
+            };
+            let w2_hat = sections.time("compensation", || {
+                let second = ls.hidden.second_moment(); // E[x xᵀ], uncentered
+                let all: Vec<usize> = (0..cfg.mlp).collect();
+                let ss = second.submatrix(&kept, &kept);
+                let sa = second.submatrix(&kept, &all);
+                // W₂ as Mat [o, d].
+                let w2m = Mat::from_f32(cfg.mlp, cfg.d, w2.data());
+                let rhs = sa.mul(&w2m); // [|S|, d]
+                let scale = (ss.trace() / ss.r.max(1) as f64).max(1e-12);
+                let (f, _) = Cholesky::new_with_jitter(&ss.add_diag(opts.lambda * scale));
+                let sol = f.solve_mat(&rhs); // [|S|, d]
+                Tensor::from_vec(&[kept.len(), cfg.d], sol.to_f32())
+            });
+            result.weights.insert(format!("blocks.{l}.mlp.w2"), w2_hat);
+            // b2 left unchanged (GRAIL models no bias shift).
+        }
+    }
+    result.sections.merge(&sections);
+    Ok(result)
+}
+
+/// VBP-like: variance ranking + bias-only compensation on the MLP scope;
+/// attention pruned naively at the requested attention sparsity.
+pub fn prune_vbp(
+    exec: &Executor<'_>,
+    dense: &WeightStore,
+    stats: &CalibStats,
+    opts: &PruneOpts,
+) -> Result<PruneResult> {
+    let cfg = exec.cfg;
+    // Attention scope: reuse the naive path (VBP does not prune QK dims; we
+    // still honor the requested scope for matched-FLOPs comparisons).
+    let naive_opts = PruneOpts { method: super::Method::Naive, ..opts.clone() };
+    let mut result = super::prune_corp(exec, dense, stats, &naive_opts, false)?;
+    let mut sections = Sections::new();
+
+    if opts.sparsity.mlp_s10 > 0 {
+        for l in 0..cfg.layers {
+            let ls = &stats.layers[l];
+            let w1 = dense.expect(&format!("blocks.{l}.mlp.w1"))?;
+            let b1 = dense.expect(&format!("blocks.{l}.mlp.b1"))?;
+            let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
+            let b2 = dense.expect(&format!("blocks.{l}.mlp.b2"))?;
+            let (kept, pruned) = sections.time("ranking", || {
+                // Variance = E[x²] − μ² per channel.
+                let energy = ls.hidden.energy();
+                let mean = ls.hidden.mean();
+                let var: Vec<f64> =
+                    energy.iter().zip(&mean).map(|(e, m)| (e - m * m).max(0.0)).collect();
+                partition(&var, opts.sparsity.mlp_s10)
+            });
+            result.weights.insert(format!("blocks.{l}.mlp.w1"), w1.gather_cols(&kept));
+            result.weights.insert(format!("blocks.{l}.mlp.b1"), b1.gather_cols(&kept));
+            result.weights.insert(format!("blocks.{l}.mlp.w2"), w2.gather_rows(&kept));
+            // Bias compensation: b̂ = b + Σ_{i∈P} μ_i · W₂[i, :].
+            let (b2_hat,) = sections.time("compensation", || {
+                let mean = ls.hidden.mean();
+                let mut b = b2.data().to_vec();
+                for &i in &pruned {
+                    let row = w2.row(i);
+                    for (bj, &wij) in b.iter_mut().zip(row) {
+                        *bj += (mean[i] as f32) * wij;
+                    }
+                }
+                (Tensor::from_vec(&[cfg.d], b),)
+            });
+            result.weights.insert(format!("blocks.{l}.mlp.b2"), b2_hat.clone());
+        }
+    }
+    result.sections.merge(&sections);
+    Ok(result)
+}
+
+/// SNOWS-like 2:4 semi-structured pruning of W₂ with closed-form row
+/// recovery. Keeps all feature dimensions (no structural speedup) — used
+/// only for the Table 4a analogue. Returns dense-shaped weights.
+///
+/// For each output column c of the layer y = xᵀW₂ (+b): mask the smallest
+/// 2 of every 4 consecutive input weights (by |w|·√E[x²], the activation-
+/// aware magnitude), then refit the surviving support to minimize
+/// E‖xᵀw_orig − x_Sᵀw_new‖² = min over w_new, solved from the hidden Gram.
+pub fn prune_snows24(
+    exec: &Executor<'_>,
+    dense: &WeightStore,
+    stats: &CalibStats,
+    opts: &PruneOpts,
+    scope_mlp: bool,
+) -> Result<PruneResult> {
+    let cfg = exec.cfg;
+    let mut out = dense.clone();
+    let mut sections = Sections::new();
+
+    for l in 0..cfg.layers {
+        let ls = &stats.layers[l];
+        if scope_mlp {
+            let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
+            let energy = ls.hidden.energy();
+            let second = ls.hidden.second_moment();
+            let new_w2 = sections.time("compensation", || {
+                snows_mask_and_recover(w2, &energy, &second, opts.lambda)
+            });
+            out.insert(format!("blocks.{l}.mlp.w2"), new_w2);
+        } else {
+            // Attention scope: 2:4 on wq/wk input dims, recovered against the
+            // layer-input Gram. We approximate the input second moment with
+            // the identity-scaled Gram of Q/K activations' pre-projection
+            // statistics being unavailable; magnitude-only masking + no
+            // recovery is the honest fallback and matches SNOWS' 2:4 scope
+            // on Q/K projections.
+            for name in ["attn.wq", "attn.wk"] {
+                let w = dense.expect(&format!("blocks.{l}.{name}"))?;
+                let masked = sections.time("compensation", || mask24_only(w));
+                out.insert(format!("blocks.{l}.{name}"), masked);
+            }
+        }
+    }
+    Ok(PruneResult { weights: out, mean_mlp_rho2: 0.0, mean_attn_rho2: 0.0, sections })
+}
+
+/// 2:4 masking + per-output least-squares recovery for W₂ [o, d].
+fn snows_mask_and_recover(w2: &Tensor, energy: &[f64], second: &Mat, lambda: f64) -> Tensor {
+    let (o, d) = (w2.shape()[0], w2.shape()[1]);
+    let mut out = vec![0.0f32; o * d];
+    let scale = (second.trace() / o.max(1) as f64).max(1e-12);
+    for c in 0..d {
+        // Column c of the output: weights w2[:, c] over hidden inputs.
+        let col: Vec<f64> = (0..o).map(|i| w2.at2(i, c) as f64).collect();
+        // Activation-aware 2:4 masking along the input axis.
+        let mut support: Vec<usize> = Vec::with_capacity(o / 2);
+        for g in (0..o).step_by(4) {
+            let end = (g + 4).min(o);
+            let mut idx: Vec<usize> = (g..end).collect();
+            idx.sort_by(|&a, &b| {
+                let sa = col[a].abs() * energy[a].sqrt();
+                let sb = col[b].abs() * energy[b].sqrt();
+                sb.partial_cmp(&sa).unwrap()
+            });
+            let keep = idx.len().div_ceil(2);
+            let mut kept: Vec<usize> = idx[..keep].to_vec();
+            kept.sort_unstable();
+            support.extend(kept);
+        }
+        // Recover: w_new = (Σ_SS + λI)⁻¹ Σ_S,: w_orig.
+        let ss = second.submatrix(&support, &support);
+        let all: Vec<usize> = (0..o).collect();
+        let sa = second.submatrix(&support, &all);
+        let mut rhs = vec![0.0f64; support.len()];
+        for (i, _) in support.iter().enumerate() {
+            rhs[i] = (0..o).map(|j| sa.at(i, j) * col[j]).sum();
+        }
+        let (f, _) = Cholesky::new_with_jitter(&ss.add_diag(lambda * scale));
+        let sol = f.solve_vec(&rhs);
+        for (i, &s) in support.iter().enumerate() {
+            out[s * d + c] = sol[i] as f32;
+        }
+    }
+    Tensor::from_vec(&[o, d], out)
+}
+
+/// Plain magnitude 2:4 masking along the input (row) axis.
+fn mask24_only(w: &Tensor) -> Tensor {
+    let (r, c) = (w.shape()[0], w.shape()[1]);
+    let mut out = w.data().to_vec();
+    for j in 0..c {
+        for g in (0..r).step_by(4) {
+            let end = (g + 4).min(r);
+            let mut idx: Vec<usize> = (g..end).collect();
+            idx.sort_by(|&a, &b| {
+                w.at2(b, j).abs().partial_cmp(&w.at2(a, j).abs()).unwrap()
+            });
+            let keep = idx.len().div_ceil(2);
+            for &i in &idx[keep..] {
+                out[i * c + j] = 0.0;
+            }
+        }
+    }
+    Tensor::from_vec(&[r, c], out)
+}
+
+/// DC-ViT-like: remove attention modules from the `remove` lowest-importance
+/// blocks (importance = calibration attention-logit energy), prune MLP
+/// channels everywhere at `opts.sparsity.mlp_s10`, and feature-mimic each
+/// modified block's MLP against the dense block outputs by closed-form
+/// ridge. Returns weights *plus* the list of attention-free layers (the
+/// executor must use the `mlponly_*` artifacts for those layers).
+pub fn prune_dcvit(
+    exec: &Executor<'_>,
+    dense: &WeightStore,
+    stats: &CalibStats,
+    opts: &PruneOpts,
+    remove_attn_layers: usize,
+) -> Result<(PruneResult, Vec<usize>)> {
+    let cfg = exec.cfg;
+    // Rank blocks by total attention logit energy; remove the weakest.
+    let mut energies: Vec<(usize, f64)> = (0..cfg.layers)
+        .map(|l| {
+            let ls = &stats.layers[l];
+            let mut e = 0.0;
+            for head in 0..cfg.heads {
+                let qh = super::per_head(&ls.q, head);
+                let kh = super::per_head(&ls.k, head);
+                e += crate::rank::score_attn_logit_energy(&qh, &kh).iter().sum::<f64>();
+            }
+            (l, e)
+        })
+        .collect();
+    energies.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let removed: Vec<usize> = energies.iter().take(remove_attn_layers).map(|&(l, _)| l).collect();
+
+    // MLP pruning with CORP-style compensation (DC-ViT recovers with feature
+    // mimicking; the closed-form affine recovery is our gradient-free
+    // substitute — documented in DESIGN.md).
+    let corp_opts = PruneOpts {
+        method: super::Method::Corp,
+        sparsity: crate::model::Sparsity { mlp_s10: opts.sparsity.mlp_s10, attn_s10: 0 },
+        ..opts.clone()
+    };
+    let result = super::prune_corp(exec, dense, stats, &corp_opts, true)?;
+    Ok((result, removed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::gen;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn mask24_keeps_half_per_group() {
+        let mut rng = Pcg64::new(1);
+        let w = Tensor::from_vec(&[8, 3], gen::matrix(&mut rng, 8, 3, 1.0));
+        let m = mask24_only(&w);
+        for j in 0..3 {
+            for g in (0..8).step_by(4) {
+                let nz = (g..g + 4).filter(|&i| m.at2(i, j) != 0.0).count();
+                assert_eq!(nz, 2, "col {j} group {g}");
+            }
+        }
+        // Survivors are the 2 largest-magnitude entries of each group.
+        for j in 0..3 {
+            for g in (0..8).step_by(4) {
+                let mut mags: Vec<(f32, usize)> =
+                    (g..g + 4).map(|i| (w.at2(i, j).abs(), i)).collect();
+                mags.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                for &(_, i) in &mags[..2] {
+                    assert_ne!(m.at2(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn snows_recovery_beats_plain_masking() {
+        // Correlated hidden activations: recovery must reduce output error
+        // versus masking alone.
+        let mut rng = Pcg64::new(4);
+        let (o, d, rows) = (16, 4, 300);
+        // x = z B + noise, z low-dim -> correlated channels.
+        let basis = gen::matrix(&mut rng, 3, o, 1.0);
+        let mut x = vec![0.0f32; rows * o];
+        for r in 0..rows {
+            let z: Vec<f32> = (0..3).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            for c in 0..o {
+                let mut v = 0.0;
+                for k in 0..3 {
+                    v += z[k] * basis[k * o + c];
+                }
+                x[r * o + c] = v + rng.normal_f32(0.0, 0.05);
+            }
+        }
+        let mut acc = crate::stats::MomentAccumulator::new(o);
+        acc.add_batch(&x, rows);
+        let w2 = Tensor::from_vec(&[o, d], gen::matrix(&mut rng, o, d, 1.0));
+        let energy = acc.energy();
+        let second = acc.second_moment();
+        let recovered = snows_mask_and_recover(&w2, &energy, &second, 1e-6);
+        let masked = {
+            // activation-aware mask only (same support, no refit):
+            let mut m = recovered.clone();
+            // rebuild support from recovered (non-zeros), then copy orig vals
+            for i in 0..o {
+                for j in 0..d {
+                    if m.at2(i, j) != 0.0 {
+                        m.data_mut()[i * d + j] = w2.at2(i, j);
+                    }
+                }
+            }
+            m
+        };
+        let err = |wn: &Tensor| -> f64 {
+            let mut e = 0.0;
+            for r in 0..rows {
+                let xr = &x[r * o..(r + 1) * o];
+                for j in 0..d {
+                    let full: f64 = (0..o).map(|i| (xr[i] * w2.at2(i, j)) as f64).sum();
+                    let got: f64 = (0..o).map(|i| (xr[i] * wn.at2(i, j)) as f64).sum();
+                    e += (full - got) * (full - got);
+                }
+            }
+            e
+        };
+        let e_rec = err(&recovered);
+        let e_mask = err(&masked);
+        assert!(e_rec < e_mask * 0.9, "recovered {e_rec} vs masked {e_mask}");
+    }
+}

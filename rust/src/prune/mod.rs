@@ -1,0 +1,412 @@
+//! The CORP pipeline (Alg. 1) and the baseline methods.
+//!
+//! `calibrate` runs the dense model over unlabeled calibration batches and
+//! accumulates every statistic all methods need (one pass, cached). `prune`
+//! then ranks, compensates, and folds — producing a pruned `WeightStore`
+//! whose shapes match the corresponding block artifacts.
+
+pub mod baselines;
+
+use anyhow::Result;
+
+use crate::compensate::compensate_attn_head;
+use crate::data::{Split, TextGen, VisionGen};
+use crate::exec::Executor;
+use crate::linalg::Mat;
+use crate::model::{ModelKind, Scope, Sparsity, WeightStore};
+use crate::rank::{partition, score_attn_logit_energy, score_mlp, MlpCriterion};
+use crate::stats::{cov_blocks, ActiveCounter, MomentAccumulator};
+use crate::tensor::Tensor;
+use crate::util::timer::Sections;
+
+/// Pruning method.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Method {
+    /// CORP: ranking + closed-form affine / logit compensation.
+    Corp,
+    /// Same ranking, no compensation (the "w/o comp" curves).
+    Naive,
+    /// GRAIL-like: uncentered Gram-ridge output reconstruction, MLP only
+    /// scope applies to w2; attention pruned naively.
+    Grail,
+    /// VBP-like: variance ranking + bias-only compensation, no B matrix.
+    Vbp,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Corp => "CORP",
+            Method::Naive => "naive",
+            Method::Grail => "GRAIL-like",
+            Method::Vbp => "VBP-like",
+        }
+    }
+}
+
+/// Pipeline options.
+#[derive(Clone, Debug)]
+pub struct PruneOpts {
+    pub sparsity: Sparsity,
+    pub method: Method,
+    pub criterion: MlpCriterion,
+    pub lambda: f64,
+    /// Number of calibration batches (batch size = cfg.eval_batch()).
+    pub calib_batches: usize,
+    /// Sample cap for the attention Kronecker accumulation.
+    pub attn_max_samples: usize,
+    /// Threshold for the active-probability statistic.
+    pub active_eps: f32,
+    /// Compute per-layer rho²/J* diagnostics (costly eigen solves; §Perf L3-2).
+    pub diagnostics: bool,
+    pub seed: u64,
+}
+
+impl Default for PruneOpts {
+    fn default() -> Self {
+        Self {
+            sparsity: Sparsity::of(Scope::Both, 5),
+            method: Method::Corp,
+            criterion: MlpCriterion::Combined,
+            lambda: 1e-2,
+            calib_batches: 16,
+            attn_max_samples: 128,
+            active_eps: 0.05,
+            diagnostics: false,
+            seed: 1234,
+        }
+    }
+}
+
+/// Per-layer calibration statistics.
+pub struct LayerStats {
+    /// Hidden-activation moments over [B·n, o].
+    pub hidden: MomentAccumulator,
+    pub active: ActiveCounter,
+    /// Captured per-head queries/keys, concatenated over batches:
+    /// [samples, heads, n, dh].
+    pub q: Tensor,
+    pub k: Tensor,
+}
+
+/// Full calibration result (Alg. 1's cache).
+pub struct CalibStats {
+    pub layers: Vec<LayerStats>,
+    /// Wall-time charged per pipeline section (Table 6 analogue).
+    pub sections: Sections,
+}
+
+/// Run the dense model on calibration data and accumulate statistics.
+pub fn calibrate(exec: &Executor<'_>, w: &WeightStore, opts: &PruneOpts) -> Result<CalibStats> {
+    let cfg = exec.cfg;
+    let b = cfg.eval_batch();
+    let mut sections = Sections::new();
+    let mut hidden_acc: Vec<MomentAccumulator> =
+        (0..cfg.layers).map(|_| MomentAccumulator::new(cfg.mlp)).collect();
+    let mut active_acc: Vec<ActiveCounter> =
+        (0..cfg.layers).map(|_| ActiveCounter::new(cfg.mlp, opts.active_eps)).collect();
+    let mut qs: Vec<Vec<Tensor>> = vec![Vec::new(); cfg.layers];
+    let mut ks: Vec<Vec<Tensor>> = vec![Vec::new(); cfg.layers];
+    let vision = VisionGen::new(crate::data::DATA_SEED);
+    let text = TextGen::new(crate::data::DATA_SEED);
+
+    let mut attn_kept_samples = 0usize;
+    for batch in 0..opts.calib_batches {
+        // Calibration is *unlabeled*: only inputs are used.
+        let (tokens, ids) = match cfg.kind {
+            ModelKind::Vit => (Some(vision.batch(Split::Calib, batch as u64, b).0), None),
+            ModelKind::Gpt => (None, Some(text.batch(Split::Calib, batch as u64, b, cfg.n_ctx).0)),
+        };
+        let caps = sections.time("calibration", || {
+            exec.forward_capture(w, tokens.as_ref(), ids.as_deref())
+        })?;
+        let keep_qk = attn_kept_samples < opts.attn_max_samples;
+        for (l, cap) in caps.1.into_iter().enumerate() {
+            let rows = b * cfg.n_ctx;
+            sections.time("calibration", || {
+                hidden_acc[l].add_batch(cap.hidden.data(), rows);
+                active_acc[l].add_batch(cap.hidden.data(), rows);
+            });
+            if keep_qk {
+                qs[l].push(cap.q);
+                ks[l].push(cap.k);
+            }
+        }
+        if keep_qk {
+            attn_kept_samples += b;
+        }
+    }
+
+    // Concatenate Q/K batches per layer.
+    let layers = hidden_acc
+        .into_iter()
+        .zip(active_acc)
+        .zip(qs.into_iter().zip(ks))
+        .map(|((hidden, active), (qv, kv))| LayerStats {
+            hidden,
+            active,
+            q: concat_leading(&qv),
+            k: concat_leading(&kv),
+        })
+        .collect();
+    Ok(CalibStats { layers, sections })
+}
+
+fn concat_leading(parts: &[Tensor]) -> Tensor {
+    assert!(!parts.is_empty());
+    let mut shape = parts[0].shape().to_vec();
+    let inner: usize = shape[1..].iter().product();
+    let total: usize = parts.iter().map(|t| t.shape()[0]).sum();
+    let mut data = Vec::with_capacity(total * inner);
+    for p in parts {
+        data.extend_from_slice(p.data());
+    }
+    shape[0] = total;
+    Tensor::from_vec(&shape, data)
+}
+
+/// Reshape the captured [samples, heads, n, dh] slab into per-head
+/// [samples, n, dh] views (copied; sizes are small).
+pub fn per_head(t: &Tensor, head: usize) -> Tensor {
+    let s = t.shape();
+    let (b, h, n, dh) = (s[0], s[1], s[2], s[3]);
+    let mut out = Vec::with_capacity(b * n * dh);
+    for i in 0..b {
+        let base = ((i * h) + head) * n * dh;
+        out.extend_from_slice(&t.data()[base..base + n * dh]);
+    }
+    Tensor::from_vec(&[b, n, dh], out)
+}
+
+/// Outcome of a pruning run.
+pub struct PruneResult {
+    pub weights: WeightStore,
+    /// Mean per-layer MLP ρ² (variance explained) — diagnostic.
+    pub mean_mlp_rho2: f64,
+    /// Mean per-head attention ρ².
+    pub mean_attn_rho2: f64,
+    pub sections: Sections,
+}
+
+/// Rank + compensate + fold (Alg. 1 after calibration).
+pub fn prune(
+    exec: &Executor<'_>,
+    dense: &WeightStore,
+    stats: &CalibStats,
+    opts: &PruneOpts,
+) -> Result<PruneResult> {
+    match opts.method {
+        Method::Corp => prune_corp(exec, dense, stats, opts, true),
+        Method::Naive => prune_corp(exec, dense, stats, opts, false),
+        Method::Grail => baselines::prune_grail(exec, dense, stats, opts),
+        Method::Vbp => baselines::prune_vbp(exec, dense, stats, opts),
+    }
+}
+
+/// Convenience: calibrate + prune.
+pub fn run_pipeline(
+    exec: &Executor<'_>,
+    dense: &WeightStore,
+    opts: &PruneOpts,
+) -> Result<PruneResult> {
+    let stats = calibrate(exec, dense, opts)?;
+    let mut result = prune(exec, dense, &stats, opts)?;
+    result.sections.merge(&stats.sections);
+    Ok(result)
+}
+
+fn prune_corp(
+    exec: &Executor<'_>,
+    dense: &WeightStore,
+    stats: &CalibStats,
+    opts: &PruneOpts,
+    compensate: bool,
+) -> Result<PruneResult> {
+    let cfg = exec.cfg;
+    let mut out = dense.clone();
+    let mut sections = Sections::new();
+    let mut rho_mlp = Vec::new();
+    let mut rho_attn = Vec::new();
+
+    for l in 0..cfg.layers {
+        let ls = &stats.layers[l];
+        // ---------------- MLP scope ----------------
+        if opts.sparsity.mlp_s10 > 0 {
+            let w1 = dense.expect(&format!("blocks.{l}.mlp.w1"))?;
+            let b1 = dense.expect(&format!("blocks.{l}.mlp.b1"))?;
+            let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
+            let b2 = dense.expect(&format!("blocks.{l}.mlp.b2"))?;
+            let (kept, pruned) = sections.time("ranking", || {
+                let scores = score_mlp(opts.criterion, &ls.hidden.energy(), &ls.active.active_prob(), w2);
+                partition(&scores, opts.sparsity.mlp_s10)
+            });
+            // First layer: always a column gather.
+            out.insert(format!("blocks.{l}.mlp.w1"), w1.gather_cols(&kept));
+            out.insert(format!("blocks.{l}.mlp.b1"), b1.gather_cols(&kept));
+            if compensate {
+                let (w2_hat, b2_hat, rho2) = sections.time("compensation", || {
+                    let cov = ls.hidden.covariance();
+                    let mean = ls.hidden.mean();
+                    let blocks = cov_blocks(&cov, &mean, &kept, &pruned);
+                    let comp = crate::compensate::mlp::compensate_mlp_opts(
+                        w2, b2, &kept, &pruned, &blocks, opts.lambda, opts.diagnostics,
+                    );
+                    (comp.w2_hat, comp.b2_hat, comp.rho2)
+                });
+                out.insert(format!("blocks.{l}.mlp.w2"), w2_hat);
+                out.insert(format!("blocks.{l}.mlp.b2"), b2_hat);
+                rho_mlp.push(rho2);
+            } else {
+                out.insert(format!("blocks.{l}.mlp.w2"), w2.gather_rows(&kept));
+            }
+        }
+        // ---------------- Attention scope ----------------
+        if opts.sparsity.attn_s10 > 0 {
+            let dh = cfg.dh();
+            let h = cfg.heads;
+            let wq = dense.expect(&format!("blocks.{l}.attn.wq"))?;
+            let bq = dense.expect(&format!("blocks.{l}.attn.bq"))?;
+            let wk = dense.expect(&format!("blocks.{l}.attn.wk"))?;
+            let bk = dense.expect(&format!("blocks.{l}.attn.bk"))?;
+            let dqk = crate::model::keep_count(dh, opts.sparsity.attn_s10);
+            let mut new_wq = vec![0.0f32; cfg.d * h * dqk];
+            let mut new_bq = vec![0.0f32; h * dqk];
+            let mut new_wk = vec![0.0f32; cfg.d * h * dqk];
+            let mut new_bk = vec![0.0f32; h * dqk];
+            for head in 0..h {
+                let qh = per_head(&ls.q, head);
+                let kh = per_head(&ls.k, head);
+                let (kept, pruned) = sections.time("ranking", || {
+                    let scores = score_attn_logit_energy(&qh, &kh);
+                    partition(&scores, opts.sparsity.attn_s10)
+                });
+                // Dense per-head projection blocks [d, dh].
+                let wq_head = head_block(wq, head, dh);
+                let wk_head = head_block(wk, head, dh);
+                let bq_head: Vec<f64> =
+                    (0..dh).map(|j| bq.data()[head * dh + j] as f64).collect();
+                let bk_head: Vec<f64> =
+                    (0..dh).map(|j| bk.data()[head * dh + j] as f64).collect();
+                if compensate {
+                    let comp = sections.time("compensation", || {
+                        compensate_attn_head(
+                            &qh,
+                            &kh,
+                            &kept,
+                            &pruned,
+                            &wq_head,
+                            &bq_head,
+                            &wk_head,
+                            &bk_head,
+                            opts.lambda,
+                            opts.attn_max_samples,
+                        )
+                    });
+                    write_head_block(&mut new_wq, &comp.wq, head, dqk, h);
+                    write_head_block(&mut new_wk, &comp.wk, head, dqk, h);
+                    for j in 0..dqk {
+                        new_bq[head * dqk + j] = comp.bq[j] as f32;
+                        new_bk[head * dqk + j] = comp.bk[j] as f32;
+                    }
+                    rho_attn.push(comp.rho2);
+                } else {
+                    // Naive: gather kept columns.
+                    for (j, &c) in kept.iter().enumerate() {
+                        for r in 0..cfg.d {
+                            new_wq[r * h * dqk + head * dqk + j] = wq.at2(r, head * dh + c);
+                            new_wk[r * h * dqk + head * dqk + j] = wk.at2(r, head * dh + c);
+                        }
+                        new_bq[head * dqk + j] = bq.data()[head * dh + c];
+                        new_bk[head * dqk + j] = bk.data()[head * dh + c];
+                    }
+                }
+            }
+            out.insert(format!("blocks.{l}.attn.wq"), Tensor::from_vec(&[cfg.d, h * dqk], new_wq));
+            out.insert(format!("blocks.{l}.attn.bq"), Tensor::from_vec(&[h * dqk], new_bq));
+            out.insert(format!("blocks.{l}.attn.wk"), Tensor::from_vec(&[cfg.d, h * dqk], new_wk));
+            out.insert(format!("blocks.{l}.attn.bk"), Tensor::from_vec(&[h * dqk], new_bk));
+        }
+    }
+
+    let mean = |v: &[f64]| if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 };
+    Ok(PruneResult {
+        weights: out,
+        mean_mlp_rho2: mean(&rho_mlp),
+        mean_attn_rho2: mean(&rho_attn),
+        sections,
+    })
+}
+
+/// Extract head `head`'s [d, dh] block from a fused projection [d, h*dh].
+pub(crate) fn head_block(w: &Tensor, head: usize, dh: usize) -> Mat {
+    let d = w.shape()[0];
+    let hdh = w.shape()[1];
+    let mut out = Mat::zeros(d, dh);
+    for r in 0..d {
+        for j in 0..dh {
+            out.set(r, j, w.data()[r * hdh + head * dh + j] as f64);
+        }
+    }
+    out
+}
+
+/// Write a [d, dqk] per-head block into the fused layout [d, h*dqk].
+pub(crate) fn write_head_block(dst: &mut [f32], block: &Mat, head: usize, dqk: usize, h: usize) {
+    let d = block.r;
+    assert_eq!(block.c, dqk);
+    for r in 0..d {
+        for j in 0..dqk {
+            dst[r * h * dqk + head * dqk + j] = block.at(r, j) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_block_roundtrip() {
+        let (d, h, dh) = (3, 2, 2);
+        let w = Tensor::from_vec(&[d, h * dh], (0..12).map(|v| v as f32).collect());
+        let b0 = head_block(&w, 0, dh);
+        let b1 = head_block(&w, 1, dh);
+        assert_eq!(b0.at(0, 0), 0.0);
+        assert_eq!(b0.at(0, 1), 1.0);
+        assert_eq!(b1.at(0, 0), 2.0);
+        assert_eq!(b1.at(2, 1), 11.0);
+        // Round-trip through write_head_block.
+        let mut dst = vec![0.0f32; d * h * dh];
+        write_head_block(&mut dst, &b0, 0, dh, h);
+        write_head_block(&mut dst, &b1, 1, dh, h);
+        assert_eq!(dst, w.data());
+    }
+
+    #[test]
+    fn per_head_extracts() {
+        // [b=1, h=2, n=2, dh=2]
+        let t = Tensor::from_vec(&[1, 2, 2, 2], (0..8).map(|v| v as f32).collect());
+        let h0 = per_head(&t, 0);
+        let h1 = per_head(&t, 1);
+        assert_eq!(h0.shape(), &[1, 2, 2]);
+        assert_eq!(h0.data(), &[0., 1., 2., 3.]);
+        assert_eq!(h1.data(), &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn concat_leading_stacks() {
+        let a = Tensor::from_vec(&[1, 2], vec![1., 2.]);
+        let b = Tensor::from_vec(&[2, 2], vec![3., 4., 5., 6.]);
+        let c = concat_leading(&[a, b]);
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.data(), &[1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn default_opts_sane() {
+        let o = PruneOpts::default();
+        assert_eq!(o.method, Method::Corp);
+        assert_eq!(o.criterion, MlpCriterion::Combined);
+        assert!(o.lambda > 0.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Ranking criteria (Alg. 2 / Alg. 4 and the App. E ablation).
+//!
+//! MLP hidden channels are scored with simple data-driven signals; attention
+//! head dimensions with expected logit energy. Per the paper's thesis, the
+//! ranking is deliberately simple — compensation does the heavy lifting.
+
+use crate::model::keep_count;
+use crate::tensor::Tensor;
+
+/// MLP channel ranking criterion.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MlpCriterion {
+    /// Activation energy E[x_i²].
+    ActEnergy,
+    /// Output-weight column norm ‖W₂[i, :]‖₂.
+    Magnitude,
+    /// Combined (Wanda-like): E_i · ‖W₂[i, :]‖₂ — the paper's default.
+    Combined,
+    /// Active probability P(|x| > ε) (App. E ablation).
+    ActiveProb,
+}
+
+impl MlpCriterion {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MlpCriterion::ActEnergy => "act",
+            MlpCriterion::Magnitude => "mag",
+            MlpCriterion::Combined => "combined",
+            MlpCriterion::ActiveProb => "active",
+        }
+    }
+
+    pub fn all() -> [MlpCriterion; 4] {
+        [MlpCriterion::ActEnergy, MlpCriterion::Magnitude, MlpCriterion::Combined, MlpCriterion::ActiveProb]
+    }
+}
+
+/// Score MLP hidden channels.
+///
+/// `energy` = E[x_i²] per channel; `active_prob` = P(|x_i| > ε);
+/// `w2` = second linear layer [o, d] (rows are the pruned-away columns W_P
+/// of the paper's output-projection view).
+pub fn score_mlp(
+    crit: MlpCriterion,
+    energy: &[f64],
+    active_prob: &[f64],
+    w2: &Tensor,
+) -> Vec<f64> {
+    let o = energy.len();
+    assert_eq!(w2.shape()[0], o);
+    let col_norm = |i: usize| -> f64 {
+        w2.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    };
+    match crit {
+        MlpCriterion::ActEnergy => energy.to_vec(),
+        MlpCriterion::Magnitude => (0..o).map(col_norm).collect(),
+        MlpCriterion::Combined => (0..o).map(|i| energy[i] * col_norm(i)).collect(),
+        MlpCriterion::ActiveProb => active_prob.to_vec(),
+    }
+}
+
+/// Attention logit-energy scores s_j = E[‖q_j‖² ‖k_j‖²] per head dimension
+/// (Alg. 4). `q`, `k`: [B, n, dh] for one head; expectation over samples b,
+/// with per-sample column norms over tokens.
+pub fn score_attn_logit_energy(q: &Tensor, k: &Tensor) -> Vec<f64> {
+    let shape = q.shape();
+    assert_eq!(shape.len(), 3);
+    let (b, n, dh) = (shape[0], shape[1], shape[2]);
+    assert_eq!(k.shape(), shape);
+    let mut scores = vec![0.0f64; dh];
+    for s in 0..b {
+        for j in 0..dh {
+            let mut qn = 0.0f64;
+            let mut kn = 0.0f64;
+            for t in 0..n {
+                let qv = q.data()[(s * n + t) * dh + j] as f64;
+                let kv = k.data()[(s * n + t) * dh + j] as f64;
+                qn += qv * qv;
+                kn += kv * kv;
+            }
+            scores[j] += qn * kn;
+        }
+    }
+    for v in scores.iter_mut() {
+        *v /= b as f64;
+    }
+    scores
+}
+
+/// Partition 0..dim into (kept, pruned) keeping the `keep_count(dim, s10)`
+/// highest-scoring indices. Kept/pruned lists are sorted ascending so that
+/// gathers are deterministic.
+pub fn partition(scores: &[f64], s10: u8) -> (Vec<usize>, Vec<usize>) {
+    let dim = scores.len();
+    let k = keep_count(dim, s10);
+    let mut idx: Vec<usize> = (0..dim).collect();
+    // Sort by score descending, tie-break on index for determinism.
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    let mut kept: Vec<usize> = idx[..k].to_vec();
+    let mut pruned: Vec<usize> = idx[k..].to_vec();
+    kept.sort_unstable();
+    pruned.sort_unstable();
+    (kept, pruned)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn partition_keeps_top_scores() {
+        let scores = vec![0.1, 5.0, 0.2, 4.0, 0.05, 3.0];
+        let (kept, pruned) = partition(&scores, 5); // keep 3 of 6
+        assert_eq!(kept, vec![1, 3, 5]);
+        assert_eq!(pruned, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn partition_dense_keeps_all() {
+        let scores = vec![1.0, 2.0, 3.0];
+        let (kept, pruned) = partition(&scores, 0);
+        assert_eq!(kept, vec![0, 1, 2]);
+        assert!(pruned.is_empty());
+    }
+
+    #[test]
+    fn partition_sizes_prop() {
+        run_prop("rank.partition sizes", 20, |rng| {
+            let dim = 1 + rng.below(64);
+            let s10 = rng.below(8) as u8;
+            let scores: Vec<f64> = (0..dim).map(|_| rng.uniform()).collect();
+            let (kept, pruned) = partition(&scores, s10);
+            assert_eq!(kept.len(), keep_count(dim, s10));
+            assert_eq!(kept.len() + pruned.len(), dim);
+            // Disjoint + sorted.
+            let mut all: Vec<usize> = kept.iter().chain(&pruned).copied().collect();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), dim);
+            // Min kept score >= max pruned score.
+            if !pruned.is_empty() && !kept.is_empty() {
+                let min_kept = kept.iter().map(|&i| scores[i]).fold(f64::MAX, f64::min);
+                let max_pruned = pruned.iter().map(|&i| scores[i]).fold(f64::MIN, f64::max);
+                assert!(min_kept >= max_pruned);
+            }
+        });
+    }
+
+    #[test]
+    fn mlp_criteria_shapes_and_monotonicity() {
+        let energy = vec![1.0, 4.0, 0.25];
+        let active = vec![0.9, 0.5, 0.1];
+        let w2 = Tensor::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 2.0, 3.0, 4.0]);
+        let act = score_mlp(MlpCriterion::ActEnergy, &energy, &active, &w2);
+        assert_eq!(act, energy);
+        let mag = score_mlp(MlpCriterion::Magnitude, &energy, &active, &w2);
+        assert!((mag[0] - 1.0).abs() < 1e-9);
+        assert!((mag[1] - 2.0).abs() < 1e-9);
+        assert!((mag[2] - 5.0).abs() < 1e-9);
+        let comb = score_mlp(MlpCriterion::Combined, &energy, &active, &w2);
+        assert!((comb[2] - 0.25 * 5.0).abs() < 1e-9);
+        let ap = score_mlp(MlpCriterion::ActiveProb, &energy, &active, &w2);
+        assert_eq!(ap, active);
+    }
+
+    #[test]
+    fn logit_energy_identifies_hot_dimension() {
+        // dim 1 carries 10x the q/k magnitude -> highest score.
+        let b = 3;
+        let n = 5;
+        let dh = 4;
+        let mut rng = crate::util::Pcg64::new(2);
+        let mut q = vec![0.0f32; b * n * dh];
+        let mut k = vec![0.0f32; b * n * dh];
+        for i in 0..b * n {
+            for j in 0..dh {
+                let scale = if j == 1 { 10.0 } else { 1.0 };
+                q[i * dh + j] = rng.normal_f32(0.0, scale);
+                k[i * dh + j] = rng.normal_f32(0.0, scale);
+            }
+        }
+        let qs = Tensor::from_vec(&[b, n, dh], q);
+        let ks = Tensor::from_vec(&[b, n, dh], k);
+        let scores = score_attn_logit_energy(&qs, &ks);
+        let best = scores.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(best, 1);
+    }
+}

@@ -1,0 +1,141 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One graph input/output description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// Parsed manifest, indexed by artifact name.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    by_name: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).context("parsing manifest json")?;
+        let arts = root
+            .get("artifacts")
+            .as_arr()
+            .context("manifest missing 'artifacts' array")?;
+        let mut by_name = HashMap::new();
+        for a in arts {
+            let name = a.get("name").as_str().context("artifact missing name")?.to_string();
+            let file = a.get("file").as_str().context("artifact missing file")?.to_string();
+            let mut inputs = Vec::new();
+            for i in a.get("inputs").as_arr().context("artifact missing inputs")? {
+                let shape = i
+                    .get("shape")
+                    .as_arr()
+                    .context("input missing shape")?
+                    .iter()
+                    .map(|v| v.as_usize().context("bad dim"))
+                    .collect::<Result<Vec<_>>>()?;
+                inputs.push(IoSpec {
+                    name: i.get("name").as_str().context("input missing name")?.to_string(),
+                    shape,
+                    dtype: i.get("dtype").as_str().unwrap_or("f32").to_string(),
+                });
+            }
+            let outputs = a
+                .get("outputs")
+                .as_arr()
+                .context("artifact missing outputs")?
+                .iter()
+                .map(|v| v.as_str().map(String::from).context("bad output name"))
+                .collect::<Result<Vec<_>>>()?;
+            if by_name.insert(name.clone(), ArtifactSpec { name: name.clone(), file, inputs, outputs }).is_some() {
+                bail!("duplicate artifact '{name}' in manifest");
+            }
+        }
+        Ok(Self { by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.by_name.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"artifacts": [
+        {"name": "block_a", "file": "block_a.hlo.txt",
+         "inputs": [{"name": "x", "shape": [2, 3], "dtype": "f32"},
+                    {"name": "ids", "shape": [2], "dtype": "i32"}],
+         "outputs": ["y"]}
+    ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("block_a").unwrap();
+        assert_eq!(a.file, "block_a.hlo.txt");
+        assert_eq!(a.inputs[0], IoSpec { name: "x".into(), shape: vec![2, 3], dtype: "f32".into() });
+        assert_eq!(a.inputs[1].dtype, "i32");
+        assert_eq!(a.outputs, vec!["y"]);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+        assert!(Manifest::parse(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let dup = r#"{"artifacts": [
+            {"name": "a", "file": "f", "inputs": [], "outputs": []},
+            {"name": "a", "file": "g", "inputs": [], "outputs": []}]}"#;
+        assert!(Manifest::parse(dup).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(m.len() > 100, "expected full artifact set, got {}", m.len());
+            assert!(m.get("train_vit_t").is_some());
+        }
+    }
+}

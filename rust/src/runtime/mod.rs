@@ -1,0 +1,191 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! Manifest-driven: `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) records every artifact's input names/shapes and
+//! output names; the [`Runtime`] validates tensors against that spec,
+//! compiles executables lazily, and caches them for the life of the process.
+//! Python is never touched here — this *is* the request path.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+
+/// Locate the artifacts directory: `CORP_ARTIFACTS` env var or
+/// `<repo>/artifacts` relative to the crate root.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("CORP_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A loaded PJRT runtime bound to one artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative number of executions (telemetry for the serve engine).
+    exec_count: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and parse the manifest in `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    /// Runtime over the default artifacts directory (see `make artifacts`).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(default_artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.manifest.get(name).is_some()
+    }
+
+    pub fn exec_count(&self) -> u64 {
+        *self.exec_count.borrow()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(to_anyhow)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+        let rc = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute `name`. `inputs` must match the manifest spec in order,
+    /// shape, and dtype. Returns the output tuple elements as f32 tensors.
+    pub fn execute(&self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{name}': got {} inputs, manifest expects {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (inp, ispec) in inputs.iter().zip(&spec.inputs) {
+            literals.push(inp.to_literal(ispec, name)?);
+        }
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(to_anyhow)?;
+        *self.exec_count.borrow_mut() += 1;
+        let mut tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        // Graphs are lowered with return_tuple=True.
+        let elems = tuple.decompose_tuple().map_err(to_anyhow)?;
+        let mut out = Vec::with_capacity(elems.len());
+        for lit in elems {
+            out.push(literal_to_tensor(&lit)?);
+        }
+        Ok(out)
+    }
+}
+
+/// An input value for [`Runtime::execute`].
+pub enum Input<'a> {
+    F32(&'a Tensor),
+    I32(&'a [i32], Vec<usize>),
+    Scalar(f32),
+}
+
+impl<'a> Input<'a> {
+    fn to_literal(&self, spec: &IoSpec, artifact: &str) -> Result<xla::Literal> {
+        match self {
+            Input::F32(t) => {
+                if spec.dtype != "f32" {
+                    bail!("{artifact}/{}: expected dtype {}, got f32", spec.name, spec.dtype);
+                }
+                if t.shape() != spec.shape.as_slice() {
+                    bail!(
+                        "{artifact}/{}: shape {:?} != manifest {:?}",
+                        spec.name,
+                        t.shape(),
+                        spec.shape
+                    );
+                }
+                let lit = xla::Literal::vec1(t.data());
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(to_anyhow)
+            }
+            Input::I32(v, shape) => {
+                if spec.dtype != "i32" {
+                    bail!("{artifact}/{}: expected dtype {}, got i32", spec.name, spec.dtype);
+                }
+                if shape != &spec.shape {
+                    bail!(
+                        "{artifact}/{}: shape {:?} != manifest {:?}",
+                        spec.name,
+                        shape,
+                        spec.shape
+                    );
+                }
+                let lit = xla::Literal::vec1(*v);
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(to_anyhow)
+            }
+            Input::Scalar(v) => {
+                if !spec.shape.is_empty() {
+                    bail!("{artifact}/{}: scalar provided for non-scalar input", spec.name);
+                }
+                Ok(xla::Literal::from(*v))
+            }
+        }
+    }
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(to_anyhow)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = lit.to_vec().map_err(to_anyhow)?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}

@@ -1,0 +1,310 @@
+//! Calibration statistics.
+//!
+//! Streaming accumulators for activation means and second moments (the Σ
+//! blocks of Eq. 10), plus the redundancy diagnostics of Table 9 /
+//! Appendix A: effective rank, k95 energy concentration, and activation
+//! sparsity.
+
+use crate::linalg::gemm::syrk_upper_f32;
+use crate::linalg::{sym_eig, Mat};
+
+/// Streaming accumulator of per-channel mean and the full second-moment Gram
+/// E[x xᵀ] over calibration activations. Feed row-major [rows, d] batches;
+/// finalize into mean vector + covariance matrix.
+pub struct MomentAccumulator {
+    pub d: usize,
+    count: usize,
+    sum: Vec<f64>,
+    /// Accumulated raw Gram XᵀX in f32 (hot path), promoted to f64 blocks at
+    /// finalize time. For the channel counts used here (≤ ~1.5k) and batch
+    /// counts (≤ ~1e5 rows) the f32 accumulation error is ~1e-3 relative,
+    /// which the ridge λ dominates; `syrk` keeps this path fast.
+    gram: Vec<f32>,
+}
+
+impl MomentAccumulator {
+    pub fn new(d: usize) -> Self {
+        Self { d, count: 0, sum: vec![0.0; d], gram: vec![0.0; d * d] }
+    }
+
+    /// Add a [rows, d] batch of activations.
+    pub fn add_batch(&mut self, x: &[f32], rows: usize) {
+        assert_eq!(x.len(), rows * self.d);
+        for r in 0..rows {
+            let row = &x[r * self.d..(r + 1) * self.d];
+            for (s, &v) in self.sum.iter_mut().zip(row) {
+                *s += v as f64;
+            }
+        }
+        syrk_upper_f32(x, &mut self.gram, rows, self.d);
+        self.count += rows;
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Per-channel mean μ.
+    pub fn mean(&self) -> Vec<f64> {
+        assert!(self.count > 0);
+        self.sum.iter().map(|s| s / self.count as f64).collect()
+    }
+
+    /// Per-channel second moment E[x_i²] (the activation-energy ranking
+    /// signal of Alg. 2).
+    pub fn energy(&self) -> Vec<f64> {
+        assert!(self.count > 0);
+        (0..self.d).map(|i| self.gram[i * self.d + i] as f64 / self.count as f64).collect()
+    }
+
+    /// Full covariance Σ = E[xxᵀ] − μμᵀ as an f64 matrix.
+    pub fn covariance(&self) -> Mat {
+        assert!(self.count > 0);
+        let n = self.count as f64;
+        let mu = self.mean();
+        let d = self.d;
+        let mut out = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                out.a[i * d + j] = self.gram[i * d + j] as f64 / n - mu[i] * mu[j];
+            }
+        }
+        out.symmetrize();
+        out
+    }
+
+    /// Raw (uncentered) second-moment matrix E[xxᵀ].
+    pub fn second_moment(&self) -> Mat {
+        assert!(self.count > 0);
+        let n = self.count as f64;
+        let d = self.d;
+        let mut out = Mat::zeros(d, d);
+        for i in 0..d * d {
+            out.a[i] = self.gram[i] as f64 / n;
+        }
+        out.symmetrize();
+        out
+    }
+}
+
+/// Streaming count of |x| > eps per channel — the "active probability"
+/// ranking signal (App. E) and the activation-sparsity column of Table 9.
+pub struct ActiveCounter {
+    pub d: usize,
+    count: usize,
+    active: Vec<u64>,
+    eps: f32,
+}
+
+impl ActiveCounter {
+    pub fn new(d: usize, eps: f32) -> Self {
+        Self { d, count: 0, active: vec![0; d], eps }
+    }
+
+    pub fn add_batch(&mut self, x: &[f32], rows: usize) {
+        assert_eq!(x.len(), rows * self.d);
+        for r in 0..rows {
+            let row = &x[r * self.d..(r + 1) * self.d];
+            for (c, &v) in self.active.iter_mut().zip(row) {
+                if v.abs() > self.eps {
+                    *c += 1;
+                }
+            }
+        }
+        self.count += rows;
+    }
+
+    /// Per-channel P(|x| > eps).
+    pub fn active_prob(&self) -> Vec<f64> {
+        assert!(self.count > 0);
+        self.active.iter().map(|&a| a as f64 / self.count as f64).collect()
+    }
+
+    /// Mean fraction of *inactive* entries — the layer's activation sparsity.
+    pub fn sparsity(&self) -> f64 {
+        let p = self.active_prob();
+        1.0 - p.iter().sum::<f64>() / p.len() as f64
+    }
+}
+
+/// Redundancy diagnostics over an activation covariance (Table 9).
+#[derive(Debug, Clone)]
+pub struct Redundancy {
+    /// Effective rank: exp(entropy of the normalized eigenvalue spectrum).
+    pub effective_rank: f64,
+    /// Channels needed to explain 95% of activation variance.
+    pub k95: usize,
+    /// effective_rank / dim.
+    pub rank_ratio: f64,
+    /// k95 / dim.
+    pub k95_ratio: f64,
+}
+
+/// Compute redundancy stats from a covariance matrix.
+pub fn redundancy(cov: &Mat) -> Redundancy {
+    let (vals, _) = sym_eig(cov);
+    let pos: Vec<f64> = vals.iter().map(|&v| v.max(0.0)).collect();
+    let total: f64 = pos.iter().sum();
+    let d = cov.r;
+    if total <= 0.0 {
+        return Redundancy { effective_rank: 0.0, k95: 0, rank_ratio: 0.0, k95_ratio: 0.0 };
+    }
+    // Effective rank = exp(−Σ p ln p) over p = λ/Σλ.
+    let mut ent = 0.0;
+    for &v in &pos {
+        let p = v / total;
+        if p > 1e-300 {
+            ent -= p * p.ln();
+        }
+    }
+    let eff = ent.exp();
+    // k95 over the sorted (descending) spectrum.
+    let mut cum = 0.0;
+    let mut k95 = d;
+    for (i, &v) in pos.iter().enumerate() {
+        cum += v;
+        if cum >= 0.95 * total {
+            k95 = i + 1;
+            break;
+        }
+    }
+    Redundancy {
+        effective_rank: eff,
+        k95,
+        rank_ratio: eff / d as f64,
+        k95_ratio: k95 as f64 / d as f64,
+    }
+}
+
+/// Extract the Σ_SS / Σ_PS / Σ_PP blocks (Eq. 10) of a covariance matrix for
+/// a kept/pruned index partition.
+pub struct CovBlocks {
+    pub ss: Mat,
+    pub ps: Mat,
+    pub pp: Mat,
+    pub mu_s: Vec<f64>,
+    pub mu_p: Vec<f64>,
+}
+
+pub fn cov_blocks(cov: &Mat, mean: &[f64], kept: &[usize], pruned: &[usize]) -> CovBlocks {
+    CovBlocks {
+        ss: cov.submatrix(kept, kept),
+        ps: cov.submatrix(pruned, kept),
+        pp: cov.submatrix(pruned, pruned),
+        mu_s: kept.iter().map(|&i| mean[i]).collect(),
+        mu_p: pruned.iter().map(|&i| mean[i]).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, run_prop};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn moments_match_direct_computation() {
+        run_prop("stats.moments = direct", 10, |rng| {
+            let d = gen::dim(rng, 1, 6);
+            let rows = 50;
+            let x = gen::matrix(rng, rows, d, 1.0);
+            let mut acc = MomentAccumulator::new(d);
+            // Feed in two chunks to exercise streaming.
+            acc.add_batch(&x[..(rows / 2) * d], rows / 2);
+            acc.add_batch(&x[(rows / 2) * d..], rows - rows / 2);
+            let mean = acc.mean();
+            for j in 0..d {
+                let direct: f64 = (0..rows).map(|i| x[i * d + j] as f64).sum::<f64>() / rows as f64;
+                assert!((mean[j] - direct).abs() < 1e-4);
+            }
+            let cov = acc.covariance();
+            for a in 0..d {
+                for b in 0..d {
+                    let direct: f64 = (0..rows)
+                        .map(|i| (x[i * d + a] as f64 - mean[a]) * (x[i * d + b] as f64 - mean[b]))
+                        .sum::<f64>()
+                        / rows as f64;
+                    assert!((cov.at(a, b) - direct).abs() < 1e-3, "({a},{b})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn energy_is_second_moment() {
+        let mut acc = MomentAccumulator::new(2);
+        acc.add_batch(&[1.0, 2.0, 3.0, 4.0], 2);
+        let e = acc.energy();
+        assert!((e[0] - 5.0).abs() < 1e-6); // (1+9)/2
+        assert!((e[1] - 10.0).abs() < 1e-6); // (4+16)/2
+    }
+
+    #[test]
+    fn active_counter() {
+        let mut c = ActiveCounter::new(2, 0.5);
+        c.add_batch(&[1.0, 0.1, 0.0, 2.0, 0.9, 0.2], 3);
+        let p = c.active_prob();
+        assert!((p[0] - 2.0 / 3.0).abs() < 1e-9);
+        assert!((p[1] - 1.0 / 3.0).abs() < 1e-9);
+        assert!((c.sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn redundancy_isotropic_full_rank() {
+        let cov = Mat::eye(10);
+        let r = redundancy(&cov);
+        assert!((r.effective_rank - 10.0).abs() < 1e-6);
+        assert_eq!(r.k95, 10);
+    }
+
+    #[test]
+    fn redundancy_rank_one() {
+        let mut cov = Mat::zeros(8, 8);
+        cov.set(0, 0, 5.0);
+        let r = redundancy(&cov);
+        assert!((r.effective_rank - 1.0).abs() < 1e-9);
+        assert_eq!(r.k95, 1);
+        assert!(r.rank_ratio < 0.2);
+    }
+
+    #[test]
+    fn low_rank_data_has_low_effective_rank() {
+        // Generate d=12 activations that live in a 3-dim subspace + noise.
+        let mut rng = Pcg64::new(3);
+        let d = 12;
+        let rows = 400;
+        let basis = gen::matrix(&mut rng, 3, d, 1.0);
+        let mut x = vec![0.0f32; rows * d];
+        for r in 0..rows {
+            let z: Vec<f32> = (0..3).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            for j in 0..d {
+                let mut v = 0.0;
+                for k in 0..3 {
+                    v += z[k] * basis[k * d + j];
+                }
+                x[r * d + j] = v + rng.normal_f32(0.0, 0.01);
+            }
+        }
+        let mut acc = MomentAccumulator::new(d);
+        acc.add_batch(&x, rows);
+        let r = redundancy(&acc.covariance());
+        assert!(r.effective_rank < 4.0, "eff rank {}", r.effective_rank);
+        assert!(r.k95 <= 4);
+    }
+
+    #[test]
+    fn cov_blocks_partition() {
+        let mut acc = MomentAccumulator::new(4);
+        let mut rng = Pcg64::new(9);
+        let x = gen::matrix(&mut rng, 100, 4, 1.0);
+        acc.add_batch(&x, 100);
+        let cov = acc.covariance();
+        let mean = acc.mean();
+        let blocks = cov_blocks(&cov, &mean, &[0, 2], &[1, 3]);
+        assert_eq!((blocks.ss.r, blocks.ss.c), (2, 2));
+        assert_eq!((blocks.ps.r, blocks.ps.c), (2, 2));
+        assert!((blocks.ss.at(0, 1) - cov.at(0, 2)).abs() < 1e-12);
+        assert!((blocks.ps.at(1, 0) - cov.at(3, 0)).abs() < 1e-12);
+        assert!((blocks.mu_p[0] - mean[1]).abs() < 1e-12);
+    }
+}

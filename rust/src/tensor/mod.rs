@@ -1,0 +1,261 @@
+//! Dense row-major f32 tensor.
+//!
+//! Deliberately small: the coordinator only needs shapes, element access,
+//! column/channel gathering (for pruning index sets), reshapes and simple
+//! reductions. Heavy math lives in `linalg` on plain `&[f32]` views.
+
+use std::fmt;
+
+/// Dense row-major tensor of f32 values.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(len={})", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape {shape:?} vs len {}", data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows when viewed as a 2-D [rows, cols] matrix (requires ndim>=1).
+    pub fn rows(&self) -> usize {
+        self.len() / self.cols()
+    }
+
+    /// Trailing dimension.
+    pub fn cols(&self) -> usize {
+        *self.shape.last().expect("tensor has no dims")
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Flatten all leading dims: [a, b, ..., c] -> [a*b*..., c].
+    pub fn flatten_2d(self) -> Self {
+        let c = self.cols();
+        let r = self.len() / c;
+        self.reshape(&[r, c])
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.cols() + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    /// Gather a subset of trailing-dim columns: out[..., k] = self[..., idx[k]].
+    pub fn gather_cols(&self, idx: &[usize]) -> Tensor {
+        let c = self.cols();
+        let r = self.len() / c;
+        let mut out = Vec::with_capacity(r * idx.len());
+        for i in 0..r {
+            let row = &self.data[i * c..(i + 1) * c];
+            for &j in idx {
+                out.push(row[j]);
+            }
+        }
+        let mut shape = self.shape.clone();
+        *shape.last_mut().unwrap() = idx.len();
+        Tensor::from_vec(&shape, out)
+    }
+
+    /// Gather rows of a 2-D matrix: out[k, :] = self[idx[k], :].
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let c = self.cols();
+        let mut out = Vec::with_capacity(idx.len() * c);
+        for &i in idx {
+            out.extend_from_slice(self.row(i));
+        }
+        Tensor::from_vec(&[idx.len(), c], out)
+    }
+
+    /// Transpose a 2-D matrix.
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = vec![0.0; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::from_vec(&[c, r], out)
+    }
+
+    /// Concatenate along the trailing dimension.
+    pub fn concat_cols(a: &Tensor, b: &Tensor) -> Tensor {
+        let (ca, cb) = (a.cols(), b.cols());
+        let r = a.len() / ca;
+        assert_eq!(r, b.len() / cb, "row mismatch");
+        let mut out = Vec::with_capacity(r * (ca + cb));
+        for i in 0..r {
+            out.extend_from_slice(&a.data[i * ca..(i + 1) * ca]);
+            out.extend_from_slice(&b.data[i * cb..(i + 1) * cb]);
+        }
+        let mut shape = a.shape.clone();
+        *shape.last_mut().unwrap() = ca + cb;
+        Tensor::from_vec(&shape, out)
+    }
+
+    /// Slice of the leading dimension: rows [start, end).
+    pub fn slice_rows(&self, start: usize, end: usize) -> Tensor {
+        let outer = self.shape[0];
+        assert!(start <= end && end <= outer);
+        let inner: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = end - start;
+        Tensor::from_vec(&shape, self.data[start * inner..end * inner].to_vec())
+    }
+
+    /// Elementwise squared L2 distance to another tensor (same shape).
+    pub fn sq_dist(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute difference to another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data.iter().zip(&other.data).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_shape() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at2(1, 2), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn gather_cols_3d() {
+        // [2, 2, 3] tensor; gather trailing cols [2, 0]
+        let t = Tensor::from_vec(&[2, 2, 3], (0..12).map(|v| v as f32).collect());
+        let g = t.gather_cols(&[2, 0]);
+        assert_eq!(g.shape(), &[2, 2, 2]);
+        assert_eq!(g.data(), &[2., 0., 5., 3., 8., 6., 11., 9.]);
+    }
+
+    #[test]
+    fn gather_rows_2d() {
+        let t = Tensor::from_vec(&[3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.data(), &[20., 21., 0., 1.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose2().transpose2();
+        assert_eq!(t, tt);
+    }
+
+    #[test]
+    fn concat_then_gather_recovers() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 1], vec![9., 8.]);
+        let c = Tensor::concat_cols(&a, &b);
+        assert_eq!(c.shape(), &[2, 3]);
+        assert_eq!(c.gather_cols(&[0, 1]).data(), a.data());
+        assert_eq!(c.gather_cols(&[2]).data(), b.data());
+    }
+
+    #[test]
+    fn slice_rows_leading() {
+        let t = Tensor::from_vec(&[4, 2], (0..8).map(|v| v as f32).collect());
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn distances() {
+        let a = Tensor::from_vec(&[2], vec![0., 3.]);
+        let b = Tensor::from_vec(&[2], vec![4., 3.]);
+        assert!((a.sq_dist(&b) - 16.0).abs() < 1e-12);
+        assert!((a.max_abs_diff(&b) - 4.0).abs() < 1e-7);
+        assert!((b.frob_norm() - 5.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn flatten_2d_merges_leading() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.flatten_2d().shape(), &[6, 4]);
+    }
+}

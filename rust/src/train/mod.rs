@@ -1,0 +1,218 @@
+//! Training loop — drives the AOT `train_*` step graph from Rust.
+//!
+//! This is how the "pretrained" checkpoints of the paper's protocol are
+//! produced in a world with no downloads: deterministic init + a few hundred
+//! SGD steps on the synthetic corpus, executed entirely through PJRT. The
+//! loss curve is logged (EXPERIMENTS.md §E2E) and checkpoints are cached
+//! under `artifacts/ckpt/` so repeated runs never retrain.
+
+use anyhow::{Context, Result};
+
+use crate::data::{Split, TextGen, VisionGen};
+use crate::info;
+use crate::model::{ModelConfig, ModelKind, WeightStore};
+use crate::runtime::{Input, Runtime};
+use crate::tensor::Tensor;
+use crate::util::Stopwatch;
+
+/// Steps per train-chunk artifact call (must match aot.py TRAIN_CHUNK).
+pub const CHUNK: usize = 20;
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub lr: f32,
+    /// Linear warmup steps.
+    pub warmup: usize,
+    /// Cosine decay to this fraction of lr.
+    pub final_lr_frac: f32,
+    pub seed: u64,
+    /// Log every k steps.
+    pub log_every: usize,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        Self { steps: 300, lr: 1e-3, warmup: 30, final_lr_frac: 0.1, seed: 17, log_every: 50 }
+    }
+}
+
+/// A recorded training run.
+pub struct TrainLog {
+    pub losses: Vec<f32>,
+    pub wall_secs: f64,
+}
+
+fn lr_at(opts: &TrainOpts, step: usize) -> f32 {
+    if step < opts.warmup {
+        return opts.lr * (step + 1) as f32 / opts.warmup as f32;
+    }
+    let t = (step - opts.warmup) as f32 / (opts.steps - opts.warmup).max(1) as f32;
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+    opts.lr * (opts.final_lr_frac + (1.0 - opts.final_lr_frac) * cos)
+}
+
+/// Train `cfg` from `init` via the AOT train-step artifact; returns the
+/// trained weights and the loss curve.
+pub fn train(
+    rt: &Runtime,
+    cfg: &'static ModelConfig,
+    mut weights: WeightStore,
+    opts: &TrainOpts,
+) -> Result<(WeightStore, TrainLog)> {
+    let art = cfg.train_artifact();
+    let spec = cfg.param_spec();
+    let batch = cfg.eval_batch();
+    // Adam state.
+    let zeros = |ws: &WeightStore| -> Vec<Tensor> {
+        spec.iter().map(|(n, _)| Tensor::zeros(ws.expect(n).unwrap().shape())).collect()
+    };
+    let mut m_state: Vec<Tensor> = zeros(&weights);
+    let mut v_state: Vec<Tensor> = zeros(&weights);
+    let vision = VisionGen::new(crate::data::DATA_SEED);
+    let text = TextGen::new(crate::data::DATA_SEED);
+    let sw = Stopwatch::start();
+    let mut losses = Vec::with_capacity(opts.steps);
+
+    // Chunked loop: CHUNK steps per PJRT call (params/optimizer state stay
+    // on the device side of the call; see aot.py TRAIN_CHUNK and §Perf L3-1).
+    let chunks = opts.steps.div_ceil(CHUNK);
+    for chunk in 0..chunks {
+        let step0 = chunk * CHUNK;
+        // Per-step data for the whole chunk, stacked on a leading K axis.
+        let mut tok_slab: Vec<f32> = Vec::new();
+        let mut id_slab: Vec<i32> = Vec::new();
+        let mut label_slab: Vec<i32> = Vec::new();
+        let mut lrs: Vec<f32> = Vec::with_capacity(CHUNK);
+        for i in 0..CHUNK {
+            let step = step0 + i;
+            match cfg.kind {
+                ModelKind::Vit => {
+                    let (t, l) = vision.batch(Split::Train, step as u64, batch);
+                    tok_slab.extend_from_slice(t.data());
+                    label_slab.extend_from_slice(&l);
+                }
+                ModelKind::Gpt => {
+                    let (ids, l) = text.batch(Split::Train, step as u64, batch, cfg.n_ctx);
+                    id_slab.extend_from_slice(&ids);
+                    label_slab.extend_from_slice(&l);
+                }
+            }
+            lrs.push(lr_at(opts, step.min(opts.steps - 1)));
+        }
+        let mut inputs: Vec<Input> = Vec::with_capacity(4 + 3 * spec.len());
+        let tok_tensor;
+        match cfg.kind {
+            ModelKind::Vit => {
+                tok_tensor =
+                    Tensor::from_vec(&[CHUNK, batch, cfg.patches, cfg.patch_dim], tok_slab);
+                inputs.push(Input::F32(&tok_tensor));
+                inputs.push(Input::I32(&label_slab, vec![CHUNK, batch]));
+            }
+            ModelKind::Gpt => {
+                inputs.push(Input::I32(&id_slab, vec![CHUNK, batch, cfg.n_ctx]));
+                inputs.push(Input::I32(&label_slab, vec![CHUNK, batch, cfg.n_ctx]));
+            }
+        }
+        let lrs_tensor = Tensor::from_vec(&[CHUNK], lrs);
+        inputs.push(Input::F32(&lrs_tensor));
+        inputs.push(Input::Scalar((step0 + 1) as f32)); // Adam t at chunk start
+        for (n, _) in &spec {
+            inputs.push(Input::F32(weights.expect(n)?));
+        }
+        for t in m_state.iter().chain(&v_state) {
+            inputs.push(Input::F32(t));
+        }
+        let mut out = rt.execute(&art, &inputs).context("train chunk")?;
+        let chunk_losses = out.pop().context("train chunk returned nothing")?;
+        // Outputs: params..., adam_m..., adam_v... (losses already popped).
+        let n = spec.len();
+        let new_v = out.split_off(2 * n);
+        let new_m = out.split_off(n);
+        for ((name, _), t) in spec.iter().zip(out) {
+            weights.insert(name.clone(), t);
+        }
+        m_state = new_m;
+        v_state = new_v;
+        losses.extend_from_slice(chunk_losses.data());
+        let last = *losses.last().unwrap();
+        if (step0 / CHUNK) % (opts.log_every.div_ceil(CHUNK)).max(1) == 0 || chunk + 1 == chunks {
+            info!(
+                "train {} step {}/{} loss {last:.4} lr {:.4}",
+                cfg.name,
+                (step0 + CHUNK).min(chunks * CHUNK),
+                chunks * CHUNK,
+                lr_at(opts, step0)
+            );
+        }
+        if !last.is_finite() {
+            anyhow::bail!("training diverged near step {step0} (loss={last})");
+        }
+    }
+    losses.truncate(chunks * CHUNK);
+    Ok((weights, TrainLog { losses, wall_secs: sw.secs() }))
+}
+
+/// Checkpoint path for a (config, steps, seed) triple.
+pub fn ckpt_path(cfg: &ModelConfig, opts: &TrainOpts) -> std::path::PathBuf {
+    crate::runtime::default_artifacts_dir()
+        .join("ckpt")
+        .join(format!("{}_s{}_lr{}_seed{}.corpw", cfg.name, opts.steps, opts.lr, opts.seed))
+}
+
+/// Load the cached checkpoint or train one (and cache it). Also writes the
+/// loss curve CSV to results/ the first time.
+pub fn ensure_checkpoint(
+    rt: &Runtime,
+    cfg: &'static ModelConfig,
+    opts: &TrainOpts,
+) -> Result<WeightStore> {
+    let path = ckpt_path(cfg, opts);
+    if path.exists() {
+        let w = WeightStore::load(&path)?;
+        w.validate_dense(cfg)?;
+        return Ok(w);
+    }
+    info!("no checkpoint for {}; training {} steps", cfg.name, opts.steps);
+    let init = WeightStore::init(cfg, opts.seed);
+    let (trained, log) = train(rt, cfg, init, opts)?;
+    trained.save(&path)?;
+    // Persist the loss curve for EXPERIMENTS.md.
+    let mut csv = crate::util::bench::CsvWriter::new(&format!("losscurve_{}", cfg.name), "step,loss");
+    for (i, l) in log.losses.iter().enumerate() {
+        csv.row(&[i.to_string(), format!("{l}")]);
+    }
+    let _ = csv.flush();
+    info!("trained {} in {:.1}s; final loss {:.4}", cfg.name, log.wall_secs, log.losses.last().unwrap());
+    Ok(trained)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let opts = TrainOpts { steps: 100, lr: 1.0, warmup: 10, final_lr_frac: 0.1, ..Default::default() };
+        assert!(lr_at(&opts, 0) < 0.2); // warmup start
+        assert!((lr_at(&opts, 9) - 1.0).abs() < 1e-6); // warmup end
+        assert!(lr_at(&opts, 99) < 0.2); // decayed
+        // Monotone decay after warmup.
+        let mut prev = f32::MAX;
+        for s in 10..100 {
+            let l = lr_at(&opts, s);
+            assert!(l <= prev + 1e-6);
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn ckpt_path_encodes_hparams() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let a = ckpt_path(cfg, &TrainOpts::default());
+        let b = ckpt_path(cfg, &TrainOpts { steps: 7, ..Default::default() });
+        assert_ne!(a, b);
+        assert!(a.to_str().unwrap().contains("vit_t"));
+    }
+}

@@ -1,0 +1,147 @@
+//! Mini benchmark harness (criterion is not available offline).
+//!
+//! Provides warmup + timed iterations with mean / p50 / p95 statistics, and a
+//! CSV emitter so every paper table/figure bench under `rust/benches/` can
+//! both print paper-shaped rows and persist machine-readable results.
+
+use std::time::Instant;
+
+/// Result of a timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+/// Time `f` with `warmup` unrecorded runs then `iters` recorded runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    stats_from(name, &samples)
+}
+
+/// Compute stats from raw per-iteration samples (used when the caller does
+/// its own timing, e.g. latency-per-request inside the serve engine).
+pub fn stats_from(name: &str, samples: &[f64]) -> BenchStats {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: sorted.len(),
+        mean_s: mean,
+        p50_s: percentile(&sorted, 0.50),
+        p95_s: percentile(&sorted, 0.95),
+        min_s: sorted[0],
+    }
+}
+
+/// Percentile of an ascending-sorted slice (nearest-rank with interpolation).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// CSV writer for bench results: one header + rows, written under `results/`.
+pub struct CsvWriter {
+    path: std::path::PathBuf,
+    lines: Vec<String>,
+}
+
+impl CsvWriter {
+    pub fn new(name: &str, header: &str) -> Self {
+        let dir = std::path::Path::new("results");
+        let _ = std::fs::create_dir_all(dir);
+        Self { path: dir.join(format!("{name}.csv")), lines: vec![header.to_string()] }
+    }
+
+    pub fn row(&mut self, cols: &[String]) {
+        self.lines.push(cols.join(","));
+    }
+
+    pub fn flush(&self) -> std::io::Result<()> {
+        std::fs::write(&self.path, self.lines.join("\n") + "\n")
+    }
+}
+
+/// Benchmark mode read from `CORP_BENCH_MODE`: scales workloads.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BenchMode {
+    /// CI smoke: tiny sizes, single points.
+    Smoke,
+    /// Default: small models, reduced sweeps — minutes, not hours.
+    Fast,
+    /// Full reproduction sweep.
+    Full,
+}
+
+pub fn bench_mode() -> BenchMode {
+    match std::env::var("CORP_BENCH_MODE").as_deref() {
+        Ok("smoke") => BenchMode::Smoke,
+        Ok("full") => BenchMode::Full,
+        _ => BenchMode::Fast,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_iters() {
+        let s = bench("noop", 1, 10, || 1 + 1);
+        assert_eq!(s.iters, 10);
+        assert!(s.mean_s >= 0.0);
+        assert!(s.p50_s <= s.p95_s);
+        assert!(s.min_s <= s.mean_s * 1.0001);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&v, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&v, 1.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&v, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_writer_writes() {
+        let mut w = CsvWriter::new("_test_bench_csv", "a,b");
+        w.row(&["1".into(), "2".into()]);
+        w.flush().unwrap();
+        let content = std::fs::read_to_string("results/_test_bench_csv.csv").unwrap();
+        assert!(content.starts_with("a,b\n1,2"));
+        let _ = std::fs::remove_file("results/_test_bench_csv.csv");
+    }
+
+    #[test]
+    fn throughput_inverse_of_mean() {
+        let s = BenchStats { name: "x".into(), iters: 1, mean_s: 0.5, p50_s: 0.5, p95_s: 0.5, min_s: 0.5 };
+        assert!((s.throughput(16.0) - 32.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,193 @@
+//! Tiny declarative CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments, and
+//! generated `--help` text. Used by `src/main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value} ({why})")]
+    Invalid { key: String, value: String, why: String },
+}
+
+/// Option specification used for validation + help.
+pub struct Spec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<Spec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
+        self.specs.push(Spec { name, takes_value: true, help, default: Some(default) });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, takes_value: false, help, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let v = if spec.takes_value { " <value>" } else { "" };
+            let d = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{v}\t{}{d}\n", spec.name, spec.help));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (without the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                out.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    out.opts.insert(key, v);
+                } else {
+                    out.flags.push(key);
+                }
+            } else {
+                out.pos.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> String {
+        self.get(key).unwrap_or("").to_string()
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize, CliError> {
+        let v = self.str(key);
+        v.parse().map_err(|e| CliError::Invalid { key: key.into(), value: v, why: format!("{e}") })
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64, CliError> {
+        let v = self.str(key);
+        v.parse().map_err(|e| CliError::Invalid { key: key.into(), value: v, why: format!("{e}") })
+    }
+
+    pub fn f32(&self, key: &str) -> Result<f32, CliError> {
+        Ok(self.f64(key)? as f32)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("prune", "run CORP")
+            .opt("model", "model size", "base")
+            .opt("sparsity", "target sparsity", "0.5")
+            .flag("no-comp", "disable compensation")
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(a.str("model"), "base");
+        assert_eq!(a.f64("sparsity").unwrap(), 0.5);
+        assert!(!a.has_flag("no-comp"));
+    }
+
+    #[test]
+    fn parse_separate_and_inline_values() {
+        let a = cmd().parse(&sv(&["--model", "huge", "--sparsity=0.7", "--no-comp", "pos1"])).unwrap();
+        assert_eq!(a.str("model"), "huge");
+        assert_eq!(a.f64("sparsity").unwrap(), 0.7);
+        assert!(a.has_flag("no-comp"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(cmd().parse(&sv(&["--bogus"])), Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(cmd().parse(&sv(&["--model"])), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn invalid_number_rejected() {
+        let a = cmd().parse(&sv(&["--sparsity", "abc"])).unwrap();
+        assert!(matches!(a.f64("sparsity"), Err(CliError::Invalid { .. })));
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--model"));
+        assert!(u.contains("--no-comp"));
+    }
+}

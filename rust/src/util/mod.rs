@@ -1,0 +1,18 @@
+//! Small self-contained substrates: RNG, JSON, logging, timing, CLI parsing,
+//! a mini property-testing harness, and a bench harness.
+//!
+//! The build environment ships only the `xla` crate's dependency closure, so
+//! everything that would normally come from serde_json / clap / criterion /
+//! proptest / rand is implemented here (and unit-tested like any other
+//! module).
+
+pub mod rng;
+pub mod json;
+pub mod log;
+pub mod timer;
+pub mod cli;
+pub mod prop;
+pub mod bench;
+
+pub use rng::Pcg64;
+pub use timer::Stopwatch;

@@ -1,0 +1,104 @@
+//! Mini property-testing harness (proptest is not available offline).
+//!
+//! `run_prop(name, cases, |rng| ...)` executes a closure over `cases`
+//! independently-seeded random inputs; on failure it reports the failing
+//! case's seed so the case can be replayed deterministically with
+//! `CORP_PROP_SEED`.
+
+use crate::util::rng::Pcg64;
+
+/// Number of cases, overridable with `CORP_PROP_CASES`.
+pub fn default_cases(fallback: usize) -> usize {
+    std::env::var("CORP_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(fallback)
+}
+
+/// Run a property over `cases` random seeds. The closure gets a fresh RNG per
+/// case and should panic (assert) on violation.
+pub fn run_prop(name: &str, cases: usize, mut f: impl FnMut(&mut Pcg64)) {
+    // Replay mode: run exactly one seed.
+    if let Ok(seed) = std::env::var("CORP_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("CORP_PROP_SEED must be u64");
+        let mut rng = Pcg64::new(seed);
+        f(&mut rng);
+        return;
+    }
+    // Deterministic per-property base seed derived from the name.
+    let base: u64 = name.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    for case in 0..cases {
+        let seed = base.wrapping_add((case as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let mut rng = Pcg64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case}; replay with CORP_PROP_SEED={seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Helpers for generating structured random inputs.
+pub mod gen {
+    use crate::util::rng::Pcg64;
+
+    /// Random dimension in [lo, hi].
+    pub fn dim(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// Random matrix (row-major) with entries N(0, scale).
+    pub fn matrix(rng: &mut Pcg64, r: usize, c: usize, scale: f32) -> Vec<f32> {
+        (0..r * c).map(|_| rng.normal_f32(0.0, scale)).collect()
+    }
+
+    /// Random symmetric positive-definite matrix A = GᵀG + εI.
+    pub fn spd(rng: &mut Pcg64, n: usize, eps: f32) -> Vec<f32> {
+        let g = matrix(rng, n, n, 1.0);
+        let mut a = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += g[k * n + i] * g[k * n + j];
+                }
+                a[i * n + j] = s / n as f32 + if i == j { eps } else { 0.0 };
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn props_run_all_cases() {
+        let mut count = 0;
+        run_prop("counting", 17, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        run_prop("determinism", 5, |rng| first.push(rng.next_u64()));
+        let mut second: Vec<u64> = Vec::new();
+        run_prop("determinism", 5, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn spd_is_symmetric_positive() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(1);
+        let n = 8;
+        let a = gen::spd(&mut rng, n, 0.1);
+        for i in 0..n {
+            for j in 0..n {
+                assert!((a[i * n + j] - a[j * n + i]).abs() < 1e-6);
+            }
+            assert!(a[i * n + i] > 0.0);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Wall-clock timing helpers: a stopwatch and a named-section accumulator used
+//! for the Table-6 runtime breakdown (calibration / ranking / compensation).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn restart(&mut self) -> f64 {
+        let s = self.secs();
+        self.0 = Instant::now();
+        s
+    }
+}
+
+/// Accumulates wall time by section name. The CORP pipeline charges every
+/// phase here so the Table 6 analogue ("calibration dominates") is measured,
+/// not asserted.
+#[derive(Default, Debug, Clone)]
+pub struct Sections {
+    totals: BTreeMap<String, f64>,
+}
+
+impl Sections {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and charge it to `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        *self.totals.entry(name.to_string()).or_insert(0.0) += secs;
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.totals.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.totals.values().sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.totals.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn merge(&mut self, other: &Sections) {
+        for (k, v) in other.iter() {
+            self.add(k, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_accumulate() {
+        let mut s = Sections::new();
+        s.add("cal", 1.0);
+        s.add("cal", 2.0);
+        s.add("rank", 0.5);
+        assert_eq!(s.get("cal"), 3.0);
+        assert_eq!(s.get("rank"), 0.5);
+        assert_eq!(s.get("absent"), 0.0);
+        assert!((s.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_charges_section() {
+        let mut s = Sections::new();
+        let v = s.time("work", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(s.get("work") >= 0.004);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Sections::new();
+        a.add("x", 1.0);
+        let mut b = Sections::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 3.0);
+        assert_eq!(a.get("y"), 3.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Cross-module property tests of the paper's mathematical identities,
+//! composing stats → rank → compensate exactly as the pipeline does.
+
+use corp::linalg::Mat;
+use corp::rank::partition;
+use corp::stats::{cov_blocks, MomentAccumulator};
+use corp::tensor::Tensor;
+use corp::util::prop::{gen, run_prop};
+use corp::util::Pcg64;
+
+/// Generate correlated activations: x = zB + mean + noise (low-rank + bias).
+fn correlated_acts(rng: &mut Pcg64, rows: usize, o: usize, rank: usize) -> Vec<f32> {
+    let basis = gen::matrix(rng, rank, o, 1.0);
+    let mean: Vec<f32> = (0..o).map(|_| rng.normal_f32(0.4, 0.5)).collect();
+    let mut x = vec![0.0f32; rows * o];
+    for r in 0..rows {
+        let z: Vec<f32> = (0..rank).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for c in 0..o {
+            let mut v = mean[c];
+            for k in 0..rank {
+                v += z[k] * basis[k * o + c];
+            }
+            x[r * o + c] = v + rng.normal_f32(0.0, 0.05);
+        }
+    }
+    x
+}
+
+/// Eq. 12 consequence: compensated error ≤ uncompensated error, measured
+/// empirically through the full stats → compensate path; on low-rank +
+/// biased activations the gain must be substantial.
+#[test]
+fn compensation_never_hurts_on_calibration() {
+    run_prop("e2e.comp <= naive error", 8, |rng| {
+        let o = 8 + rng.below(8);
+        let d = 2 + rng.below(4);
+        let rows = 400;
+        let x = correlated_acts(rng, rows, o, 3);
+        let mut acc = MomentAccumulator::new(o);
+        acc.add_batch(&x, rows);
+        let w2 = Tensor::from_vec(&[o, d], gen::matrix(rng, o, d, 1.0));
+        let b2 = Tensor::from_vec(&[d], vec![0.1; d]);
+        let scores = acc.energy();
+        let (kept, pruned) = partition(&scores, 5);
+        let blocks = cov_blocks(&acc.covariance(), &acc.mean(), &kept, &pruned);
+        let comp = corp::compensate::compensate_mlp(&w2, &b2, &kept, &pruned, &blocks, 1e-6);
+
+        let (mut err_comp, mut err_naive) = (0.0f64, 0.0f64);
+        for r in 0..rows {
+            let xr = &x[r * o..(r + 1) * o];
+            for col in 0..d {
+                let full: f64 = (0..o).map(|i| (xr[i] * w2.at2(i, col)) as f64).sum::<f64>()
+                    + b2.data()[col] as f64;
+                let naive: f64 = kept.iter().map(|&i| (xr[i] * w2.at2(i, col)) as f64).sum::<f64>()
+                    + b2.data()[col] as f64;
+                let compd: f64 = (0..kept.len())
+                    .map(|k| (xr[kept[k]] * comp.w2_hat.at2(k, col)) as f64)
+                    .sum::<f64>()
+                    + comp.b2_hat.data()[col] as f64;
+                err_comp += (full - compd) * (full - compd);
+                err_naive += (full - naive) * (full - naive);
+            }
+        }
+        assert!(err_comp <= err_naive * 1.001 + 1e-9, "comp {err_comp} > naive {err_naive}");
+        assert!(err_comp < err_naive * 0.8, "gain too small: {err_comp} vs {err_naive}");
+    });
+}
+
+/// The fold identity (Eq. 20): Ŵ_S x_S + b̂ == W_S x_S + W_P (B x_S + c) + b.
+#[test]
+fn fold_equals_explicit_affine_prediction() {
+    run_prop("e2e.fold identity", 8, |rng| {
+        let o = 6 + rng.below(6);
+        let d = 3;
+        let rows = 200;
+        let x = correlated_acts(rng, rows, o, 2);
+        let mut acc = MomentAccumulator::new(o);
+        acc.add_batch(&x, rows);
+        let (kept, pruned) = partition(&acc.energy(), 5);
+        let blocks = cov_blocks(&acc.covariance(), &acc.mean(), &kept, &pruned);
+        let w2 = Tensor::from_vec(&[o, d], gen::matrix(rng, o, d, 1.0));
+        let b2 = Tensor::from_vec(&[d], vec![0.3; d]);
+        let comp = corp::compensate::compensate_mlp(&w2, &b2, &kept, &pruned, &blocks, 1e-4);
+
+        let b_mat = corp::linalg::ridge::ridge_right(&blocks.ps, &blocks.ss, 1e-4);
+        let xs: Vec<f64> = kept.iter().map(|&i| x[i] as f64).collect();
+        let xp_hat: Vec<f64> = (0..pruned.len())
+            .map(|i| {
+                blocks.mu_p[i]
+                    + (0..kept.len())
+                        .map(|j| b_mat.at(i, j) * (xs[j] - blocks.mu_s[j]))
+                        .sum::<f64>()
+            })
+            .collect();
+        for col in 0..d {
+            let explicit: f64 = kept
+                .iter()
+                .enumerate()
+                .map(|(k, &i)| xs[k] * w2.at2(i, col) as f64)
+                .sum::<f64>()
+                + pruned
+                    .iter()
+                    .enumerate()
+                    .map(|(pi, &i)| xp_hat[pi] * w2.at2(i, col) as f64)
+                    .sum::<f64>()
+                + b2.data()[col] as f64;
+            let folded: f64 = (0..kept.len())
+                .map(|k| xs[k] * comp.w2_hat.at2(k, col) as f64)
+                .sum::<f64>()
+                + comp.b2_hat.data()[col] as f64;
+            assert!((explicit - folded).abs() < 1e-3, "col {col}: {explicit} vs {folded}");
+        }
+    });
+}
+
+/// Attention: compensated logit error ≤ naive logit error on calibration
+/// (Prop. C.2.2 through the full per-head rank → compensate → fold path).
+#[test]
+fn attn_compensation_never_hurts() {
+    run_prop("e2e.attn comp <= naive", 6, |rng| {
+        let (d, dh, n, bsz) = (8, 6, 9, 16);
+        let wq = Mat::from_f32(d, dh, &gen::matrix(rng, d, dh, 0.6));
+        let wk = Mat::from_f32(d, dh, &gen::matrix(rng, d, dh, 0.6));
+        let bq = vec![0.05; dh];
+        let bk = vec![-0.02; dh];
+        let basis = Mat::from_f32(3, d, &gen::matrix(rng, 3, d, 1.0));
+        let mut qdata = vec![0.0f32; bsz * n * dh];
+        let mut kdata = vec![0.0f32; bsz * n * dh];
+        let mut xs = Vec::new();
+        for b in 0..bsz {
+            let mut x = Mat::zeros(n, d);
+            for t in 0..n {
+                let z: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+                for c in 0..d {
+                    let mut v = 0.0;
+                    for (k, zk) in z.iter().enumerate() {
+                        v += zk * basis.at(k, c);
+                    }
+                    x.set(t, c, v + 0.05 * rng.normal());
+                }
+            }
+            for t in 0..n {
+                for j in 0..dh {
+                    let mut qv = bq[j];
+                    let mut kv = bk[j];
+                    for c in 0..d {
+                        qv += x.at(t, c) * wq.at(c, j);
+                        kv += x.at(t, c) * wk.at(c, j);
+                    }
+                    qdata[(b * n + t) * dh + j] = qv as f32;
+                    kdata[(b * n + t) * dh + j] = kv as f32;
+                }
+            }
+            xs.push(x);
+        }
+        let q = Tensor::from_vec(&[bsz, n, dh], qdata);
+        let k = Tensor::from_vec(&[bsz, n, dh], kdata);
+        let scores = corp::rank::score_attn_logit_energy(&q, &k);
+        let (kept, pruned) = partition(&scores, 5);
+        let comp = corp::compensate::compensate_attn_head(
+            &q, &k, &kept, &pruned, &wq, &bq, &wk, &bk, 1e-4, bsz,
+        );
+        let bias_row = |n: usize, b: &[f64]| {
+            let mut m = Mat::zeros(n, b.len());
+            for t in 0..n {
+                for j in 0..b.len() {
+                    m.set(t, j, b[j]);
+                }
+            }
+            m
+        };
+        let all_rows: Vec<usize> = (0..n).collect();
+        let (mut err_comp, mut err_naive) = (0.0, 0.0);
+        for x in &xs {
+            let qf = x.mul(&wq).add(&bias_row(n, &bq));
+            let kf = x.mul(&wk).add(&bias_row(n, &bk));
+            let full = qf.mul(&kf.t());
+            let qs = qf.submatrix(&all_rows, &kept);
+            let ks = kf.submatrix(&all_rows, &kept);
+            let naive = qs.mul(&ks.t());
+            let qc = x.mul(&comp.wq).add(&bias_row(n, &comp.bq));
+            let kc = x.mul(&comp.wk).add(&bias_row(n, &comp.bk));
+            let compd = qc.mul(&kc.t());
+            err_comp += full.sub(&compd).frob().powi(2);
+            err_naive += full.sub(&naive).frob().powi(2);
+        }
+        assert!(err_comp <= err_naive * 1.01 + 1e-9, "comp {err_comp} vs naive {err_naive}");
+    });
+}

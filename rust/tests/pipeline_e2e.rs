@@ -1,0 +1,173 @@
+//! End-to-end pipeline integration tests (need built artifacts; each test
+//! skips gracefully when artifacts/ is absent).
+//!
+//! Uses untrained (deterministic-init) weights where possible so the suite
+//! stays fast; behavioral accuracy claims live in the benches.
+
+use corp::data::{Split, VisionGen};
+use corp::exec::Executor;
+use corp::model::{keep_count, ModelConfig, Scope, Sparsity, WeightStore};
+use corp::prune::{calibrate, prune, Method, PruneOpts};
+use corp::runtime::Runtime;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = corp::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+fn small_opts(sp: Sparsity, method: Method) -> PruneOpts {
+    PruneOpts { sparsity: sp, method, calib_batches: 2, attn_max_samples: 32, ..PruneOpts::default() }
+}
+
+#[test]
+fn corp_pipeline_produces_runnable_pruned_model() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 10);
+    let opts = small_opts(Sparsity::of(Scope::Both, 5), Method::Corp);
+    let stats = calibrate(&exec, &dense, &opts).unwrap();
+    let result = prune(&exec, &dense, &stats, &opts).unwrap();
+    // Shapes: wq/wk reduced, w1/w2 reduced, v/o untouched.
+    let dqk = keep_count(cfg.dh(), 5);
+    let o = keep_count(cfg.mlp, 5);
+    let w = &result.weights;
+    assert_eq!(w.get("blocks.0.attn.wq").unwrap().shape(), &[cfg.d, cfg.heads * dqk]);
+    assert_eq!(w.get("blocks.0.attn.wk").unwrap().shape(), &[cfg.d, cfg.heads * dqk]);
+    assert_eq!(w.get("blocks.0.attn.wv").unwrap().shape(), &[cfg.d, cfg.d]);
+    assert_eq!(w.get("blocks.0.mlp.w1").unwrap().shape(), &[cfg.d, o]);
+    assert_eq!(w.get("blocks.0.mlp.w2").unwrap().shape(), &[o, cfg.d]);
+    // Pruned model runs end-to-end.
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let b = cfg.eval_batch();
+    let (tokens, _) = gen.batch(Split::Eval, 0, b);
+    let logits = exec.forward_vit(w, &tokens, b).unwrap();
+    assert!(logits.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn all_methods_produce_valid_models() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 11);
+    let opts0 = small_opts(Sparsity::of(Scope::Mlp, 5), Method::Corp);
+    let stats = calibrate(&exec, &dense, &opts0).unwrap();
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let b = cfg.eval_batch();
+    let (tokens, _) = gen.batch(Split::Eval, 0, b);
+    for method in [Method::Corp, Method::Naive, Method::Grail, Method::Vbp] {
+        let opts = small_opts(Sparsity::of(Scope::Mlp, 5), method);
+        let result = prune(&exec, &dense, &stats, &opts).unwrap();
+        let logits = exec.forward_vit(&result.weights, &tokens, b).unwrap();
+        assert!(
+            logits.data().iter().all(|v| v.is_finite()),
+            "{} produced non-finite logits",
+            method.label()
+        );
+    }
+}
+
+#[test]
+fn compensated_model_closer_to_dense_than_naive() {
+    // On *calibration-distribution* data, CORP logits must be closer to the
+    // dense model's logits than naive pruning's (representation recovery).
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    // Use a trained checkpoint if available (realistic activations);
+    // deterministic-init otherwise.
+    let opts_t = corp::train::TrainOpts::default();
+    let ck = corp::train::ckpt_path(cfg, &opts_t);
+    let dense = if ck.exists() { WeightStore::load(&ck).unwrap() } else { WeightStore::init(cfg, 12) };
+    let opts = small_opts(Sparsity::of(Scope::Both, 4), Method::Corp);
+    let stats = calibrate(&exec, &dense, &opts).unwrap();
+    let corp_w = prune(&exec, &dense, &stats, &opts).unwrap().weights;
+    let naive_w = prune(&exec, &dense, &stats, &small_opts(Sparsity::of(Scope::Both, 4), Method::Naive))
+        .unwrap()
+        .weights;
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let b = cfg.eval_batch();
+    let mut d_corp = 0.0;
+    let mut d_naive = 0.0;
+    for i in 0..3 {
+        let (tokens, _) = gen.batch(Split::Calib, 100 + i, b);
+        let full = exec.forward_vit(&dense, &tokens, b).unwrap();
+        let c = exec.forward_vit(&corp_w, &tokens, b).unwrap();
+        let n = exec.forward_vit(&naive_w, &tokens, b).unwrap();
+        d_corp += full.sq_dist(&c);
+        d_naive += full.sq_dist(&n);
+    }
+    assert!(
+        d_corp < d_naive,
+        "CORP logit distance {d_corp} not below naive {d_naive}"
+    );
+}
+
+#[test]
+fn sparsity_zero_scopes_are_noops() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 13);
+    // MLP-only pruning must leave attention weights bit-identical.
+    let opts = small_opts(Sparsity::of(Scope::Mlp, 5), Method::Corp);
+    let stats = calibrate(&exec, &dense, &opts).unwrap();
+    let out = prune(&exec, &dense, &stats, &opts).unwrap().weights;
+    for l in 0..cfg.layers {
+        for name in ["attn.wq", "attn.bq", "attn.wk", "attn.bk", "attn.wv", "attn.wo"] {
+            let key = format!("blocks.{l}.{name}");
+            assert_eq!(out.get(&key).unwrap().data(), dense.get(&key).unwrap().data(), "{key}");
+        }
+    }
+}
+
+#[test]
+fn gpt_pipeline_prunes_and_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("gpt_s").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 14);
+    let opts = PruneOpts {
+        sparsity: Sparsity::of(Scope::Both, 3),
+        calib_batches: 2,
+        attn_max_samples: 16,
+        ..PruneOpts::default()
+    };
+    let stats = calibrate(&exec, &dense, &opts).unwrap();
+    let result = prune(&exec, &dense, &stats, &opts).unwrap();
+    let gen = corp::data::TextGen::new(corp::data::DATA_SEED);
+    let ppl = corp::eval::ppl_stitched(&exec, &result.weights, &gen, 2).unwrap();
+    assert!(ppl.is_finite() && ppl > 1.0);
+}
+
+#[test]
+fn serve_measure_reports_sane_numbers() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 15);
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let stats = corp::serve::measure(&exec, &w, &gen, 3, 3).unwrap();
+    assert!(stats.p50_ms > 0.0);
+    assert!(stats.p95_ms >= stats.p50_ms);
+    assert!(stats.throughput_fps > 0.0);
+}
+
+#[test]
+fn dynamic_batcher_serves_all_requests() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 16);
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let opts = corp::serve::BatcherOpts { rate: 500.0, requests: 48, ..Default::default() };
+    let stats = corp::serve::run_batcher(&exec, &w, &gen, &opts).unwrap();
+    assert_eq!(stats.served, 48);
+    assert!(stats.mean_batch >= 1.0);
+    assert!(stats.p50_ms > 0.0);
+}

@@ -1,0 +1,130 @@
+//! Integration: PJRT runtime round-trips the AOT artifacts.
+//!
+//! Requires `make artifacts` to have produced artifacts/ (skipped otherwise).
+
+use corp::data::{Split, VisionGen};
+use corp::exec::Executor;
+use corp::model::{ModelConfig, WeightStore};
+use corp::runtime::Runtime;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = corp::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+#[test]
+fn embed_block_head_shapes() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 1);
+    let b = cfg.eval_batch();
+    let gen = VisionGen::new(0);
+    let (tokens, _) = gen.batch(Split::Eval, 0, b);
+    let x = exec.embed(&w, &tokens, b).unwrap();
+    assert_eq!(x.shape(), &[b, cfg.n_ctx, cfg.d]);
+    let y = exec.block(&w, 0, &x, b).unwrap();
+    assert_eq!(y.shape(), &[b, cfg.n_ctx, cfg.d]);
+    let logits = exec.head(&w, &y, b).unwrap();
+    assert_eq!(logits.shape(), &[b, cfg.classes]);
+    assert!(logits.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn capture_matches_plain_block() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 2);
+    let b = cfg.eval_batch();
+    let gen = VisionGen::new(1);
+    let (tokens, _) = gen.batch(Split::Eval, 0, b);
+    let x = exec.embed(&w, &tokens, b).unwrap();
+    let plain = exec.block(&w, 0, &x, b).unwrap();
+    let (cap_y, cap) = exec.block_capture(&w, 0, &x).unwrap();
+    assert!(plain.max_abs_diff(&cap_y) < 1e-4, "capture must not perturb output");
+    assert_eq!(cap.hidden.shape(), &[b, cfg.n_ctx, cfg.mlp]);
+    assert_eq!(cap.q.shape(), &[b, cfg.heads, cfg.n_ctx, cfg.dh()]);
+    assert_eq!(cap.k.shape(), &[b, cfg.heads, cfg.n_ctx, cfg.dh()]);
+}
+
+#[test]
+fn pruned_block_artifacts_execute() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    // Manually shrink weights to the 50%-joint shape and run the block.
+    let mut w = WeightStore::init(cfg, 3);
+    let dqk = corp::model::keep_count(cfg.dh(), 5);
+    let o = corp::model::keep_count(cfg.mlp, 5);
+    for l in 0..cfg.layers {
+        for (name, shape) in cfg.block_param_spec(dqk, o) {
+            let n: usize = shape.iter().product();
+            let t = corp::tensor::Tensor::from_vec(&shape, vec![0.01; n]);
+            w.insert(format!("blocks.{l}.{name}"), t);
+        }
+        // restore norm gains to 1
+        w.insert(format!("blocks.{l}.ln1.g"), corp::tensor::Tensor::from_vec(&[cfg.d], vec![1.0; cfg.d]));
+        w.insert(format!("blocks.{l}.ln2.g"), corp::tensor::Tensor::from_vec(&[cfg.d], vec![1.0; cfg.d]));
+    }
+    let b = cfg.eval_batch();
+    let gen = VisionGen::new(2);
+    let (tokens, _) = gen.batch(Split::Eval, 0, b);
+    let logits = exec.forward_vit(&w, &tokens, b).unwrap();
+    assert_eq!(logits.shape(), &[b, cfg.classes]);
+    assert!(logits.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn gpt_forward_and_loss() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("gpt_s").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 4);
+    let b = cfg.eval_batch();
+    let gen = corp::data::TextGen::new(3);
+    let (ids, targets) = gen.batch(Split::Eval, 0, b, cfg.n_ctx);
+    let logits = exec.forward_gpt(&w, &ids, b).unwrap();
+    assert_eq!(logits.shape(), &[b, cfg.n_ctx, cfg.vocab]);
+    let loss = exec.eval_loss(&w, None, Some(&ids), &targets).unwrap();
+    // Untrained loss ≈ ln(vocab) = ln 96 ≈ 4.56.
+    assert!((loss - (cfg.vocab as f32).ln()).abs() < 0.5, "loss={loss}");
+}
+
+#[test]
+fn train_step_reduces_loss_vit_t() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let opts = corp::train::TrainOpts {
+        steps: 60,
+        lr: 1e-3,
+        warmup: 10,
+        log_every: 1000,
+        ..Default::default()
+    };
+    let init = WeightStore::init(cfg, 5);
+    let (_, log) = corp::train::train(&rt, cfg, init, &opts).unwrap();
+    let first = log.losses[0];
+    let last = *log.losses.last().unwrap();
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(log.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn stitched_forward_matches_evloss_graph() {
+    // The per-block stitched path and the monolithic loss graph must agree:
+    // cross-check CE computed from stitched logits vs the evloss artifact.
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ModelConfig::by_name("gpt_s").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 6);
+    let gen = corp::data::TextGen::new(9);
+    let direct = corp::eval::ppl_dense(&exec, &w, &gen, 2).unwrap();
+    let stitched = corp::eval::ppl_stitched(&exec, &w, &gen, 2).unwrap();
+    let rel = (direct - stitched).abs() / direct;
+    assert!(rel < 1e-3, "ppl mismatch: {direct} vs {stitched}");
+}
