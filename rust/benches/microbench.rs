@@ -1,45 +1,77 @@
-//! Microbenchmarks of the L3 hot paths (the §Perf targets): GEMM / Gram
-//! accumulation, the Kronecker-ridge assembly+solve, Cholesky, SVD, and the
-//! per-block PJRT execute round-trip overhead.
+//! Microbenchmarks of the L3 hot paths (the §Perf targets): packed parallel
+//! GEMM / Gram accumulation vs the seed scalar kernels, the Kronecker-ridge
+//! assembly+solve, Cholesky, and the per-block execute round-trip overhead.
+//!
+//! The richer harness (JSON output, thread sweep, e2e pipeline timing) lives
+//! in `corp bench linalg --json`; this bench keeps the historical CSV rows.
 
-use corp::linalg::gemm::{matmul_f32, syrk_upper_f32};
+use corp::linalg::gemm::{matmul_f32, reference, syrk_upper_f32};
 use corp::linalg::kron::KronRidge;
 use corp::linalg::{Cholesky, Mat};
 use corp::util::bench::{bench, CsvWriter};
 use corp::util::prop::gen;
+use corp::util::threads::{threads, with_threads};
 use corp::util::Pcg64;
 
 fn main() {
     let mut csv = CsvWriter::new("microbench", "name,mean_s,p50_s,flops,gflops_per_s");
     let mut rng = Pcg64::new(1);
+    println!("worker pool: {} thread(s)", threads());
 
-    // GEMM 256x256x256 (the calibration workhorse shape class).
+    // GEMM 256x256x256 (the calibration workhorse shape class), packed vs
+    // the seed's scalar kernel.
     {
         let n = 256;
         let a = gen::matrix(&mut rng, n, n, 1.0);
         let b = gen::matrix(&mut rng, n, n, 1.0);
         let mut c = vec![0.0f32; n * n];
-        let s = bench("gemm_256", 2, 10, || {
-            c.iter_mut().for_each(|v| *v = 0.0);
-            matmul_f32(&a, &b, &mut c, n, n, n);
-        });
         let flops = 2.0 * (n * n * n) as f64;
-        println!("{:24} {:9.4} ms  {:6.2} GFLOP/s", s.name, s.mean_s * 1e3, flops / s.mean_s / 1e9);
-        csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), format!("{flops}"), format!("{:.3}", flops / s.mean_s / 1e9)]);
+        for (name, seed) in [("gemm_256", false), ("gemm_256_seedref", true)] {
+            let s = bench(name, 2, 10, || {
+                c.iter_mut().for_each(|v| *v = 0.0);
+                if seed {
+                    reference::matmul_f32_seed(&a, &b, &mut c, n, n, n);
+                } else {
+                    matmul_f32(&a, &b, &mut c, n, n, n);
+                }
+            });
+            println!("{:24} {:9.4} ms  {:6.2} GFLOP/s", s.name, s.mean_s * 1e3, flops / s.mean_s / 1e9);
+            csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), format!("{flops}"), format!("{:.3}", flops / s.mean_s / 1e9)]);
+        }
     }
 
-    // Gram accumulation: 2048 rows x 768 channels (vit_b hidden slab).
+    // Gram accumulation: 2048 rows x 768 channels (vit_b hidden slab),
+    // packed vs seed, plus a worker sweep.
     {
         let (rows, n) = (2048, 768);
         let x = gen::matrix(&mut rng, rows, n, 1.0);
         let mut c = vec![0.0f32; n * n];
-        let s = bench("syrk_2048x768", 1, 5, || {
-            c.iter_mut().for_each(|v| *v = 0.0);
-            syrk_upper_f32(&x, &mut c, rows, n);
-        });
         let flops = (rows * n * n) as f64; // ~half of full gemm
-        println!("{:24} {:9.4} ms  {:6.2} GFLOP/s", s.name, s.mean_s * 1e3, flops / s.mean_s / 1e9);
-        csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), format!("{flops}"), format!("{:.3}", flops / s.mean_s / 1e9)]);
+        for (name, seed) in [("syrk_2048x768", false), ("syrk_2048x768_seedref", true)] {
+            let s = bench(name, 1, 5, || {
+                c.iter_mut().for_each(|v| *v = 0.0);
+                if seed {
+                    reference::syrk_upper_f32_seed(&x, &mut c, rows, n);
+                } else {
+                    syrk_upper_f32(&x, &mut c, rows, n);
+                }
+            });
+            println!("{:24} {:9.4} ms  {:6.2} GFLOP/s", s.name, s.mean_s * 1e3, flops / s.mean_s / 1e9);
+            csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), format!("{flops}"), format!("{:.3}", flops / s.mean_s / 1e9)]);
+        }
+        for w in [1usize, 2, 4] {
+            if w > threads() && w != 1 {
+                continue;
+            }
+            let s = with_threads(w, || {
+                bench(&format!("syrk_2048x768_w{w}"), 1, 3, || {
+                    c.iter_mut().for_each(|v| *v = 0.0);
+                    syrk_upper_f32(&x, &mut c, rows, n);
+                })
+            });
+            println!("{:24} {:9.4} ms  {:6.2} GFLOP/s", s.name, s.mean_s * 1e3, flops / s.mean_s / 1e9);
+            csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), format!("{flops}"), format!("{:.3}", flops / s.mean_s / 1e9)]);
+        }
     }
 
     // Kronecker accumulate+solve at the 50%-pruned head size (d' = 16).
@@ -76,7 +108,8 @@ fn main() {
         csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), format!("{flops}"), format!("{:.3}", flops / s.mean_s / 1e9)]);
     }
 
-    // PJRT per-call overhead: smallest block artifact, batch 1.
+    // Per-block execute round trip: PJRT when artifacts are built, the
+    // native interpreter otherwise.
     if let Ok(coord) = corp::coordinator::Coordinator::new() {
         let cfg = corp::model::ModelConfig::by_name("vit_t").unwrap();
         let exec = coord.executor(cfg);
@@ -84,11 +117,11 @@ fn main() {
         let gen_v = corp::data::VisionGen::new(0);
         let (tokens, _) = gen_v.batch(corp::data::Split::Eval, 0, 1);
         let x = exec.embed(&w, &tokens, 1).unwrap();
-        let s = bench("pjrt_block_vit_t_b1", 3, 30, || exec.block(&w, 0, &x, 1).unwrap());
-        println!("{:24} {:9.4} ms  (per-block PJRT round trip)", s.name, s.mean_s * 1e3);
+        let s = bench("block_vit_t_b1", 3, 30, || exec.block(&w, 0, &x, 1).unwrap());
+        println!("{:24} {:9.4} ms  (per-block execute round trip)", s.name, s.mean_s * 1e3);
         csv.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.p50_s), "0".into(), "0".into()]);
     } else {
-        eprintln!("pjrt microbench skipped: artifacts not built");
+        eprintln!("block round-trip microbench skipped: runtime unavailable");
     }
 
     csv.flush().unwrap();

@@ -1,0 +1,328 @@
+//! `corp bench linalg` — the perf-trajectory harness behind
+//! `BENCH_linalg.json`.
+//!
+//! Benchmarks the packed parallel kernels against the seed's scalar
+//! baselines (preserved in `linalg::gemm::reference`), sweeps the SYRK
+//! worker count, and times the end-to-end calibrate+prune pipeline on the
+//! native backend, all scaled by `CORP_BENCH_MODE`. Results print as a
+//! table and are optionally emitted as machine-readable JSON so the numbers
+//! are tracked PR-over-PR.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::exec::Executor;
+use crate::linalg::gemm::{matmul_f32, reference, syrk_upper_f32};
+use crate::linalg::{Cholesky, Mat};
+use crate::model::{ModelConfig, Scope, Sparsity, WeightStore};
+use crate::prune::{calibrate, prune, Method, PruneOpts};
+use crate::runtime::Runtime;
+use crate::util::bench::{bench, bench_mode, BenchMode};
+use crate::util::json::Json;
+use crate::util::prop::gen;
+use crate::util::threads;
+use crate::util::{Pcg64, Stopwatch};
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+struct KernelResult {
+    name: String,
+    dims: String,
+    flops: f64,
+    new_s: f64,
+    seed_s: f64,
+}
+
+impl KernelResult {
+    fn speedup(&self) -> f64 {
+        self.seed_s / self.new_s.max(1e-12)
+    }
+
+    fn gflops(&self, secs: f64) -> f64 {
+        self.flops / secs.max(1e-12) / 1e9
+    }
+
+    fn print(&self) {
+        println!(
+            "{:24} {:>14} | packed {:9.3} ms ({:6.2} GF/s) | seed {:9.3} ms ({:6.2} GF/s) | {:5.2}x",
+            self.name,
+            self.dims,
+            self.new_s * 1e3,
+            self.gflops(self.new_s),
+            self.seed_s * 1e3,
+            self.gflops(self.seed_s),
+            self.speedup()
+        );
+    }
+
+    fn json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("dims", Json::Str(self.dims.clone())),
+            ("flops", num(self.flops)),
+            ("packed_s", num(self.new_s)),
+            ("packed_gflops", num(self.gflops(self.new_s))),
+            ("seed_s", num(self.seed_s)),
+            ("seed_gflops", num(self.gflops(self.seed_s))),
+            ("speedup_vs_seed", num(self.speedup())),
+        ])
+    }
+}
+
+/// Sizes per mode: (gemm n, syrk (rows, channels), cholesky n, iters).
+fn mode_sizes() -> (usize, (usize, usize), usize, usize) {
+    match bench_mode() {
+        BenchMode::Smoke => (128, (512, 256), 160, 3),
+        BenchMode::Fast => (256, (2048, 768), 640, 5),
+        BenchMode::Full => (512, (4096, 1280), 1024, 7),
+    }
+}
+
+/// E2E pipeline scale per mode: (model, calib batches).
+fn mode_e2e() -> (&'static str, usize) {
+    match bench_mode() {
+        BenchMode::Smoke => ("vit_t", 2),
+        BenchMode::Fast => ("vit_t", 8),
+        BenchMode::Full => ("vit_b", 16),
+    }
+}
+
+/// Run the linalg benchmark suite; when `json_out` is set, write
+/// `BENCH_linalg.json`-style output there.
+pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
+    let (gemm_n, (syrk_rows, syrk_n), chol_n, iters) = mode_sizes();
+    let mut rng = Pcg64::new(1);
+    let mut kernels: Vec<KernelResult> = Vec::new();
+
+    // ---- GEMM ----
+    {
+        let n = gemm_n;
+        let a = gen::matrix(&mut rng, n, n, 1.0);
+        let b = gen::matrix(&mut rng, n, n, 1.0);
+        let mut c = vec![0.0f32; n * n];
+        let s_new = bench("gemm_packed", 2, iters, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            matmul_f32(&a, &b, &mut c, n, n, n);
+        });
+        let s_seed = bench("gemm_seed", 1, iters, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            reference::matmul_f32_seed(&a, &b, &mut c, n, n, n);
+        });
+        kernels.push(KernelResult {
+            name: "gemm".into(),
+            dims: format!("{n}x{n}x{n}"),
+            flops: 2.0 * (n * n * n) as f64,
+            new_s: s_new.mean_s,
+            seed_s: s_seed.mean_s,
+        });
+    }
+
+    // ---- SYRK (the Gram-accumulation hot path) ----
+    {
+        let (rows, n) = (syrk_rows, syrk_n);
+        let x = gen::matrix(&mut rng, rows, n, 1.0);
+        let mut c = vec![0.0f32; n * n];
+        let s_new = bench("syrk_packed", 1, iters, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            syrk_upper_f32(&x, &mut c, rows, n);
+        });
+        let s_seed = bench("syrk_seed", 1, iters, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            reference::syrk_upper_f32_seed(&x, &mut c, rows, n);
+        });
+        kernels.push(KernelResult {
+            name: "syrk".into(),
+            dims: format!("{rows}x{n}"),
+            flops: (rows * n * n) as f64, // ~half of full gemm
+            new_s: s_new.mean_s,
+            seed_s: s_seed.mean_s,
+        });
+    }
+
+    // ---- TN-GEMM (CᵀC shape used by the attention accumulators) ----
+    {
+        let (rows, n) = (syrk_rows / 2, syrk_n / 2);
+        let a = gen::matrix(&mut rng, rows, n, 1.0);
+        let b = gen::matrix(&mut rng, rows, n, 1.0);
+        let mut c = vec![0.0f32; n * n];
+        let s_new = bench("tn_packed", 1, iters, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            crate::linalg::gemm::matmul_tn_f32(&a, &b, &mut c, rows, n, n);
+        });
+        let s_seed = bench("tn_seed", 1, iters, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            reference::matmul_tn_f32_seed(&a, &b, &mut c, rows, n, n);
+        });
+        kernels.push(KernelResult {
+            name: "gemm_tn".into(),
+            dims: format!("{rows}x{n}x{n}"),
+            flops: 2.0 * (rows * n * n) as f64,
+            new_s: s_new.mean_s,
+            seed_s: s_seed.mean_s,
+        });
+    }
+
+    println!(
+        "linalg microbench — mode {:?}, {} worker(s)",
+        bench_mode(),
+        threads::threads()
+    );
+    for k in &kernels {
+        k.print();
+    }
+
+    // ---- Cholesky + parallel multi-RHS solve (no seed counterpart delta;
+    // reported for the trajectory) ----
+    let chol = {
+        let n = chol_n;
+        let a = Mat::from_f32(n, n, &gen::spd(&mut rng, n, 0.5));
+        let s_fac = bench("cholesky", 1, iters.min(3), || Cholesky::new(&a).unwrap());
+        let f = Cholesky::new(&a).unwrap();
+        let rhs = Mat::from_f32(n, 64, &gen::matrix(&mut rng, n, 64, 1.0));
+        let s_solve = bench("chol_solve64", 1, iters.min(3), || f.solve_mat(&rhs));
+        println!(
+            "{:24} {:>14} | factor {:9.3} ms | 64-rhs solve {:9.3} ms",
+            "cholesky",
+            format!("{n}x{n}"),
+            s_fac.mean_s * 1e3,
+            s_solve.mean_s * 1e3
+        );
+        obj(vec![
+            ("n", num(n as f64)),
+            ("factor_s", num(s_fac.mean_s)),
+            ("solve64_s", num(s_solve.mean_s)),
+        ])
+    };
+
+    // ---- SYRK thread sweep ----
+    let mut sweep = Vec::new();
+    {
+        let (rows, n) = (syrk_rows, syrk_n);
+        let x = gen::matrix(&mut rng, rows, n, 1.0);
+        let mut c = vec![0.0f32; n * n];
+        let avail = threads::threads();
+        let mut counts = vec![1usize, 2, 4, avail];
+        counts.retain(|&w| w <= avail.max(1));
+        counts.sort_unstable();
+        counts.dedup();
+        for w in counts {
+            let s = threads::with_threads(w, || {
+                bench(&format!("syrk_w{w}"), 1, iters.min(3), || {
+                    c.iter_mut().for_each(|v| *v = 0.0);
+                    syrk_upper_f32(&x, &mut c, rows, n);
+                })
+            });
+            let gf = (rows * n * n) as f64 / s.mean_s.max(1e-12) / 1e9;
+            println!("{:24} {:>14} | {w} worker(s): {:9.3} ms ({gf:6.2} GF/s)", "syrk_sweep", format!("{rows}x{n}"), s.mean_s * 1e3);
+            sweep.push(obj(vec![
+                ("threads", num(w as f64)),
+                ("syrk_s", num(s.mean_s)),
+                ("gflops", num(gf)),
+            ]));
+        }
+    }
+
+    // ---- End-to-end calibrate + prune on the native backend ----
+    let (model, calib_batches) = mode_e2e();
+    let e2e = {
+        let cfg = ModelConfig::by_name(model).context("e2e model")?;
+        let rt = Runtime::from_default_dir()?;
+        let exec = Executor::new(&rt, cfg);
+        let dense = WeightStore::init(cfg, 1);
+        let opts = PruneOpts {
+            sparsity: Sparsity::of(Scope::Both, 5),
+            method: Method::Corp,
+            calib_batches,
+            ..PruneOpts::default()
+        };
+        let sw = Stopwatch::start();
+        let stats = calibrate(&exec, &dense, &opts)?;
+        let calib_s = sw.secs();
+        let sw2 = Stopwatch::start();
+        let result = prune(&exec, &dense, &stats, &opts)?;
+        let prune_s = sw2.secs();
+        println!(
+            "e2e {model} (calib {calib_batches} batches): calibrate {calib_s:.3}s  prune {prune_s:.3}s  (sections: rank {:.3}s comp {:.3}s)",
+            result.sections.get("ranking"),
+            result.sections.get("compensation"),
+        );
+        obj(vec![
+            ("model", Json::Str(model.to_string())),
+            ("calib_batches", num(calib_batches as f64)),
+            ("calibrate_s", num(calib_s)),
+            ("prune_s", num(prune_s)),
+            ("total_s", num(calib_s + prune_s)),
+            ("ranking_cpu_s", num(result.sections.get("ranking"))),
+            ("compensation_cpu_s", num(result.sections.get("compensation"))),
+        ])
+    };
+
+    if let Some(path) = json_out {
+        let root = obj(vec![
+            ("schema", Json::Str("corp-bench-linalg/v1".into())),
+            (
+                "mode",
+                Json::Str(
+                    match bench_mode() {
+                        BenchMode::Smoke => "smoke",
+                        BenchMode::Fast => "fast",
+                        BenchMode::Full => "full",
+                    }
+                    .into(),
+                ),
+            ),
+            ("threads", num(threads::threads() as f64)),
+            ("kernels", Json::Arr(kernels.iter().map(|k| k.json()).collect())),
+            ("cholesky", chol),
+            ("thread_sweep", Json::Arr(sweep)),
+            ("e2e", e2e),
+        ]);
+        std::fs::write(path, root.to_string() + "\n")
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_tables_cover_all_modes() {
+        // Pure functions of the mode env; just exercise the mapping tables.
+        let (g, (sr, sn), c, it) = mode_sizes();
+        assert!(g >= 64 && sr > sn / 8 && c >= 64 && it >= 1);
+        let (m, cb) = mode_e2e();
+        assert!(ModelConfig::by_name(m).is_some());
+        assert!(cb >= 1);
+    }
+
+    #[test]
+    fn kernel_result_math() {
+        let k = KernelResult {
+            name: "x".into(),
+            dims: "1".into(),
+            flops: 2e9,
+            new_s: 0.5,
+            seed_s: 2.0,
+        };
+        assert!((k.speedup() - 4.0).abs() < 1e-12);
+        assert!((k.gflops(0.5) - 4.0).abs() < 1e-12);
+        // json round-trips through the serializer
+        let j = k.json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("speedup_vs_seed").as_f64(), Some(4.0));
+    }
+}

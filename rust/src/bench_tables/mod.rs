@@ -6,6 +6,7 @@
 pub mod tables;
 pub mod nlp;
 pub mod dense;
+pub mod linalg;
 
 use crate::model::config::FAMILY;
 use crate::model::{ModelConfig, ModelKind};

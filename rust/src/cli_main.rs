@@ -61,6 +61,7 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         "prune" => cmd_prune(rest),
         "serve" => cmd_serve(rest),
         "stats" => cmd_stats(rest),
+        "bench" => cmd_bench(rest),
         "list" => cmd_list(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -78,8 +79,25 @@ fn print_usage() {
          prune  --model vit_b --scope both --sparsity 0.5 [--method corp] [--criterion combined]\n  \
          serve  --model vit_b --sparsity 0.5 [--rate 200]\n  \
          stats  --model vit_b                    Table-9 redundancy statistics\n  \
+         bench  linalg [--json] [--out PATH]     kernel + pipeline perf harness\n  \
          list                                    models + artifact status"
     );
+}
+
+fn cmd_bench(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("bench", "performance harness")
+        .flag("json", "emit machine-readable results")
+        .opt("out", "output path for --json", "BENCH_linalg.json");
+    let args = cmd.parse(argv)?;
+    let target = args.positional().first().map(|s| s.as_str()).unwrap_or("linalg");
+    match target {
+        "linalg" => {
+            let out = args.str("out");
+            let json = args.has_flag("json").then_some(out.as_str());
+            crate::bench_tables::linalg::bench_linalg(json)
+        }
+        other => bail!("unknown bench target '{other}' (available: linalg)"),
+    }
 }
 
 fn cmd_train(argv: &[String]) -> Result<()> {
@@ -254,6 +272,11 @@ mod tests {
     #[test]
     fn unknown_subcommand_errors() {
         assert!(run_cli(&["nope".to_string()]).is_err());
+    }
+
+    #[test]
+    fn bench_unknown_target_errors() {
+        assert!(run_cli(&["bench".to_string(), "bogus".to_string()]).is_err());
     }
 
     #[test]

@@ -141,10 +141,17 @@ impl Coordinator {
     }
 
     /// Accuracy of a weight store (dense or pruned) on the eval split.
-    pub fn top1(&self, cfg: &'static ModelConfig, w: &WeightStore, _seed: u64) -> Result<f64> {
+    ///
+    /// The task identity is always `DATA_SEED` (the generator seed defines
+    /// the classes themselves); `seed` selects which disjoint window of the
+    /// eval stream is scored, so different evaluation seeds see different
+    /// examples while every variant scored under one seed is comparable.
+    /// The seed was previously accepted and silently ignored.
+    pub fn top1(&self, cfg: &'static ModelConfig, w: &WeightStore, seed: u64) -> Result<f64> {
         let exec = Executor::new(&self.rt, cfg);
         let gen = VisionGen::new(crate::data::DATA_SEED);
-        crate::eval::top1(&exec, w, &gen, self.scale.eval_batches)
+        let start = crate::eval::eval_window(seed);
+        crate::eval::top1_from(&exec, w, &gen, self.scale.eval_batches, start)
     }
 
     /// Full experiment row: prune at `sparsity` with `method` and report

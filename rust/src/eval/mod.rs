@@ -13,12 +13,33 @@ pub fn top1(
     gen: &VisionGen,
     n_batches: usize,
 ) -> Result<f64> {
+    top1_from(exec, w, gen, n_batches, 0)
+}
+
+/// Map an evaluation seed to the starting eval-batch index of its window.
+/// Windows are spaced by a large odd stride so distinct seeds never overlap
+/// for any realistic batch count; every variant scored under one seed must
+/// use the same window or accuracy deltas pick up eval-sampling noise.
+pub fn eval_window(seed: u64) -> u64 {
+    seed.wrapping_mul(0x10001)
+}
+
+/// [`top1`] over eval batches `start .. start + n_batches` — the `start`
+/// offset selects a disjoint eval stream per evaluation seed (see
+/// `Coordinator::top1` and [`eval_window`]).
+pub fn top1_from(
+    exec: &Executor<'_>,
+    w: &WeightStore,
+    gen: &VisionGen,
+    n_batches: usize,
+    start: u64,
+) -> Result<f64> {
     assert_eq!(exec.cfg.kind, ModelKind::Vit);
     let b = exec.cfg.eval_batch();
     let mut correct = 0usize;
     let mut total = 0usize;
     for i in 0..n_batches {
-        let (tokens, labels) = gen.batch(Split::Eval, i as u64, b);
+        let (tokens, labels) = gen.batch(Split::Eval, start + i as u64, b);
         let logits = exec.forward_vit(w, &tokens, b)?;
         let c = exec.cfg.classes;
         for (j, &label) in labels.iter().enumerate() {

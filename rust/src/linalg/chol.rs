@@ -12,12 +12,19 @@ pub struct Cholesky {
     l: Vec<f64>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("matrix is not positive definite (pivot {pivot} at index {index})")]
+#[derive(Debug)]
 pub struct NotSpd {
     pub index: usize,
     pub pivot: f64,
 }
+
+impl std::fmt::Display for NotSpd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix is not positive definite (pivot {} at index {})", self.pivot, self.index)
+    }
+}
+
+impl std::error::Error for NotSpd {}
 
 impl Cholesky {
     /// Factor a symmetric positive-definite matrix.
@@ -27,10 +34,14 @@ impl Cholesky {
         let mut l = vec![0.0f64; n * n];
         for i in 0..n {
             for j in 0..=i {
-                let mut s = a.at(i, j);
-                for k in 0..j {
-                    s -= l[i * n + k] * l[j * n + k];
-                }
+                // s = a[i,j] − Σ_k<j l[i,k]·l[j,k]; slice dot keeps the inner
+                // loop branch- and bounds-check-free so it vectorizes.
+                let dot: f64 = l[i * n..i * n + j]
+                    .iter()
+                    .zip(&l[j * n..j * n + j])
+                    .map(|(x, y)| x * y)
+                    .sum();
+                let s = a.at(i, j) - dot;
                 if i == j {
                     if s <= 0.0 || !s.is_finite() {
                         return Err(NotSpd { index: i, pivot: s });
@@ -67,16 +78,14 @@ impl Cholesky {
         assert_eq!(b.len(), self.n);
         let n = self.n;
         let l = &self.l;
-        // forward: L y = b
+        // forward: L y = b (row dot over the already-solved prefix)
         let mut y = b.to_vec();
         for i in 0..n {
-            let mut s = y[i];
-            for k in 0..i {
-                s -= l[i * n + k] * y[k];
-            }
-            y[i] = s / l[i * n + i];
+            let dot: f64 =
+                l[i * n..i * n + i].iter().zip(&y[..i]).map(|(a, v)| a * v).sum();
+            y[i] = (y[i] - dot) / l[i * n + i];
         }
-        // backward: Lᵀ x = y
+        // backward: Lᵀ x = y (column access; strided by construction)
         for i in (0..n).rev() {
             let mut s = y[i];
             for k in (i + 1)..n {
@@ -87,30 +96,45 @@ impl Cholesky {
         y
     }
 
-    /// Solve A X = B (column-block solve).
+    /// Solve A X = B — the multi-RHS path of the ridge solvers. Right-hand
+    /// sides are independent, so the back-substitutions run as one parallel
+    /// region over columns (B is transposed once so each worker streams a
+    /// contiguous RHS). Per-column arithmetic is identical to `solve_vec`,
+    /// so results do not depend on the worker count.
     pub fn solve_mat(&self, b: &Mat) -> Mat {
         assert_eq!(b.r, self.n);
-        let mut out = Mat::zeros(b.r, b.c);
-        // Solve per column to keep the memory profile flat.
-        let mut col = vec![0.0f64; self.n];
-        for j in 0..b.c {
-            for i in 0..self.n {
-                col[i] = b.at(i, j);
-            }
-            let x = self.solve_vec(&col);
-            for i in 0..self.n {
-                out.set(i, j, x[i]);
-            }
+        let n = self.n;
+        if n == 0 || b.c == 0 {
+            return Mat::zeros(b.r, b.c);
         }
-        out
+        let bt = b.t(); // [c, n]: row j = RHS j
+        let mut xt = Mat::zeros(b.c, n);
+        crate::util::threads::parallel_chunks_mut(&mut xt.a, n, |col, row| {
+            let x = self.solve_vec(bt.row(col));
+            row.copy_from_slice(&x);
+        });
+        xt.t()
     }
 
     /// Solve X A = B, i.e. X = B A⁻¹ (the orientation of the MLP ridge
     /// normal equations, Eq. (24): B (Σ_SS + λI) = Σ_PS).
+    ///
+    /// Row-wise: x_i A = b_i ⇔ A x_iᵀ = b_iᵀ (A symmetric), and the rows of
+    /// B are already contiguous right-hand sides — so this solves each
+    /// output row directly on the worker pool with no transposes at all
+    /// (this sits on the per-layer MLP-compensation hot path).
     pub fn solve_right(&self, b: &Mat) -> Mat {
         assert_eq!(b.c, self.n);
-        // (X A)ᵀ = Aᵀ Xᵀ = A Xᵀ (A symmetric) → solve A Xᵀ = Bᵀ.
-        self.solve_mat(&b.t()).t()
+        let n = self.n;
+        if n == 0 || b.r == 0 {
+            return Mat::zeros(b.r, b.c);
+        }
+        let mut out = Mat::zeros(b.r, n);
+        crate::util::threads::parallel_chunks_mut(&mut out.a, n, |row_i, row| {
+            let x = self.solve_vec(b.row(row_i));
+            row.copy_from_slice(&x);
+        });
+        out
     }
 
     pub fn log_det(&self) -> f64 {

@@ -1,89 +1,100 @@
-//! f32 GEMM kernels for the calibration-statistics hot path.
+//! Packed-panel f32 GEMM kernels for the calibration-statistics hot path.
 //!
 //! Calibration accumulates Gram/covariance blocks XᵀX over activation
 //! matrices with thousands of rows — this is where Layer 3 spends its time
-//! (Table 6: "calibration dominates"), so these kernels are written with
-//! register blocking + cache tiling and are the subject of the §Perf pass.
+//! (Table 6: "calibration dominates"). The kernels here are the §Perf
+//! rebuild of the seed's scalar loops:
+//!
+//! * **Packing** — each MC-row panel of A is repacked per KC-depth block
+//!   into MR-interleaved micro-tiles (`pack[kk*MR + r] = A[i0+r, k0+kk]`),
+//!   so the micro-kernel reads A contiguously and LLVM keeps the panel in
+//!   L1/L2 across the j sweep.
+//! * **Register micro-kernel** — an MR×NR (4×8) accumulator tile updated
+//!   with one A broadcast and one 8-wide B row load per FMA group; the
+//!   NR-exact fast path uses fixed-size arrays so the compiler fully
+//!   unrolls and vectorizes it.
+//! * **No zero-skip branches** — the seed kernels tested `a_ik == 0.0`
+//!   inside the innermost loop, which blocked vectorization entirely;
+//!   dense panels are always cheaper than a data-dependent branch.
+//! * **Row-panel parallelism** — panels of C are distributed over the
+//!   scoped worker pool (`util::threads`); each C row is produced by
+//!   exactly one worker in a fixed k-block order, so results are bitwise
+//!   identical for any worker count.
+//!
+//! `matmul_tn_f32` (the Gram shape C += AᵀB with A stored [k, m]) first
+//! transposes A into row-major once — O(k·m) against the O(k·m·n) multiply —
+//! then runs the same packed kernel. `syrk_upper_f32` packs Xᵀ and computes
+//! only the block-upper triangle before mirroring.
+//!
+//! The seed's scalar kernels are preserved in [`reference`] as the
+//! before/after baseline for `corp bench linalg` / `BENCH_linalg.json`.
 
-/// C[m,n] += A[m,k] * B[k,n], all row-major.
-///
-/// Blocked ikj with a 4-wide register accumulation over j; on a single core
-/// this reaches a useful fraction of scalar peak and vectorizes with -O3.
+use crate::util::threads;
+
+/// Micro-kernel rows (A values broadcast per step).
+const MR: usize = 4;
+/// Micro-kernel columns (B lanes per step; one AVX2 f32 vector).
+const NR: usize = 8;
+/// Depth block: one packed panel of A spans KC levels.
+const KC: usize = 256;
+/// Rows of C per parallel work unit.
+const MC: usize = 64;
+
+/// C[m,n] += A[m,k] · B[k,n], all row-major.
 pub fn matmul_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
-    const MC: usize = 64; // rows of A per block
-    const KC: usize = 256; // depth per block
-    for i0 in (0..m).step_by(MC) {
-        let i1 = (i0 + MC).min(m);
-        for k0 in (0..k).step_by(KC) {
-            let k1 = (k0 + KC).min(k);
-            for i in i0..i1 {
-                let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut c[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n..(kk + 1) * n];
-                    // Let LLVM vectorize this FMA loop.
-                    for j in 0..n {
-                        crow[j] += aik * brow[j];
-                    }
-                }
-            }
-        }
+    if m == 0 || n == 0 || k == 0 {
+        return;
     }
+    threads::parallel_chunks_mut(c, MC * n, |panel, cpan| {
+        let i0 = panel * MC;
+        let rows = cpan.len() / n;
+        gemm_panel(&a[i0 * k..(i0 + rows) * k], b, cpan, rows, k, n, 0);
+    });
 }
 
-/// C[m,n] += Aᵀ[m,k]·B[k,n] where A is stored [k, m] row-major
-/// (i.e. C = AᵀB). This is the Gram-accumulation shape: X stored
-/// [samples, channels], C += XᵀX uses a = b = X.
+/// C[m,n] += Aᵀ · B where A is stored [k, m] row-major (the Gram shape:
+/// X stored [samples, channels], C += XᵀX uses a = b = X). Implemented as a
+/// one-off O(k·m) transpose into row-major followed by the packed kernel.
 pub fn matmul_tn_f32(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
     assert_eq!(a.len(), k * m);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
-    // Accumulate rank-1 updates row-by-row of the sample axis; for each
-    // sample the update C += a_rowᵀ · b_row streams C once. Blocking over the
-    // sample axis keeps b_row/a_row hot.
-    for kk in 0..k {
-        let arow = &a[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let aik = arow[i];
-            if aik == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
-            }
-        }
+    if m == 0 || n == 0 || k == 0 {
+        return;
     }
+    let at = transpose(a, k, m); // [m, k]
+    threads::parallel_chunks_mut(c, MC * n, |panel, cpan| {
+        let i0 = panel * MC;
+        let rows = cpan.len() / n;
+        gemm_panel(&at[i0 * k..(i0 + rows) * k], b, cpan, rows, k, n, 0);
+    });
 }
 
-/// Upper-triangular symmetric rank-k update: C += XᵀX computing only j >= i,
-/// then mirrored. X is [rows, n] row-major; C is [n, n].
+/// Symmetric rank-k update C += XᵀX computing the upper triangle (at panel
+/// granularity) and mirroring it to the lower. X is [rows, n] row-major;
+/// C is [n, n]. Parallel over row panels of C; each panel i0.. computes the
+/// rectangle j ∈ [i0, n), so entries strictly below the diagonal inside a
+/// panel accumulate scratch values — the final mirror overwrites the whole
+/// lower triangle from the upper, preserving the accumulate-then-mirror
+/// semantics of the seed kernel.
 pub fn syrk_upper_f32(x: &[f32], c: &mut [f32], rows: usize, n: usize) {
     assert_eq!(x.len(), rows * n);
     assert_eq!(c.len(), n * n);
-    for r in 0..rows {
-        let xr = &x[r * n..(r + 1) * n];
-        for i in 0..n {
-            let xi = xr[i];
-            if xi == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n + i..i * n + n];
-            let xj = &xr[i..n];
-            for (cv, &bv) in crow.iter_mut().zip(xj) {
-                *cv += xi * bv;
-            }
-        }
+    if n == 0 {
+        return;
     }
-    // Mirror to lower triangle.
+    if rows > 0 {
+        let xt = transpose(x, rows, n); // [n, rows]: row i = channel i over samples
+        threads::parallel_chunks_mut(c, MC * n, |panel, cpan| {
+            let i0 = panel * MC;
+            let pr = cpan.len() / n;
+            gemm_panel(&xt[i0 * rows..(i0 + pr) * rows], x, cpan, pr, rows, n, i0);
+        });
+    }
+    // Mirror upper -> lower.
     for i in 0..n {
         for j in (i + 1)..n {
             c[j * n + i] = c[i * n + j];
@@ -96,13 +107,214 @@ pub fn matvec_f32(a: &[f32], x: &[f32], y: &mut [f32], m: usize, n: usize) {
     assert_eq!(a.len(), m * n);
     assert_eq!(x.len(), n);
     assert_eq!(y.len(), m);
-    for i in 0..m {
-        let row = &a[i * n..(i + 1) * n];
-        let mut s = 0.0f32;
-        for j in 0..n {
-            s += row[j] * x[j];
+    if m == 0 {
+        return;
+    }
+    threads::parallel_chunks_mut(y, 128, |blk, ychunk| {
+        let r0 = blk * 128;
+        for (dy, yv) in ychunk.iter_mut().enumerate() {
+            let row = &a[(r0 + dy) * n..(r0 + dy + 1) * n];
+            *yv += dot_f32(row, x);
         }
-        y[i] += s;
+    });
+}
+
+/// Multi-accumulator dot product (vectorizes without a zero-skip branch).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; NR];
+    let chunks = a.len() / NR;
+    for i in 0..chunks {
+        let av = &a[i * NR..(i + 1) * NR];
+        let bv = &b[i * NR..(i + 1) * NR];
+        for j in 0..NR {
+            acc[j] += av[j] * bv[j];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * NR..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Blocked transpose: `src` [rows, cols] row-major → returned [cols, rows].
+fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    const TB: usize = 32;
+    let mut out = vec![0.0f32; src.len()];
+    threads::parallel_chunks_mut(&mut out, TB * rows.max(1), |blk, ochunk| {
+        let c0 = blk * TB;
+        let bc = ochunk.len() / rows.max(1);
+        for r0 in (0..rows).step_by(TB) {
+            let r1 = (r0 + TB).min(rows);
+            for (dc, och) in ochunk.chunks_mut(rows).enumerate().take(bc) {
+                let col = c0 + dc;
+                for r in r0..r1 {
+                    och[r] = src[r * cols + col];
+                }
+            }
+        }
+    });
+    out
+}
+
+/// One MC-row panel of C += A_panel · B, with columns restricted to
+/// [jlo, n). `a` holds the panel's rows [rows, k] row-major; `cpan` is the
+/// panel's slice of C (full n-column rows).
+fn gemm_panel(a: &[f32], b: &[f32], cpan: &mut [f32], rows: usize, k: usize, n: usize, jlo: usize) {
+    let mut pack = [0.0f32; KC * MR];
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        let mut i = 0;
+        while i < rows {
+            let mr = MR.min(rows - i);
+            // Pack rows i..i+mr over depth k0..k0+kc, MR-interleaved; unused
+            // lanes are zero so the micro-kernel needs no row bound checks.
+            for kk in 0..kc {
+                for r in 0..MR {
+                    pack[kk * MR + r] =
+                        if r < mr { a[(i + r) * k + k0 + kk] } else { 0.0 };
+                }
+            }
+            micro_kernel(&pack, kc, b, k0, n, jlo, cpan, i, mr);
+            i += mr;
+        }
+    }
+}
+
+/// MR×NR register-tile micro-kernel: for each NR-wide column strip of C,
+/// accumulate over the packed depth block, then add into C.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel(
+    pack: &[f32; KC * MR],
+    kc: usize,
+    b: &[f32],
+    k0: usize,
+    n: usize,
+    jlo: usize,
+    cpan: &mut [f32],
+    i: usize,
+    mr: usize,
+) {
+    let mut j0 = jlo;
+    while j0 < n {
+        let nr = NR.min(n - j0);
+        let mut acc = [[0.0f32; NR]; MR];
+        if nr == NR {
+            // Fast path: fixed-size B loads, fully unrolled FMA tile.
+            for kk in 0..kc {
+                let ap = &pack[kk * MR..kk * MR + MR];
+                let base = (k0 + kk) * n + j0;
+                let brow: &[f32; NR] = b[base..base + NR].try_into().unwrap();
+                for r in 0..MR {
+                    let arv = ap[r];
+                    for (jj, accv) in acc[r].iter_mut().enumerate() {
+                        *accv += arv * brow[jj];
+                    }
+                }
+            }
+        } else {
+            for kk in 0..kc {
+                let ap = &pack[kk * MR..kk * MR + MR];
+                let base = (k0 + kk) * n + j0;
+                let brow = &b[base..base + nr];
+                for r in 0..MR {
+                    let arv = ap[r];
+                    for (jj, &bv) in brow.iter().enumerate() {
+                        acc[r][jj] += arv * bv;
+                    }
+                }
+            }
+        }
+        for r in 0..mr {
+            let crow = &mut cpan[(i + r) * n + j0..(i + r) * n + j0 + nr];
+            for (jj, cv) in crow.iter_mut().enumerate() {
+                *cv += acc[r][jj];
+            }
+        }
+        j0 += nr;
+    }
+}
+
+/// The seed's scalar kernels (branchy ikj / rank-1 loops), kept verbatim as
+/// the measured "before" baseline for the `bench linalg` harness and the
+/// equivalence property tests. Not used on any hot path.
+pub mod reference {
+    /// Seed `matmul_f32`: blocked ikj with an `a_ik == 0` skip branch.
+    pub fn matmul_f32_seed(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        const MC: usize = 64;
+        const KC: usize = 256;
+        for i0 in (0..m).step_by(MC) {
+            let i1 = (i0 + MC).min(m);
+            for k0 in (0..k).step_by(KC) {
+                let k1 = (k0 + KC).min(k);
+                for i in i0..i1 {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    for kk in k0..k1 {
+                        let aik = arow[kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        for j in 0..n {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Seed `matmul_tn_f32`: per-sample rank-1 updates with a skip branch.
+    pub fn matmul_tn_f32_seed(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+        assert_eq!(a.len(), k * m);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        for kk in 0..k {
+            let arow = &a[kk * m..(kk + 1) * m];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let aik = arow[i];
+                if aik == 0.0 {
+                    continue;
+                }
+                let crow = &mut c[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+
+    /// Seed `syrk_upper_f32`: row-streamed upper-triangle rank-1 updates.
+    pub fn syrk_upper_f32_seed(x: &[f32], c: &mut [f32], rows: usize, n: usize) {
+        assert_eq!(x.len(), rows * n);
+        assert_eq!(c.len(), n * n);
+        for r in 0..rows {
+            let xr = &x[r * n..(r + 1) * n];
+            for i in 0..n {
+                let xi = xr[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let crow = &mut c[i * n + i..i * n + n];
+                let xj = &xr[i..n];
+                for (cv, &bv) in crow.iter_mut().zip(xj) {
+                    *cv += xi * bv;
+                }
+            }
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                c[j * n + i] = c[i * n + j];
+            }
+        }
     }
 }
 
@@ -110,6 +322,7 @@ pub fn matvec_f32(a: &[f32], x: &[f32], y: &mut [f32], m: usize, n: usize) {
 mod tests {
     use super::*;
     use crate::util::prop::{gen, run_prop};
+    use crate::util::threads::with_threads;
 
     fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         let mut c = vec![0.0; m * n];
@@ -125,6 +338,13 @@ mod tests {
         c
     }
 
+    fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+        assert_eq!(got.len(), want.len());
+        for (x, y) in got.iter().zip(want) {
+            assert!((x - y).abs() < tol * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
     #[test]
     fn matmul_matches_naive_prop() {
         run_prop("gemm.matmul=naive", 25, |rng| {
@@ -133,10 +353,21 @@ mod tests {
             let b = gen::matrix(rng, k, n, 1.0);
             let mut c = vec![0.0; m * n];
             matmul_f32(&a, &b, &mut c, m, k, n);
-            let expect = naive(&a, &b, m, k, n);
-            for (x, y) in c.iter().zip(&expect) {
-                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
-            }
+            assert_close(&c, &naive(&a, &b, m, k, n), 1e-3);
+        });
+    }
+
+    #[test]
+    fn matmul_matches_naive_large_dims() {
+        // Exercises multiple row panels, KC blocking, and NR remainders.
+        run_prop("gemm.matmul=naive large", 4, |rng| {
+            let (m, k, n) =
+                (gen::dim(rng, 65, 150), gen::dim(rng, 200, 300), gen::dim(rng, 30, 90));
+            let a = gen::matrix(rng, m, k, 1.0);
+            let b = gen::matrix(rng, k, n, 1.0);
+            let mut c = vec![0.0; m * n];
+            matmul_f32(&a, &b, &mut c, m, k, n);
+            assert_close(&c, &naive(&a, &b, m, k, n), 1e-3);
         });
     }
 
@@ -155,10 +386,7 @@ mod tests {
                     at[j * k + i] = a[i * m + j];
                 }
             }
-            let expect = naive(&at, &b, m, k, n);
-            for (x, y) in c.iter().zip(&expect) {
-                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
-            }
+            assert_close(&c, &naive(&at, &b, m, k, n), 1e-3);
         });
     }
 
@@ -178,12 +406,84 @@ mod tests {
     }
 
     #[test]
+    fn syrk_matches_tn_self_large() {
+        run_prop("gemm.syrk=xtx large", 3, |rng| {
+            let (rows, n) = (gen::dim(rng, 150, 400), gen::dim(rng, 70, 140));
+            let x = gen::matrix(rng, rows, n, 1.0);
+            let mut c1 = vec![0.0; n * n];
+            syrk_upper_f32(&x, &mut c1, rows, n);
+            let mut c2 = vec![0.0; n * n];
+            matmul_tn_f32(&x, &x, &mut c2, rows, n, n);
+            for (a, b) in c1.iter().zip(&c2) {
+                assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn packed_matches_seed_reference() {
+        run_prop("gemm.packed=seed", 8, |rng| {
+            let (m, k, n) = (gen::dim(rng, 1, 70), gen::dim(rng, 1, 90), gen::dim(rng, 1, 50));
+            let a = gen::matrix(rng, m, k, 1.0);
+            let b = gen::matrix(rng, k, n, 1.0);
+            let mut c_new = vec![0.0; m * n];
+            matmul_f32(&a, &b, &mut c_new, m, k, n);
+            let mut c_seed = vec![0.0; m * n];
+            reference::matmul_f32_seed(&a, &b, &mut c_seed, m, k, n);
+            assert_close(&c_new, &c_seed, 1e-3);
+        });
+    }
+
+    #[test]
+    fn thread_count_invariance() {
+        // Acceptance: parallel kernels agree across worker counts. The row
+        // ownership scheme makes GEMM/SYRK bitwise reproducible, but only
+        // f32-tolerance equality is asserted.
+        run_prop("gemm.thread invariance", 4, |rng| {
+            let (m, k, n) =
+                (gen::dim(rng, 60, 130), gen::dim(rng, 100, 280), gen::dim(rng, 40, 100));
+            let a = gen::matrix(rng, m, k, 1.0);
+            let b = gen::matrix(rng, k, n, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            with_threads(1, || matmul_f32(&a, &b, &mut c1, m, k, n));
+            for w in [2usize, 4, 8] {
+                let mut cw = vec![0.0; m * n];
+                with_threads(w, || matmul_f32(&a, &b, &mut cw, m, k, n));
+                assert_close(&cw, &c1, 1e-5);
+            }
+            let rows = 190;
+            let x = gen::matrix(rng, rows, n, 1.0);
+            let mut s1 = vec![0.0; n * n];
+            with_threads(1, || syrk_upper_f32(&x, &mut s1, rows, n));
+            let mut s4 = vec![0.0; n * n];
+            with_threads(4, || syrk_upper_f32(&x, &mut s4, rows, n));
+            assert_close(&s4, &s1, 1e-5);
+        });
+    }
+
+    #[test]
     fn matvec_known() {
         let a = [1., 2., 3., 4.];
         let x = [1., 1.];
         let mut y = vec![0.0; 2];
         matvec_f32(&a, &x, &mut y, 2, 2);
         assert_eq!(y, vec![3., 7.]);
+    }
+
+    #[test]
+    fn matvec_matches_naive_prop() {
+        run_prop("gemm.matvec=naive", 10, |rng| {
+            let (m, n) = (gen::dim(rng, 1, 300), gen::dim(rng, 1, 40));
+            let a = gen::matrix(rng, m, n, 1.0);
+            let x = gen::matrix(rng, 1, n, 1.0);
+            let mut y = vec![0.0f32; m];
+            matvec_f32(&a, &x, &mut y, m, n);
+            for i in 0..m {
+                let want: f64 =
+                    (0..n).map(|j| a[i * n + j] as f64 * x[j] as f64).sum::<f64>();
+                assert!((y[i] as f64 - want).abs() < 1e-3 * (1.0 + want.abs()));
+            }
+        });
     }
 
     #[test]
@@ -194,5 +494,37 @@ mod tests {
         let mut c = vec![10.0f32];
         matmul_f32(&a, &b, &mut c, 1, 1, 1);
         assert_eq!(c[0], 12.0);
+    }
+
+    #[test]
+    fn syrk_accumulates_across_calls() {
+        // Two accumulation calls equal one call on the concatenated data
+        // (the MomentAccumulator streaming pattern).
+        let mut rng = crate::util::Pcg64::new(42);
+        let (r1, r2, n) = (37, 21, 19);
+        let x1 = gen::matrix(&mut rng, r1, n, 1.0);
+        let x2 = gen::matrix(&mut rng, r2, n, 1.0);
+        let mut c_stream = vec![0.0; n * n];
+        syrk_upper_f32(&x1, &mut c_stream, r1, n);
+        syrk_upper_f32(&x2, &mut c_stream, r2, n);
+        let mut xall = x1.clone();
+        xall.extend_from_slice(&x2);
+        let mut c_once = vec![0.0; n * n];
+        syrk_upper_f32(&xall, &mut c_once, r1 + r2, n);
+        for (a, b) in c_stream.iter().zip(&c_once) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = crate::util::Pcg64::new(3);
+        for len in [0usize, 1, 7, 8, 9, 63, 100] {
+            let a = gen::matrix(&mut rng, 1, len.max(1), 1.0);
+            let b = gen::matrix(&mut rng, 1, len.max(1), 1.0);
+            let (a, b) = (&a[..len], &b[..len]);
+            let want: f64 = a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            assert!((dot_f32(a, b) as f64 - want).abs() < 1e-4 * (1.0 + want.abs()));
+        }
     }
 }

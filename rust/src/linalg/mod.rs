@@ -85,24 +85,33 @@ impl Mat {
         out
     }
 
-    /// self * other.
+    /// self * other. Branch-free ikj panels distributed over the worker
+    /// pool; each output row is produced by exactly one worker in a fixed k
+    /// order, so results are independent of the worker count.
     pub fn mul(&self, other: &Mat) -> Mat {
         assert_eq!(self.c, other.r, "mul dims {}x{} * {}x{}", self.r, self.c, other.r, other.c);
         let mut out = Mat::zeros(self.r, other.c);
-        // ikj loop order: streams rows of `other`, decent cache behaviour.
-        for i in 0..self.r {
-            for k in 0..self.c {
-                let aik = self.a[i * self.c + k];
-                if aik == 0.0 {
-                    continue;
-                }
-                let orow = &other.a[k * other.c..(k + 1) * other.c];
-                let dst = &mut out.a[i * other.c..(i + 1) * other.c];
-                for j in 0..other.c {
-                    dst[j] += aik * orow[j];
+        let (k, n) = (self.c, other.c);
+        if out.a.is_empty() || k == 0 {
+            return out;
+        }
+        let a = &self.a;
+        let b = &other.a;
+        const RB: usize = 16; // rows per parallel work unit
+        crate::util::threads::parallel_chunks_mut(&mut out.a, RB * n, |panel, cpan| {
+            let i0 = panel * RB;
+            let rows = cpan.len() / n;
+            for i in 0..rows {
+                let arow = &a[(i0 + i) * k..(i0 + i + 1) * k];
+                let dst = &mut cpan[i * n..(i + 1) * n];
+                for (kk, &aik) in arow.iter().enumerate() {
+                    let orow = &b[kk * n..(kk + 1) * n];
+                    for (d, &ov) in dst.iter_mut().zip(orow) {
+                        *d += aik * ov;
+                    }
                 }
             }
-        }
+        });
         out
     }
 

@@ -3,6 +3,10 @@
 //! MLP compensation (App. B.1):  min_B ‖X̄_P − B X̄_S‖²_F + λ‖B‖²_F with the
 //! closed form B = Σ_PS (Σ_SS + λI)⁻¹, solved here from the (already
 //! accumulated) covariance blocks via Cholesky.
+//!
+//! Multi-RHS solves run the per-column back-substitutions in parallel on the
+//! worker pool (see `Cholesky::solve_mat`); per-column arithmetic is
+//! unchanged, so solutions are independent of the worker count.
 
 use super::chol::Cholesky;
 use super::Mat;
@@ -100,6 +104,20 @@ mod tests {
         let w_small = ridge_fit(&x, &y, 1e-6);
         let w_big = ridge_fit(&x, &y, 100.0);
         assert!(w_big.frob() < w_small.frob());
+    }
+
+    #[test]
+    fn ridge_thread_count_invariant() {
+        use crate::util::threads::with_threads;
+        let mut rng = crate::util::Pcg64::new(31);
+        let (p, s) = (24, 48);
+        let c_ss = Mat::from_f32(s, s, &gen::spd(&mut rng, s, 0.3));
+        let c_ps = Mat::from_f32(p, s, &gen::matrix(&mut rng, p, s, 1.0));
+        let b1 = with_threads(1, || ridge_right(&c_ps, &c_ss, 1e-2));
+        for w in [2usize, 4] {
+            let bw = with_threads(w, || ridge_right(&c_ps, &c_ss, 1e-2));
+            assert!(bw.max_abs_diff(&b1) < 1e-10, "w={w}");
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::compensate::compensate_attn_head;
 use crate::data::{Split, TextGen, VisionGen};
-use crate::exec::Executor;
+use crate::exec::{Executor, LayerCapture};
 use crate::linalg::Mat;
 use crate::model::{ModelKind, Scope, Sparsity, WeightStore};
 use crate::rank::{partition, score_attn_logit_energy, score_mlp, MlpCriterion};
@@ -97,6 +97,14 @@ pub struct CalibStats {
 }
 
 /// Run the dense model on calibration data and accumulate statistics.
+///
+/// Streaming: each captured batch is folded into the per-layer Gram/active
+/// accumulators as soon as the forward pass returns — hidden activations are
+/// never materialized beyond the current batch. Layers are independent, so
+/// the per-batch fold fans the layer updates out over the worker pool (each
+/// layer's accumulator is owned by exactly one worker, so statistics do not
+/// depend on the worker count). Only the Q/K slabs needed for the attention
+/// compensator are retained, capped at `opts.attn_max_samples` samples.
 pub fn calibrate(exec: &Executor<'_>, w: &WeightStore, opts: &PruneOpts) -> Result<CalibStats> {
     let cfg = exec.cfg;
     let b = cfg.eval_batch();
@@ -121,18 +129,26 @@ pub fn calibrate(exec: &Executor<'_>, w: &WeightStore, opts: &PruneOpts) -> Resu
             exec.forward_capture(w, tokens.as_ref(), ids.as_deref())
         })?;
         let keep_qk = attn_kept_samples < opts.attn_max_samples;
-        for (l, cap) in caps.1.into_iter().enumerate() {
-            let rows = b * cfg.n_ctx;
-            sections.time("calibration", || {
-                hidden_acc[l].add_batch(cap.hidden.data(), rows);
-                active_acc[l].add_batch(cap.hidden.data(), rows);
+        let rows = b * cfg.n_ctx;
+        let mut captures = caps.1;
+        sections.time("calibration", || {
+            let items: Vec<(&mut MomentAccumulator, &mut ActiveCounter, &LayerCapture)> =
+                hidden_acc
+                    .iter_mut()
+                    .zip(active_acc.iter_mut())
+                    .zip(captures.iter())
+                    .map(|((h, a), cap)| (h, a, cap))
+                    .collect();
+            crate::util::threads::parallel_items(items, |(hidden, active, cap)| {
+                hidden.add_batch(cap.hidden.data(), rows);
+                active.add_batch(cap.hidden.data(), rows);
             });
-            if keep_qk {
+        });
+        if keep_qk {
+            for (l, cap) in captures.drain(..).enumerate() {
                 qs[l].push(cap.q);
                 ks[l].push(cap.k);
             }
-        }
-        if keep_qk {
             attn_kept_samples += b;
         }
     }
@@ -215,6 +231,37 @@ pub fn run_pipeline(
     Ok(result)
 }
 
+/// One unit of independent pruning work: a layer's MLP scope, or a single
+/// attention head. The flat task list is fanned out over the worker pool —
+/// every solve (ridge, Kronecker, SVD) touches only its own layer/head
+/// statistics and dense weights, so tasks are embarrassingly parallel.
+enum Job {
+    Mlp { l: usize },
+    Head { l: usize, head: usize },
+}
+
+/// Result of one [`Job`], applied serially to the output store afterwards.
+enum JobOut {
+    Mlp {
+        l: usize,
+        w1: Tensor,
+        b1: Tensor,
+        w2: Tensor,
+        /// `None` on the naive path (dense b2 is kept).
+        b2: Option<Tensor>,
+        rho2: Option<f64>,
+    },
+    Head {
+        l: usize,
+        head: usize,
+        wq: Mat,
+        bq: Vec<f64>,
+        wk: Mat,
+        bk: Vec<f64>,
+        rho2: Option<f64>,
+    },
+}
+
 fn prune_corp(
     exec: &Executor<'_>,
     dense: &WeightStore,
@@ -225,106 +272,181 @@ fn prune_corp(
     let cfg = exec.cfg;
     let mut out = dense.clone();
     let mut sections = Sections::new();
-    let mut rho_mlp = Vec::new();
-    let mut rho_attn = Vec::new();
+    let dh = cfg.dh();
+    let h = cfg.heads;
+    let dqk = crate::model::keep_count(dh, opts.sparsity.attn_s10);
 
-    for l in 0..cfg.layers {
-        let ls = &stats.layers[l];
-        // ---------------- MLP scope ----------------
-        if opts.sparsity.mlp_s10 > 0 {
-            let w1 = dense.expect(&format!("blocks.{l}.mlp.w1"))?;
-            let b1 = dense.expect(&format!("blocks.{l}.mlp.b1"))?;
-            let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
-            let b2 = dense.expect(&format!("blocks.{l}.mlp.b2"))?;
-            let (kept, pruned) = sections.time("ranking", || {
-                let scores = score_mlp(opts.criterion, &ls.hidden.energy(), &ls.active.active_prob(), w2);
-                partition(&scores, opts.sparsity.mlp_s10)
-            });
-            // First layer: always a column gather.
-            out.insert(format!("blocks.{l}.mlp.w1"), w1.gather_cols(&kept));
-            out.insert(format!("blocks.{l}.mlp.b1"), b1.gather_cols(&kept));
-            if compensate {
-                let (w2_hat, b2_hat, rho2) = sections.time("compensation", || {
+    let mut jobs: Vec<Job> = Vec::new();
+    if opts.sparsity.mlp_s10 > 0 {
+        for l in 0..cfg.layers {
+            jobs.push(Job::Mlp { l });
+        }
+    }
+    if opts.sparsity.attn_s10 > 0 {
+        for l in 0..cfg.layers {
+            for head in 0..h {
+                jobs.push(Job::Head { l, head });
+            }
+        }
+    }
+
+    // Rank + solve every independent unit in parallel. Section seconds are
+    // summed across workers (CPU seconds, comparable to the serial seed
+    // breakdown); `prune_wall` records the wall time of the region.
+    let wall = crate::util::Stopwatch::start();
+    let outs: Vec<Result<(JobOut, f64, f64)>> =
+        crate::util::threads::parallel_map(jobs.len(), |ji| match jobs[ji] {
+            Job::Mlp { l } => {
+                let ls = &stats.layers[l];
+                let w1 = dense.expect(&format!("blocks.{l}.mlp.w1"))?;
+                let b1 = dense.expect(&format!("blocks.{l}.mlp.b1"))?;
+                let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
+                let b2 = dense.expect(&format!("blocks.{l}.mlp.b2"))?;
+                let rank_t = crate::util::Stopwatch::start();
+                let scores = score_mlp(
+                    opts.criterion,
+                    &ls.hidden.energy(),
+                    &ls.active.active_prob(),
+                    w2,
+                );
+                let (kept, pruned) = partition(&scores, opts.sparsity.mlp_s10);
+                let rank_s = rank_t.secs();
+                // First layer: always a column gather.
+                let w1g = w1.gather_cols(&kept);
+                let b1g = b1.gather_cols(&kept);
+                let comp_t = crate::util::Stopwatch::start();
+                let jo = if compensate {
                     let cov = ls.hidden.covariance();
                     let mean = ls.hidden.mean();
                     let blocks = cov_blocks(&cov, &mean, &kept, &pruned);
                     let comp = crate::compensate::mlp::compensate_mlp_opts(
                         w2, b2, &kept, &pruned, &blocks, opts.lambda, opts.diagnostics,
                     );
-                    (comp.w2_hat, comp.b2_hat, comp.rho2)
-                });
-                out.insert(format!("blocks.{l}.mlp.w2"), w2_hat);
-                out.insert(format!("blocks.{l}.mlp.b2"), b2_hat);
-                rho_mlp.push(rho2);
-            } else {
-                out.insert(format!("blocks.{l}.mlp.w2"), w2.gather_rows(&kept));
+                    JobOut::Mlp {
+                        l,
+                        w1: w1g,
+                        b1: b1g,
+                        w2: comp.w2_hat,
+                        b2: Some(comp.b2_hat),
+                        rho2: Some(comp.rho2),
+                    }
+                } else {
+                    JobOut::Mlp { l, w1: w1g, b1: b1g, w2: w2.gather_rows(&kept), b2: None, rho2: None }
+                };
+                Ok((jo, rank_s, comp_t.secs()))
             }
-        }
-        // ---------------- Attention scope ----------------
-        if opts.sparsity.attn_s10 > 0 {
-            let dh = cfg.dh();
-            let h = cfg.heads;
-            let wq = dense.expect(&format!("blocks.{l}.attn.wq"))?;
-            let bq = dense.expect(&format!("blocks.{l}.attn.bq"))?;
-            let wk = dense.expect(&format!("blocks.{l}.attn.wk"))?;
-            let bk = dense.expect(&format!("blocks.{l}.attn.bk"))?;
-            let dqk = crate::model::keep_count(dh, opts.sparsity.attn_s10);
-            let mut new_wq = vec![0.0f32; cfg.d * h * dqk];
-            let mut new_bq = vec![0.0f32; h * dqk];
-            let mut new_wk = vec![0.0f32; cfg.d * h * dqk];
-            let mut new_bk = vec![0.0f32; h * dqk];
-            for head in 0..h {
+            Job::Head { l, head } => {
+                let ls = &stats.layers[l];
+                let wq = dense.expect(&format!("blocks.{l}.attn.wq"))?;
+                let bq = dense.expect(&format!("blocks.{l}.attn.bq"))?;
+                let wk = dense.expect(&format!("blocks.{l}.attn.wk"))?;
+                let bk = dense.expect(&format!("blocks.{l}.attn.bk"))?;
                 let qh = per_head(&ls.q, head);
                 let kh = per_head(&ls.k, head);
-                let (kept, pruned) = sections.time("ranking", || {
-                    let scores = score_attn_logit_energy(&qh, &kh);
-                    partition(&scores, opts.sparsity.attn_s10)
-                });
-                // Dense per-head projection blocks [d, dh].
-                let wq_head = head_block(wq, head, dh);
-                let wk_head = head_block(wk, head, dh);
-                let bq_head: Vec<f64> =
-                    (0..dh).map(|j| bq.data()[head * dh + j] as f64).collect();
-                let bk_head: Vec<f64> =
-                    (0..dh).map(|j| bk.data()[head * dh + j] as f64).collect();
-                if compensate {
-                    let comp = sections.time("compensation", || {
-                        compensate_attn_head(
-                            &qh,
-                            &kh,
-                            &kept,
-                            &pruned,
-                            &wq_head,
-                            &bq_head,
-                            &wk_head,
-                            &bk_head,
-                            opts.lambda,
-                            opts.attn_max_samples,
-                        )
-                    });
-                    write_head_block(&mut new_wq, &comp.wq, head, dqk, h);
-                    write_head_block(&mut new_wk, &comp.wk, head, dqk, h);
-                    for j in 0..dqk {
-                        new_bq[head * dqk + j] = comp.bq[j] as f32;
-                        new_bk[head * dqk + j] = comp.bk[j] as f32;
+                let rank_t = crate::util::Stopwatch::start();
+                let scores = score_attn_logit_energy(&qh, &kh);
+                let (kept, pruned) = partition(&scores, opts.sparsity.attn_s10);
+                let rank_s = rank_t.secs();
+                let comp_t = crate::util::Stopwatch::start();
+                let jo = if compensate {
+                    // Dense per-head projection blocks [d, dh].
+                    let wq_head = head_block(wq, head, dh);
+                    let wk_head = head_block(wk, head, dh);
+                    let bq_head: Vec<f64> =
+                        (0..dh).map(|j| bq.data()[head * dh + j] as f64).collect();
+                    let bk_head: Vec<f64> =
+                        (0..dh).map(|j| bk.data()[head * dh + j] as f64).collect();
+                    let comp = compensate_attn_head(
+                        &qh,
+                        &kh,
+                        &kept,
+                        &pruned,
+                        &wq_head,
+                        &bq_head,
+                        &wk_head,
+                        &bk_head,
+                        opts.lambda,
+                        opts.attn_max_samples,
+                    );
+                    JobOut::Head {
+                        l,
+                        head,
+                        wq: comp.wq,
+                        bq: comp.bq,
+                        wk: comp.wk,
+                        bk: comp.bk,
+                        rho2: Some(comp.rho2),
                     }
-                    rho_attn.push(comp.rho2);
                 } else {
-                    // Naive: gather kept columns.
+                    // Naive: gather kept columns of the per-head blocks.
+                    let mut nwq = Mat::zeros(cfg.d, dqk);
+                    let mut nwk = Mat::zeros(cfg.d, dqk);
+                    let mut nbq = vec![0.0f64; dqk];
+                    let mut nbk = vec![0.0f64; dqk];
                     for (j, &c) in kept.iter().enumerate() {
                         for r in 0..cfg.d {
-                            new_wq[r * h * dqk + head * dqk + j] = wq.at2(r, head * dh + c);
-                            new_wk[r * h * dqk + head * dqk + j] = wk.at2(r, head * dh + c);
+                            nwq.set(r, j, wq.at2(r, head * dh + c) as f64);
+                            nwk.set(r, j, wk.at2(r, head * dh + c) as f64);
                         }
-                        new_bq[head * dqk + j] = bq.data()[head * dh + c];
-                        new_bk[head * dqk + j] = bk.data()[head * dh + c];
+                        nbq[j] = bq.data()[head * dh + c] as f64;
+                        nbk[j] = bk.data()[head * dh + c] as f64;
                     }
+                    JobOut::Head { l, head, wq: nwq, bq: nbq, wk: nwk, bk: nbk, rho2: None }
+                };
+                Ok((jo, rank_s, comp_t.secs()))
+            }
+        });
+    sections.add("prune_wall", wall.secs());
+
+    // Apply results serially (deterministic order), assembling the fused
+    // per-layer attention projections from the per-head blocks.
+    let mut rho_mlp = Vec::new();
+    let mut rho_attn = Vec::new();
+    let mut attn_new: Vec<Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>> =
+        (0..cfg.layers).map(|_| None).collect();
+    for res in outs {
+        let (jo, rank_s, comp_s) = res?;
+        sections.add("ranking", rank_s);
+        sections.add("compensation", comp_s);
+        match jo {
+            JobOut::Mlp { l, w1, b1, w2, b2, rho2 } => {
+                out.insert(format!("blocks.{l}.mlp.w1"), w1);
+                out.insert(format!("blocks.{l}.mlp.b1"), b1);
+                out.insert(format!("blocks.{l}.mlp.w2"), w2);
+                if let Some(b2) = b2 {
+                    out.insert(format!("blocks.{l}.mlp.b2"), b2);
+                }
+                if let Some(r) = rho2 {
+                    rho_mlp.push(r);
                 }
             }
-            out.insert(format!("blocks.{l}.attn.wq"), Tensor::from_vec(&[cfg.d, h * dqk], new_wq));
-            out.insert(format!("blocks.{l}.attn.bq"), Tensor::from_vec(&[h * dqk], new_bq));
-            out.insert(format!("blocks.{l}.attn.wk"), Tensor::from_vec(&[cfg.d, h * dqk], new_wk));
-            out.insert(format!("blocks.{l}.attn.bk"), Tensor::from_vec(&[h * dqk], new_bk));
+            JobOut::Head { l, head, wq, bq, wk, bk, rho2 } => {
+                let slot = attn_new[l].get_or_insert_with(|| {
+                    (
+                        vec![0.0f32; cfg.d * h * dqk],
+                        vec![0.0f32; h * dqk],
+                        vec![0.0f32; cfg.d * h * dqk],
+                        vec![0.0f32; h * dqk],
+                    )
+                });
+                write_head_block(&mut slot.0, &wq, head, dqk, h);
+                write_head_block(&mut slot.2, &wk, head, dqk, h);
+                for j in 0..dqk {
+                    slot.1[head * dqk + j] = bq[j] as f32;
+                    slot.3[head * dqk + j] = bk[j] as f32;
+                }
+                if let Some(r) = rho2 {
+                    rho_attn.push(r);
+                }
+            }
+        }
+    }
+    for (l, slot) in attn_new.into_iter().enumerate() {
+        if let Some((nwq, nbq, nwk, nbk)) = slot {
+            out.insert(format!("blocks.{l}.attn.wq"), Tensor::from_vec(&[cfg.d, h * dqk], nwq));
+            out.insert(format!("blocks.{l}.attn.bq"), Tensor::from_vec(&[h * dqk], nbq));
+            out.insert(format!("blocks.{l}.attn.wk"), Tensor::from_vec(&[cfg.d, h * dqk], nwk));
+            out.insert(format!("blocks.{l}.attn.bk"), Tensor::from_vec(&[h * dqk], nbk));
         }
     }
 

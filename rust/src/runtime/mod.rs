@@ -1,21 +1,34 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//! Execution runtime: native pure-Rust interpreter + optional PJRT backend.
 //!
-//! Manifest-driven: `artifacts/manifest.json` (written by
-//! `python/compile/aot.py`) records every artifact's input names/shapes and
-//! output names; the [`Runtime`] validates tensors against that spec,
-//! compiles executables lazily, and caches them for the life of the process.
+//! Two backends serve the same artifact-name interface:
+//!
+//! * [`native`] (always available) — a pure-Rust interpreter for the whole
+//!   artifact family (`embed_* / block_* / blockcap_* / mlponly_* / head_* /
+//!   lnf_* / evloss_* / train_*`), built on the packed parallel linalg
+//!   kernels. Needs no `artifacts/` directory and no external crates, so
+//!   `cargo build && cargo test` work offline.
+//! * `pjrt` (behind `--cfg pjrt_backend`, vendored environments only) — the
+//!   original path that loads the AOT HLO-text artifacts written by
+//!   `python/compile/aot.py` and executes them through the `xla` crate.
+//!   Selected automatically when the cfg is on and `artifacts/manifest.json`
+//!   exists; the manifest then also validates input shapes/dtypes per
+//!   artifact.
+//!
 //! Python is never touched here — this *is* the request path.
 
 pub mod manifest;
+pub mod native;
+#[cfg(pjrt_backend)]
+pub mod pjrt;
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::tensor::Tensor;
+// (Input conversion and executable caching for the PJRT path live in
+// `pjrt.rs`; the enum itself is shared.)
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};
 
 /// Locate the artifacts directory: `CORP_ARTIFACTS` env var or
@@ -27,29 +40,39 @@ pub fn default_artifacts_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// A loaded PJRT runtime bound to one artifacts directory.
+/// A loaded runtime bound to one artifacts directory (which may be absent —
+/// the native backend synthesizes everything it needs from artifact names).
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     /// Cumulative number of executions (telemetry for the serve engine).
     exec_count: RefCell<u64>,
+    #[cfg(pjrt_backend)]
+    pjrt: Option<pjrt::PjrtBackend>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client and parse the manifest in `dir`.
+    /// Bind to `dir`, parsing `manifest.json` when present. With the PJRT
+    /// backend compiled in (`--cfg pjrt_backend`) and a manifest, artifact
+    /// execution goes through PJRT; otherwise the native interpreter serves
+    /// every request.
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        let mpath = dir.join("manifest.json");
+        let manifest = if mpath.exists() {
+            Manifest::load(&mpath)
+                .with_context(|| format!("loading manifest from {}", dir.display()))?
+        } else {
+            Manifest::default()
+        };
+        #[cfg(pjrt_backend)]
+        let pjrt = if manifest.is_empty() { None } else { Some(pjrt::PjrtBackend::new()?) };
         Ok(Self {
-            client,
             dir,
             manifest,
-            cache: RefCell::new(HashMap::new()),
             exec_count: RefCell::new(0),
+            #[cfg(pjrt_backend)]
+            pjrt,
         })
     }
 
@@ -62,67 +85,34 @@ impl Runtime {
         &self.manifest
     }
 
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Whether `name` can be executed — present in the manifest, or
+    /// interpretable by the native backend.
     pub fn has_artifact(&self, name: &str) -> bool {
-        self.manifest.get(name).is_some()
+        self.manifest.get(name).is_some() || native::supports(name)
     }
 
     pub fn exec_count(&self) -> u64 {
         *self.exec_count.borrow()
     }
 
-    /// Compile (or fetch from cache) the named artifact.
-    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self
-            .manifest
-            .get(name)
-            .with_context(|| format!("artifact '{name}' not in manifest"))?;
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(to_anyhow)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(to_anyhow)?;
-        let rc = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
-        Ok(rc)
-    }
-
-    /// Number of executables compiled so far.
-    pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
-    }
-
-    /// Execute `name`. `inputs` must match the manifest spec in order,
-    /// shape, and dtype. Returns the output tuple elements as f32 tensors.
+    /// Execute `name` on the selected backend. `inputs` follow the canonical
+    /// parameter order of the artifact (data inputs first, then parameters
+    /// in `param_spec` order). Returns the output tuple elements as f32
+    /// tensors.
     pub fn execute(&self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<Tensor>> {
-        let spec = self
-            .manifest
-            .get(name)
-            .with_context(|| format!("artifact '{name}' not in manifest"))?;
-        if inputs.len() != spec.inputs.len() {
-            bail!(
-                "artifact '{name}': got {} inputs, manifest expects {}",
-                inputs.len(),
-                spec.inputs.len()
-            );
+        #[cfg(pjrt_backend)]
+        if let (Some(backend), Some(spec)) = (&self.pjrt, self.manifest.get(name)) {
+            let out = backend.execute(&self.dir, spec, inputs)?;
+            *self.exec_count.borrow_mut() += 1;
+            return Ok(out);
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (inp, ispec) in inputs.iter().zip(&spec.inputs) {
-            literals.push(inp.to_literal(ispec, name)?);
-        }
-        let exe = self.executable(name)?;
-        let result = exe.execute::<xla::Literal>(&literals).map_err(to_anyhow)?;
+        let out = native::execute(name, inputs)
+            .with_context(|| format!("native execute of artifact '{name}'"))?;
         *self.exec_count.borrow_mut() += 1;
-        let mut tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;
-        // Graphs are lowered with return_tuple=True.
-        let elems = tuple.decompose_tuple().map_err(to_anyhow)?;
-        let mut out = Vec::with_capacity(elems.len());
-        for lit in elems {
-            out.push(literal_to_tensor(&lit)?);
-        }
         Ok(out)
     }
 }
@@ -134,58 +124,18 @@ pub enum Input<'a> {
     Scalar(f32),
 }
 
-impl<'a> Input<'a> {
-    fn to_literal(&self, spec: &IoSpec, artifact: &str) -> Result<xla::Literal> {
-        match self {
-            Input::F32(t) => {
-                if spec.dtype != "f32" {
-                    bail!("{artifact}/{}: expected dtype {}, got f32", spec.name, spec.dtype);
-                }
-                if t.shape() != spec.shape.as_slice() {
-                    bail!(
-                        "{artifact}/{}: shape {:?} != manifest {:?}",
-                        spec.name,
-                        t.shape(),
-                        spec.shape
-                    );
-                }
-                let lit = xla::Literal::vec1(t.data());
-                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).map_err(to_anyhow)
-            }
-            Input::I32(v, shape) => {
-                if spec.dtype != "i32" {
-                    bail!("{artifact}/{}: expected dtype {}, got i32", spec.name, spec.dtype);
-                }
-                if shape != &spec.shape {
-                    bail!(
-                        "{artifact}/{}: shape {:?} != manifest {:?}",
-                        spec.name,
-                        shape,
-                        spec.shape
-                    );
-                }
-                let lit = xla::Literal::vec1(*v);
-                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).map_err(to_anyhow)
-            }
-            Input::Scalar(v) => {
-                if !spec.shape.is_empty() {
-                    bail!("{artifact}/{}: scalar provided for non-scalar input", spec.name);
-                }
-                Ok(xla::Literal::from(*v))
-            }
-        }
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_without_artifacts_uses_native() {
+        let dir = std::env::temp_dir().join("corp_no_artifacts_here");
+        let rt = Runtime::new(&dir).unwrap();
+        assert_eq!(rt.manifest().len(), 0);
+        assert!(rt.has_artifact("embed_vit_t_b16"));
+        assert!(rt.has_artifact("train_gpt_s"));
+        assert!(!rt.has_artifact("definitely_not_an_artifact"));
+        assert_eq!(rt.exec_count(), 0);
     }
-}
-
-fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
-    let shape = lit.array_shape().map_err(to_anyhow)?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data: Vec<f32> = lit.to_vec().map_err(to_anyhow)?;
-    Ok(Tensor::from_vec(&dims, data))
-}
-
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("{e}")
 }

@@ -1,0 +1,762 @@
+//! Forward-pass math for the native backend.
+//!
+//! Single-example bodies mirror `python/compile/model.py` (`vit_embed_one`,
+//! `block_one`, `head_one`) with the `kernels/ref.py` definitions: layernorm
+//! over the trailing dim with ε = 1e-6, tanh-approximate GELU, softmax
+//! attention at the dense-head scale 1/√dh (kept after pruning, §3.4), and
+//! causal masking for GPT. Batch slabs fan out per example over the worker
+//! pool; per-example arithmetic is identical regardless of worker count.
+
+use anyhow::{bail, Result};
+
+use super::In;
+use crate::linalg::gemm::{dot_f32, matmul_f32};
+use crate::model::{ModelConfig, ModelKind};
+use crate::tensor::Tensor;
+use crate::util::threads;
+
+pub(crate) const LN_EPS: f32 = 1e-6;
+
+/// LayerNorm over the trailing dimension of a [rows, d] slab.
+pub(crate) fn layernorm(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * d);
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let or = &mut out[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for j in 0..d {
+            or[j] = (xr[j] - mu) * inv * g[j] + b[j];
+        }
+    }
+    out
+}
+
+/// Tanh-approximate GELU (matches `kernels/ref.py::gelu`).
+#[inline]
+pub(crate) fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    const A: f32 = 0.044_715;
+    0.5 * x * (1.0 + (C * (x + A * x * x * x)).tanh())
+}
+
+/// Derivative of the tanh-approximate GELU.
+#[inline]
+pub(crate) fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56;
+    const A: f32 = 0.044_715;
+    let u = C * (x + A * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * A * x * x)
+}
+
+/// y[rows, dout] = x[rows, din] · w[din, dout] (+ bias broadcast).
+pub(crate) fn linear(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    let mut out = vec![0.0f32; rows * dout];
+    if let Some(b) = bias {
+        debug_assert_eq!(b.len(), dout);
+        for r in 0..rows {
+            out[r * dout..(r + 1) * dout].copy_from_slice(b);
+        }
+    }
+    matmul_f32(x, w, &mut out, rows, din, dout);
+    out
+}
+
+/// Row-wise softmax in place.
+pub(crate) fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Gather a per-head column block: src [n, stride] → [n, width] starting at
+/// column `at`.
+pub(crate) fn gather_cols(src: &[f32], n: usize, stride: usize, at: usize, width: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * width];
+    for t in 0..n {
+        out[t * width..(t + 1) * width]
+            .copy_from_slice(&src[t * stride + at..t * stride + at + width]);
+    }
+    out
+}
+
+/// Scatter a per-head block back: dst [n, stride], block [n, width].
+pub(crate) fn scatter_cols(dst: &mut [f32], block: &[f32], n: usize, stride: usize, at: usize, width: usize) {
+    for t in 0..n {
+        dst[t * stride + at..t * stride + at + width]
+            .copy_from_slice(&block[t * width..(t + 1) * width]);
+    }
+}
+
+/// Raw attention logits q·kᵀ·scale [n, n] with optional causal mask.
+pub(crate) fn attn_logits(
+    q: &[f32],
+    k: &[f32],
+    n: usize,
+    dqk: usize,
+    scale: f32,
+    causal: bool,
+) -> Vec<f32> {
+    let mut logits = vec![0.0f32; n * n];
+    for t in 0..n {
+        let qt = &q[t * dqk..(t + 1) * dqk];
+        let row = &mut logits[t * n..(t + 1) * n];
+        for (s, rv) in row.iter_mut().enumerate() {
+            *rv = dot_f32(qt, &k[s * dqk..(s + 1) * dqk]) * scale;
+        }
+        if causal {
+            for rv in row.iter_mut().skip(t + 1) {
+                *rv = f32::NEG_INFINITY;
+            }
+        }
+    }
+    logits
+}
+
+/// Softmax attention for one head: probs · v. Returns (att [n, dv],
+/// probs [n, n]).
+pub(crate) fn attention_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    dqk: usize,
+    dv: usize,
+    scale: f32,
+    causal: bool,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut probs = attn_logits(q, k, n, dqk, scale, causal);
+    softmax_rows(&mut probs, n, n);
+    let mut att = vec![0.0f32; n * dv];
+    matmul_f32(&probs, v, &mut att, n, n, dv);
+    (att, probs)
+}
+
+/// Per-block parameter views in `block_param_spec` order.
+pub(crate) struct BlockParams<'a> {
+    pub ln1g: &'a [f32],
+    pub ln1b: &'a [f32],
+    pub wq: &'a [f32],
+    pub bq: &'a [f32],
+    pub wk: &'a [f32],
+    pub bk: &'a [f32],
+    pub wv: &'a [f32],
+    pub bv: &'a [f32],
+    pub wo: &'a [f32],
+    pub bo: &'a [f32],
+    pub ln2g: &'a [f32],
+    pub ln2b: &'a [f32],
+    pub w1: &'a [f32],
+    pub b1: &'a [f32],
+    pub w2: &'a [f32],
+    pub b2: &'a [f32],
+}
+
+impl<'a> BlockParams<'a> {
+    /// Build from 16 slices in spec order (shapes already validated).
+    pub(crate) fn from_slices(s: &[&'a [f32]]) -> Self {
+        assert_eq!(s.len(), 16);
+        BlockParams {
+            ln1g: s[0],
+            ln1b: s[1],
+            wq: s[2],
+            bq: s[3],
+            wk: s[4],
+            bk: s[5],
+            wv: s[6],
+            bv: s[7],
+            wo: s[8],
+            bo: s[9],
+            ln2g: s[10],
+            ln2b: s[11],
+            w1: s[12],
+            b1: s[13],
+            w2: s[14],
+            b2: s[15],
+        }
+    }
+
+    pub(crate) fn read(cfg: &ModelConfig, dqk: usize, o: usize, inp: &mut In<'_, 'a>) -> Result<Self> {
+        let spec = cfg.block_param_spec(dqk, o);
+        let mut slices: Vec<&'a [f32]> = Vec::with_capacity(16);
+        for (name, shape) in &spec {
+            slices.push(inp.slice(shape.iter().product(), name)?);
+        }
+        Ok(Self::from_slices(&slices))
+    }
+}
+
+/// Output of one transformer block on one example.
+pub(crate) struct BlockOut {
+    pub y: Vec<f32>,
+    /// Post-GELU hidden [n, o] (capture mode).
+    pub hidden: Option<Vec<f32>>,
+    /// Per-head queries [h, n, dqk] (capture mode).
+    pub q: Option<Vec<f32>>,
+    /// Per-head keys [h, n, dqk] (capture mode).
+    pub k: Option<Vec<f32>>,
+}
+
+/// One transformer block on a single example x [n, d]
+/// (`model.py::block_one`).
+pub(crate) fn block_one(
+    cfg: &ModelConfig,
+    dqk: usize,
+    o: usize,
+    p: &BlockParams<'_>,
+    x: &[f32],
+    causal: bool,
+    capture: bool,
+) -> BlockOut {
+    let (n, d, h, dh) = (cfg.n_ctx, cfg.d, cfg.heads, cfg.dh());
+    debug_assert_eq!(x.len(), n * d);
+    // Dense-head scale even when dqk < dh (§3.4).
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let xn = layernorm(x, n, d, p.ln1g, p.ln1b);
+    let qf = linear(&xn, n, d, p.wq, h * dqk, Some(p.bq));
+    let kf = linear(&xn, n, d, p.wk, h * dqk, Some(p.bk));
+    let vf = linear(&xn, n, d, p.wv, h * dh, Some(p.bv));
+
+    let mut merged = vec![0.0f32; n * h * dh];
+    let mut qcap = if capture { Some(vec![0.0f32; h * n * dqk]) } else { None };
+    let mut kcap = if capture { Some(vec![0.0f32; h * n * dqk]) } else { None };
+    for head in 0..h {
+        let qh = gather_cols(&qf, n, h * dqk, head * dqk, dqk);
+        let kh = gather_cols(&kf, n, h * dqk, head * dqk, dqk);
+        let vh = gather_cols(&vf, n, h * dh, head * dh, dh);
+        let (att, _probs) = attention_one(&qh, &kh, &vh, n, dqk, dh, scale, causal);
+        scatter_cols(&mut merged, &att, n, h * dh, head * dh, dh);
+        if let Some(qc) = &mut qcap {
+            qc[head * n * dqk..(head + 1) * n * dqk].copy_from_slice(&qh);
+        }
+        if let Some(kc) = &mut kcap {
+            kc[head * n * dqk..(head + 1) * n * dqk].copy_from_slice(&kh);
+        }
+    }
+    let attn_out = linear(&merged, n, h * dh, p.wo, d, Some(p.bo));
+    let y: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+
+    let yn = layernorm(&y, n, d, p.ln2g, p.ln2b);
+    let mut hidden = linear(&yn, n, d, p.w1, o, Some(p.b1));
+    for v in hidden.iter_mut() {
+        *v = gelu(*v);
+    }
+    let mlp_out = linear(&hidden, n, o, p.w2, d, Some(p.b2));
+    let z: Vec<f32> = y.iter().zip(&mlp_out).map(|(a, b)| a + b).collect();
+    BlockOut { y: z, hidden: capture.then_some(hidden), q: qcap, k: kcap }
+}
+
+fn check_slab(t: &Tensor, shape: &[usize], what: &str) -> Result<()> {
+    if t.shape() != shape {
+        bail!("{what}: shape {:?}, expected {shape:?}", t.shape());
+    }
+    Ok(())
+}
+
+/// `block_*` / `blockcap_*`: x [b, n, d] + 16 block params → y [b, n, d]
+/// (+ hidden [b, n, o], q/k [b, h, n, dqk] in capture mode).
+pub(crate) fn run_block(
+    cfg: &'static ModelConfig,
+    dqk: usize,
+    o: usize,
+    b: usize,
+    capture: bool,
+    inp: &mut In<'_, '_>,
+) -> Result<Vec<Tensor>> {
+    let (n, d, h) = (cfg.n_ctx, cfg.d, cfg.heads);
+    let x = inp.tensor()?;
+    check_slab(x, &[b, n, d], "block input")?;
+    let p = BlockParams::read(cfg, dqk, o, inp)?;
+    let causal = cfg.kind == ModelKind::Gpt;
+    let outs: Vec<BlockOut> = threads::parallel_map(b, |e| {
+        block_one(cfg, dqk, o, &p, &x.data()[e * n * d..(e + 1) * n * d], causal, capture)
+    });
+    let mut y = Vec::with_capacity(b * n * d);
+    for out in &outs {
+        y.extend_from_slice(&out.y);
+    }
+    let y = Tensor::from_vec(&[b, n, d], y);
+    if !capture {
+        return Ok(vec![y]);
+    }
+    let mut hidden = Vec::with_capacity(b * n * o);
+    let mut q = Vec::with_capacity(b * h * n * dqk);
+    let mut k = Vec::with_capacity(b * h * n * dqk);
+    for out in &outs {
+        hidden.extend_from_slice(out.hidden.as_ref().expect("capture hidden"));
+        q.extend_from_slice(out.q.as_ref().expect("capture q"));
+        k.extend_from_slice(out.k.as_ref().expect("capture k"));
+    }
+    Ok(vec![
+        y,
+        Tensor::from_vec(&[b, n, o], hidden),
+        Tensor::from_vec(&[b, h, n, dqk], q),
+        Tensor::from_vec(&[b, h, n, dqk], k),
+    ])
+}
+
+/// `mlponly_*`: attention-free block (`model.py::mlponly_block_one`).
+pub(crate) fn run_mlponly(
+    cfg: &'static ModelConfig,
+    o: usize,
+    b: usize,
+    inp: &mut In<'_, '_>,
+) -> Result<Vec<Tensor>> {
+    let (n, d) = (cfg.n_ctx, cfg.d);
+    let x = inp.tensor()?;
+    check_slab(x, &[b, n, d], "mlponly input")?;
+    let ln2g = inp.slice(d, "ln2.g")?;
+    let ln2b = inp.slice(d, "ln2.b")?;
+    let w1 = inp.slice(d * o, "mlp.w1")?;
+    let b1 = inp.slice(o, "mlp.b1")?;
+    let w2 = inp.slice(o * d, "mlp.w2")?;
+    let b2 = inp.slice(d, "mlp.b2")?;
+    let rows = b * n;
+    let yn = layernorm(x.data(), rows, d, ln2g, ln2b);
+    let mut hidden = linear(&yn, rows, d, w1, o, Some(b1));
+    for v in hidden.iter_mut() {
+        *v = gelu(*v);
+    }
+    let mlp_out = linear(&hidden, rows, o, w2, d, Some(b2));
+    let y: Vec<f32> = x.data().iter().zip(&mlp_out).map(|(a, m)| a + m).collect();
+    Ok(vec![Tensor::from_vec(&[b, n, d], y)])
+}
+
+/// Embedding parameter views.
+pub(crate) enum EmbedParams<'a> {
+    Vit { we: &'a [f32], be: &'a [f32], cls: &'a [f32], pos: &'a [f32] },
+    Gpt { wemb: &'a [f32], pos: &'a [f32] },
+}
+
+impl<'a> EmbedParams<'a> {
+    pub(crate) fn read(cfg: &ModelConfig, inp: &mut In<'_, 'a>) -> Result<Self> {
+        match cfg.kind {
+            ModelKind::Vit => Ok(EmbedParams::Vit {
+                we: inp.slice(cfg.patch_dim * cfg.d, "embed.w")?,
+                be: inp.slice(cfg.d, "embed.b")?,
+                cls: inp.slice(cfg.d, "embed.cls")?,
+                pos: inp.slice(cfg.n_ctx * cfg.d, "embed.pos")?,
+            }),
+            ModelKind::Gpt => Ok(EmbedParams::Gpt {
+                wemb: inp.slice(cfg.vocab * cfg.d, "embed.w")?,
+                pos: inp.slice(cfg.n_ctx * cfg.d, "embed.pos")?,
+            }),
+        }
+    }
+
+    pub(crate) fn from_slices(cfg: &ModelConfig, s: &[&'a [f32]]) -> Self {
+        match cfg.kind {
+            ModelKind::Vit => EmbedParams::Vit { we: s[0], be: s[1], cls: s[2], pos: s[3] },
+            ModelKind::Gpt => EmbedParams::Gpt { wemb: s[0], pos: s[1] },
+        }
+    }
+}
+
+/// ViT patch embedding for one example: tokens [P, pd] → x [P+1, d].
+pub(crate) fn vit_embed_one(cfg: &ModelConfig, ep: &EmbedParams<'_>, tokens: &[f32]) -> Vec<f32> {
+    let (pn, pd, d, n) = (cfg.patches, cfg.patch_dim, cfg.d, cfg.n_ctx);
+    let (we, be, cls, pos) = match ep {
+        EmbedParams::Vit { we, be, cls, pos } => (*we, *be, *cls, *pos),
+        EmbedParams::Gpt { .. } => panic!("vit embed with gpt params"),
+    };
+    debug_assert_eq!(tokens.len(), pn * pd);
+    let xe = linear(tokens, pn, pd, we, d, Some(be));
+    let mut x = vec![0.0f32; n * d];
+    for j in 0..d {
+        x[j] = cls[j] + pos[j];
+    }
+    for t in 0..pn {
+        let dst = &mut x[(t + 1) * d..(t + 2) * d];
+        let src = &xe[t * d..(t + 1) * d];
+        let ps = &pos[(t + 1) * d..(t + 2) * d];
+        for j in 0..d {
+            dst[j] = src[j] + ps[j];
+        }
+    }
+    x
+}
+
+/// GPT token embedding for one example: ids [n] → x [n, d].
+pub(crate) fn gpt_embed_one(cfg: &ModelConfig, ep: &EmbedParams<'_>, ids: &[i32]) -> Result<Vec<f32>> {
+    let (d, n, vocab) = (cfg.d, cfg.n_ctx, cfg.vocab);
+    let (wemb, pos) = match ep {
+        EmbedParams::Gpt { wemb, pos } => (*wemb, *pos),
+        EmbedParams::Vit { .. } => panic!("gpt embed with vit params"),
+    };
+    debug_assert_eq!(ids.len(), n);
+    let mut x = vec![0.0f32; n * d];
+    for t in 0..n {
+        let id = ids[t];
+        if id < 0 || id as usize >= vocab {
+            bail!("token id {id} out of vocab range 0..{vocab}");
+        }
+        let row = &wemb[id as usize * d..(id as usize + 1) * d];
+        let ps = &pos[t * d..(t + 1) * d];
+        let dst = &mut x[t * d..(t + 1) * d];
+        for j in 0..d {
+            dst[j] = row[j] + ps[j];
+        }
+    }
+    Ok(x)
+}
+
+/// `embed_*`: batch embedding.
+pub(crate) fn run_embed(cfg: &'static ModelConfig, b: usize, inp: &mut In<'_, '_>) -> Result<Vec<Tensor>> {
+    let (n, d) = (cfg.n_ctx, cfg.d);
+    match cfg.kind {
+        ModelKind::Vit => {
+            let tokens = inp.tensor()?;
+            check_slab(tokens, &[b, cfg.patches, cfg.patch_dim], "embed tokens")?;
+            let ep = EmbedParams::read(cfg, inp)?;
+            let per = cfg.patches * cfg.patch_dim;
+            let rows: Vec<Vec<f32>> = threads::parallel_map(b, |e| {
+                vit_embed_one(cfg, &ep, &tokens.data()[e * per..(e + 1) * per])
+            });
+            let mut out = Vec::with_capacity(b * n * d);
+            for r in rows {
+                out.extend_from_slice(&r);
+            }
+            Ok(vec![Tensor::from_vec(&[b, n, d], out)])
+        }
+        ModelKind::Gpt => {
+            let ids = inp.ints()?;
+            if ids.len() != b * n {
+                bail!("embed ids: {} values, expected {}", ids.len(), b * n);
+            }
+            let ep = EmbedParams::read(cfg, inp)?;
+            let mut out = Vec::with_capacity(b * n * d);
+            for e in 0..b {
+                out.extend_from_slice(&gpt_embed_one(cfg, &ep, &ids[e * n..(e + 1) * n])?);
+            }
+            Ok(vec![Tensor::from_vec(&[b, n, d], out)])
+        }
+    }
+}
+
+/// `head_*`: classification / LM head (`model.py::head_one`).
+pub(crate) fn run_head(cfg: &'static ModelConfig, b: usize, inp: &mut In<'_, '_>) -> Result<Vec<Tensor>> {
+    let (n, d) = (cfg.n_ctx, cfg.d);
+    let x = inp.tensor()?;
+    check_slab(x, &[b, n, d], "head input")?;
+    let g = inp.slice(d, "head.ln.g")?;
+    let bb = inp.slice(d, "head.ln.b")?;
+    let out_dim = match cfg.kind {
+        ModelKind::Vit => cfg.classes,
+        ModelKind::Gpt => cfg.vocab,
+    };
+    let w = inp.slice(d * out_dim, "head.w")?;
+    let bias = inp.slice(out_dim, "head.b")?;
+    let xn = layernorm(x.data(), b * n, d, g, bb);
+    match cfg.kind {
+        ModelKind::Vit => {
+            // CLS-token logits per example.
+            let mut logits = vec![0.0f32; b * out_dim];
+            for e in 0..b {
+                let row = &xn[e * n * d..e * n * d + d];
+                let lr = &mut logits[e * out_dim..(e + 1) * out_dim];
+                lr.copy_from_slice(bias);
+                for (c, &xv) in row.iter().enumerate() {
+                    let wrow = &w[c * out_dim..(c + 1) * out_dim];
+                    for (j, lv) in lr.iter_mut().enumerate() {
+                        *lv += xv * wrow[j];
+                    }
+                }
+            }
+            Ok(vec![Tensor::from_vec(&[b, out_dim], logits)])
+        }
+        ModelKind::Gpt => {
+            let logits = linear(&xn, b * n, d, w, out_dim, Some(bias));
+            Ok(vec![Tensor::from_vec(&[b, n, out_dim], logits)])
+        }
+    }
+}
+
+/// `lnf_*`: final layernorm features.
+pub(crate) fn run_lnf(cfg: &'static ModelConfig, b: usize, inp: &mut In<'_, '_>) -> Result<Vec<Tensor>> {
+    let (n, d) = (cfg.n_ctx, cfg.d);
+    let x = inp.tensor()?;
+    check_slab(x, &[b, n, d], "lnf input")?;
+    let g = inp.slice(d, "ln.g")?;
+    let bb = inp.slice(d, "ln.b")?;
+    let out = layernorm(x.data(), b * n, d, g, bb);
+    Ok(vec![Tensor::from_vec(&[b, n, d], out)])
+}
+
+/// Full model parameter views (dense shapes, canonical spec order).
+pub(crate) struct ModelParams<'a> {
+    pub embed: EmbedParams<'a>,
+    pub blocks: Vec<BlockParams<'a>>,
+    pub head_ln_g: &'a [f32],
+    pub head_ln_b: &'a [f32],
+    pub head_w: &'a [f32],
+    pub head_b: &'a [f32],
+}
+
+impl<'a> ModelParams<'a> {
+    pub(crate) fn read(cfg: &ModelConfig, inp: &mut In<'_, 'a>) -> Result<Self> {
+        let embed = EmbedParams::read(cfg, inp)?;
+        let mut blocks = Vec::with_capacity(cfg.layers);
+        for _ in 0..cfg.layers {
+            blocks.push(BlockParams::read(cfg, cfg.dh(), cfg.mlp, inp)?);
+        }
+        let out_dim = match cfg.kind {
+            ModelKind::Vit => cfg.classes,
+            ModelKind::Gpt => cfg.vocab,
+        };
+        Ok(ModelParams {
+            embed,
+            blocks,
+            head_ln_g: inp.slice(cfg.d, "head.ln.g")?,
+            head_ln_b: inp.slice(cfg.d, "head.ln.b")?,
+            head_w: inp.slice(cfg.d * out_dim, "head.w")?,
+            head_b: inp.slice(out_dim, "head.b")?,
+        })
+    }
+
+    /// Build from a flat slice list in spec order (the train path, where
+    /// parameters live in mutable buffers rather than `Input`s).
+    pub(crate) fn from_slices(cfg: &ModelConfig, flat: &[&'a [f32]]) -> Self {
+        let ne = match cfg.kind {
+            ModelKind::Vit => 4,
+            ModelKind::Gpt => 2,
+        };
+        let embed = EmbedParams::from_slices(cfg, &flat[..ne]);
+        let mut blocks = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            blocks.push(BlockParams::from_slices(&flat[ne + l * 16..ne + (l + 1) * 16]));
+        }
+        let hb = ne + cfg.layers * 16;
+        ModelParams {
+            embed,
+            blocks,
+            head_ln_g: flat[hb],
+            head_ln_b: flat[hb + 1],
+            head_w: flat[hb + 2],
+            head_b: flat[hb + 3],
+        }
+    }
+}
+
+/// Per-example input for a full forward.
+pub(crate) enum ExampleInput<'a> {
+    Vit(&'a [f32]),
+    Gpt(&'a [i32]),
+}
+
+/// Full dense forward for one example → logits (vit: [classes];
+/// gpt: [n, vocab]).
+pub(crate) fn forward_example(
+    cfg: &ModelConfig,
+    p: &ModelParams<'_>,
+    inp: ExampleInput<'_>,
+) -> Result<Vec<f32>> {
+    let (n, d) = (cfg.n_ctx, cfg.d);
+    let causal = cfg.kind == ModelKind::Gpt;
+    let mut x = match inp {
+        ExampleInput::Vit(tokens) => vit_embed_one(cfg, &p.embed, tokens),
+        ExampleInput::Gpt(ids) => gpt_embed_one(cfg, &p.embed, ids)?,
+    };
+    for bp in &p.blocks {
+        x = block_one(cfg, cfg.dh(), cfg.mlp, bp, &x, causal, false).y;
+    }
+    let xn = layernorm(&x, n, d, p.head_ln_g, p.head_ln_b);
+    let out_dim = match cfg.kind {
+        ModelKind::Vit => cfg.classes,
+        ModelKind::Gpt => cfg.vocab,
+    };
+    match cfg.kind {
+        ModelKind::Vit => {
+            let mut logits = p.head_b.to_vec();
+            for (c, &xv) in xn[..d].iter().enumerate() {
+                let wrow = &p.head_w[c * out_dim..(c + 1) * out_dim];
+                for (j, lv) in logits.iter_mut().enumerate() {
+                    *lv += xv * wrow[j];
+                }
+            }
+            Ok(logits)
+        }
+        ModelKind::Gpt => Ok(linear(&xn, n, d, p.head_w, out_dim, Some(p.head_b))),
+    }
+}
+
+/// −log softmax(row)[target].
+pub(crate) fn cross_entropy(row: &[f32], target: usize) -> f32 {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    let lse: f32 = row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln() + m;
+    lse - row[target]
+}
+
+/// `evloss_*`: mean cross-entropy over one eval batch (dense weights).
+pub(crate) fn run_evloss(cfg: &'static ModelConfig, inp: &mut In<'_, '_>) -> Result<Vec<Tensor>> {
+    let b = cfg.eval_batch();
+    let n = cfg.n_ctx;
+    match cfg.kind {
+        ModelKind::Vit => {
+            let tokens = inp.tensor()?;
+            check_slab(tokens, &[b, cfg.patches, cfg.patch_dim], "evloss tokens")?;
+            let labels = inp.ints()?;
+            if labels.len() != b {
+                bail!("evloss labels: {} values, expected {b}", labels.len());
+            }
+            let p = ModelParams::read(cfg, inp)?;
+            let per = cfg.patches * cfg.patch_dim;
+            let losses: Vec<Result<f32>> = threads::parallel_map(b, |e| {
+                let logits = forward_example(
+                    cfg,
+                    &p,
+                    ExampleInput::Vit(&tokens.data()[e * per..(e + 1) * per]),
+                )?;
+                let t = labels[e];
+                if t < 0 || t as usize >= cfg.classes {
+                    bail!("label {t} out of range");
+                }
+                Ok(cross_entropy(&logits, t as usize))
+            });
+            let mut total = 0.0f32;
+            for l in losses {
+                total += l?;
+            }
+            Ok(vec![Tensor::scalar(total / b as f32)])
+        }
+        ModelKind::Gpt => {
+            let ids = inp.ints()?;
+            if ids.len() != b * n {
+                bail!("evloss ids: {} values, expected {}", ids.len(), b * n);
+            }
+            let labels = inp.ints()?;
+            if labels.len() != b * n {
+                bail!("evloss labels: {} values, expected {}", labels.len(), b * n);
+            }
+            let p = ModelParams::read(cfg, inp)?;
+            let losses: Vec<Result<f32>> = threads::parallel_map(b, |e| {
+                let logits =
+                    forward_example(cfg, &p, ExampleInput::Gpt(&ids[e * n..(e + 1) * n]))?;
+                let mut s = 0.0f32;
+                for t in 0..n {
+                    let y = labels[e * n + t];
+                    if y < 0 || y as usize >= cfg.vocab {
+                        bail!("target {y} out of range");
+                    }
+                    s += cross_entropy(&logits[t * cfg.vocab..(t + 1) * cfg.vocab], y as usize);
+                }
+                Ok(s / n as f32)
+            });
+            let mut total = 0.0f32;
+            for l in losses {
+                total += l?;
+            }
+            Ok(vec![Tensor::scalar(total / b as f32)])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let x = [1.0f32, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 2.0];
+        let g = [1.0f32; 4];
+        let b = [0.0f32; 4];
+        let out = layernorm(&x, 2, 4, &g, &b);
+        for r in 0..2 {
+            let row = &out[r * 4..(r + 1) * 4];
+            let mu: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 4.0;
+            assert!(mu.abs() < 1e-5, "row {r} mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+        }
+        // gamma/beta applied after normalization
+        let out2 = layernorm(&x, 2, 4, &[2.0; 4], &[0.5; 4]);
+        for (a, c) in out.iter().zip(&out2) {
+            assert!((a * 2.0 + 0.5 - c).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.158_808).abs() < 1e-3);
+        // large |x|: identity / zero asymptotes
+        assert!((gelu(6.0) - 6.0).abs() < 1e-3);
+        assert!(gelu(-6.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let eps = 1e-3f32;
+            let fd = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={x}: {} vs {fd}", gelu_grad(x));
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = vec![0.1f32, 2.0, -1.0, 3.0, 3.0, 3.0];
+        softmax_rows(&mut x, 2, 3);
+        for r in 0..2 {
+            let s: f32 = x[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!((x[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn causal_mask_zeroes_future() {
+        let q = vec![1.0f32; 3 * 2];
+        let k = vec![1.0f32; 3 * 2];
+        let v = vec![1.0f32; 3 * 2];
+        let (att, probs) = attention_one(&q, &k, &v, 3, 2, 2, 0.5, true);
+        // Row 0 can only attend to itself.
+        assert!((probs[0] - 1.0).abs() < 1e-6);
+        assert!(probs[1] == 0.0 && probs[2] == 0.0);
+        // Uniform inputs: attention output is the value vector.
+        for a in att {
+            assert!((a - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let src: Vec<f32> = (0..12).map(|v| v as f32).collect(); // [3, 4]
+        let blk = gather_cols(&src, 3, 4, 1, 2);
+        assert_eq!(blk, vec![1., 2., 5., 6., 9., 10.]);
+        let mut dst = vec![0.0f32; 12];
+        scatter_cols(&mut dst, &blk, 3, 4, 1, 2);
+        assert_eq!(dst[1], 1.0);
+        assert_eq!(dst[6], 6.0);
+        assert_eq!(dst[0], 0.0);
+    }
+
+    #[test]
+    fn cross_entropy_uniform() {
+        let row = vec![0.0f32; 16];
+        assert!((cross_entropy(&row, 3) - (16.0f32).ln()).abs() < 1e-5);
+    }
+}

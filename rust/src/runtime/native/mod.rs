@@ -1,0 +1,202 @@
+//! Pure-Rust interpreter for the AOT artifact family.
+//!
+//! Artifact names encode everything the interpreter needs
+//! (`block_vit_b_q16_o384_b16` → model config, pruned dims, batch), and the
+//! input convention is shared with the PJRT path: data tensors first, then
+//! parameters in canonical `param_spec` order. The math mirrors
+//! `python/compile/model.py` / `kernels/ref.py` exactly (tanh-GELU,
+//! layernorm ε = 1e-6, dense-head 1/√dh logit scale, causal masking for
+//! GPT), so weights trained or pruned under either backend are
+//! interchangeable.
+//!
+//! Heavy lifting runs on the packed parallel linalg kernels; batches fan
+//! out per example over the worker pool. The `train_*` artifacts are served
+//! by a hand-written reverse-mode pass (see [`train`]) driving the same
+//! Adam update as the JAX graph.
+
+pub(crate) mod forward;
+pub(crate) mod train;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::runtime::Input;
+use crate::tensor::Tensor;
+
+/// A parsed artifact name.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Op {
+    Embed { cfg: &'static ModelConfig, b: usize },
+    Head { cfg: &'static ModelConfig, b: usize },
+    Lnf { cfg: &'static ModelConfig, b: usize },
+    Block { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize },
+    BlockCap { cfg: &'static ModelConfig, b: usize },
+    MlpOnly { cfg: &'static ModelConfig, o: usize, b: usize },
+    EvLoss { cfg: &'static ModelConfig },
+    Train { cfg: &'static ModelConfig },
+}
+
+fn tail_num<'s>(s: &'s str, sep: &str) -> Option<(&'s str, usize)> {
+    let (head, num) = s.rsplit_once(sep)?;
+    num.parse().ok().map(|n| (head, n))
+}
+
+pub(crate) fn parse(name: &str) -> Option<Op> {
+    // Longest prefixes first: "block_" is a prefix of "blockcap_".
+    if let Some(rest) = name.strip_prefix("blockcap_") {
+        let (m, b) = tail_num(rest, "_b")?;
+        return ModelConfig::by_name(m).map(|cfg| Op::BlockCap { cfg, b });
+    }
+    if let Some(rest) = name.strip_prefix("block_") {
+        let (rest, b) = tail_num(rest, "_b")?;
+        let (rest, o) = tail_num(rest, "_o")?;
+        let (m, dqk) = tail_num(rest, "_q")?;
+        return ModelConfig::by_name(m).map(|cfg| Op::Block { cfg, dqk, o, b });
+    }
+    if let Some(rest) = name.strip_prefix("mlponly_") {
+        let (rest, b) = tail_num(rest, "_b")?;
+        let (m, o) = tail_num(rest, "_o")?;
+        return ModelConfig::by_name(m).map(|cfg| Op::MlpOnly { cfg, o, b });
+    }
+    if let Some(rest) = name.strip_prefix("embed_") {
+        let (m, b) = tail_num(rest, "_b")?;
+        return ModelConfig::by_name(m).map(|cfg| Op::Embed { cfg, b });
+    }
+    if let Some(rest) = name.strip_prefix("head_") {
+        let (m, b) = tail_num(rest, "_b")?;
+        return ModelConfig::by_name(m).map(|cfg| Op::Head { cfg, b });
+    }
+    if let Some(rest) = name.strip_prefix("lnf_") {
+        let (m, b) = tail_num(rest, "_b")?;
+        return ModelConfig::by_name(m).map(|cfg| Op::Lnf { cfg, b });
+    }
+    if let Some(rest) = name.strip_prefix("evloss_") {
+        return ModelConfig::by_name(rest).map(|cfg| Op::EvLoss { cfg });
+    }
+    if let Some(rest) = name.strip_prefix("train_") {
+        return ModelConfig::by_name(rest).map(|cfg| Op::Train { cfg });
+    }
+    None
+}
+
+/// Whether the native backend can interpret `name`.
+pub fn supports(name: &str) -> bool {
+    parse(name).is_some()
+}
+
+/// Execute an artifact natively.
+pub fn execute(name: &str, inputs: &[Input<'_>]) -> Result<Vec<Tensor>> {
+    let op = match parse(name) {
+        Some(op) => op,
+        None => bail!("unknown artifact '{name}' (no manifest entry, not native-interpretable)"),
+    };
+    let mut inp = In::new(inputs);
+    match op {
+        Op::Embed { cfg, b } => forward::run_embed(cfg, b, &mut inp),
+        Op::Head { cfg, b } => forward::run_head(cfg, b, &mut inp),
+        Op::Lnf { cfg, b } => forward::run_lnf(cfg, b, &mut inp),
+        Op::Block { cfg, dqk, o, b } => forward::run_block(cfg, dqk, o, b, false, &mut inp),
+        Op::BlockCap { cfg, b } => {
+            forward::run_block(cfg, cfg.dh(), cfg.mlp, b, true, &mut inp)
+        }
+        Op::MlpOnly { cfg, o, b } => forward::run_mlponly(cfg, o, b, &mut inp),
+        Op::EvLoss { cfg } => forward::run_evloss(cfg, &mut inp),
+        Op::Train { cfg } => train::run_train(cfg, &mut inp),
+    }
+    .with_context(|| format!("interpreting '{name}'"))
+}
+
+/// Sequential input cursor: artifacts consume data inputs first, then
+/// parameters in canonical spec order.
+pub(crate) struct In<'i, 'a> {
+    items: &'i [Input<'a>],
+    pos: usize,
+}
+
+impl<'i, 'a> In<'i, 'a> {
+    pub(crate) fn new(items: &'i [Input<'a>]) -> Self {
+        Self { items, pos: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.items.len() - self.pos
+    }
+
+    pub(crate) fn tensor(&mut self) -> Result<&'a Tensor> {
+        let i = self.pos;
+        self.pos += 1;
+        match self.items.get(i) {
+            Some(Input::F32(t)) => Ok(*t),
+            Some(_) => bail!("input {i}: expected an f32 tensor"),
+            None => bail!("input {i}: missing (have {})", self.items.len()),
+        }
+    }
+
+    /// Next f32 tensor's raw data, validated against an expected length.
+    pub(crate) fn slice(&mut self, expect_len: usize, what: &str) -> Result<&'a [f32]> {
+        let t = self.tensor().with_context(|| format!("parameter '{what}'"))?;
+        if t.len() != expect_len {
+            bail!("parameter '{what}': {} values, expected {expect_len}", t.len());
+        }
+        Ok(t.data())
+    }
+
+    pub(crate) fn ints(&mut self) -> Result<&'a [i32]> {
+        let i = self.pos;
+        self.pos += 1;
+        match self.items.get(i) {
+            Some(Input::I32(v, _)) => Ok(*v),
+            Some(_) => bail!("input {i}: expected an i32 tensor"),
+            None => bail!("input {i}: missing (have {})", self.items.len()),
+        }
+    }
+
+    pub(crate) fn scalar(&mut self) -> Result<f32> {
+        let i = self.pos;
+        self.pos += 1;
+        match self.items.get(i) {
+            Some(Input::Scalar(v)) => Ok(*v),
+            Some(_) => bail!("input {i}: expected a scalar"),
+            None => bail!("input {i}: missing (have {})", self.items.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_artifact_family() {
+        assert!(matches!(parse("embed_vit_t_b16"), Some(Op::Embed { b: 16, .. })));
+        assert!(matches!(parse("embed_vit_t_b1"), Some(Op::Embed { b: 1, .. })));
+        match parse("block_vit_b_q16_o384_b16") {
+            Some(Op::Block { cfg, dqk, o, b }) => {
+                assert_eq!(cfg.name, "vit_b");
+                assert_eq!((dqk, o, b), (16, 384, 16));
+            }
+            other => panic!("bad parse: {other:?}"),
+        }
+        // `_b` inside the model name must not confuse the suffix parser.
+        match parse("blockcap_vit_b_b16") {
+            Some(Op::BlockCap { cfg, b }) => {
+                assert_eq!(cfg.name, "vit_b");
+                assert_eq!(b, 16);
+            }
+            other => panic!("bad parse: {other:?}"),
+        }
+        assert!(matches!(parse("mlponly_vit_t_o384_b16"), Some(Op::MlpOnly { o: 384, b: 16, .. })));
+        assert!(matches!(parse("head_gpt_s_b8"), Some(Op::Head { b: 8, .. })));
+        assert!(matches!(parse("lnf_vit_t_b16"), Some(Op::Lnf { .. })));
+        assert!(matches!(parse("evloss_gpt_s"), Some(Op::EvLoss { .. })));
+        assert!(matches!(parse("train_vit_t"), Some(Op::Train { .. })));
+    }
+
+    #[test]
+    fn rejects_unknown_names() {
+        assert!(parse("block_vit_t_q32_o384").is_none()); // missing batch
+        assert!(parse("embed_unknown_b16").is_none());
+        assert!(parse("bogus").is_none());
+        assert!(!supports(""));
+    }
+}

@@ -1,0 +1,140 @@
+//! PJRT backend: compiles and executes the AOT HLO-text artifacts through
+//! the `xla` crate. Only compiled under `--cfg pjrt_backend` (set via
+//! RUSTFLAGS), which additionally requires the vendored `xla` dependency to
+//! be declared in Cargo.toml — the crate exists only in the vendored build
+//! environment, which is why this is a rustc cfg and not a cargo feature
+//! (`--all-features` must stay buildable offline).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{ArtifactSpec, Input, IoSpec};
+use crate::tensor::Tensor;
+
+/// A live PJRT client plus the per-process executable cache.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Self { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn executable(
+        &self,
+        dir: &Path,
+        spec: &ArtifactSpec,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(&spec.name) {
+            return Ok(e.clone());
+        }
+        let path = dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(to_anyhow)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+        let rc = Rc::new(exe);
+        self.cache.borrow_mut().insert(spec.name.clone(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute an artifact. `inputs` must match the manifest spec in order,
+    /// shape, and dtype. Returns the output tuple elements as f32 tensors.
+    pub fn execute(
+        &self,
+        dir: &Path,
+        spec: &ArtifactSpec,
+        inputs: &[Input<'_>],
+    ) -> Result<Vec<Tensor>> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{}': got {} inputs, manifest expects {}",
+                spec.name,
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (inp, ispec) in inputs.iter().zip(&spec.inputs) {
+            literals.push(to_literal(inp, ispec, &spec.name)?);
+        }
+        let exe = self.executable(dir, spec)?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(to_anyhow)?;
+        // Graphs are lowered with return_tuple=True.
+        let mut tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        let elems = tuple.decompose_tuple().map_err(to_anyhow)?;
+        let mut out = Vec::with_capacity(elems.len());
+        for lit in elems {
+            out.push(literal_to_tensor(&lit)?);
+        }
+        Ok(out)
+    }
+}
+
+fn to_literal(input: &Input<'_>, spec: &IoSpec, artifact: &str) -> Result<xla::Literal> {
+    match input {
+        Input::F32(t) => {
+            if spec.dtype != "f32" {
+                bail!("{artifact}/{}: expected dtype {}, got f32", spec.name, spec.dtype);
+            }
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{artifact}/{}: shape {:?} != manifest {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+            let lit = xla::Literal::vec1(t.data());
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims).map_err(to_anyhow)
+        }
+        Input::I32(v, shape) => {
+            if spec.dtype != "i32" {
+                bail!("{artifact}/{}: expected dtype {}, got i32", spec.name, spec.dtype);
+            }
+            if shape != &spec.shape {
+                bail!(
+                    "{artifact}/{}: shape {:?} != manifest {:?}",
+                    spec.name,
+                    shape,
+                    spec.shape
+                );
+            }
+            let lit = xla::Literal::vec1(*v);
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims).map_err(to_anyhow)
+        }
+        Input::Scalar(v) => {
+            if !spec.shape.is_empty() {
+                bail!("{artifact}/{}: scalar provided for non-scalar input", spec.name);
+            }
+            Ok(xla::Literal::from(*v))
+        }
+    }
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(to_anyhow)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = lit.to_vec().map_err(to_anyhow)?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}

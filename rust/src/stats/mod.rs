@@ -27,7 +27,10 @@ impl MomentAccumulator {
         Self { d, count: 0, sum: vec![0.0; d], gram: vec![0.0; d * d] }
     }
 
-    /// Add a [rows, d] batch of activations.
+    /// Add a [rows, d] batch of activations. Batches are folded in as they
+    /// stream off the calibration forward pass — nothing beyond the running
+    /// Gram/sum is materialized. The Gram update is the packed parallel
+    /// SYRK, the dominant cost of calibration statistics.
     pub fn add_batch(&mut self, x: &[f32], rows: usize) {
         assert_eq!(x.len(), rows * self.d);
         for r in 0..rows {
@@ -38,6 +41,23 @@ impl MomentAccumulator {
         }
         syrk_upper_f32(x, &mut self.gram, rows, self.d);
         self.count += rows;
+    }
+
+    /// Fold another accumulator (over disjoint rows) into this one.
+    ///
+    /// Not on the default calibration path — there each layer's accumulator
+    /// is owned by exactly one worker, which keeps statistics independent of
+    /// the worker count. This is the reduction hook for sharded calibration
+    /// (partial Grams computed per data shard, merged once at the end).
+    pub fn merge(&mut self, other: &MomentAccumulator) {
+        assert_eq!(self.d, other.d);
+        self.count += other.count;
+        for (s, o) in self.sum.iter_mut().zip(&other.sum) {
+            *s += o;
+        }
+        for (g, o) in self.gram.iter_mut().zip(&other.gram) {
+            *g += o;
+        }
     }
 
     pub fn count(&self) -> usize {
@@ -106,12 +126,19 @@ impl ActiveCounter {
         for r in 0..rows {
             let row = &x[r * self.d..(r + 1) * self.d];
             for (c, &v) in self.active.iter_mut().zip(row) {
-                if v.abs() > self.eps {
-                    *c += 1;
-                }
+                *c += (v.abs() > self.eps) as u64;
             }
         }
         self.count += rows;
+    }
+
+    /// Fold another counter (over disjoint rows) into this one.
+    pub fn merge(&mut self, other: &ActiveCounter) {
+        assert_eq!(self.d, other.d);
+        self.count += other.count;
+        for (c, o) in self.active.iter_mut().zip(&other.active) {
+            *c += o;
+        }
     }
 
     /// Per-channel P(|x| > eps).
@@ -228,6 +255,40 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn merge_equals_single_accumulator() {
+        let mut rng = Pcg64::new(21);
+        let d = 9;
+        let x1 = gen::matrix(&mut rng, 40, d, 1.0);
+        let x2 = gen::matrix(&mut rng, 25, d, 1.0);
+        let mut whole = MomentAccumulator::new(d);
+        whole.add_batch(&x1, 40);
+        whole.add_batch(&x2, 25);
+        let mut a = MomentAccumulator::new(d);
+        a.add_batch(&x1, 40);
+        let mut b = MomentAccumulator::new(d);
+        b.add_batch(&x2, 25);
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        let (ma, mw) = (a.mean(), whole.mean());
+        for (x, y) in ma.iter().zip(&mw) {
+            assert!((x - y).abs() < 1e-9);
+        }
+        assert!(a.covariance().max_abs_diff(&whole.covariance()) < 1e-5);
+
+        let mut ca = ActiveCounter::new(d, 0.5);
+        ca.add_batch(&x1, 40);
+        let mut cb = ActiveCounter::new(d, 0.5);
+        cb.add_batch(&x2, 25);
+        ca.merge(&cb);
+        let mut cw = ActiveCounter::new(d, 0.5);
+        cw.add_batch(&x1, 40);
+        cw.add_batch(&x2, 25);
+        for (x, y) in ca.active_prob().iter().zip(&cw.active_prob()) {
+            assert!((x - y).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -13,15 +13,26 @@ pub struct Args {
     pos: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value} ({why})")]
     Invalid { key: String, value: String, why: String },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name) => write!(f, "unknown option --{name}"),
+            CliError::MissingValue(name) => write!(f, "option --{name} expects a value"),
+            CliError::Invalid { key, value, why } => {
+                write!(f, "invalid value for --{key}: {value} ({why})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Option specification used for validation + help.
 pub struct Spec {

@@ -1,10 +1,11 @@
 //! Small self-contained substrates: RNG, JSON, logging, timing, CLI parsing,
-//! a mini property-testing harness, and a bench harness.
+//! a mini property-testing harness, a bench harness, and the scoped worker
+//! pool behind the parallel linalg kernels.
 //!
-//! The build environment ships only the `xla` crate's dependency closure, so
-//! everything that would normally come from serde_json / clap / criterion /
-//! proptest / rand is implemented here (and unit-tested like any other
-//! module).
+//! The build environment is offline, so everything that would normally come
+//! from serde_json / clap / criterion / proptest / rand / rayon is
+//! implemented here (and unit-tested like any other module); `anyhow` is a
+//! vendored shim under `vendor/anyhow`.
 
 pub mod rng;
 pub mod json;
@@ -13,6 +14,7 @@ pub mod timer;
 pub mod cli;
 pub mod prop;
 pub mod bench;
+pub mod threads;
 
 pub use rng::Pcg64;
 pub use timer::Stopwatch;

@@ -1,0 +1,255 @@
+//! Scoped worker pool for the numeric hot paths (no external deps).
+//!
+//! Built on `std::thread::scope`: callers hand over either an index range
+//! ([`parallel_map`]), a mutable buffer split into row blocks
+//! ([`parallel_chunks_mut`]), or a list of owned work items
+//! ([`parallel_items`]). Workers are spawned per call — at the granularity
+//! the pipeline uses (row panels of a GEMM, per-layer compensation solves)
+//! spawn cost is noise next to the work, and scoped threads keep every
+//! borrow safe without `Arc`.
+//!
+//! Worker count: `CORP_THREADS` env var, else `available_parallelism()`.
+//! [`with_threads`] scopes an override (used by the thread-invariance tests
+//! and the bench harness sweep). Nested parallel regions run serial: a
+//! worker thread sees [`threads`]` == 1`, so a parallel `Mat::mul` inside a
+//! parallel per-layer compensation task never oversubscribes the host.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0); // 0 = no override
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+static DEFAULT: OnceLock<usize> = OnceLock::new();
+
+thread_local! {
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn default_threads() -> usize {
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var("CORP_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Effective worker count for a parallel region started on this thread.
+/// Returns 1 inside a pool worker (nested regions run serial).
+pub fn threads() -> usize {
+    if IN_POOL.with(|f| f.get()) {
+        return 1;
+    }
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => default_threads(),
+        n => n,
+    }
+}
+
+/// Run `f` with the worker count pinned to `n`. Overrides are process-global,
+/// so concurrent `with_threads` calls (e.g. the test harness) serialize on an
+/// internal lock; the override is restored even if `f` panics. The lock is
+/// not reentrant — do not nest `with_threads` calls.
+pub fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    let _guard = OVERRIDE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.store(self.0, Ordering::SeqCst);
+        }
+    }
+    let prev = OVERRIDE.swap(n.max(1), Ordering::SeqCst);
+    let _restore = Restore(prev);
+    f()
+}
+
+fn mark_in_pool() {
+    IN_POOL.with(|f| f.set(true));
+}
+
+/// Map `f` over `0..n` on the pool; results are returned in index order.
+/// Work is distributed dynamically (atomic cursor), so uneven task costs
+/// balance across workers.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let w = threads().min(n);
+    if w <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..w)
+            .map(|_| {
+                s.spawn(|| {
+                    mark_in_pool();
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("pool worker panicked") {
+                out[i] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("pool produced no result for an index")).collect()
+}
+
+/// Split `data` into consecutive chunks of `chunk` elements (last may be
+/// short) and run `f(chunk_index, chunk)` on the pool. Chunks are assigned
+/// round-robin, so for equal-cost chunks the partition is deterministic in
+/// the chunk count — and because each chunk is processed start-to-finish by
+/// exactly one worker, results are bitwise independent of the worker count.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "parallel_chunks_mut: chunk must be > 0");
+    let n_chunks = data.len().div_ceil(chunk);
+    let w = threads().min(n_chunks);
+    if w <= 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, &mut [T])>> = Vec::with_capacity(w);
+    buckets.resize_with(w, Vec::new);
+    for (i, c) in data.chunks_mut(chunk).enumerate() {
+        buckets[i % w].push((i, c));
+    }
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            let fr = &f;
+            s.spawn(move || {
+                mark_in_pool();
+                for (i, c) in bucket {
+                    fr(i, c);
+                }
+            });
+        }
+    });
+}
+
+/// Consume a list of owned work items on the pool (round-robin assignment).
+/// Used where each item carries its own `&mut` state, e.g. per-layer
+/// calibration accumulators.
+pub fn parallel_items<T, F>(items: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    let w = threads().min(items.len());
+    if w <= 1 {
+        for it in items {
+            f(it);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<T>> = Vec::with_capacity(w);
+    buckets.resize_with(w, Vec::new);
+    for (i, it) in items.into_iter().enumerate() {
+        buckets[i % w].push(it);
+    }
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            let fr = &f;
+            s.spawn(move || {
+                mark_in_pool();
+                for it in bucket {
+                    fr(it);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_at_least_one() {
+        assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn with_threads_overrides() {
+        // (The ambient count outside the lock is observable by concurrent
+        // tests, so only the value *inside* the override is asserted.)
+        with_threads(5, || assert_eq!(threads(), 5));
+        with_threads(3, || assert_eq!(threads(), 3));
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let serial: Vec<usize> = (0..257).map(|i| i * i).collect();
+        for w in [1, 2, 5] {
+            let par = with_threads(w, || parallel_map(257, |i| i * i));
+            assert_eq!(par, serial, "w={w}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        assert!(parallel_map(0, |i| i).is_empty());
+        assert_eq!(parallel_map(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn chunks_cover_disjointly() {
+        let mut data = vec![0u32; 103];
+        with_threads(4, || {
+            parallel_chunks_mut(&mut data, 10, |i, c| {
+                for v in c.iter_mut() {
+                    *v += 1 + i as u32;
+                }
+            });
+        });
+        // Every element written exactly once with its chunk's value.
+        for (j, &v) in data.iter().enumerate() {
+            assert_eq!(v, 1 + (j / 10) as u32, "j={j}");
+        }
+    }
+
+    #[test]
+    fn items_all_consumed() {
+        use std::sync::atomic::AtomicUsize;
+        let total = AtomicUsize::new(0);
+        let items: Vec<usize> = (1..=20).collect();
+        with_threads(3, || {
+            parallel_items(items, |v| {
+                total.fetch_add(v, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 210);
+    }
+
+    #[test]
+    fn nested_regions_run_serial() {
+        let inner_counts = with_threads(2, || parallel_map(2, |_| threads()));
+        // Inside a pool worker the effective width is 1.
+        // (When the outer region ran serial — single-core host — the inner
+        // count equals the override instead.)
+        for c in inner_counts {
+            assert!(c == 1 || c == 2);
+        }
+    }
+}

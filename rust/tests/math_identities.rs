@@ -113,6 +113,46 @@ fn fold_equals_explicit_affine_prediction() {
     });
 }
 
+/// The parallel kernels must be worker-count invariant through the full
+/// stats → rank → compensate composition at pipeline-realistic sizes: the
+/// same calibration data folded and solved under 1 vs N workers must yield
+/// the same compensated weights within f32 tolerance (row-ownership in the
+/// packed kernels actually makes this bitwise, but only tolerance equality
+/// is asserted).
+#[test]
+fn pipeline_composition_thread_count_invariant() {
+    use corp::util::threads::with_threads;
+    run_prop("e2e.thread invariance", 3, |rng| {
+        let o = 96 + rng.below(64); // larger than the seed's ~30-dim caps
+        let d = 24;
+        let rows = 600;
+        let x = correlated_acts(rng, rows, o, 6);
+        let w2 = Tensor::from_vec(&[o, d], gen::matrix(rng, o, d, 1.0));
+        let b2 = Tensor::from_vec(&[d], vec![0.2; d]);
+        let compensate = |workers: usize| {
+            with_threads(workers, || {
+                let mut acc = MomentAccumulator::new(o);
+                acc.add_batch(&x, rows);
+                let (kept, pruned) = partition(&acc.energy(), 5);
+                let blocks = cov_blocks(&acc.covariance(), &acc.mean(), &kept, &pruned);
+                corp::compensate::compensate_mlp(&w2, &b2, &kept, &pruned, &blocks, 1e-4)
+            })
+        };
+        let base = compensate(1);
+        for workers in [2usize, 4] {
+            let got = compensate(workers);
+            assert!(
+                got.w2_hat.max_abs_diff(&base.w2_hat) < 1e-4,
+                "w2_hat differs at {workers} workers"
+            );
+            assert!(
+                got.b2_hat.max_abs_diff(&base.b2_hat) < 1e-4,
+                "b2_hat differs at {workers} workers"
+            );
+        }
+    });
+}
+
 /// Attention: compensated logit error ≤ naive logit error on calibration
 /// (Prop. C.2.2 through the full per-head rank → compensate → fold path).
 #[test]

@@ -1,0 +1,193 @@
+//! Integration: the native (pure-Rust) runtime serves the full artifact
+//! interface without any `artifacts/` directory — embed/block/head shapes,
+//! capture consistency, pruned-shape execution, and loss sanity at init.
+//!
+//! These mirror `runtime_roundtrip.rs` (which needs PJRT artifacts and skips
+//! without them) but always run, so the stitched-forward path is covered by
+//! tier-1 on a fresh checkout.
+
+use corp::data::{Split, TextGen, VisionGen};
+use corp::exec::Executor;
+use corp::model::{keep_count, ModelConfig, WeightStore};
+use corp::runtime::Runtime;
+
+fn native_runtime() -> Runtime {
+    // A directory with no manifest.json forces the native backend.
+    let dir = std::env::temp_dir().join("corp_native_rt_tests");
+    Runtime::new(dir).expect("native runtime")
+}
+
+#[test]
+fn embed_block_head_shapes() {
+    let rt = native_runtime();
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 1);
+    let b = cfg.eval_batch();
+    let gen = VisionGen::new(0);
+    let (tokens, _) = gen.batch(Split::Eval, 0, b);
+    let x = exec.embed(&w, &tokens, b).unwrap();
+    assert_eq!(x.shape(), &[b, cfg.n_ctx, cfg.d]);
+    let y = exec.block(&w, 0, &x, b).unwrap();
+    assert_eq!(y.shape(), &[b, cfg.n_ctx, cfg.d]);
+    let logits = exec.head(&w, &y, b).unwrap();
+    assert_eq!(logits.shape(), &[b, cfg.classes]);
+    assert!(logits.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn capture_matches_plain_block() {
+    let rt = native_runtime();
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 2);
+    let b = cfg.eval_batch();
+    let gen = VisionGen::new(1);
+    let (tokens, _) = gen.batch(Split::Eval, 0, b);
+    let x = exec.embed(&w, &tokens, b).unwrap();
+    let plain = exec.block(&w, 0, &x, b).unwrap();
+    let (cap_y, cap) = exec.block_capture(&w, 0, &x).unwrap();
+    assert!(plain.max_abs_diff(&cap_y) < 1e-5, "capture must not perturb output");
+    assert_eq!(cap.hidden.shape(), &[b, cfg.n_ctx, cfg.mlp]);
+    assert_eq!(cap.q.shape(), &[b, cfg.heads, cfg.n_ctx, cfg.dh()]);
+    assert_eq!(cap.k.shape(), &[b, cfg.heads, cfg.n_ctx, cfg.dh()]);
+}
+
+#[test]
+fn pruned_block_shapes_execute() {
+    let rt = native_runtime();
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    // Manually shrink weights to the 50%-joint shape and run end-to-end.
+    let mut w = WeightStore::init(cfg, 3);
+    let dqk = keep_count(cfg.dh(), 5);
+    let o = keep_count(cfg.mlp, 5);
+    for l in 0..cfg.layers {
+        for (name, shape) in cfg.block_param_spec(dqk, o) {
+            let n: usize = shape.iter().product();
+            let t = corp::tensor::Tensor::from_vec(&shape, vec![0.01; n]);
+            w.insert(format!("blocks.{l}.{name}"), t);
+        }
+        // restore norm gains to 1
+        w.insert(
+            format!("blocks.{l}.ln1.g"),
+            corp::tensor::Tensor::from_vec(&[cfg.d], vec![1.0; cfg.d]),
+        );
+        w.insert(
+            format!("blocks.{l}.ln2.g"),
+            corp::tensor::Tensor::from_vec(&[cfg.d], vec![1.0; cfg.d]),
+        );
+    }
+    let b = cfg.eval_batch();
+    let gen = VisionGen::new(2);
+    let (tokens, _) = gen.batch(Split::Eval, 0, b);
+    let logits = exec.forward_vit(&w, &tokens, b).unwrap();
+    assert_eq!(logits.shape(), &[b, cfg.classes]);
+    assert!(logits.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn untrained_losses_sit_at_entropy() {
+    // At deterministic init the head weights are ~0, so the loss must sit
+    // near ln(num classes) — a strong end-to-end check of embed/block/head
+    // plus the cross-entropy path (masking or bias bugs skew it).
+    let rt = native_runtime();
+
+    let gpt = ModelConfig::by_name("gpt_s").unwrap();
+    let exec = Executor::new(&rt, gpt);
+    let w = WeightStore::init(gpt, 4);
+    let b = gpt.eval_batch();
+    let gen = TextGen::new(3);
+    let (ids, targets) = gen.batch(Split::Eval, 0, b, gpt.n_ctx);
+    let logits = exec.forward_gpt(&w, &ids, b).unwrap();
+    assert_eq!(logits.shape(), &[b, gpt.n_ctx, gpt.vocab]);
+    let loss = exec.eval_loss(&w, None, Some(&ids), &targets).unwrap();
+    assert!((loss - (gpt.vocab as f32).ln()).abs() < 0.5, "gpt loss={loss}");
+
+    let vit = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, vit);
+    let w = WeightStore::init(vit, 5);
+    let vgen = VisionGen::new(corp::data::DATA_SEED);
+    let bv = vit.eval_batch();
+    let (tokens, labels) = vgen.batch(Split::Eval, 0, bv);
+    let loss = exec.eval_loss(&w, Some(&tokens), None, &labels).unwrap();
+    assert!((loss - (vit.classes as f32).ln()).abs() < 0.5, "vit loss={loss}");
+}
+
+#[test]
+fn stitched_forward_matches_evloss_graph() {
+    // The per-block stitched path and the monolithic loss computation must
+    // agree on the same batch.
+    let rt = native_runtime();
+    let cfg = ModelConfig::by_name("gpt_s").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 6);
+    let gen = TextGen::new(9);
+    let direct = corp::eval::ppl_dense(&exec, &w, &gen, 2).unwrap();
+    let stitched = corp::eval::ppl_stitched(&exec, &w, &gen, 2).unwrap();
+    let rel = (direct - stitched).abs() / direct;
+    assert!(rel < 1e-3, "ppl mismatch: {direct} vs {stitched}");
+}
+
+#[test]
+fn native_pipeline_calibrates_and_prunes() {
+    use corp::model::{Scope, Sparsity};
+    use corp::prune::{calibrate, prune, Method, PruneOpts};
+    let rt = native_runtime();
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 10);
+    let opts = PruneOpts {
+        sparsity: Sparsity::of(Scope::Both, 5),
+        method: Method::Corp,
+        calib_batches: 2,
+        attn_max_samples: 32,
+        ..PruneOpts::default()
+    };
+    let stats = calibrate(&exec, &dense, &opts).unwrap();
+    assert_eq!(stats.layers.len(), cfg.layers);
+    let result = prune(&exec, &dense, &stats, &opts).unwrap();
+    let dqk = keep_count(cfg.dh(), 5);
+    let o = keep_count(cfg.mlp, 5);
+    let w = &result.weights;
+    assert_eq!(w.get("blocks.0.attn.wq").unwrap().shape(), &[cfg.d, cfg.heads * dqk]);
+    assert_eq!(w.get("blocks.0.mlp.w1").unwrap().shape(), &[cfg.d, o]);
+    assert_eq!(w.get("blocks.0.mlp.w2").unwrap().shape(), &[o, cfg.d]);
+    // The pruned model runs end-to-end on the native backend.
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let b = cfg.eval_batch();
+    let (tokens, _) = gen.batch(Split::Eval, 0, b);
+    let logits = exec.forward_vit(w, &tokens, b).unwrap();
+    assert!(logits.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn prune_results_thread_count_invariant() {
+    use corp::model::{Scope, Sparsity};
+    use corp::prune::{calibrate, prune, Method, PruneOpts};
+    use corp::util::threads::with_threads;
+    let rt = native_runtime();
+    let cfg = ModelConfig::by_name("vit_t").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 11);
+    let opts = PruneOpts {
+        sparsity: Sparsity::of(Scope::Both, 5),
+        method: Method::Corp,
+        calib_batches: 1,
+        attn_max_samples: 16,
+        ..PruneOpts::default()
+    };
+    let run = |workers: usize| {
+        with_threads(workers, || {
+            let stats = calibrate(&exec, &dense, &opts).unwrap();
+            prune(&exec, &dense, &stats, &opts).unwrap().weights
+        })
+    };
+    let w1 = run(1);
+    let w4 = run(4);
+    for (name, t1) in w1.iter() {
+        let t4 = w4.get(name).unwrap();
+        assert_eq!(t1.shape(), t4.shape(), "{name}");
+        assert!(t1.max_abs_diff(t4) < 1e-4, "{name} differs across worker counts");
+    }
+}

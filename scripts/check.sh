@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# CI entrypoint: format check (advisory), clippy, tier-1 build+test, and the
+# linalg perf harness (emits BENCH_linalg.json at the repo root).
+#
+# Usage: scripts/check.sh [--no-bench]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+MANIFEST=rust/Cargo.toml
+
+echo "==> cargo fmt --check (advisory)"
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --manifest-path "$MANIFEST" --check || \
+        echo "warn: rustfmt differences (not failing the build)"
+else
+    echo "warn: rustfmt not installed; skipping"
+fi
+
+echo "==> cargo clippy"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --manifest-path "$MANIFEST" --release
+else
+    echo "warn: clippy not installed; skipping"
+fi
+
+echo "==> cargo build --release"
+cargo build --manifest-path "$MANIFEST" --release
+
+echo "==> cargo test -q"
+cargo test --manifest-path "$MANIFEST" -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "==> bench linalg (CORP_BENCH_MODE=${CORP_BENCH_MODE:-fast})"
+    cargo run --manifest-path "$MANIFEST" --release -- bench linalg --json --out BENCH_linalg.json
+fi
+
+echo "ok"
