@@ -1,27 +1,31 @@
-//! Serving scenario: the dynamic batcher over a CORP-pruned model.
+//! Serving scenario: the concurrent batched engine over a CORP-pruned model.
 //!
-//! An open-loop Poisson arrival stream feeds the engine; requests are
-//! batched greedily with a wait bound and executed through PJRT. Compares
-//! dense vs pruned under the same load — the deployment story behind the
-//! paper's Table 5 throughput column.
+//! An open-loop Poisson arrival stream feeds a bounded queue drained by a
+//! pool of worker threads; batches form up to `--max-batch` under a
+//! batching deadline and dispatch through the fused pruned-shape fast path.
+//! Compares dense vs pruned vs compensated under the same offered load and
+//! worker counts — the deployment story behind the paper's Table 5
+//! throughput column.
 //!
 //! ```text
-//! cargo run --release --example serve_pruned -- --model vit_s --rate 120
+//! cargo run --release --example serve_pruned -- --model vit_s --rate 120 --workers 2
 //! ```
 
 use corp::coordinator::Coordinator;
 use corp::data::VisionGen;
 use corp::model::{ModelConfig, Scope, Sparsity};
-use corp::prune::PruneOpts;
-use corp::serve::{run_batcher, BatcherOpts};
+use corp::prune::{Method, PruneOpts};
+use corp::serve::{run_engine, EngineOpts};
 use corp::util::cli::Command;
 
 fn main() -> anyhow::Result<()> {
-    let cmd = Command::new("serve_pruned", "dynamic batcher demo")
+    let cmd = Command::new("serve_pruned", "concurrent serving engine demo")
         .opt("model", "model name", "vit_s")
-        .opt("rate", "arrival rate, req/s", "120")
+        .opt("rate", "arrival rate, req/s (0 = saturated)", "120")
         .opt("requests", "total requests", "192")
-        .opt("sparsity", "joint sparsity", "0.5");
+        .opt("sparsity", "joint sparsity", "0.5")
+        .opt("workers", "engine worker threads", "2")
+        .opt("max-batch", "max requests per batch", "16");
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = cmd.parse(&argv).map_err(|e| anyhow::anyhow!("{e}\n{}", cmd.usage()))?;
 
@@ -31,27 +35,39 @@ fn main() -> anyhow::Result<()> {
     let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
 
     let dense = coord.dense(cfg)?.clone();
+    let base = PruneOpts {
+        sparsity: Sparsity::of(Scope::Both, s10),
+        calib_batches: coord.scale.calib_batches,
+        ..PruneOpts::default()
+    };
     let pruned = coord
-        .prune_job(cfg, &PruneOpts {
-            sparsity: Sparsity::of(Scope::Both, s10),
-            calib_batches: coord.scale.calib_batches,
-            ..PruneOpts::default()
-        })?
+        .prune_job(cfg, &PruneOpts { method: Method::Naive, ..base.clone() })?
         .weights;
+    let comp = coord.prune_job(cfg, &base)?.weights;
 
     let exec = coord.executor(cfg);
     let gen = VisionGen::new(corp::data::DATA_SEED);
-    let bopts = BatcherOpts {
+    let eopts = EngineOpts {
+        workers: args.usize("workers")?,
         rate: args.f64("rate")?,
         requests: args.usize("requests")?,
+        max_batch: args.usize("max-batch")?,
         ..Default::default()
     };
-    println!("load: {} req at {:.0}/s, max batch {}, max wait {:.0}ms", bopts.requests, bopts.rate, bopts.max_batch, bopts.max_wait * 1e3);
-    for (label, w) in [("dense", &dense), ("pruned", &pruned)] {
-        let s = run_batcher(&exec, w, &gen, &bopts)?;
+    println!(
+        "load: {} req at {:.0}/s, {} worker(s), max batch {}, deadline {:.0}ms",
+        eopts.requests,
+        eopts.rate,
+        eopts.workers,
+        eopts.max_batch,
+        eopts.max_wait * 1e3
+    );
+    for (label, w) in [("dense", &dense), ("pruned", &pruned), ("compensated", &comp)] {
+        let s = run_engine(&exec, w, &gen, &eopts)?;
         println!(
-            "{label:7}: served {} | p50 {:.1}ms p95 {:.1}ms | mean batch {:.1} | {:.0} req/s",
-            s.served, s.p50_ms, s.p95_ms, s.mean_batch, s.throughput_fps
+            "{label:12}: served {} ({} shed) | p50 {:.1}ms p95 {:.1}ms (queue p50 {:.1}ms) | \
+             mean batch {:.1} | {:.0} images/sec",
+            s.served, s.shed, s.p50_ms, s.p95_ms, s.queue_p50_ms, s.mean_batch, s.throughput_fps
         );
     }
     Ok(())

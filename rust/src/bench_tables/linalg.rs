@@ -8,10 +8,9 @@
 //! table and are optionally emitted as machine-readable JSON so the numbers
 //! are tracked PR-over-PR.
 
-use std::collections::BTreeMap;
-
 use anyhow::{Context, Result};
 
+use super::{num, obj};
 use crate::exec::Executor;
 use crate::linalg::gemm::{matmul_f32, reference, syrk_upper_f32};
 use crate::linalg::{Cholesky, Mat};
@@ -23,18 +22,6 @@ use crate::util::json::Json;
 use crate::util::prop::gen;
 use crate::util::threads;
 use crate::util::{Pcg64, Stopwatch};
-
-fn num(v: f64) -> Json {
-    Json::Num(v)
-}
-
-fn obj(entries: Vec<(&str, Json)>) -> Json {
-    let mut m = BTreeMap::new();
-    for (k, v) in entries {
-        m.insert(k.to_string(), v);
-    }
-    Json::Obj(m)
-}
 
 struct KernelResult {
     name: String,

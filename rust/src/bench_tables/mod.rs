@@ -7,10 +7,28 @@ pub mod tables;
 pub mod nlp;
 pub mod dense;
 pub mod linalg;
+pub mod serve;
+
+use std::collections::BTreeMap;
 
 use crate::model::config::FAMILY;
 use crate::model::{ModelConfig, ModelKind};
 use crate::util::bench::{bench_mode, BenchMode};
+use crate::util::json::Json;
+
+/// JSON number shorthand shared by the harness emitters (`linalg`, `serve`).
+pub(crate) fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// JSON object from (key, value) pairs, shared by the harness emitters.
+pub(crate) fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
 
 /// Which ViT sizes a bench sweeps, by mode.
 pub fn vit_sizes() -> Vec<&'static ModelConfig> {

@@ -1,0 +1,153 @@
+//! `corp bench serve` — the serving-engine harness behind `BENCH_serve.json`.
+//!
+//! Drives the concurrent engine (`serve::run_engine`) over a grid of
+//! model variant (dense / pruned / compensated at 50% joint sparsity) ×
+//! worker count × arrival rate, and reports per-cell p50/p95 latency,
+//! queueing delay, mean batch size, and images/sec. The "saturated" rate
+//! offers the whole request set at t = 0 with an ample queue, so the
+//! images/sec column is the engine's capacity — this is where the pruned
+//! fast path has to beat dense, since its GEMMs run at the retained widths.
+
+use anyhow::{Context, Result};
+
+use super::{num, obj};
+use crate::data::VisionGen;
+use crate::exec::Executor;
+use crate::model::{ModelConfig, Scope, Sparsity, WeightStore};
+use crate::prune::{calibrate, prune, Method, PruneOpts};
+use crate::runtime::Runtime;
+use crate::serve::{run_engine, EngineOpts};
+use crate::util::bench::{bench_mode, BenchMode};
+use crate::util::json::Json;
+use crate::util::threads;
+
+/// Arrival rate treated as "everything is due immediately".
+const SATURATED_RATE: f64 = 1e9;
+
+/// Grid per mode: (model, requests, worker counts, rates, max_batch,
+/// calibration batches for the pruned variants).
+fn mode_grid() -> (&'static str, usize, Vec<usize>, Vec<f64>, usize, usize) {
+    match bench_mode() {
+        BenchMode::Smoke => ("vit_t", 96, vec![1, 2], vec![SATURATED_RATE], 8, 2),
+        BenchMode::Fast => ("vit_t", 256, vec![1, 2], vec![SATURATED_RATE, 300.0], 16, 4),
+        BenchMode::Full => ("vit_b", 512, vec![1, 2, 4], vec![SATURATED_RATE, 400.0], 16, 8),
+    }
+}
+
+/// Run the serving benchmark grid; when `json_out` is set, write
+/// `BENCH_serve.json`-style output there.
+pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
+    let (model, requests, worker_counts, rates, max_batch, calib_batches) = mode_grid();
+    let cfg = ModelConfig::by_name(model).context("bench serve model")?;
+    let rt = Runtime::from_default_dir()?;
+    let exec = Executor::new(&rt, cfg);
+
+    // Accuracy is irrelevant to throughput shape, so the dense variant is a
+    // deterministic init; one calibration pass serves both pruned variants.
+    let dense = WeightStore::init(cfg, 1);
+    let popts = PruneOpts {
+        sparsity: Sparsity::of(Scope::Both, 5),
+        calib_batches,
+        ..PruneOpts::default()
+    };
+    let stats = calibrate(&exec, &dense, &popts)?;
+    let pruned = prune(&exec, &dense, &stats, &PruneOpts { method: Method::Naive, ..popts.clone() })?;
+    let comp = prune(&exec, &dense, &stats, &PruneOpts { method: Method::Corp, ..popts.clone() })?;
+    let variants: [(&str, &WeightStore); 3] =
+        [("dense", &dense), ("pruned", &pruned.weights), ("compensated", &comp.weights)];
+
+    println!(
+        "serve bench — mode {:?}, model {model}, {requests} requests, max batch {max_batch}, \
+         50% joint sparsity, {} pool worker(s) available",
+        bench_mode(),
+        threads::threads()
+    );
+    let gen = VisionGen::new(crate::data::DATA_SEED);
+    let mut runs = Vec::new();
+    for &(label, w) in &variants {
+        for &nw in &worker_counts {
+            for &rate in &rates {
+                let eopts = EngineOpts {
+                    workers: nw,
+                    rate,
+                    requests,
+                    max_batch,
+                    max_wait: 0.005,
+                    // Capacity grid: queue everything, shed nothing.
+                    queue_cap: requests,
+                    ..Default::default()
+                };
+                let s = run_engine(&exec, w, &gen, &eopts)?;
+                let rate_label = if rate >= SATURATED_RATE {
+                    "saturated".to_string()
+                } else {
+                    format!("{rate:.0}/s")
+                };
+                println!(
+                    "{label:12} w={nw} rate {rate_label:>9}: p50 {:9.2}ms p95 {:9.2}ms | \
+                     queue p50 {:9.2}ms | batch {:4.1} | {:7.0} img/s",
+                    s.p50_ms, s.p95_ms, s.queue_p50_ms, s.mean_batch, s.throughput_fps
+                );
+                runs.push(obj(vec![
+                    ("variant", Json::Str(label.to_string())),
+                    ("workers", num(nw as f64)),
+                    ("rate_rps", num(rate)),
+                    ("saturated", Json::Bool(rate >= SATURATED_RATE)),
+                    ("served", num(s.served as f64)),
+                    ("shed", num(s.shed as f64)),
+                    ("batches", num(s.batches as f64)),
+                    ("p50_ms", num(s.p50_ms)),
+                    ("p95_ms", num(s.p95_ms)),
+                    ("queue_p50_ms", num(s.queue_p50_ms)),
+                    ("exec_mean_ms", num(s.exec_mean_ms)),
+                    ("mean_batch", num(s.mean_batch)),
+                    ("images_per_sec", num(s.throughput_fps)),
+                ]));
+            }
+        }
+    }
+
+    if let Some(path) = json_out {
+        let root = obj(vec![
+            ("schema", Json::Str("corp-bench-serve/v1".into())),
+            (
+                "mode",
+                Json::Str(
+                    match bench_mode() {
+                        BenchMode::Smoke => "smoke",
+                        BenchMode::Fast => "fast",
+                        BenchMode::Full => "full",
+                    }
+                    .into(),
+                ),
+            ),
+            ("threads", num(threads::threads() as f64)),
+            ("model", Json::Str(model.to_string())),
+            ("scope", Json::Str("both".into())),
+            ("sparsity", num(0.5)),
+            ("requests", num(requests as f64)),
+            ("max_batch", num(max_batch as f64)),
+            ("runs", Json::Arr(runs)),
+        ]);
+        std::fs::write(path, root.to_string() + "\n")
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_grid_covers_acceptance_shape() {
+        // ≥ 2 worker counts in every mode, so the JSON always satisfies the
+        // "per worker count" axis; grids stay within the engine's bounds.
+        let (m, req, workers, rates, mb, cb) = mode_grid();
+        assert!(ModelConfig::by_name(m).is_some());
+        assert!(workers.len() >= 2);
+        assert!(!rates.is_empty());
+        assert!(req >= mb && mb >= 1 && cb >= 1);
+    }
+}

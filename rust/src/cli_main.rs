@@ -77,9 +77,9 @@ fn print_usage() {
          subcommands:\n  \
          train  --model vit_b [--steps N]        train/load the dense checkpoint\n  \
          prune  --model vit_b --scope both --sparsity 0.5 [--method corp] [--criterion combined]\n  \
-         serve  --model vit_b --sparsity 0.5 [--rate 200]\n  \
+         serve  --model vit_b --sparsity 0.5 [--workers 2] [--rate 200]\n  \
          stats  --model vit_b                    Table-9 redundancy statistics\n  \
-         bench  linalg [--json] [--out PATH]     kernel + pipeline perf harness\n  \
+         bench  linalg|serve [--json] [--out PATH]  perf harnesses (BENCH_*.json)\n  \
          list                                    models + artifact status"
     );
 }
@@ -87,16 +87,16 @@ fn print_usage() {
 fn cmd_bench(argv: &[String]) -> Result<()> {
     let cmd = Command::new("bench", "performance harness")
         .flag("json", "emit machine-readable results")
-        .opt("out", "output path for --json", "BENCH_linalg.json");
+        .opt("out", "output path for --json (default BENCH_<target>.json)", "");
     let args = cmd.parse(argv)?;
     let target = args.positional().first().map(|s| s.as_str()).unwrap_or("linalg");
+    let out = args.str("out");
+    let out = if out.is_empty() { format!("BENCH_{target}.json") } else { out };
+    let json = args.has_flag("json").then_some(out.as_str());
     match target {
-        "linalg" => {
-            let out = args.str("out");
-            let json = args.has_flag("json").then_some(out.as_str());
-            crate::bench_tables::linalg::bench_linalg(json)
-        }
-        other => bail!("unknown bench target '{other}' (available: linalg)"),
+        "linalg" => crate::bench_tables::linalg::bench_linalg(json),
+        "serve" => crate::bench_tables::serve::bench_serve(json),
+        other => bail!("unknown bench target '{other}' (available: linalg, serve)"),
     }
 }
 
@@ -182,11 +182,15 @@ fn cmd_prune(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    let cmd = Command::new("serve", "dynamic-batcher serving demo")
+    let cmd = Command::new("serve", "concurrent batched serving engine")
         .opt("model", "model name", "vit_b")
         .opt("sparsity", "joint sparsity 0.0-0.7", "0.5")
-        .opt("rate", "arrival rate req/s", "200")
-        .opt("requests", "total requests", "256");
+        .opt("workers", "executor threads", "2")
+        .opt("rate", "arrival rate req/s (0 = saturated)", "200")
+        .opt("requests", "total requests", "256")
+        .opt("max-batch", "max requests per batch", "16")
+        .opt("max-wait-ms", "batching deadline, ms", "10")
+        .opt("queue-cap", "queue bound (excess is shed)", "1024");
     let args = cmd.parse(argv)?;
     let cfg = cfg_of(&args.str("model"))?;
     let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
@@ -200,15 +204,30 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
     let exec = coord.executor(cfg);
     let gen = VisionGen::new(crate::data::DATA_SEED);
-    let bopts = crate::serve::BatcherOpts {
+    let eopts = crate::serve::EngineOpts {
+        workers: args.usize("workers")?,
         rate: args.f64("rate")?,
         requests: args.usize("requests")?,
+        max_batch: args.usize("max-batch")?,
+        max_wait: args.f64("max-wait-ms")? / 1e3,
+        queue_cap: args.usize("queue-cap")?,
         ..Default::default()
     };
-    let stats = crate::serve::run_batcher(&exec, &weights, &gen, &bopts)?;
+    let stats = crate::serve::run_engine(&exec, &weights, &gen, &eopts)?;
     println!(
-        "served {} requests: p50 {:.2}ms p95 {:.2}ms mean-batch {:.1} throughput {:.0} fps",
-        stats.served, stats.p50_ms, stats.p95_ms, stats.mean_batch, stats.throughput_fps
+        "served {}/{} requests ({} shed) on {} worker(s): p50 {:.2}ms p95 {:.2}ms \
+         (queue p50 {:.2}ms, exec mean {:.2}ms) | mean batch {:.1} over {} batches | {:.0} images/sec",
+        stats.served,
+        eopts.requests,
+        stats.shed,
+        eopts.workers,
+        stats.p50_ms,
+        stats.p95_ms,
+        stats.queue_p50_ms,
+        stats.exec_mean_ms,
+        stats.mean_batch,
+        stats.batches,
+        stats.throughput_fps
     );
     Ok(())
 }

@@ -45,10 +45,10 @@ fn sample_mat(qk: &Tensor, sample: usize, idx: &[usize]) -> Mat {
 
 /// Compensate one attention head.
 ///
-/// * `q`, `k`: captured dense per-head activations [B, n, dh];
+/// * `q`, `k`: captured dense per-head activations `[B, n, dh]`;
 /// * `kept` / `pruned`: dh-index partition from Alg. 4;
-/// * `wq_head`, `wk_head`: dense projection blocks [d, dh] for this head;
-/// * `bq_head`, `bk_head`: dense biases [dh];
+/// * `wq_head`, `wk_head`: dense projection blocks `[d, dh]` for this head;
+/// * `bq_head`, `bk_head`: dense biases `[dh]`;
 /// * `lambda`: ridge strength;
 /// * `max_samples`: cap on calibration samples for the Kronecker
 ///   accumulation (the compensator has only d'² parameters — Prop. C.2.3's

@@ -11,7 +11,7 @@ pub struct MlpCompensation {
     /// Compensated kept weights Ŵ_S = W_S + W_P B, stored [|S|, d] in the
     /// w2 row-layout (rows are hidden channels).
     pub w2_hat: Tensor,
-    /// Compensated bias b̂ = b + W_P c, [d].
+    /// Compensated bias b̂ = b + W_P c, `[d]`.
     pub b2_hat: Tensor,
     /// ρ²_{W_P}: fraction of pruned-channel variance (in W_P directions)
     /// linearly explained by kept channels (Eq. 65) — a free diagnostic.
@@ -24,8 +24,8 @@ pub struct MlpCompensation {
 
 /// Compensate the second MLP linear layer.
 ///
-/// `w2` [o, d] (row i = output contribution of hidden channel i — the
-/// *columns* W_{:,i} of the paper's y = Wx view), `b2` [d];
+/// `w2` `[o, d]` (row i = output contribution of hidden channel i — the
+/// *columns* W_{:,i} of the paper's y = Wx view), `b2` `[d]`;
 /// `blocks` = covariance blocks of the hidden activations for the
 /// (kept, pruned) partition; `lambda` = ridge strength.
 ///

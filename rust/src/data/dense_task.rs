@@ -36,7 +36,7 @@ impl LinearHead {
     }
 }
 
-/// One-hot encode labels [n] -> [n, k].
+/// One-hot encode labels `[n]` -> `[n, k]`.
 pub fn one_hot(labels: &[i32], k: usize) -> Mat {
     let mut out = Mat::zeros(labels.len(), k);
     for (i, &l) in labels.iter().enumerate() {

@@ -50,8 +50,8 @@ impl TextGen {
         succ[SUCCESSORS - 1]
     }
 
-    /// Generate batch `index`: inputs ids [b, n_ctx] and next-token targets
-    /// [b, n_ctx] (targets[t] = ids[t+1]).
+    /// Generate batch `index`: inputs ids `[b, n_ctx]` and next-token targets
+    /// `[b, n_ctx]` (`targets[t] = ids[t+1]`).
     pub fn batch(&self, split: Split, index: u64, b: usize, n_ctx: usize) -> (Vec<i32>, Vec<i32>) {
         let mut rng = Pcg64::new(
             self.seed

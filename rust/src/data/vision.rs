@@ -71,8 +71,8 @@ impl VisionGen {
         Pcg64::new(self.seed ^ split.salt().wrapping_mul(0x9e3779b97f4a7c15) ^ index.wrapping_mul(0x2545f4914f6cdd1d))
     }
 
-    /// Generate batch `index` of `b` examples: tokens [b, PATCHES, PATCH_DIM]
-    /// and labels [b].
+    /// Generate batch `index` of `b` examples: tokens `[b, PATCHES, PATCH_DIM]`
+    /// and labels `[b]`.
     pub fn batch(&self, split: Split, index: u64, b: usize) -> (Tensor, Vec<i32>) {
         let (tokens, labels, _, _, _) = self.batch_with_latents(split, index, b);
         (tokens, labels)

@@ -5,6 +5,12 @@
 //! the actual weight shapes in the store. Capture mode additionally returns
 //! each layer's MLP hidden activations and per-head Q/K (the calibration
 //! signals of Alg. 1).
+//!
+//! For serving there is a fused fast path: [`Executor::prepare_forward`]
+//! resolves every parameter reference once (by-name lookups and artifact
+//! name formatting are hoisted out of the request loop) and returns a
+//! [`PreparedForward`] that dispatches the whole network as a single
+//! `fwd_*` artifact at the pruned dims read off the stored weight shapes.
 
 use anyhow::{bail, Context, Result};
 
@@ -25,6 +31,56 @@ pub struct LayerCapture {
 pub struct Executor<'rt> {
     pub rt: &'rt Runtime,
     pub cfg: &'static ModelConfig,
+}
+
+/// A resolved full-forward dispatch: fused `fwd_*` artifact name plus every
+/// parameter tensor in canonical `param_spec_at(dqk, o)` order. Built once
+/// per (model variant, batch size) by [`Executor::prepare_forward`]; each
+/// call then costs one input-list assembly and one runtime dispatch.
+pub struct PreparedForward<'rt, 'w> {
+    rt: &'rt Runtime,
+    pub cfg: &'static ModelConfig,
+    /// Fixed batch size the artifact is bound to (callers pad short batches).
+    pub batch: usize,
+    /// Retained per-head q/k width derived from the stored `attn.wq` shape.
+    pub dqk: usize,
+    /// Retained MLP hidden width derived from the stored `mlp.w1` shape.
+    pub o: usize,
+    art: String,
+    params: Vec<&'w Tensor>,
+}
+
+impl PreparedForward<'_, '_> {
+    /// Fused vit forward: tokens `[batch, patches, patch_dim]` → logits
+    /// `[batch, classes]`.
+    pub fn run_vit(&self, tokens: &Tensor) -> Result<Tensor> {
+        if self.cfg.kind != ModelKind::Vit {
+            bail!("run_vit on a gpt prepared forward");
+        }
+        let mut inputs: Vec<Input> = Vec::with_capacity(1 + self.params.len());
+        inputs.push(Input::F32(tokens));
+        inputs.extend(self.params.iter().map(|&t| Input::F32(t)));
+        let mut out = self.rt.execute(&self.art, &inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// Fused gpt forward: ids `[batch * n_ctx]` → logits
+    /// `[batch, n_ctx, vocab]`.
+    pub fn run_gpt(&self, ids: &[i32]) -> Result<Tensor> {
+        if self.cfg.kind != ModelKind::Gpt {
+            bail!("run_gpt on a vit prepared forward");
+        }
+        let mut inputs: Vec<Input> = Vec::with_capacity(1 + self.params.len());
+        inputs.push(Input::I32(ids, vec![self.batch, self.cfg.n_ctx]));
+        inputs.extend(self.params.iter().map(|&t| Input::F32(t)));
+        let mut out = self.rt.execute(&self.art, &inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// The fused artifact name this handle dispatches.
+    pub fn artifact(&self) -> &str {
+        &self.art
+    }
 }
 
 impl<'rt> Executor<'rt> {
@@ -165,6 +221,41 @@ impl<'rt> Executor<'rt> {
     pub fn forward_vit(&self, w: &WeightStore, tokens: &Tensor, batch: usize) -> Result<Tensor> {
         let x = self.forward_backbone(w, tokens, batch)?;
         self.head(w, &x, batch)
+    }
+
+    /// Resolve the full-forward fast path for `w` at a fixed batch size:
+    /// derives `(dqk, o)` from the stored weight shapes, resolves every
+    /// parameter tensor in canonical order, and precomputes the fused
+    /// `fwd_*` artifact name. The returned handle is `Sync` (it borrows the
+    /// runtime and the weight store immutably), so the serving engine shares
+    /// one per model variant across all worker threads.
+    pub fn prepare_forward<'w>(
+        &self,
+        w: &'w WeightStore,
+        batch: usize,
+    ) -> Result<PreparedForward<'rt, 'w>> {
+        let (dqk, o) = self.stored_dims(w)?;
+        let spec = self.cfg.param_spec_at(dqk, o);
+        let mut params = Vec::with_capacity(spec.len());
+        for (name, shape) in &spec {
+            let t = w.expect(name)?;
+            if t.shape() != shape.as_slice() {
+                bail!(
+                    "prepare_forward: weight '{name}' has shape {:?}, expected {shape:?}",
+                    t.shape()
+                );
+            }
+            params.push(t);
+        }
+        Ok(PreparedForward {
+            rt: self.rt,
+            cfg: self.cfg,
+            batch,
+            dqk,
+            o,
+            art: self.cfg.fwd_artifact(dqk, o, batch),
+            params,
+        })
     }
 
     /// Full forward: gpt logits [B, n, vocab].

@@ -102,7 +102,7 @@ pub fn syrk_upper_f32(x: &[f32], c: &mut [f32], rows: usize, n: usize) {
     }
 }
 
-/// y[m] += A[m,n] · x[n].
+/// `y[m] += A[m,n] · x[n]`.
 pub fn matvec_f32(a: &[f32], x: &[f32], y: &mut [f32], m: usize, n: usize) {
     assert_eq!(a.len(), m * n);
     assert_eq!(x.len(), n);

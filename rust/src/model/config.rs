@@ -104,9 +104,16 @@ impl ModelConfig {
     /// Canonical full-model parameter order (names + shapes), mirroring
     /// `model.param_spec`.
     pub fn param_spec(&self) -> Vec<(String, Vec<usize>)> {
+        self.param_spec_at(self.dh(), self.mlp)
+    }
+
+    /// Full-model parameter order at explicit pruned dims `(dqk, o)` — the
+    /// input convention of the fused `fwd_*` artifacts. Dense shapes are
+    /// `param_spec_at(dh(), mlp)`.
+    pub fn param_spec_at(&self, dqk: usize, o: usize) -> Vec<(String, Vec<usize>)> {
         let mut spec = self.embed_param_spec();
         for layer in 0..self.layers {
-            for (n, s) in self.block_param_spec(self.dh(), self.mlp) {
+            for (n, s) in self.block_param_spec(dqk, o) {
                 spec.push((format!("blocks.{layer}.{n}"), s));
             }
         }
@@ -171,6 +178,12 @@ impl ModelConfig {
 
     pub fn embed_artifact(&self, batch: usize) -> String {
         format!("embed_{}_b{batch}", self.name)
+    }
+
+    /// Fused full-forward artifact (embed + all blocks + head in one
+    /// dispatch) at pruned dims `(dqk, o)` — the serving fast path.
+    pub fn fwd_artifact(&self, dqk: usize, o: usize, batch: usize) -> String {
+        format!("fwd_{}_q{dqk}_o{o}_b{batch}", self.name)
     }
 
     pub fn head_artifact(&self, batch: usize) -> String {
@@ -304,6 +317,19 @@ mod tests {
         assert_eq!(c.block_artifact(32, 384, 16), "block_vit_t_q32_o384_b16");
         assert_eq!(c.embed_artifact(1), "embed_vit_t_b1");
         assert_eq!(c.blockcap_artifact(), "blockcap_vit_t_b16");
+        assert_eq!(c.fwd_artifact(16, 192, 8), "fwd_vit_t_q16_o192_b8");
+    }
+
+    #[test]
+    fn pruned_param_spec_shapes() {
+        let c = ModelConfig::by_name("vit_t").unwrap();
+        let spec = c.param_spec_at(16, 192);
+        let wq = spec.iter().find(|(n, _)| n == "blocks.0.attn.wq").unwrap();
+        assert_eq!(wq.1, vec![c.d, c.heads * 16]);
+        let w1 = spec.iter().find(|(n, _)| n == "blocks.0.mlp.w1").unwrap();
+        assert_eq!(w1.1, vec![c.d, 192]);
+        // The dense spec is the (dh, mlp) instance of the pruned spec.
+        assert_eq!(c.param_spec(), c.param_spec_at(c.dh(), c.mlp));
     }
 
     #[test]

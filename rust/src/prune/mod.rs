@@ -22,7 +22,11 @@ use crate::util::timer::Sections;
 /// Pruning method.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Method {
-    /// CORP: ranking + closed-form affine / logit compensation.
+    /// CORP (Alg. 1): criterion ranking (Alg. 2 for MLP channels, Alg. 4
+    /// for q/k dims) + closed-form compensation — the affine MLP solve
+    /// B = Σ_PS (Σ_SS + λI)⁻¹ of Alg. 3 / Eq. 9 folded into `mlp.w2`, and
+    /// the per-head Kronecker-ridge logit solve of Alg. 5 folded into
+    /// `attn.wq` / `attn.wk`.
     Corp,
     /// Same ranking, no compensation (the "w/o comp" curves).
     Naive,
@@ -50,6 +54,9 @@ pub struct PruneOpts {
     pub sparsity: Sparsity,
     pub method: Method,
     pub criterion: MlpCriterion,
+    /// Ridge strength λ shared by the Eq. 9 affine solve and the Alg. 5
+    /// Kronecker system (normalized by the mean Gram diagonal, see
+    /// `linalg::ridge::ridge_right`).
     pub lambda: f64,
     /// Number of calibration batches (batch size = cfg.eval_batch()).
     pub calib_batches: usize,
@@ -240,7 +247,7 @@ enum Job {
     Head { l: usize, head: usize },
 }
 
-/// Result of one [`Job`], applied serially to the output store afterwards.
+/// Result of one `Job`, applied serially to the output store afterwards.
 enum JobOut {
     Mlp {
         l: usize,

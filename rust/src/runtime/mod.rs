@@ -21,8 +21,8 @@ pub mod native;
 #[cfg(pjrt_backend)]
 pub mod pjrt;
 
-use std::cell::RefCell;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{Context, Result};
 
@@ -42,11 +42,15 @@ pub fn default_artifacts_dir() -> PathBuf {
 
 /// A loaded runtime bound to one artifacts directory (which may be absent —
 /// the native backend synthesizes everything it needs from artifact names).
+///
+/// The default (native) runtime is `Sync`: the serving engine shares one
+/// `Runtime` across its worker threads, so the execution counter is an
+/// atomic rather than a cell.
 pub struct Runtime {
     dir: PathBuf,
     manifest: Manifest,
     /// Cumulative number of executions (telemetry for the serve engine).
-    exec_count: RefCell<u64>,
+    exec_count: AtomicU64,
     #[cfg(pjrt_backend)]
     pjrt: Option<pjrt::PjrtBackend>,
 }
@@ -70,7 +74,7 @@ impl Runtime {
         Ok(Self {
             dir,
             manifest,
-            exec_count: RefCell::new(0),
+            exec_count: AtomicU64::new(0),
             #[cfg(pjrt_backend)]
             pjrt,
         })
@@ -96,7 +100,7 @@ impl Runtime {
     }
 
     pub fn exec_count(&self) -> u64 {
-        *self.exec_count.borrow()
+        self.exec_count.load(Ordering::Relaxed)
     }
 
     /// Execute `name` on the selected backend. `inputs` follow the canonical
@@ -107,12 +111,12 @@ impl Runtime {
         #[cfg(pjrt_backend)]
         if let (Some(backend), Some(spec)) = (&self.pjrt, self.manifest.get(name)) {
             let out = backend.execute(&self.dir, spec, inputs)?;
-            *self.exec_count.borrow_mut() += 1;
+            self.exec_count.fetch_add(1, Ordering::Relaxed);
             return Ok(out);
         }
         let out = native::execute(name, inputs)
             .with_context(|| format!("native execute of artifact '{name}'"))?;
-        *self.exec_count.borrow_mut() += 1;
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
         Ok(out)
     }
 }

@@ -399,7 +399,7 @@ pub(crate) fn vit_embed_one(cfg: &ModelConfig, ep: &EmbedParams<'_>, tokens: &[f
     x
 }
 
-/// GPT token embedding for one example: ids [n] → x [n, d].
+/// GPT token embedding for one example: ids `[n]` → x `[n, d]`.
 pub(crate) fn gpt_embed_one(cfg: &ModelConfig, ep: &EmbedParams<'_>, ids: &[i32]) -> Result<Vec<f32>> {
     let (d, n, vocab) = (cfg.d, cfg.n_ctx, cfg.vocab);
     let (wemb, pos) = match ep {
@@ -517,10 +517,21 @@ pub(crate) struct ModelParams<'a> {
 
 impl<'a> ModelParams<'a> {
     pub(crate) fn read(cfg: &ModelConfig, inp: &mut In<'_, 'a>) -> Result<Self> {
+        Self::read_at(cfg, cfg.dh(), cfg.mlp, inp)
+    }
+
+    /// Read the full parameter list at explicit pruned dims `(dqk, o)` —
+    /// the input convention of the fused `fwd_*` artifacts.
+    pub(crate) fn read_at(
+        cfg: &ModelConfig,
+        dqk: usize,
+        o: usize,
+        inp: &mut In<'_, 'a>,
+    ) -> Result<Self> {
         let embed = EmbedParams::read(cfg, inp)?;
         let mut blocks = Vec::with_capacity(cfg.layers);
         for _ in 0..cfg.layers {
-            blocks.push(BlockParams::read(cfg, cfg.dh(), cfg.mlp, inp)?);
+            blocks.push(BlockParams::read(cfg, dqk, o, inp)?);
         }
         let out_dim = match cfg.kind {
             ModelKind::Vit => cfg.classes,
@@ -566,10 +577,15 @@ pub(crate) enum ExampleInput<'a> {
     Gpt(&'a [i32]),
 }
 
-/// Full dense forward for one example → logits (vit: [classes];
-/// gpt: [n, vocab]).
+/// Full forward for one example at pruned dims `(dqk, o)` → logits
+/// (vit: `[classes]`; gpt: `[n, vocab]`). Dense callers pass
+/// `(cfg.dh(), cfg.mlp)`; the fused `fwd_*` serving path passes the dims
+/// derived from the stored weight shapes, so every GEMM runs at the
+/// retained width directly.
 pub(crate) fn forward_example(
     cfg: &ModelConfig,
+    dqk: usize,
+    o: usize,
     p: &ModelParams<'_>,
     inp: ExampleInput<'_>,
 ) -> Result<Vec<f32>> {
@@ -580,7 +596,7 @@ pub(crate) fn forward_example(
         ExampleInput::Gpt(ids) => gpt_embed_one(cfg, &p.embed, ids)?,
     };
     for bp in &p.blocks {
-        x = block_one(cfg, cfg.dh(), cfg.mlp, bp, &x, causal, false).y;
+        x = block_one(cfg, dqk, o, bp, &x, causal, false).y;
     }
     let xn = layernorm(&x, n, d, p.head_ln_g, p.head_ln_b);
     let out_dim = match cfg.kind {
@@ -602,7 +618,7 @@ pub(crate) fn forward_example(
     }
 }
 
-/// −log softmax(row)[target].
+/// −log `softmax(row)[target]`.
 pub(crate) fn cross_entropy(row: &[f32], target: usize) -> f32 {
     let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
     let lse: f32 = row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln() + m;
@@ -626,6 +642,8 @@ pub(crate) fn run_evloss(cfg: &'static ModelConfig, inp: &mut In<'_, '_>) -> Res
             let losses: Vec<Result<f32>> = threads::parallel_map(b, |e| {
                 let logits = forward_example(
                     cfg,
+                    cfg.dh(),
+                    cfg.mlp,
                     &p,
                     ExampleInput::Vit(&tokens.data()[e * per..(e + 1) * per]),
                 )?;
@@ -652,8 +670,13 @@ pub(crate) fn run_evloss(cfg: &'static ModelConfig, inp: &mut In<'_, '_>) -> Res
             }
             let p = ModelParams::read(cfg, inp)?;
             let losses: Vec<Result<f32>> = threads::parallel_map(b, |e| {
-                let logits =
-                    forward_example(cfg, &p, ExampleInput::Gpt(&ids[e * n..(e + 1) * n]))?;
+                let logits = forward_example(
+                    cfg,
+                    cfg.dh(),
+                    cfg.mlp,
+                    &p,
+                    ExampleInput::Gpt(&ids[e * n..(e + 1) * n]),
+                )?;
                 let mut s = 0.0f32;
                 for t in 0..n {
                     let y = labels[e * n + t];
@@ -669,6 +692,59 @@ pub(crate) fn run_evloss(cfg: &'static ModelConfig, inp: &mut In<'_, '_>) -> Res
                 total += l?;
             }
             Ok(vec![Tensor::scalar(total / b as f32)])
+        }
+    }
+}
+
+/// `fwd_*`: fused full forward (embed + all blocks + head) at pruned dims
+/// `(dqk, o)` — one native dispatch per batch instead of `layers + 2`, with
+/// a single per-example fan-out over the worker pool. This is the serving
+/// fast path: every projection GEMM runs at the retained width read off the
+/// weight shapes, so dense, pruned, and compensated variants are timed on
+/// the arithmetic they actually keep.
+pub(crate) fn run_forward(
+    cfg: &'static ModelConfig,
+    dqk: usize,
+    o: usize,
+    b: usize,
+    inp: &mut In<'_, '_>,
+) -> Result<Vec<Tensor>> {
+    let n = cfg.n_ctx;
+    match cfg.kind {
+        ModelKind::Vit => {
+            let tokens = inp.tensor()?;
+            check_slab(tokens, &[b, cfg.patches, cfg.patch_dim], "fwd tokens")?;
+            let p = ModelParams::read_at(cfg, dqk, o, inp)?;
+            let per = cfg.patches * cfg.patch_dim;
+            let rows: Vec<Result<Vec<f32>>> = threads::parallel_map(b, |e| {
+                forward_example(
+                    cfg,
+                    dqk,
+                    o,
+                    &p,
+                    ExampleInput::Vit(&tokens.data()[e * per..(e + 1) * per]),
+                )
+            });
+            let mut logits = Vec::with_capacity(b * cfg.classes);
+            for r in rows {
+                logits.extend_from_slice(&r?);
+            }
+            Ok(vec![Tensor::from_vec(&[b, cfg.classes], logits)])
+        }
+        ModelKind::Gpt => {
+            let ids = inp.ints()?;
+            if ids.len() != b * n {
+                bail!("fwd ids: {} values, expected {}", ids.len(), b * n);
+            }
+            let p = ModelParams::read_at(cfg, dqk, o, inp)?;
+            let rows: Vec<Result<Vec<f32>>> = threads::parallel_map(b, |e| {
+                forward_example(cfg, dqk, o, &p, ExampleInput::Gpt(&ids[e * n..(e + 1) * n]))
+            });
+            let mut logits = Vec::with_capacity(b * n * cfg.vocab);
+            for r in rows {
+                logits.extend_from_slice(&r?);
+            }
+            Ok(vec![Tensor::from_vec(&[b, n, cfg.vocab], logits)])
         }
     }
 }

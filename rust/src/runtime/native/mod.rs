@@ -11,7 +11,7 @@
 //!
 //! Heavy lifting runs on the packed parallel linalg kernels; batches fan
 //! out per example over the worker pool. The `train_*` artifacts are served
-//! by a hand-written reverse-mode pass (see [`train`]) driving the same
+//! by a hand-written reverse-mode pass (see `train`) driving the same
 //! Adam update as the JAX graph.
 
 pub(crate) mod forward;
@@ -31,6 +31,8 @@ pub(crate) enum Op {
     Lnf { cfg: &'static ModelConfig, b: usize },
     Block { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize },
     BlockCap { cfg: &'static ModelConfig, b: usize },
+    /// Fused full forward at pruned dims (the serving fast path).
+    Forward { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize },
     MlpOnly { cfg: &'static ModelConfig, o: usize, b: usize },
     EvLoss { cfg: &'static ModelConfig },
     Train { cfg: &'static ModelConfig },
@@ -52,6 +54,12 @@ pub(crate) fn parse(name: &str) -> Option<Op> {
         let (rest, o) = tail_num(rest, "_o")?;
         let (m, dqk) = tail_num(rest, "_q")?;
         return ModelConfig::by_name(m).map(|cfg| Op::Block { cfg, dqk, o, b });
+    }
+    if let Some(rest) = name.strip_prefix("fwd_") {
+        let (rest, b) = tail_num(rest, "_b")?;
+        let (rest, o) = tail_num(rest, "_o")?;
+        let (m, dqk) = tail_num(rest, "_q")?;
+        return ModelConfig::by_name(m).map(|cfg| Op::Forward { cfg, dqk, o, b });
     }
     if let Some(rest) = name.strip_prefix("mlponly_") {
         let (rest, b) = tail_num(rest, "_b")?;
@@ -99,6 +107,7 @@ pub fn execute(name: &str, inputs: &[Input<'_>]) -> Result<Vec<Tensor>> {
         Op::BlockCap { cfg, b } => {
             forward::run_block(cfg, cfg.dh(), cfg.mlp, b, true, &mut inp)
         }
+        Op::Forward { cfg, dqk, o, b } => forward::run_forward(cfg, dqk, o, b, &mut inp),
         Op::MlpOnly { cfg, o, b } => forward::run_mlponly(cfg, o, b, &mut inp),
         Op::EvLoss { cfg } => forward::run_evloss(cfg, &mut inp),
         Op::Train { cfg } => train::run_train(cfg, &mut inp),
@@ -186,6 +195,13 @@ mod tests {
             other => panic!("bad parse: {other:?}"),
         }
         assert!(matches!(parse("mlponly_vit_t_o384_b16"), Some(Op::MlpOnly { o: 384, b: 16, .. })));
+        match parse("fwd_vit_b_q16_o384_b8") {
+            Some(Op::Forward { cfg, dqk, o, b }) => {
+                assert_eq!(cfg.name, "vit_b");
+                assert_eq!((dqk, o, b), (16, 384, 8));
+            }
+            other => panic!("bad parse: {other:?}"),
+        }
         assert!(matches!(parse("head_gpt_s_b8"), Some(Op::Head { b: 8, .. })));
         assert!(matches!(parse("lnf_vit_t_b16"), Some(Op::Lnf { .. })));
         assert!(matches!(parse("evloss_gpt_s"), Some(Op::EvLoss { .. })));

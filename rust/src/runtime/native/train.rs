@@ -136,7 +136,7 @@ fn matmul_nt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
     }
 }
 
-/// db[j] += Σ_rows dy[r, j].
+/// `db[j] += Σ_rows dy[r, j]`.
 fn colsum_add(dy: &[f32], rows: usize, d: usize, db: &mut [f32]) {
     debug_assert_eq!(dy.len(), rows * d);
     debug_assert_eq!(db.len(), d);
@@ -732,7 +732,13 @@ mod tests {
             let views: Vec<&[f32]> = flats.iter().map(|p| p.as_slice()).collect();
             let mp = ModelParams::from_slices(cfg, &views);
             let logits =
-                super::super::forward::forward_example(cfg, &mp, ExampleInput::Vit(&tokens))
+                super::super::forward::forward_example(
+                    cfg,
+                    cfg.dh(),
+                    cfg.mlp,
+                    &mp,
+                    ExampleInput::Vit(&tokens),
+                )
                     .unwrap();
             super::super::forward::cross_entropy(&logits, label as usize)
         };

@@ -5,10 +5,9 @@
 //! environment, which is why this is a rustc cfg and not a cargo feature
 //! (`--all-features` must stay buildable offline).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -16,15 +15,22 @@ use super::{ArtifactSpec, Input, IoSpec};
 use crate::tensor::Tensor;
 
 /// A live PJRT client plus the per-process executable cache.
+///
+/// The cache is behind a `Mutex` (not `RefCell`) so that sharing a
+/// `Runtime` across the serving engine's worker threads is not blocked by
+/// this type — whether the backend is actually `Sync` then hinges on the
+/// vendored `xla` crate's client/executable types (see the ROADMAP's PJRT
+/// gating follow-ups; the engine itself is exercised on the native
+/// backend).
 pub struct PjrtBackend {
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl PjrtBackend {
     pub fn new() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
-        Ok(Self { client, cache: RefCell::new(HashMap::new()) })
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
     }
 
     /// Compile (or fetch from cache) the named artifact.
@@ -32,8 +38,8 @@ impl PjrtBackend {
         &self,
         dir: &Path,
         spec: &ArtifactSpec,
-    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(&spec.name) {
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&spec.name) {
             return Ok(e.clone());
         }
         let path = dir.join(&spec.file);
@@ -42,14 +48,14 @@ impl PjrtBackend {
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(to_anyhow)?;
-        let rc = Rc::new(exe);
-        self.cache.borrow_mut().insert(spec.name.clone(), rc.clone());
+        let rc = Arc::new(exe);
+        self.cache.lock().unwrap().insert(spec.name.clone(), rc.clone());
         Ok(rc)
     }
 
     /// Number of executables compiled so far.
     pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 
     /// Execute an artifact. `inputs` must match the manifest spec in order,

@@ -95,7 +95,7 @@ impl Tensor {
         &self.data[i * c..(i + 1) * c]
     }
 
-    /// Gather a subset of trailing-dim columns: out[..., k] = self[..., idx[k]].
+    /// Gather a subset of trailing-dim columns: `out[..., k] = self[..., idx[k]]`.
     pub fn gather_cols(&self, idx: &[usize]) -> Tensor {
         let c = self.cols();
         let r = self.len() / c;
@@ -111,7 +111,7 @@ impl Tensor {
         Tensor::from_vec(&shape, out)
     }
 
-    /// Gather rows of a 2-D matrix: out[k, :] = self[idx[k], :].
+    /// Gather rows of a 2-D matrix: `out[k, :] = self[idx[k], :]`.
     pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
         assert_eq!(self.ndim(), 2);
         let c = self.cols();

@@ -67,6 +67,19 @@ pub fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
 }
 
 fn mark_in_pool() {
+    serialize_nested_regions();
+}
+
+/// Mark the calling thread as a pool worker for the rest of its lifetime:
+/// every parallel region started on it runs serial ([`threads`] returns 1).
+///
+/// The pool's own workers are marked automatically; this hook exists for
+/// long-lived threads spawned *outside* the pool that still execute
+/// pool-using code — the serving engine's batch executors call it so that a
+/// per-request forward pass does not fan out a nested pool per worker and
+/// oversubscribe the host (total parallelism stays at the engine's worker
+/// count).
+pub fn serialize_nested_regions() {
     IN_POOL.with(|f| f.set(true));
 }
 

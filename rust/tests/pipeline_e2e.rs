@@ -158,16 +158,19 @@ fn serve_measure_reports_sane_numbers() {
     assert!(stats.throughput_fps > 0.0);
 }
 
+// (The engine is a fail-fast stub in the pjrt_backend build; see serve::engine.)
+#[cfg(not(pjrt_backend))]
 #[test]
-fn dynamic_batcher_serves_all_requests() {
+fn serving_engine_serves_all_requests() {
     let Some(rt) = runtime_or_skip() else { return };
     let cfg = ModelConfig::by_name("vit_t").unwrap();
     let exec = Executor::new(&rt, cfg);
     let w = WeightStore::init(cfg, 16);
     let gen = VisionGen::new(corp::data::DATA_SEED);
-    let opts = corp::serve::BatcherOpts { rate: 500.0, requests: 48, ..Default::default() };
-    let stats = corp::serve::run_batcher(&exec, &w, &gen, &opts).unwrap();
+    let opts = corp::serve::EngineOpts { rate: 500.0, requests: 48, ..Default::default() };
+    let stats = corp::serve::run_engine(&exec, &w, &gen, &opts).unwrap();
     assert_eq!(stats.served, 48);
+    assert_eq!(stats.shed, 0);
     assert!(stats.mean_batch >= 1.0);
     assert!(stats.p50_ms > 0.0);
 }

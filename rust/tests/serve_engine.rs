@@ -1,0 +1,215 @@
+//! Serving-engine + fused-fast-path integration tests.
+//!
+//! Everything here runs on the native runtime (no artifacts directory), so
+//! the suite exercises the real serving dispatch path offline. The engine's
+//! *timing* is load-dependent by design; what these tests pin down is that
+//! batching, padding, the engine worker count, and the pool-width override
+//! never change *what* is computed.
+//!
+//! The whole file is compiled out under `--cfg pjrt_backend`, where
+//! `run_engine` is a deliberate fail-fast stub (see `serve::engine`).
+#![cfg(not(pjrt_backend))]
+
+use corp::data::{Split, VisionGen};
+use corp::exec::Executor;
+use corp::model::{keep_count, ModelConfig, Scope, Sparsity, WeightStore};
+use corp::prune::{calibrate, prune, Method, PruneOpts};
+use corp::runtime::Runtime;
+use corp::serve::{run_engine, EngineOpts};
+use corp::tensor::Tensor;
+
+fn native_runtime() -> Runtime {
+    // A directory without manifest.json → the native interpreter serves
+    // every artifact name.
+    Runtime::new(std::env::temp_dir().join("corp_serve_engine_no_artifacts")).unwrap()
+}
+
+fn vit_t() -> &'static ModelConfig {
+    ModelConfig::by_name("vit_t").unwrap()
+}
+
+/// Prune (no compensation — shapes are what matter here) at 50% joint
+/// sparsity from a tiny calibration pass.
+fn pruned_store(exec: &Executor<'_>, dense: &WeightStore) -> WeightStore {
+    let opts = PruneOpts {
+        sparsity: Sparsity::of(Scope::Both, 5),
+        method: Method::Naive,
+        calib_batches: 2,
+        attn_max_samples: 32,
+        ..PruneOpts::default()
+    };
+    let stats = calibrate(exec, dense, &opts).unwrap();
+    prune(exec, dense, &stats, &opts).unwrap().weights
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (j, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = j;
+        }
+    }
+    best as i32
+}
+
+#[test]
+fn fused_forward_matches_layered_executor() {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 5);
+    let pruned = pruned_store(&exec, &dense);
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let b = 4;
+    let (tokens, _) = gen.batch(Split::Eval, 0, b);
+    for w in [&dense, &pruned] {
+        let prepared = exec.prepare_forward(w, b).unwrap();
+        let fused = prepared.run_vit(&tokens).unwrap();
+        let layered = exec.forward_vit(w, &tokens, b).unwrap();
+        assert_eq!(fused.shape(), &[b, cfg.classes]);
+        assert!(
+            fused.max_abs_diff(&layered) < 1e-5,
+            "fused vs layered diverged: {}",
+            fused.max_abs_diff(&layered)
+        );
+    }
+    // The fast path derives its dims from the stored weight shapes.
+    let p = exec.prepare_forward(&pruned, 2).unwrap();
+    assert_eq!(p.dqk, keep_count(cfg.dh(), 5));
+    assert_eq!(p.o, keep_count(cfg.mlp, 5));
+    assert_eq!(p.artifact(), format!("fwd_vit_t_q{}_o{}_b2", p.dqk, p.o));
+}
+
+#[test]
+fn fused_forward_matches_layered_gpt() {
+    let rt = native_runtime();
+    let cfg = ModelConfig::by_name("gpt_s").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 6);
+    let gen = corp::data::TextGen::new(corp::data::DATA_SEED);
+    let b = 2;
+    let (ids, _) = gen.batch(Split::Eval, 0, b, cfg.n_ctx);
+    let prepared = exec.prepare_forward(&w, b).unwrap();
+    let fused = prepared.run_gpt(&ids).unwrap();
+    let layered = exec.forward_gpt(&w, &ids, b).unwrap();
+    assert_eq!(fused.shape(), &[b, cfg.n_ctx, cfg.vocab]);
+    assert!(fused.max_abs_diff(&layered) < 1e-5);
+}
+
+#[test]
+fn engine_predictions_invariant_across_worker_counts() {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 7);
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let mk = |workers| EngineOpts {
+        workers,
+        rate: 1e12, // saturated: batch composition differs per run/worker count
+        requests: 24,
+        max_batch: 8,
+        max_wait: 0.002,
+        queue_cap: 1024,
+        ..Default::default()
+    };
+    let s1 = run_engine(&exec, &w, &gen, &mk(1)).unwrap();
+    let s2 = run_engine(&exec, &w, &gen, &mk(2)).unwrap();
+    // A CORP_THREADS-style pool-width override must not change results
+    // either (engine workers serialize their nested pool regions).
+    let s3 = corp::util::threads::with_threads(3, || run_engine(&exec, &w, &gen, &mk(2)))
+        .unwrap();
+    for s in [&s1, &s2, &s3] {
+        assert_eq!(s.served, 24);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.records.len(), 24);
+        // Records are sorted by id and cover every request exactly once.
+        assert!(s.records.windows(2).all(|p| p[0].id < p[1].id));
+        assert!(s.throughput_fps > 0.0);
+        assert!(s.p95_ms >= s.p50_ms);
+    }
+    let preds1: Vec<i32> = s1.records.iter().map(|r| r.pred).collect();
+    let preds2: Vec<i32> = s2.records.iter().map(|r| r.pred).collect();
+    let preds3: Vec<i32> = s3.records.iter().map(|r| r.pred).collect();
+    assert_eq!(preds1, preds2);
+    assert_eq!(preds1, preds3);
+    // And each prediction equals the unbatched layered executor's.
+    for r in &s1.records {
+        let (t, _) = gen.batch(Split::Eval, r.id as u64, 1);
+        let logits = exec.forward_vit(&w, &t, 1).unwrap();
+        assert_eq!(r.pred, argmax(logits.data()), "request {}", r.id);
+    }
+}
+
+#[test]
+fn partial_batch_padding_matches_unbatched() {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 8);
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    // Fewer requests than a batch: every executed batch is partial + padded.
+    let opts = EngineOpts {
+        workers: 1,
+        rate: 1e12,
+        requests: 3,
+        max_batch: 8,
+        max_wait: 0.0,
+        queue_cap: 16,
+        ..Default::default()
+    };
+    let s = run_engine(&exec, &w, &gen, &opts).unwrap();
+    assert_eq!(s.served, 3);
+    assert!(s.mean_batch <= 3.0 + 1e-9);
+    for r in &s.records {
+        let (t, _) = gen.batch(Split::Eval, r.id as u64, 1);
+        let logits = exec.forward_vit(&w, &t, 1).unwrap();
+        assert_eq!(r.pred, argmax(logits.data()), "request {}", r.id);
+    }
+    // Direct fused check: a zero-padded batch reproduces the unbatched rows.
+    let per = cfg.patches * cfg.patch_dim;
+    let (t3, _) = gen.batch(Split::Eval, 0, 3);
+    let mut padded = t3.data().to_vec();
+    padded.resize(8 * per, 0.0);
+    let prepared = exec.prepare_forward(&w, 8).unwrap();
+    let logits8 = prepared.run_vit(&Tensor::from_vec(
+        &[8, cfg.patches, cfg.patch_dim],
+        padded,
+    ))
+    .unwrap();
+    let logits3 = exec.forward_vit(&w, &t3, 3).unwrap();
+    for i in 0..3 {
+        let a = &logits8.data()[i * cfg.classes..(i + 1) * cfg.classes];
+        let b = &logits3.data()[i * cfg.classes..(i + 1) * cfg.classes];
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-5, "row {i}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn bounded_queue_sheds_overload() {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 9);
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    // Saturated arrivals into a 2-deep queue with a slow (floored) executor:
+    // most of the load must be shed, and accounting must still balance.
+    let opts = EngineOpts {
+        workers: 1,
+        rate: 1e12,
+        requests: 64,
+        max_batch: 4,
+        max_wait: 0.0,
+        queue_cap: 2,
+        exec_floor: 0.01,
+        seed: 3,
+        ..Default::default()
+    };
+    let s = run_engine(&exec, &w, &gen, &opts).unwrap();
+    assert_eq!(s.served + s.shed, 64, "every request is served or shed");
+    assert!(s.shed > 0, "expected shedding under overload");
+    assert!(s.served >= 1);
+    // The floor is visible in the per-batch execution accounting.
+    assert!(s.exec_mean_ms >= 10.0 - 1.0);
+}

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# CI entrypoint: format check (advisory), clippy, tier-1 build+test, and the
-# linalg perf harness (emits BENCH_linalg.json at the repo root).
+# CI entrypoint: format check (advisory), clippy, tier-1 build+test, rustdoc
+# (deny warnings), and the perf harnesses (BENCH_linalg.json + a smoke run
+# of the serving engine emitting BENCH_serve.json at the repo root).
 #
 # Usage: scripts/check.sh [--no-bench]
 set -euo pipefail
@@ -29,9 +30,15 @@ cargo build --manifest-path "$MANIFEST" --release
 echo "==> cargo test -q"
 cargo test --manifest-path "$MANIFEST" -q
 
+echo "==> cargo doc --no-deps (deny warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --manifest-path "$MANIFEST" --no-deps --quiet
+
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "==> bench linalg (CORP_BENCH_MODE=${CORP_BENCH_MODE:-fast})"
     cargo run --manifest-path "$MANIFEST" --release -- bench linalg --json --out BENCH_linalg.json
+
+    echo "==> bench serve smoke (CORP_BENCH_MODE=smoke)"
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- bench serve --json --out BENCH_serve.json
 fi
 
 echo "ok"
