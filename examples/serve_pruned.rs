@@ -2,20 +2,20 @@
 //!
 //! An open-loop Poisson arrival stream feeds a bounded queue drained by a
 //! pool of worker threads; batches form up to `--max-batch` under a
-//! batching deadline and dispatch through the fused pruned-shape fast path.
-//! Compares dense vs pruned vs compensated under the same offered load and
-//! worker counts — the deployment story behind the paper's Table 5
-//! throughput column.
+//! batching deadline and dispatch through the batch-polymorphic pruned-shape
+//! fast path — padded to the artifact batch, at their exact size, or `auto`
+//! (exact below half fill) per `--dispatch`. Compares dense vs pruned vs
+//! compensated under the same offered load and worker count — the
+//! deployment story behind the paper's Table 5 throughput column.
 //!
 //! ```text
-//! cargo run --release --example serve_pruned -- --model vit_s --rate 120 --workers 2
+//! cargo run --release --example serve_pruned -- --model vit_s --rate 120 --dispatch exact
 //! ```
 
 use corp::coordinator::Coordinator;
-use corp::data::VisionGen;
 use corp::model::{ModelConfig, Scope, Sparsity};
 use corp::prune::{Method, PruneOpts};
-use corp::serve::{run_engine, EngineOpts};
+use corp::serve::{run_engine, DispatchPolicy, EngineOpts, VisionWorkload};
 use corp::util::cli::Command;
 
 fn main() -> anyhow::Result<()> {
@@ -25,7 +25,9 @@ fn main() -> anyhow::Result<()> {
         .opt("requests", "total requests", "192")
         .opt("sparsity", "joint sparsity", "0.5")
         .opt("workers", "engine worker threads", "2")
-        .opt("max-batch", "max requests per batch", "16");
+        .opt("max-batch", "max requests per batch", "16")
+        .opt("dispatch", "batch dispatch shape: padded|exact|auto", "auto")
+        .opt("seed", "arrival-process seed", "7");
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = cmd.parse(&argv).map_err(|e| anyhow::anyhow!("{e}\n{}", cmd.usage()))?;
 
@@ -46,28 +48,38 @@ fn main() -> anyhow::Result<()> {
     let comp = coord.prune_job(cfg, &base)?.weights;
 
     let exec = coord.executor(cfg);
-    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let workload = VisionWorkload::new(cfg, corp::data::DATA_SEED)?;
     let eopts = EngineOpts {
         workers: args.usize("workers")?,
         rate: args.f64("rate")?,
         requests: args.usize("requests")?,
         max_batch: args.usize("max-batch")?,
+        seed: args.usize("seed")? as u64,
+        dispatch: DispatchPolicy::parse(&args.str("dispatch"))?,
         ..Default::default()
     };
     println!(
-        "load: {} req at {:.0}/s, {} worker(s), max batch {}, deadline {:.0}ms",
+        "load: {} req at {:.0}/s, {} worker(s), max batch {}, deadline {:.0}ms, dispatch {}",
         eopts.requests,
         eopts.rate,
         eopts.workers,
         eopts.max_batch,
-        eopts.max_wait * 1e3
+        eopts.max_wait * 1e3,
+        eopts.dispatch.label()
     );
     for (label, w) in [("dense", &dense), ("pruned", &pruned), ("compensated", &comp)] {
-        let s = run_engine(&exec, w, &gen, &eopts)?;
+        let s = run_engine(&exec, w, &workload, &eopts)?;
         println!(
             "{label:12}: served {} ({} shed) | p50 {:.1}ms p95 {:.1}ms (queue p50 {:.1}ms) | \
-             mean batch {:.1} | {:.0} images/sec",
-            s.served, s.shed, s.p50_ms, s.p95_ms, s.queue_p50_ms, s.mean_batch, s.throughput_fps
+             batch {:.1} → dispatch {:.1} | {:.0} images/sec",
+            s.served,
+            s.shed,
+            s.p50_ms,
+            s.p95_ms,
+            s.queue_p50_ms,
+            s.mean_batch,
+            s.mean_dispatch,
+            s.throughput_fps
         );
     }
     Ok(())

@@ -1,22 +1,26 @@
 //! `corp bench serve` — the serving-engine harness behind `BENCH_serve.json`.
 //!
 //! Drives the concurrent engine (`serve::run_engine`) over a grid of
-//! model variant (dense / pruned / compensated at 50% joint sparsity) ×
-//! worker count × arrival rate, and reports per-cell p50/p95 latency,
-//! queueing delay, mean batch size, and images/sec. The "saturated" rate
-//! offers the whole request set at t = 0 with an ample queue, so the
-//! images/sec column is the engine's capacity — this is where the pruned
-//! fast path has to beat dense, since its GEMMs run at the retained widths.
+//! workload (vision / text) × model variant (dense / pruned / compensated
+//! at 50% joint sparsity) × worker count × arrival rate × dispatch policy
+//! (padded / exact), and reports per-cell p50/p95 latency, queueing delay,
+//! mean formed and dispatched batch sizes, and requests+tokens/sec
+//! (schema `corp-bench-serve/v2`). The "saturated" rate offers the whole
+//! request set at t = 0 with an ample queue, so the throughput column is
+//! the engine's capacity — this is where the pruned fast path has to beat
+//! dense, since its GEMMs run at the retained widths. The low rates are
+//! where the dispatch axis matters: batches are mostly partial there, so
+//! exact-size dispatch skips the padding arithmetic and should cut tail
+//! latency versus padded on the same variant.
 
 use anyhow::{Context, Result};
 
 use super::{num, obj};
-use crate::data::VisionGen;
 use crate::exec::Executor;
-use crate::model::{ModelConfig, Scope, Sparsity, WeightStore};
+use crate::model::{ModelConfig, ModelKind, Scope, Sparsity, WeightStore};
 use crate::prune::{calibrate, prune, Method, PruneOpts};
 use crate::runtime::Runtime;
-use crate::serve::{run_engine, EngineOpts};
+use crate::serve::{run_engine, DispatchPolicy, EngineOpts, GptWorkload, VisionWorkload, Workload};
 use crate::util::bench::{bench_mode, BenchMode};
 use crate::util::json::Json;
 use crate::util::threads;
@@ -24,92 +28,210 @@ use crate::util::threads;
 /// Arrival rate treated as "everything is due immediately".
 const SATURATED_RATE: f64 = 1e9;
 
-/// Grid per mode: (model, requests, worker counts, rates, max_batch,
-/// calibration batches for the pruned variants).
-fn mode_grid() -> (&'static str, usize, Vec<usize>, Vec<f64>, usize, usize) {
+/// The dispatch axis every cell is swept over (`auto` interpolates between
+/// these two and is covered by tests, not the bench grid).
+const DISPATCHES: [DispatchPolicy; 2] = [DispatchPolicy::Padded, DispatchPolicy::Exact];
+
+/// One workload's slice of the bench grid.
+struct WorkloadGrid {
+    model: &'static str,
+    requests: usize,
+    workers: Vec<usize>,
+    rates: Vec<f64>,
+    max_batch: usize,
+    calib_batches: usize,
+}
+
+/// Per-mode grids: one vision entry + one text entry each, so every
+/// `BENCH_serve.json` carries both workload axes.
+fn mode_grids() -> Vec<WorkloadGrid> {
     match bench_mode() {
-        BenchMode::Smoke => ("vit_t", 96, vec![1, 2], vec![SATURATED_RATE], 8, 2),
-        BenchMode::Fast => ("vit_t", 256, vec![1, 2], vec![SATURATED_RATE, 300.0], 16, 4),
-        BenchMode::Full => ("vit_b", 512, vec![1, 2, 4], vec![SATURATED_RATE, 400.0], 16, 8),
+        BenchMode::Smoke => vec![
+            WorkloadGrid {
+                model: "vit_t",
+                requests: 96,
+                workers: vec![1, 2],
+                rates: vec![SATURATED_RATE, 150.0],
+                max_batch: 8,
+                calib_batches: 2,
+            },
+            WorkloadGrid {
+                model: "gpt_s",
+                requests: 32,
+                workers: vec![1],
+                rates: vec![SATURATED_RATE, 60.0],
+                max_batch: 4,
+                calib_batches: 2,
+            },
+        ],
+        BenchMode::Fast => vec![
+            WorkloadGrid {
+                model: "vit_t",
+                requests: 256,
+                workers: vec![1, 2],
+                rates: vec![SATURATED_RATE, 300.0, 120.0],
+                max_batch: 16,
+                calib_batches: 4,
+            },
+            WorkloadGrid {
+                model: "gpt_s",
+                requests: 64,
+                workers: vec![1, 2],
+                rates: vec![SATURATED_RATE, 60.0],
+                max_batch: 8,
+                calib_batches: 4,
+            },
+        ],
+        BenchMode::Full => vec![
+            WorkloadGrid {
+                model: "vit_b",
+                requests: 512,
+                workers: vec![1, 2, 4],
+                rates: vec![SATURATED_RATE, 400.0, 150.0],
+                max_batch: 16,
+                calib_batches: 8,
+            },
+            WorkloadGrid {
+                model: "gpt_s",
+                requests: 128,
+                workers: vec![1, 2],
+                rates: vec![SATURATED_RATE, 80.0],
+                max_batch: 8,
+                calib_batches: 8,
+            },
+        ],
     }
 }
 
+/// Sweep one workload's grid cells and append a JSON row per cell.
+fn grid_runs<W: Workload>(
+    exec: &Executor<'_>,
+    variants: &[(&str, &WeightStore)],
+    workload: &W,
+    g: &WorkloadGrid,
+    runs: &mut Vec<Json>,
+) -> Result<()> {
+    for &(label, w) in variants {
+        for &nw in &g.workers {
+            for &rate in &g.rates {
+                for dispatch in DISPATCHES {
+                    let eopts = EngineOpts {
+                        workers: nw,
+                        rate,
+                        requests: g.requests,
+                        max_batch: g.max_batch,
+                        max_wait: 0.005,
+                        // Capacity grid: queue everything, shed nothing.
+                        queue_cap: g.requests,
+                        dispatch,
+                        ..Default::default()
+                    };
+                    let s = run_engine(exec, w, workload, &eopts)?;
+                    let rate_label = if rate >= SATURATED_RATE {
+                        "saturated".to_string()
+                    } else {
+                        format!("{rate:.0}/s")
+                    };
+                    println!(
+                        "{:6} {label:12} w={nw} rate {rate_label:>9} {:6}: p50 {:8.2}ms \
+                         p95 {:8.2}ms | queue p50 {:8.2}ms | batch {:4.1} → {:4.1} | \
+                         {:6.0} req/s {:7.0} tok/s",
+                        workload.label(),
+                        dispatch.label(),
+                        s.p50_ms,
+                        s.p95_ms,
+                        s.queue_p50_ms,
+                        s.mean_batch,
+                        s.mean_dispatch,
+                        s.throughput_fps,
+                        s.throughput_tps
+                    );
+                    let mut row = vec![
+                        ("workload", Json::Str(workload.label().to_string())),
+                        ("model", Json::Str(g.model.to_string())),
+                        ("variant", Json::Str(label.to_string())),
+                        ("workers", num(nw as f64)),
+                        ("rate_rps", num(rate)),
+                        ("saturated", Json::Bool(rate >= SATURATED_RATE)),
+                        ("dispatch", Json::Str(dispatch.label().to_string())),
+                        ("requests", num(g.requests as f64)),
+                        ("max_batch", num(g.max_batch as f64)),
+                        ("served", num(s.served as f64)),
+                        ("shed", num(s.shed as f64)),
+                        ("batches", num(s.batches as f64)),
+                        ("mean_batch", num(s.mean_batch)),
+                        ("mean_dispatch", num(s.mean_dispatch)),
+                        ("p50_ms", num(s.p50_ms)),
+                        ("p95_ms", num(s.p95_ms)),
+                        ("queue_p50_ms", num(s.queue_p50_ms)),
+                        ("exec_mean_ms", num(s.exec_mean_ms)),
+                        ("requests_per_sec", num(s.throughput_fps)),
+                        ("tokens_per_sec", num(s.throughput_tps)),
+                    ];
+                    // Keep the v1 column name on the vision axis so the
+                    // BENCH trajectory stays comparable across schemas.
+                    if workload.cfg().kind == ModelKind::Vit {
+                        row.push(("images_per_sec", num(s.throughput_fps)));
+                    }
+                    runs.push(obj(row));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Run the serving benchmark grid; when `json_out` is set, write
-/// `BENCH_serve.json`-style output there.
+/// `BENCH_serve.json`-style output there (schema `corp-bench-serve/v2`).
 pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
-    let (model, requests, worker_counts, rates, max_batch, calib_batches) = mode_grid();
-    let cfg = ModelConfig::by_name(model).context("bench serve model")?;
     let rt = Runtime::from_default_dir()?;
-    let exec = Executor::new(&rt, cfg);
-
-    // Accuracy is irrelevant to throughput shape, so the dense variant is a
-    // deterministic init; one calibration pass serves both pruned variants.
-    let dense = WeightStore::init(cfg, 1);
-    let popts = PruneOpts {
-        sparsity: Sparsity::of(Scope::Both, 5),
-        calib_batches,
-        ..PruneOpts::default()
-    };
-    let stats = calibrate(&exec, &dense, &popts)?;
-    let pruned = prune(&exec, &dense, &stats, &PruneOpts { method: Method::Naive, ..popts.clone() })?;
-    let comp = prune(&exec, &dense, &stats, &PruneOpts { method: Method::Corp, ..popts.clone() })?;
-    let variants: [(&str, &WeightStore); 3] =
-        [("dense", &dense), ("pruned", &pruned.weights), ("compensated", &comp.weights)];
-
-    println!(
-        "serve bench — mode {:?}, model {model}, {requests} requests, max batch {max_batch}, \
-         50% joint sparsity, {} pool worker(s) available",
-        bench_mode(),
-        threads::threads()
-    );
-    let gen = VisionGen::new(crate::data::DATA_SEED);
     let mut runs = Vec::new();
-    for &(label, w) in &variants {
-        for &nw in &worker_counts {
-            for &rate in &rates {
-                let eopts = EngineOpts {
-                    workers: nw,
-                    rate,
-                    requests,
-                    max_batch,
-                    max_wait: 0.005,
-                    // Capacity grid: queue everything, shed nothing.
-                    queue_cap: requests,
-                    ..Default::default()
-                };
-                let s = run_engine(&exec, w, &gen, &eopts)?;
-                let rate_label = if rate >= SATURATED_RATE {
-                    "saturated".to_string()
-                } else {
-                    format!("{rate:.0}/s")
-                };
-                println!(
-                    "{label:12} w={nw} rate {rate_label:>9}: p50 {:9.2}ms p95 {:9.2}ms | \
-                     queue p50 {:9.2}ms | batch {:4.1} | {:7.0} img/s",
-                    s.p50_ms, s.p95_ms, s.queue_p50_ms, s.mean_batch, s.throughput_fps
-                );
-                runs.push(obj(vec![
-                    ("variant", Json::Str(label.to_string())),
-                    ("workers", num(nw as f64)),
-                    ("rate_rps", num(rate)),
-                    ("saturated", Json::Bool(rate >= SATURATED_RATE)),
-                    ("served", num(s.served as f64)),
-                    ("shed", num(s.shed as f64)),
-                    ("batches", num(s.batches as f64)),
-                    ("p50_ms", num(s.p50_ms)),
-                    ("p95_ms", num(s.p95_ms)),
-                    ("queue_p50_ms", num(s.queue_p50_ms)),
-                    ("exec_mean_ms", num(s.exec_mean_ms)),
-                    ("mean_batch", num(s.mean_batch)),
-                    ("images_per_sec", num(s.throughput_fps)),
-                ]));
+    for g in mode_grids() {
+        let cfg = ModelConfig::by_name(g.model).context("bench serve model")?;
+        let exec = Executor::new(&rt, cfg);
+
+        // Accuracy is irrelevant to throughput shape, so the dense variant
+        // is a deterministic init; one calibration pass serves both pruned
+        // variants.
+        let dense = WeightStore::init(cfg, 1);
+        let popts = PruneOpts {
+            sparsity: Sparsity::of(Scope::Both, 5),
+            calib_batches: g.calib_batches,
+            ..PruneOpts::default()
+        };
+        let stats = calibrate(&exec, &dense, &popts)?;
+        let pruned =
+            prune(&exec, &dense, &stats, &PruneOpts { method: Method::Naive, ..popts.clone() })?;
+        let comp =
+            prune(&exec, &dense, &stats, &PruneOpts { method: Method::Corp, ..popts.clone() })?;
+        let variants: [(&str, &WeightStore); 3] =
+            [("dense", &dense), ("pruned", &pruned.weights), ("compensated", &comp.weights)];
+
+        println!(
+            "serve bench — mode {:?}, {} workload, model {}, {} requests, max batch {}, \
+             50% joint sparsity, {} pool worker(s) available",
+            bench_mode(),
+            cfg.kind.workload_label(),
+            g.model,
+            g.requests,
+            g.max_batch,
+            threads::threads()
+        );
+        match cfg.kind {
+            ModelKind::Vit => {
+                let wl = VisionWorkload::new(cfg, crate::data::DATA_SEED)?;
+                grid_runs(&exec, &variants, &wl, &g, &mut runs)?;
+            }
+            ModelKind::Gpt => {
+                let wl = GptWorkload::new(cfg, crate::data::DATA_SEED)?;
+                grid_runs(&exec, &variants, &wl, &g, &mut runs)?;
             }
         }
     }
 
     if let Some(path) = json_out {
         let root = obj(vec![
-            ("schema", Json::Str("corp-bench-serve/v1".into())),
+            ("schema", Json::Str("corp-bench-serve/v2".into())),
             (
                 "mode",
                 Json::Str(
@@ -122,11 +244,8 @@ pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
                 ),
             ),
             ("threads", num(threads::threads() as f64)),
-            ("model", Json::Str(model.to_string())),
             ("scope", Json::Str("both".into())),
             ("sparsity", num(0.5)),
-            ("requests", num(requests as f64)),
-            ("max_batch", num(max_batch as f64)),
             ("runs", Json::Arr(runs)),
         ]);
         std::fs::write(path, root.to_string() + "\n")
@@ -141,13 +260,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn mode_grid_covers_acceptance_shape() {
-        // ≥ 2 worker counts in every mode, so the JSON always satisfies the
-        // "per worker count" axis; grids stay within the engine's bounds.
-        let (m, req, workers, rates, mb, cb) = mode_grid();
-        assert!(ModelConfig::by_name(m).is_some());
-        assert!(workers.len() >= 2);
-        assert!(!rates.is_empty());
-        assert!(req >= mb && mb >= 1 && cb >= 1);
+    fn mode_grids_cover_acceptance_shape() {
+        // Every mode carries both workload axes, each with a saturated and
+        // (for the dispatch-policy comparison) at least one finite rate;
+        // grids stay within the engine's bounds.
+        let grids = mode_grids();
+        let kinds: Vec<ModelKind> =
+            grids.iter().map(|g| ModelConfig::by_name(g.model).unwrap().kind).collect();
+        assert!(kinds.contains(&ModelKind::Vit) && kinds.contains(&ModelKind::Gpt));
+        for g in &grids {
+            assert!(!g.workers.is_empty());
+            assert!(g.rates.iter().any(|&r| r >= SATURATED_RATE));
+            assert!(g.rates.iter().any(|&r| r < SATURATED_RATE));
+            assert!(g.requests >= g.max_batch && g.max_batch >= 1 && g.calib_batches >= 1);
+        }
+        assert_eq!(DISPATCHES, [DispatchPolicy::Padded, DispatchPolicy::Exact]);
     }
 }

@@ -11,7 +11,6 @@
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Coordinator;
-use crate::data::VisionGen;
 use crate::model::{ModelConfig, Scope, Sparsity};
 use crate::prune::{Method, PruneOpts};
 use crate::rank::MlpCriterion;
@@ -77,7 +76,8 @@ fn print_usage() {
          subcommands:\n  \
          train  --model vit_b [--steps N]        train/load the dense checkpoint\n  \
          prune  --model vit_b --scope both --sparsity 0.5 [--method corp] [--criterion combined]\n  \
-         serve  --model vit_b --sparsity 0.5 [--workers 2] [--rate 200]\n  \
+         serve  --model vit_b --sparsity 0.5 [--workers 2] [--rate 200] [--dispatch auto]\n  \
+         serve  --model gpt_s ...                same engine, text workload (prompt lengths)\n  \
          stats  --model vit_b                    Table-9 redundancy statistics\n  \
          bench  linalg|serve [--json] [--out PATH]  perf harnesses (BENCH_*.json)\n  \
          list                                    models + artifact status"
@@ -183,14 +183,17 @@ fn cmd_prune(argv: &[String]) -> Result<()> {
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serve", "concurrent batched serving engine")
-        .opt("model", "model name", "vit_b")
+        .opt("model", "model name (vit_* → vision workload, gpt_* → text)", "vit_b")
         .opt("sparsity", "joint sparsity 0.0-0.7", "0.5")
         .opt("workers", "executor threads", "2")
         .opt("rate", "arrival rate req/s (0 = saturated)", "200")
         .opt("requests", "total requests", "256")
         .opt("max-batch", "max requests per batch", "16")
         .opt("max-wait-ms", "batching deadline, ms", "10")
-        .opt("queue-cap", "queue bound (excess is shed)", "1024");
+        .opt("queue-cap", "queue bound (excess is shed)", "1024")
+        .opt("exec-floor", "minimum per-batch execution time, seconds (load shaping)", "0")
+        .opt("seed", "arrival-process seed", "7")
+        .opt("dispatch", "batch dispatch shape: padded|exact|auto", "auto");
     let args = cmd.parse(argv)?;
     let cfg = cfg_of(&args.str("model"))?;
     let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
@@ -203,7 +206,6 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         coord.prune_job(cfg, &o)?.weights
     };
     let exec = coord.executor(cfg);
-    let gen = VisionGen::new(crate::data::DATA_SEED);
     let eopts = crate::serve::EngineOpts {
         workers: args.usize("workers")?,
         rate: args.f64("rate")?,
@@ -211,23 +213,41 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         max_batch: args.usize("max-batch")?,
         max_wait: args.f64("max-wait-ms")? / 1e3,
         queue_cap: args.usize("queue-cap")?,
-        ..Default::default()
+        exec_floor: args.f64("exec-floor")?,
+        seed: args.usize("seed")? as u64,
+        dispatch: crate::serve::DispatchPolicy::parse(&args.str("dispatch"))?,
     };
-    let stats = crate::serve::run_engine(&exec, &weights, &gen, &eopts)?;
+    // The model picks the serving scenario: one queueing/batching core,
+    // workload-specific request synthesis and accounting.
+    let stats = match cfg.kind {
+        crate::model::ModelKind::Vit => {
+            let wl = crate::serve::VisionWorkload::new(cfg, crate::data::DATA_SEED)?;
+            crate::serve::run_engine(&exec, &weights, &wl, &eopts)?
+        }
+        crate::model::ModelKind::Gpt => {
+            let wl = crate::serve::GptWorkload::new(cfg, crate::data::DATA_SEED)?;
+            crate::serve::run_engine(&exec, &weights, &wl, &eopts)?
+        }
+    };
     println!(
-        "served {}/{} requests ({} shed) on {} worker(s): p50 {:.2}ms p95 {:.2}ms \
-         (queue p50 {:.2}ms, exec mean {:.2}ms) | mean batch {:.1} over {} batches | {:.0} images/sec",
+        "served {}/{} {} requests ({} shed) on {} worker(s), dispatch {}: \
+         p50 {:.2}ms p95 {:.2}ms (queue p50 {:.2}ms, exec mean {:.2}ms) | \
+         batch {:.1} → dispatch {:.1} over {} batches | {:.0} req/s, {:.0} tok/s",
         stats.served,
         eopts.requests,
+        cfg.kind.workload_label(),
         stats.shed,
         eopts.workers,
+        eopts.dispatch.label(),
         stats.p50_ms,
         stats.p95_ms,
         stats.queue_p50_ms,
         stats.exec_mean_ms,
         stats.mean_batch,
+        stats.mean_dispatch,
         stats.batches,
-        stats.throughput_fps
+        stats.throughput_fps,
+        stats.throughput_tps
     );
     Ok(())
 }

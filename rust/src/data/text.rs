@@ -84,6 +84,27 @@ impl TextGen {
         (ids, targets)
     }
 
+    /// Serving request model: synthesize prompt `id` for an LM request —
+    /// eval-split ids truncated to a deterministic prompt length drawn
+    /// uniformly from `[min_len, n_ctx]` (a pure function of the generator
+    /// seed and `id`), then zero-padded back to `n_ctx` so the fixed-width
+    /// `fwd_*` artifacts accept it. Causal masking makes positions
+    /// `< prompt_len` independent of the padding, so per-request outputs
+    /// are identical however the request is batched. Returns
+    /// `(ids [n_ctx], prompt_len)`.
+    pub fn prompt(&self, id: u64, n_ctx: usize, min_len: usize) -> (Vec<i32>, usize) {
+        assert!(min_len >= 1 && min_len <= n_ctx);
+        let (mut ids, _) = self.batch(Split::Eval, id, 1, n_ctx);
+        let mut rng = Pcg64::new(
+            self.seed ^ id.wrapping_mul(0x9e3779b97f4a7c15) ^ 0x70726f6d70740a, // "prompt"
+        );
+        let len = min_len + rng.below(n_ctx - min_len + 1);
+        for slot in ids.iter_mut().skip(len) {
+            *slot = 0;
+        }
+        (ids, len)
+    }
+
     /// The source's conditional entropy (nats/token) — the perplexity floor
     /// exp(H) ≈ 2.89 that a perfect model approaches (slightly lower when
     /// successor collisions merge probability mass).
@@ -148,6 +169,26 @@ mod tests {
         let (a, _) = g.batch(Split::Calib, 0, 2, 32);
         let (b, _) = g.batch(Split::Eval, 0, 2, 32);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn prompt_request_model() {
+        let g = TextGen::new(5);
+        let n = 32;
+        let (ids1, l1) = g.prompt(3, n, 4);
+        let (ids2, l2) = g.prompt(3, n, 4);
+        // Deterministic per id; lengths stay inside [min_len, n_ctx].
+        assert_eq!(ids1, ids2);
+        assert_eq!(l1, l2);
+        assert!((4..=n).contains(&l1));
+        assert_eq!(ids1.len(), n);
+        // The prefix is the eval stream; the tail is zero padding.
+        let (full, _) = g.batch(Split::Eval, 3, 1, n);
+        assert_eq!(&ids1[..l1], &full[..l1]);
+        assert!(ids1[l1..].iter().all(|&v| v == 0));
+        // Lengths vary across ids (the arrival mix is not degenerate).
+        let lens: Vec<usize> = (0..16).map(|i| g.prompt(i, n, 4).1).collect();
+        assert!(lens.iter().any(|&l| l != lens[0]));
     }
 
     #[test]

@@ -6,11 +6,17 @@
 //! each layer's MLP hidden activations and per-head Q/K (the calibration
 //! signals of Alg. 1).
 //!
-//! For serving there is a fused fast path: [`Executor::prepare_forward`]
-//! resolves every parameter reference once (by-name lookups and artifact
-//! name formatting are hoisted out of the request loop) and returns a
-//! [`PreparedForward`] that dispatches the whole network as a single
-//! `fwd_*` artifact at the pruned dims read off the stored weight shapes.
+//! For serving there is a fused fast path: [`Executor::forward_plan`]
+//! resolves every parameter reference once (by-name lookups are hoisted out
+//! of the request loop) and returns a batch-polymorphic [`ForwardPlan`]
+//! that dispatches the whole network as a single `fwd_*` artifact at the
+//! pruned dims read off the stored weight shapes. The plan is bound to a
+//! model *variant*, not a batch size: an interior per-batch-size artifact
+//! cache lets the native backend run any batch at its true size, while
+//! fixed-shape backends (gated PJRT) keep padding to one artifact batch.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Context, Result};
 
@@ -33,53 +39,94 @@ pub struct Executor<'rt> {
     pub cfg: &'static ModelConfig,
 }
 
-/// A resolved full-forward dispatch: fused `fwd_*` artifact name plus every
-/// parameter tensor in canonical `param_spec_at(dqk, o)` order. Built once
-/// per (model variant, batch size) by [`Executor::prepare_forward`]; each
-/// call then costs one input-list assembly and one runtime dispatch.
-pub struct PreparedForward<'rt, 'w> {
+/// A batch-polymorphic resolved full-forward dispatch: every parameter
+/// tensor in canonical `param_spec_at(dqk, o)` order, resolved once per
+/// model *variant* by [`Executor::forward_plan`]. Each call then costs one
+/// input-list assembly and one runtime dispatch of the fused `fwd_*`
+/// artifact at the batch size of the data actually handed in — the fixed
+/// artifact-batch binding (and the caller-side padding it forced) is gone.
+///
+/// Fused artifact names are formatted on first use per batch size and kept
+/// in an interior cache behind a [`RwLock`], so the plan stays `Sync` (the
+/// serving engine shares one per variant across all worker threads) and a
+/// steady-state request loop never re-formats a name.
+pub struct ForwardPlan<'rt, 'w> {
     rt: &'rt Runtime,
     pub cfg: &'static ModelConfig,
-    /// Fixed batch size the artifact is bound to (callers pad short batches).
-    pub batch: usize,
     /// Retained per-head q/k width derived from the stored `attn.wq` shape.
     pub dqk: usize,
     /// Retained MLP hidden width derived from the stored `mlp.w1` shape.
     pub o: usize,
-    art: String,
     params: Vec<&'w Tensor>,
+    /// batch size → fused artifact name (interior per-batch-size cache).
+    arts: RwLock<HashMap<usize, Arc<str>>>,
 }
 
-impl PreparedForward<'_, '_> {
-    /// Fused vit forward: tokens `[batch, patches, patch_dim]` → logits
-    /// `[batch, classes]`.
+impl ForwardPlan<'_, '_> {
+    /// The fused artifact name this plan dispatches at `batch`, cached so
+    /// repeat callers share one allocation per batch size ([`Arc`] handle
+    /// identity is observable — tests assert reuse).
+    pub fn artifact(&self, batch: usize) -> Arc<str> {
+        if let Some(a) = self.arts.read().unwrap().get(&batch) {
+            return a.clone();
+        }
+        let mut cache = self.arts.write().unwrap();
+        cache
+            .entry(batch)
+            .or_insert_with(|| Arc::from(self.cfg.fwd_artifact(self.dqk, self.o, batch)))
+            .clone()
+    }
+
+    /// Number of batch sizes resolved so far (cache telemetry).
+    pub fn cached_batch_sizes(&self) -> usize {
+        self.arts.read().unwrap().len()
+    }
+
+    fn dispatch(&self, data: Input<'_>, art: &str) -> Result<Tensor> {
+        let mut inputs: Vec<Input> = Vec::with_capacity(1 + self.params.len());
+        inputs.push(data);
+        inputs.extend(self.params.iter().map(|&t| Input::F32(t)));
+        let mut out = self.rt.execute(art, &inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// Fused vit forward at the batch size of `tokens`
+    /// `[batch, patches, patch_dim]` → logits `[batch, classes]`.
     pub fn run_vit(&self, tokens: &Tensor) -> Result<Tensor> {
         if self.cfg.kind != ModelKind::Vit {
-            bail!("run_vit on a gpt prepared forward");
+            bail!("run_vit on a gpt forward plan");
         }
-        let mut inputs: Vec<Input> = Vec::with_capacity(1 + self.params.len());
-        inputs.push(Input::F32(tokens));
-        inputs.extend(self.params.iter().map(|&t| Input::F32(t)));
-        let mut out = self.rt.execute(&self.art, &inputs)?;
-        Ok(out.remove(0))
+        let shape = tokens.shape();
+        if shape.len() != 3 || shape[1] != self.cfg.patches || shape[2] != self.cfg.patch_dim {
+            bail!(
+                "run_vit: tokens shape {shape:?}, expected [b, {}, {}]",
+                self.cfg.patches,
+                self.cfg.patch_dim
+            );
+        }
+        let batch = shape[0];
+        if batch == 0 {
+            bail!("run_vit: empty batch");
+        }
+        let art = self.artifact(batch);
+        self.dispatch(Input::F32(tokens), &art)
     }
 
     /// Fused gpt forward: ids `[batch * n_ctx]` → logits
     /// `[batch, n_ctx, vocab]`.
-    pub fn run_gpt(&self, ids: &[i32]) -> Result<Tensor> {
+    pub fn run_gpt(&self, ids: &[i32], batch: usize) -> Result<Tensor> {
         if self.cfg.kind != ModelKind::Gpt {
-            bail!("run_gpt on a vit prepared forward");
+            bail!("run_gpt on a vit forward plan");
         }
-        let mut inputs: Vec<Input> = Vec::with_capacity(1 + self.params.len());
-        inputs.push(Input::I32(ids, vec![self.batch, self.cfg.n_ctx]));
-        inputs.extend(self.params.iter().map(|&t| Input::F32(t)));
-        let mut out = self.rt.execute(&self.art, &inputs)?;
-        Ok(out.remove(0))
-    }
-
-    /// The fused artifact name this handle dispatches.
-    pub fn artifact(&self) -> &str {
-        &self.art
+        if batch == 0 || ids.len() != batch * self.cfg.n_ctx {
+            bail!(
+                "run_gpt: {} ids for batch {batch} (expected {})",
+                ids.len(),
+                batch * self.cfg.n_ctx
+            );
+        }
+        let art = self.artifact(batch);
+        self.dispatch(Input::I32(ids, vec![batch, self.cfg.n_ctx]), &art)
     }
 }
 
@@ -223,17 +270,14 @@ impl<'rt> Executor<'rt> {
         self.head(w, &x, batch)
     }
 
-    /// Resolve the full-forward fast path for `w` at a fixed batch size:
-    /// derives `(dqk, o)` from the stored weight shapes, resolves every
-    /// parameter tensor in canonical order, and precomputes the fused
-    /// `fwd_*` artifact name. The returned handle is `Sync` (it borrows the
-    /// runtime and the weight store immutably), so the serving engine shares
-    /// one per model variant across all worker threads.
-    pub fn prepare_forward<'w>(
-        &self,
-        w: &'w WeightStore,
-        batch: usize,
-    ) -> Result<PreparedForward<'rt, 'w>> {
+    /// Resolve the batch-polymorphic full-forward fast path for `w`:
+    /// derives `(dqk, o)` from the stored weight shapes and resolves every
+    /// parameter tensor in canonical order — once per model *variant*, not
+    /// per batch size. The returned [`ForwardPlan`] is `Sync` (it borrows
+    /// the runtime and the weight store immutably; the artifact-name cache
+    /// is behind a lock), so the serving engine shares one per variant
+    /// across all worker threads and dispatches any batch at its true size.
+    pub fn forward_plan<'w>(&self, w: &'w WeightStore) -> Result<ForwardPlan<'rt, 'w>> {
         let (dqk, o) = self.stored_dims(w)?;
         let spec = self.cfg.param_spec_at(dqk, o);
         let mut params = Vec::with_capacity(spec.len());
@@ -241,20 +285,19 @@ impl<'rt> Executor<'rt> {
             let t = w.expect(name)?;
             if t.shape() != shape.as_slice() {
                 bail!(
-                    "prepare_forward: weight '{name}' has shape {:?}, expected {shape:?}",
+                    "forward_plan: weight '{name}' has shape {:?}, expected {shape:?}",
                     t.shape()
                 );
             }
             params.push(t);
         }
-        Ok(PreparedForward {
+        Ok(ForwardPlan {
             rt: self.rt,
             cfg: self.cfg,
-            batch,
             dqk,
             o,
-            art: self.cfg.fwd_artifact(dqk, o, batch),
             params,
+            arts: RwLock::new(HashMap::new()),
         })
     }
 

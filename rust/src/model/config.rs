@@ -8,6 +8,16 @@ pub enum ModelKind {
     Gpt,
 }
 
+impl ModelKind {
+    /// Serving-workload label (`corp serve`, `BENCH_serve.json` axes).
+    pub fn workload_label(&self) -> &'static str {
+        match self {
+            ModelKind::Vit => "vision",
+            ModelKind::Gpt => "text",
+        }
+    }
+}
+
 /// Pruning scope (which substructures are removed).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Scope {
@@ -330,6 +340,12 @@ mod tests {
         assert_eq!(w1.1, vec![c.d, 192]);
         // The dense spec is the (dh, mlp) instance of the pruned spec.
         assert_eq!(c.param_spec(), c.param_spec_at(c.dh(), c.mlp));
+    }
+
+    #[test]
+    fn workload_labels() {
+        assert_eq!(ModelKind::Vit.workload_label(), "vision");
+        assert_eq!(ModelKind::Gpt.workload_label(), "text");
     }
 
     #[test]

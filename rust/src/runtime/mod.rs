@@ -103,6 +103,18 @@ impl Runtime {
         self.exec_count.load(Ordering::Relaxed)
     }
 
+    /// Whether this runtime prefers the fixed shapes its AOT artifacts were
+    /// lowered at — true only in a `--cfg pjrt_backend` build bound to a
+    /// loaded manifest. The native interpreter synthesizes any batch size
+    /// from the artifact name, so exact-size dispatch is free there; a
+    /// PJRT-backed runtime would silently fall back to the interpreter for
+    /// shapes missing from the manifest, so serving policies (dispatch
+    /// selection in `serve`, the fused path in `serve::measure`) consult
+    /// this and keep the padded fixed-shape path instead.
+    pub fn prefers_fixed_shapes(&self) -> bool {
+        cfg!(pjrt_backend) && !self.manifest.is_empty()
+    }
+
     /// Execute `name` on the selected backend. `inputs` follow the canonical
     /// parameter order of the artifact (data inputs first, then parameters
     /// in `param_spec` order). Returns the output tuple elements as f32
@@ -141,5 +153,8 @@ mod tests {
         assert!(rt.has_artifact("train_gpt_s"));
         assert!(!rt.has_artifact("definitely_not_an_artifact"));
         assert_eq!(rt.exec_count(), 0);
+        // No manifest → shapes are synthesized per request; exact-size
+        // dispatch is always available.
+        assert!(!rt.prefers_fixed_shapes());
     }
 }

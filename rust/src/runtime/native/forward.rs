@@ -701,7 +701,11 @@ pub(crate) fn run_evloss(cfg: &'static ModelConfig, inp: &mut In<'_, '_>) -> Res
 /// a single per-example fan-out over the worker pool. This is the serving
 /// fast path: every projection GEMM runs at the retained width read off the
 /// weight shapes, so dense, pruned, and compensated variants are timed on
-/// the arithmetic they actually keep.
+/// the arithmetic they actually keep. The batch size `b` is decoded from
+/// the artifact name like every other dim, so the interpreter serves any
+/// batch a [`crate::exec::ForwardPlan`] dispatches — exact-size partial
+/// batches do proportionally less work, which is what the serving engine's
+/// `exact` dispatch policy exploits.
 pub(crate) fn run_forward(
     cfg: &'static ModelConfig,
     dqk: usize,

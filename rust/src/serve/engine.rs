@@ -1,20 +1,28 @@
-//! Concurrent batched serving engine.
+//! Concurrent batched serving engine, generic over a [`Workload`].
 //!
 //! Queueing model (open loop): a generator thread replays a seeded Poisson
 //! arrival process into a *bounded* FIFO queue; arrivals that find the queue
 //! full are shed and counted (backpressure instead of unbounded buildup).
 //! `workers` executor threads drain the queue: each pops a request, then
 //! keeps the batch open up to `max_wait` seconds waiting for the queue to
-//! yield up to `max_batch` requests, pads the (possibly partial) batch to
-//! the fixed artifact batch, and dispatches one fused forward
-//! ([`crate::exec::PreparedForward`]) shared by every worker.
+//! yield up to `max_batch` requests, picks a dispatch size for the (possibly
+//! partial) batch per the configured [`DispatchPolicy`] — padded to the
+//! fixed artifact batch or exact at the true size — and hands it to the
+//! workload, which assembles inputs and runs one fused dispatch through a
+//! [`crate::exec::ForwardPlan`] shared by every worker.
+//!
+//! The engine core knows nothing about images or prompts: request
+//! synthesis, batch input assembly, and per-request output accounting live
+//! behind the [`Workload`] trait ([`super::VisionWorkload`] /
+//! [`super::GptWorkload`]) — one queueing/batching core, two scenarios.
 //!
 //! Accounting is per request: queueing delay (intended arrival → dequeue),
-//! execution time (its batch's forward), and total latency. Predictions are
-//! returned per request so tests can assert that batching, padding, and the
-//! worker count never change *what* is computed — rows of a padded batch
+//! execution time (its batch's forward), total latency, and the workload's
+//! [`RequestOutput`] (prediction + token charge). Predictions are returned
+//! per request so tests can assert that batching, padding vs exact-size
+//! dispatch, and the worker count never change *what* is computed — rows
 //! are processed per example, so a request's logits are identical to a
-//! batch-1 forward of the same image.
+//! batch-1 forward of the same payload.
 //!
 //! Worker threads call [`threads::serialize_nested_regions`] on entry:
 //! the per-example fan-out inside the native backend runs serial on them,
@@ -23,9 +31,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::data::VisionGen;
 use crate::exec::Executor;
 use crate::model::WeightStore;
+use crate::serve::workload::{DispatchPolicy, Workload};
 
 // Internals of the real (non-PJRT) engine; the `--cfg pjrt_backend` build
 // compiles a stub `run_engine` instead (see below), because sharing one
@@ -33,9 +41,7 @@ use crate::model::WeightStore;
 // the vendored `xla` client/executable types are not known to be.
 #[cfg(not(pjrt_backend))]
 use {
-    crate::data::Split,
-    crate::model::ModelKind,
-    crate::tensor::Tensor,
+    crate::serve::workload::RequestOutput,
     crate::util::bench::percentile,
     crate::util::{threads, Pcg64},
     std::collections::VecDeque,
@@ -54,7 +60,7 @@ pub struct EngineOpts {
     /// Total requests offered to the engine.
     pub requests: usize,
     /// Maximum requests per batch; also the fixed artifact batch size that
-    /// partial batches are padded to.
+    /// the padded dispatch path pads partial batches to.
     pub max_batch: usize,
     /// Batching deadline: how long a worker holds a non-full batch open
     /// waiting for more arrivals, seconds.
@@ -67,6 +73,9 @@ pub struct EngineOpts {
     pub exec_floor: f64,
     /// Seed for the Poisson arrival process.
     pub seed: u64,
+    /// Batch dispatch-shape policy (padded / exact / auto). Collapses to
+    /// `Padded` on runtimes that prefer fixed shapes (gated PJRT).
+    pub dispatch: DispatchPolicy,
 }
 
 impl Default for EngineOpts {
@@ -80,14 +89,37 @@ impl Default for EngineOpts {
             queue_cap: 1024,
             exec_floor: 0.0,
             seed: 7,
+            dispatch: DispatchPolicy::Auto,
         }
+    }
+}
+
+impl EngineOpts {
+    /// Reject degenerate configurations with clear errors instead of
+    /// silently shedding everything (`queue_cap == 0`), spinning on empty
+    /// batches (`max_batch == 0`), or deadlocking (`workers == 0`).
+    fn validate(&self) -> Result<()> {
+        if self.requests == 0 {
+            bail!("run_engine: requests must be > 0");
+        }
+        if self.max_batch == 0 {
+            bail!("run_engine: max_batch must be > 0 (got 0 — no batch could ever form)");
+        }
+        if self.queue_cap == 0 {
+            bail!("run_engine: queue_cap must be > 0 (got 0 — every arrival would be shed)");
+        }
+        if self.workers == 0 {
+            bail!("run_engine: workers must be > 0 (got 0 — nothing would drain the queue)");
+        }
+        Ok(())
     }
 }
 
 /// Per-request accounting (one row per *served* request).
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
-    /// Request id; doubles as the eval-stream image index.
+    /// Request id; doubles as the eval-stream index the workload
+    /// synthesized the payload from.
     pub id: usize,
     /// Intended arrival → dequeue into a batch, ms.
     pub queue_ms: f64,
@@ -95,8 +127,10 @@ pub struct RequestRecord {
     pub exec_ms: f64,
     /// Intended arrival → completion, ms.
     pub total_ms: f64,
-    /// Argmax class of this request's logits row.
+    /// Workload prediction (vision: class; text: next-token id).
     pub pred: i32,
+    /// Tokens charged to this request (vision: 1; text: prompt length).
+    pub tokens: usize,
 }
 
 /// Aggregate result of one engine run.
@@ -107,7 +141,11 @@ pub struct EngineStats {
     pub shed: usize,
     /// Batches executed.
     pub batches: usize,
+    /// Mean requests carried per executed batch.
     pub mean_batch: f64,
+    /// Mean batch size actually *dispatched* (= artifact batch under the
+    /// padded policy; = mean_batch under exact; in between under auto).
+    pub mean_dispatch: f64,
     /// p50 / p95 of total per-request latency, ms.
     pub p50_ms: f64,
     pub p95_ms: f64,
@@ -117,6 +155,9 @@ pub struct EngineStats {
     pub exec_mean_ms: f64,
     /// Served requests per second of wall time.
     pub throughput_fps: f64,
+    /// Served tokens per second of wall time (== throughput_fps for the
+    /// vision workload, where every request is one image).
+    pub throughput_tps: f64,
     /// Per-request records, sorted by id.
     pub records: Vec<RequestRecord>,
 }
@@ -136,54 +177,51 @@ struct Shared {
     shed: usize,
 }
 
+/// Run the engine: offered load is `opts.requests` workload-synthesized
+/// requests (request id == eval-stream index) at `opts.rate` req/s; returns
+/// per-request accounting plus aggregates. The weight store may be dense,
+/// pruned, or compensated — the batch-polymorphic plan dispatches at
+/// whatever shapes it finds, and the workload decides what a request *is*.
 #[cfg(not(pjrt_backend))]
-fn argmax(row: &[f32]) -> i32 {
-    let mut best = 0usize;
-    for (j, &v) in row.iter().enumerate() {
-        if v > row[best] {
-            best = j;
-        }
-    }
-    best as i32
-}
-
-/// Run the engine: offered load is `opts.requests` eval-stream images (image
-/// index = request id) at `opts.rate` req/s; returns per-request accounting
-/// plus aggregates. The weight store may be dense, pruned, or compensated —
-/// the fused fast path dispatches at whatever shapes it finds.
-#[cfg(not(pjrt_backend))]
-pub fn run_engine(
+pub fn run_engine<W: Workload>(
     exec: &Executor<'_>,
     w: &WeightStore,
-    gen: &VisionGen,
+    workload: &W,
     opts: &EngineOpts,
 ) -> Result<EngineStats> {
     let cfg = exec.cfg;
-    if cfg.kind != ModelKind::Vit {
-        bail!("the serving engine drives vision workloads; got model '{}'", cfg.name);
+    if workload.cfg() != cfg {
+        bail!(
+            "workload '{}' drives model '{}', executor is bound to '{}'",
+            workload.label(),
+            workload.cfg().name,
+            cfg.name
+        );
     }
-    if opts.requests == 0 {
-        bail!("run_engine: requests must be > 0");
-    }
-    let b_art = opts.max_batch.max(1);
-    let workers = opts.workers.max(1);
-    let prepared = exec.prepare_forward(w, b_art)?;
-    let per = cfg.patches * cfg.patch_dim;
+    opts.validate()?;
+    let b_art = opts.max_batch;
+    let workers = opts.workers;
+    let policy = opts.dispatch.resolve(exec.rt.prefers_fixed_shapes());
+    let plan = exec.forward_plan(w)?;
 
-    // Pre-generate every request's image so data synthesis never pollutes
-    // the timed region (request id == eval-stream image index).
-    let token_rows: Vec<Vec<f32>> = threads::parallel_map(opts.requests, |i| {
-        gen.batch(Split::Eval, i as u64, 1).0.into_vec()
-    });
+    // Pre-synthesize every request's payload so data synthesis never
+    // pollutes the timed region (request id == eval-stream index).
+    let payloads: Vec<W::Req> = threads::parallel_map(opts.requests, |i| workload.synth(i));
 
-    // Warmup dispatch (first-touch allocations, PJRT compilation when gated
-    // in) before the clock starts.
+    // Warmup before the clock starts: run the full artifact batch AND batch
+    // size 1 (first-touch allocation, PJRT compilation when gated in), and
+    // under exact/auto dispatch pre-populate the plan's artifact-name cache
+    // for every size a batch could dispatch at — so no batch pays first-use
+    // name formatting inside its timed region.
     {
-        let mut warm = vec![0.0f32; b_art * per];
-        for (i, row) in token_rows.iter().take(b_art).enumerate() {
-            warm[i * per..(i + 1) * per].copy_from_slice(row);
+        let warm: Vec<&W::Req> = payloads.iter().take(b_art).collect();
+        workload.run_batch(&plan, &warm, b_art)?;
+        if policy != DispatchPolicy::Padded {
+            workload.run_batch(&plan, &warm[..1], 1)?;
+            for b in 1..=b_art {
+                plan.artifact(b);
+            }
         }
-        prepared.run_vit(&Tensor::from_vec(&[b_art, cfg.patches, cfg.patch_dim], warm))?;
     }
 
     // Seeded Poisson arrival offsets (seconds from engine start).
@@ -199,16 +237,22 @@ pub fn run_engine(
     let shared = Mutex::new(Shared { queue: VecDeque::new(), closed: false, shed: 0 });
     let cv = Condvar::new();
     let results: Mutex<Vec<RequestRecord>> = Mutex::new(Vec::with_capacity(opts.requests));
-    // Per executed batch: (requests carried, execution ms).
-    let batches: Mutex<Vec<(usize, f64)>> = Mutex::new(Vec::new());
+    // Per executed batch: (requests carried, dispatch size, execution ms).
+    let batches: Mutex<Vec<(usize, usize, f64)>> = Mutex::new(Vec::new());
     let wait_dur = Duration::from_secs_f64(opts.max_wait.max(0.0));
     let wall0 = Instant::now();
 
     std::thread::scope(|s| -> Result<()> {
         // ---- open-loop generator ----
         s.spawn(|| {
-            for (id, &at) in arrivals.iter().enumerate() {
+            'replay: for (id, &at) in arrivals.iter().enumerate() {
                 loop {
+                    // A failed worker poisons the run by setting `closed`;
+                    // stop replaying the schedule so the error surfaces
+                    // promptly instead of after the full arrival tail.
+                    if shared.lock().unwrap().closed {
+                        break 'replay;
+                    }
                     let now = wall0.elapsed().as_secs_f64();
                     if now >= at {
                         break;
@@ -216,6 +260,9 @@ pub fn run_engine(
                     std::thread::sleep(Duration::from_secs_f64((at - now).min(0.005)));
                 }
                 let mut g = shared.lock().unwrap();
+                if g.closed {
+                    break 'replay;
+                }
                 if g.queue.len() >= opts.queue_cap {
                     g.shed += 1;
                 } else {
@@ -277,16 +324,38 @@ pub fn run_engine(
                             }
                         }
                         let take = batch.len();
+                        let dispatch = policy.dispatch_size(take, b_art);
                         let t_deq = Instant::now();
-                        // Pad the partial batch to the fixed artifact batch;
-                        // pad rows are zeros and their outputs are dropped.
-                        let mut buf = vec![0.0f32; b_art * per];
-                        for (i, q) in batch.iter().enumerate() {
-                            buf[i * per..(i + 1) * per].copy_from_slice(&token_rows[q.id]);
+                        let inputs: Vec<&W::Req> =
+                            batch.iter().map(|q| &payloads[q.id]).collect();
+                        // On any workload failure, poison the run (`closed`
+                        // stops the generator's replay and drains the other
+                        // workers) so the error surfaces promptly instead
+                        // of after the full arrival schedule.
+                        let poison = || {
+                            shared.lock().unwrap().closed = true;
+                            cv.notify_all();
+                        };
+                        let outs: Vec<RequestOutput> =
+                            match workload.run_batch(&plan, &inputs, dispatch) {
+                                Ok(outs) => outs,
+                                Err(e) => {
+                                    poison();
+                                    return Err(e);
+                                }
+                            };
+                        if outs.len() != batch.len() {
+                            // Fail fast on a broken Workload impl rather
+                            // than silently dropping records in the zip
+                            // below (served + shed == requests must hold).
+                            poison();
+                            bail!(
+                                "workload '{}' returned {} outputs for a batch of {}",
+                                workload.label(),
+                                outs.len(),
+                                batch.len()
+                            );
                         }
-                        let tokens =
-                            Tensor::from_vec(&[b_art, cfg.patches, cfg.patch_dim], buf);
-                        let logits = prepared.run_vit(&tokens)?;
                         if opts.exec_floor > 0.0 {
                             let spent = t_deq.elapsed().as_secs_f64();
                             if spent < opts.exec_floor {
@@ -299,8 +368,7 @@ pub fn run_engine(
                         let exec_ms =
                             t_done.saturating_duration_since(t_deq).as_secs_f64() * 1e3;
                         let mut recs = results.lock().unwrap();
-                        for (i, q) in batch.iter().enumerate() {
-                            let row = &logits.data()[i * cfg.classes..(i + 1) * cfg.classes];
+                        for (q, out) in batch.iter().zip(&outs) {
                             recs.push(RequestRecord {
                                 id: q.id,
                                 queue_ms: t_deq.saturating_duration_since(q.arrival).as_secs_f64()
@@ -310,11 +378,12 @@ pub fn run_engine(
                                     .saturating_duration_since(q.arrival)
                                     .as_secs_f64()
                                     * 1e3,
-                                pred: argmax(row),
+                                pred: out.pred,
+                                tokens: out.tokens,
                             });
                         }
                         drop(recs);
-                        batches.lock().unwrap().push((take, exec_ms));
+                        batches.lock().unwrap().push((take, dispatch, exec_ms));
                     }
                 })
             })
@@ -336,6 +405,7 @@ pub fn run_engine(
     let mut queues: Vec<f64> = records.iter().map(|r| r.queue_ms).collect();
     queues.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n_batches = batch_log.len();
+    let tokens: usize = records.iter().map(|r| r.tokens).sum();
     Ok(EngineStats {
         served: records.len(),
         shed,
@@ -343,7 +413,12 @@ pub fn run_engine(
         mean_batch: if n_batches == 0 {
             0.0
         } else {
-            batch_log.iter().map(|&(take, _)| take).sum::<usize>() as f64 / n_batches as f64
+            batch_log.iter().map(|&(take, _, _)| take).sum::<usize>() as f64 / n_batches as f64
+        },
+        mean_dispatch: if n_batches == 0 {
+            0.0
+        } else {
+            batch_log.iter().map(|&(_, d, _)| d).sum::<usize>() as f64 / n_batches as f64
         },
         p50_ms: if totals.is_empty() { 0.0 } else { percentile(&totals, 0.50) },
         p95_ms: if totals.is_empty() { 0.0 } else { percentile(&totals, 0.95) },
@@ -351,9 +426,10 @@ pub fn run_engine(
         exec_mean_ms: if n_batches == 0 {
             0.0
         } else {
-            batch_log.iter().map(|&(_, ms)| ms).sum::<f64>() / n_batches as f64
+            batch_log.iter().map(|&(_, _, ms)| ms).sum::<f64>() / n_batches as f64
         },
         throughput_fps: records.len() as f64 / total_s.max(1e-12),
+        throughput_tps: tokens as f64 / total_s.max(1e-12),
         records,
     })
 }
@@ -363,12 +439,13 @@ pub fn run_engine(
 /// backend to be `Sync`; the vendored PJRT client/executable types are not
 /// known to satisfy that, so instead of a crate-wide build break the
 /// gated build gets a stub that fails fast. Closed-loop [`super::measure`]
-/// remains the serving measurement on that path.
+/// remains the serving measurement on that path (and keeps the padded
+/// fixed-shape dispatch — see [`DispatchPolicy::resolve`]).
 #[cfg(pjrt_backend)]
-pub fn run_engine(
+pub fn run_engine<W: Workload>(
     _exec: &Executor<'_>,
     _w: &WeightStore,
-    _gen: &VisionGen,
+    _workload: &W,
     _opts: &EngineOpts,
 ) -> Result<EngineStats> {
     bail!(
@@ -382,17 +459,25 @@ mod tests {
     use super::*;
 
     #[test]
-    fn argmax_first_max_wins() {
-        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
-        assert_eq!(argmax(&[5.0]), 0);
-        assert_eq!(argmax(&[-2.0, -1.0]), 1);
-    }
-
-    #[test]
     fn default_opts_sane() {
         let o = EngineOpts::default();
         assert!(o.workers >= 1 && o.max_batch >= 1);
         assert!(o.queue_cap >= o.max_batch);
         assert!(o.max_wait >= 0.0 && o.exec_floor == 0.0);
+        assert_eq!(o.dispatch, DispatchPolicy::Auto);
+        assert!(o.validate().is_ok());
+    }
+
+    #[test]
+    fn degenerate_opts_rejected() {
+        for (opts, needle) in [
+            (EngineOpts { requests: 0, ..Default::default() }, "requests"),
+            (EngineOpts { max_batch: 0, ..Default::default() }, "max_batch"),
+            (EngineOpts { queue_cap: 0, ..Default::default() }, "queue_cap"),
+            (EngineOpts { workers: 0, ..Default::default() }, "workers"),
+        ] {
+            let err = opts.validate().unwrap_err().to_string();
+            assert!(err.contains(needle), "{err}");
+        }
     }
 }

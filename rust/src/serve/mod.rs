@@ -4,22 +4,30 @@
 //!
 //! * [`measure`] — closed-loop micro-measurement: batch-1 requests issued
 //!   back-to-back for p50/p95 latency, then saturated batches for
-//!   images/sec. Both run through the fused `fwd_*` fast path
-//!   ([`crate::exec::Executor::prepare_forward`]), so dense, pruned, and
-//!   compensated variants are timed on the GEMM shapes they actually keep.
-//! * [`engine`] — the concurrent batched serving engine: an open-loop
-//!   Poisson arrival process feeds a bounded queue drained by a pool of
-//!   worker threads, each forming batches up to `max_batch` under a
-//!   batching deadline, with per-request queueing/execution accounting and
-//!   load shedding when the queue is full. See [`engine::run_engine`].
+//!   images/sec. Both run through one batch-polymorphic
+//!   [`crate::exec::ForwardPlan`] (parameters resolved once per variant),
+//!   so dense, pruned, and compensated variants are timed on the GEMM
+//!   shapes they actually keep.
+//! * [`engine`] — the concurrent batched serving engine, generic over a
+//!   [`Workload`]: an open-loop Poisson arrival process feeds a bounded
+//!   queue drained by a pool of worker threads, each forming batches up to
+//!   `max_batch` under a batching deadline and dispatching them padded or
+//!   at their exact size per the [`DispatchPolicy`], with per-request
+//!   queueing/execution/token accounting and load shedding when the queue
+//!   is full. See [`engine::run_engine`].
 //!
 //! The engine shares one `Runtime` across workers — the native backend is
 //! pure Rust and thread-safe. The gated PJRT path stays on the closed-loop
-//! `measure` (its executables are not shared across threads).
+//! `measure` (its executables are not shared across threads) and on padded
+//! fixed-shape dispatch (its artifacts are lowered at one batch size).
 
 pub mod engine;
+pub mod workload;
 
 pub use engine::{run_engine, EngineOpts, EngineStats, RequestRecord};
+pub use workload::{
+    DispatchPolicy, GptWorkload, RequestOutput, TextRequest, VisionWorkload, Workload,
+};
 
 use anyhow::Result;
 
@@ -43,8 +51,9 @@ pub struct ServeStats {
 
 /// Closed-loop latency at batch 1 + saturated throughput at the eval batch.
 ///
-/// Uses the fused `fwd_*` fast path — except in a `--cfg pjrt_backend`
-/// build with a loaded manifest, where the layered `embed_*/block_*/head_*`
+/// Uses one fused [`crate::exec::ForwardPlan`] for both sections — except
+/// on a runtime that prefers fixed shapes (a `--cfg pjrt_backend` build
+/// with a loaded manifest), where the layered `embed_*/block_*/head_*`
 /// artifacts are kept so the reported numbers measure the PJRT executables
 /// (the fused family has no AOT lowering and would silently fall back to
 /// the native interpreter).
@@ -55,42 +64,34 @@ pub fn measure(
     lat_iters: usize,
     tp_iters: usize,
 ) -> Result<ServeStats> {
-    let fused = !(cfg!(pjrt_backend) && !exec.rt.manifest().is_empty());
-
-    // ---- batch-1 latency ----
-    let p1 = if fused { Some(exec.prepare_forward(w, 1)?) } else { None };
-    let step1 = |t: &Tensor| -> Result<Tensor> {
-        match &p1 {
+    let plan = if exec.rt.prefers_fixed_shapes() { None } else { Some(exec.forward_plan(w)?) };
+    let step = |t: &Tensor, b: usize| -> Result<Tensor> {
+        match &plan {
             Some(p) => p.run_vit(t),
-            None => exec.forward_vit(w, t, 1),
+            None => exec.forward_vit(w, t, b),
         }
     };
+
+    // ---- batch-1 latency ----
     let (tokens1, _) = gen.batch(Split::Eval, 0, 1);
-    step1(&tokens1)?; // warmup (compiles executables on the PJRT path)
+    step(&tokens1, 1)?; // warmup (compiles executables on the PJRT path)
     let mut lat = Vec::with_capacity(lat_iters);
     for i in 0..lat_iters {
         let (t, _) = gen.batch(Split::Eval, i as u64, 1);
         let t0 = Instant::now();
-        step1(&t)?;
+        step(&t, 1)?;
         lat.push(t0.elapsed().as_secs_f64());
     }
     let s = stats_from("latency", &lat);
 
     // ---- saturated throughput ----
     let b = exec.cfg.eval_batch();
-    let pb = if fused { Some(exec.prepare_forward(w, b)?) } else { None };
-    let stepb = |t: &Tensor| -> Result<Tensor> {
-        match &pb {
-            Some(p) => p.run_vit(t),
-            None => exec.forward_vit(w, t, b),
-        }
-    };
     let (tokens, _) = gen.batch(Split::Eval, 0, b);
-    stepb(&tokens)?; // warmup
+    step(&tokens, b)?; // warmup
     let t0 = Instant::now();
     for i in 0..tp_iters {
         let (t, _) = gen.batch(Split::Eval, i as u64, b);
-        stepb(&t)?;
+        step(&t, b)?;
     }
     let elapsed = t0.elapsed().as_secs_f64();
     Ok(ServeStats {
@@ -103,6 +104,8 @@ pub fn measure(
 #[cfg(test)]
 mod tests {
     // Engine behaviour is covered by `tests/serve_engine.rs` (determinism
-    // across worker counts, bounded-queue shedding, padding correctness);
-    // `measure` by `tests/pipeline_e2e.rs`.
+    // across worker counts and dispatch policies, bounded-queue shedding,
+    // padding vs exact-size correctness, GptWorkload determinism);
+    // `measure` by `tests/pipeline_e2e.rs`; the dispatch policy and
+    // workload units by `serve::workload::tests`.
 }

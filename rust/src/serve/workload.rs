@@ -1,0 +1,343 @@
+//! Serving workloads and the batch dispatch policy.
+//!
+//! The engine (`serve::engine`) is generic over a [`Workload`]: the
+//! workload owns request synthesis (what arrives), batch input assembly
+//! (how queued requests become one fused dispatch), and per-request output
+//! accounting (what each request is charged and what it predicted). The
+//! queueing/batching core is written once; [`VisionWorkload`] (one image
+//! per request, Table-5-style classification serving) and [`GptWorkload`]
+//! (prompt-length request model with per-token accounting, the paper's OPT
+//! deployment analogue) are the two scenarios.
+//!
+//! [`DispatchPolicy`] decides the *shape* each formed batch dispatches at:
+//! padded to the fixed artifact batch (shape reuse — what a compiled
+//! fixed-shape backend wants), exact at the true batch size (the native
+//! backend does proportionally less arithmetic), or `auto`, which picks
+//! exact-size dispatch below a fill-ratio threshold and padded shape reuse
+//! above it.
+
+use anyhow::{bail, Result};
+
+use crate::data::{Split, TextGen, VisionGen};
+use crate::exec::ForwardPlan;
+use crate::model::{ModelConfig, ModelKind};
+use crate::tensor::Tensor;
+
+/// First-max argmax over a logits row.
+pub(crate) fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (j, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = j;
+        }
+    }
+    best as i32
+}
+
+/// How a formed batch of `take ≤ max_batch` requests is dispatched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Always pad to the fixed artifact batch (`max_batch`). One shape for
+    /// the whole run — what an AOT fixed-shape backend reuses — at the cost
+    /// of full-batch arithmetic on partial batches.
+    Padded,
+    /// Always dispatch at the true batch size. Partial batches do
+    /// proportionally less work (the native backend interprets any size),
+    /// at the cost of one artifact shape per distinct size.
+    Exact,
+    /// Exact below [`DispatchPolicy::AUTO_FILL_THRESHOLD`] fill ratio,
+    /// padded at or above it: nearly-full batches keep the reusable fixed
+    /// shape (padding waste is small), sparse batches skip the padding
+    /// arithmetic (where the waste dominates).
+    Auto,
+}
+
+impl DispatchPolicy {
+    /// Fill ratio (`take / max_batch`) at which `auto` switches from
+    /// exact-size dispatch to padded shape reuse.
+    pub const AUTO_FILL_THRESHOLD: f64 = 0.5;
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "padded" => DispatchPolicy::Padded,
+            "exact" => DispatchPolicy::Exact,
+            "auto" => DispatchPolicy::Auto,
+            _ => bail!("dispatch must be padded|exact|auto, got '{s}'"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DispatchPolicy::Padded => "padded",
+            DispatchPolicy::Exact => "exact",
+            DispatchPolicy::Auto => "auto",
+        }
+    }
+
+    /// Collapse to the policy actually usable on a backend: a runtime that
+    /// prefers fixed shapes (gated PJRT with a manifest) keeps the padded
+    /// path — exact-size artifacts have no AOT lowering there and would
+    /// silently fall back to the interpreter.
+    pub fn resolve(self, fixed_shapes: bool) -> Self {
+        if fixed_shapes {
+            DispatchPolicy::Padded
+        } else {
+            self
+        }
+    }
+
+    /// The batch size a formed batch of `take` requests dispatches at.
+    pub fn dispatch_size(&self, take: usize, max_batch: usize) -> usize {
+        debug_assert!(take >= 1 && take <= max_batch);
+        match self {
+            DispatchPolicy::Padded => max_batch,
+            DispatchPolicy::Exact => take,
+            DispatchPolicy::Auto => {
+                if (take as f64) < Self::AUTO_FILL_THRESHOLD * max_batch as f64 {
+                    take
+                } else {
+                    max_batch
+                }
+            }
+        }
+    }
+}
+
+/// Per-request output accounting, produced by [`Workload::run_batch`].
+#[derive(Debug, Clone, Copy)]
+pub struct RequestOutput {
+    /// Argmax prediction — vision: the logits row's class; text: the vocab
+    /// argmax at the prompt's final position (the next-token prediction).
+    pub pred: i32,
+    /// Tokens this request is accounted (vision: 1 image; text: the prompt
+    /// length), so throughput can be reported per token, not per request.
+    pub tokens: usize,
+}
+
+/// A serving scenario: request synthesis, batch input assembly, and
+/// per-request output accounting. Implementations must be `Sync` — the
+/// engine shares one workload across its generator and worker threads.
+pub trait Workload: Sync {
+    /// One request's input payload, synthesized off the clock.
+    type Req: Send + Sync;
+
+    /// The model this workload drives (the engine cross-checks it against
+    /// the executor's).
+    fn cfg(&self) -> &'static ModelConfig;
+
+    /// Axis label for benches and logs (`"vision"` / `"text"`).
+    fn label(&self) -> &'static str {
+        self.cfg().kind.workload_label()
+    }
+
+    /// Synthesize request `id`'s payload (request id == eval-stream index,
+    /// so results are reproducible and comparable across runs).
+    fn synth(&self, id: usize) -> Self::Req;
+
+    /// Assemble `reqs` into one fused dispatch at batch size
+    /// `dispatch ≥ reqs.len()` (rows past `reqs.len()` are zero padding,
+    /// whose outputs are dropped) and return one [`RequestOutput`] per
+    /// request, in order. Per-example math makes the outputs independent of
+    /// `dispatch`, batch composition, and worker count — asserted by tests.
+    fn run_batch(
+        &self,
+        plan: &ForwardPlan<'_, '_>,
+        reqs: &[&Self::Req],
+        dispatch: usize,
+    ) -> Result<Vec<RequestOutput>>;
+}
+
+/// Image-classification serving: one eval-stream image per request.
+pub struct VisionWorkload {
+    cfg: &'static ModelConfig,
+    gen: VisionGen,
+}
+
+impl VisionWorkload {
+    pub fn new(cfg: &'static ModelConfig, seed: u64) -> Result<Self> {
+        if cfg.kind != ModelKind::Vit {
+            bail!("VisionWorkload on model '{}' (kind {:?})", cfg.name, cfg.kind);
+        }
+        Ok(Self { cfg, gen: VisionGen::new(seed) })
+    }
+}
+
+impl Workload for VisionWorkload {
+    /// One image's patch tokens, flat `[patches * patch_dim]`.
+    type Req = Vec<f32>;
+
+    fn cfg(&self) -> &'static ModelConfig {
+        self.cfg
+    }
+
+    fn synth(&self, id: usize) -> Vec<f32> {
+        self.gen.batch(Split::Eval, id as u64, 1).0.into_vec()
+    }
+
+    fn run_batch(
+        &self,
+        plan: &ForwardPlan<'_, '_>,
+        reqs: &[&Vec<f32>],
+        dispatch: usize,
+    ) -> Result<Vec<RequestOutput>> {
+        let per = self.cfg.patches * self.cfg.patch_dim;
+        if reqs.is_empty() || dispatch < reqs.len() {
+            bail!("run_batch: {} requests into dispatch size {dispatch}", reqs.len());
+        }
+        let mut buf = vec![0.0f32; dispatch * per];
+        for (i, r) in reqs.iter().enumerate() {
+            if r.len() != per {
+                bail!("run_batch: request {i} carries {} values, expected {per}", r.len());
+            }
+            buf[i * per..(i + 1) * per].copy_from_slice(r);
+        }
+        let tokens = Tensor::from_vec(&[dispatch, self.cfg.patches, self.cfg.patch_dim], buf);
+        let logits = plan.run_vit(&tokens)?;
+        let c = self.cfg.classes;
+        Ok((0..reqs.len())
+            .map(|i| RequestOutput { pred: argmax(&logits.data()[i * c..(i + 1) * c]), tokens: 1 })
+            .collect())
+    }
+}
+
+/// LM serving with a prompt-length request model: request `id` is an
+/// eval-stream prompt of deterministic length in `[min_prompt, n_ctx]`
+/// ([`TextGen::prompt`]); accounting is per token, and the prediction is
+/// the next-token argmax at the prompt's final position.
+pub struct GptWorkload {
+    cfg: &'static ModelConfig,
+    gen: TextGen,
+    min_prompt: usize,
+}
+
+impl GptWorkload {
+    pub fn new(cfg: &'static ModelConfig, seed: u64) -> Result<Self> {
+        if cfg.kind != ModelKind::Gpt {
+            bail!("GptWorkload on model '{}' (kind {:?})", cfg.name, cfg.kind);
+        }
+        // Default arrival mix: prompts of 1/8th context up to full context
+        // (floored at 4 tokens so tiny configs still vary).
+        let min_prompt = if cfg.n_ctx < 4 { cfg.n_ctx } else { (cfg.n_ctx / 8).max(4) };
+        Ok(Self { cfg, gen: TextGen::new(seed), min_prompt })
+    }
+
+    /// Override the minimum prompt length of the arrival mix.
+    pub fn with_min_prompt(mut self, min_prompt: usize) -> Self {
+        assert!(min_prompt >= 1 && min_prompt <= self.cfg.n_ctx);
+        self.min_prompt = min_prompt;
+        self
+    }
+}
+
+/// One LM request: fixed-width ids (prompt + zero padding) and the true
+/// prompt length the request is accounted at.
+pub struct TextRequest {
+    /// `[n_ctx]` ids; positions `>= prompt_len` are padding the causal mask
+    /// keeps out of the prompt's logits.
+    pub ids: Vec<i32>,
+    pub prompt_len: usize,
+}
+
+impl Workload for GptWorkload {
+    type Req = TextRequest;
+
+    fn cfg(&self) -> &'static ModelConfig {
+        self.cfg
+    }
+
+    fn synth(&self, id: usize) -> TextRequest {
+        let (ids, prompt_len) = self.gen.prompt(id as u64, self.cfg.n_ctx, self.min_prompt);
+        TextRequest { ids, prompt_len }
+    }
+
+    fn run_batch(
+        &self,
+        plan: &ForwardPlan<'_, '_>,
+        reqs: &[&TextRequest],
+        dispatch: usize,
+    ) -> Result<Vec<RequestOutput>> {
+        let n = self.cfg.n_ctx;
+        if reqs.is_empty() || dispatch < reqs.len() {
+            bail!("run_batch: {} requests into dispatch size {dispatch}", reqs.len());
+        }
+        let mut ids = vec![0i32; dispatch * n];
+        for (i, r) in reqs.iter().enumerate() {
+            if r.ids.len() != n || r.prompt_len < 1 || r.prompt_len > n {
+                bail!(
+                    "run_batch: request {i} carries {} ids with prompt_len {} (n_ctx {n})",
+                    r.ids.len(),
+                    r.prompt_len
+                );
+            }
+            ids[i * n..(i + 1) * n].copy_from_slice(&r.ids);
+        }
+        let logits = plan.run_gpt(&ids, dispatch)?; // [dispatch, n, vocab]
+        let v = self.cfg.vocab;
+        Ok(reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let at = (i * n + r.prompt_len - 1) * v;
+                RequestOutput { pred: argmax(&logits.data()[at..at + v]), tokens: r.prompt_len }
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn dispatch_policy_sizes() {
+        assert_eq!(DispatchPolicy::Padded.dispatch_size(3, 16), 16);
+        assert_eq!(DispatchPolicy::Exact.dispatch_size(3, 16), 3);
+        // auto: below half fill → exact, at/above → padded.
+        assert_eq!(DispatchPolicy::Auto.dispatch_size(7, 16), 7);
+        assert_eq!(DispatchPolicy::Auto.dispatch_size(8, 16), 16);
+        assert_eq!(DispatchPolicy::Auto.dispatch_size(16, 16), 16);
+    }
+
+    #[test]
+    fn dispatch_policy_parse_and_resolve() {
+        assert_eq!(DispatchPolicy::parse("padded").unwrap(), DispatchPolicy::Padded);
+        assert_eq!(DispatchPolicy::parse("exact").unwrap(), DispatchPolicy::Exact);
+        assert_eq!(DispatchPolicy::parse("auto").unwrap(), DispatchPolicy::Auto);
+        assert!(DispatchPolicy::parse("bogus").is_err());
+        for p in [DispatchPolicy::Padded, DispatchPolicy::Exact, DispatchPolicy::Auto] {
+            assert_eq!(DispatchPolicy::parse(p.label()).unwrap(), p);
+            // Fixed-shape backends collapse everything to padded.
+            assert_eq!(p.resolve(true), DispatchPolicy::Padded);
+            assert_eq!(p.resolve(false), p);
+        }
+    }
+
+    #[test]
+    fn workload_kind_mismatch_rejected() {
+        let vit = ModelConfig::by_name("vit_t").unwrap();
+        let gpt = ModelConfig::by_name("gpt_s").unwrap();
+        assert!(VisionWorkload::new(gpt, 0).is_err());
+        assert!(GptWorkload::new(vit, 0).is_err());
+        assert_eq!(VisionWorkload::new(vit, 0).unwrap().label(), "vision");
+        assert_eq!(GptWorkload::new(gpt, 0).unwrap().label(), "text");
+    }
+
+    #[test]
+    fn gpt_workload_synth_prompt_lengths() {
+        let gpt = ModelConfig::by_name("gpt_s").unwrap();
+        let wl = GptWorkload::new(gpt, 17).unwrap().with_min_prompt(6);
+        for id in 0..8 {
+            let r = wl.synth(id);
+            assert_eq!(r.ids.len(), gpt.n_ctx);
+            assert!((6..=gpt.n_ctx).contains(&r.prompt_len));
+            assert!(r.ids[r.prompt_len..].iter().all(|&v| v == 0));
+        }
+    }
+}

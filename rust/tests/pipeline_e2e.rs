@@ -166,11 +166,12 @@ fn serving_engine_serves_all_requests() {
     let cfg = ModelConfig::by_name("vit_t").unwrap();
     let exec = Executor::new(&rt, cfg);
     let w = WeightStore::init(cfg, 16);
-    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let workload = corp::serve::VisionWorkload::new(cfg, corp::data::DATA_SEED).unwrap();
     let opts = corp::serve::EngineOpts { rate: 500.0, requests: 48, ..Default::default() };
-    let stats = corp::serve::run_engine(&exec, &w, &gen, &opts).unwrap();
+    let stats = corp::serve::run_engine(&exec, &w, &workload, &opts).unwrap();
     assert_eq!(stats.served, 48);
     assert_eq!(stats.shed, 0);
     assert!(stats.mean_batch >= 1.0);
+    assert!(stats.mean_dispatch >= stats.mean_batch - 1e-9);
     assert!(stats.p50_ms > 0.0);
 }

@@ -1,21 +1,26 @@
-//! Serving-engine + fused-fast-path integration tests.
+//! Serving-engine + batch-polymorphic fast-path integration tests.
 //!
 //! Everything here runs on the native runtime (no artifacts directory), so
 //! the suite exercises the real serving dispatch path offline. The engine's
 //! *timing* is load-dependent by design; what these tests pin down is that
-//! batching, padding, the engine worker count, and the pool-width override
-//! never change *what* is computed.
+//! batching, padding vs exact-size dispatch, the engine worker count, and
+//! the pool-width override never change *what* is computed — for both the
+//! vision and the text workload, on dense, pruned, and compensated weights.
 //!
 //! The whole file is compiled out under `--cfg pjrt_backend`, where
 //! `run_engine` is a deliberate fail-fast stub (see `serve::engine`).
 #![cfg(not(pjrt_backend))]
+
+use std::sync::Arc;
 
 use corp::data::{Split, VisionGen};
 use corp::exec::Executor;
 use corp::model::{keep_count, ModelConfig, Scope, Sparsity, WeightStore};
 use corp::prune::{calibrate, prune, Method, PruneOpts};
 use corp::runtime::Runtime;
-use corp::serve::{run_engine, EngineOpts};
+use corp::serve::{
+    run_engine, DispatchPolicy, EngineOpts, GptWorkload, VisionWorkload, Workload,
+};
 use corp::tensor::Tensor;
 
 fn native_runtime() -> Runtime {
@@ -28,12 +33,12 @@ fn vit_t() -> &'static ModelConfig {
     ModelConfig::by_name("vit_t").unwrap()
 }
 
-/// Prune (no compensation — shapes are what matter here) at 50% joint
-/// sparsity from a tiny calibration pass.
-fn pruned_store(exec: &Executor<'_>, dense: &WeightStore) -> WeightStore {
+/// Prune at 50% joint sparsity from a tiny calibration pass, with
+/// (`Method::Corp`) or without (`Method::Naive`) compensation.
+fn pruned_store(exec: &Executor<'_>, dense: &WeightStore, method: Method) -> WeightStore {
     let opts = PruneOpts {
         sparsity: Sparsity::of(Scope::Both, 5),
-        method: Method::Naive,
+        method,
         calib_batches: 2,
         attn_max_samples: 32,
         ..PruneOpts::default()
@@ -53,47 +58,79 @@ fn argmax(row: &[f32]) -> i32 {
 }
 
 #[test]
-fn fused_forward_matches_layered_executor() {
+fn plan_forward_matches_layered_executor_at_any_batch() {
     let rt = native_runtime();
     let cfg = vit_t();
     let exec = Executor::new(&rt, cfg);
     let dense = WeightStore::init(cfg, 5);
-    let pruned = pruned_store(&exec, &dense);
+    let pruned = pruned_store(&exec, &dense, Method::Naive);
     let gen = VisionGen::new(corp::data::DATA_SEED);
-    let b = 4;
-    let (tokens, _) = gen.batch(Split::Eval, 0, b);
     for w in [&dense, &pruned] {
-        let prepared = exec.prepare_forward(w, b).unwrap();
-        let fused = prepared.run_vit(&tokens).unwrap();
-        let layered = exec.forward_vit(w, &tokens, b).unwrap();
-        assert_eq!(fused.shape(), &[b, cfg.classes]);
-        assert!(
-            fused.max_abs_diff(&layered) < 1e-5,
-            "fused vs layered diverged: {}",
-            fused.max_abs_diff(&layered)
-        );
+        // One plan per variant serves every batch size.
+        let plan = exec.forward_plan(w).unwrap();
+        for b in [1usize, 3, 4] {
+            let (tokens, _) = gen.batch(Split::Eval, 0, b);
+            let fused = plan.run_vit(&tokens).unwrap();
+            let layered = exec.forward_vit(w, &tokens, b).unwrap();
+            assert_eq!(fused.shape(), &[b, cfg.classes]);
+            assert!(
+                fused.max_abs_diff(&layered) < 1e-5,
+                "b={b}: fused vs layered diverged by {}",
+                fused.max_abs_diff(&layered)
+            );
+        }
     }
     // The fast path derives its dims from the stored weight shapes.
-    let p = exec.prepare_forward(&pruned, 2).unwrap();
+    let p = exec.forward_plan(&pruned).unwrap();
     assert_eq!(p.dqk, keep_count(cfg.dh(), 5));
     assert_eq!(p.o, keep_count(cfg.mlp, 5));
-    assert_eq!(p.artifact(), format!("fwd_vit_t_q{}_o{}_b2", p.dqk, p.o));
+    assert_eq!(&*p.artifact(2), format!("fwd_vit_t_q{}_o{}_b2", p.dqk, p.o));
 }
 
 #[test]
-fn fused_forward_matches_layered_gpt() {
+fn plan_artifact_cache_reuses_handles_per_batch_size() {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 5);
+    let plan = exec.forward_plan(&w).unwrap();
+    assert_eq!(plan.cached_batch_sizes(), 0);
+    // Same batch size → the *same* cached handle (pointer-identical), not a
+    // re-formatted name.
+    let a1 = plan.artifact(4);
+    let a2 = plan.artifact(4);
+    assert!(Arc::ptr_eq(&a1, &a2));
+    assert_eq!(plan.cached_batch_sizes(), 1);
+    // Distinct sizes get distinct entries; running through the plan
+    // populates the same cache.
+    let a3 = plan.artifact(7);
+    assert!(!Arc::ptr_eq(&a1, &a3));
+    assert_ne!(&*a1, &*a3);
+    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let (tokens, _) = gen.batch(Split::Eval, 0, 2);
+    plan.run_vit(&tokens).unwrap();
+    assert_eq!(plan.cached_batch_sizes(), 3);
+    assert!(Arc::ptr_eq(&plan.artifact(4), &a1));
+}
+
+#[test]
+fn plan_forward_matches_layered_gpt() {
     let rt = native_runtime();
     let cfg = ModelConfig::by_name("gpt_s").unwrap();
     let exec = Executor::new(&rt, cfg);
     let w = WeightStore::init(cfg, 6);
     let gen = corp::data::TextGen::new(corp::data::DATA_SEED);
-    let b = 2;
-    let (ids, _) = gen.batch(Split::Eval, 0, b, cfg.n_ctx);
-    let prepared = exec.prepare_forward(&w, b).unwrap();
-    let fused = prepared.run_gpt(&ids).unwrap();
-    let layered = exec.forward_gpt(&w, &ids, b).unwrap();
-    assert_eq!(fused.shape(), &[b, cfg.n_ctx, cfg.vocab]);
-    assert!(fused.max_abs_diff(&layered) < 1e-5);
+    let plan = exec.forward_plan(&w).unwrap();
+    for b in [1usize, 2] {
+        let (ids, _) = gen.batch(Split::Eval, 0, b, cfg.n_ctx);
+        let fused = plan.run_gpt(&ids, b).unwrap();
+        let layered = exec.forward_gpt(&w, &ids, b).unwrap();
+        assert_eq!(fused.shape(), &[b, cfg.n_ctx, cfg.vocab]);
+        assert!(fused.max_abs_diff(&layered) < 1e-5);
+    }
+    // Mismatched id count / batch is rejected.
+    let short = vec![0i32; cfg.n_ctx];
+    assert!(plan.run_gpt(&short, 2).is_err());
 }
 
 #[test]
@@ -102,7 +139,7 @@ fn engine_predictions_invariant_across_worker_counts() {
     let cfg = vit_t();
     let exec = Executor::new(&rt, cfg);
     let w = WeightStore::init(cfg, 7);
-    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let workload = VisionWorkload::new(cfg, corp::data::DATA_SEED).unwrap();
     let mk = |workers| EngineOpts {
         workers,
         rate: 1e12, // saturated: batch composition differs per run/worker count
@@ -112,11 +149,11 @@ fn engine_predictions_invariant_across_worker_counts() {
         queue_cap: 1024,
         ..Default::default()
     };
-    let s1 = run_engine(&exec, &w, &gen, &mk(1)).unwrap();
-    let s2 = run_engine(&exec, &w, &gen, &mk(2)).unwrap();
+    let s1 = run_engine(&exec, &w, &workload, &mk(1)).unwrap();
+    let s2 = run_engine(&exec, &w, &workload, &mk(2)).unwrap();
     // A CORP_THREADS-style pool-width override must not change results
     // either (engine workers serialize their nested pool regions).
-    let s3 = corp::util::threads::with_threads(3, || run_engine(&exec, &w, &gen, &mk(2)))
+    let s3 = corp::util::threads::with_threads(3, || run_engine(&exec, &w, &workload, &mk(2)))
         .unwrap();
     for s in [&s1, &s2, &s3] {
         assert_eq!(s.served, 24);
@@ -126,6 +163,8 @@ fn engine_predictions_invariant_across_worker_counts() {
         assert!(s.records.windows(2).all(|p| p[0].id < p[1].id));
         assert!(s.throughput_fps > 0.0);
         assert!(s.p95_ms >= s.p50_ms);
+        // Vision accounting: one token (image) per request.
+        assert!(s.records.iter().all(|r| r.tokens == 1));
     }
     let preds1: Vec<i32> = s1.records.iter().map(|r| r.pred).collect();
     let preds2: Vec<i32> = s2.records.iter().map(|r| r.pred).collect();
@@ -133,10 +172,104 @@ fn engine_predictions_invariant_across_worker_counts() {
     assert_eq!(preds1, preds2);
     assert_eq!(preds1, preds3);
     // And each prediction equals the unbatched layered executor's.
+    let gen = VisionGen::new(corp::data::DATA_SEED);
     for r in &s1.records {
         let (t, _) = gen.batch(Split::Eval, r.id as u64, 1);
         let logits = exec.forward_vit(&w, &t, 1).unwrap();
         assert_eq!(r.pred, argmax(logits.data()), "request {}", r.id);
+    }
+}
+
+#[test]
+fn dispatch_policies_agree_on_predictions_for_every_variant() {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 5);
+    let pruned = pruned_store(&exec, &dense, Method::Naive);
+    let comp = pruned_store(&exec, &dense, Method::Corp);
+    let workload = VisionWorkload::new(cfg, corp::data::DATA_SEED).unwrap();
+    let mk = |dispatch| EngineOpts {
+        workers: 2,
+        rate: 1e12,
+        requests: 21, // not a multiple of max_batch → partial batches occur
+        max_batch: 8,
+        max_wait: 0.002,
+        queue_cap: 1024,
+        dispatch,
+        ..Default::default()
+    };
+    for (label, w) in [("dense", &dense), ("pruned", &pruned), ("compensated", &comp)] {
+        let sp = run_engine(&exec, w, &workload, &mk(DispatchPolicy::Padded)).unwrap();
+        let se = run_engine(&exec, w, &workload, &mk(DispatchPolicy::Exact)).unwrap();
+        let sa = run_engine(&exec, w, &workload, &mk(DispatchPolicy::Auto)).unwrap();
+        for s in [&sp, &se, &sa] {
+            assert_eq!(s.served, 21, "{label}");
+        }
+        let pp: Vec<i32> = sp.records.iter().map(|r| r.pred).collect();
+        let pe: Vec<i32> = se.records.iter().map(|r| r.pred).collect();
+        let pa: Vec<i32> = sa.records.iter().map(|r| r.pred).collect();
+        assert_eq!(pp, pe, "{label}: padded vs exact predictions diverged");
+        assert_eq!(pp, pa, "{label}: padded vs auto predictions diverged");
+        // Padded always dispatches the artifact batch; exact never exceeds
+        // the formed batch.
+        assert!((sp.mean_dispatch - 8.0).abs() < 1e-9, "{label}: {}", sp.mean_dispatch);
+        assert!(
+            se.mean_dispatch <= se.mean_batch + 1e-9,
+            "{label}: exact dispatched {} for mean batch {}",
+            se.mean_dispatch,
+            se.mean_batch
+        );
+    }
+}
+
+#[test]
+fn gpt_workload_deterministic_across_workers_and_dispatch() {
+    let rt = native_runtime();
+    let cfg = ModelConfig::by_name("gpt_s").unwrap();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 11);
+    // The bench grid serves pruned text variants too — cover the pruned
+    // gpt fused path, not just dense init.
+    let pruned = pruned_store(&exec, &dense, Method::Naive);
+    let workload = GptWorkload::new(cfg, corp::data::DATA_SEED).unwrap();
+    let mk = |workers, dispatch| EngineOpts {
+        workers,
+        rate: 1e12,
+        requests: 10,
+        max_batch: 4,
+        max_wait: 0.002,
+        queue_cap: 64,
+        dispatch,
+        ..Default::default()
+    };
+    for (label, w) in [("dense", &dense), ("pruned", &pruned)] {
+        let s1 = run_engine(&exec, w, &workload, &mk(1, DispatchPolicy::Padded)).unwrap();
+        let s2 = run_engine(&exec, w, &workload, &mk(2, DispatchPolicy::Padded)).unwrap();
+        let s3 = run_engine(&exec, w, &workload, &mk(2, DispatchPolicy::Exact)).unwrap();
+        for s in [&s1, &s2, &s3] {
+            assert_eq!(s.served, 10, "{label}");
+            // Per-token accounting: prompts are shorter than or equal to
+            // n_ctx and the token throughput reflects their sum.
+            assert!(s.records.iter().all(|r| r.tokens >= 1 && r.tokens <= cfg.n_ctx));
+            assert!(s.throughput_tps >= s.throughput_fps);
+        }
+        let key = |s: &corp::serve::EngineStats| -> Vec<(i32, usize)> {
+            s.records.iter().map(|r| (r.pred, r.tokens)).collect()
+        };
+        assert_eq!(key(&s1), key(&s2), "{label}: worker count changed gpt outputs");
+        assert_eq!(key(&s1), key(&s3), "{label}: dispatch policy changed gpt outputs");
+        // Each prediction equals a batch-1 forward of the same prompt at
+        // the prompt's final position.
+        let plan = exec.forward_plan(w).unwrap();
+        for r in &s1.records {
+            let req = workload.synth(r.id);
+            assert_eq!(r.tokens, req.prompt_len);
+            let logits = plan.run_gpt(&req.ids, 1).unwrap();
+            let row =
+                &logits.data()[(req.prompt_len - 1) * cfg.vocab..req.prompt_len * cfg.vocab];
+            assert_eq!(r.pred, argmax(row), "{label}: request {}", r.id);
+        }
     }
 }
 
@@ -147,7 +280,9 @@ fn partial_batch_padding_matches_unbatched() {
     let exec = Executor::new(&rt, cfg);
     let w = WeightStore::init(cfg, 8);
     let gen = VisionGen::new(corp::data::DATA_SEED);
-    // Fewer requests than a batch: every executed batch is partial + padded.
+    let workload = VisionWorkload::new(cfg, corp::data::DATA_SEED).unwrap();
+    // Fewer requests than a batch: every executed batch is partial, and the
+    // padded policy pads each to the fixed artifact batch.
     let opts = EngineOpts {
         workers: 1,
         rate: 1e12,
@@ -155,11 +290,13 @@ fn partial_batch_padding_matches_unbatched() {
         max_batch: 8,
         max_wait: 0.0,
         queue_cap: 16,
+        dispatch: DispatchPolicy::Padded,
         ..Default::default()
     };
-    let s = run_engine(&exec, &w, &gen, &opts).unwrap();
+    let s = run_engine(&exec, &w, &workload, &opts).unwrap();
     assert_eq!(s.served, 3);
     assert!(s.mean_batch <= 3.0 + 1e-9);
+    assert!((s.mean_dispatch - 8.0).abs() < 1e-9);
     for r in &s.records {
         let (t, _) = gen.batch(Split::Eval, r.id as u64, 1);
         let logits = exec.forward_vit(&w, &t, 1).unwrap();
@@ -170,12 +307,10 @@ fn partial_batch_padding_matches_unbatched() {
     let (t3, _) = gen.batch(Split::Eval, 0, 3);
     let mut padded = t3.data().to_vec();
     padded.resize(8 * per, 0.0);
-    let prepared = exec.prepare_forward(&w, 8).unwrap();
-    let logits8 = prepared.run_vit(&Tensor::from_vec(
-        &[8, cfg.patches, cfg.patch_dim],
-        padded,
-    ))
-    .unwrap();
+    let plan = exec.forward_plan(&w).unwrap();
+    let logits8 = plan
+        .run_vit(&Tensor::from_vec(&[8, cfg.patches, cfg.patch_dim], padded))
+        .unwrap();
     let logits3 = exec.forward_vit(&w, &t3, 3).unwrap();
     for i in 0..3 {
         let a = &logits8.data()[i * cfg.classes..(i + 1) * cfg.classes];
@@ -192,7 +327,7 @@ fn bounded_queue_sheds_overload() {
     let cfg = vit_t();
     let exec = Executor::new(&rt, cfg);
     let w = WeightStore::init(cfg, 9);
-    let gen = VisionGen::new(corp::data::DATA_SEED);
+    let workload = VisionWorkload::new(cfg, corp::data::DATA_SEED).unwrap();
     // Saturated arrivals into a 2-deep queue with a slow (floored) executor:
     // most of the load must be shed, and accounting must still balance.
     let opts = EngineOpts {
@@ -206,10 +341,34 @@ fn bounded_queue_sheds_overload() {
         seed: 3,
         ..Default::default()
     };
-    let s = run_engine(&exec, &w, &gen, &opts).unwrap();
+    let s = run_engine(&exec, &w, &workload, &opts).unwrap();
     assert_eq!(s.served + s.shed, 64, "every request is served or shed");
     assert!(s.shed > 0, "expected shedding under overload");
     assert!(s.served >= 1);
     // The floor is visible in the per-batch execution accounting.
     assert!(s.exec_mean_ms >= 10.0 - 1.0);
+}
+
+#[test]
+fn degenerate_engine_configs_error_and_mismatched_workload_rejected() {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 10);
+    let workload = VisionWorkload::new(cfg, corp::data::DATA_SEED).unwrap();
+    for (opts, needle) in [
+        (EngineOpts { queue_cap: 0, ..Default::default() }, "queue_cap"),
+        (EngineOpts { max_batch: 0, ..Default::default() }, "max_batch"),
+        (EngineOpts { workers: 0, ..Default::default() }, "workers"),
+        (EngineOpts { requests: 0, ..Default::default() }, "requests"),
+    ] {
+        let err = run_engine(&exec, &w, &workload, &opts).unwrap_err().to_string();
+        assert!(err.contains(needle), "{err}");
+    }
+    // Driving a vit executor with a gpt-bound workload is a config error,
+    // not a shape panic deep in the runtime.
+    let gpt = ModelConfig::by_name("gpt_s").unwrap();
+    let gw = GptWorkload::new(gpt, corp::data::DATA_SEED).unwrap();
+    let err = run_engine(&exec, &w, &gw, &EngineOpts::default()).unwrap_err().to_string();
+    assert!(err.contains("gpt_s") && err.contains("vit_t"), "{err}");
 }

@@ -37,8 +37,16 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "==> bench linalg (CORP_BENCH_MODE=${CORP_BENCH_MODE:-fast})"
     cargo run --manifest-path "$MANIFEST" --release -- bench linalg --json --out BENCH_linalg.json
 
+    # The smoke grid sweeps both workloads (vision + text) and both
+    # dispatch policies (padded + exact) — corp-bench-serve/v2 axes.
     echo "==> bench serve smoke (CORP_BENCH_MODE=smoke)"
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- bench serve --json --out BENCH_serve.json
+
+    echo "==> serve CLI smoke (vision/exact + text/padded)"
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
+        serve --model vit_t --sparsity 0.5 --requests 32 --rate 0 --max-batch 8 --dispatch exact
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
+        serve --model gpt_s --sparsity 0 --requests 16 --rate 0 --max-batch 4 --dispatch padded
 fi
 
 echo "ok"
