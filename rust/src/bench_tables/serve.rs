@@ -1,26 +1,37 @@
 //! `corp bench serve` — the serving-engine harness behind `BENCH_serve.json`.
 //!
 //! Drives the concurrent engine (`serve::run_engine`) over a grid of
-//! workload (vision / text) × model variant (dense / pruned / compensated
-//! at 50% joint sparsity) × worker count × arrival rate × dispatch policy
-//! (padded / exact), and reports per-cell p50/p95 latency, queueing delay,
-//! mean formed and dispatched batch sizes, and requests+tokens/sec
-//! (schema `corp-bench-serve/v2`). The "saturated" rate offers the whole
-//! request set at t = 0 with an ample queue, so the throughput column is
-//! the engine's capacity — this is where the pruned fast path has to beat
-//! dense, since its GEMMs run at the retained widths. The low rates are
-//! where the dispatch axis matters: batches are mostly partial there, so
-//! exact-size dispatch skips the padding arithmetic and should cut tail
-//! latency versus padded on the same variant.
+//! workload (vision / text / gen) × model variant (dense / pruned /
+//! compensated at 50% joint sparsity) × worker count × arrival rate ×
+//! dispatch policy (padded / exact) — and, for the generation workload, a
+//! decode axis (KV-cache vs prefill-per-step) — reporting per-cell p50/p95
+//! latency, queueing delay, mean formed and dispatched batch sizes, steps
+//! per request, TTFT/ITL, and requests+tokens/sec (schema
+//! `corp-bench-serve/v3`). The "saturated" rate offers the whole request
+//! set at t = 0 with an ample queue, so the throughput column is the
+//! engine's capacity — this is where the pruned fast path has to beat
+//! dense, since its GEMMs run at the retained widths, and where KV-cache
+//! decode has to beat prefill-per-step at identical outputs (per-token
+//! work is one position's GEMMs instead of the full context's). The low
+//! rates are where the dispatch axis matters: batches are mostly partial
+//! there, so exact-size dispatch skips the padding arithmetic and should
+//! cut tail latency versus padded on the same variant.
+//!
+//! A failed cell aborts the sweep with the cell's coordinates in the error
+//! (non-zero exit through the CLI), and any pre-existing `--out` file is
+//! removed up front — a crashed sweep can never leave a stale JSON that
+//! looks like fresh results.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::{num, obj};
-use crate::exec::Executor;
+use crate::exec::{DecodeMode, Executor};
 use crate::model::{ModelConfig, ModelKind, Scope, Sparsity, WeightStore};
 use crate::prune::{calibrate, prune, Method, PruneOpts};
 use crate::runtime::Runtime;
-use crate::serve::{run_engine, DispatchPolicy, EngineOpts, GptWorkload, VisionWorkload, Workload};
+use crate::serve::{
+    run_engine, DispatchPolicy, EngineOpts, GenWorkload, GptWorkload, VisionWorkload, Workload,
+};
 use crate::util::bench::{bench_mode, BenchMode};
 use crate::util::json::Json;
 use crate::util::threads;
@@ -35,6 +46,9 @@ const DISPATCHES: [DispatchPolicy; 2] = [DispatchPolicy::Padded, DispatchPolicy:
 /// One workload's slice of the bench grid.
 struct WorkloadGrid {
     model: &'static str,
+    /// `true` serves the multi-step generation workload (gpt models only);
+    /// its cells additionally sweep the decode axis (kv vs prefill).
+    gen: bool,
     requests: usize,
     workers: Vec<usize>,
     rates: Vec<f64>,
@@ -42,13 +56,15 @@ struct WorkloadGrid {
     calib_batches: usize,
 }
 
-/// Per-mode grids: one vision entry + one text entry each, so every
-/// `BENCH_serve.json` carries both workload axes.
+/// Per-mode grids: one vision + one text + one generation entry each, so
+/// every `BENCH_serve.json` carries all three workload axes (the gen entry
+/// doubles into kv and prefill decode cells).
 fn mode_grids() -> Vec<WorkloadGrid> {
     match bench_mode() {
         BenchMode::Smoke => vec![
             WorkloadGrid {
                 model: "vit_t",
+                gen: false,
                 requests: 96,
                 workers: vec![1, 2],
                 rates: vec![SATURATED_RATE, 150.0],
@@ -57,9 +73,19 @@ fn mode_grids() -> Vec<WorkloadGrid> {
             },
             WorkloadGrid {
                 model: "gpt_s",
+                gen: false,
                 requests: 32,
                 workers: vec![1],
                 rates: vec![SATURATED_RATE, 60.0],
+                max_batch: 4,
+                calib_batches: 2,
+            },
+            WorkloadGrid {
+                model: "gpt_s",
+                gen: true,
+                requests: 16,
+                workers: vec![1],
+                rates: vec![SATURATED_RATE],
                 max_batch: 4,
                 calib_batches: 2,
             },
@@ -67,6 +93,7 @@ fn mode_grids() -> Vec<WorkloadGrid> {
         BenchMode::Fast => vec![
             WorkloadGrid {
                 model: "vit_t",
+                gen: false,
                 requests: 256,
                 workers: vec![1, 2],
                 rates: vec![SATURATED_RATE, 300.0, 120.0],
@@ -75,16 +102,27 @@ fn mode_grids() -> Vec<WorkloadGrid> {
             },
             WorkloadGrid {
                 model: "gpt_s",
+                gen: false,
                 requests: 64,
                 workers: vec![1, 2],
                 rates: vec![SATURATED_RATE, 60.0],
                 max_batch: 8,
                 calib_batches: 4,
             },
+            WorkloadGrid {
+                model: "gpt_s",
+                gen: true,
+                requests: 32,
+                workers: vec![1, 2],
+                rates: vec![SATURATED_RATE],
+                max_batch: 4,
+                calib_batches: 4,
+            },
         ],
         BenchMode::Full => vec![
             WorkloadGrid {
                 model: "vit_b",
+                gen: false,
                 requests: 512,
                 workers: vec![1, 2, 4],
                 rates: vec![SATURATED_RATE, 400.0, 150.0],
@@ -93,9 +131,19 @@ fn mode_grids() -> Vec<WorkloadGrid> {
             },
             WorkloadGrid {
                 model: "gpt_s",
+                gen: false,
                 requests: 128,
                 workers: vec![1, 2],
                 rates: vec![SATURATED_RATE, 80.0],
+                max_batch: 8,
+                calib_batches: 8,
+            },
+            WorkloadGrid {
+                model: "gpt_s",
+                gen: true,
+                requests: 64,
+                workers: vec![1, 2],
+                rates: vec![SATURATED_RATE, 40.0],
                 max_batch: 8,
                 calib_batches: 8,
             },
@@ -111,6 +159,7 @@ fn grid_runs<W: Workload>(
     g: &WorkloadGrid,
     runs: &mut Vec<Json>,
 ) -> Result<()> {
+    let decode = workload.decode().map(|m| m.label());
     for &(label, w) in variants {
         for &nw in &g.workers {
             for &rate in &g.rates {
@@ -126,17 +175,29 @@ fn grid_runs<W: Workload>(
                         dispatch,
                         ..Default::default()
                     };
-                    let s = run_engine(exec, w, workload, &eopts)?;
                     let rate_label = if rate >= SATURATED_RATE {
                         "saturated".to_string()
                     } else {
                         format!("{rate:.0}/s")
                     };
+                    // A failing cell aborts the whole sweep with its
+                    // coordinates — never a silently partial grid.
+                    let s = run_engine(exec, w, workload, &eopts).with_context(|| {
+                        format!(
+                            "serve bench cell failed: workload {}{} model {} variant {label} \
+                             workers {nw} rate {rate_label} dispatch {}",
+                            workload.label(),
+                            decode.map(|d| format!("/{d}")).unwrap_or_default(),
+                            g.model,
+                            dispatch.label()
+                        )
+                    })?;
                     println!(
-                        "{:6} {label:12} w={nw} rate {rate_label:>9} {:6}: p50 {:8.2}ms \
+                        "{:6}{} {label:12} w={nw} rate {rate_label:>9} {:6}: p50 {:8.2}ms \
                          p95 {:8.2}ms | queue p50 {:8.2}ms | batch {:4.1} → {:4.1} | \
                          {:6.0} req/s {:7.0} tok/s",
                         workload.label(),
+                        decode.map(|d| format!("/{d:7}")).unwrap_or_else(|| " ".repeat(8)),
                         dispatch.label(),
                         s.p50_ms,
                         s.p95_ms,
@@ -161,13 +222,20 @@ fn grid_runs<W: Workload>(
                         ("batches", num(s.batches as f64)),
                         ("mean_batch", num(s.mean_batch)),
                         ("mean_dispatch", num(s.mean_dispatch)),
+                        ("mean_steps", num(s.steps_mean)),
                         ("p50_ms", num(s.p50_ms)),
                         ("p95_ms", num(s.p95_ms)),
                         ("queue_p50_ms", num(s.queue_p50_ms)),
+                        ("ttft_p50_ms", num(s.first_p50_ms)),
+                        ("itl_mean_ms", num(s.itl_mean_ms)),
                         ("exec_mean_ms", num(s.exec_mean_ms)),
                         ("requests_per_sec", num(s.throughput_fps)),
                         ("tokens_per_sec", num(s.throughput_tps)),
                     ];
+                    // The decode axis only exists for generation cells.
+                    if let Some(d) = decode {
+                        row.push(("decode", Json::Str(d.to_string())));
+                    }
                     // Keep the v1 column name on the vision axis so the
                     // BENCH trajectory stays comparable across schemas.
                     if workload.cfg().kind == ModelKind::Vit {
@@ -182,9 +250,15 @@ fn grid_runs<W: Workload>(
 }
 
 /// Run the serving benchmark grid; when `json_out` is set, write
-/// `BENCH_serve.json`-style output there (schema `corp-bench-serve/v2`).
+/// `BENCH_serve.json`-style output there (schema `corp-bench-serve/v3`).
 pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
     let rt = Runtime::from_default_dir()?;
+    // Fail loudly, never stale-ly: if a cell errors mid-sweep the run
+    // aborts (non-zero exit through the CLI), and a pre-existing output
+    // file must not survive to masquerade as this run's results.
+    if let Some(path) = json_out {
+        let _ = std::fs::remove_file(path);
+    }
     let mut runs = Vec::new();
     for g in mode_grids() {
         let cfg = ModelConfig::by_name(g.model).context("bench serve model")?;
@@ -211,27 +285,36 @@ pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
             "serve bench — mode {:?}, {} workload, model {}, {} requests, max batch {}, \
              50% joint sparsity, {} pool worker(s) available",
             bench_mode(),
-            cfg.kind.workload_label(),
+            if g.gen { "gen" } else { cfg.kind.workload_label() },
             g.model,
             g.requests,
             g.max_batch,
             threads::threads()
         );
-        match cfg.kind {
-            ModelKind::Vit => {
+        match (cfg.kind, g.gen) {
+            (ModelKind::Vit, false) => {
                 let wl = VisionWorkload::new(cfg, crate::data::DATA_SEED)?;
                 grid_runs(&exec, &variants, &wl, &g, &mut runs)?;
             }
-            ModelKind::Gpt => {
+            (ModelKind::Gpt, false) => {
                 let wl = GptWorkload::new(cfg, crate::data::DATA_SEED)?;
                 grid_runs(&exec, &variants, &wl, &g, &mut runs)?;
             }
+            (ModelKind::Gpt, true) => {
+                // The decode axis: same request mix, same outputs, KV-cache
+                // incremental steps vs full prefill-per-step.
+                for mode in [DecodeMode::KvCache, DecodeMode::Prefill] {
+                    let wl = GenWorkload::new(cfg, crate::data::DATA_SEED)?.with_decode(mode);
+                    grid_runs(&exec, &variants, &wl, &g, &mut runs)?;
+                }
+            }
+            (ModelKind::Vit, true) => bail!("gen grid on vision model '{}'", g.model),
         }
     }
 
     if let Some(path) = json_out {
         let root = obj(vec![
-            ("schema", Json::Str("corp-bench-serve/v2".into())),
+            ("schema", Json::Str("corp-bench-serve/v3".into())),
             (
                 "mode",
                 Json::Str(
@@ -261,17 +344,25 @@ mod tests {
 
     #[test]
     fn mode_grids_cover_acceptance_shape() {
-        // Every mode carries both workload axes, each with a saturated and
-        // (for the dispatch-policy comparison) at least one finite rate;
-        // grids stay within the engine's bounds.
+        // Every mode carries all three workload axes: vision, single-shot
+        // text (each with a saturated and, for the dispatch-policy
+        // comparison, at least one finite rate), and a generation grid
+        // (gpt-only — it becomes kv + prefill decode cells); grids stay
+        // within the engine's bounds.
         let grids = mode_grids();
         let kinds: Vec<ModelKind> =
             grids.iter().map(|g| ModelConfig::by_name(g.model).unwrap().kind).collect();
         assert!(kinds.contains(&ModelKind::Vit) && kinds.contains(&ModelKind::Gpt));
+        assert!(grids.iter().any(|g| g.gen));
         for g in &grids {
             assert!(!g.workers.is_empty());
             assert!(g.rates.iter().any(|&r| r >= SATURATED_RATE));
-            assert!(g.rates.iter().any(|&r| r < SATURATED_RATE));
+            if g.gen {
+                // The decode axis only fits gpt models.
+                assert_eq!(ModelConfig::by_name(g.model).unwrap().kind, ModelKind::Gpt);
+            } else {
+                assert!(g.rates.iter().any(|&r| r < SATURATED_RATE));
+            }
             assert!(g.requests >= g.max_batch && g.max_batch >= 1 && g.calib_batches >= 1);
         }
         assert_eq!(DISPATCHES, [DispatchPolicy::Padded, DispatchPolicy::Exact]);

@@ -1,17 +1,19 @@
 //! CLI dispatch for the `corp` binary.
 //!
 //! Subcommands:
-//!   train   — train (or load) a dense checkpoint, print the loss curve tail
-//!   prune   — run the CORP pipeline at a sparsity/method and report accuracy
-//!   eval    — evaluate a checkpoint (dense or pruned) on the eval split
-//!   serve   — run the dynamic batcher on a (pruned) model
-//!   stats   — print the Table-9 redundancy statistics for a model
-//!   list    — list models and artifact status
+//!   train    — train (or load) a dense checkpoint, print the loss curve tail
+//!   prune    — run the CORP pipeline at a sparsity/method and report accuracy
+//!   eval     — evaluate a checkpoint (dense or pruned) on the eval split
+//!   serve    — run the dynamic batcher on a (pruned) model
+//!   generate — autoregressive greedy generation (KV-cache vs prefill)
+//!   stats    — print the Table-9 redundancy statistics for a model
+//!   list     — list models and artifact status
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Coordinator;
-use crate::model::{ModelConfig, Scope, Sparsity};
+use crate::exec::DecodeMode;
+use crate::model::{ModelConfig, ModelKind, Scope, Sparsity};
 use crate::prune::{Method, PruneOpts};
 use crate::rank::MlpCriterion;
 use crate::util::cli::Command;
@@ -59,6 +61,7 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         "train" => cmd_train(rest),
         "prune" => cmd_prune(rest),
         "serve" => cmd_serve(rest),
+        "generate" => cmd_generate(rest),
         "stats" => cmd_stats(rest),
         "bench" => cmd_bench(rest),
         "list" => cmd_list(),
@@ -77,7 +80,8 @@ fn print_usage() {
          train  --model vit_b [--steps N]        train/load the dense checkpoint\n  \
          prune  --model vit_b --scope both --sparsity 0.5 [--method corp] [--criterion combined]\n  \
          serve  --model vit_b --sparsity 0.5 [--workers 2] [--rate 200] [--dispatch auto]\n  \
-         serve  --model gpt_s ...                same engine, text workload (prompt lengths)\n  \
+         serve  --model gpt_s [--workload text|gen]  same engine, text scoring or generation\n  \
+         generate --model gpt_s --tokens 8 [--decode kv|prefill] [--verify]  greedy decode\n  \
          stats  --model vit_b                    Table-9 redundancy statistics\n  \
          bench  linalg|serve [--json] [--out PATH]  perf harnesses (BENCH_*.json)\n  \
          list                                    models + artifact status"
@@ -184,6 +188,7 @@ fn cmd_prune(argv: &[String]) -> Result<()> {
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serve", "concurrent batched serving engine")
         .opt("model", "model name (vit_* → vision workload, gpt_* → text)", "vit_b")
+        .opt("workload", "scenario: auto|vision|text|gen (auto = model kind)", "auto")
         .opt("sparsity", "joint sparsity 0.0-0.7", "0.5")
         .opt("workers", "executor threads", "2")
         .opt("rate", "arrival rate req/s (0 = saturated)", "200")
@@ -193,7 +198,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("queue-cap", "queue bound (excess is shed)", "1024")
         .opt("exec-floor", "minimum per-batch execution time, seconds (load shaping)", "0")
         .opt("seed", "arrival-process seed", "7")
-        .opt("dispatch", "batch dispatch shape: padded|exact|auto", "auto");
+        .opt("dispatch", "batch dispatch shape: padded|exact|auto", "auto")
+        .opt("max-new", "gen workload: max tokens generated per request", "8")
+        .opt("decode", "gen workload decode path: auto|kv|prefill", "auto");
     let args = cmd.parse(argv)?;
     let cfg = cfg_of(&args.str("model"))?;
     let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
@@ -217,25 +224,44 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         seed: args.usize("seed")? as u64,
         dispatch: crate::serve::DispatchPolicy::parse(&args.str("dispatch"))?,
     };
-    // The model picks the serving scenario: one queueing/batching core,
-    // workload-specific request synthesis and accounting.
-    let stats = match cfg.kind {
-        crate::model::ModelKind::Vit => {
+    // The model (or an explicit --workload) picks the serving scenario: one
+    // queueing/batching core, workload-specific synthesis and accounting.
+    let wl_name = args.str("workload");
+    let (label, stats) = match (cfg.kind, wl_name.as_str()) {
+        (ModelKind::Vit, "auto" | "vision") => {
             let wl = crate::serve::VisionWorkload::new(cfg, crate::data::DATA_SEED)?;
-            crate::serve::run_engine(&exec, &weights, &wl, &eopts)?
+            ("vision", crate::serve::run_engine(&exec, &weights, &wl, &eopts)?)
         }
-        crate::model::ModelKind::Gpt => {
+        (ModelKind::Gpt, "auto" | "text") => {
             let wl = crate::serve::GptWorkload::new(cfg, crate::data::DATA_SEED)?;
-            crate::serve::run_engine(&exec, &weights, &wl, &eopts)?
+            ("text", crate::serve::run_engine(&exec, &weights, &wl, &eopts)?)
         }
+        (ModelKind::Gpt, "gen") => {
+            let max_new = args.usize("max-new")?;
+            if max_new == 0 || max_new > cfg.n_ctx {
+                bail!("max-new must be in 1..={}, got {max_new}", cfg.n_ctx);
+            }
+            let mut wl = crate::serve::GenWorkload::new(cfg, crate::data::DATA_SEED)?
+                .with_max_new(max_new);
+            let decode = args.str("decode");
+            if decode != "auto" {
+                wl = wl.with_decode(DecodeMode::parse(&decode)?);
+            }
+            ("gen", crate::serve::run_engine(&exec, &weights, &wl, &eopts)?)
+        }
+        (kind, other) => bail!(
+            "workload '{other}' does not fit model '{}' (kind {kind:?}; \
+             expected auto|vision|text|gen)",
+            cfg.name
+        ),
     };
     println!(
-        "served {}/{} {} requests ({} shed) on {} worker(s), dispatch {}: \
+        "served {}/{} {label} requests ({} shed) on {} worker(s), dispatch {}: \
          p50 {:.2}ms p95 {:.2}ms (queue p50 {:.2}ms, exec mean {:.2}ms) | \
-         batch {:.1} → dispatch {:.1} over {} batches | {:.0} req/s, {:.0} tok/s",
+         batch {:.1} → dispatch {:.1} over {} batches, {:.1} steps/req \
+         (ttft p50 {:.2}ms, itl {:.2}ms) | {:.0} req/s, {:.0} tok/s",
         stats.served,
         eopts.requests,
-        cfg.kind.workload_label(),
         stats.shed,
         eopts.workers,
         eopts.dispatch.label(),
@@ -246,9 +272,132 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         stats.mean_batch,
         stats.mean_dispatch,
         stats.batches,
+        stats.steps_mean,
+        stats.first_p50_ms,
+        stats.itl_mean_ms,
         stats.throughput_fps,
         stats.throughput_tps
     );
+    Ok(())
+}
+
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("generate", "autoregressive greedy generation (gpt models)")
+        .opt("model", "model name (gpt_*)", "gpt_s")
+        .opt("sparsity", "joint sparsity 0.0-0.7", "0.5")
+        .opt("prompts", "number of eval-stream prompts", "2")
+        .opt("tokens", "tokens generated per prompt", "8")
+        .opt("decode", "decode path: kv|prefill", "kv")
+        .flag("verify", "run kv + prefill + the full forward and compare (non-zero exit on drift)");
+    let args = cmd.parse(argv)?;
+    let cfg = cfg_of(&args.str("model"))?;
+    if cfg.kind != ModelKind::Gpt {
+        bail!("generate needs a gpt model, got '{}' (kind {:?})", cfg.name, cfg.kind);
+    }
+    let tokens = args.usize("tokens")?;
+    let prompts = args.usize("prompts")?;
+    if tokens == 0 || tokens > cfg.n_ctx {
+        bail!("tokens must be in 1..={}, got {tokens}", cfg.n_ctx);
+    }
+    if prompts == 0 {
+        bail!("prompts must be > 0");
+    }
+    let req_mode = DecodeMode::parse(&args.str("decode"))?;
+    let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
+    let mut coord = Coordinator::new()?;
+    let weights = if s10 == 0 {
+        coord.dense(cfg)?.clone()
+    } else {
+        let o = PruneOpts { sparsity: Sparsity::of(Scope::Both, s10), ..PruneOpts::default() };
+        coord.prune_job(cfg, &o)?.weights
+    };
+    let exec = coord.executor(cfg);
+    // Like the engine, collapse the requested mode to what the runtime can
+    // actually dispatch (fixed-shape runtimes have no dec_* lowering).
+    let fixed = exec.rt.prefers_fixed_shapes();
+    let mode = req_mode.resolve(fixed);
+    let plan = exec.decode_plan_with(&weights, mode)?;
+    let verify = args.has_flag("verify");
+    // The cross-check plans are loop-invariant — resolve them once. On a
+    // fixed-shape runtime both decode modes resolve to prefill-per-step, so
+    // only the full-forward cross-check remains meaningful there.
+    let (alt, fplan) = if verify {
+        let other = match mode {
+            DecodeMode::KvCache => DecodeMode::Prefill,
+            DecodeMode::Prefill => DecodeMode::KvCache,
+        }
+        .resolve(fixed);
+        let alt = if other != mode {
+            Some((other, exec.decode_plan_with(&weights, other)?))
+        } else {
+            None
+        };
+        (alt, Some(exec.forward_plan(&weights)?))
+    } else {
+        (None, None)
+    };
+    let gen = crate::data::TextGen::new(crate::data::DATA_SEED);
+    let min_prompt = crate::serve::default_min_prompt(cfg);
+    for id in 0..prompts {
+        let (ids, plen0) = gen.prompt(id as u64, cfg.n_ctx, min_prompt);
+        // The final prediction is never appended, so prompt + tokens − 1
+        // positions must fit in the context.
+        let plen = plen0.min(cfg.n_ctx + 1 - tokens).max(1);
+        let prompt = &ids[..plen];
+        let t0 = std::time::Instant::now();
+        let (preds, rows) = plan.greedy(prompt, tokens)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let checksum: f64 = rows.iter().flatten().map(|&v| v as f64).sum();
+        println!(
+            "prompt {id} (len {plen}) → {preds:?}  [{} decode: {ms:.2} ms total, \
+             {:.2} ms/token, logits checksum {checksum:+.4}]",
+            mode.label(),
+            ms / tokens as f64
+        );
+        let mut maxd = 0.0f32;
+        if let Some((other, alt)) = &alt {
+            let (p2, r2) = alt.greedy(prompt, tokens)?;
+            if preds != p2 {
+                bail!(
+                    "prompt {id}: {} vs {} token streams diverged: {preds:?} vs {p2:?}",
+                    mode.label(),
+                    other.label()
+                );
+            }
+            for (a, b) in rows.iter().zip(&r2) {
+                for (x, y) in a.iter().zip(b) {
+                    maxd = maxd.max((x - y).abs());
+                }
+            }
+            if maxd > 1e-4 {
+                bail!("prompt {id}: kv vs prefill logits diverged by {maxd:.3e}");
+            }
+        }
+        if let Some(fplan) = &fplan {
+            // Cross-check the final step against the fused full forward on
+            // the whole decoded sequence.
+            let mut seq = prompt.to_vec();
+            seq.extend_from_slice(&preds[..tokens - 1]);
+            let mut padded = seq.clone();
+            padded.resize(cfg.n_ctx, 0);
+            let logits = fplan.run_gpt(&padded, 1)?;
+            let last = &logits.data()[(seq.len() - 1) * cfg.vocab..seq.len() * cfg.vocab];
+            let dec_last = rows.last().expect("at least one step");
+            let mut fmax = 0.0f32;
+            for (x, y) in dec_last.iter().zip(last) {
+                fmax = fmax.max((x - y).abs());
+            }
+            if fmax > 1e-4 || crate::exec::argmax(last) != *preds.last().expect("step") {
+                bail!("prompt {id}: decode vs full-prefill forward diverged by {fmax:.3e}");
+            }
+            println!(
+                "  verify: {} decode == {}full prefill ✓ (max |Δlogit| {:.2e} across paths)",
+                mode.label(),
+                if alt.is_some() { "alternate decode == " } else { "" },
+                maxd.max(fmax)
+            );
+        }
+    }
     Ok(())
 }
 
@@ -316,6 +465,14 @@ mod tests {
     #[test]
     fn bench_unknown_target_errors() {
         assert!(run_cli(&["bench".to_string(), "bogus".to_string()]).is_err());
+    }
+
+    #[test]
+    fn generate_rejects_vit_models() {
+        let err = run_cli(&["generate".into(), "--model".into(), "vit_t".into()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("gpt"), "{err}");
     }
 
     #[test]

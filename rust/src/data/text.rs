@@ -192,6 +192,27 @@ mod tests {
     }
 
     #[test]
+    fn prompt_min_len_equals_n_ctx() {
+        // Degenerate arrival mix: min_len == n_ctx pins every prompt at the
+        // full context with no padding (`below(1)` must return 0, not
+        // panic) — the edge the generation workload's clamping leans on.
+        let g = TextGen::new(5);
+        let n = 16;
+        for id in 0..8 {
+            let (ids, len) = g.prompt(id, n, n);
+            assert_eq!(len, n);
+            assert_eq!(ids.len(), n);
+            let (full, _) = g.batch(Split::Eval, id, 1, n);
+            assert_eq!(ids, full, "id {id}: full-context prompt must be unpadded eval text");
+        }
+        // And the other boundary: min_len == 1 still yields lengths ≥ 1.
+        for id in 0..8 {
+            let (_, len) = g.prompt(id, n, 1);
+            assert!((1..=n).contains(&len));
+        }
+    }
+
+    #[test]
     fn entropy_floor_value() {
         let h = TextGen::entropy_floor();
         assert!((h - 1.063).abs() < 0.02, "{h}"); // -Σ p ln p for the PROBS

@@ -14,6 +14,15 @@
 //! model *variant*, not a batch size: an interior per-batch-size artifact
 //! cache lets the native backend run any batch at its true size, while
 //! fixed-shape backends (gated PJRT) keep padding to one artifact batch.
+//!
+//! Autoregressive generation gets its own resolved fast path:
+//! [`Executor::decode_plan`] returns a [`DecodePlan`] that drives the
+//! incremental `dec_*` artifact — per-sequence K/V caches
+//! ([`DecodeState`]) grow by one row per layer per generated token instead
+//! of recomputing the full `n_ctx` prefill each step. On runtimes that
+//! prefer fixed shapes (gated PJRT, where `dec_*` has no AOT lowering) the
+//! plan falls back to full prefill-per-step through the fused `fwd_*`
+//! artifact ([`DecodeMode::Prefill`]) — same outputs, more arithmetic.
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
@@ -23,6 +32,40 @@ use anyhow::{bail, Context, Result};
 use crate::model::{ModelConfig, ModelKind, WeightStore};
 use crate::runtime::{Input, Runtime};
 use crate::tensor::Tensor;
+
+/// First-max argmax over a logits row (shared by serving and generation).
+pub fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (j, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = j;
+        }
+    }
+    best as i32
+}
+
+/// Interior batch-size → artifact-name cache shared by the dispatch plans:
+/// names are formatted on first use per batch size and returned as shared
+/// [`Arc`] handles (identity is observable — tests assert reuse), so plans
+/// stay `Sync` and a steady-state request loop never re-formats a name.
+struct ArtCache(RwLock<HashMap<usize, Arc<str>>>);
+
+impl ArtCache {
+    fn new() -> Self {
+        Self(RwLock::new(HashMap::new()))
+    }
+
+    fn get(&self, batch: usize, make: impl FnOnce() -> String) -> Arc<str> {
+        if let Some(a) = self.0.read().unwrap().get(&batch) {
+            return a.clone();
+        }
+        self.0.write().unwrap().entry(batch).or_insert_with(|| Arc::from(make())).clone()
+    }
+
+    fn len(&self) -> usize {
+        self.0.read().unwrap().len()
+    }
+}
 
 /// Per-layer calibration capture (dense model).
 pub struct LayerCapture {
@@ -59,7 +102,7 @@ pub struct ForwardPlan<'rt, 'w> {
     pub o: usize,
     params: Vec<&'w Tensor>,
     /// batch size → fused artifact name (interior per-batch-size cache).
-    arts: RwLock<HashMap<usize, Arc<str>>>,
+    arts: ArtCache,
 }
 
 impl ForwardPlan<'_, '_> {
@@ -67,19 +110,12 @@ impl ForwardPlan<'_, '_> {
     /// repeat callers share one allocation per batch size ([`Arc`] handle
     /// identity is observable — tests assert reuse).
     pub fn artifact(&self, batch: usize) -> Arc<str> {
-        if let Some(a) = self.arts.read().unwrap().get(&batch) {
-            return a.clone();
-        }
-        let mut cache = self.arts.write().unwrap();
-        cache
-            .entry(batch)
-            .or_insert_with(|| Arc::from(self.cfg.fwd_artifact(self.dqk, self.o, batch)))
-            .clone()
+        self.arts.get(batch, || self.cfg.fwd_artifact(self.dqk, self.o, batch))
     }
 
     /// Number of batch sizes resolved so far (cache telemetry).
     pub fn cached_batch_sizes(&self) -> usize {
-        self.arts.read().unwrap().len()
+        self.arts.len()
     }
 
     fn dispatch(&self, data: Input<'_>, art: &str) -> Result<Tensor> {
@@ -127,6 +163,319 @@ impl ForwardPlan<'_, '_> {
         }
         let art = self.artifact(batch);
         self.dispatch(Input::I32(ids, vec![batch, self.cfg.n_ctx]), &art)
+    }
+}
+
+/// How a [`DecodePlan`] computes each autoregressive step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Incremental attention through the `dec_*` artifact: each step embeds
+    /// only the new positions and attends over the per-layer K/V cache —
+    /// one position's worth of projection GEMMs per generated token.
+    KvCache,
+    /// Re-run the full `fwd_*` prefill over the whole (padded) sequence
+    /// every step and read the logits at the current position. The only
+    /// decode available to fixed-shape runtimes (no `dec_*` AOT lowering),
+    /// and the bench baseline the KV cache is measured against.
+    Prefill,
+}
+
+impl DecodeMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "kv" => DecodeMode::KvCache,
+            "prefill" => DecodeMode::Prefill,
+            _ => bail!("decode mode must be kv|prefill, got '{s}'"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DecodeMode::KvCache => "kv",
+            DecodeMode::Prefill => "prefill",
+        }
+    }
+
+    /// Collapse to the mode actually usable on a backend: a runtime that
+    /// prefers fixed shapes keeps full prefill-per-step — the incremental
+    /// `dec_*` family has no AOT lowering there.
+    pub fn resolve(self, fixed_shapes: bool) -> Self {
+        if fixed_shapes {
+            DecodeMode::Prefill
+        } else {
+            self
+        }
+    }
+}
+
+/// Per-sequence decode state owned by the caller: the token history plus
+/// (in [`DecodeMode::KvCache`]) per-layer K/V caches laid out
+/// `[layers, heads, n_ctx, dqk|dh]` at full context capacity — appending a
+/// step's rows is a straight block copy and batch assembly never reshapes.
+/// Rows at positions ≥ [`DecodeState::len`] are zero padding the masked
+/// incremental attention never reads.
+pub struct DecodeState {
+    ids: Vec<i32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl DecodeState {
+    /// Number of positions decoded so far (prompt + generated).
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Token history (prompt + appended continuations).
+    pub fn ids(&self) -> &[i32] {
+        &self.ids
+    }
+}
+
+/// A batch-polymorphic resolved *decode* dispatch (gpt only): parameters
+/// resolved once per model variant like [`ForwardPlan`], plus the decode
+/// mode. [`DecodePlan::extend_at`] advances a batch of sequences by their
+/// new tokens in one fused dispatch — sequences with different cache
+/// lengths and different new-token counts batch together (per-sequence
+/// `past`/`fresh` lengths ride along; padding rows are masked out), which
+/// is what lets the serving engine batch decode steps from different
+/// requests. The plan is `Sync`; the per-sequence mutable state lives in
+/// caller-owned [`DecodeState`]s.
+pub struct DecodePlan<'rt, 'w> {
+    rt: &'rt Runtime,
+    pub cfg: &'static ModelConfig,
+    /// Retained per-head q/k width derived from the stored `attn.wq` shape.
+    pub dqk: usize,
+    /// Retained MLP hidden width derived from the stored `mlp.w1` shape.
+    pub o: usize,
+    /// How steps are computed (KV-cache incremental vs prefill-per-step).
+    /// Fixed at construction, so one name cache serves the plan.
+    pub mode: DecodeMode,
+    params: Vec<&'w Tensor>,
+    arts: ArtCache,
+}
+
+impl DecodePlan<'_, '_> {
+    /// The artifact name one step dispatches at `batch` under this plan's
+    /// mode (`dec_*` for KV-cache, `fwd_*` for prefill-per-step), cached
+    /// per batch size like [`ForwardPlan::artifact`].
+    pub fn artifact(&self, batch: usize) -> Arc<str> {
+        self.arts.get(batch, || match self.mode {
+            DecodeMode::KvCache => self.cfg.dec_artifact(self.dqk, self.o, batch),
+            DecodeMode::Prefill => self.cfg.fwd_artifact(self.dqk, self.o, batch),
+        })
+    }
+
+    /// Pre-format the artifact name at `batch` (engine warmup).
+    pub fn warm_names(&self, batch: usize) {
+        let _ = self.artifact(batch);
+    }
+
+    /// Number of batch sizes resolved so far (cache telemetry).
+    pub fn cached_batch_sizes(&self) -> usize {
+        self.arts.len()
+    }
+
+    /// A fresh empty sequence state for this plan.
+    pub fn begin(&self) -> DecodeState {
+        let (l, h, n) = (self.cfg.layers, self.cfg.heads, self.cfg.n_ctx);
+        let (k, v) = match self.mode {
+            DecodeMode::KvCache => {
+                (vec![0.0; l * h * n * self.dqk], vec![0.0; l * h * n * self.cfg.dh()])
+            }
+            // Prefill-per-step never touches a K/V cache.
+            DecodeMode::Prefill => (Vec::new(), Vec::new()),
+        };
+        DecodeState { ids: Vec::with_capacity(n), k, v }
+    }
+
+    /// [`DecodePlan::extend_at`] at the batch's true size.
+    pub fn extend(
+        &self,
+        states: &mut [&mut DecodeState],
+        new: &[&[i32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = states.len();
+        self.extend_at(states, new, b)
+    }
+
+    /// Advance each sequence by its `new` tokens in one fused dispatch at
+    /// batch size `dispatch ≥ states.len()` (rows past `states.len()` are
+    /// inert padding — the engine's padded dispatch policy), appending the
+    /// tokens (and, in KV mode, the new per-layer K/V rows) to each state.
+    /// Returns, per sequence, the logits rows at its new positions
+    /// (`new[e].len() * vocab` values; the last row is the next-token
+    /// distribution). Outputs are per-example and independent of batch
+    /// composition, dispatch size, and mode — asserted by
+    /// `tests/decode_equality`.
+    pub fn extend_at(
+        &self,
+        states: &mut [&mut DecodeState],
+        new: &[&[i32]],
+        dispatch: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = self.cfg.n_ctx;
+        if states.is_empty() || states.len() != new.len() || dispatch < states.len() {
+            bail!(
+                "extend_at: {} states / {} token slices into dispatch size {dispatch}",
+                states.len(),
+                new.len()
+            );
+        }
+        for (e, (st, toks)) in states.iter().zip(new).enumerate() {
+            if toks.is_empty() {
+                bail!("extend_at: sequence {e} has no new tokens");
+            }
+            if st.len() + toks.len() > n {
+                bail!(
+                    "extend_at: sequence {e} would grow to {} positions (n_ctx {n})",
+                    st.len() + toks.len()
+                );
+            }
+        }
+        match self.mode {
+            DecodeMode::KvCache => self.extend_kv(states, new, dispatch),
+            DecodeMode::Prefill => self.extend_prefill(states, new, dispatch),
+        }
+    }
+
+    fn extend_kv(
+        &self,
+        states: &mut [&mut DecodeState],
+        new: &[&[i32]],
+        dispatch: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (l, h, n) = (self.cfg.layers, self.cfg.heads, self.cfg.n_ctx);
+        let (dqk, dh, vocab) = (self.dqk, self.cfg.dh(), self.cfg.vocab);
+        let b = dispatch;
+        let m = new.iter().map(|t| t.len()).max().unwrap();
+        let clen_k = l * h * n * dqk;
+        let clen_v = l * h * n * dh;
+        let mut ids = vec![0i32; b * m];
+        // Padding rows decode one dummy token at position 0; their outputs
+        // are dropped.
+        let mut past = vec![0i32; b];
+        let mut fresh = vec![1i32; b];
+        let mut kbuf = vec![0.0f32; b * clen_k];
+        let mut vbuf = vec![0.0f32; b * clen_v];
+        for (e, (st, toks)) in states.iter().zip(new).enumerate() {
+            if st.k.len() != clen_k || st.v.len() != clen_v {
+                bail!(
+                    "extend_at: sequence {e} state was not created by a kv-cache plan \
+                     of these dims (cache {} / {} values, expected {clen_k} / {clen_v})",
+                    st.k.len(),
+                    st.v.len()
+                );
+            }
+            ids[e * m..e * m + toks.len()].copy_from_slice(toks);
+            past[e] = st.len() as i32;
+            fresh[e] = toks.len() as i32;
+            kbuf[e * clen_k..(e + 1) * clen_k].copy_from_slice(&st.k);
+            vbuf[e * clen_v..(e + 1) * clen_v].copy_from_slice(&st.v);
+        }
+        let kt = Tensor::from_vec(&[b, l, h, n, dqk], kbuf);
+        let vt = Tensor::from_vec(&[b, l, h, n, dh], vbuf);
+        let art = self.artifact(b);
+        let mut inputs: Vec<Input> = Vec::with_capacity(5 + self.params.len());
+        inputs.push(Input::I32(&ids, vec![b, m]));
+        inputs.push(Input::I32(&past, vec![b]));
+        inputs.push(Input::I32(&fresh, vec![b]));
+        inputs.push(Input::F32(&kt));
+        inputs.push(Input::F32(&vt));
+        inputs.extend(self.params.iter().map(|&t| Input::F32(t)));
+        let mut out = self.rt.execute(&art, &inputs)?;
+        if out.len() != 3 {
+            bail!("dec artifact '{art}' returned {} outputs, expected 3", out.len());
+        }
+        let vnew = out.remove(2);
+        let knew = out.remove(1);
+        let logits = out.remove(0);
+        let mut rows = Vec::with_capacity(states.len());
+        for (e, (st, toks)) in states.iter_mut().zip(new).enumerate() {
+            let f = toks.len();
+            let old = st.len();
+            st.ids.extend_from_slice(toks);
+            for lh in 0..l * h {
+                let ks = (e * l * h + lh) * m * dqk;
+                let kd = (lh * n + old) * dqk;
+                st.k[kd..kd + f * dqk].copy_from_slice(&knew.data()[ks..ks + f * dqk]);
+                let vs = (e * l * h + lh) * m * dh;
+                let vd = (lh * n + old) * dh;
+                st.v[vd..vd + f * dh].copy_from_slice(&vnew.data()[vs..vs + f * dh]);
+            }
+            rows.push(logits.data()[e * m * vocab..(e * m + f) * vocab].to_vec());
+        }
+        Ok(rows)
+    }
+
+    fn extend_prefill(
+        &self,
+        states: &mut [&mut DecodeState],
+        new: &[&[i32]],
+        dispatch: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (n, vocab) = (self.cfg.n_ctx, self.cfg.vocab);
+        let b = dispatch;
+        // Zero-pad every extended sequence back to the fixed artifact
+        // width; causal masking keeps the padding out of the live
+        // positions' logits. States are only mutated after the dispatch
+        // succeeds, mirroring the KV path's error behaviour.
+        let mut ids = vec![0i32; b * n];
+        for (e, (st, toks)) in states.iter().zip(new).enumerate() {
+            ids[e * n..e * n + st.len()].copy_from_slice(&st.ids);
+            ids[e * n + st.len()..e * n + st.len() + toks.len()].copy_from_slice(toks);
+        }
+        let art = self.artifact(b);
+        let mut inputs: Vec<Input> = Vec::with_capacity(1 + self.params.len());
+        inputs.push(Input::I32(&ids, vec![b, n]));
+        inputs.extend(self.params.iter().map(|&t| Input::F32(t)));
+        let mut out = self.rt.execute(&art, &inputs)?;
+        let logits = out.remove(0); // [b, n, vocab]
+        let mut rows = Vec::with_capacity(states.len());
+        for (e, (st, toks)) in states.iter_mut().zip(new).enumerate() {
+            let f = toks.len();
+            st.ids.extend_from_slice(toks);
+            let len = st.len();
+            rows.push(logits.data()[(e * n + len - f) * vocab..(e * n + len) * vocab].to_vec());
+        }
+        Ok(rows)
+    }
+
+    /// Greedy generation driver for one sequence: prefill `prompt` in one
+    /// step, then `steps − 1` single-token decode steps feeding back each
+    /// argmax. Returns the `steps` predicted token ids and the logits row
+    /// behind each prediction. The final prediction is never appended, so
+    /// `prompt.len() + steps − 1 ≤ n_ctx` must hold.
+    pub fn greedy(&self, prompt: &[i32], steps: usize) -> Result<(Vec<i32>, Vec<Vec<f32>>)> {
+        if prompt.is_empty() || steps == 0 {
+            bail!("greedy: prompt and steps must be non-empty");
+        }
+        if prompt.len() + steps - 1 > self.cfg.n_ctx {
+            bail!(
+                "greedy: {} prompt + {steps} generated positions exceed n_ctx {}",
+                prompt.len(),
+                self.cfg.n_ctx
+            );
+        }
+        let vocab = self.cfg.vocab;
+        let mut st = self.begin();
+        let mut toks: Vec<i32> = prompt.to_vec();
+        let mut preds = Vec::with_capacity(steps);
+        let mut rows = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let out = self.extend(&mut [&mut st], &[&toks])?;
+            let all = out.into_iter().next().expect("extend returned no rows");
+            let last = all[all.len() - vocab..].to_vec();
+            let p = argmax(&last);
+            preds.push(p);
+            rows.push(last);
+            toks = vec![p];
+        }
+        Ok((preds, rows))
     }
 }
 
@@ -278,6 +627,13 @@ impl<'rt> Executor<'rt> {
     /// is behind a lock), so the serving engine shares one per variant
     /// across all worker threads and dispatches any batch at its true size.
     pub fn forward_plan<'w>(&self, w: &'w WeightStore) -> Result<ForwardPlan<'rt, 'w>> {
+        let (dqk, o, params) = self.resolve_params(w)?;
+        Ok(ForwardPlan { rt: self.rt, cfg: self.cfg, dqk, o, params, arts: ArtCache::new() })
+    }
+
+    /// Resolve `(dqk, o)` and every parameter tensor in canonical
+    /// `param_spec_at` order — the shared front half of the dispatch plans.
+    fn resolve_params<'w>(&self, w: &'w WeightStore) -> Result<(usize, usize, Vec<&'w Tensor>)> {
         let (dqk, o) = self.stored_dims(w)?;
         let spec = self.cfg.param_spec_at(dqk, o);
         let mut params = Vec::with_capacity(spec.len());
@@ -285,20 +641,35 @@ impl<'rt> Executor<'rt> {
             let t = w.expect(name)?;
             if t.shape() != shape.as_slice() {
                 bail!(
-                    "forward_plan: weight '{name}' has shape {:?}, expected {shape:?}",
+                    "resolve_params: weight '{name}' has shape {:?}, expected {shape:?}",
                     t.shape()
                 );
             }
             params.push(t);
         }
-        Ok(ForwardPlan {
-            rt: self.rt,
-            cfg: self.cfg,
-            dqk,
-            o,
-            params,
-            arts: RwLock::new(HashMap::new()),
-        })
+        Ok((dqk, o, params))
+    }
+
+    /// Resolve the autoregressive-decode fast path for `w` (gpt configs
+    /// only), mode auto-selected: [`DecodeMode::KvCache`] unless the
+    /// runtime prefers fixed shapes, where only prefill-per-step has an
+    /// AOT lowering.
+    pub fn decode_plan<'w>(&self, w: &'w WeightStore) -> Result<DecodePlan<'rt, 'w>> {
+        self.decode_plan_with(w, DecodeMode::KvCache.resolve(self.rt.prefers_fixed_shapes()))
+    }
+
+    /// [`Executor::decode_plan`] at an explicit [`DecodeMode`] (the bench
+    /// harness pins both modes to measure the KV-cache speedup).
+    pub fn decode_plan_with<'w>(
+        &self,
+        w: &'w WeightStore,
+        mode: DecodeMode,
+    ) -> Result<DecodePlan<'rt, 'w>> {
+        if self.cfg.kind != ModelKind::Gpt {
+            bail!("decode_plan on non-gpt model '{}'", self.cfg.name);
+        }
+        let (dqk, o, params) = self.resolve_params(w)?;
+        Ok(DecodePlan { rt: self.rt, cfg: self.cfg, dqk, o, mode, params, arts: ArtCache::new() })
     }
 
     /// Full forward: gpt logits [B, n, vocab].
@@ -357,5 +728,40 @@ impl<'rt> Executor<'rt> {
         self.push_params(w, self.cfg.param_spec().into_iter().map(|(n, _)| n), &mut inputs)?;
         let out = self.rt.execute(&art, &inputs)?;
         Ok(out[0].data()[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn decode_mode_parse_and_resolve() {
+        assert_eq!(DecodeMode::parse("kv").unwrap(), DecodeMode::KvCache);
+        assert_eq!(DecodeMode::parse("prefill").unwrap(), DecodeMode::Prefill);
+        assert!(DecodeMode::parse("bogus").is_err());
+        for m in [DecodeMode::KvCache, DecodeMode::Prefill] {
+            assert_eq!(DecodeMode::parse(m.label()).unwrap(), m);
+            // Fixed-shape backends collapse to prefill-per-step.
+            assert_eq!(m.resolve(true), DecodeMode::Prefill);
+            assert_eq!(m.resolve(false), m);
+        }
+    }
+
+    #[test]
+    fn decode_plan_rejects_vit() {
+        let rt = Runtime::new(std::env::temp_dir().join("corp_exec_no_artifacts")).unwrap();
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let exec = Executor::new(&rt, cfg);
+        let w = WeightStore::init(cfg, 1);
+        let err = exec.decode_plan(&w).unwrap_err().to_string();
+        assert!(err.contains("non-gpt"), "{err}");
     }
 }

@@ -196,6 +196,13 @@ impl ModelConfig {
         format!("fwd_{}_q{dqk}_o{o}_b{batch}", self.name)
     }
 
+    /// Incremental (KV-cached) decode artifact at pruned dims `(dqk, o)` —
+    /// embeds only the *new* positions of each sequence and attends over the
+    /// per-layer K/V cache (the autoregressive serving fast path; gpt only).
+    pub fn dec_artifact(&self, dqk: usize, o: usize, batch: usize) -> String {
+        format!("dec_{}_q{dqk}_o{o}_b{batch}", self.name)
+    }
+
     pub fn head_artifact(&self, batch: usize) -> String {
         format!("head_{}_b{batch}", self.name)
     }
@@ -328,6 +335,8 @@ mod tests {
         assert_eq!(c.embed_artifact(1), "embed_vit_t_b1");
         assert_eq!(c.blockcap_artifact(), "blockcap_vit_t_b16");
         assert_eq!(c.fwd_artifact(16, 192, 8), "fwd_vit_t_q16_o192_b8");
+        let g = ModelConfig::by_name("gpt_s").unwrap();
+        assert_eq!(g.dec_artifact(16, 256, 4), "dec_gpt_s_q16_o256_b4");
     }
 
     #[test]

@@ -3,10 +3,10 @@
 //! Two backends serve the same artifact-name interface:
 //!
 //! * [`native`] (always available) — a pure-Rust interpreter for the whole
-//!   artifact family (`embed_* / block_* / blockcap_* / mlponly_* / head_* /
-//!   lnf_* / evloss_* / train_*`), built on the packed parallel linalg
-//!   kernels. Needs no `artifacts/` directory and no external crates, so
-//!   `cargo build && cargo test` work offline.
+//!   artifact family (`embed_* / block_* / blockcap_* / mlponly_* / fwd_* /
+//!   dec_* / head_* / lnf_* / evloss_* / train_*`), built on the packed
+//!   parallel linalg kernels. Needs no `artifacts/` directory and no
+//!   external crates, so `cargo build && cargo test` work offline.
 //! * `pjrt` (behind `--cfg pjrt_backend`, vendored environments only) — the
 //!   original path that loads the AOT HLO-text artifacts written by
 //!   `python/compile/aot.py` and executes them through the `xla` crate.
@@ -151,6 +151,7 @@ mod tests {
         assert_eq!(rt.manifest().len(), 0);
         assert!(rt.has_artifact("embed_vit_t_b16"));
         assert!(rt.has_artifact("train_gpt_s"));
+        assert!(rt.has_artifact("dec_gpt_s_q32_o512_b2"));
         assert!(!rt.has_artifact("definitely_not_an_artifact"));
         assert_eq!(rt.exec_count(), 0);
         // No manifest → shapes are synthesized per request; exact-size

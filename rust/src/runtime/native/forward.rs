@@ -154,6 +154,59 @@ pub(crate) fn attention_one(
     (att, probs)
 }
 
+/// Incremental (KV-cached) softmax attention for one head: `m` new queries
+/// at absolute positions `past..past+m` attend over the `past` cached keys
+/// plus the new keys up to and including their own position (causal).
+/// Returns att `[m, dv]`.
+///
+/// Per-row arithmetic is ordered exactly like the full-sequence path
+/// ([`attn_logits`] + [`softmax_rows`]): logit `s` is the same `dot_f32`
+/// in the same key order, masked-out positions contribute exact zeros, so
+/// the cached and the full computation agree to within the GEMM's
+/// accumulation-order noise (asserted ≤ 1e-5 by `tests/decode_equality`).
+pub(crate) fn attention_cached(
+    q_new: &[f32],
+    k_cache: &[f32],
+    k_new: &[f32],
+    v_cache: &[f32],
+    v_new: &[f32],
+    past: usize,
+    m: usize,
+    dqk: usize,
+    dv: usize,
+    scale: f32,
+) -> Vec<f32> {
+    debug_assert_eq!(q_new.len(), m * dqk);
+    debug_assert_eq!(k_cache.len(), past * dqk);
+    debug_assert_eq!(v_cache.len(), past * dv);
+    let mut att = vec![0.0f32; m * dv];
+    let mut logits: Vec<f32> = Vec::with_capacity(past + m);
+    for j in 0..m {
+        let span = past + j + 1; // keys visible to absolute position past + j
+        let qj = &q_new[j * dqk..(j + 1) * dqk];
+        logits.clear();
+        for s in 0..past {
+            logits.push(dot_f32(qj, &k_cache[s * dqk..(s + 1) * dqk]) * scale);
+        }
+        for s in 0..=j {
+            logits.push(dot_f32(qj, &k_new[s * dqk..(s + 1) * dqk]) * scale);
+        }
+        softmax_rows(&mut logits, 1, span);
+        let out = &mut att[j * dv..(j + 1) * dv];
+        for (s, &p) in logits.iter().enumerate() {
+            let vrow = if s < past {
+                &v_cache[s * dv..(s + 1) * dv]
+            } else {
+                &v_new[(s - past) * dv..(s - past + 1) * dv]
+            };
+            for (o, &vv) in out.iter_mut().zip(vrow) {
+                *o += p * vv;
+            }
+        }
+    }
+    att
+}
+
 /// Per-block parameter views in `block_param_spec` order.
 pub(crate) struct BlockParams<'a> {
     pub ln1g: &'a [f32],
@@ -753,6 +806,165 @@ pub(crate) fn run_forward(
     }
 }
 
+/// Incremental forward for one gpt example: `fresh = ids_new.len()` new
+/// tokens at absolute positions `past..past+fresh`, attending over the
+/// per-layer K/V cache of the first `past` positions (layout
+/// `[layers, h, n_ctx, dqk|dh]`; rows ≥ `past` are never read). Returns
+/// (logits `[fresh, vocab]`, knew `[layers, h, fresh, dqk]`,
+/// vnew `[layers, h, fresh, dh]`) — the caller appends the new rows to its
+/// cache. With `past == 0` and `fresh == n_ctx` this is exactly
+/// [`forward_example`] (asserted by `tests/decode_equality`); with
+/// `fresh == 1` it is one autoregressive decode step.
+pub(crate) fn decode_example(
+    cfg: &ModelConfig,
+    dqk: usize,
+    o: usize,
+    p: &ModelParams<'_>,
+    ids_new: &[i32],
+    past: usize,
+    kcache: &[f32],
+    vcache: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let (n, d, h, dh, vocab) = (cfg.n_ctx, cfg.d, cfg.heads, cfg.dh(), cfg.vocab);
+    let m = ids_new.len();
+    if m == 0 {
+        bail!("decode: no new tokens");
+    }
+    if past + m > n {
+        bail!("decode: {past} cached + {m} new positions exceed n_ctx {n}");
+    }
+    debug_assert_eq!(kcache.len(), cfg.layers * h * n * dqk);
+    debug_assert_eq!(vcache.len(), cfg.layers * h * n * dh);
+    // Dense-head scale even when dqk < dh (§3.4), as in the full forward.
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let (wemb, pos) = match &p.embed {
+        EmbedParams::Gpt { wemb, pos } => (*wemb, *pos),
+        EmbedParams::Vit { .. } => bail!("decode on vit params"),
+    };
+    let mut x = vec![0.0f32; m * d];
+    for (j, &id) in ids_new.iter().enumerate() {
+        if id < 0 || id as usize >= vocab {
+            bail!("token id {id} out of vocab range 0..{vocab}");
+        }
+        let row = &wemb[id as usize * d..(id as usize + 1) * d];
+        let ps = &pos[(past + j) * d..(past + j + 1) * d];
+        let dst = &mut x[j * d..(j + 1) * d];
+        for c in 0..d {
+            dst[c] = row[c] + ps[c];
+        }
+    }
+
+    let mut knew = vec![0.0f32; cfg.layers * h * m * dqk];
+    let mut vnew = vec![0.0f32; cfg.layers * h * m * dh];
+    for (l, bp) in p.blocks.iter().enumerate() {
+        let xn = layernorm(&x, m, d, bp.ln1g, bp.ln1b);
+        let qf = linear(&xn, m, d, bp.wq, h * dqk, Some(bp.bq));
+        let kf = linear(&xn, m, d, bp.wk, h * dqk, Some(bp.bk));
+        let vf = linear(&xn, m, d, bp.wv, h * dh, Some(bp.bv));
+        let mut merged = vec![0.0f32; m * h * dh];
+        for head in 0..h {
+            let qh = gather_cols(&qf, m, h * dqk, head * dqk, dqk);
+            let kh = gather_cols(&kf, m, h * dqk, head * dqk, dqk);
+            let vh = gather_cols(&vf, m, h * dh, head * dh, dh);
+            let kc = &kcache[(l * h + head) * n * dqk..][..past * dqk];
+            let vc = &vcache[(l * h + head) * n * dh..][..past * dh];
+            let att = attention_cached(&qh, kc, &kh, vc, &vh, past, m, dqk, dh, scale);
+            scatter_cols(&mut merged, &att, m, h * dh, head * dh, dh);
+            knew[(l * h + head) * m * dqk..(l * h + head + 1) * m * dqk].copy_from_slice(&kh);
+            vnew[(l * h + head) * m * dh..(l * h + head + 1) * m * dh].copy_from_slice(&vh);
+        }
+        let attn_out = linear(&merged, m, h * dh, bp.wo, d, Some(bp.bo));
+        let y: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+        let yn = layernorm(&y, m, d, bp.ln2g, bp.ln2b);
+        let mut hidden = linear(&yn, m, d, bp.w1, o, Some(bp.b1));
+        for v in hidden.iter_mut() {
+            *v = gelu(*v);
+        }
+        let mlp_out = linear(&hidden, m, o, bp.w2, d, Some(bp.b2));
+        x = y.iter().zip(&mlp_out).map(|(a, b)| a + b).collect();
+    }
+    let xn = layernorm(&x, m, d, p.head_ln_g, p.head_ln_b);
+    let logits = linear(&xn, m, d, p.head_w, vocab, Some(p.head_b));
+    Ok((logits, knew, vnew))
+}
+
+/// `dec_*`: batched incremental (KV-cached) decode at pruned dims
+/// `(dqk, o)` — the autoregressive serving fast path (gpt only).
+///
+/// Inputs: new ids `[b, m]` (`m` decoded from the id count), cached lengths
+/// `past [b]`, new counts `fresh [b]` (`1..=m`; id columns ≥ `fresh[e]` are
+/// padding), per-layer caches `[b, layers, h, n_ctx, dqk|dh]` (rows ≥
+/// `past[e]` are never read — padding can batch sequences with different
+/// cache lengths into one dispatch), then the full parameter list in
+/// `param_spec_at(dqk, o)` order. Outputs: logits `[b, m, vocab]` at the
+/// new positions (rows ≥ `fresh[e]` zero) plus the new K/V rows
+/// `[b, layers, h, m, dqk|dh]` for the caller to append to its caches.
+pub(crate) fn run_decode(
+    cfg: &'static ModelConfig,
+    dqk: usize,
+    o: usize,
+    b: usize,
+    inp: &mut In<'_, '_>,
+) -> Result<Vec<Tensor>> {
+    if cfg.kind != ModelKind::Gpt {
+        bail!("dec artifact on non-gpt config '{}'", cfg.name);
+    }
+    let (n, h, dh, vocab, layers) = (cfg.n_ctx, cfg.heads, cfg.dh(), cfg.vocab, cfg.layers);
+    let ids = inp.ints()?;
+    if b == 0 || ids.is_empty() || ids.len() % b != 0 {
+        bail!("dec ids: {} values do not tile batch {b}", ids.len());
+    }
+    let m = ids.len() / b;
+    let past = inp.ints()?;
+    let fresh = inp.ints()?;
+    if past.len() != b || fresh.len() != b {
+        bail!("dec lens: {} past / {} fresh values, expected {b}", past.len(), fresh.len());
+    }
+    let kc = inp.tensor()?;
+    check_slab(kc, &[b, layers, h, n, dqk], "dec kcache")?;
+    let vc = inp.tensor()?;
+    check_slab(vc, &[b, layers, h, n, dh], "dec vcache")?;
+    let p = ModelParams::read_at(cfg, dqk, o, inp)?;
+    let clen_k = layers * h * n * dqk;
+    let clen_v = layers * h * n * dh;
+    let outs: Vec<Result<(Vec<f32>, Vec<f32>, Vec<f32>)>> = threads::parallel_map(b, |e| {
+        let (pe, fe) = (past[e], fresh[e]);
+        if pe < 0 || fe < 1 || fe as usize > m {
+            bail!("dec lens: example {e} has past {pe} / fresh {fe} for m {m}");
+        }
+        decode_example(
+            cfg,
+            dqk,
+            o,
+            &p,
+            &ids[e * m..e * m + fe as usize],
+            pe as usize,
+            &kc.data()[e * clen_k..(e + 1) * clen_k],
+            &vc.data()[e * clen_v..(e + 1) * clen_v],
+        )
+    });
+    let mut logits = vec![0.0f32; b * m * vocab];
+    let mut knew = vec![0.0f32; b * layers * h * m * dqk];
+    let mut vnew = vec![0.0f32; b * layers * h * m * dh];
+    for (e, r) in outs.into_iter().enumerate() {
+        let (lg, kn, vn) = r?;
+        let fe = fresh[e] as usize;
+        logits[e * m * vocab..e * m * vocab + fe * vocab].copy_from_slice(&lg);
+        for lh in 0..layers * h {
+            knew[(e * layers * h + lh) * m * dqk..][..fe * dqk]
+                .copy_from_slice(&kn[lh * fe * dqk..(lh + 1) * fe * dqk]);
+            vnew[(e * layers * h + lh) * m * dh..][..fe * dh]
+                .copy_from_slice(&vn[lh * fe * dh..(lh + 1) * fe * dh]);
+        }
+    }
+    Ok(vec![
+        Tensor::from_vec(&[b, m, vocab], logits),
+        Tensor::from_vec(&[b, layers, h, m, dqk], knew),
+        Tensor::from_vec(&[b, layers, h, m, dh], vnew),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -838,5 +1050,39 @@ mod tests {
     fn cross_entropy_uniform() {
         let row = vec![0.0f32; 16];
         assert!((cross_entropy(&row, 3) - (16.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cached_attention_matches_full_causal() {
+        // Pseudo-random but deterministic q/k/v for a 5-position sequence.
+        let (n, dqk, dv) = (5usize, 3usize, 2usize);
+        let gen = |salt: usize, len: usize| -> Vec<f32> {
+            (0..len).map(|i| (((i * 2654435761 + salt * 40503) % 97) as f32 - 48.0) / 31.0).collect()
+        };
+        let q = gen(1, n * dqk);
+        let k = gen(2, n * dqk);
+        let v = gen(3, n * dv);
+        let (full, _) = attention_one(&q, &k, &v, n, dqk, dv, 0.7, true);
+        // Split at every cache point: first `past` positions cached, the
+        // rest decoded incrementally — the outputs for the new positions
+        // must match the full causal attention rows.
+        for past in 0..n {
+            let m = n - past;
+            let att = attention_cached(
+                &q[past * dqk..],
+                &k[..past * dqk],
+                &k[past * dqk..],
+                &v[..past * dv],
+                &v[past * dv..],
+                past,
+                m,
+                dqk,
+                dv,
+                0.7,
+            );
+            for (a, b) in att.iter().zip(&full[past * dv..]) {
+                assert!((a - b).abs() < 1e-6, "past={past}: {a} vs {b}");
+            }
+        }
     }
 }

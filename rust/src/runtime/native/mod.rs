@@ -33,6 +33,8 @@ pub(crate) enum Op {
     BlockCap { cfg: &'static ModelConfig, b: usize },
     /// Fused full forward at pruned dims (the serving fast path).
     Forward { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize },
+    /// Incremental KV-cached decode at pruned dims (autoregressive serving).
+    Decode { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize },
     MlpOnly { cfg: &'static ModelConfig, o: usize, b: usize },
     EvLoss { cfg: &'static ModelConfig },
     Train { cfg: &'static ModelConfig },
@@ -60,6 +62,12 @@ pub(crate) fn parse(name: &str) -> Option<Op> {
         let (rest, o) = tail_num(rest, "_o")?;
         let (m, dqk) = tail_num(rest, "_q")?;
         return ModelConfig::by_name(m).map(|cfg| Op::Forward { cfg, dqk, o, b });
+    }
+    if let Some(rest) = name.strip_prefix("dec_") {
+        let (rest, b) = tail_num(rest, "_b")?;
+        let (rest, o) = tail_num(rest, "_o")?;
+        let (m, dqk) = tail_num(rest, "_q")?;
+        return ModelConfig::by_name(m).map(|cfg| Op::Decode { cfg, dqk, o, b });
     }
     if let Some(rest) = name.strip_prefix("mlponly_") {
         let (rest, b) = tail_num(rest, "_b")?;
@@ -108,6 +116,7 @@ pub fn execute(name: &str, inputs: &[Input<'_>]) -> Result<Vec<Tensor>> {
             forward::run_block(cfg, cfg.dh(), cfg.mlp, b, true, &mut inp)
         }
         Op::Forward { cfg, dqk, o, b } => forward::run_forward(cfg, dqk, o, b, &mut inp),
+        Op::Decode { cfg, dqk, o, b } => forward::run_decode(cfg, dqk, o, b, &mut inp),
         Op::MlpOnly { cfg, o, b } => forward::run_mlponly(cfg, o, b, &mut inp),
         Op::EvLoss { cfg } => forward::run_evloss(cfg, &mut inp),
         Op::Train { cfg } => train::run_train(cfg, &mut inp),
@@ -199,6 +208,13 @@ mod tests {
             Some(Op::Forward { cfg, dqk, o, b }) => {
                 assert_eq!(cfg.name, "vit_b");
                 assert_eq!((dqk, o, b), (16, 384, 8));
+            }
+            other => panic!("bad parse: {other:?}"),
+        }
+        match parse("dec_gpt_s_q16_o256_b4") {
+            Some(Op::Decode { cfg, dqk, o, b }) => {
+                assert_eq!(cfg.name, "gpt_s");
+                assert_eq!((dqk, o, b), (16, 256, 4));
             }
             other => panic!("bad parse: {other:?}"),
         }

@@ -5,24 +5,37 @@
 //! full are shed and counted (backpressure instead of unbounded buildup).
 //! `workers` executor threads drain the queue: each pops a request, then
 //! keeps the batch open up to `max_wait` seconds waiting for the queue to
-//! yield up to `max_batch` requests, picks a dispatch size for the (possibly
-//! partial) batch per the configured [`DispatchPolicy`] — padded to the
-//! fixed artifact batch or exact at the true size — and hands it to the
-//! workload, which assembles inputs and runs one fused dispatch through a
-//! [`crate::exec::ForwardPlan`] shared by every worker.
+//! yield up to `max_batch` requests *of the same fleet unit*, picks a
+//! dispatch size for the (possibly partial) batch per the configured
+//! [`DispatchPolicy`] — padded to the fixed artifact batch or exact at the
+//! true size — and hands it to the workload, which assembles inputs and runs
+//! one fused dispatch through the [`Plans`] shared by every worker.
 //!
-//! The engine core knows nothing about images or prompts: request
-//! synthesis, batch input assembly, and per-request output accounting live
-//! behind the [`Workload`] trait ([`super::VisionWorkload`] /
-//! [`super::GptWorkload`]) — one queueing/batching core, two scenarios.
+//! The engine core knows nothing about images, prompts, or decode steps:
+//! request synthesis, batch input assembly, and per-request output
+//! accounting live behind the [`Workload`] trait. Multi-step workloads
+//! ([`super::GenWorkload`]) return [`StepOutcome::Continue`] from a step;
+//! the engine then *re-enqueues* the request (keeping its original arrival
+//! for latency accounting, bypassing the queue bound so an admitted request
+//! is never shed mid-generation), so decode steps from different sequences
+//! batch together — the continuation-re-enqueue batching model.
 //!
-//! Accounting is per request: queueing delay (intended arrival → dequeue),
-//! execution time (its batch's forward), total latency, and the workload's
-//! [`RequestOutput`] (prediction + token charge). Predictions are returned
+//! [`run_fleet`] runs *two* workloads — possibly over different models —
+//! through one queue and one worker pool (a mixed vision + generation
+//! fleet). Requests are interleaved round-robin across the members of the
+//! fleet; workers form single-unit batches (a batch never mixes models),
+//! and per-member stats come back separately. [`run_engine`] is the
+//! single-member instance of the same core.
+//!
+//! Accounting is per request: queueing delay (intended arrival → first
+//! dequeue), execution time of the final step's batch, total latency,
+//! time-to-first-step and mean inter-step time (for generation:
+//! time-to-first-token and inter-token latency), plus the workload's
+//! [`super::RequestOutput`] (prediction + token charge). Predictions are
+//! returned
 //! per request so tests can assert that batching, padding vs exact-size
-//! dispatch, and the worker count never change *what* is computed — rows
-//! are processed per example, so a request's logits are identical to a
-//! batch-1 forward of the same payload.
+//! dispatch, worker count, and batch composition never change *what* is
+//! computed.
 //!
 //! Worker threads call [`threads::serialize_nested_regions`] on entry:
 //! the per-example fan-out inside the native backend runs serial on them,
@@ -41,7 +54,7 @@ use crate::serve::workload::{DispatchPolicy, Workload};
 // the vendored `xla` client/executable types are not known to be.
 #[cfg(not(pjrt_backend))]
 use {
-    crate::serve::workload::RequestOutput,
+    crate::serve::workload::{Plans, StepOutcome},
     crate::util::bench::percentile,
     crate::util::{threads, Pcg64},
     std::collections::VecDeque,
@@ -57,7 +70,8 @@ pub struct EngineOpts {
     /// Open-loop arrival rate, requests/sec. Non-finite or ≤ 0 means
     /// "saturated": every request is due at t = 0.
     pub rate: f64,
-    /// Total requests offered to the engine.
+    /// Total requests offered to the engine ([`run_fleet`] uses the
+    /// per-member counts instead).
     pub requests: usize,
     /// Maximum requests per batch; also the fixed artifact batch size that
     /// the padded dispatch path pads partial batches to.
@@ -65,7 +79,8 @@ pub struct EngineOpts {
     /// Batching deadline: how long a worker holds a non-full batch open
     /// waiting for more arrivals, seconds.
     pub max_wait: f64,
-    /// Queue bound; arrivals beyond it are shed (counted, not served).
+    /// Queue bound; *arrivals* beyond it are shed (counted, not served).
+    /// Re-enqueued continuations of admitted requests are exempt.
     pub queue_cap: usize,
     /// Minimum per-batch execution time, seconds (0 = off). A load-shaping
     /// knob for backpressure tests and experiments: the worker sleeps out
@@ -119,21 +134,32 @@ impl EngineOpts {
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     /// Request id; doubles as the eval-stream index the workload
-    /// synthesized the payload from.
+    /// synthesized the payload from. Ids are per fleet member.
     pub id: usize,
-    /// Intended arrival → dequeue into a batch, ms.
+    /// Intended arrival → first dequeue into a batch, ms.
     pub queue_ms: f64,
-    /// Execution time of the batch this request rode in, ms.
+    /// Execution time of the batch carrying this request's *final* step, ms.
     pub exec_ms: f64,
-    /// Intended arrival → completion, ms.
+    /// Intended arrival → completion of the final step, ms.
     pub total_ms: f64,
-    /// Workload prediction (vision: class; text: next-token id).
+    /// Engine steps (batches) this request rode in: 1 for single-shot
+    /// workloads; prefill + decode continuations for generation.
+    pub steps: usize,
+    /// Intended arrival → end of the first step, ms (time-to-first-token
+    /// for generation; == `total_ms` when `steps == 1`).
+    pub first_ms: f64,
+    /// Mean inter-step time, ms — `(total − first) / (steps − 1)`; 0 when
+    /// `steps == 1`. For generation this is the mean inter-token time.
+    pub itl_ms: f64,
+    /// Workload prediction (vision: class; text: next-token id; generation:
+    /// final generated token).
     pub pred: i32,
-    /// Tokens charged to this request (vision: 1; text: prompt length).
+    /// Tokens charged to this request (vision: 1; text: prompt length;
+    /// generation: prompt + generated).
     pub tokens: usize,
 }
 
-/// Aggregate result of one engine run.
+/// Aggregate result of one engine run (per fleet member).
 #[derive(Debug, Clone)]
 pub struct EngineStats {
     pub served: usize,
@@ -146,11 +172,19 @@ pub struct EngineStats {
     /// Mean batch size actually *dispatched* (= artifact batch under the
     /// padded policy; = mean_batch under exact; in between under auto).
     pub mean_dispatch: f64,
+    /// Mean engine steps per served request (1.0 for single-shot
+    /// workloads; prefill + decode steps for generation).
+    pub steps_mean: f64,
     /// p50 / p95 of total per-request latency, ms.
     pub p50_ms: f64,
     pub p95_ms: f64,
     /// p50 queueing delay, ms.
     pub queue_p50_ms: f64,
+    /// p50 time to the end of a request's first step, ms (TTFT for
+    /// generation workloads).
+    pub first_p50_ms: f64,
+    /// Mean inter-step (inter-token) time over multi-step requests, ms.
+    pub itl_mean_ms: f64,
     /// Mean per-batch execution time, ms.
     pub exec_mean_ms: f64,
     /// Served requests per second of wall time.
@@ -162,11 +196,26 @@ pub struct EngineStats {
     pub records: Vec<RequestRecord>,
 }
 
-/// A request sitting in the engine queue.
+/// One model + workload bound into a fleet run (see [`run_fleet`]).
+pub struct FleetMember<'x, 'rt, 'w, W: Workload> {
+    pub exec: &'x Executor<'rt>,
+    pub weights: &'w WeightStore,
+    pub workload: &'x W,
+    /// Requests offered for this member ([`EngineOpts::requests`] is
+    /// ignored by [`run_fleet`]).
+    pub requests: usize,
+}
+
+/// A request (or a re-enqueued continuation) sitting in the engine queue.
 #[cfg(not(pjrt_backend))]
 struct Queued {
+    unit: usize,
     id: usize,
     arrival: Instant,
+    /// Steps completed so far.
+    steps: usize,
+    first_deq: Option<Instant>,
+    first_done: Option<Instant>,
 }
 
 /// Queue state shared between the generator and the workers.
@@ -174,21 +223,34 @@ struct Queued {
 struct Shared {
     queue: VecDeque<Queued>,
     closed: bool,
-    shed: usize,
+    /// Shed arrivals, per fleet unit.
+    shed: Vec<usize>,
 }
 
-/// Run the engine: offered load is `opts.requests` workload-synthesized
-/// requests (request id == eval-stream index) at `opts.rate` req/s; returns
-/// per-request accounting plus aggregates. The weight store may be dense,
-/// pruned, or compensated — the batch-polymorphic plan dispatches at
-/// whatever shapes it finds, and the workload decides what a request *is*.
+/// A type-erased fleet unit: the workload, its resolved plans, and its
+/// pre-synthesized payloads, closed over a step function so units with
+/// different `Workload::Req` types share one queue and one worker pool.
 #[cfg(not(pjrt_backend))]
-pub fn run_engine<W: Workload>(
-    exec: &Executor<'_>,
-    w: &WeightStore,
-    workload: &W,
-    opts: &EngineOpts,
-) -> Result<EngineStats> {
+struct Unit<'s> {
+    label: &'static str,
+    requests: usize,
+    policy: DispatchPolicy,
+    #[allow(clippy::type_complexity)]
+    step: Box<dyn Fn(&[usize], usize) -> Result<Vec<StepOutcome>> + Sync + 's>,
+}
+
+/// Build one unit: resolve the plans, pre-synthesize every payload (request
+/// id == eval-stream index, so data synthesis never pollutes the timed
+/// region), and warm the dispatch path before the clock starts.
+#[cfg(not(pjrt_backend))]
+fn make_unit<'s, W: Workload>(
+    exec: &Executor<'s>,
+    w: &'s WeightStore,
+    workload: &'s W,
+    requests: usize,
+    max_batch: usize,
+    policy: DispatchPolicy,
+) -> Result<Unit<'s>> {
     let cfg = exec.cfg;
     if workload.cfg() != cfg {
         bail!(
@@ -198,28 +260,122 @@ pub fn run_engine<W: Workload>(
             cfg.name
         );
     }
-    opts.validate()?;
-    let b_art = opts.max_batch;
-    let workers = opts.workers;
-    let policy = opts.dispatch.resolve(exec.rt.prefers_fixed_shapes());
-    let plan = exec.forward_plan(w)?;
-
-    // Pre-synthesize every request's payload so data synthesis never
-    // pollutes the timed region (request id == eval-stream index).
-    let payloads: Vec<W::Req> = threads::parallel_map(opts.requests, |i| workload.synth(i));
+    // Resolve exactly the plan the workload dispatches through: decode
+    // workloads never touch the full-forward plan (the decode plan owns its
+    // own prefill fallback), and resolving both would shape-check every
+    // parameter twice and warm names that are never dispatched.
+    let plans = match workload.decode() {
+        Some(mode) => Plans {
+            fwd: None,
+            dec: Some(exec.decode_plan_with(w, mode.resolve(exec.rt.prefers_fixed_shapes()))?),
+        },
+        None => Plans { fwd: Some(exec.forward_plan(w)?), dec: None },
+    };
+    let payloads: Vec<W::Req> = threads::parallel_map(requests, |i| workload.synth(i));
 
     // Warmup before the clock starts: run the full artifact batch AND batch
     // size 1 (first-touch allocation, PJRT compilation when gated in), and
-    // under exact/auto dispatch pre-populate the plan's artifact-name cache
-    // for every size a batch could dispatch at — so no batch pays first-use
-    // name formatting inside its timed region.
+    // under exact/auto dispatch pre-populate the plans' artifact-name
+    // caches for every size a batch could dispatch at — so no batch pays
+    // first-use name formatting inside its timed region. Warm payloads are
+    // synthesized *past* the request id range: multi-step workloads carry
+    // per-request state, and warmup must never pre-advance a real request.
     {
-        let warm: Vec<&W::Req> = payloads.iter().take(b_art).collect();
-        workload.run_batch(&plan, &warm, b_art)?;
+        let warm: Vec<W::Req> = (0..max_batch + 1).map(|i| workload.synth(requests + i)).collect();
+        let refs: Vec<&W::Req> = warm.iter().take(max_batch).collect();
+        workload.run_step(&plans, &refs, max_batch)?;
         if policy != DispatchPolicy::Padded {
-            workload.run_batch(&plan, &warm[..1], 1)?;
-            for b in 1..=b_art {
-                plan.artifact(b);
+            workload.run_step(&plans, &[&warm[max_batch]], 1)?;
+            for b in 1..=max_batch {
+                if let Some(f) = &plans.fwd {
+                    f.artifact(b);
+                }
+                if let Some(d) = &plans.dec {
+                    d.warm_names(b);
+                }
+            }
+        } else if let Some(d) = &plans.dec {
+            d.warm_names(max_batch);
+        }
+    }
+
+    Ok(Unit {
+        label: workload.label(),
+        requests,
+        policy,
+        step: Box::new(move |ids: &[usize], dispatch: usize| {
+            let reqs: Vec<&W::Req> = ids.iter().map(|&i| &payloads[i]).collect();
+            workload.run_step(&plans, &reqs, dispatch)
+        }),
+    })
+}
+
+/// Run the engine: offered load is `opts.requests` workload-synthesized
+/// requests (request id == eval-stream index) at `opts.rate` req/s; returns
+/// per-request accounting plus aggregates. The weight store may be dense,
+/// pruned, or compensated — the batch-polymorphic plans dispatch at
+/// whatever shapes they find, and the workload decides what a request *is*
+/// (including multi-step generation via re-enqueued continuations).
+#[cfg(not(pjrt_backend))]
+pub fn run_engine<W: Workload>(
+    exec: &Executor<'_>,
+    w: &WeightStore,
+    workload: &W,
+    opts: &EngineOpts,
+) -> Result<EngineStats> {
+    opts.validate()?;
+    let policy = opts.dispatch.resolve(exec.rt.prefers_fixed_shapes());
+    let unit = make_unit(exec, w, workload, opts.requests, opts.max_batch, policy)?;
+    let mut stats = run_units(vec![unit], opts)?;
+    Ok(stats.remove(0))
+}
+
+/// Run two workloads — possibly over different models — through one queue
+/// and one worker pool: a mixed fleet. Member arrivals interleave
+/// round-robin (a.0, b.0, a.1, b.1, …) on one seeded Poisson schedule;
+/// workers form single-unit batches, so a dispatch never mixes models.
+/// Returns per-member stats in argument order. Per-example math makes each
+/// member's outputs identical to a single-workload [`run_engine`] run with
+/// the same seeds — asserted by `tests/serve_engine`.
+#[cfg(not(pjrt_backend))]
+pub fn run_fleet<A: Workload, B: Workload>(
+    a: FleetMember<'_, '_, '_, A>,
+    b: FleetMember<'_, '_, '_, B>,
+    opts: &EngineOpts,
+) -> Result<[EngineStats; 2]> {
+    EngineOpts { requests: a.requests + b.requests, ..opts.clone() }.validate()?;
+    if a.requests == 0 || b.requests == 0 {
+        bail!("run_fleet: every member needs at least one request");
+    }
+    let pa = opts.dispatch.resolve(a.exec.rt.prefers_fixed_shapes());
+    let pb = opts.dispatch.resolve(b.exec.rt.prefers_fixed_shapes());
+    let ua = make_unit(a.exec, a.weights, a.workload, a.requests, opts.max_batch, pa)?;
+    let ub = make_unit(b.exec, b.weights, b.workload, b.requests, opts.max_batch, pb)?;
+    let mut stats = run_units(vec![ua, ub], opts)?;
+    let sb = stats.remove(1);
+    let sa = stats.remove(0);
+    Ok([sa, sb])
+}
+
+/// The shared queueing/batching core: one generator, one bounded queue, one
+/// worker pool over any number of type-erased units.
+#[cfg(not(pjrt_backend))]
+fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>> {
+    let b_art = opts.max_batch;
+    let workers = opts.workers;
+    let total: usize = units.iter().map(|u| u.requests).sum();
+
+    // Deterministic round-robin interleave of unit arrivals: (unit, id)
+    // pairs in offered order, independent of timing.
+    let mut order: Vec<(usize, usize)> = Vec::with_capacity(total);
+    {
+        let mut issued = vec![0usize; units.len()];
+        while order.len() < total {
+            for (u, unit) in units.iter().enumerate() {
+                if issued[u] < unit.requests {
+                    order.push((u, issued[u]));
+                    issued[u] += 1;
+                }
             }
         }
     }
@@ -227,25 +383,26 @@ pub fn run_engine<W: Workload>(
     // Seeded Poisson arrival offsets (seconds from engine start).
     let rate = if opts.rate.is_finite() && opts.rate > 0.0 { opts.rate } else { f64::INFINITY };
     let mut rng = Pcg64::new(opts.seed);
-    let mut arrivals = Vec::with_capacity(opts.requests);
+    let mut arrivals = Vec::with_capacity(total);
     let mut t = 0.0f64;
-    for _ in 0..opts.requests {
+    for _ in 0..total {
         t += -rng.uniform().max(1e-12).ln() / rate;
         arrivals.push(t);
     }
 
-    let shared = Mutex::new(Shared { queue: VecDeque::new(), closed: false, shed: 0 });
+    let shared =
+        Mutex::new(Shared { queue: VecDeque::new(), closed: false, shed: vec![0; units.len()] });
     let cv = Condvar::new();
-    let results: Mutex<Vec<RequestRecord>> = Mutex::new(Vec::with_capacity(opts.requests));
-    // Per executed batch: (requests carried, dispatch size, execution ms).
-    let batches: Mutex<Vec<(usize, usize, f64)>> = Mutex::new(Vec::new());
+    let results: Mutex<Vec<Vec<RequestRecord>>> = Mutex::new(vec![Vec::new(); units.len()]);
+    // Per executed batch: (unit, requests carried, dispatch size, exec ms).
+    let batches: Mutex<Vec<(usize, usize, usize, f64)>> = Mutex::new(Vec::new());
     let wait_dur = Duration::from_secs_f64(opts.max_wait.max(0.0));
     let wall0 = Instant::now();
 
     std::thread::scope(|s| -> Result<()> {
         // ---- open-loop generator ----
         s.spawn(|| {
-            'replay: for (id, &at) in arrivals.iter().enumerate() {
+            'replay: for (&(unit, id), &at) in order.iter().zip(&arrivals) {
                 loop {
                     // A failed worker poisons the run by setting `closed`;
                     // stop replaying the schedule so the error surfaces
@@ -264,11 +421,15 @@ pub fn run_engine<W: Workload>(
                     break 'replay;
                 }
                 if g.queue.len() >= opts.queue_cap {
-                    g.shed += 1;
+                    g.shed[unit] += 1;
                 } else {
                     g.queue.push_back(Queued {
+                        unit,
                         id,
                         arrival: wall0 + Duration::from_secs_f64(at),
+                        steps: 0,
+                        first_deq: None,
+                        first_done: None,
                     });
                     cv.notify_one();
                 }
@@ -298,13 +459,18 @@ pub fn run_engine<W: Workload>(
                                 g = cv.wait(g).unwrap();
                             }
                             // Hold the batch open until full, closed, or the
-                            // batching deadline expires.
+                            // batching deadline expires — draining only
+                            // requests of the head's unit (a batch never
+                            // mixes models).
+                            let unit = batch[0].unit;
                             let deadline = Instant::now() + wait_dur;
-                            while batch.len() < b_art {
-                                while batch.len() < b_art {
-                                    match g.queue.pop_front() {
-                                        Some(q) => batch.push(q),
-                                        None => break,
+                            loop {
+                                let mut i = 0;
+                                while batch.len() < b_art && i < g.queue.len() {
+                                    if g.queue[i].unit == unit {
+                                        batch.push(g.queue.remove(i).expect("indexed item"));
+                                    } else {
+                                        i += 1;
                                     }
                                 }
                                 if batch.len() >= b_art || g.closed {
@@ -323,11 +489,16 @@ pub fn run_engine<W: Workload>(
                                 cv.notify_one();
                             }
                         }
+                        let unit = batch[0].unit;
                         let take = batch.len();
-                        let dispatch = policy.dispatch_size(take, b_art);
+                        let dispatch = units[unit].policy.dispatch_size(take, b_art);
                         let t_deq = Instant::now();
-                        let inputs: Vec<&W::Req> =
-                            batch.iter().map(|q| &payloads[q.id]).collect();
+                        for q in batch.iter_mut() {
+                            if q.first_deq.is_none() {
+                                q.first_deq = Some(t_deq);
+                            }
+                        }
+                        let ids: Vec<usize> = batch.iter().map(|q| q.id).collect();
                         // On any workload failure, poison the run (`closed`
                         // stops the generator's replay and drains the other
                         // workers) so the error surfaces promptly instead
@@ -336,22 +507,21 @@ pub fn run_engine<W: Workload>(
                             shared.lock().unwrap().closed = true;
                             cv.notify_all();
                         };
-                        let outs: Vec<RequestOutput> =
-                            match workload.run_batch(&plan, &inputs, dispatch) {
-                                Ok(outs) => outs,
-                                Err(e) => {
-                                    poison();
-                                    return Err(e);
-                                }
-                            };
+                        let outs: Vec<StepOutcome> = match (units[unit].step)(&ids, dispatch) {
+                            Ok(outs) => outs,
+                            Err(e) => {
+                                poison();
+                                return Err(e);
+                            }
+                        };
                         if outs.len() != batch.len() {
                             // Fail fast on a broken Workload impl rather
-                            // than silently dropping records in the zip
-                            // below (served + shed == requests must hold).
+                            // than silently dropping records (served + shed
+                            // == requests must hold per unit).
                             poison();
                             bail!(
-                                "workload '{}' returned {} outputs for a batch of {}",
-                                workload.label(),
+                                "workload '{}' returned {} outcomes for a batch of {}",
+                                units[unit].label,
                                 outs.len(),
                                 batch.len()
                             );
@@ -367,23 +537,62 @@ pub fn run_engine<W: Workload>(
                         let t_done = Instant::now();
                         let exec_ms =
                             t_done.saturating_duration_since(t_deq).as_secs_f64() * 1e3;
-                        let mut recs = results.lock().unwrap();
-                        for (q, out) in batch.iter().zip(&outs) {
-                            recs.push(RequestRecord {
-                                id: q.id,
-                                queue_ms: t_deq.saturating_duration_since(q.arrival).as_secs_f64()
-                                    * 1e3,
-                                exec_ms,
-                                total_ms: t_done
-                                    .saturating_duration_since(q.arrival)
-                                    .as_secs_f64()
-                                    * 1e3,
-                                pred: out.pred,
-                                tokens: out.tokens,
-                            });
+                        let mut requeue: Vec<Queued> = Vec::new();
+                        {
+                            let mut recs = results.lock().unwrap();
+                            for (mut q, out) in batch.into_iter().zip(outs) {
+                                q.steps += 1;
+                                if q.first_done.is_none() {
+                                    q.first_done = Some(t_done);
+                                }
+                                match out {
+                                    StepOutcome::Done(o) => {
+                                        let first = q.first_done.expect("set above");
+                                        let first_ms = first
+                                            .saturating_duration_since(q.arrival)
+                                            .as_secs_f64()
+                                            * 1e3;
+                                        let total_ms = t_done
+                                            .saturating_duration_since(q.arrival)
+                                            .as_secs_f64()
+                                            * 1e3;
+                                        recs[q.unit].push(RequestRecord {
+                                            id: q.id,
+                                            queue_ms: q
+                                                .first_deq
+                                                .expect("set above")
+                                                .saturating_duration_since(q.arrival)
+                                                .as_secs_f64()
+                                                * 1e3,
+                                            exec_ms,
+                                            total_ms,
+                                            steps: q.steps,
+                                            first_ms,
+                                            itl_ms: if q.steps > 1 {
+                                                (total_ms - first_ms) / (q.steps - 1) as f64
+                                            } else {
+                                                0.0
+                                            },
+                                            pred: o.pred,
+                                            tokens: o.tokens,
+                                        });
+                                    }
+                                    StepOutcome::Continue => requeue.push(q),
+                                }
+                            }
                         }
-                        drop(recs);
-                        batches.lock().unwrap().push((take, dispatch, exec_ms));
+                        batches.lock().unwrap().push((unit, take, dispatch, exec_ms));
+                        if !requeue.is_empty() {
+                            // Continuations of admitted requests bypass the
+                            // queue bound: shedding one mid-generation would
+                            // strand its state and break served + shed
+                            // accounting.
+                            let mut g = shared.lock().unwrap();
+                            for q in requeue {
+                                g.queue.push_back(q);
+                            }
+                            cv.notify_one();
+                        }
                     }
                 })
             })
@@ -395,43 +604,63 @@ pub fn run_engine<W: Workload>(
     })?;
 
     let total_s = wall0.elapsed().as_secs_f64();
-    let shed = shared.lock().unwrap().shed;
-    let mut records = results.into_inner().unwrap();
-    records.sort_by_key(|r| r.id);
+    let shed = std::mem::take(&mut shared.lock().unwrap().shed);
+    let per_unit = results.into_inner().unwrap();
     let batch_log = batches.into_inner().unwrap();
 
-    let mut totals: Vec<f64> = records.iter().map(|r| r.total_ms).collect();
-    totals.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mut queues: Vec<f64> = records.iter().map(|r| r.queue_ms).collect();
-    queues.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n_batches = batch_log.len();
-    let tokens: usize = records.iter().map(|r| r.tokens).sum();
-    Ok(EngineStats {
-        served: records.len(),
-        shed,
-        batches: n_batches,
-        mean_batch: if n_batches == 0 {
-            0.0
-        } else {
-            batch_log.iter().map(|&(take, _, _)| take).sum::<usize>() as f64 / n_batches as f64
-        },
-        mean_dispatch: if n_batches == 0 {
-            0.0
-        } else {
-            batch_log.iter().map(|&(_, d, _)| d).sum::<usize>() as f64 / n_batches as f64
-        },
-        p50_ms: if totals.is_empty() { 0.0 } else { percentile(&totals, 0.50) },
-        p95_ms: if totals.is_empty() { 0.0 } else { percentile(&totals, 0.95) },
-        queue_p50_ms: if queues.is_empty() { 0.0 } else { percentile(&queues, 0.50) },
-        exec_mean_ms: if n_batches == 0 {
-            0.0
-        } else {
-            batch_log.iter().map(|&(_, _, ms)| ms).sum::<f64>() / n_batches as f64
-        },
-        throughput_fps: records.len() as f64 / total_s.max(1e-12),
-        throughput_tps: tokens as f64 / total_s.max(1e-12),
-        records,
-    })
+    let mut out = Vec::with_capacity(units.len());
+    for (u, mut records) in per_unit.into_iter().enumerate() {
+        records.sort_by_key(|r| r.id);
+        let mut totals: Vec<f64> = records.iter().map(|r| r.total_ms).collect();
+        totals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut queues: Vec<f64> = records.iter().map(|r| r.queue_ms).collect();
+        queues.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut firsts: Vec<f64> = records.iter().map(|r| r.first_ms).collect();
+        firsts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let multi: Vec<&RequestRecord> = records.iter().filter(|r| r.steps > 1).collect();
+        let ub: Vec<&(usize, usize, usize, f64)> =
+            batch_log.iter().filter(|&&(bu, _, _, _)| bu == u).collect();
+        let n_batches = ub.len();
+        let tokens: usize = records.iter().map(|r| r.tokens).sum();
+        out.push(EngineStats {
+            served: records.len(),
+            shed: shed[u],
+            batches: n_batches,
+            mean_batch: if n_batches == 0 {
+                0.0
+            } else {
+                ub.iter().map(|&&(_, take, _, _)| take).sum::<usize>() as f64 / n_batches as f64
+            },
+            mean_dispatch: if n_batches == 0 {
+                0.0
+            } else {
+                ub.iter().map(|&&(_, _, d, _)| d).sum::<usize>() as f64 / n_batches as f64
+            },
+            steps_mean: if records.is_empty() {
+                0.0
+            } else {
+                records.iter().map(|r| r.steps).sum::<usize>() as f64 / records.len() as f64
+            },
+            p50_ms: if totals.is_empty() { 0.0 } else { percentile(&totals, 0.50) },
+            p95_ms: if totals.is_empty() { 0.0 } else { percentile(&totals, 0.95) },
+            queue_p50_ms: if queues.is_empty() { 0.0 } else { percentile(&queues, 0.50) },
+            first_p50_ms: if firsts.is_empty() { 0.0 } else { percentile(&firsts, 0.50) },
+            itl_mean_ms: if multi.is_empty() {
+                0.0
+            } else {
+                multi.iter().map(|r| r.itl_ms).sum::<f64>() / multi.len() as f64
+            },
+            exec_mean_ms: if n_batches == 0 {
+                0.0
+            } else {
+                ub.iter().map(|&&(_, _, _, ms)| ms).sum::<f64>() / n_batches as f64
+            },
+            throughput_fps: records.len() as f64 / total_s.max(1e-12),
+            throughput_tps: tokens as f64 / total_s.max(1e-12),
+            records,
+        });
+    }
+    Ok(out)
 }
 
 /// Deliberate compile-out for the `--cfg pjrt_backend` build: the engine
@@ -448,6 +677,20 @@ pub fn run_engine<W: Workload>(
     _workload: &W,
     _opts: &EngineOpts,
 ) -> Result<EngineStats> {
+    bail!(
+        "the concurrent serving engine is unavailable in the pjrt_backend build \
+         (PJRT executables are not shared across threads); use serve::measure"
+    )
+}
+
+/// Stub mirror of the fleet entry point for the gated build (see
+/// [`run_engine`] above).
+#[cfg(pjrt_backend)]
+pub fn run_fleet<A: Workload, B: Workload>(
+    _a: FleetMember<'_, '_, '_, A>,
+    _b: FleetMember<'_, '_, '_, B>,
+    _opts: &EngineOpts,
+) -> Result<[EngineStats; 2]> {
     bail!(
         "the concurrent serving engine is unavailable in the pjrt_backend build \
          (PJRT executables are not shared across threads); use serve::measure"

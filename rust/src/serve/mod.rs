@@ -14,19 +14,26 @@
 //!   `max_batch` under a batching deadline and dispatching them padded or
 //!   at their exact size per the [`DispatchPolicy`], with per-request
 //!   queueing/execution/token accounting and load shedding when the queue
-//!   is full. See [`engine::run_engine`].
+//!   is full. Multi-step requests (autoregressive generation via
+//!   [`GenWorkload`] + the KV-cached [`crate::exec::DecodePlan`]) are
+//!   re-enqueued between steps so decode steps from different sequences
+//!   batch together, and [`engine::run_fleet`] serves two workloads —
+//!   possibly over different models — through one queue. See
+//!   [`engine::run_engine`].
 //!
 //! The engine shares one `Runtime` across workers — the native backend is
 //! pure Rust and thread-safe. The gated PJRT path stays on the closed-loop
-//! `measure` (its executables are not shared across threads) and on padded
-//! fixed-shape dispatch (its artifacts are lowered at one batch size).
+//! `measure` (its executables are not shared across threads), on padded
+//! fixed-shape dispatch (its artifacts are lowered at one batch size), and
+//! on prefill-per-step decode (no `dec_*` AOT lowering).
 
 pub mod engine;
 pub mod workload;
 
-pub use engine::{run_engine, EngineOpts, EngineStats, RequestRecord};
+pub use engine::{run_engine, run_fleet, EngineOpts, EngineStats, FleetMember, RequestRecord};
 pub use workload::{
-    DispatchPolicy, GptWorkload, RequestOutput, TextRequest, VisionWorkload, Workload,
+    default_min_prompt, DispatchPolicy, GenRequest, GenWorkload, GptWorkload, Plans,
+    RequestOutput, StepOutcome, TextRequest, VisionWorkload, Workload,
 };
 
 use anyhow::Result;

@@ -5,9 +5,10 @@
 //! (how queued requests become one fused dispatch), and per-request output
 //! accounting (what each request is charged and what it predicted). The
 //! queueing/batching core is written once; [`VisionWorkload`] (one image
-//! per request, Table-5-style classification serving) and [`GptWorkload`]
+//! per request, Table-5-style classification serving), [`GptWorkload`]
 //! (prompt-length request model with per-token accounting, the paper's OPT
-//! deployment analogue) are the two scenarios.
+//! deployment analogue), and [`GenWorkload`] (autoregressive generation on
+//! the KV-cached decode path) are the scenarios.
 //!
 //! [`DispatchPolicy`] decides the *shape* each formed batch dispatches at:
 //! padded to the fixed artifact batch (shape reuse — what a compiled
@@ -15,24 +16,24 @@
 //! backend does proportionally less arithmetic), or `auto`, which picks
 //! exact-size dispatch below a fill-ratio threshold and padded shape reuse
 //! above it.
+//!
+//! The engine drives every scenario through one method,
+//! [`Workload::run_step`]: a step either finishes a request
+//! ([`StepOutcome::Done`]) or asks the engine to re-enqueue it
+//! ([`StepOutcome::Continue`]), so decode steps from *different* sequences
+//! batch together in later engine batches. Single-shot workloads finish
+//! every request in its first step; [`GenWorkload`] is the multi-step
+//! generation scenario.
 
-use anyhow::{bail, Result};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
 
 use crate::data::{Split, TextGen, VisionGen};
-use crate::exec::ForwardPlan;
+use crate::exec::{argmax, DecodeMode, DecodePlan, DecodeState, ForwardPlan};
 use crate::model::{ModelConfig, ModelKind};
 use crate::tensor::Tensor;
-
-/// First-max argmax over a logits row.
-pub(crate) fn argmax(row: &[f32]) -> i32 {
-    let mut best = 0usize;
-    for (j, &v) in row.iter().enumerate() {
-        if v > row[best] {
-            best = j;
-        }
-    }
-    best as i32
-}
+use crate::util::Pcg64;
 
 /// How a formed batch of `take ≤ max_batch` requests is dispatched.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -103,15 +104,50 @@ impl DispatchPolicy {
     }
 }
 
-/// Per-request output accounting, produced by [`Workload::run_batch`].
+/// Per-request output accounting, carried by [`StepOutcome::Done`].
 #[derive(Debug, Clone, Copy)]
 pub struct RequestOutput {
     /// Argmax prediction — vision: the logits row's class; text: the vocab
-    /// argmax at the prompt's final position (the next-token prediction).
+    /// argmax at the prompt's final position (the next-token prediction);
+    /// generation: the final generated token.
     pub pred: i32,
     /// Tokens this request is accounted (vision: 1 image; text: the prompt
-    /// length), so throughput can be reported per token, not per request.
+    /// length; generation: prompt + generated), so throughput can be
+    /// reported per token, not per request.
     pub tokens: usize,
+}
+
+/// Outcome of one engine step for one request.
+#[derive(Debug, Clone, Copy)]
+pub enum StepOutcome {
+    /// The request finished this step; record its output.
+    Done(RequestOutput),
+    /// The request has more steps (e.g. decode tokens left); the engine
+    /// re-enqueues it so its next step batches with other requests.
+    Continue,
+}
+
+/// The resolved dispatch plans the engine hands every [`Workload::run_step`].
+/// Exactly the plan the workload declared is built: the batch-polymorphic
+/// full forward for single-shot workloads, the incremental decode plan for
+/// workloads with a [`Workload::decode`] mode — the other stays `None`
+/// (resolving both would shape-check every parameter tensor twice and warm
+/// artifact names that are never dispatched).
+pub struct Plans<'rt, 'w> {
+    pub fwd: Option<ForwardPlan<'rt, 'w>>,
+    pub dec: Option<DecodePlan<'rt, 'w>>,
+}
+
+impl<'rt, 'w> Plans<'rt, 'w> {
+    /// The full-forward plan, or a clear error for an engine mismatch.
+    pub fn fwd(&self) -> Result<&ForwardPlan<'rt, 'w>> {
+        self.fwd.as_ref().context("workload needs a forward plan but the engine built none")
+    }
+
+    /// The decode plan, or a clear error for a workload/engine mismatch.
+    pub fn dec(&self) -> Result<&DecodePlan<'rt, 'w>> {
+        self.dec.as_ref().context("workload needs a decode plan but the engine built none")
+    }
 }
 
 /// A serving scenario: request synthesis, batch input assembly, and
@@ -134,17 +170,42 @@ pub trait Workload: Sync {
     /// so results are reproducible and comparable across runs).
     fn synth(&self, id: usize) -> Self::Req;
 
-    /// Assemble `reqs` into one fused dispatch at batch size
-    /// `dispatch ≥ reqs.len()` (rows past `reqs.len()` are zero padding,
-    /// whose outputs are dropped) and return one [`RequestOutput`] per
-    /// request, in order. Per-example math makes the outputs independent of
+    /// The decode mode this workload drives, or `None` for single-shot
+    /// workloads (the engine then skips building a [`DecodePlan`]). The
+    /// engine resolves the mode against the runtime's shape preference.
+    fn decode(&self) -> Option<DecodeMode> {
+        None
+    }
+
+    /// One engine step over a formed batch: assemble `reqs` into one fused
+    /// dispatch at batch size `dispatch ≥ reqs.len()` (rows past
+    /// `reqs.len()` are inert padding) and return one [`StepOutcome`] per
+    /// request, in order — [`StepOutcome::Done`] to record the request,
+    /// [`StepOutcome::Continue`] to have the engine re-enqueue it for a
+    /// later step. Per-example math makes the outcomes independent of
     /// `dispatch`, batch composition, and worker count — asserted by tests.
-    fn run_batch(
+    fn run_step(
         &self,
-        plan: &ForwardPlan<'_, '_>,
+        plans: &Plans<'_, '_>,
         reqs: &[&Self::Req],
         dispatch: usize,
-    ) -> Result<Vec<RequestOutput>>;
+    ) -> Result<Vec<StepOutcome>>;
+}
+
+/// Wrap a single-shot batch's outputs: every request finishes in one step.
+fn all_done(outs: Vec<RequestOutput>) -> Vec<StepOutcome> {
+    outs.into_iter().map(StepOutcome::Done).collect()
+}
+
+/// Default minimum prompt length of the text serving mixes (shared by
+/// [`GptWorkload`], [`GenWorkload`], and `corp generate`): an eighth of the
+/// context floored at 4 tokens, so tiny configs still vary.
+pub fn default_min_prompt(cfg: &ModelConfig) -> usize {
+    if cfg.n_ctx < 4 {
+        cfg.n_ctx
+    } else {
+        (cfg.n_ctx / 8).max(4)
+    }
 }
 
 /// Image-classification serving: one eval-stream image per request.
@@ -160,20 +221,10 @@ impl VisionWorkload {
         }
         Ok(Self { cfg, gen: VisionGen::new(seed) })
     }
-}
 
-impl Workload for VisionWorkload {
-    /// One image's patch tokens, flat `[patches * patch_dim]`.
-    type Req = Vec<f32>;
-
-    fn cfg(&self) -> &'static ModelConfig {
-        self.cfg
-    }
-
-    fn synth(&self, id: usize) -> Vec<f32> {
-        self.gen.batch(Split::Eval, id as u64, 1).0.into_vec()
-    }
-
+    /// One fused classification dispatch (rows past `reqs.len()` are zero
+    /// padding whose outputs are dropped): one [`RequestOutput`] per
+    /// request, in order.
     fn run_batch(
         &self,
         plan: &ForwardPlan<'_, '_>,
@@ -200,6 +251,28 @@ impl Workload for VisionWorkload {
     }
 }
 
+impl Workload for VisionWorkload {
+    /// One image's patch tokens, flat `[patches * patch_dim]`.
+    type Req = Vec<f32>;
+
+    fn cfg(&self) -> &'static ModelConfig {
+        self.cfg
+    }
+
+    fn synth(&self, id: usize) -> Vec<f32> {
+        self.gen.batch(Split::Eval, id as u64, 1).0.into_vec()
+    }
+
+    fn run_step(
+        &self,
+        plans: &Plans<'_, '_>,
+        reqs: &[&Vec<f32>],
+        dispatch: usize,
+    ) -> Result<Vec<StepOutcome>> {
+        Ok(all_done(self.run_batch(plans.fwd()?, reqs, dispatch)?))
+    }
+}
+
 /// LM serving with a prompt-length request model: request `id` is an
 /// eval-stream prompt of deterministic length in `[min_prompt, n_ctx]`
 /// ([`TextGen::prompt`]); accounting is per token, and the prediction is
@@ -215,10 +288,7 @@ impl GptWorkload {
         if cfg.kind != ModelKind::Gpt {
             bail!("GptWorkload on model '{}' (kind {:?})", cfg.name, cfg.kind);
         }
-        // Default arrival mix: prompts of 1/8th context up to full context
-        // (floored at 4 tokens so tiny configs still vary).
-        let min_prompt = if cfg.n_ctx < 4 { cfg.n_ctx } else { (cfg.n_ctx / 8).max(4) };
-        Ok(Self { cfg, gen: TextGen::new(seed), min_prompt })
+        Ok(Self { cfg, gen: TextGen::new(seed), min_prompt: default_min_prompt(cfg) })
     }
 
     /// Override the minimum prompt length of the arrival mix.
@@ -227,29 +297,10 @@ impl GptWorkload {
         self.min_prompt = min_prompt;
         self
     }
-}
 
-/// One LM request: fixed-width ids (prompt + zero padding) and the true
-/// prompt length the request is accounted at.
-pub struct TextRequest {
-    /// `[n_ctx]` ids; positions `>= prompt_len` are padding the causal mask
-    /// keeps out of the prompt's logits.
-    pub ids: Vec<i32>,
-    pub prompt_len: usize,
-}
-
-impl Workload for GptWorkload {
-    type Req = TextRequest;
-
-    fn cfg(&self) -> &'static ModelConfig {
-        self.cfg
-    }
-
-    fn synth(&self, id: usize) -> TextRequest {
-        let (ids, prompt_len) = self.gen.prompt(id as u64, self.cfg.n_ctx, self.min_prompt);
-        TextRequest { ids, prompt_len }
-    }
-
+    /// One fused prompt-scoring dispatch (rows past `reqs.len()` are zero
+    /// padding the causal mask keeps inert): one [`RequestOutput`] per
+    /// request, in order.
     fn run_batch(
         &self,
         plan: &ForwardPlan<'_, '_>,
@@ -284,16 +335,204 @@ impl Workload for GptWorkload {
     }
 }
 
+/// One LM request: fixed-width ids (prompt + zero padding) and the true
+/// prompt length the request is accounted at.
+pub struct TextRequest {
+    /// `[n_ctx]` ids; positions `>= prompt_len` are padding the causal mask
+    /// keeps out of the prompt's logits.
+    pub ids: Vec<i32>,
+    pub prompt_len: usize,
+}
+
+impl Workload for GptWorkload {
+    type Req = TextRequest;
+
+    fn cfg(&self) -> &'static ModelConfig {
+        self.cfg
+    }
+
+    fn synth(&self, id: usize) -> TextRequest {
+        let (ids, prompt_len) = self.gen.prompt(id as u64, self.cfg.n_ctx, self.min_prompt);
+        TextRequest { ids, prompt_len }
+    }
+
+    fn run_step(
+        &self,
+        plans: &Plans<'_, '_>,
+        reqs: &[&TextRequest],
+        dispatch: usize,
+    ) -> Result<Vec<StepOutcome>> {
+        Ok(all_done(self.run_batch(plans.fwd()?, reqs, dispatch)?))
+    }
+}
+
+/// Autoregressive generation serving: request `id` is an eval-stream prompt
+/// plus a deterministic per-id target length; every engine step advances
+/// the sequence by one fused [`DecodePlan::extend_at`] dispatch (the first
+/// step prefills the whole prompt, later steps decode the fed-back greedy
+/// argmax token), and unfinished requests return [`StepOutcome::Continue`]
+/// so their next decode step batches with *other* sequences — the
+/// continuation-re-enqueue batching model. Accounting is per token
+/// (prompt + generated); the prediction is the final generated token.
+pub struct GenWorkload {
+    cfg: &'static ModelConfig,
+    gen: TextGen,
+    seed: u64,
+    min_prompt: usize,
+    max_new: usize,
+    mode: DecodeMode,
+}
+
+/// One generation request: the true (unpadded) prompt, the target number
+/// of generated tokens, and the interior per-sequence decode state the
+/// steps advance. A request is in at most one in-flight batch at a time
+/// (the engine re-enqueues it only after its step completes), so the lock
+/// is uncontended.
+pub struct GenRequest {
+    /// Prompt ids, length `prompt_len` (no padding).
+    pub prompt: Vec<i32>,
+    pub prompt_len: usize,
+    /// Greedy tokens to generate (≥ 1); the request finishes after this
+    /// many predictions.
+    pub target_new: usize,
+    state: Mutex<GenState>,
+}
+
+struct GenState {
+    dec: Option<DecodeState>,
+    /// Last predicted token — the next step's input.
+    next: i32,
+    /// Predictions made so far.
+    produced: usize,
+}
+
+impl GenWorkload {
+    pub fn new(cfg: &'static ModelConfig, seed: u64) -> Result<Self> {
+        if cfg.kind != ModelKind::Gpt {
+            bail!("GenWorkload on model '{}' (kind {:?})", cfg.name, cfg.kind);
+        }
+        // Same default arrival mix as GptWorkload; generation targets are
+        // short continuations by default.
+        Ok(Self {
+            cfg,
+            gen: TextGen::new(seed),
+            seed,
+            min_prompt: default_min_prompt(cfg),
+            max_new: 8,
+            mode: DecodeMode::KvCache,
+        })
+    }
+
+    /// Override the maximum generated-token target of the request mix.
+    pub fn with_max_new(mut self, max_new: usize) -> Self {
+        assert!(max_new >= 1 && max_new <= self.cfg.n_ctx);
+        self.max_new = max_new;
+        self
+    }
+
+    /// Override the minimum prompt length of the arrival mix.
+    pub fn with_min_prompt(mut self, min_prompt: usize) -> Self {
+        assert!(min_prompt >= 1 && min_prompt <= self.cfg.n_ctx);
+        self.min_prompt = min_prompt;
+        self
+    }
+
+    /// Pin the decode mode (the bench harness sweeps kv vs prefill).
+    pub fn with_decode(mut self, mode: DecodeMode) -> Self {
+        self.mode = mode;
+        self
+    }
+}
+
+impl Workload for GenWorkload {
+    type Req = GenRequest;
+
+    fn cfg(&self) -> &'static ModelConfig {
+        self.cfg
+    }
+
+    fn label(&self) -> &'static str {
+        "gen"
+    }
+
+    fn decode(&self) -> Option<DecodeMode> {
+        Some(self.mode)
+    }
+
+    fn synth(&self, id: usize) -> GenRequest {
+        let (ids, plen0) = self.gen.prompt(id as u64, self.cfg.n_ctx, self.min_prompt);
+        let mut rng = Pcg64::new(
+            self.seed ^ (id as u64).wrapping_mul(0x9e3779b97f4a7c15) ^ 0x67656e, // "gen"
+        );
+        let target = 1 + rng.below(self.max_new);
+        // The final prediction is never appended, so prompt + target − 1
+        // positions must fit in the context; clamp the prompt, not the
+        // target, so the generation mix stays intact.
+        let plen = plen0.min(self.cfg.n_ctx + 1 - target).max(1);
+        GenRequest {
+            prompt: ids[..plen].to_vec(),
+            prompt_len: plen,
+            target_new: target,
+            state: Mutex::new(GenState { dec: None, next: 0, produced: 0 }),
+        }
+    }
+
+    fn run_step(
+        &self,
+        plans: &Plans<'_, '_>,
+        reqs: &[&GenRequest],
+        dispatch: usize,
+    ) -> Result<Vec<StepOutcome>> {
+        let dec = plans.dec()?;
+        if reqs.is_empty() || dispatch < reqs.len() {
+            bail!("run_step: {} requests into dispatch size {dispatch}", reqs.len());
+        }
+        let mut guards: Vec<_> = reqs.iter().map(|r| r.state.lock().unwrap()).collect();
+        // First step prefills the whole prompt; later steps decode the
+        // fed-back argmax token. Prefills and single-token continuations
+        // batch together (per-sequence lengths ride the dispatch).
+        let toks: Vec<Vec<i32>> = reqs
+            .iter()
+            .zip(guards.iter_mut())
+            .map(|(r, g)| {
+                if g.dec.is_none() {
+                    g.dec = Some(dec.begin());
+                    r.prompt.clone()
+                } else {
+                    vec![g.next]
+                }
+            })
+            .collect();
+        let mut states: Vec<&mut DecodeState> =
+            guards.iter_mut().map(|g| g.dec.as_mut().expect("state initialized above")).collect();
+        let new: Vec<&[i32]> = toks.iter().map(|t| t.as_slice()).collect();
+        let rows = dec.extend_at(&mut states, &new, dispatch)?;
+        drop(states);
+        let vocab = self.cfg.vocab;
+        Ok(reqs
+            .iter()
+            .zip(guards.iter_mut())
+            .zip(rows)
+            .map(|((r, g), row)| {
+                let pred = argmax(&row[row.len() - vocab..]);
+                g.produced += 1;
+                if g.produced >= r.target_new {
+                    StepOutcome::Done(RequestOutput {
+                        pred,
+                        tokens: r.prompt_len + r.target_new,
+                    })
+                } else {
+                    g.next = pred;
+                    StepOutcome::Continue
+                }
+            })
+            .collect())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn argmax_first_max_wins() {
-        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
-        assert_eq!(argmax(&[5.0]), 0);
-        assert_eq!(argmax(&[-2.0, -1.0]), 1);
-    }
 
     #[test]
     fn dispatch_policy_sizes() {
@@ -339,5 +578,37 @@ mod tests {
             assert!((6..=gpt.n_ctx).contains(&r.prompt_len));
             assert!(r.ids[r.prompt_len..].iter().all(|&v| v == 0));
         }
+    }
+
+    #[test]
+    fn gen_workload_synth_respects_context_budget() {
+        let gpt = ModelConfig::by_name("gpt_s").unwrap();
+        let vit = ModelConfig::by_name("vit_t").unwrap();
+        assert!(GenWorkload::new(vit, 0).is_err());
+        let wl = GenWorkload::new(gpt, 17).unwrap().with_max_new(6);
+        assert_eq!(wl.label(), "gen");
+        assert_eq!(wl.decode(), Some(DecodeMode::KvCache));
+        assert_eq!(
+            wl.with_decode(DecodeMode::Prefill).decode(),
+            Some(DecodeMode::Prefill)
+        );
+        let wl = GenWorkload::new(gpt, 17).unwrap().with_max_new(6);
+        let mut targets = Vec::new();
+        for id in 0..16 {
+            let r = wl.synth(id);
+            assert_eq!(r.prompt.len(), r.prompt_len);
+            assert!(r.prompt_len >= 1);
+            assert!((1..=6).contains(&r.target_new));
+            // The final prediction is never appended, so prompt + target − 1
+            // positions must fit.
+            assert!(r.prompt_len + r.target_new - 1 <= gpt.n_ctx);
+            // Deterministic per id.
+            let r2 = wl.synth(id);
+            assert_eq!(r.prompt, r2.prompt);
+            assert_eq!(r.target_new, r2.target_new);
+            targets.push(r.target_new);
+        }
+        // The generation mix is not degenerate.
+        assert!(targets.iter().any(|&t| t != targets[0]));
     }
 }

@@ -1,0 +1,385 @@
+//! Equality harness for every decode path.
+//!
+//! CORP's serving claims only mean something if pruned+compensated decode
+//! provably computes the same function as the reference forward. This
+//! suite pins the KV-cached incremental path (`dec_*` artifacts through
+//! `exec::DecodePlan`) against the full-prefill `run_gpt` forward,
+//! token-for-token, on dense, pruned, and compensated gpt_s — across
+//! prompt lengths (1, mid, `n_ctx − 1`), batch sizes (1 and batched, with
+//! mixed prefill + continuation dispatches), decode modes (kv vs
+//! prefill-per-step), engine worker counts, and dispatch policies. It also
+//! carries the causal-mask regression probe: poisoned future tokens and
+//! poisoned cache padding must never leak into a position's logits.
+//!
+//! Everything runs on the native runtime (no artifacts directory); the
+//! engine pieces are compiled out under `--cfg pjrt_backend` like
+//! `serve_engine.rs`.
+#![cfg(not(pjrt_backend))]
+
+use corp::data::{Split, TextGen};
+use corp::exec::{argmax, DecodeMode, Executor, ForwardPlan};
+use corp::model::{ModelConfig, Scope, Sparsity, WeightStore};
+use corp::prune::{calibrate, prune, Method, PruneOpts};
+use corp::runtime::{Input, Runtime};
+use corp::serve::{run_engine, DispatchPolicy, EngineOpts, GenWorkload, Workload};
+use corp::tensor::Tensor;
+
+fn native_runtime() -> Runtime {
+    Runtime::new(std::env::temp_dir().join("corp_decode_equality_no_artifacts")).unwrap()
+}
+
+fn gpt_s() -> &'static ModelConfig {
+    ModelConfig::by_name("gpt_s").unwrap()
+}
+
+/// Prune at 50% joint sparsity from a tiny calibration pass, with
+/// (`Method::Corp`) or without (`Method::Naive`) compensation.
+fn pruned_store(exec: &Executor<'_>, dense: &WeightStore, method: Method) -> WeightStore {
+    let opts = PruneOpts {
+        sparsity: Sparsity::of(Scope::Both, 5),
+        method,
+        calib_batches: 2,
+        attn_max_samples: 32,
+        ..PruneOpts::default()
+    };
+    let stats = calibrate(exec, dense, &opts).unwrap();
+    prune(exec, dense, &stats, &opts).unwrap().weights
+}
+
+/// Reference greedy decode through the fused full-prefill forward: every
+/// step re-runs the whole (zero-padded) sequence and reads the logits at
+/// the current last position.
+fn greedy_full(
+    plan: &ForwardPlan<'_, '_>,
+    cfg: &ModelConfig,
+    prompt: &[i32],
+    steps: usize,
+) -> (Vec<i32>, Vec<Vec<f32>>) {
+    let mut seq = prompt.to_vec();
+    let mut preds = Vec::with_capacity(steps);
+    let mut rows = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let mut padded = seq.clone();
+        padded.resize(cfg.n_ctx, 0);
+        let logits = plan.run_gpt(&padded, 1).unwrap();
+        let row = logits.data()[(seq.len() - 1) * cfg.vocab..seq.len() * cfg.vocab].to_vec();
+        let p = argmax(&row);
+        preds.push(p);
+        rows.push(row);
+        if seq.len() < cfg.n_ctx {
+            seq.push(p);
+        }
+    }
+    (preds, rows)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn kv_decode_matches_full_prefill_token_for_token() {
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 6);
+    let pruned = pruned_store(&exec, &dense, Method::Naive);
+    let comp = pruned_store(&exec, &dense, Method::Corp);
+    let gen = TextGen::new(corp::data::DATA_SEED);
+    let n = cfg.n_ctx;
+    for (label, w) in [("dense", &dense), ("pruned", &pruned), ("compensated", &comp)] {
+        let dec = exec.decode_plan(w).unwrap();
+        assert_eq!(dec.mode, DecodeMode::KvCache);
+        let fwd = exec.forward_plan(w).unwrap();
+        for plen in [1usize, n / 2, n - 1] {
+            let (ids, _) = gen.batch(Split::Eval, plen as u64, 1, n);
+            let prompt = &ids[..plen];
+            let steps = (n - plen + 1).min(4);
+            let (pk, rk) = dec.greedy(prompt, steps).unwrap();
+            let (pf, rf) = greedy_full(&fwd, cfg, prompt, steps);
+            assert_eq!(pk, pf, "{label} plen={plen}: greedy token streams diverged");
+            for (i, (a, b)) in rk.iter().zip(&rf).enumerate() {
+                let d = max_abs_diff(a, b);
+                assert!(d < 1e-5, "{label} plen={plen} step {i}: kv vs prefill logits |Δ|={d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_mixed_length_extend_matches_full_forward_rows() {
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 6);
+    let pruned = pruned_store(&exec, &dense, Method::Naive);
+    let gen = TextGen::new(corp::data::DATA_SEED);
+    let n = cfg.n_ctx;
+    let plens = [1usize, n / 2, n - 1];
+    for (label, w) in [("dense", &dense), ("pruned", &pruned)] {
+        let dec = exec.decode_plan(w).unwrap();
+        let fwd = exec.forward_plan(w).unwrap();
+        // Three sequences with different prompt lengths prefill together in
+        // one padded dispatch (batch 3 dispatched at 4).
+        let prompts: Vec<Vec<i32>> =
+            plens.iter().map(|&p| gen.batch(Split::Eval, p as u64, 1, n).0[..p].to_vec()).collect();
+        let mut s0 = dec.begin();
+        let mut s1 = dec.begin();
+        let mut s2 = dec.begin();
+        let rows = {
+            let mut states = [&mut s0, &mut s1, &mut s2];
+            let new: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+            dec.extend_at(&mut states, &new, 4).unwrap()
+        };
+        // Every prompt position's logits must match the fused full forward.
+        for (e, prompt) in prompts.iter().enumerate() {
+            let mut padded = prompt.clone();
+            padded.resize(n, 0);
+            let full = fwd.run_gpt(&padded, 1).unwrap();
+            let want = &full.data()[..prompt.len() * cfg.vocab];
+            let d = max_abs_diff(&rows[e], want);
+            assert!(d < 1e-5, "{label} seq {e}: batched prefill rows |Δ|={d}");
+        }
+        // A mixed dispatch: two single-token continuations + one fresh
+        // prefill batch together; per-sequence lengths ride the dispatch.
+        let cont0 = vec![argmax(&rows[0][rows[0].len() - cfg.vocab..])];
+        let cont1 = vec![argmax(&rows[1][rows[1].len() - cfg.vocab..])];
+        let fresh = gen.batch(Split::Eval, 99, 1, n).0[..5].to_vec();
+        let mut s3 = dec.begin();
+        let rows2 = {
+            let mut states = [&mut s0, &mut s1, &mut s3];
+            let new: Vec<&[i32]> = vec![&cont0, &cont1, &fresh];
+            dec.extend(&mut states, &new).unwrap()
+        };
+        let cases: [(&corp::exec::DecodeState, usize); 3] = [(&s0, 1), (&s1, 1), (&s3, 5)];
+        for (e, (st, m)) in cases.iter().enumerate() {
+            let mut padded = st.ids().to_vec();
+            padded.resize(n, 0);
+            let full = fwd.run_gpt(&padded, 1).unwrap();
+            let want =
+                &full.data()[(st.len() - m) * cfg.vocab..st.len() * cfg.vocab];
+            let d = max_abs_diff(&rows2[e], want);
+            assert!(d < 1e-5, "{label} mixed seq {e}: |Δ|={d}");
+        }
+    }
+}
+
+#[test]
+fn prefill_fallback_mode_matches_kv_cache() {
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 6);
+    let pruned = pruned_store(&exec, &dense, Method::Naive);
+    let gen = TextGen::new(corp::data::DATA_SEED);
+    for (label, w) in [("dense", &dense), ("pruned", &pruned)] {
+        let kv = exec.decode_plan_with(w, DecodeMode::KvCache).unwrap();
+        let pf = exec.decode_plan_with(w, DecodeMode::Prefill).unwrap();
+        let (ids, plen) = gen.prompt(3, cfg.n_ctx, 4);
+        let plen = plen.min(cfg.n_ctx - 5);
+        let (pk, rk) = kv.greedy(&ids[..plen], 6).unwrap();
+        let (pp, rp) = pf.greedy(&ids[..plen], 6).unwrap();
+        assert_eq!(pk, pp, "{label}: kv vs prefill-per-step token streams diverged");
+        for (i, (a, b)) in rk.iter().zip(&rp).enumerate() {
+            let d = max_abs_diff(a, b);
+            assert!(d < 1e-5, "{label} step {i}: |Δ|={d}");
+        }
+        // The two modes dispatch different artifact families.
+        assert!(kv.artifact(1).starts_with("dec_"));
+        assert!(pf.artifact(1).starts_with("fwd_"));
+    }
+}
+
+#[test]
+fn decode_plan_artifact_cache_reuses_handles() {
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 6);
+    let plan = exec.decode_plan(&w).unwrap();
+    assert_eq!(plan.cached_batch_sizes(), 0);
+    let a1 = plan.artifact(2);
+    let a2 = plan.artifact(2);
+    assert!(std::sync::Arc::ptr_eq(&a1, &a2));
+    assert_eq!(&*a1, format!("dec_gpt_s_q{}_o{}_b2", plan.dqk, plan.o).as_str());
+    assert_eq!(plan.cached_batch_sizes(), 1);
+    // Degenerate extends are rejected with clear errors.
+    let mut st = plan.begin();
+    assert!(plan.extend(&mut [], &[]).is_err());
+    let too_long = vec![0i32; cfg.n_ctx + 1];
+    assert!(plan.extend(&mut [&mut st], &[&too_long]).is_err());
+    let empty: &[i32] = &[];
+    assert!(plan.extend(&mut [&mut st], &[empty]).is_err());
+}
+
+#[test]
+fn gen_workload_invariant_across_workers_and_dispatch() {
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 11);
+    let comp = pruned_store(&exec, &dense, Method::Corp);
+    for (label, w) in [("dense", &dense), ("compensated", &comp)] {
+        let workload = GenWorkload::new(cfg, corp::data::DATA_SEED).unwrap().with_max_new(4);
+        let mk = |workers, dispatch| EngineOpts {
+            workers,
+            rate: 1e12,
+            requests: 12,
+            max_batch: 4,
+            max_wait: 0.002,
+            queue_cap: 256,
+            dispatch,
+            ..Default::default()
+        };
+        let key = |s: &corp::serve::EngineStats| -> Vec<(usize, i32, usize, usize)> {
+            s.records.iter().map(|r| (r.id, r.pred, r.tokens, r.steps)).collect()
+        };
+        let mut baseline: Option<Vec<(usize, i32, usize, usize)>> = None;
+        for workers in [1usize, 2, 4] {
+            for dispatch in
+                [DispatchPolicy::Padded, DispatchPolicy::Exact, DispatchPolicy::Auto]
+            {
+                let s = run_engine(&exec, w, &workload, &mk(workers, dispatch)).unwrap();
+                assert_eq!(s.served, 12, "{label} w={workers} {dispatch:?}");
+                assert_eq!(s.shed, 0);
+                // Multi-step accounting is self-consistent.
+                for r in &s.records {
+                    assert!(r.steps >= 1);
+                    assert!(r.first_ms <= r.total_ms + 1e-9);
+                    if r.steps == 1 {
+                        assert_eq!(r.itl_ms, 0.0);
+                    } else {
+                        assert!(r.itl_ms >= 0.0);
+                    }
+                }
+                assert!(s.steps_mean >= 1.0);
+                let k = key(&s);
+                match &baseline {
+                    None => baseline = Some(k),
+                    Some(b) => assert_eq!(
+                        &k, b,
+                        "{label}: outputs changed at workers={workers} dispatch={dispatch:?}"
+                    ),
+                }
+            }
+        }
+        // Every engine record equals a direct greedy decode of the same
+        // request: same final token, token charge, and step count.
+        let dec = exec.decode_plan(w).unwrap();
+        let base = baseline.unwrap();
+        for &(id, pred, tokens, steps) in &base {
+            let req = workload.synth(id);
+            assert_eq!(steps, req.target_new, "{label} request {id}");
+            assert_eq!(tokens, req.prompt_len + req.target_new, "{label} request {id}");
+            let (preds, _) = dec.greedy(&req.prompt, req.target_new).unwrap();
+            assert_eq!(pred, *preds.last().unwrap(), "{label} request {id}");
+        }
+    }
+}
+
+/// Assemble the `dec_*` input list by hand: ids, past, fresh, caches, then
+/// the full dense parameter list in spec order.
+fn dec_inputs<'a>(
+    cfg: &ModelConfig,
+    w: &'a WeightStore,
+    ids: &'a [i32],
+    past: &'a [i32],
+    fresh: &'a [i32],
+    kc: &'a Tensor,
+    vc: &'a Tensor,
+) -> Vec<Input<'a>> {
+    let b = past.len();
+    let m = ids.len() / b;
+    let mut inputs: Vec<Input<'a>> = vec![
+        Input::I32(ids, vec![b, m]),
+        Input::I32(past, vec![b]),
+        Input::I32(fresh, vec![b]),
+        Input::F32(kc),
+        Input::F32(vc),
+    ];
+    for (name, _) in cfg.param_spec_at(cfg.dh(), cfg.mlp) {
+        inputs.push(Input::F32(w.expect(&name).unwrap()));
+    }
+    inputs
+}
+
+#[test]
+fn incremental_mask_ignores_future_tokens_and_cache_padding() {
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 6);
+    let (n, h, l, dh, vocab) = (cfg.n_ctx, cfg.heads, cfg.layers, cfg.dh(), cfg.vocab);
+    let art = cfg.dec_artifact(dh, cfg.mlp, 1);
+    let gen = TextGen::new(corp::data::DATA_SEED);
+    let (full_ids, _) = gen.batch(Split::Eval, 0, 1, n);
+    let plen = 8usize;
+    let prompt = &full_ids[..plen];
+
+    let zero_k = Tensor::from_vec(&[1, l, h, n, dh], vec![0.0; l * h * n * dh]);
+    let zero_v = Tensor::from_vec(&[1, l, h, n, dh], vec![0.0; l * h * n * dh]);
+
+    // A: one-shot prefill of the prompt through the incremental artifact.
+    let past0 = [0i32];
+    let fresh_a = [plen as i32];
+    let out_a = rt
+        .execute(&art, &dec_inputs(cfg, &w, prompt, &past0, &fresh_a, &zero_k, &zero_v))
+        .unwrap();
+    let logits_a = &out_a[0];
+    assert_eq!(logits_a.shape(), &[1, plen, vocab]);
+
+    // The incremental prefill equals the layered full forward row-for-row.
+    let mut padded = prompt.to_vec();
+    padded.resize(n, 0);
+    let full = exec.forward_gpt(&w, &padded, 1).unwrap();
+    let d = max_abs_diff(logits_a.data(), &full.data()[..plen * vocab]);
+    assert!(d < 1e-5, "incremental prefill vs full forward |Δ|={d}");
+
+    // B: poison every token after position 3 with different (valid) ids —
+    // rows 0..=3 must not move: the causal mask never attends past the
+    // current position.
+    let mut poisoned = prompt.to_vec();
+    for t in poisoned.iter_mut().skip(4) {
+        *t = (*t + 17) % vocab as i32;
+    }
+    let out_b = rt
+        .execute(&art, &dec_inputs(cfg, &w, &poisoned, &past0, &fresh_a, &zero_k, &zero_v))
+        .unwrap();
+    let d = max_abs_diff(
+        &logits_a.data()[..4 * vocab],
+        &out_b[0].data()[..4 * vocab],
+    );
+    assert!(d < 1e-6, "future-token poison leaked into past logits |Δ|={d}");
+    // ...and rows past the poison point must move (the probe is live).
+    let d_after = max_abs_diff(
+        &logits_a.data()[4 * vocab..],
+        &out_b[0].data()[4 * vocab..],
+    );
+    assert!(d_after > 1e-6, "poison probe inert — future rows did not change");
+
+    // C: split prefill at position 3 and poison the cache *padding* (rows
+    // ≥ past) with huge values — masked attention must never read them.
+    let knew = &out_a[1]; // [1, l, h, plen, dh]
+    let vnew = &out_a[2];
+    let split = 3usize;
+    let mut kbuf = vec![1e9f32; l * h * n * dh];
+    let mut vbuf = vec![1e9f32; l * h * n * dh];
+    for lh in 0..l * h {
+        for r in 0..split {
+            let src = (lh * plen + r) * dh;
+            let dst = (lh * n + r) * dh;
+            kbuf[dst..dst + dh].copy_from_slice(&knew.data()[src..src + dh]);
+            vbuf[dst..dst + dh].copy_from_slice(&vnew.data()[src..src + dh]);
+        }
+    }
+    let kc = Tensor::from_vec(&[1, l, h, n, dh], kbuf);
+    let vc = Tensor::from_vec(&[1, l, h, n, dh], vbuf);
+    let past3 = [split as i32];
+    let fresh_c = [(plen - split) as i32];
+    let out_c = rt
+        .execute(&art, &dec_inputs(cfg, &w, &prompt[split..], &past3, &fresh_c, &kc, &vc))
+        .unwrap();
+    let d = max_abs_diff(out_c[0].data(), &logits_a.data()[split * vocab..]);
+    assert!(d < 1e-5, "poisoned cache padding leaked into decode logits |Δ|={d}");
+}

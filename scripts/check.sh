@@ -37,16 +37,27 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "==> bench linalg (CORP_BENCH_MODE=${CORP_BENCH_MODE:-fast})"
     cargo run --manifest-path "$MANIFEST" --release -- bench linalg --json --out BENCH_linalg.json
 
-    # The smoke grid sweeps both workloads (vision + text) and both
-    # dispatch policies (padded + exact) — corp-bench-serve/v2 axes.
+    # The smoke grid sweeps all three workloads (vision + text + gen, the
+    # gen cells on both decode paths) and both dispatch policies —
+    # corp-bench-serve/v3 axes. A failed cell exits non-zero and leaves no
+    # stale BENCH_serve.json behind.
     echo "==> bench serve smoke (CORP_BENCH_MODE=smoke)"
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- bench serve --json --out BENCH_serve.json
 
-    echo "==> serve CLI smoke (vision/exact + text/padded)"
+    echo "==> serve CLI smoke (vision/exact + text/padded + gen)"
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
         serve --model vit_t --sparsity 0.5 --requests 32 --rate 0 --max-batch 8 --dispatch exact
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
         serve --model gpt_s --sparsity 0 --requests 16 --rate 0 --max-batch 4 --dispatch padded
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
+        serve --model gpt_s --workload gen --sparsity 0 --requests 12 --rate 0 --max-batch 4 --max-new 4
+
+    # Generation smoke: 8 greedy tokens on gpt_s, KV-cache decode
+    # cross-checked against prefill-per-step and the fused full forward
+    # (checksum/logit compare; non-zero exit on any drift).
+    echo "==> generate smoke (gpt_s, 8 tokens, kv vs prefill verify)"
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
+        generate --model gpt_s --sparsity 0.5 --tokens 8 --prompts 2 --decode kv --verify
 fi
 
 echo "ok"
