@@ -4,18 +4,29 @@
 //! workload (vision / text / gen) × model variant (dense / pruned /
 //! compensated at 50% joint sparsity) × worker count × arrival rate ×
 //! dispatch policy (padded / exact) — and, for the generation workload, a
-//! decode axis (KV-cache vs prefill-per-step) — reporting per-cell p50/p95
-//! latency, queueing delay, mean formed and dispatched batch sizes, steps
-//! per request, TTFT/ITL, and requests+tokens/sec (schema
-//! `corp-bench-serve/v3`). The "saturated" rate offers the whole request
-//! set at t = 0 with an ample queue, so the throughput column is the
-//! engine's capacity — this is where the pruned fast path has to beat
+//! decode axis (KV-cache vs prefill-per-step, with a paged-KV cell that
+//! turns on chunked prefill + a shared prompt opening) — reporting
+//! per-cell p50/p95 latency, queueing delay, mean formed and dispatched
+//! batch sizes, steps per request, TTFT/ITL, and requests+tokens/sec
+//! (schema `corp-bench-serve/v4`). The "saturated" rate offers the whole
+//! request set at t = 0 with an ample queue, so the throughput column is
+//! the engine's capacity — this is where the pruned fast path has to beat
 //! dense, since its GEMMs run at the retained widths, and where KV-cache
 //! decode has to beat prefill-per-step at identical outputs (per-token
 //! work is one position's GEMMs instead of the full context's). The low
 //! rates are where the dispatch axis matters: batches are mostly partial
 //! there, so exact-size dispatch skips the padding arithmetic and should
 //! cut tail latency versus padded on the same variant.
+//!
+//! KV-cache cells additionally report the paged pool's telemetry:
+//! `kv_bytes_per_step` is the bytes of K/V *appended* per decode dispatch
+//! (paging makes this a function of batch and head widths only — it must
+//! not scale with `n_ctx`), `kv_peak_bytes` is the pool's high-water mark,
+//! and `kv_shared_ratio` is the fraction of block acquisitions served by
+//! adopting a published prefix block instead of allocating. The chunked +
+//! shared-prefix cell doubles as the prefill-interference probe: its
+//! `itl_mean_ms` shows decode cadence while long prefills are split into
+//! bounded chunks and interleaved into the same batches.
 //!
 //! A failed cell aborts the sweep with the cell's coordinates in the error
 //! (non-zero exit through the CLI), and any pre-existing `--out` file is
@@ -58,7 +69,7 @@ struct WorkloadGrid {
 
 /// Per-mode grids: one vision + one text + one generation entry each, so
 /// every `BENCH_serve.json` carries all three workload axes (the gen entry
-/// doubles into kv and prefill decode cells).
+/// fans into kv, kv + chunked/shared-prefix, and prefill decode cells).
 fn mode_grids() -> Vec<WorkloadGrid> {
     match bench_mode() {
         BenchMode::Smoke => vec![
@@ -157,6 +168,9 @@ fn grid_runs<W: Workload>(
     variants: &[(&str, &WeightStore)],
     workload: &W,
     g: &WorkloadGrid,
+    // `(prefill_chunk, shared_prefix)` for generation cells (0 = off);
+    // `None` for single-shot workloads, which have no prefill axis.
+    kv_cell: Option<(usize, usize)>,
     runs: &mut Vec<Json>,
 ) -> Result<()> {
     let decode = workload.decode().map(|m| m.label());
@@ -232,9 +246,25 @@ fn grid_runs<W: Workload>(
                         ("requests_per_sec", num(s.throughput_fps)),
                         ("tokens_per_sec", num(s.throughput_tps)),
                     ];
-                    // The decode axis only exists for generation cells.
+                    // The decode axis only exists for generation cells;
+                    // those also carry the paged-KV columns (all-zero on
+                    // prefill-per-step cells, which hold no cache).
                     if let Some(d) = decode {
                         row.push(("decode", Json::Str(d.to_string())));
+                        let (chunk, shared) = kv_cell.unwrap_or((0, 0));
+                        row.push(("prefill_chunk", num(chunk as f64)));
+                        row.push(("shared_prefix", num(shared as f64)));
+                        row.push(("kv_bytes_per_step", num(s.kv_bytes_per_step)));
+                        row.push(("kv_peak_bytes", num(s.kv_peak_bytes as f64)));
+                        let grabs = s.kv_allocs + s.kv_shared_hits;
+                        row.push((
+                            "kv_shared_ratio",
+                            num(if grabs == 0 {
+                                0.0
+                            } else {
+                                s.kv_shared_hits as f64 / grabs as f64
+                            }),
+                        ));
                     }
                     // Keep the v1 column name on the vision axis so the
                     // BENCH trajectory stays comparable across schemas.
@@ -250,7 +280,7 @@ fn grid_runs<W: Workload>(
 }
 
 /// Run the serving benchmark grid; when `json_out` is set, write
-/// `BENCH_serve.json`-style output there (schema `corp-bench-serve/v3`).
+/// `BENCH_serve.json`-style output there (schema `corp-bench-serve/v4`).
 pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
     let rt = Runtime::from_default_dir()?;
     // Fail loudly, never stale-ly: if a cell errors mid-sweep the run
@@ -294,18 +324,26 @@ pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
         match (cfg.kind, g.gen) {
             (ModelKind::Vit, false) => {
                 let wl = VisionWorkload::new(cfg, crate::data::DATA_SEED)?;
-                grid_runs(&exec, &variants, &wl, &g, &mut runs)?;
+                grid_runs(&exec, &variants, &wl, &g, None, &mut runs)?;
             }
             (ModelKind::Gpt, false) => {
                 let wl = GptWorkload::new(cfg, crate::data::DATA_SEED)?;
-                grid_runs(&exec, &variants, &wl, &g, &mut runs)?;
+                grid_runs(&exec, &variants, &wl, &g, None, &mut runs)?;
             }
             (ModelKind::Gpt, true) => {
-                // The decode axis: same request mix, same outputs, KV-cache
-                // incremental steps vs full prefill-per-step.
-                for mode in [DecodeMode::KvCache, DecodeMode::Prefill] {
-                    let wl = GenWorkload::new(cfg, crate::data::DATA_SEED)?.with_decode(mode);
-                    grid_runs(&exec, &variants, &wl, &g, &mut runs)?;
+                // The decode axis: same request mix, same outputs. Plain
+                // KV-cache, then the paged-KV stress cell (prefills split
+                // into 8-token chunks, one block-width of shared opening so
+                // prefix adoption fires), then full prefill-per-step.
+                let shared = 16.min(cfg.n_ctx);
+                let cells =
+                    [(DecodeMode::KvCache, 0, 0), (DecodeMode::KvCache, 8, shared), (DecodeMode::Prefill, 0, 0)];
+                for (mode, chunk, shared) in cells {
+                    let wl = GenWorkload::new(cfg, crate::data::DATA_SEED)?
+                        .with_decode(mode)
+                        .with_prefill_chunk(chunk)
+                        .with_shared_prefix(shared);
+                    grid_runs(&exec, &variants, &wl, &g, Some((chunk, shared)), &mut runs)?;
                 }
             }
             (ModelKind::Vit, true) => bail!("gen grid on vision model '{}'", g.model),
@@ -314,7 +352,7 @@ pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
 
     if let Some(path) = json_out {
         let root = obj(vec![
-            ("schema", Json::Str("corp-bench-serve/v3".into())),
+            ("schema", Json::Str("corp-bench-serve/v4".into())),
             (
                 "mode",
                 Json::Str(
@@ -347,8 +385,8 @@ mod tests {
         // Every mode carries all three workload axes: vision, single-shot
         // text (each with a saturated and, for the dispatch-policy
         // comparison, at least one finite rate), and a generation grid
-        // (gpt-only — it becomes kv + prefill decode cells); grids stay
-        // within the engine's bounds.
+        // (gpt-only — it becomes kv, kv+chunked/shared, and prefill decode
+        // cells); grids stay within the engine's bounds.
         let grids = mode_grids();
         let kinds: Vec<ModelKind> =
             grids.iter().map(|g| ModelConfig::by_name(g.model).unwrap().kind).collect();

@@ -12,7 +12,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Coordinator;
-use crate::exec::DecodeMode;
+use crate::exec::{DecodeMode, KvPoolOpts};
 use crate::model::{ModelConfig, ModelKind, Scope, Sparsity};
 use crate::prune::{Method, PruneOpts};
 use crate::rank::MlpCriterion;
@@ -80,8 +80,8 @@ fn print_usage() {
          train  --model vit_b [--steps N]        train/load the dense checkpoint\n  \
          prune  --model vit_b --scope both --sparsity 0.5 [--method corp] [--criterion combined]\n  \
          serve  --model vit_b --sparsity 0.5 [--workers 2] [--rate 200] [--dispatch auto]\n  \
-         serve  --model gpt_s [--workload text|gen]  same engine, text scoring or generation\n  \
-         generate --model gpt_s --tokens 8 [--decode kv|prefill] [--verify]  greedy decode\n  \
+         serve  --model gpt_s [--workload text|gen] [--prefill-chunk N] [--shared-prefix N]\n  \
+         generate --model gpt_s --tokens 8 [--decode kv|prefill] [--prefill-chunk N] [--verify]\n  \
          stats  --model vit_b                    Table-9 redundancy statistics\n  \
          bench  linalg|serve [--json] [--out PATH]  perf harnesses (BENCH_*.json)\n  \
          list                                    models + artifact status"
@@ -200,7 +200,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("seed", "arrival-process seed", "7")
         .opt("dispatch", "batch dispatch shape: padded|exact|auto", "auto")
         .opt("max-new", "gen workload: max tokens generated per request", "8")
-        .opt("decode", "gen workload decode path: auto|kv|prefill", "auto");
+        .opt("decode", "gen workload decode path: auto|kv|prefill", "auto")
+        .opt("kv-block", "KV pool: positions per block (0 = default)", "0")
+        .opt("kv-blocks", "KV pool: capacity in blocks (0 = unbounded)", "0")
+        .opt("prefill-chunk", "gen workload: max prompt tokens fed per step (0 = one-shot)", "0")
+        .opt("shared-prefix", "gen workload: common prompt-opening length to stamp (0 = off)", "0");
     let args = cmd.parse(argv)?;
     let cfg = cfg_of(&args.str("model"))?;
     let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
@@ -223,6 +227,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         exec_floor: args.f64("exec-floor")?,
         seed: args.usize("seed")? as u64,
         dispatch: crate::serve::DispatchPolicy::parse(&args.str("dispatch"))?,
+        kv_block: args.usize("kv-block")?,
+        kv_blocks: args.usize("kv-blocks")?,
     };
     // The model (or an explicit --workload) picks the serving scenario: one
     // queueing/batching core, workload-specific synthesis and accounting.
@@ -241,8 +247,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             if max_new == 0 || max_new > cfg.n_ctx {
                 bail!("max-new must be in 1..={}, got {max_new}", cfg.n_ctx);
             }
+            let shared = args.usize("shared-prefix")?;
+            if shared > cfg.n_ctx {
+                bail!("shared-prefix must be <= n_ctx {}, got {shared}", cfg.n_ctx);
+            }
             let mut wl = crate::serve::GenWorkload::new(cfg, crate::data::DATA_SEED)?
-                .with_max_new(max_new);
+                .with_max_new(max_new)
+                .with_prefill_chunk(args.usize("prefill-chunk")?)
+                .with_shared_prefix(shared);
             let decode = args.str("decode");
             if decode != "auto" {
                 wl = wl.with_decode(DecodeMode::parse(&decode)?);
@@ -278,6 +290,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         stats.throughput_fps,
         stats.throughput_tps
     );
+    if stats.kv_peak_bytes > 0 {
+        println!(
+            "kv pool: {:.0} B appended/step, peak {:.1} KiB, {} blocks held at end | \
+             {} allocs, {} shared-block hits, {} CoW copies",
+            stats.kv_bytes_per_step,
+            stats.kv_peak_bytes as f64 / 1024.0,
+            stats.kv_blocks_in_use,
+            stats.kv_allocs,
+            stats.kv_shared_hits,
+            stats.kv_cow_copies
+        );
+    }
     Ok(())
 }
 
@@ -288,6 +312,8 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .opt("prompts", "number of eval-stream prompts", "2")
         .opt("tokens", "tokens generated per prompt", "8")
         .opt("decode", "decode path: kv|prefill", "kv")
+        .opt("kv-block", "KV pool: positions per block (0 = default)", "0")
+        .opt("prefill-chunk", "max prompt tokens fed per step (0 = one-shot)", "0")
         .flag("verify", "run kv + prefill + the full forward and compare (non-zero exit on drift)");
     let args = cmd.parse(argv)?;
     let cfg = cfg_of(&args.str("model"))?;
@@ -316,7 +342,13 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     // actually dispatch (fixed-shape runtimes have no dec_* lowering).
     let fixed = exec.rt.prefers_fixed_shapes();
     let mode = req_mode.resolve(fixed);
-    let plan = exec.decode_plan_with(&weights, mode)?;
+    let mut pool_opts = KvPoolOpts::default();
+    let kv_block = args.usize("kv-block")?;
+    if kv_block > 0 {
+        pool_opts.block = kv_block;
+    }
+    let chunk = args.usize("prefill-chunk")?;
+    let plan = exec.decode_plan_opts(&weights, mode, pool_opts)?;
     let verify = args.has_flag("verify");
     // The cross-check plans are loop-invariant — resolve them once. On a
     // fixed-shape runtime both decode modes resolve to prefill-per-step, so
@@ -345,7 +377,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         let plen = plen0.min(cfg.n_ctx + 1 - tokens).max(1);
         let prompt = &ids[..plen];
         let t0 = std::time::Instant::now();
-        let (preds, rows) = plan.greedy(prompt, tokens)?;
+        let (preds, rows) = plan.greedy_chunked(prompt, tokens, chunk)?;
         let ms = t0.elapsed().as_secs_f64() * 1e3;
         let checksum: f64 = rows.iter().flatten().map(|&v| v as f64).sum();
         println!(
@@ -397,6 +429,17 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
                 maxd.max(fmax)
             );
         }
+    }
+    if let Some(s) = plan.pool_stats() {
+        let (steps, bytes) = plan.kv_counters();
+        println!(
+            "kv pool: {steps} dispatches, {bytes} B appended ({:.0} B/step), peak {:.1} KiB, \
+             {} shared-block hits, {} CoW copies",
+            if steps == 0 { 0.0 } else { bytes as f64 / steps as f64 },
+            s.peak_bytes() as f64 / 1024.0,
+            s.shared_hits,
+            s.cow_copies
+        );
     }
     Ok(())
 }

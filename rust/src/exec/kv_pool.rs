@@ -1,0 +1,619 @@
+//! Paged KV-cache block pool for autoregressive decode.
+//!
+//! The PR-4 decode path gave every sequence a monolithic K/V slab at full
+//! `n_ctx` capacity and copied the whole slab into (and back out of) the
+//! dispatch buffers on every step — per-step memory traffic scaled with
+//! context *capacity*, not with tokens actually generated. This module
+//! replaces the slabs with fixed-size **blocks** owned by a shared
+//! [`KvPool`]:
+//!
+//! * A block holds `block` consecutive positions of every layer/head plane,
+//!   laid out `[layers, heads, block, dqk|dh]` (K and V planes side by
+//!   side). A sequence is a [`PagedSeq`]: a block *table* (pool indices)
+//!   plus a committed length.
+//! * Block memory is interior-mutable (`UnsafeCell`): the native
+//!   interpreter appends a step's new K/V rows in place through raw plane
+//!   pointers ([`PagedSeq::view`]) — zero cache copy per decode step.
+//! * Blocks are refcounted. Identical prompt prefixes register their full
+//!   blocks in a prefix registry (exact token-vector keys — no hash
+//!   collisions by construction) so later sequences *adopt* the blocks
+//!   instead of recomputing the prefill; [`PagedSeq::fork`] shares every
+//!   block, and an append into a shared partial tail block copies it first
+//!   (copy-on-write at the first divergent block).
+//!
+//! # Safety model
+//!
+//! All bookkeeping (refcounts, free list, registry, telemetry) lives behind
+//! a `Mutex`. Block *data* is written only through a `&mut PagedSeq` whose
+//! table entries have refcount 1 beyond the writer (enforced by
+//! [`PagedSeq::prepare_append`]: shared tails are copied first, fresh
+//! blocks are newly allocated) — so every plane write has an exclusive
+//! logical owner. Shared (adopted / forked) blocks are read-only. The
+//! publication point between a writer registering a prefix and a reader
+//! adopting it is the pool mutex, which gives the required happens-before
+//! edge. The backing `Vec<BlockMem>` is append-only and each block's planes
+//! are boxed slices, so plane pointers stay stable across pool growth and
+//! freed blocks are recycled, never deallocated.
+
+use std::cell::UnsafeCell;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::runtime::native::forward::PagedKv;
+
+/// Upper bound on distinct registered prefixes — keeps the registry (and
+/// the blocks it pins) from growing without bound on long serving runs.
+const MAX_REGISTRY: usize = 512;
+
+/// Construction knobs for a [`KvPool`].
+#[derive(Clone, Copy, Debug)]
+pub struct KvPoolOpts {
+    /// Positions per block.
+    pub block: usize,
+    /// Pool capacity in blocks (0 = unbounded).
+    pub max_blocks: usize,
+    /// Enable the prompt-prefix registry (adopt/register are no-ops when
+    /// off; copy-on-write for forks still works).
+    pub share_prefixes: bool,
+}
+
+impl Default for KvPoolOpts {
+    fn default() -> Self {
+        Self { block: 16, max_blocks: 0, share_prefixes: true }
+    }
+}
+
+/// One block's storage: K and V planes, `[layers * heads, block, dqk|dh]`.
+struct BlockMem {
+    k: Box<[UnsafeCell<f32>]>,
+    v: Box<[UnsafeCell<f32>]>,
+}
+
+impl BlockMem {
+    fn kptr(&self) -> *mut f32 {
+        self.k.as_ptr() as *mut f32
+    }
+
+    fn vptr(&self) -> *mut f32 {
+        self.v.as_ptr() as *mut f32
+    }
+}
+
+struct PoolState {
+    /// Per-block refcount (0 = free).
+    refs: Vec<u32>,
+    /// Recycled block ids (their stale data is never read: a new owner only
+    /// reads rows it has committed).
+    free: Vec<u32>,
+    /// Exact token prefix (block-multiple length) → the blocks covering it.
+    /// The registry holds one refcount on each member block.
+    registry: HashMap<Vec<i32>, Vec<u32>>,
+    /// Blocks currently referenced (telemetry).
+    in_use: usize,
+    peak_in_use: usize,
+    /// Cumulative block acquisitions through `alloc`.
+    allocs: u64,
+    /// Cumulative blocks adopted from the registry instead of allocated.
+    shared_hits: u64,
+    /// Cumulative copy-on-write tail-block copies.
+    cow_copies: u64,
+}
+
+/// Point-in-time pool telemetry (see module docs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvPoolStats {
+    /// Positions per block.
+    pub block_positions: usize,
+    /// Bytes of K+V data per block.
+    pub block_bytes: usize,
+    /// Blocks currently referenced by live sequences or the registry.
+    pub blocks_in_use: usize,
+    /// High-water mark of `blocks_in_use`.
+    pub peak_blocks: usize,
+    /// Distinct blocks ever backed with memory.
+    pub allocated_blocks: usize,
+    /// Cumulative block acquisitions (fresh or recycled).
+    pub allocs: u64,
+    /// Cumulative blocks adopted from the shared-prefix registry.
+    pub shared_hits: u64,
+    /// Cumulative copy-on-write tail copies.
+    pub cow_copies: u64,
+    /// Prefix entries currently registered.
+    pub registered_prefixes: usize,
+}
+
+impl KvPoolStats {
+    /// Bytes currently referenced / high-water bytes.
+    pub fn bytes_in_use(&self) -> u64 {
+        (self.blocks_in_use * self.block_bytes) as u64
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        (self.peak_blocks * self.block_bytes) as u64
+    }
+}
+
+/// Shared block allocator for one decode plan (one model variant's dims).
+pub struct KvPool {
+    layers: usize,
+    heads: usize,
+    dqk: usize,
+    dh: usize,
+    block: usize,
+    /// Floats per block K plane (`layers * heads * block * dqk`).
+    kplane: usize,
+    /// Floats per block V plane (`layers * heads * block * dh`).
+    vplane: usize,
+    max_blocks: usize,
+    share_prefixes: bool,
+    /// Append-only block storage; index = block id. Planes are boxed, so
+    /// their addresses survive `Vec` growth.
+    mem: RwLock<Vec<BlockMem>>,
+    state: Mutex<PoolState>,
+}
+
+// SAFETY: every PoolState mutation happens under `state`; `mem` is guarded
+// by its RwLock and only ever appended to. Block plane data is written
+// solely through `&mut PagedSeq` on blocks with no other referent (see the
+// module-level safety model) and read either by that same owner or — for
+// shared prefix blocks — strictly after publication through the mutex.
+unsafe impl Send for KvPool {}
+unsafe impl Sync for KvPool {}
+
+impl KvPool {
+    /// A pool for caches of `layers * heads` planes at per-head widths
+    /// `dqk` (K) and `dh` (V).
+    pub fn new(layers: usize, heads: usize, dqk: usize, dh: usize, opts: KvPoolOpts) -> Arc<Self> {
+        let block = opts.block.max(1);
+        Arc::new(Self {
+            layers,
+            heads,
+            dqk,
+            dh,
+            block,
+            kplane: layers * heads * block * dqk,
+            vplane: layers * heads * block * dh,
+            max_blocks: opts.max_blocks,
+            share_prefixes: opts.share_prefixes,
+            mem: RwLock::new(Vec::new()),
+            state: Mutex::new(PoolState {
+                refs: Vec::new(),
+                free: Vec::new(),
+                registry: HashMap::new(),
+                in_use: 0,
+                peak_in_use: 0,
+                allocs: 0,
+                shared_hits: 0,
+                cow_copies: 0,
+            }),
+        })
+    }
+
+    /// Positions per block.
+    pub fn block_positions(&self) -> usize {
+        self.block
+    }
+
+    /// Bytes of K+V data per block.
+    pub fn block_bytes(&self) -> usize {
+        (self.kplane + self.vplane) * std::mem::size_of::<f32>()
+    }
+
+    /// The cache dims this pool serves: `(layers, heads, dqk, dh)`.
+    pub fn dims(&self) -> (usize, usize, usize, usize) {
+        (self.layers, self.heads, self.dqk, self.dh)
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        let st = self.state.lock().unwrap();
+        KvPoolStats {
+            block_positions: self.block,
+            block_bytes: self.block_bytes(),
+            blocks_in_use: st.in_use,
+            peak_blocks: st.peak_in_use,
+            allocated_blocks: self.mem.read().unwrap().len(),
+            allocs: st.allocs,
+            shared_hits: st.shared_hits,
+            cow_copies: st.cow_copies,
+            registered_prefixes: st.registry.len(),
+        }
+    }
+
+    /// Acquire one block (refcount 1), recycling a freed block when one is
+    /// available and growing the pool otherwise.
+    fn alloc(&self) -> Result<u32> {
+        let mut st = self.state.lock().unwrap();
+        let id = match st.free.pop() {
+            Some(id) => id,
+            None => {
+                let mut mem = self.mem.write().unwrap();
+                if self.max_blocks > 0 && mem.len() >= self.max_blocks {
+                    bail!(
+                        "kv pool exhausted: {} blocks in use of max {} (raise the \
+                         pool block cap or lower concurrency)",
+                        st.in_use,
+                        self.max_blocks
+                    );
+                }
+                let id = mem.len() as u32;
+                mem.push(BlockMem {
+                    k: (0..self.kplane).map(|_| UnsafeCell::new(0.0)).collect(),
+                    v: (0..self.vplane).map(|_| UnsafeCell::new(0.0)).collect(),
+                });
+                st.refs.push(0);
+                id
+            }
+        };
+        debug_assert_eq!(st.refs[id as usize], 0);
+        st.refs[id as usize] = 1;
+        st.allocs += 1;
+        st.in_use += 1;
+        st.peak_in_use = st.peak_in_use.max(st.in_use);
+        Ok(id)
+    }
+
+    fn retain(&self, id: u32) {
+        let mut st = self.state.lock().unwrap();
+        st.refs[id as usize] += 1;
+    }
+
+    fn release(&self, id: u32) {
+        let mut st = self.state.lock().unwrap();
+        let rc = &mut st.refs[id as usize];
+        debug_assert!(*rc > 0, "release of a free block");
+        *rc -= 1;
+        if *rc == 0 {
+            st.free.push(id);
+            st.in_use -= 1;
+        }
+    }
+
+    fn refcount(&self, id: u32) -> u32 {
+        self.state.lock().unwrap().refs[id as usize]
+    }
+
+    /// Raw (K, V) plane base pointers of `id`. Stable for the pool's
+    /// lifetime.
+    fn planes(&self, id: u32) -> (*mut f32, *mut f32) {
+        let mem = self.mem.read().unwrap();
+        let bm = &mem[id as usize];
+        (bm.kptr(), bm.vptr())
+    }
+
+    /// Adopt the longest registered prefix of `prompt` covering at most
+    /// `max_positions` positions. On a hit, every matched block gains a
+    /// refcount for the caller; returns the block table and the matched
+    /// position count.
+    fn adopt(&self, prompt: &[i32], max_positions: usize) -> Option<(Vec<u32>, usize)> {
+        if !self.share_prefixes {
+            return None;
+        }
+        let max_nb = prompt.len().min(max_positions) / self.block;
+        if max_nb == 0 {
+            return None;
+        }
+        let mut st = self.state.lock().unwrap();
+        for nb in (1..=max_nb).rev() {
+            if let Some(blocks) = st.registry.get(&prompt[..nb * self.block]) {
+                let table = blocks.clone();
+                for &id in &table {
+                    st.refs[id as usize] += 1;
+                }
+                st.shared_hits += table.len() as u64;
+                return Some((table, nb * self.block));
+            }
+        }
+        None
+    }
+
+    /// Register every block-multiple prefix of `prefix` (already computed
+    /// into `table`, full blocks only) for adoption by later sequences. The
+    /// registry holds one refcount per membership, so published blocks
+    /// outlive the sequence that computed them. Best-effort: stops at the
+    /// registry cap.
+    fn register(&self, prefix: &[i32], table: &[u32]) {
+        if !self.share_prefixes {
+            return;
+        }
+        let nb = (prefix.len() / self.block).min(table.len());
+        let mut st = self.state.lock().unwrap();
+        for k in 1..=nb {
+            let key = &prefix[..k * self.block];
+            if st.registry.contains_key(key) {
+                continue;
+            }
+            if st.registry.len() >= MAX_REGISTRY {
+                return;
+            }
+            for &id in &table[..k] {
+                st.refs[id as usize] += 1;
+            }
+            st.registry.insert(key.to_vec(), table[..k].to_vec());
+        }
+    }
+}
+
+/// One sequence's slice of the pool: a block table plus the committed
+/// position count. Dropping the sequence releases its blocks.
+pub struct PagedSeq {
+    pool: Arc<KvPool>,
+    table: Vec<u32>,
+    len: usize,
+}
+
+impl PagedSeq {
+    pub(crate) fn new(pool: Arc<KvPool>) -> Self {
+        Self { pool, table: Vec::new(), len: 0 }
+    }
+
+    fn adopted(pool: Arc<KvPool>, table: Vec<u32>, len: usize) -> Self {
+        debug_assert_eq!(table.len(), len.div_ceil(pool.block));
+        Self { pool, table, len }
+    }
+
+    /// Committed K/V positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Blocks currently held.
+    pub fn blocks(&self) -> usize {
+        self.table.len()
+    }
+
+    pub(crate) fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    /// Begin a sequence for `prompt`, adopting shared prefix blocks when the
+    /// registry has a match. At most `prompt.len() - 1` positions are
+    /// adopted so the caller always computes (and gets logits for) the final
+    /// prompt position. Returns `(seq, adopted_positions)`.
+    pub(crate) fn begin(pool: &Arc<KvPool>, prompt: &[i32]) -> (Self, usize) {
+        match pool.adopt(prompt, prompt.len().saturating_sub(1)) {
+            Some((table, matched)) => (Self::adopted(pool.clone(), table, matched), matched),
+            None => (Self::new(pool.clone()), 0),
+        }
+    }
+
+    /// Make the next `fresh` positions writable: copy-on-write the partial
+    /// tail block if it is shared, then allocate blocks through position
+    /// `len + fresh - 1`. After this call every block that will receive
+    /// writes is exclusively owned by this sequence.
+    pub(crate) fn prepare_append(&mut self, fresh: usize) -> Result<()> {
+        debug_assert_eq!(self.table.len(), self.len.div_ceil(self.pool.block));
+        let block = self.pool.block;
+        if fresh == 0 {
+            return Ok(());
+        }
+        let tail_rows = self.len % block;
+        if tail_rows != 0 {
+            let tail = *self.table.last().unwrap();
+            if self.pool.refcount(tail) > 1 {
+                // Copy-on-write: the first divergent block is duplicated;
+                // full shared blocks before it stay shared.
+                let fresh_id = self.pool.alloc()?;
+                let (sk, sv) = self.pool.planes(tail);
+                let (dk, dv) = self.pool.planes(fresh_id);
+                // SAFETY: source block is live (we hold a reference) and
+                // read-only while shared; destination was just allocated
+                // with refcount 1, so no other reader or writer exists.
+                // Plane buffers are disjoint allocations of the stated
+                // lengths.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(sk, dk, self.pool.kplane);
+                    std::ptr::copy_nonoverlapping(sv, dv, self.pool.vplane);
+                }
+                *self.table.last_mut().unwrap() = fresh_id;
+                self.pool.release(tail);
+                self.pool.state.lock().unwrap().cow_copies += 1;
+            }
+        }
+        let need = (self.len + fresh).div_ceil(block);
+        while self.table.len() < need {
+            self.table.push(self.pool.alloc()?);
+        }
+        Ok(())
+    }
+
+    /// Mark `fresh` appended positions live (call after the interpreter has
+    /// written their rows).
+    pub(crate) fn commit(&mut self, fresh: usize) {
+        self.len += fresh;
+        debug_assert!(self.table.len() >= self.len.div_ceil(self.pool.block));
+    }
+
+    /// Raw plane pointers for the native interpreter. The view stays valid
+    /// for the pool's lifetime; writing through it requires the exclusive
+    /// ownership [`PagedSeq::prepare_append`] establishes.
+    pub(crate) fn view(&self) -> PagedKv {
+        let mut k = Vec::with_capacity(self.table.len());
+        let mut v = Vec::with_capacity(self.table.len());
+        for &id in &self.table {
+            let (kp, vp) = self.pool.planes(id);
+            k.push(kp);
+            v.push(vp);
+        }
+        PagedKv { k, v, block: self.pool.block, planes: self.pool.layers * self.pool.heads }
+    }
+
+    /// Publish the first `prefix.len()` positions (full blocks only) for
+    /// adoption by later sequences. `prefix` must be this sequence's leading
+    /// token ids.
+    pub(crate) fn register_prefix(&self, prefix: &[i32]) {
+        let upto = prefix.len().min(self.len);
+        self.pool.register(&prefix[..upto], &self.table);
+    }
+
+    /// A new sequence sharing every block (and the committed length) of
+    /// this one. Either side's next append into the shared tail block
+    /// triggers copy-on-write.
+    pub fn fork(&self) -> Self {
+        for &id in &self.table {
+            self.pool.retain(id);
+        }
+        Self { pool: self.pool.clone(), table: self.table.clone(), len: self.len }
+    }
+}
+
+impl Drop for PagedSeq {
+    fn drop(&mut self) {
+        for &id in &self.table {
+            self.pool.release(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(block: usize, max_blocks: usize) -> Arc<KvPool> {
+        KvPool::new(2, 2, 3, 4, KvPoolOpts { block, max_blocks, share_prefixes: true })
+    }
+
+    /// Write a recognizable value into row `pos` of plane 0 of a sequence.
+    fn write_row0(seq: &PagedSeq, pos: usize, val: f32) {
+        let v = seq.view();
+        let (bi, r) = (pos / v.block, pos % v.block);
+        unsafe {
+            *v.k[bi].add(r * 3) = val;
+        }
+    }
+
+    fn read_row0(seq: &PagedSeq, pos: usize) -> f32 {
+        let v = seq.view();
+        let (bi, r) = (pos / v.block, pos % v.block);
+        unsafe { *v.k[bi].add(r * 3) }
+    }
+
+    #[test]
+    fn alloc_release_recycles_blocks() {
+        let p = pool(4, 0);
+        let mut a = PagedSeq::new(p.clone());
+        a.prepare_append(9).unwrap(); // 3 blocks
+        a.commit(9);
+        assert_eq!(a.blocks(), 3);
+        assert_eq!(p.stats().blocks_in_use, 3);
+        drop(a);
+        let s = p.stats();
+        assert_eq!(s.blocks_in_use, 0);
+        assert_eq!(s.peak_blocks, 3);
+        // A new sequence reuses the freed blocks instead of growing.
+        let mut b = PagedSeq::new(p.clone());
+        b.prepare_append(12).unwrap();
+        b.commit(12);
+        assert_eq!(p.stats().allocated_blocks, 3);
+    }
+
+    #[test]
+    fn pool_cap_is_enforced() {
+        let p = pool(4, 2);
+        let mut a = PagedSeq::new(p.clone());
+        a.prepare_append(8).unwrap();
+        a.commit(8);
+        let mut b = PagedSeq::new(p.clone());
+        let err = b.prepare_append(1).unwrap_err().to_string();
+        assert!(err.contains("kv pool exhausted"), "{err}");
+        drop(a);
+        // Capacity returns once the holder drops.
+        b.prepare_append(1).unwrap();
+    }
+
+    #[test]
+    fn fork_copy_on_write_preserves_parent_tail() {
+        let p = pool(4, 0);
+        let mut a = PagedSeq::new(p.clone());
+        a.prepare_append(6).unwrap(); // block 0 full, block 1 partial
+        a.commit(6);
+        write_row0(&a, 5, 1.5);
+        let mut b = a.fork();
+        assert_eq!(b.len(), 6);
+        // Appending through the fork copies the shared partial tail...
+        b.prepare_append(1).unwrap();
+        write_row0(&b, 6, 9.0);
+        b.commit(1);
+        // ...so the parent's tail data survives and both see position 5.
+        assert_eq!(read_row0(&a, 5), 1.5);
+        assert_eq!(read_row0(&b, 5), 1.5);
+        let s = p.stats();
+        assert_eq!(s.cow_copies, 1);
+        // The parent can still extend its own (now exclusively owned) tail.
+        a.prepare_append(1).unwrap();
+        write_row0(&a, 6, -3.0);
+        a.commit(1);
+        assert_eq!(read_row0(&b, 6), 9.0);
+        assert_eq!(read_row0(&a, 6), -3.0);
+    }
+
+    #[test]
+    fn registry_adopts_longest_full_block_prefix() {
+        let p = pool(4, 0);
+        let prompt: Vec<i32> = (0..10).collect();
+        let mut a = PagedSeq::new(p.clone());
+        a.prepare_append(10).unwrap();
+        a.commit(10);
+        write_row0(&a, 0, 7.0);
+        a.register_prefix(&prompt); // registers 4- and 8-position prefixes
+        assert_eq!(p.stats().registered_prefixes, 2);
+
+        // Same 8-token opening, different continuation: adopt 2 blocks.
+        let mut p2: Vec<i32> = (0..9).collect();
+        p2[8] = 99;
+        let (b, matched) = PagedSeq::begin(&p, &p2);
+        assert_eq!(matched, 8);
+        assert_eq!(b.blocks(), 2);
+        assert_eq!(read_row0(&b, 0), 7.0);
+        assert_eq!(p.stats().shared_hits, 2);
+
+        // Only the first block matches → adopt 1.
+        let mut p3: Vec<i32> = (0..10).collect();
+        p3[5] = 42;
+        let (c, matched) = PagedSeq::begin(&p, &p3);
+        assert_eq!(matched, 4);
+        assert_eq!(c.blocks(), 1);
+
+        // No full-block match (adoption is capped at len - 1).
+        let (d, matched) = PagedSeq::begin(&p, &[0, 1, 2, 3]);
+        assert_eq!(matched, 0);
+        assert_eq!(d.blocks(), 0);
+    }
+
+    #[test]
+    fn registered_blocks_survive_their_author() {
+        let p = pool(4, 0);
+        let prompt: Vec<i32> = (50..58).collect();
+        let mut a = PagedSeq::new(p.clone());
+        a.prepare_append(8).unwrap();
+        a.commit(8);
+        write_row0(&a, 7, 2.25);
+        a.register_prefix(&prompt);
+        drop(a);
+        // The registry's refcount keeps both blocks alive.
+        assert_eq!(p.stats().blocks_in_use, 2);
+        let mut ext = prompt.clone();
+        ext.push(0);
+        let (b, matched) = PagedSeq::begin(&p, &ext);
+        assert_eq!(matched, 8);
+        assert_eq!(read_row0(&b, 7), 2.25);
+    }
+
+    #[test]
+    fn sharing_disabled_pool_never_adopts() {
+        let p = KvPool::new(2, 2, 3, 4, KvPoolOpts { block: 4, max_blocks: 0, share_prefixes: false });
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut a = PagedSeq::new(p.clone());
+        a.prepare_append(8).unwrap();
+        a.commit(8);
+        a.register_prefix(&prompt);
+        let (b, matched) = PagedSeq::begin(&p, &[0, 1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!((matched, b.blocks()), (0, 0));
+        assert_eq!(p.stats().registered_prefixes, 0);
+    }
+}

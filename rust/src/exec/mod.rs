@@ -17,19 +17,29 @@
 //!
 //! Autoregressive generation gets its own resolved fast path:
 //! [`Executor::decode_plan`] returns a [`DecodePlan`] that drives the
-//! incremental `dec_*` artifact — per-sequence K/V caches
-//! ([`DecodeState`]) grow by one row per layer per generated token instead
-//! of recomputing the full `n_ctx` prefill each step. On runtimes that
+//! incremental `dec_*` artifact. Per-sequence K/V lives in fixed-size
+//! blocks of a shared, refcounted [`kv_pool::KvPool`]: a [`DecodeState`]
+//! holds a block *table* rather than an owned full-`n_ctx` slab, the
+//! interpreter appends each step's new rows into the blocks in place (zero
+//! cache copy per step — traffic scales with tokens fed, not context
+//! capacity), identical prompt prefixes share blocks across sequences, and
+//! forks copy-on-write at the first divergent block. On runtimes that
 //! prefer fixed shapes (gated PJRT, where `dec_*` has no AOT lowering) the
 //! plan falls back to full prefill-per-step through the fused `fwd_*`
 //! artifact ([`DecodeMode::Prefill`]) — same outputs, more arithmetic.
 
+pub mod kv_pool;
+
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Context, Result};
 
+pub use kv_pool::{KvPool, KvPoolOpts, KvPoolStats, PagedSeq};
+
 use crate::model::{ModelConfig, ModelKind, WeightStore};
+use crate::runtime::native::forward::PagedKv;
 use crate::runtime::{Input, Runtime};
 use crate::tensor::Tensor;
 
@@ -209,15 +219,16 @@ impl DecodeMode {
 }
 
 /// Per-sequence decode state owned by the caller: the token history plus
-/// (in [`DecodeMode::KvCache`]) per-layer K/V caches laid out
-/// `[layers, heads, n_ctx, dqk|dh]` at full context capacity — appending a
-/// step's rows is a straight block copy and batch assembly never reshapes.
-/// Rows at positions ≥ [`DecodeState::len`] are zero padding the masked
-/// incremental attention never reads.
+/// (in [`DecodeMode::KvCache`]) a paged K/V sequence — a table of
+/// fixed-size pool blocks that grows with the tokens actually fed, in
+/// place, instead of a full-`n_ctx` slab copied through every dispatch.
+/// Blocks covering a shared prompt prefix may be referenced by several
+/// states at once (read-only); the first divergent append copies. Dropping
+/// the state releases its blocks back to the pool.
 pub struct DecodeState {
     ids: Vec<i32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    /// `Some` for KV-cache plans; prefill-per-step keeps ids only.
+    paged: Option<PagedSeq>,
 }
 
 impl DecodeState {
@@ -233,6 +244,19 @@ impl DecodeState {
     /// Token history (prompt + appended continuations).
     pub fn ids(&self) -> &[i32] {
         &self.ids
+    }
+
+    /// Pool blocks this sequence holds (0 for prefill-mode states).
+    pub fn kv_blocks(&self) -> usize {
+        self.paged.as_ref().map_or(0, |s| s.blocks())
+    }
+
+    /// A branch of this sequence sharing every K/V block: both sides keep
+    /// decoding independently, and the first append into the shared tail
+    /// block copies it (copy-on-write) — the speculative-decode /
+    /// best-of-n primitive.
+    pub fn fork(&self) -> DecodeState {
+        DecodeState { ids: self.ids.clone(), paged: self.paged.as_ref().map(|s| s.fork()) }
     }
 }
 
@@ -257,6 +281,16 @@ pub struct DecodePlan<'rt, 'w> {
     pub mode: DecodeMode,
     params: Vec<&'w Tensor>,
     arts: ArtCache,
+    /// Paged block allocator behind every KV-cache sequence of this plan
+    /// (`None` in prefill mode, which keeps no cache at all).
+    pool: Option<Arc<KvPool>>,
+    /// KV-cache dispatches so far (telemetry).
+    kv_steps: AtomicU64,
+    /// Cache-management bytes so far: K+V rows appended into pool blocks.
+    /// Paged appends touch only the fresh rows, so this grows with tokens
+    /// fed — independent of `n_ctx` capacity (the old slab path copied
+    /// full-capacity caches in and out of every dispatch).
+    kv_bytes: AtomicU64,
 }
 
 impl DecodePlan<'_, '_> {
@@ -280,17 +314,63 @@ impl DecodePlan<'_, '_> {
         self.arts.len()
     }
 
-    /// A fresh empty sequence state for this plan.
+    /// A fresh empty sequence state for this plan. Blocks are allocated
+    /// lazily as tokens arrive; prefill-per-step never touches a cache.
     pub fn begin(&self) -> DecodeState {
-        let (l, h, n) = (self.cfg.layers, self.cfg.heads, self.cfg.n_ctx);
-        let (k, v) = match self.mode {
-            DecodeMode::KvCache => {
-                (vec![0.0; l * h * n * self.dqk], vec![0.0; l * h * n * self.cfg.dh()])
-            }
-            // Prefill-per-step never touches a K/V cache.
-            DecodeMode::Prefill => (Vec::new(), Vec::new()),
+        let paged = self.pool.as_ref().map(|p| PagedSeq::new(p.clone()));
+        DecodeState { ids: Vec::with_capacity(self.cfg.n_ctx), paged }
+    }
+
+    /// Begin a sequence for `prompt`, adopting shared prompt-prefix blocks
+    /// registered by earlier sequences (see [`DecodePlan::share_prefix`])
+    /// when the pool finds a full-block match. Returns the state plus the
+    /// number of adopted positions `skip` — the caller feeds
+    /// `prompt[skip..]`, which is never empty (at most `prompt.len() - 1`
+    /// positions are adopted, so the first extend still yields the
+    /// prompt's next-token logits). Adopted rows were computed by the
+    /// registering sequence with per-row arithmetic identical to a fresh
+    /// prefill, so downstream logits are unchanged.
+    pub fn begin_prompt(&self, prompt: &[i32]) -> Result<(DecodeState, usize)> {
+        if prompt.is_empty() {
+            bail!("begin_prompt: empty prompt");
+        }
+        if prompt.len() > self.cfg.n_ctx {
+            bail!(
+                "begin_prompt: {} prompt positions exceed n_ctx {}",
+                prompt.len(),
+                self.cfg.n_ctx
+            );
+        }
+        let Some(pool) = &self.pool else {
+            return Ok((self.begin(), 0));
         };
-        DecodeState { ids: Vec::with_capacity(n), k, v }
+        let (seq, skip) = PagedSeq::begin(pool, prompt);
+        Ok((DecodeState { ids: prompt[..skip].to_vec(), paged: Some(seq) }, skip))
+    }
+
+    /// Publish the first `upto` positions of `st` (full blocks only) in
+    /// the pool's prefix registry, so later [`DecodePlan::begin_prompt`]
+    /// calls with the same opening adopt the K/V blocks instead of
+    /// recomputing the prefill. No-op for prefill-mode plans and pools
+    /// with sharing disabled.
+    pub fn share_prefix(&self, st: &DecodeState, upto: usize) -> Result<()> {
+        if upto > st.len() {
+            bail!("share_prefix: {upto} positions of a {}-long sequence", st.len());
+        }
+        if let Some(seq) = &st.paged {
+            seq.register_prefix(&st.ids[..upto]);
+        }
+        Ok(())
+    }
+
+    /// Cache-traffic counters: `(kv dispatches, K/V bytes appended)`.
+    pub fn kv_counters(&self) -> (u64, u64) {
+        (self.kv_steps.load(Ordering::Relaxed), self.kv_bytes.load(Ordering::Relaxed))
+    }
+
+    /// Block-pool telemetry (`None` for prefill-mode plans).
+    pub fn pool_stats(&self) -> Option<KvPoolStats> {
+        self.pool.as_ref().map(|p| p.stats())
     }
 
     /// [`DecodePlan::extend_at`] at the batch's true size.
@@ -349,66 +429,58 @@ impl DecodePlan<'_, '_> {
         new: &[&[i32]],
         dispatch: usize,
     ) -> Result<Vec<Vec<f32>>> {
-        let (l, h, n) = (self.cfg.layers, self.cfg.heads, self.cfg.n_ctx);
+        let (l, h) = (self.cfg.layers, self.cfg.heads);
         let (dqk, dh, vocab) = (self.dqk, self.cfg.dh(), self.cfg.vocab);
         let b = dispatch;
         let m = new.iter().map(|t| t.len()).max().unwrap();
-        let clen_k = l * h * n * dqk;
-        let clen_v = l * h * n * dh;
         let mut ids = vec![0i32; b * m];
-        // Padding rows decode one dummy token at position 0; their outputs
-        // are dropped.
+        // Padding rows carry inert lengths; the paged interpreter runs no
+        // work for examples beyond the live block tables.
         let mut past = vec![0i32; b];
         let mut fresh = vec![1i32; b];
-        let mut kbuf = vec![0.0f32; b * clen_k];
-        let mut vbuf = vec![0.0f32; b * clen_v];
-        for (e, (st, toks)) in states.iter().zip(new).enumerate() {
-            if st.k.len() != clen_k || st.v.len() != clen_v {
+        for (e, (st, toks)) in states.iter_mut().zip(new).enumerate() {
+            let Some(seq) = st.paged.as_mut() else {
                 bail!(
                     "extend_at: sequence {e} state was not created by a kv-cache plan \
-                     of these dims (cache {} / {} values, expected {clen_k} / {clen_v})",
-                    st.k.len(),
-                    st.v.len()
+                     (no paged cache; prefill-mode states carry ids only)"
+                );
+            };
+            let dims = seq.pool().dims();
+            if dims != (l, h, dqk, dh) {
+                bail!(
+                    "extend_at: sequence {e} state was not created by a kv-cache plan \
+                     of these dims (pool {dims:?}, plan ({l}, {h}, {dqk}, {dh}))"
                 );
             }
+            // Make the appended positions writable up front: copy-on-write
+            // a shared tail block, allocate fresh blocks. On error the
+            // sequence keeps its committed length — extra capacity is
+            // reclaimed when the state drops.
+            seq.prepare_append(toks.len())?;
             ids[e * m..e * m + toks.len()].copy_from_slice(toks);
-            past[e] = st.len() as i32;
+            past[e] = st.ids.len() as i32;
             fresh[e] = toks.len() as i32;
-            kbuf[e * clen_k..(e + 1) * clen_k].copy_from_slice(&st.k);
-            vbuf[e * clen_v..(e + 1) * clen_v].copy_from_slice(&st.v);
         }
-        let kt = Tensor::from_vec(&[b, l, h, n, dqk], kbuf);
-        let vt = Tensor::from_vec(&[b, l, h, n, dh], vbuf);
+        let views: Vec<PagedKv> =
+            states.iter().map(|st| st.paged.as_ref().unwrap().view()).collect();
         let art = self.artifact(b);
-        let mut inputs: Vec<Input> = Vec::with_capacity(5 + self.params.len());
-        inputs.push(Input::I32(&ids, vec![b, m]));
-        inputs.push(Input::I32(&past, vec![b]));
-        inputs.push(Input::I32(&fresh, vec![b]));
-        inputs.push(Input::F32(&kt));
-        inputs.push(Input::F32(&vt));
-        inputs.extend(self.params.iter().map(|&t| Input::F32(t)));
-        let mut out = self.rt.execute(&art, &inputs)?;
-        if out.len() != 3 {
-            bail!("dec artifact '{art}' returned {} outputs, expected 3", out.len());
-        }
-        let vnew = out.remove(2);
-        let knew = out.remove(1);
-        let logits = out.remove(0);
+        let params: Vec<Input> = self.params.iter().map(|&t| Input::F32(t)).collect();
+        let logits = self.rt.execute_decode_paged(&art, &ids, &past, &fresh, &views, &params)?;
+        // The interpreter wrote the new K/V rows into the blocks in place;
+        // commit the lengths and account the appended rows — the only
+        // cache traffic this step caused.
+        let row_bytes = l * h * (dqk + dh) * std::mem::size_of::<f32>();
+        let mut appended = 0usize;
         let mut rows = Vec::with_capacity(states.len());
         for (e, (st, toks)) in states.iter_mut().zip(new).enumerate() {
             let f = toks.len();
-            let old = st.len();
             st.ids.extend_from_slice(toks);
-            for lh in 0..l * h {
-                let ks = (e * l * h + lh) * m * dqk;
-                let kd = (lh * n + old) * dqk;
-                st.k[kd..kd + f * dqk].copy_from_slice(&knew.data()[ks..ks + f * dqk]);
-                let vs = (e * l * h + lh) * m * dh;
-                let vd = (lh * n + old) * dh;
-                st.v[vd..vd + f * dh].copy_from_slice(&vnew.data()[vs..vs + f * dh]);
-            }
+            st.paged.as_mut().unwrap().commit(f);
+            appended += f;
             rows.push(logits.data()[e * m * vocab..(e * m + f) * vocab].to_vec());
         }
+        self.kv_steps.fetch_add(1, Ordering::Relaxed);
+        self.kv_bytes.fetch_add((appended * row_bytes) as u64, Ordering::Relaxed);
         Ok(rows)
     }
 
@@ -449,10 +521,32 @@ impl DecodePlan<'_, '_> {
     /// step, then `steps − 1` single-token decode steps feeding back each
     /// argmax. Returns the `steps` predicted token ids and the logits row
     /// behind each prediction. The final prediction is never appended, so
-    /// `prompt.len() + steps − 1 ≤ n_ctx` must hold.
+    /// `prompt.len() + steps − 1 ≤ n_ctx` must hold. Shared prompt-prefix
+    /// blocks are adopted and (on completion) registered when the plan's
+    /// pool has sharing enabled.
     pub fn greedy(&self, prompt: &[i32], steps: usize) -> Result<(Vec<i32>, Vec<Vec<f32>>)> {
+        self.greedy_chunked(prompt, steps, 0)
+    }
+
+    /// [`DecodePlan::greedy`] with the prompt prefill split into chunks of
+    /// at most `chunk` tokens (`0` = one-shot). Per-row arithmetic is
+    /// independent of how positions are grouped into dispatches, so the
+    /// generated tokens are identical; the serving engine uses the same
+    /// chunking to keep decode ITL flat while a long prompt prefills.
+    pub fn greedy_chunked(
+        &self,
+        prompt: &[i32],
+        steps: usize,
+        chunk: usize,
+    ) -> Result<(Vec<i32>, Vec<Vec<f32>>)> {
         if prompt.is_empty() || steps == 0 {
-            bail!("greedy: prompt and steps must be non-empty");
+            // `steps == 0` must be rejected up front: the capacity guard
+            // below computes `steps - 1` in usize.
+            bail!(
+                "greedy: prompt and steps must be non-empty \
+                 ({} prompt tokens, {steps} steps)",
+                prompt.len()
+            );
         }
         if prompt.len() + steps - 1 > self.cfg.n_ctx {
             bail!(
@@ -462,8 +556,16 @@ impl DecodePlan<'_, '_> {
             );
         }
         let vocab = self.cfg.vocab;
-        let mut st = self.begin();
-        let mut toks: Vec<i32> = prompt.to_vec();
+        let (mut st, skip) = self.begin_prompt(prompt)?;
+        let mut pending = &prompt[skip..];
+        // Feed all but the final prompt chunk; their logits are interior
+        // rows the greedy loop never reads.
+        while chunk > 0 && pending.len() > chunk {
+            let (head, rest) = pending.split_at(chunk);
+            self.extend(&mut [&mut st], &[head])?;
+            pending = rest;
+        }
+        let mut toks: Vec<i32> = pending.to_vec();
         let mut preds = Vec::with_capacity(steps);
         let mut rows = Vec::with_capacity(steps);
         for _ in 0..steps {
@@ -475,6 +577,8 @@ impl DecodePlan<'_, '_> {
             rows.push(last);
             toks = vec![p];
         }
+        // Publish the prompt's full blocks for reuse by later sequences.
+        self.share_prefix(&st, prompt.len())?;
         Ok((preds, rows))
     }
 }
@@ -659,17 +763,48 @@ impl<'rt> Executor<'rt> {
     }
 
     /// [`Executor::decode_plan`] at an explicit [`DecodeMode`] (the bench
-    /// harness pins both modes to measure the KV-cache speedup).
+    /// harness pins both modes to measure the KV-cache speedup), with
+    /// default pool knobs.
     pub fn decode_plan_with<'w>(
         &self,
         w: &'w WeightStore,
         mode: DecodeMode,
     ) -> Result<DecodePlan<'rt, 'w>> {
+        self.decode_plan_opts(w, mode, KvPoolOpts::default())
+    }
+
+    /// [`Executor::decode_plan_with`] with explicit [`KvPoolOpts`] (block
+    /// size, pool cap, prefix sharing) — the serving engine and the CLI
+    /// size the pool here. The pool is created per plan; sequences of one
+    /// plan share blocks, plans do not.
+    pub fn decode_plan_opts<'w>(
+        &self,
+        w: &'w WeightStore,
+        mode: DecodeMode,
+        pool_opts: KvPoolOpts,
+    ) -> Result<DecodePlan<'rt, 'w>> {
         if self.cfg.kind != ModelKind::Gpt {
             bail!("decode_plan on non-gpt model '{}'", self.cfg.name);
         }
         let (dqk, o, params) = self.resolve_params(w)?;
-        Ok(DecodePlan { rt: self.rt, cfg: self.cfg, dqk, o, mode, params, arts: ArtCache::new() })
+        let pool = match mode {
+            DecodeMode::KvCache => {
+                Some(KvPool::new(self.cfg.layers, self.cfg.heads, dqk, self.cfg.dh(), pool_opts))
+            }
+            DecodeMode::Prefill => None,
+        };
+        Ok(DecodePlan {
+            rt: self.rt,
+            cfg: self.cfg,
+            dqk,
+            o,
+            mode,
+            params,
+            arts: ArtCache::new(),
+            pool,
+            kv_steps: AtomicU64::new(0),
+            kv_bytes: AtomicU64::new(0),
+        })
     }
 
     /// Full forward: gpt logits [B, n, vocab].

@@ -115,6 +115,27 @@ impl Runtime {
         cfg!(pjrt_backend) && !self.manifest.is_empty()
     }
 
+    /// Paged-KV decode dispatch of a `dec_*` artifact — native backend
+    /// only: each live example's cache rides a block-table view and the new
+    /// K/V rows are appended into pool blocks in place, so no cache slabs
+    /// cross the call. Fixed-shape backends never reach here —
+    /// `DecodeMode::resolve` collapses them to prefill-per-step before a
+    /// KV-cache plan exists. Counts as one execution.
+    pub(crate) fn execute_decode_paged(
+        &self,
+        name: &str,
+        ids: &[i32],
+        past: &[i32],
+        fresh: &[i32],
+        seqs: &[native::forward::PagedKv],
+        params: &[Input<'_>],
+    ) -> Result<Tensor> {
+        let out = native::execute_decode_paged(name, ids, past, fresh, seqs, params)
+            .with_context(|| format!("native paged decode of artifact '{name}'"))?;
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
     /// Execute `name` on the selected backend. `inputs` follow the canonical
     /// parameter order of the artifact (data inputs first, then parameters
     /// in `param_spec` order). Returns the output tuple elements as f32

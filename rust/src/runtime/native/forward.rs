@@ -965,6 +965,261 @@ pub(crate) fn run_decode(
     ])
 }
 
+/// Block-table view of one sequence's paged K/V cache: per-block raw base
+/// pointers of the K and V planes (layout `[planes, block, dqk|dh]` per
+/// block, `planes = layers * heads`), built by
+/// `exec::kv_pool::PagedSeq::view`. Position `pos` lives in block
+/// `pos / block`, row `pos % block`.
+///
+/// Pointers stay valid for the owning pool's lifetime (blocks are never
+/// deallocated). Writing rows requires the exclusive ownership the pool's
+/// `prepare_append` establishes; shared prefix blocks are read-only.
+pub(crate) struct PagedKv {
+    pub k: Vec<*mut f32>,
+    pub v: Vec<*mut f32>,
+    /// Positions per block.
+    pub block: usize,
+    /// Planes per block (`layers * heads`).
+    pub planes: usize,
+}
+
+impl PagedKv {
+    /// Positions the block table can hold.
+    pub(crate) fn capacity(&self) -> usize {
+        self.k.len() * self.block
+    }
+}
+
+// SAFETY: a `PagedKv` is a bundle of raw plane pointers into pool blocks;
+// the aliasing discipline (exclusive writer per unshared block, read-only
+// shared blocks, mutex publication) is enforced by the pool — see
+// `exec/kv_pool.rs`. Sending the view to an interpreter worker moves only
+// the pointers.
+unsafe impl Send for PagedKv {}
+unsafe impl Sync for PagedKv {}
+
+/// Row `pos` of plane `lh` of a paged cache (`width` = dqk or dh).
+///
+/// # Safety
+/// `pos / block` must be within `planes`, each plane pointer must cover
+/// `(lh + 1) * block * width` floats, and no concurrent writer may exist
+/// for that block (the pool's ownership rules).
+unsafe fn paged_row<'a>(
+    planes: &[*mut f32],
+    block: usize,
+    lh: usize,
+    width: usize,
+    pos: usize,
+) -> &'a [f32] {
+    let base = planes[pos / block];
+    std::slice::from_raw_parts(base.add((lh * block + pos % block) * width), width)
+}
+
+/// Mutable variant of [`paged_row`].
+///
+/// # Safety
+/// As [`paged_row`], plus: the caller must be the block's exclusive owner.
+unsafe fn paged_row_mut<'a>(
+    planes: &[*mut f32],
+    block: usize,
+    lh: usize,
+    width: usize,
+    pos: usize,
+) -> &'a mut [f32] {
+    let base = planes[pos / block];
+    std::slice::from_raw_parts_mut(base.add((lh * block + pos % block) * width), width)
+}
+
+/// [`attention_cached`] reading every key/value row — cached and new alike —
+/// through a block table. The caller has already appended the `m` new rows
+/// at positions `past..past+m` of plane `lh`, so row `s` of the logit loop
+/// is one uniform block lookup; the per-row arithmetic (dot order, softmax,
+/// accumulation order) is identical to the contiguous path, making the two
+/// bitwise-equal for equal inputs.
+pub(crate) fn attention_paged(
+    q_new: &[f32],
+    kv: &PagedKv,
+    lh: usize,
+    past: usize,
+    m: usize,
+    dqk: usize,
+    dv: usize,
+    scale: f32,
+) -> Vec<f32> {
+    debug_assert_eq!(q_new.len(), m * dqk);
+    debug_assert!(past + m <= kv.capacity());
+    let mut att = vec![0.0f32; m * dv];
+    let mut logits: Vec<f32> = Vec::with_capacity(past + m);
+    for j in 0..m {
+        let span = past + j + 1; // keys visible to absolute position past + j
+        let qj = &q_new[j * dqk..(j + 1) * dqk];
+        logits.clear();
+        for s in 0..span {
+            // SAFETY: s < past + m ≤ capacity; rows ≤ past are committed,
+            // rows past..past+m were written by this call's owner.
+            let krow = unsafe { paged_row(&kv.k, kv.block, lh, dqk, s) };
+            logits.push(dot_f32(qj, krow) * scale);
+        }
+        softmax_rows(&mut logits, 1, span);
+        let out = &mut att[j * dv..(j + 1) * dv];
+        for (s, &p) in logits.iter().enumerate() {
+            // SAFETY: as above.
+            let vrow = unsafe { paged_row(&kv.v, kv.block, lh, dv, s) };
+            for (o, &vv) in out.iter_mut().zip(vrow) {
+                *o += p * vv;
+            }
+        }
+    }
+    att
+}
+
+/// [`decode_example`] against a paged cache: the new K/V rows are written
+/// into the sequence's blocks **in place** (positions `past..past+m` of
+/// every layer/head plane) and attention gathers all rows through the block
+/// table — no cache slab enters or leaves the call, so per-step cache
+/// traffic is the appended rows only, independent of `n_ctx` capacity.
+/// Returns the logits `[m, vocab]`.
+pub(crate) fn decode_example_paged(
+    cfg: &ModelConfig,
+    dqk: usize,
+    o: usize,
+    p: &ModelParams<'_>,
+    ids_new: &[i32],
+    past: usize,
+    kv: &PagedKv,
+) -> Result<Vec<f32>> {
+    let (n, d, h, dh, vocab) = (cfg.n_ctx, cfg.d, cfg.heads, cfg.dh(), cfg.vocab);
+    let m = ids_new.len();
+    if m == 0 {
+        bail!("decode: no new tokens");
+    }
+    if past + m > n {
+        bail!("decode: {past} cached + {m} new positions exceed n_ctx {n}");
+    }
+    if kv.planes != cfg.layers * h || kv.k.len() != kv.v.len() {
+        bail!(
+            "paged decode: table has {} planes / {} k vs {} v blocks, expected {} planes",
+            kv.planes,
+            kv.k.len(),
+            kv.v.len(),
+            cfg.layers * h
+        );
+    }
+    if past + m > kv.capacity() {
+        bail!(
+            "paged decode: block table covers {} positions, need {}",
+            kv.capacity(),
+            past + m
+        );
+    }
+    // Dense-head scale even when dqk < dh (§3.4), as in the full forward.
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let (wemb, pos) = match &p.embed {
+        EmbedParams::Gpt { wemb, pos } => (*wemb, *pos),
+        EmbedParams::Vit { .. } => bail!("decode on vit params"),
+    };
+    let mut x = vec![0.0f32; m * d];
+    for (j, &id) in ids_new.iter().enumerate() {
+        if id < 0 || id as usize >= vocab {
+            bail!("token id {id} out of vocab range 0..{vocab}");
+        }
+        let row = &wemb[id as usize * d..(id as usize + 1) * d];
+        let ps = &pos[(past + j) * d..(past + j + 1) * d];
+        let dst = &mut x[j * d..(j + 1) * d];
+        for c in 0..d {
+            dst[c] = row[c] + ps[c];
+        }
+    }
+
+    for (l, bp) in p.blocks.iter().enumerate() {
+        let xn = layernorm(&x, m, d, bp.ln1g, bp.ln1b);
+        let qf = linear(&xn, m, d, bp.wq, h * dqk, Some(bp.bq));
+        let kf = linear(&xn, m, d, bp.wk, h * dqk, Some(bp.bk));
+        let vf = linear(&xn, m, d, bp.wv, h * dh, Some(bp.bv));
+        let mut merged = vec![0.0f32; m * h * dh];
+        for head in 0..h {
+            let qh = gather_cols(&qf, m, h * dqk, head * dqk, dqk);
+            let kh = gather_cols(&kf, m, h * dqk, head * dqk, dqk);
+            let vh = gather_cols(&vf, m, h * dh, head * dh, dh);
+            let lh = l * h + head;
+            // Append the new rows in place, then attend over everything
+            // through the table (the appended rows included).
+            for j in 0..m {
+                // SAFETY: capacity checked above; the caller guarantees
+                // exclusive ownership of the blocks receiving writes.
+                unsafe {
+                    paged_row_mut(&kv.k, kv.block, lh, dqk, past + j)
+                        .copy_from_slice(&kh[j * dqk..(j + 1) * dqk]);
+                    paged_row_mut(&kv.v, kv.block, lh, dh, past + j)
+                        .copy_from_slice(&vh[j * dh..(j + 1) * dh]);
+                }
+            }
+            let att = attention_paged(&qh, kv, lh, past, m, dqk, dh, scale);
+            scatter_cols(&mut merged, &att, m, h * dh, head * dh, dh);
+        }
+        let attn_out = linear(&merged, m, h * dh, bp.wo, d, Some(bp.bo));
+        let y: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+        let yn = layernorm(&y, m, d, bp.ln2g, bp.ln2b);
+        let mut hidden = linear(&yn, m, d, bp.w1, o, Some(bp.b1));
+        for v in hidden.iter_mut() {
+            *v = gelu(*v);
+        }
+        let mlp_out = linear(&hidden, m, o, bp.w2, d, Some(bp.b2));
+        x = y.iter().zip(&mlp_out).map(|(a, b)| a + b).collect();
+    }
+    let xn = layernorm(&x, m, d, p.head_ln_g, p.head_ln_b);
+    Ok(linear(&xn, m, d, p.head_w, vocab, Some(p.head_b)))
+}
+
+/// Paged-cache variant of [`run_decode`]: ids/past/fresh arrive as direct
+/// slices and each live example's K/V rides a [`PagedKv`] block-table view
+/// instead of slab tensors; `inp` carries only the parameter list. Examples
+/// `≥ seqs.len()` are dispatch padding — their logits rows stay zero and no
+/// work runs for them, which keeps outputs identical across dispatch
+/// policies. Output: logits `[b, m, vocab]` (the new K/V rows were appended
+/// in place).
+pub(crate) fn run_decode_paged(
+    cfg: &'static ModelConfig,
+    dqk: usize,
+    o: usize,
+    b: usize,
+    ids: &[i32],
+    past: &[i32],
+    fresh: &[i32],
+    seqs: &[PagedKv],
+    inp: &mut In<'_, '_>,
+) -> Result<Vec<Tensor>> {
+    if cfg.kind != ModelKind::Gpt {
+        bail!("dec artifact on non-gpt config '{}'", cfg.name);
+    }
+    let vocab = cfg.vocab;
+    if b == 0 || ids.is_empty() || ids.len() % b != 0 {
+        bail!("dec ids: {} values do not tile batch {b}", ids.len());
+    }
+    let m = ids.len() / b;
+    if past.len() != b || fresh.len() != b {
+        bail!("dec lens: {} past / {} fresh values, expected {b}", past.len(), fresh.len());
+    }
+    if seqs.len() > b {
+        bail!("dec paged: {} block tables for batch {b}", seqs.len());
+    }
+    let p = ModelParams::read_at(cfg, dqk, o, inp)?;
+    let outs: Vec<Result<Vec<f32>>> = threads::parallel_map(seqs.len(), |e| {
+        let (pe, fe) = (past[e], fresh[e]);
+        if pe < 0 || fe < 1 || fe as usize > m {
+            bail!("dec lens: example {e} has past {pe} / fresh {fe} for m {m}");
+        }
+        decode_example_paged(cfg, dqk, o, &p, &ids[e * m..e * m + fe as usize], pe as usize, &seqs[e])
+    });
+    let mut logits = vec![0.0f32; b * m * vocab];
+    for (e, r) in outs.into_iter().enumerate() {
+        let lg = r?;
+        logits[e * m * vocab..e * m * vocab + lg.len()].copy_from_slice(&lg);
+    }
+    Ok(vec![Tensor::from_vec(&[b, m, vocab], logits)])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1083,6 +1338,97 @@ mod tests {
             for (a, b) in att.iter().zip(&full[past * dv..]) {
                 assert!((a - b).abs() < 1e-6, "past={past}: {a} vs {b}");
             }
+        }
+    }
+
+    /// Deterministic xorshift-style values in roughly [-1.5, 1.5].
+    fn prand(seed: &mut u64) -> f32 {
+        *seed ^= *seed << 13;
+        *seed ^= *seed >> 7;
+        *seed ^= *seed << 17;
+        ((*seed % 3001) as f32 - 1500.0) / 1000.0
+    }
+
+    #[test]
+    fn cached_attention_property_random_splits_and_pruned_shapes() {
+        // Satellite coverage for `attention_cached`: across sequence
+        // lengths, pruned key widths dqk (≤ dh, the CORP per-head pruning
+        // shape) and value widths dv, and *every* past/fresh split, the
+        // incremental rows must match the full causal attention.
+        let mut seed = 0x00c0_ffee_u64;
+        for &(n, dqk, dv) in
+            &[(1usize, 1usize, 1usize), (4, 2, 4), (7, 3, 5), (8, 8, 8), (12, 5, 2), (16, 2, 7)]
+        {
+            let q: Vec<f32> = (0..n * dqk).map(|_| prand(&mut seed)).collect();
+            let k: Vec<f32> = (0..n * dqk).map(|_| prand(&mut seed)).collect();
+            let v: Vec<f32> = (0..n * dv).map(|_| prand(&mut seed)).collect();
+            // Dense-head scale with dh ≥ dqk, as the pruned path uses.
+            let scale = 1.0 / (dv.max(dqk) as f32).sqrt();
+            let (full, _) = attention_one(&q, &k, &v, n, dqk, dv, scale, true);
+            for past in 0..n {
+                let m = n - past;
+                let att = attention_cached(
+                    &q[past * dqk..],
+                    &k[..past * dqk],
+                    &k[past * dqk..],
+                    &v[..past * dv],
+                    &v[past * dv..],
+                    past,
+                    m,
+                    dqk,
+                    dv,
+                    scale,
+                );
+                for (j, (a, b)) in att.iter().zip(&full[past * dv..]).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "n={n} dqk={dqk} dv={dv} past={past} j={j}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_attention_matches_cached_bitwise() {
+        // attention_paged reads rows through a block table the test builds
+        // by hand (1 plane, block size 3, so rows straddle blocks); outputs
+        // must be bitwise equal to attention_cached on the same rows.
+        let (n, dqk, dv, block) = (8usize, 3usize, 2usize, 3usize);
+        let mut seed = 0x5eed_u64;
+        let q: Vec<f32> = (0..n * dqk).map(|_| prand(&mut seed)).collect();
+        let k: Vec<f32> = (0..n * dqk).map(|_| prand(&mut seed)).collect();
+        let v: Vec<f32> = (0..n * dv).map(|_| prand(&mut seed)).collect();
+        let nb = n.div_ceil(block);
+        let mut kblocks: Vec<Vec<f32>> = vec![vec![0.0; block * dqk]; nb];
+        let mut vblocks: Vec<Vec<f32>> = vec![vec![0.0; block * dv]; nb];
+        for pos in 0..n {
+            let (bi, r) = (pos / block, pos % block);
+            kblocks[bi][r * dqk..(r + 1) * dqk].copy_from_slice(&k[pos * dqk..(pos + 1) * dqk]);
+            vblocks[bi][r * dv..(r + 1) * dv].copy_from_slice(&v[pos * dv..(pos + 1) * dv]);
+        }
+        let kv = PagedKv {
+            k: kblocks.iter_mut().map(|b| b.as_mut_ptr()).collect(),
+            v: vblocks.iter_mut().map(|b| b.as_mut_ptr()).collect(),
+            block,
+            planes: 1,
+        };
+        for past in 0..n {
+            let m = n - past;
+            let want = attention_cached(
+                &q[past * dqk..],
+                &k[..past * dqk],
+                &k[past * dqk..],
+                &v[..past * dv],
+                &v[past * dv..],
+                past,
+                m,
+                dqk,
+                dv,
+                0.6,
+            );
+            let got = attention_paged(&q[past * dqk..], &kv, 0, past, m, dqk, dv, 0.6);
+            assert_eq!(got, want, "past={past}");
         }
     }
 }

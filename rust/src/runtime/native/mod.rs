@@ -100,6 +100,31 @@ pub fn supports(name: &str) -> bool {
     parse(name).is_some()
 }
 
+/// Execute the paged-cache variant of a `dec_*` artifact: same math as the
+/// slab interpreter ([`forward::run_decode`]) but each live example's K/V
+/// lives in pool blocks addressed through a block-table view
+/// ([`forward::PagedKv`]) and the new rows are appended in place — no cache
+/// slabs enter or leave the call. `params` carries only the parameter list
+/// (`param_spec_at` order); returns the logits `[b, m, vocab]`.
+pub(crate) fn execute_decode_paged(
+    name: &str,
+    ids: &[i32],
+    past: &[i32],
+    fresh: &[i32],
+    seqs: &[forward::PagedKv],
+    params: &[Input<'_>],
+) -> Result<Tensor> {
+    match parse(name) {
+        Some(Op::Decode { cfg, dqk, o, b }) => {
+            let mut inp = In::new(params);
+            let mut out = forward::run_decode_paged(cfg, dqk, o, b, ids, past, fresh, seqs, &mut inp)
+                .with_context(|| format!("interpreting '{name}' (paged)"))?;
+            Ok(out.remove(0))
+        }
+        _ => bail!("'{name}' is not a dec_* artifact (paged decode)"),
+    }
+}
+
 /// Execute an artifact natively.
 pub fn execute(name: &str, inputs: &[Input<'_>]) -> Result<Vec<Tensor>> {
     let op = match parse(name) {

@@ -54,11 +54,12 @@ use crate::serve::workload::{DispatchPolicy, Workload};
 // the vendored `xla` client/executable types are not known to be.
 #[cfg(not(pjrt_backend))]
 use {
+    crate::exec::{KvPoolOpts, KvPoolStats},
     crate::serve::workload::{Plans, StepOutcome},
     crate::util::bench::percentile,
     crate::util::{threads, Pcg64},
     std::collections::VecDeque,
-    std::sync::{Condvar, Mutex},
+    std::sync::{Arc, Condvar, Mutex},
     std::time::{Duration, Instant},
 };
 
@@ -91,6 +92,12 @@ pub struct EngineOpts {
     /// Batch dispatch-shape policy (padded / exact / auto). Collapses to
     /// `Padded` on runtimes that prefer fixed shapes (gated PJRT).
     pub dispatch: DispatchPolicy,
+    /// KV pool: positions per block (`0` = pool default). Decode workloads
+    /// only; single-shot workloads never build a pool.
+    pub kv_block: usize,
+    /// KV pool capacity in blocks (`0` = unbounded). A run that outgrows
+    /// the cap fails fast with a clear error instead of thrashing.
+    pub kv_blocks: usize,
 }
 
 impl Default for EngineOpts {
@@ -105,6 +112,8 @@ impl Default for EngineOpts {
             exec_floor: 0.0,
             seed: 7,
             dispatch: DispatchPolicy::Auto,
+            kv_block: 0,
+            kv_blocks: 0,
         }
     }
 }
@@ -127,6 +136,20 @@ impl EngineOpts {
             bail!("run_engine: workers must be > 0 (got 0 — nothing would drain the queue)");
         }
         Ok(())
+    }
+}
+
+#[cfg(not(pjrt_backend))]
+impl EngineOpts {
+    /// Pool knobs for a decode unit's plan (prefix sharing always on; the
+    /// workload decides whether prompts actually share openings).
+    fn kv_pool_opts(&self) -> KvPoolOpts {
+        let mut o = KvPoolOpts::default();
+        if self.kv_block > 0 {
+            o.block = self.kv_block;
+        }
+        o.max_blocks = self.kv_blocks;
+        o
     }
 }
 
@@ -192,6 +215,23 @@ pub struct EngineStats {
     /// Served tokens per second of wall time (== throughput_fps for the
     /// vision workload, where every request is one image).
     pub throughput_tps: f64,
+    /// Mean K/V bytes appended to the paged cache per KV-cache dispatch
+    /// (0 for single-shot workloads and prefill-mode decode). Appends touch
+    /// only the fresh rows, so this scales with tokens fed per step —
+    /// independent of `n_ctx` capacity.
+    pub kv_bytes_per_step: f64,
+    /// High-water bytes of live KV pool blocks over the run.
+    pub kv_peak_bytes: u64,
+    /// Pool blocks still held at the end of the run (registered shared
+    /// prefixes; completed sequences release theirs as they finish).
+    pub kv_blocks_in_use: usize,
+    /// Cumulative KV block allocations (fresh or recycled).
+    pub kv_allocs: u64,
+    /// Blocks adopted from the shared-prefix registry instead of allocated
+    /// and recomputed.
+    pub kv_shared_hits: u64,
+    /// Copy-on-write block copies (a shared tail diverged).
+    pub kv_cow_copies: u64,
     /// Per-request records, sorted by id.
     pub records: Vec<RequestRecord>,
 }
@@ -237,6 +277,10 @@ struct Unit<'s> {
     policy: DispatchPolicy,
     #[allow(clippy::type_complexity)]
     step: Box<dyn Fn(&[usize], usize) -> Result<Vec<StepOutcome>> + Sync + 's>,
+    /// KV-cache telemetry snapshot: `(dispatches, appended bytes, pool)`;
+    /// `None` for units without a decode plan.
+    #[allow(clippy::type_complexity)]
+    kv: Box<dyn Fn() -> Option<(u64, u64, KvPoolStats)> + Sync + 's>,
 }
 
 /// Build one unit: resolve the plans, pre-synthesize every payload (request
@@ -250,6 +294,7 @@ fn make_unit<'s, W: Workload>(
     requests: usize,
     max_batch: usize,
     policy: DispatchPolicy,
+    kv_opts: KvPoolOpts,
 ) -> Result<Unit<'s>> {
     let cfg = exec.cfg;
     if workload.cfg() != cfg {
@@ -263,14 +308,19 @@ fn make_unit<'s, W: Workload>(
     // Resolve exactly the plan the workload dispatches through: decode
     // workloads never touch the full-forward plan (the decode plan owns its
     // own prefill fallback), and resolving both would shape-check every
-    // parameter twice and warm names that are never dispatched.
-    let plans = match workload.decode() {
+    // parameter twice and warm names that are never dispatched. Plans are
+    // shared (`Arc`) between the step closure and the telemetry closure.
+    let plans = Arc::new(match workload.decode() {
         Some(mode) => Plans {
             fwd: None,
-            dec: Some(exec.decode_plan_with(w, mode.resolve(exec.rt.prefers_fixed_shapes()))?),
+            dec: Some(exec.decode_plan_opts(
+                w,
+                mode.resolve(exec.rt.prefers_fixed_shapes()),
+                kv_opts,
+            )?),
         },
         None => Plans { fwd: Some(exec.forward_plan(w)?), dec: None },
-    };
+    });
     let payloads: Vec<W::Req> = threads::parallel_map(requests, |i| workload.synth(i));
 
     // Warmup before the clock starts: run the full artifact batch AND batch
@@ -299,6 +349,11 @@ fn make_unit<'s, W: Workload>(
         }
     }
 
+    // Baseline counters after warmup, so per-step means cover only the
+    // measured run (pool-level stats like peak blocks keep warmup — the
+    // registry it warmed stays live).
+    let (kv_s0, kv_b0) = plans.dec.as_ref().map(|d| d.kv_counters()).unwrap_or((0, 0));
+    let kv_plans = plans.clone();
     Ok(Unit {
         label: workload.label(),
         requests,
@@ -306,6 +361,12 @@ fn make_unit<'s, W: Workload>(
         step: Box::new(move |ids: &[usize], dispatch: usize| {
             let reqs: Vec<&W::Req> = ids.iter().map(|&i| &payloads[i]).collect();
             workload.run_step(&plans, &reqs, dispatch)
+        }),
+        kv: Box::new(move || {
+            kv_plans.dec.as_ref().map(|d| {
+                let (s, b) = d.kv_counters();
+                (s - kv_s0, b - kv_b0, d.pool_stats().unwrap_or_default())
+            })
         }),
     })
 }
@@ -325,7 +386,8 @@ pub fn run_engine<W: Workload>(
 ) -> Result<EngineStats> {
     opts.validate()?;
     let policy = opts.dispatch.resolve(exec.rt.prefers_fixed_shapes());
-    let unit = make_unit(exec, w, workload, opts.requests, opts.max_batch, policy)?;
+    let unit =
+        make_unit(exec, w, workload, opts.requests, opts.max_batch, policy, opts.kv_pool_opts())?;
     let mut stats = run_units(vec![unit], opts)?;
     Ok(stats.remove(0))
 }
@@ -349,8 +411,9 @@ pub fn run_fleet<A: Workload, B: Workload>(
     }
     let pa = opts.dispatch.resolve(a.exec.rt.prefers_fixed_shapes());
     let pb = opts.dispatch.resolve(b.exec.rt.prefers_fixed_shapes());
-    let ua = make_unit(a.exec, a.weights, a.workload, a.requests, opts.max_batch, pa)?;
-    let ub = make_unit(b.exec, b.weights, b.workload, b.requests, opts.max_batch, pb)?;
+    let kv = opts.kv_pool_opts();
+    let ua = make_unit(a.exec, a.weights, a.workload, a.requests, opts.max_batch, pa, kv)?;
+    let ub = make_unit(b.exec, b.weights, b.workload, b.requests, opts.max_batch, pb, kv)?;
     let mut stats = run_units(vec![ua, ub], opts)?;
     let sb = stats.remove(1);
     let sa = stats.remove(0);
@@ -622,6 +685,8 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
             batch_log.iter().filter(|&&(bu, _, _, _)| bu == u).collect();
         let n_batches = ub.len();
         let tokens: usize = records.iter().map(|r| r.tokens).sum();
+        let (kv_steps, kv_bytes, kv_pool) =
+            (units[u].kv)().unwrap_or((0, 0, KvPoolStats::default()));
         out.push(EngineStats {
             served: records.len(),
             shed: shed[u],
@@ -657,6 +722,12 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
             },
             throughput_fps: records.len() as f64 / total_s.max(1e-12),
             throughput_tps: tokens as f64 / total_s.max(1e-12),
+            kv_bytes_per_step: if kv_steps == 0 { 0.0 } else { kv_bytes as f64 / kv_steps as f64 },
+            kv_peak_bytes: kv_pool.peak_bytes(),
+            kv_blocks_in_use: kv_pool.blocks_in_use,
+            kv_allocs: kv_pool.allocs,
+            kv_shared_hits: kv_pool.shared_hits,
+            kv_cow_copies: kv_pool.cow_copies,
             records,
         });
     }

@@ -368,12 +368,26 @@ impl Workload for GptWorkload {
 
 /// Autoregressive generation serving: request `id` is an eval-stream prompt
 /// plus a deterministic per-id target length; every engine step advances
-/// the sequence by one fused [`DecodePlan::extend_at`] dispatch (the first
-/// step prefills the whole prompt, later steps decode the fed-back greedy
-/// argmax token), and unfinished requests return [`StepOutcome::Continue`]
-/// so their next decode step batches with *other* sequences — the
+/// the sequence by one fused [`DecodePlan::extend_at`] dispatch (prefill
+/// steps feed prompt tokens, later steps decode the fed-back greedy argmax
+/// token), and unfinished requests return [`StepOutcome::Continue`] so
+/// their next step batches with *other* sequences — the
 /// continuation-re-enqueue batching model. Accounting is per token
 /// (prompt + generated); the prediction is the final generated token.
+///
+/// Two knobs exercise the paged KV cache:
+///
+/// * [`GenWorkload::with_prefill_chunk`] caps the prompt tokens fed per
+///   step, so a long prefill is spread over several `Continue` steps that
+///   interleave with *other* sequences' single-token decode steps in later
+///   engine batches — decode inter-token latency stays flat while a long
+///   prompt is in flight, instead of stalling behind one huge dispatch.
+/// * [`GenWorkload::with_shared_prefix`] stamps a deterministic common
+///   opening onto every synthesized prompt; on prompt completion the
+///   opening's K/V blocks are registered in the pool's prefix registry,
+///   and later requests with the same opening adopt those blocks instead
+///   of recomputing the prefill (per-row arithmetic is identical either
+///   way, so predictions don't change).
 pub struct GenWorkload {
     cfg: &'static ModelConfig,
     gen: TextGen,
@@ -381,6 +395,11 @@ pub struct GenWorkload {
     min_prompt: usize,
     max_new: usize,
     mode: DecodeMode,
+    /// Max prompt tokens fed per engine step (`0` = whole prompt at once).
+    prefill_chunk: usize,
+    /// Common-opening length stamped onto every prompt (`0` = natural
+    /// eval-stream prompts, which share no openings).
+    shared_prefix: usize,
 }
 
 /// One generation request: the true (unpadded) prompt, the target number
@@ -399,7 +418,12 @@ pub struct GenRequest {
 }
 
 struct GenState {
+    /// `Some` while the sequence is live; dropped on completion so the
+    /// request's KV pool blocks go back to the free list immediately.
     dec: Option<DecodeState>,
+    /// Prompt positions in the cache so far (adopted + fed); the prompt is
+    /// fully prefilled once this reaches `prompt.len()`.
+    fed: usize,
     /// Last predicted token — the next step's input.
     next: i32,
     /// Predictions made so far.
@@ -420,6 +444,8 @@ impl GenWorkload {
             min_prompt: default_min_prompt(cfg),
             max_new: 8,
             mode: DecodeMode::KvCache,
+            prefill_chunk: 0,
+            shared_prefix: 0,
         })
     }
 
@@ -440,6 +466,23 @@ impl GenWorkload {
     /// Pin the decode mode (the bench harness sweeps kv vs prefill).
     pub fn with_decode(mut self, mode: DecodeMode) -> Self {
         self.mode = mode;
+        self
+    }
+
+    /// Cap the prompt tokens fed per engine step (`0` = one-shot prefill).
+    /// Splitting positions across dispatches doesn't change any per-row
+    /// arithmetic, so predictions are unchanged.
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Self {
+        self.prefill_chunk = chunk;
+        self
+    }
+
+    /// Stamp a deterministic `len`-token common opening onto every
+    /// synthesized prompt, so the pool's prefix registry gets real hits
+    /// (natural eval-stream prompts share no openings).
+    pub fn with_shared_prefix(mut self, len: usize) -> Self {
+        assert!(len <= self.cfg.n_ctx);
+        self.shared_prefix = len;
         self
     }
 }
@@ -469,11 +512,20 @@ impl Workload for GenWorkload {
         // positions must fit in the context; clamp the prompt, not the
         // target, so the generation mix stays intact.
         let plen = plen0.min(self.cfg.n_ctx + 1 - target).max(1);
+        let mut prompt = ids[..plen].to_vec();
+        if self.shared_prefix > 0 {
+            // Same opening for every id (seed-derived, not id-derived), so
+            // the pool's prefix registry gets genuine cross-request hits.
+            let mut op = Pcg64::new(self.seed ^ 0x707265666978); // "prefix"
+            for slot in prompt.iter_mut().take(self.shared_prefix) {
+                *slot = op.below(self.cfg.vocab) as i32;
+            }
+        }
         GenRequest {
-            prompt: ids[..plen].to_vec(),
+            prompt,
             prompt_len: plen,
             target_new: target,
-            state: Mutex::new(GenState { dec: None, next: 0, produced: 0 }),
+            state: Mutex::new(GenState { dec: None, fed: 0, next: 0, produced: 0 }),
         }
     }
 
@@ -488,45 +540,71 @@ impl Workload for GenWorkload {
             bail!("run_step: {} requests into dispatch size {dispatch}", reqs.len());
         }
         let mut guards: Vec<_> = reqs.iter().map(|r| r.state.lock().unwrap()).collect();
-        // First step prefills the whole prompt; later steps decode the
-        // fed-back argmax token. Prefills and single-token continuations
-        // batch together (per-sequence lengths ride the dispatch).
-        let toks: Vec<Vec<i32>> = reqs
-            .iter()
-            .zip(guards.iter_mut())
-            .map(|(r, g)| {
-                if g.dec.is_none() {
-                    g.dec = Some(dec.begin());
-                    r.prompt.clone()
-                } else {
-                    vec![g.next]
-                }
-            })
-            .collect();
+        // Prefill steps feed (a chunk of) the prompt; decode steps feed the
+        // fed-back argmax token. Both kinds batch together in one dispatch
+        // (per-sequence lengths ride along), which is exactly how a long
+        // chunked prefill interleaves with other sequences' decode steps.
+        let mut toks: Vec<Vec<i32>> = Vec::with_capacity(reqs.len());
+        let mut prefilled = Vec::with_capacity(reqs.len());
+        for (r, g) in reqs.iter().zip(guards.iter_mut()) {
+            if g.dec.is_none() {
+                // Adopt registered shared-prefix blocks where available;
+                // `fed` counts the adopted positions as already cached.
+                let (st, skip) = dec.begin_prompt(&r.prompt)?;
+                g.dec = Some(st);
+                g.fed = skip;
+            }
+            let plen = r.prompt.len();
+            if g.fed < plen {
+                let feed = match self.prefill_chunk {
+                    0 => plen - g.fed,
+                    c => c.min(plen - g.fed),
+                };
+                toks.push(r.prompt[g.fed..g.fed + feed].to_vec());
+                g.fed += feed;
+                prefilled.push(true);
+            } else {
+                toks.push(vec![g.next]);
+                prefilled.push(false);
+            }
+        }
         let mut states: Vec<&mut DecodeState> =
             guards.iter_mut().map(|g| g.dec.as_mut().expect("state initialized above")).collect();
         let new: Vec<&[i32]> = toks.iter().map(|t| t.as_slice()).collect();
         let rows = dec.extend_at(&mut states, &new, dispatch)?;
         drop(states);
         let vocab = self.cfg.vocab;
-        Ok(reqs
-            .iter()
-            .zip(guards.iter_mut())
-            .zip(rows)
-            .map(|((r, g), row)| {
-                let pred = argmax(&row[row.len() - vocab..]);
-                g.produced += 1;
-                if g.produced >= r.target_new {
-                    StepOutcome::Done(RequestOutput {
-                        pred,
-                        tokens: r.prompt_len + r.target_new,
-                    })
-                } else {
-                    g.next = pred;
-                    StepOutcome::Continue
-                }
-            })
-            .collect())
+        let mut outs = Vec::with_capacity(reqs.len());
+        for (((r, g), row), pre) in reqs.iter().zip(guards.iter_mut()).zip(rows).zip(prefilled) {
+            let plen = r.prompt.len();
+            if pre && g.fed == plen && self.shared_prefix > 0 {
+                // Prompt complete: publish the stamped opening's blocks for
+                // adoption by later requests (registering once is enough —
+                // repeat registrations of the same opening are no-ops).
+                dec.share_prefix(g.dec.as_ref().expect("state live"), self.shared_prefix.min(plen))?;
+            }
+            if pre && g.fed < plen {
+                // Interior prefill chunk: its logits are prompt-interior
+                // rows nothing consumes; keep feeding next step.
+                outs.push(StepOutcome::Continue);
+                continue;
+            }
+            let pred = argmax(&row[row.len() - vocab..]);
+            g.produced += 1;
+            if g.produced >= r.target_new {
+                // Drop the sequence state now, not at request teardown, so
+                // its non-shared pool blocks are immediately reusable.
+                g.dec = None;
+                outs.push(StepOutcome::Done(RequestOutput {
+                    pred,
+                    tokens: r.prompt_len + r.target_new,
+                }));
+            } else {
+                g.next = pred;
+                outs.push(StepOutcome::Continue);
+            }
+        }
+        Ok(outs)
     }
 }
 
@@ -610,5 +688,24 @@ mod tests {
         }
         // The generation mix is not degenerate.
         assert!(targets.iter().any(|&t| t != targets[0]));
+    }
+
+    #[test]
+    fn gen_workload_shared_prefix_stamps_common_opening() {
+        let gpt = ModelConfig::by_name("gpt_s").unwrap();
+        let wl = GenWorkload::new(gpt, 17).unwrap().with_shared_prefix(8).with_prefill_chunk(4);
+        let a = wl.synth(0);
+        let b = wl.synth(1);
+        // Every prompt opens with the same seed-derived stamp, in-vocab.
+        let s = 8.min(a.prompt_len).min(b.prompt_len);
+        assert!(s >= 1);
+        assert_eq!(a.prompt[..s], b.prompt[..s]);
+        let v = gpt.vocab as i32;
+        assert!(a.prompt[..8.min(a.prompt_len)].iter().all(|&t| (0..v).contains(&t)));
+        // Unstamped synthesis is untouched by the new knobs' defaults.
+        let base = GenWorkload::new(gpt, 17).unwrap();
+        let c = base.synth(0);
+        assert_eq!(c.prompt[s..], a.prompt[s..]);
+        assert_eq!(c.target_new, a.target_new);
     }
 }

@@ -7,7 +7,9 @@
 //! token-for-token, on dense, pruned, and compensated gpt_s — across
 //! prompt lengths (1, mid, `n_ctx − 1`), batch sizes (1 and batched, with
 //! mixed prefill + continuation dispatches), decode modes (kv vs
-//! prefill-per-step), engine worker counts, and dispatch policies. It also
+//! prefill-per-step), engine worker counts, and dispatch policies — and
+//! across the paged-KV features: chunked prefill, prefix-block adoption,
+//! and fork/copy-on-write must leave every output bit-identical. It also
 //! carries the causal-mask regression probe: poisoned future tokens and
 //! poisoned cache padding must never leak into a position's logits.
 //!
@@ -17,7 +19,7 @@
 #![cfg(not(pjrt_backend))]
 
 use corp::data::{Split, TextGen};
-use corp::exec::{argmax, DecodeMode, Executor, ForwardPlan};
+use corp::exec::{argmax, DecodeMode, Executor, ForwardPlan, KvPoolOpts};
 use corp::model::{ModelConfig, Scope, Sparsity, WeightStore};
 use corp::prune::{calibrate, prune, Method, PruneOpts};
 use corp::runtime::{Input, Runtime};
@@ -382,4 +384,206 @@ fn incremental_mask_ignores_future_tokens_and_cache_padding() {
         .unwrap();
     let d = max_abs_diff(out_c[0].data(), &logits_a.data()[split * vocab..]);
     assert!(d < 1e-5, "poisoned cache padding leaked into decode logits |Δ|={d}");
+}
+
+#[test]
+fn greedy_rejects_zero_steps_and_empty_prompt() {
+    // Regression: `steps == 0` used to reach the `steps - 1` capacity
+    // arithmetic; it must be a clear error, not an underflow panic.
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 6);
+    for mode in [DecodeMode::KvCache, DecodeMode::Prefill] {
+        let dec = exec.decode_plan_with(&w, mode).unwrap();
+        let err = dec.greedy(&[1, 2, 3], 0).unwrap_err().to_string();
+        assert!(err.contains("steps"), "{mode:?}: unhelpful zero-steps error: {err}");
+        let err = dec.greedy(&[], 4).unwrap_err().to_string();
+        assert!(err.contains("prompt"), "{mode:?}: unhelpful empty-prompt error: {err}");
+        assert!(dec.greedy_chunked(&[1, 2, 3], 0, 2).is_err());
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_one_shot_exactly() {
+    // Per-row K/V and logits arithmetic is independent of how prompt
+    // positions are grouped into dispatches, so chunked prefill is not
+    // merely close — it is bitwise identical to the one-shot prefill.
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 6);
+    let comp = pruned_store(&exec, &dense, Method::Corp);
+    let gen = TextGen::new(corp::data::DATA_SEED);
+    let (ids, _) = gen.batch(Split::Eval, 7, 1, cfg.n_ctx);
+    let (plen, steps) = (24usize, 5usize);
+    let prompt = &ids[..plen];
+    for (label, w) in [("dense", &dense), ("compensated", &comp)] {
+        let (p0, r0) = exec.decode_plan(w).unwrap().greedy(prompt, steps).unwrap();
+        for chunk in [1usize, 3, 8, 100] {
+            let dec = exec.decode_plan(w).unwrap();
+            let (p, r) = dec.greedy_chunked(prompt, steps, chunk).unwrap();
+            assert_eq!(p, p0, "{label} chunk={chunk}: token streams diverged");
+            assert_eq!(r, r0, "{label} chunk={chunk}: logits not bitwise identical");
+        }
+    }
+}
+
+#[test]
+fn prefix_sharing_adopts_blocks_and_preserves_outputs() {
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 6);
+    let gen = TextGen::new(corp::data::DATA_SEED);
+    let (ids, _) = gen.batch(Split::Eval, 13, 1, cfg.n_ctx);
+    // Default block size is 16: a 24-token prompt publishes one full
+    // block, which the second sequence adopts (24 - 1 ≥ 16).
+    let (plen, steps) = (24usize, 4usize);
+    let prompt = &ids[..plen];
+    let dec = exec.decode_plan(&w).unwrap();
+    let (p1, r1) = dec.greedy(prompt, steps).unwrap();
+    let s0 = dec.pool_stats().unwrap();
+    assert!(s0.registered_prefixes >= 1, "greedy did not publish its prompt prefix");
+    assert_eq!(s0.shared_hits, 0);
+    let (p2, r2) = dec.greedy(prompt, steps).unwrap();
+    let s1 = dec.pool_stats().unwrap();
+    assert!(s1.shared_hits > 0, "second identical prompt adopted no blocks");
+    assert!(s1.allocs < 2 * s0.allocs, "adoption did not save allocations");
+    assert_eq!(p1, p2, "prefix adoption changed the token stream");
+    assert_eq!(r1, r2, "prefix adoption changed the logits");
+    // A sharing-disabled pool computes the same function from scratch.
+    let iso = exec
+        .decode_plan_opts(&w, DecodeMode::KvCache, KvPoolOpts { share_prefixes: false, ..KvPoolOpts::default() })
+        .unwrap();
+    let (p3, r3) = iso.greedy(prompt, steps).unwrap();
+    assert_eq!(iso.pool_stats().unwrap().shared_hits, 0);
+    assert_eq!(p1, p3);
+    assert_eq!(r1, r3);
+}
+
+#[test]
+fn fork_copy_on_write_keeps_branches_independent() {
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 6);
+    let gen = TextGen::new(corp::data::DATA_SEED);
+    let (ids, _) = gen.batch(Split::Eval, 21, 1, cfg.n_ctx);
+    // 10 tokens: a single *partial* block, so the fork shares a tail block
+    // that the first append must copy-on-write.
+    let prompt = &ids[..10];
+    let dec = exec.decode_plan(&w).unwrap();
+    let (mut st, skip) = dec.begin_prompt(prompt).unwrap();
+    assert_eq!(skip, 0, "empty registry must adopt nothing");
+    let rows = dec.extend(&mut [&mut st], &[prompt]).unwrap();
+    let p = argmax(&rows[0][rows[0].len() - cfg.vocab..]);
+    let mut br = st.fork();
+    assert_eq!(br.ids(), st.ids());
+    assert_eq!(br.kv_blocks(), st.kv_blocks());
+    let cow0 = dec.pool_stats().unwrap().cow_copies;
+    // Trunk and branch continue with different tokens.
+    let alt = (p + 1) % cfg.vocab as i32;
+    let r_trunk = dec.extend(&mut [&mut st], &[&[p]]).unwrap();
+    let r_branch = dec.extend(&mut [&mut br], &[&[alt]]).unwrap();
+    assert!(
+        dec.pool_stats().unwrap().cow_copies > cow0,
+        "append into a forked tail block did not copy-on-write"
+    );
+    // Each branch's logits equal the full forward over its own sequence.
+    let fwd = exec.forward_plan(&w).unwrap();
+    for (label, state, row) in [("trunk", &st, &r_trunk), ("branch", &br, &r_branch)] {
+        let mut padded = state.ids().to_vec();
+        padded.resize(cfg.n_ctx, 0);
+        let full = fwd.run_gpt(&padded, 1).unwrap();
+        let want = &full.data()[(state.len() - 1) * cfg.vocab..state.len() * cfg.vocab];
+        let d = max_abs_diff(&row[0], want);
+        assert!(d < 1e-5, "{label}: post-fork logits |Δ|={d}");
+    }
+    assert_ne!(st.ids().last(), br.ids().last());
+}
+
+#[test]
+fn kv_bytes_scale_with_appended_rows_not_context_capacity() {
+    // The acceptance property behind the bench's `kv_bytes_per_step`
+    // column: cache traffic is exactly the appended rows times the
+    // per-row K/V footprint — there is no `n_ctx` term, unlike the old
+    // slab design which copied the full [n_ctx] cache every step.
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 6);
+    let pruned = pruned_store(&exec, &dense, Method::Naive);
+    let gen = TextGen::new(corp::data::DATA_SEED);
+    let (ids, _) = gen.batch(Split::Eval, 5, 1, cfg.n_ctx);
+    let (plen, steps) = (10usize, 5usize);
+    for (label, w) in [("dense", &dense), ("pruned", &pruned)] {
+        let dec = exec.decode_plan(w).unwrap();
+        assert_eq!(dec.kv_counters(), (0, 0));
+        dec.greedy(&ids[..plen], steps).unwrap();
+        let (dispatches, bytes) = dec.kv_counters();
+        assert_eq!(dispatches, steps as u64, "{label}");
+        let row = cfg.layers * cfg.heads * (dec.dqk + cfg.dh()) * std::mem::size_of::<f32>();
+        let appended = plen + steps - 1; // prompt rows + one row per later step
+        assert_eq!(bytes, (appended * row) as u64, "{label}");
+        // Pool accounting agrees with the counter-level story.
+        let s = dec.pool_stats().unwrap();
+        assert!(s.peak_bytes() >= bytes, "{label}: peak below appended bytes");
+        assert_eq!(s.block_bytes, s.block_positions * row, "{label}");
+    }
+}
+
+#[test]
+fn engine_outputs_invariant_under_chunked_prefill_and_prefix_sharing() {
+    // The serving-side acceptance check: splitting prefills into bounded
+    // chunks and adopting shared-opening blocks are scheduling/memory
+    // optimizations — request outputs must be bit-identical across chunk
+    // sizes, and the pool must actually report adopted blocks.
+    let rt = native_runtime();
+    let cfg = gpt_s();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 11);
+    let eopts = EngineOpts {
+        workers: 2,
+        rate: 1e12,
+        requests: 12,
+        max_batch: 4,
+        max_wait: 0.002,
+        queue_cap: 256,
+        dispatch: DispatchPolicy::Exact,
+        ..Default::default()
+    };
+    // min_prompt 20 > shared opening 16 = one default block, so every
+    // request both registers and (after the first) adopts the opening.
+    let mk_wl = |chunk: usize| {
+        GenWorkload::new(cfg, corp::data::DATA_SEED)
+            .unwrap()
+            .with_max_new(4)
+            .with_min_prompt(20)
+            .with_shared_prefix(16)
+            .with_prefill_chunk(chunk)
+    };
+    let key = |s: &corp::serve::EngineStats| -> Vec<(usize, i32, usize)> {
+        let mut k: Vec<_> = s.records.iter().map(|r| (r.id, r.pred, r.tokens)).collect();
+        k.sort_unstable();
+        k
+    };
+    let mut baseline: Option<Vec<(usize, i32, usize)>> = None;
+    for chunk in [0usize, 1, 4, 7] {
+        let s = run_engine(&exec, &w, &mk_wl(chunk), &eopts).unwrap();
+        assert_eq!(s.served, 12, "chunk={chunk}");
+        assert!(s.kv_shared_hits > 0, "chunk={chunk}: no prefix blocks adopted");
+        assert!(s.kv_bytes_per_step > 0.0, "chunk={chunk}");
+        assert!(s.kv_peak_bytes > 0, "chunk={chunk}");
+        let k = key(&s);
+        match &baseline {
+            None => baseline = Some(k),
+            Some(b) => assert_eq!(&k, b, "outputs changed at prefill chunk {chunk}"),
+        }
+    }
+    // Prefill-per-step plans hold no pool: the kv columns stay zero.
+    let wl = GenWorkload::new(cfg, corp::data::DATA_SEED).unwrap().with_max_new(4);
+    let s = run_engine(&exec, &w, &wl.with_decode(DecodeMode::Prefill), &eopts).unwrap();
+    assert_eq!(s.kv_peak_bytes, 0);
+    assert_eq!(s.kv_bytes_per_step, 0.0);
 }

@@ -38,9 +38,10 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     cargo run --manifest-path "$MANIFEST" --release -- bench linalg --json --out BENCH_linalg.json
 
     # The smoke grid sweeps all three workloads (vision + text + gen, the
-    # gen cells on both decode paths) and both dispatch policies —
-    # corp-bench-serve/v3 axes. A failed cell exits non-zero and leaves no
-    # stale BENCH_serve.json behind.
+    # gen cells on kv, kv+chunked/shared-prefix, and prefill decode) and
+    # both dispatch policies — corp-bench-serve/v4 axes with the paged-KV
+    # telemetry columns. A failed cell exits non-zero and leaves no stale
+    # BENCH_serve.json behind.
     echo "==> bench serve smoke (CORP_BENCH_MODE=smoke)"
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- bench serve --json --out BENCH_serve.json
 
@@ -52,12 +53,21 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
         serve --model gpt_s --workload gen --sparsity 0 --requests 12 --rate 0 --max-batch 4 --max-new 4
 
-    # Generation smoke: 8 greedy tokens on gpt_s, KV-cache decode
-    # cross-checked against prefill-per-step and the fused full forward
-    # (checksum/logit compare; non-zero exit on any drift).
-    echo "==> generate smoke (gpt_s, 8 tokens, kv vs prefill verify)"
+    # Paged-KV smoke: same gen workload with prefills chunked to 8 tokens
+    # and a 16-token shared prompt opening — exercises chunked prefill
+    # interleaving, prefix-block adoption, and the kv pool summary line.
+    echo "==> serve CLI smoke (gen, chunked prefill + shared prefix)"
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
-        generate --model gpt_s --sparsity 0.5 --tokens 8 --prompts 2 --decode kv --verify
+        serve --model gpt_s --workload gen --sparsity 0 --requests 12 --rate 0 --max-batch 4 --max-new 4 \
+        --prefill-chunk 8 --shared-prefix 16
+
+    # Generation smoke: 8 greedy tokens on gpt_s, KV-cache decode (prompts
+    # prefilled in 4-token chunks) cross-checked against one-shot kv,
+    # prefill-per-step, and the fused full forward (checksum/logit
+    # compare; non-zero exit on any drift).
+    echo "==> generate smoke (gpt_s, 8 tokens, chunked kv vs prefill verify)"
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
+        generate --model gpt_s --sparsity 0.5 --tokens 8 --prompts 2 --decode kv --prefill-chunk 4 --verify
 fi
 
 echo "ok"
