@@ -6,9 +6,10 @@
 //! dispatch policy (padded / exact) — and, for the generation workload, a
 //! decode axis (KV-cache vs prefill-per-step, with a paged-KV cell that
 //! turns on chunked prefill + a shared prompt opening) — reporting
-//! per-cell p50/p95 latency, queueing delay, mean formed and dispatched
-//! batch sizes, steps per request, TTFT/ITL, and requests+tokens/sec
-//! (schema `corp-bench-serve/v4`). The "saturated" rate offers the whole
+//! per-cell p50/p95/p99 latency, queueing delay, mean formed and
+//! dispatched batch sizes, steps per request, TTFT/ITL, and
+//! requests+tokens/sec (schema `corp-bench-serve/v5`). The "saturated"
+//! rate offers the whole
 //! request set at t = 0 with an ample queue, so the throughput column is
 //! the engine's capacity — this is where the pruned fast path has to beat
 //! dense, since its GEMMs run at the retained widths, and where KV-cache
@@ -27,6 +28,14 @@
 //! shared-prefix cell doubles as the prefill-interference probe: its
 //! `itl_mean_ms` shows decode cadence while long prefills are split into
 //! bounded chunks and interleaved into the same batches.
+//!
+//! v5 adds the load-spike cell (`cell = "load_spike"`): the fleet served
+//! through the deterministic discrete-event simulator under a 3× arrival
+//! spike over the middle third of the schedule, with the SLO feedback
+//! controller off and then on (`--degrade`), service times drawn from
+//! per-batch-size cost tables *measured on the real executor* — so the row
+//! pairs the tail-latency/shedding win against its accuracy proxy (the
+//! fraction of requests served by the degraded pruned+compensated rung).
 //!
 //! A failed cell aborts the sweep with the cell's coordinates in the error
 //! (non-zero exit through the CLI), and any pre-existing `--out` file is
@@ -239,6 +248,7 @@ fn grid_runs<W: Workload>(
                         ("mean_steps", num(s.steps_mean)),
                         ("p50_ms", num(s.p50_ms)),
                         ("p95_ms", num(s.p95_ms)),
+                        ("p99_ms", num(s.p99_ms)),
                         ("queue_p50_ms", num(s.queue_p50_ms)),
                         ("ttft_p50_ms", num(s.first_p50_ms)),
                         ("itl_mean_ms", num(s.itl_mean_ms)),
@@ -279,8 +289,134 @@ fn grid_runs<W: Workload>(
     Ok(())
 }
 
+/// The v5 load-spike cell: one fleet member with a dense primary rung and
+/// a CORP-compensated fallback rung, served through the deterministic
+/// simulator (`serve::run_fleet_sim`) under a 3× arrival spike over the
+/// middle third — controller off, then on with variant degradation.
+/// Service times come from per-dispatch-size cost tables measured on the
+/// real executor, so the p99/shed/degraded-fraction trade-off in the row
+/// reflects this machine's actual dense-vs-compensated cost gap.
+#[cfg(not(pjrt_backend))]
+fn spike_cells(rt: &Runtime, runs: &mut Vec<Json>) -> Result<()> {
+    use crate::serve::{run_fleet_sim, ControllerOpts, FleetMember, SimCost};
+
+    let (model, requests, max_batch, workers, reps) = match bench_mode() {
+        BenchMode::Smoke => ("vit_t", 96usize, 8usize, 2usize, 2usize),
+        BenchMode::Fast => ("vit_t", 192, 8, 2, 3),
+        BenchMode::Full => ("vit_b", 256, 8, 2, 3),
+    };
+    let cfg = ModelConfig::by_name(model).context("spike cell model")?;
+    let exec = Executor::new(rt, cfg);
+    let dense = WeightStore::init(cfg, 1);
+    let popts =
+        PruneOpts { sparsity: Sparsity::of(Scope::Both, 5), calib_batches: 2, ..PruneOpts::default() };
+    let stats = calibrate(&exec, &dense, &popts)?;
+    let comp = prune(&exec, &dense, &stats, &PruneOpts { method: Method::Corp, ..popts })?;
+
+    // Measure the per-rung cost tables (min of `reps` timed passes per
+    // dispatch size) — the simulator's service-time model.
+    let gen = crate::data::VisionGen::new(crate::data::DATA_SEED);
+    let mut tables = Vec::with_capacity(2);
+    for w in [&dense, &comp.weights] {
+        let plan = exec.forward_plan(w)?;
+        let mut table = Vec::with_capacity(max_batch);
+        for b in 1..=max_batch {
+            let (t, _) = gen.batch(crate::data::Split::Eval, b as u64, b);
+            plan.run_vit(&t)?; // warmup
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let t0 = std::time::Instant::now();
+                plan.run_vit(&t)?;
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            table.push(best);
+        }
+        tables.push(table);
+    }
+    let cost_dense_full = tables[0][max_batch - 1].max(1e-9);
+    let cost = SimCost::measured(tables)?;
+
+    // Base rate at half the dense fleet capacity: the 3× spike then offers
+    // 1.5× dense capacity through the middle third, so the engine must
+    // shed — unless the controller degrades to the cheaper rung.
+    let rate = 0.5 * (workers * max_batch) as f64 / cost_dense_full;
+    let spike = 3.0;
+    let slo_p99_ms = 10.0 * cost_dense_full * 1e3;
+    let wl = VisionWorkload::new(cfg, crate::data::DATA_SEED)?;
+    for controller_on in [false, true] {
+        let eopts = EngineOpts {
+            workers,
+            rate,
+            requests,
+            max_batch,
+            max_wait: 0.004,
+            queue_cap: 32,
+            dispatch: DispatchPolicy::Auto,
+            spike,
+            slo_p99_ms,
+            controller: controller_on.then(|| ControllerOpts {
+                tick_s: 0.01,
+                slo_p99_ms,
+                degrade: true,
+                recover_after: 3,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let member = FleetMember::new(&exec, &dense, &wl, requests).with_fallback(&comp.weights);
+        let s = run_fleet_sim(vec![member.erased()], std::slice::from_ref(&cost), &eopts)
+            .context("serve bench cell failed: load_spike")?
+            .remove(0);
+        let time_dense_s = s.time_in_variant_s.first().copied().unwrap_or(0.0);
+        let time_degraded_s: f64 = s.time_in_variant_s.iter().skip(1).sum();
+        let degraded: usize = s.served_by_variant.iter().skip(1).sum();
+        let degraded_frac = if s.served == 0 { 0.0 } else { degraded as f64 / s.served as f64 };
+        println!(
+            "spike  {model:12} controller={controller_on:5} w={workers} rate {rate:7.0}/s ×{spike:.0}: \
+             p99 {:8.2}ms (SLO {slo_p99_ms:.1}ms) | served {:3} shed {:3} | \
+             degraded {:4.0}% | {} transition(s)",
+            s.p99_ms,
+            s.served,
+            s.shed,
+            degraded_frac * 100.0,
+            s.transitions.len()
+        );
+        runs.push(obj(vec![
+            ("cell", Json::Str("load_spike".into())),
+            ("workload", Json::Str("vision".into())),
+            ("model", Json::Str(model.to_string())),
+            ("controller", Json::Bool(controller_on)),
+            ("degrade", Json::Bool(controller_on)),
+            ("workers", num(workers as f64)),
+            ("rate_rps", num(rate)),
+            ("spike", num(spike)),
+            ("requests", num(requests as f64)),
+            ("max_batch", num(max_batch as f64)),
+            ("slo_p99_ms", num(slo_p99_ms)),
+            ("p50_ms", num(s.p50_ms)),
+            ("p95_ms", num(s.p95_ms)),
+            ("p99_ms", num(s.p99_ms)),
+            ("served", num(s.served as f64)),
+            ("shed", num(s.shed as f64)),
+            ("time_dense_s", num(time_dense_s)),
+            ("time_degraded_s", num(time_degraded_s)),
+            ("degraded_frac", num(degraded_frac)),
+            ("transitions", num(s.transitions.len() as f64)),
+        ]));
+    }
+    Ok(())
+}
+
+/// The gated PJRT build has no threaded engine or simulator — the
+/// load-spike cell is a no-op there; the grid rows still carry the v5
+/// schema.
+#[cfg(pjrt_backend)]
+fn spike_cells(_rt: &Runtime, _runs: &mut Vec<Json>) -> Result<()> {
+    Ok(())
+}
+
 /// Run the serving benchmark grid; when `json_out` is set, write
-/// `BENCH_serve.json`-style output there (schema `corp-bench-serve/v4`).
+/// `BENCH_serve.json`-style output there (schema `corp-bench-serve/v5`).
 pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
     let rt = Runtime::from_default_dir()?;
     // Fail loudly, never stale-ly: if a cell errors mid-sweep the run
@@ -349,10 +485,11 @@ pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
             (ModelKind::Vit, true) => bail!("gen grid on vision model '{}'", g.model),
         }
     }
+    spike_cells(&rt, &mut runs)?;
 
     if let Some(path) = json_out {
         let root = obj(vec![
-            ("schema", Json::Str("corp-bench-serve/v4".into())),
+            ("schema", Json::Str("corp-bench-serve/v5".into())),
             (
                 "mode",
                 Json::Str(

@@ -81,6 +81,7 @@ fn print_usage() {
          prune  --model vit_b --scope both --sparsity 0.5 [--method corp] [--criterion combined]\n  \
          serve  --model vit_b --sparsity 0.5 [--workers 2] [--rate 200] [--dispatch auto]\n  \
          serve  --model gpt_s [--workload text|gen] [--prefill-chunk N] [--shared-prefix N]\n  \
+         serve  ... [--controller] [--slo-p99-ms 50] [--degrade] [--spike 3]   SLO feedback loop\n  \
          generate --model gpt_s --tokens 8 [--decode kv|prefill] [--prefill-chunk N] [--verify]\n  \
          stats  --model vit_b                    Table-9 redundancy statistics\n  \
          bench  linalg|serve [--json] [--out PATH]  perf harnesses (BENCH_*.json)\n  \
@@ -185,6 +186,28 @@ fn cmd_prune(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Serve one workload, routing through [`crate::serve::run_fleet`] when a
+/// degraded-variant fallback store is present (the controller needs a
+/// second plan rung to switch to) and the plain single-store
+/// [`crate::serve::run_engine`] otherwise.
+fn serve_one<W: crate::serve::Workload>(
+    exec: &crate::exec::Executor<'_>,
+    weights: &crate::model::WeightStore,
+    fallback: Option<&crate::model::WeightStore>,
+    workload: &W,
+    eopts: &crate::serve::EngineOpts,
+) -> Result<crate::serve::EngineStats> {
+    match fallback {
+        Some(fb) => {
+            let m = crate::serve::FleetMember::new(exec, weights, workload, eopts.requests)
+                .with_fallback(fb);
+            let mut v = crate::serve::run_fleet(vec![m.erased()], eopts)?;
+            Ok(v.remove(0))
+        }
+        None => crate::serve::run_engine(exec, weights, workload, eopts),
+    }
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serve", "concurrent batched serving engine")
         .opt("model", "model name (vit_* → vision workload, gpt_* → text)", "vit_b")
@@ -204,19 +227,45 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("kv-block", "KV pool: positions per block (0 = default)", "0")
         .opt("kv-blocks", "KV pool: capacity in blocks (0 = unbounded)", "0")
         .opt("prefill-chunk", "gen workload: max prompt tokens fed per step (0 = one-shot)", "0")
-        .opt("shared-prefix", "gen workload: common prompt-opening length to stamp (0 = off)", "0");
+        .opt("shared-prefix", "gen workload: common prompt-opening length to stamp (0 = off)", "0")
+        .opt("spike", "arrival-rate multiplier over the middle third of the schedule", "1")
+        .opt("slo-p99-ms", "p99 latency budget, ms (0 = none)", "0")
+        .flag("controller", "enable the SLO feedback controller (adaptive wait + dispatch threshold)")
+        .flag("degrade", "let the controller fall back to the pruned+compensated variant under load");
     let args = cmd.parse(argv)?;
     let cfg = cfg_of(&args.str("model"))?;
     let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
+    let controller_on = args.has_flag("controller");
+    let degrade = args.has_flag("degrade");
+    if degrade && !controller_on {
+        bail!("--degrade needs --controller (variant switching is the controller's knob)");
+    }
+    if degrade && s10 == 0 {
+        bail!("--degrade needs --sparsity > 0 (the degraded rung is the pruned+compensated variant)");
+    }
     let mut coord = Coordinator::new()?;
     let opts = PruneOpts::default();
-    let weights = if s10 == 0 {
-        coord.dense(cfg)?.clone()
+    // Under --degrade the primary rung is always dense and the
+    // pruned+compensated store becomes the controller's fallback rung;
+    // otherwise --sparsity picks the single store served, as before.
+    let pruned = if s10 == 0 {
+        None
     } else {
         let o = PruneOpts { sparsity: Sparsity::of(Scope::Both, s10), ..opts };
-        coord.prune_job(cfg, &o)?.weights
+        Some(coord.prune_job(cfg, &o)?.weights)
+    };
+    let dense;
+    let (weights, fallback) = if degrade {
+        dense = coord.dense(cfg)?.clone();
+        (&dense, pruned.as_ref())
+    } else if let Some(p) = &pruned {
+        (p, None)
+    } else {
+        dense = coord.dense(cfg)?.clone();
+        (&dense, None)
     };
     let exec = coord.executor(cfg);
+    let slo_p99_ms = args.f64("slo-p99-ms")?;
     let eopts = crate::serve::EngineOpts {
         workers: args.usize("workers")?,
         rate: args.f64("rate")?,
@@ -229,6 +278,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         dispatch: crate::serve::DispatchPolicy::parse(&args.str("dispatch"))?,
         kv_block: args.usize("kv-block")?,
         kv_blocks: args.usize("kv-blocks")?,
+        spike: args.f64("spike")?,
+        slo_p99_ms,
+        controller: controller_on.then(|| crate::serve::ControllerOpts {
+            slo_p99_ms,
+            degrade,
+            ..Default::default()
+        }),
     };
     // The model (or an explicit --workload) picks the serving scenario: one
     // queueing/batching core, workload-specific synthesis and accounting.
@@ -236,11 +292,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let (label, stats) = match (cfg.kind, wl_name.as_str()) {
         (ModelKind::Vit, "auto" | "vision") => {
             let wl = crate::serve::VisionWorkload::new(cfg, crate::data::DATA_SEED)?;
-            ("vision", crate::serve::run_engine(&exec, &weights, &wl, &eopts)?)
+            ("vision", serve_one(&exec, weights, fallback, &wl, &eopts)?)
         }
         (ModelKind::Gpt, "auto" | "text") => {
             let wl = crate::serve::GptWorkload::new(cfg, crate::data::DATA_SEED)?;
-            ("text", crate::serve::run_engine(&exec, &weights, &wl, &eopts)?)
+            ("text", serve_one(&exec, weights, fallback, &wl, &eopts)?)
         }
         (ModelKind::Gpt, "gen") => {
             let max_new = args.usize("max-new")?;
@@ -259,7 +315,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             if decode != "auto" {
                 wl = wl.with_decode(DecodeMode::parse(&decode)?);
             }
-            ("gen", crate::serve::run_engine(&exec, &weights, &wl, &eopts)?)
+            ("gen", serve_one(&exec, weights, fallback, &wl, &eopts)?)
         }
         (kind, other) => bail!(
             "workload '{other}' does not fit model '{}' (kind {kind:?}; \
@@ -300,6 +356,39 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             stats.kv_allocs,
             stats.kv_shared_hits,
             stats.kv_cow_copies
+        );
+    }
+    if eopts.controller.is_some() {
+        let slo = if stats.slo_p99_ms > 0.0 {
+            let verdict = if stats.p99_ms <= stats.slo_p99_ms { "met" } else { "MISSED" };
+            format!(" vs SLO {:.0}ms ({verdict})", stats.slo_p99_ms)
+        } else {
+            String::new()
+        };
+        let switches: Vec<String> = stats
+            .transitions
+            .iter()
+            .map(|tr| format!("{}→{}@{:.2}s", tr.from, tr.to, tr.t))
+            .collect();
+        let tv: Vec<String> = stats
+            .time_in_variant_s
+            .iter()
+            .enumerate()
+            .map(|(v, s)| format!("v{v} {s:.2}s"))
+            .collect();
+        let sv: Vec<String> = stats
+            .served_by_variant
+            .iter()
+            .enumerate()
+            .map(|(v, n)| format!("v{v} {n}"))
+            .collect();
+        println!(
+            "controller: p99 {:.2}ms{slo} | variant switches [{}] | time-in-variant {} | \
+             served-by-variant {}",
+            stats.p99_ms,
+            switches.join(", "),
+            tv.join(" / "),
+            sv.join(" / ")
         );
     }
     Ok(())
@@ -521,5 +610,24 @@ mod tests {
     #[test]
     fn no_args_prints_usage() {
         run_cli(&[]).unwrap();
+    }
+
+    #[test]
+    fn serve_degrade_needs_controller() {
+        let err = run_cli(&["serve".into(), "--model".into(), "vit_t".into(), "--degrade".into()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--controller"), "{err}");
+    }
+
+    #[test]
+    fn serve_degrade_needs_sparsity() {
+        let argv: Vec<String> =
+            ["serve", "--model", "vit_t", "--controller", "--degrade", "--sparsity", "0"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let err = run_cli(&argv).unwrap_err().to_string();
+        assert!(err.contains("--sparsity"), "{err}");
     }
 }

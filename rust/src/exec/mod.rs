@@ -31,7 +31,7 @@
 pub mod kv_pool;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Context, Result};
@@ -580,6 +580,56 @@ impl DecodePlan<'_, '_> {
         // Publish the prompt's full blocks for reuse by later sequences.
         self.share_prefix(&st, prompt.len())?;
         Ok((preds, rows))
+    }
+}
+
+/// An ordered ladder of prepared plans for the *same* model at different
+/// accuracy/latency points, with an atomically switchable active rung.
+///
+/// CORP's pruned and compensated variants are the same network with
+/// arithmetic removed, so a serving member can hold one plan per variant
+/// (rung 0 = dense, higher rungs = progressively cheaper degraded plans)
+/// and the controller can flip the active rung at batch boundaries
+/// without touching the executor or the request stream.
+pub struct PlanLadder<T> {
+    rungs: Vec<T>,
+    active: AtomicUsize,
+}
+
+impl<T> PlanLadder<T> {
+    /// Build a ladder; rung 0 becomes active. Bails on an empty ladder.
+    pub fn new(rungs: Vec<T>) -> Result<Self> {
+        if rungs.is_empty() {
+            bail!("PlanLadder needs at least one plan rung");
+        }
+        Ok(PlanLadder { rungs, active: AtomicUsize::new(0) })
+    }
+
+    pub fn len(&self) -> usize {
+        self.rungs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rungs.is_empty()
+    }
+
+    /// Index of the active rung (always in range).
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Acquire).min(self.rungs.len() - 1)
+    }
+
+    /// Switch the active rung (clamped into range).
+    pub fn set_active(&self, i: usize) {
+        self.active.store(i.min(self.rungs.len() - 1), Ordering::Release);
+    }
+
+    pub fn get(&self, i: usize) -> Option<&T> {
+        self.rungs.get(i)
+    }
+
+    /// The active rung's plan.
+    pub fn current(&self) -> &T {
+        &self.rungs[self.active()]
     }
 }
 

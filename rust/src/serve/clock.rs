@@ -1,0 +1,145 @@
+//! Clock abstraction for the serving engine.
+//!
+//! The engine's arrival generation, batch-formation deadlines, and the
+//! controller's tick cadence all consume time through the [`Clock`] trait
+//! instead of touching `std::time` directly. Production uses [`WallClock`]
+//! (monotonic `Instant` under the hood); tests and the discrete-event
+//! simulator ([`crate::serve::sim`]) use [`VirtualClock`], whose `sleep`
+//! *advances* simulated time instead of blocking, so controller
+//! trajectories are bit-reproducible under `cargo test` — no wall-clock
+//! jitter ever enters the arithmetic. Determinism of a run then rests
+//! entirely on the seeded RNGs feeding arrivals and service-time jitter.
+//!
+//! Time is represented as `f64` seconds since the clock's origin (engine
+//! start). Sub-microsecond precision is irrelevant at serving timescales
+//! and `f64` keeps deadline math trivial and portable across both impls.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Source of time for the serving engine: `now` in seconds since the
+/// clock's origin, and `sleep` for a non-negative duration in seconds.
+pub trait Clock: Sync {
+    /// Seconds elapsed since the clock's origin.
+    fn now(&self) -> f64;
+    /// Block (wall clock) or advance (virtual clock) for `secs` seconds.
+    /// Negative or non-finite values are treated as zero.
+    fn sleep(&self, secs: f64);
+}
+
+/// Production clock: monotonic wall time relative to construction.
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { origin: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    fn sleep(&self, secs: f64) {
+        if secs.is_finite() && secs > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(secs));
+        }
+    }
+}
+
+/// Deterministic clock: time only moves when something advances it.
+///
+/// `sleep` advances the clock by the requested amount, which is exactly
+/// the semantics a single-threaded discrete-event loop wants. The current
+/// time is stored as `f64` bits in an `AtomicU64` so the clock is `Sync`
+/// without a lock (writers in the simulator are single-threaded; readers
+/// may be anywhere).
+pub struct VirtualClock {
+    now_bits: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { now_bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    /// Advance simulated time by `secs` (no-op for non-positive values).
+    pub fn advance(&self, secs: f64) {
+        if secs.is_finite() && secs > 0.0 {
+            self.set(self.now() + secs);
+        }
+    }
+
+    /// Jump simulated time to `t` seconds. Time never moves backwards:
+    /// a target earlier than `now` leaves the clock untouched.
+    pub fn set(&self, t: f64) {
+        if t.is_finite() && t > self.now() {
+            self.now_bits.store(t.to_bits(), Ordering::Release);
+        }
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        f64::from_bits(self.now_bits.load(Ordering::Acquire))
+    }
+
+    fn sleep(&self, secs: f64) {
+        self.advance(secs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_monotone() {
+        let c = WallClock::new();
+        let a = c.now();
+        c.sleep(0.001);
+        let b = c.now();
+        assert!(b >= a, "wall clock went backwards: {a} -> {b}");
+        c.sleep(-1.0); // must not panic
+        c.sleep(f64::NAN);
+    }
+
+    #[test]
+    fn virtual_clock_sleep_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.sleep(0.5);
+        assert_eq!(c.now(), 0.5);
+        c.advance(0.25);
+        assert_eq!(c.now(), 0.75);
+        c.sleep(-3.0);
+        c.advance(f64::NAN);
+        assert_eq!(c.now(), 0.75);
+    }
+
+    #[test]
+    fn virtual_clock_set_never_rewinds() {
+        let c = VirtualClock::new();
+        c.set(2.0);
+        assert_eq!(c.now(), 2.0);
+        c.set(1.0);
+        assert_eq!(c.now(), 2.0);
+        c.set(3.5);
+        assert_eq!(c.now(), 3.5);
+    }
+}

@@ -1,0 +1,501 @@
+//! SLO-aware feedback controller for the serving engine (ROADMAP item 1).
+//!
+//! Three cooperating pieces, all pure state machines so they are trivially
+//! testable off the wall clock:
+//!
+//! * [`CostEstimator`] — an online per-dispatch-size exec-cost curve
+//!   (EWMA per size, read through a running-max so the learned curve is
+//!   monotone in batch size by construction). It replaces the fixed
+//!   `DispatchPolicy::AUTO_FILL_THRESHOLD` once enough samples exist: the
+//!   exact-vs-padded choice compares the *learned* cost of dispatching at
+//!   the formed size against dispatching at the padded artifact size.
+//! * [`Controller`] — per control tick, observes queue depth, arrival
+//!   rate, and per-member p99 latency ([`Obs`]) and emits [`Action`]s:
+//!   a new batch-formation `max_wait`, a new auto-dispatch fill
+//!   threshold, and — the CORP-specific knob — *variant switches*. Under
+//!   sustained pressure a member degrades from the dense plan rung to the
+//!   pruned+compensated rung (same `Executor`, same weights family,
+//!   different prepared plan); when load clears it recovers. Hysteresis
+//!   (consecutive-tick counters plus a minimum dwell time) keeps it from
+//!   flapping.
+//! * [`Transition`] — the audit trail of variant switches, surfaced in
+//!   `EngineStats` so tests can assert the degrade→recover sequence
+//!   exactly.
+
+/// Online per-dispatch-size execution-cost estimator.
+///
+/// `observe(dispatch, secs)` folds a measured batch execution time into an
+/// EWMA bucket for that dispatch size. `cost(b)` reads the curve through a
+/// running max over all observed sizes `<= b`, which (a) makes the
+/// returned curve monotone non-decreasing in batch size regardless of
+/// sample noise, and (b) lets unobserved sizes borrow the nearest smaller
+/// observation as a lower bound.
+#[derive(Debug, Clone)]
+pub struct CostEstimator {
+    ewma: Vec<f64>,
+    seen: Vec<u64>,
+    alpha: f64,
+}
+
+impl CostEstimator {
+    /// Estimator for dispatch sizes `1..=max_batch`.
+    pub fn new(max_batch: usize) -> Self {
+        CostEstimator {
+            ewma: vec![0.0; max_batch + 1],
+            seen: vec![0; max_batch + 1],
+            alpha: 0.2,
+        }
+    }
+
+    /// Fold one measured execution (`secs` for a batch dispatched at
+    /// `dispatch` rows) into the curve.
+    pub fn observe(&mut self, dispatch: usize, secs: f64) {
+        if dispatch == 0 || !secs.is_finite() || secs < 0.0 || self.ewma.len() < 2 {
+            return;
+        }
+        let d = dispatch.min(self.ewma.len() - 1);
+        if self.seen[d] == 0 {
+            self.ewma[d] = secs;
+        } else {
+            self.ewma[d] += self.alpha * (secs - self.ewma[d]);
+        }
+        self.seen[d] += 1;
+    }
+
+    /// Number of samples folded in for dispatch size `b`.
+    pub fn samples(&self, b: usize) -> u64 {
+        if b < self.seen.len() { self.seen[b] } else { 0 }
+    }
+
+    /// Learned cost of dispatching `b` rows: running max of the EWMA over
+    /// observed sizes `<= b` (monotone by construction). `None` until at
+    /// least one size `<= b` has been observed.
+    pub fn cost(&self, b: usize) -> Option<f64> {
+        let hi = b.min(self.ewma.len() - 1);
+        let mut best: Option<f64> = None;
+        for d in 1..=hi {
+            if self.seen[d] > 0 {
+                best = Some(match best {
+                    Some(c) => c.max(self.ewma[d]),
+                    None => self.ewma[d],
+                });
+            }
+        }
+        best
+    }
+
+    /// Learned exact-vs-padded decision for a formed batch of `take` rows
+    /// against a padded artifact of `max_batch` rows: dispatch exact when
+    /// the learned cost at `take` undercuts the learned cost at
+    /// `max_batch`. Falls back to the static
+    /// [`crate::serve::DispatchPolicy::AUTO_FILL_THRESHOLD`] rule until
+    /// both sizes have data.
+    pub fn dispatch_size(&self, take: usize, max_batch: usize) -> usize {
+        if take >= max_batch {
+            return max_batch;
+        }
+        match (self.cost_at(take), self.cost_at(max_batch)) {
+            (Some(ct), Some(cm)) => {
+                if ct < cm {
+                    take
+                } else {
+                    max_batch
+                }
+            }
+            _ => {
+                let fill = take as f64 / max_batch as f64;
+                if fill >= crate::serve::DispatchPolicy::AUTO_FILL_THRESHOLD {
+                    max_batch
+                } else {
+                    take
+                }
+            }
+        }
+    }
+
+    /// Smallest fill fraction `take / max_batch` at which the learned
+    /// decision pads up to the full artifact (i.e. the data-driven
+    /// replacement for `AUTO_FILL_THRESHOLD`). Falls back to the static
+    /// 0.5 until the padded size itself has samples.
+    pub fn fill_threshold(&self, max_batch: usize) -> f64 {
+        if max_batch == 0 || self.cost_at(max_batch).is_none() {
+            return crate::serve::DispatchPolicy::AUTO_FILL_THRESHOLD;
+        }
+        for take in 1..=max_batch {
+            if self.dispatch_size(take, max_batch) == max_batch {
+                return take as f64 / max_batch as f64;
+            }
+        }
+        1.0
+    }
+
+    /// Cost at exactly-observed prefix <= b, but requiring size `b`'s own
+    /// bucket to have data so the decision reflects a measured point, not
+    /// only a lower bound borrowed from smaller sizes.
+    fn cost_at(&self, b: usize) -> Option<f64> {
+        let d = b.min(self.seen.len().saturating_sub(1));
+        if d == 0 || self.seen[d] == 0 {
+            None
+        } else {
+            self.cost(d)
+        }
+    }
+}
+
+/// Controller tuning knobs. Defaults are production-ish; tests tighten
+/// the tick and hysteresis windows.
+#[derive(Debug, Clone)]
+pub struct ControllerOpts {
+    /// Control-tick period in seconds.
+    pub tick_s: f64,
+    /// Fleet-default p99 latency budget in milliseconds (0 disables the
+    /// latency breach signal; queue pressure still drives degradation).
+    /// A member's own `slo_p99_ms` overrides this.
+    pub slo_p99_ms: f64,
+    /// Enable variant degradation (the dense→pruned+compensated switch).
+    pub degrade: bool,
+    /// Consecutive breached ticks before degrading one rung.
+    pub degrade_after: u32,
+    /// Consecutive clear ticks before recovering one rung.
+    pub recover_after: u32,
+    /// Minimum ticks between any two variant switches of one member.
+    pub min_dwell_ticks: u32,
+    /// Queue fill fraction at or above which the tick counts as breached.
+    pub queue_hi: f64,
+    /// Queue fill fraction at or below which the tick may count as clear.
+    pub queue_lo: f64,
+    /// Floor for the adapted batch-formation `max_wait` (seconds).
+    pub wait_lo: f64,
+}
+
+impl Default for ControllerOpts {
+    fn default() -> Self {
+        ControllerOpts {
+            tick_s: 0.02,
+            slo_p99_ms: 0.0,
+            degrade: false,
+            degrade_after: 2,
+            recover_after: 4,
+            min_dwell_ticks: 4,
+            queue_hi: 0.5,
+            queue_lo: 0.125,
+            wait_lo: 0.0005,
+        }
+    }
+}
+
+/// One recorded variant switch: member `member` moved `from -> to` at
+/// controller time `t` (seconds on the engine clock).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transition {
+    pub t: f64,
+    pub member: usize,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// Per-member static configuration handed to [`Controller::new`].
+#[derive(Debug, Clone, Copy)]
+pub struct MemberCfg {
+    /// p99 budget in ms; 0 defers to `ControllerOpts::slo_p99_ms`.
+    pub slo_p99_ms: f64,
+    /// Number of plan rungs available (1 = no degradation possible).
+    pub variants: usize,
+}
+
+/// One control tick's inputs.
+#[derive(Debug, Clone, Copy)]
+pub struct Obs<'a> {
+    /// Engine-clock time of the tick (seconds).
+    pub t: f64,
+    /// Queue depth as a fraction of `queue_cap` at tick time.
+    pub queue_frac: f64,
+    /// Arrivals per second observed over the last tick window.
+    pub arrival_rate: f64,
+    /// Windowed p99 latency per member (ms); `None` when the member
+    /// completed nothing in the window.
+    pub p99_ms: &'a [Option<f64>],
+}
+
+/// Control outputs, applied by the engine after each tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    /// New batch-formation deadline (seconds).
+    MaxWait(f64),
+    /// New auto-dispatch fill threshold in `[0, 1]`.
+    FillThreshold(f64),
+    /// Switch `member` to plan rung `variant`.
+    Variant { member: usize, variant: usize },
+}
+
+struct MemberState {
+    cfg: MemberCfg,
+    variant: usize,
+    breach_ticks: u32,
+    clear_ticks: u32,
+    last_switch: Option<u64>,
+}
+
+/// The feedback controller: holds per-member hysteresis state and the
+/// transition log. Pure — call [`Controller::tick`] with an [`Obs`] and a
+/// [`CostEstimator`], apply the returned [`Action`]s.
+pub struct Controller {
+    opts: ControllerOpts,
+    base_wait: f64,
+    max_batch: usize,
+    members: Vec<MemberState>,
+    ticks: u64,
+    transitions: Vec<Transition>,
+}
+
+impl Controller {
+    pub fn new(opts: ControllerOpts, base_wait: f64, max_batch: usize, members: &[MemberCfg]) -> Self {
+        Controller {
+            opts,
+            base_wait: base_wait.max(0.0),
+            max_batch: max_batch.max(1),
+            members: members
+                .iter()
+                .map(|&cfg| MemberState {
+                    cfg,
+                    variant: 0,
+                    breach_ticks: 0,
+                    clear_ticks: 0,
+                    last_switch: None,
+                })
+                .collect(),
+            ticks: 0,
+            transitions: Vec::new(),
+        }
+    }
+
+    /// Current plan rung for `member` (0 = dense).
+    pub fn variant(&self, member: usize) -> usize {
+        self.members.get(member).map_or(0, |m| m.variant)
+    }
+
+    /// All variant switches so far, in order.
+    pub fn transitions(&self) -> &[Transition] {
+        &self.transitions
+    }
+
+    /// Run one control tick.
+    pub fn tick(&mut self, obs: &Obs, est: &CostEstimator) -> Vec<Action> {
+        self.ticks += 1;
+        let tick = self.ticks;
+        let mut out = Vec::new();
+
+        // Dispatch threshold: hand the engine the learned fill threshold
+        // (falls back to the static 0.5 until the curve has data).
+        out.push(Action::FillThreshold(est.fill_threshold(self.max_batch)));
+
+        // Batch-formation deadline: under queue pressure, stop holding
+        // batches open (the queue itself guarantees full batches); under
+        // light load, wait roughly long enough for max_batch arrivals but
+        // never beyond the configured base.
+        let wait = if obs.queue_frac >= self.opts.queue_hi {
+            self.opts.wait_lo
+        } else if obs.arrival_rate > 0.0 {
+            (self.max_batch as f64 / obs.arrival_rate).clamp(self.opts.wait_lo, self.base_wait)
+        } else {
+            self.base_wait
+        };
+        out.push(Action::MaxWait(wait));
+
+        if !self.opts.degrade {
+            return out;
+        }
+        for (i, m) in self.members.iter_mut().enumerate() {
+            if m.cfg.variants < 2 {
+                continue;
+            }
+            let slo = if m.cfg.slo_p99_ms > 0.0 { m.cfg.slo_p99_ms } else { self.opts.slo_p99_ms };
+            let p99 = obs.p99_ms.get(i).copied().flatten();
+            let lat_breach = slo > 0.0 && p99.map_or(false, |p| p > slo);
+            let breach = obs.queue_frac >= self.opts.queue_hi || lat_breach;
+            let clear = obs.queue_frac <= self.opts.queue_lo
+                && (slo <= 0.0 || p99.map_or(true, |p| p < 0.5 * slo));
+
+            if breach {
+                m.breach_ticks += 1;
+                m.clear_ticks = 0;
+            } else if clear {
+                m.clear_ticks += 1;
+                m.breach_ticks = 0;
+            } else {
+                m.breach_ticks = 0;
+                m.clear_ticks = 0;
+            }
+
+            let dwell_ok = m
+                .last_switch
+                .map_or(true, |s| tick - s >= self.opts.min_dwell_ticks as u64);
+            if breach
+                && m.breach_ticks >= self.opts.degrade_after
+                && m.variant + 1 < m.cfg.variants
+                && dwell_ok
+            {
+                let from = m.variant;
+                m.variant += 1;
+                m.breach_ticks = 0;
+                m.last_switch = Some(tick);
+                self.transitions.push(Transition { t: obs.t, member: i, from, to: m.variant });
+                out.push(Action::Variant { member: i, variant: m.variant });
+            } else if clear && m.clear_ticks >= self.opts.recover_after && m.variant > 0 && dwell_ok {
+                let from = m.variant;
+                m.variant -= 1;
+                m.clear_ticks = 0;
+                m.last_switch = Some(tick);
+                self.transitions.push(Transition { t: obs.t, member: i, from, to: m.variant });
+                out.push(Action::Variant { member: i, variant: m.variant });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(t: f64, qf: f64, p99: Option<f64>) -> (f64, f64, Vec<Option<f64>>) {
+        (t, qf, vec![p99])
+    }
+
+    #[test]
+    fn estimator_monotone_and_converges() {
+        let mut est = CostEstimator::new(8);
+        // Noisy samples of a true increasing curve cost(b) = 1 + b.
+        let mut rng = crate::util::rng::Pcg64::new(11);
+        for _ in 0..200 {
+            for b in 1..=8usize {
+                let noise = 0.1 * (rng.uniform() - 0.5);
+                est.observe(b, (1.0 + b as f64) * (1.0 + noise));
+            }
+        }
+        let mut prev = 0.0;
+        for b in 1..=8 {
+            let c = est.cost(b).expect("observed");
+            assert!(c >= prev, "cost curve not monotone at b={b}: {c} < {prev}");
+            prev = c;
+        }
+        // True curve: cost(4) < cost(8) => exact wins at take=4.
+        assert_eq!(est.dispatch_size(4, 8), 4);
+        assert_eq!(est.dispatch_size(8, 8), 8);
+    }
+
+    #[test]
+    fn estimator_falls_back_to_static_threshold() {
+        let est = CostEstimator::new(16);
+        // No data: static 0.5 rule (mirrors DispatchPolicy::Auto).
+        assert_eq!(est.dispatch_size(7, 16), 7);
+        assert_eq!(est.dispatch_size(8, 16), 16);
+        assert_eq!(est.fill_threshold(16), crate::serve::DispatchPolicy::AUTO_FILL_THRESHOLD);
+    }
+
+    #[test]
+    fn flat_cost_curve_pads_up() {
+        // A flat curve (padding is free) should drive the threshold to
+        // pad from the smallest sizes.
+        let mut est = CostEstimator::new(8);
+        for _ in 0..50 {
+            for b in 1..=8usize {
+                est.observe(b, 0.005);
+            }
+        }
+        assert_eq!(est.dispatch_size(2, 8), 8);
+        assert!(est.fill_threshold(8) <= 1.0 / 8.0 + 1e-9);
+    }
+
+    #[test]
+    fn controller_degrades_and_recovers_with_dwell() {
+        let opts = ControllerOpts {
+            degrade: true,
+            degrade_after: 2,
+            recover_after: 2,
+            min_dwell_ticks: 3,
+            ..Default::default()
+        };
+        let mut c = Controller::new(
+            opts,
+            0.01,
+            8,
+            &[MemberCfg { slo_p99_ms: 100.0, variants: 2 }],
+        );
+        let est = CostEstimator::new(8);
+        let mut t = 0.0;
+        // Sustained pressure: degrade after 2 breached ticks.
+        for _ in 0..2 {
+            t += 0.02;
+            let (tt, qf, p99) = obs(t, 0.9, Some(250.0));
+            c.tick(&Obs { t: tt, queue_frac: qf, arrival_rate: 500.0, p99_ms: &p99 }, &est);
+        }
+        assert_eq!(c.variant(0), 1);
+        // Clear ticks: recovery blocked by dwell until 3 ticks passed.
+        for _ in 0..4 {
+            t += 0.02;
+            let (tt, qf, p99) = obs(t, 0.0, Some(5.0));
+            c.tick(&Obs { t: tt, queue_frac: qf, arrival_rate: 10.0, p99_ms: &p99 }, &est);
+        }
+        assert_eq!(c.variant(0), 0);
+        let seq: Vec<(usize, usize)> = c.transitions().iter().map(|tr| (tr.from, tr.to)).collect();
+        assert_eq!(seq, vec![(0, 1), (1, 0)]);
+    }
+
+    #[test]
+    fn controller_never_flaps_within_dwell_window() {
+        let opts = ControllerOpts {
+            degrade: true,
+            degrade_after: 1,
+            recover_after: 1,
+            min_dwell_ticks: 4,
+            ..Default::default()
+        };
+        let mut c = Controller::new(
+            opts,
+            0.01,
+            8,
+            &[MemberCfg { slo_p99_ms: 50.0, variants: 3 }],
+        );
+        let est = CostEstimator::new(8);
+        // Adversarial alternating observations for many ticks.
+        let mut switch_ticks: Vec<u64> = Vec::new();
+        for k in 0..64u64 {
+            let hot = k % 2 == 0;
+            let p99 = vec![Some(if hot { 500.0 } else { 1.0 })];
+            let before = c.transitions().len();
+            c.tick(
+                &Obs {
+                    t: k as f64 * 0.02,
+                    queue_frac: if hot { 1.0 } else { 0.0 },
+                    arrival_rate: 100.0,
+                    p99_ms: &p99,
+                },
+                &est,
+            );
+            if c.transitions().len() > before {
+                switch_ticks.push(k);
+            }
+        }
+        for w in switch_ticks.windows(2) {
+            assert!(
+                w[1] - w[0] >= 4,
+                "variant flapped within the dwell window: switches at ticks {:?}",
+                switch_ticks
+            );
+        }
+    }
+
+    #[test]
+    fn max_wait_adapts_to_pressure() {
+        let opts = ControllerOpts::default();
+        let wait_lo = opts.wait_lo;
+        let mut c = Controller::new(opts, 0.01, 8, &[]);
+        let est = CostEstimator::new(8);
+        let acts =
+            c.tick(&Obs { t: 0.0, queue_frac: 0.9, arrival_rate: 1000.0, p99_ms: &[] }, &est);
+        assert!(acts.contains(&Action::MaxWait(wait_lo)), "pressure should floor max_wait");
+        let acts = c.tick(&Obs { t: 0.1, queue_frac: 0.0, arrival_rate: 0.0, p99_ms: &[] }, &est);
+        assert!(acts.contains(&Action::MaxWait(0.01)), "idle should restore base wait");
+    }
+}

@@ -20,22 +20,36 @@
 //! is never shed mid-generation), so decode steps from different sequences
 //! batch together — the continuation-re-enqueue batching model.
 //!
-//! [`run_fleet`] runs *two* workloads — possibly over different models —
-//! through one queue and one worker pool (a mixed vision + generation
-//! fleet). Requests are interleaved round-robin across the members of the
-//! fleet; workers form single-unit batches (a batch never mixes models),
+//! [`run_fleet`] runs *N* workloads — possibly over different models —
+//! through one queue and one worker pool (a mixed vision + text +
+//! generation fleet). Requests are interleaved round-robin across the
+//! members; workers form single-unit batches (a batch never mixes models),
 //! and per-member stats come back separately. [`run_engine`] is the
-//! single-member instance of the same core.
+//! single-member instance of the same core. Members are type-erased via
+//! [`FleetMember::erased`], so a fleet is just a `Vec<ErasedMember>`.
+//!
+//! All time flows through the [`Clock`] trait (`serve/clock.rs`): arrival
+//! generation, batching deadlines, execution timestamps, and the
+//! controller's tick cadence. Production uses the wall clock; the
+//! discrete-event simulator (`serve/sim.rs`) replays the same queueing
+//! semantics on a virtual clock for bit-reproducible controller tests.
+//!
+//! With [`EngineOpts::controller`] set, a control thread wakes every tick,
+//! observes queue depth / arrival rate / per-member windowed p99, and
+//! adapts `max_wait`, the auto-dispatch fill threshold (from the online
+//! [`CostEstimator`]), and — with `degrade` — the active plan rung of each
+//! member ([`Plans::set_active`]): dense under normal load, the
+//! pruned+compensated fallback under sustained pressure (see
+//! `serve/controller.rs` for the hysteresis state machine).
 //!
 //! Accounting is per request: queueing delay (intended arrival → first
 //! dequeue), execution time of the final step's batch, total latency,
 //! time-to-first-step and mean inter-step time (for generation:
 //! time-to-first-token and inter-token latency), plus the workload's
 //! [`super::RequestOutput`] (prediction + token charge). Predictions are
-//! returned
-//! per request so tests can assert that batching, padding vs exact-size
-//! dispatch, worker count, and batch composition never change *what* is
-//! computed.
+//! returned per request so tests can assert that batching, padding vs
+//! exact-size dispatch, worker count, and batch composition never change
+//! *what* is computed.
 //!
 //! Worker threads call [`threads::serialize_nested_regions`] on entry:
 //! the per-example fan-out inside the native backend runs serial on them,
@@ -46,6 +60,7 @@ use anyhow::{bail, Result};
 
 use crate::exec::Executor;
 use crate::model::WeightStore;
+use crate::serve::controller::{ControllerOpts, Transition};
 use crate::serve::workload::{DispatchPolicy, Workload};
 
 // Internals of the real (non-PJRT) engine; the `--cfg pjrt_backend` build
@@ -55,12 +70,15 @@ use crate::serve::workload::{DispatchPolicy, Workload};
 #[cfg(not(pjrt_backend))]
 use {
     crate::exec::{KvPoolOpts, KvPoolStats},
-    crate::serve::workload::{Plans, StepOutcome},
+    crate::serve::clock::{Clock, WallClock},
+    crate::serve::controller::{Action, Controller, CostEstimator, MemberCfg, Obs},
+    crate::serve::workload::{PlanPair, Plans, StepOutcome},
     crate::util::bench::percentile,
     crate::util::{threads, Pcg64},
     std::collections::VecDeque,
+    std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering},
     std::sync::{Arc, Condvar, Mutex},
-    std::time::{Duration, Instant},
+    std::time::Duration,
 };
 
 /// Serving-engine options.
@@ -78,7 +96,8 @@ pub struct EngineOpts {
     /// the padded dispatch path pads partial batches to.
     pub max_batch: usize,
     /// Batching deadline: how long a worker holds a non-full batch open
-    /// waiting for more arrivals, seconds.
+    /// waiting for more arrivals, seconds. With a controller this is the
+    /// *base* wait the controller adapts below.
     pub max_wait: f64,
     /// Queue bound; *arrivals* beyond it are shed (counted, not served).
     /// Re-enqueued continuations of admitted requests are exempt.
@@ -98,6 +117,16 @@ pub struct EngineOpts {
     /// KV pool capacity in blocks (`0` = unbounded). A run that outgrows
     /// the cap fails fast with a clear error instead of thrashing.
     pub kv_blocks: usize,
+    /// Arrival-rate multiplier applied to the middle third of the offered
+    /// schedule (`1` = flat). The load-spike scenario the controller is
+    /// tested against.
+    pub spike: f64,
+    /// Default per-member p99 latency budget, ms (`0` = no SLO). A
+    /// [`FleetMember::with_slo_p99_ms`] override wins per member.
+    pub slo_p99_ms: f64,
+    /// Feedback-controller configuration (`None` = static knobs, the
+    /// pre-controller behavior).
+    pub controller: Option<ControllerOpts>,
 }
 
 impl Default for EngineOpts {
@@ -114,6 +143,9 @@ impl Default for EngineOpts {
             dispatch: DispatchPolicy::Auto,
             kv_block: 0,
             kv_blocks: 0,
+            spike: 1.0,
+            slo_p99_ms: 0.0,
+            controller: None,
         }
     }
 }
@@ -121,8 +153,9 @@ impl Default for EngineOpts {
 impl EngineOpts {
     /// Reject degenerate configurations with clear errors instead of
     /// silently shedding everything (`queue_cap == 0`), spinning on empty
-    /// batches (`max_batch == 0`), or deadlocking (`workers == 0`).
-    fn validate(&self) -> Result<()> {
+    /// batches (`max_batch == 0`), deadlocking (`workers == 0`), or
+    /// panicking later on a non-finite `--exec-floor`.
+    pub(crate) fn validate(&self) -> Result<()> {
         if self.requests == 0 {
             bail!("run_engine: requests must be > 0");
         }
@@ -134,6 +167,15 @@ impl EngineOpts {
         }
         if self.workers == 0 {
             bail!("run_engine: workers must be > 0 (got 0 — nothing would drain the queue)");
+        }
+        if !self.exec_floor.is_finite() || self.exec_floor < 0.0 {
+            bail!(
+                "run_engine: --exec-floor must be a finite number of seconds >= 0 (got {})",
+                self.exec_floor
+            );
+        }
+        if !self.spike.is_finite() || self.spike <= 0.0 {
+            bail!("run_engine: --spike must be a finite rate multiplier > 0 (got {})", self.spike);
         }
         Ok(())
     }
@@ -180,6 +222,11 @@ pub struct RequestRecord {
     /// Tokens charged to this request (vision: 1; text: prompt length;
     /// generation: prompt + generated).
     pub tokens: usize,
+    /// Plan rung active when the request's *final* step dispatched (0 =
+    /// dense). For pinned generation sequences this is the engine-level
+    /// rung at that moment, which can lag the sequence's own pinned rung
+    /// by one switch — an accounting approximation, not an execution one.
+    pub variant: usize,
 }
 
 /// Aggregate result of one engine run (per fleet member).
@@ -198,9 +245,12 @@ pub struct EngineStats {
     /// Mean engine steps per served request (1.0 for single-shot
     /// workloads; prefill + decode steps for generation).
     pub steps_mean: f64,
-    /// p50 / p95 of total per-request latency, ms.
+    /// p50 / p95 / p99 of total per-request latency, ms.
     pub p50_ms: f64,
     pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// The member's effective p99 budget, ms (0 = none configured).
+    pub slo_p99_ms: f64,
     /// p50 queueing delay, ms.
     pub queue_p50_ms: f64,
     /// p50 time to the end of a request's first step, ms (TTFT for
@@ -220,7 +270,8 @@ pub struct EngineStats {
     /// only the fresh rows, so this scales with tokens fed per step —
     /// independent of `n_ctx` capacity.
     pub kv_bytes_per_step: f64,
-    /// High-water bytes of live KV pool blocks over the run.
+    /// High-water bytes of live KV pool blocks over the run (summed across
+    /// plan rungs — each rung owns its own pool).
     pub kv_peak_bytes: u64,
     /// Pool blocks still held at the end of the run (registered shared
     /// prefixes; completed sequences release theirs as they finish).
@@ -232,6 +283,14 @@ pub struct EngineStats {
     pub kv_shared_hits: u64,
     /// Copy-on-write block copies (a shared tail diverged).
     pub kv_cow_copies: u64,
+    /// Served requests whose final step dispatched on each plan rung
+    /// (index 0 = dense). Length = the member's rung count.
+    pub served_by_variant: Vec<usize>,
+    /// Seconds each plan rung was the member's active rung, from the
+    /// controller's transition log (everything in rung 0 without one).
+    pub time_in_variant_s: Vec<f64>,
+    /// This member's variant switches, in order (empty without `degrade`).
+    pub transitions: Vec<Transition>,
     /// Per-request records, sorted by id.
     pub records: Vec<RequestRecord>,
 }
@@ -244,18 +303,100 @@ pub struct FleetMember<'x, 'rt, 'w, W: Workload> {
     /// Requests offered for this member ([`EngineOpts::requests`] is
     /// ignored by [`run_fleet`]).
     pub requests: usize,
+    /// Per-member p99 budget, ms (`0` defers to the fleet default).
+    pub slo_p99_ms: f64,
+    /// Degraded-variant weight stores, cheapest last: rung 1.. of the
+    /// member's plan ladder (rung 0 is `weights`). Same model config,
+    /// different (pruned+compensated) folded weights.
+    pub fallbacks: Vec<&'w WeightStore>,
+}
+
+impl<'x, 'rt, 'w, W: Workload> FleetMember<'x, 'rt, 'w, W> {
+    pub fn new(
+        exec: &'x Executor<'rt>,
+        weights: &'w WeightStore,
+        workload: &'x W,
+        requests: usize,
+    ) -> Self {
+        FleetMember { exec, weights, workload, requests, slo_p99_ms: 0.0, fallbacks: Vec::new() }
+    }
+
+    /// Set this member's p99 latency budget (ms).
+    pub fn with_slo_p99_ms(mut self, slo_p99_ms: f64) -> Self {
+        self.slo_p99_ms = slo_p99_ms;
+        self
+    }
+
+    /// Append a degraded-variant weight store (the controller's next rung).
+    pub fn with_fallback(mut self, weights: &'w WeightStore) -> Self {
+        self.fallbacks.push(weights);
+        self
+    }
+
+    /// Type-erase the member so fleets of mixed workload types fit one
+    /// `Vec` (see [`run_fleet`]). Plan building is deferred into the
+    /// erased closure so it happens inside the fleet run, with the fleet's
+    /// resolved options.
+    pub fn erased<'e>(self) -> ErasedMember<'e>
+    where
+        'x: 'e,
+        'rt: 'e,
+        'w: 'e,
+    {
+        #[cfg(not(pjrt_backend))]
+        {
+            let FleetMember { exec, weights, workload, requests, slo_p99_ms, fallbacks } = self;
+            ErasedMember {
+                requests,
+                mk: Box::new(move |opts: &EngineOpts| {
+                    let policy = opts.dispatch.resolve(exec.rt.prefers_fixed_shapes());
+                    let mut stores: Vec<&'e WeightStore> = Vec::with_capacity(1 + fallbacks.len());
+                    stores.push(weights);
+                    for &f in fallbacks.iter() {
+                        stores.push(f);
+                    }
+                    make_unit(
+                        exec,
+                        &stores,
+                        workload,
+                        requests,
+                        opts.max_batch,
+                        policy,
+                        opts.kv_pool_opts(),
+                        slo_p99_ms,
+                    )
+                }),
+            }
+        }
+        #[cfg(pjrt_backend)]
+        {
+            ErasedMember { requests: self.requests, _marker: std::marker::PhantomData }
+        }
+    }
+}
+
+/// A type-erased fleet member: request count plus a deferred unit builder.
+/// Built via [`FleetMember::erased`].
+pub struct ErasedMember<'e> {
+    pub(crate) requests: usize,
+    #[cfg(not(pjrt_backend))]
+    #[allow(clippy::type_complexity)]
+    pub(crate) mk: Box<dyn FnOnce(&EngineOpts) -> Result<Unit<'e>> + 'e>,
+    #[cfg(pjrt_backend)]
+    pub(crate) _marker: std::marker::PhantomData<&'e ()>,
 }
 
 /// A request (or a re-enqueued continuation) sitting in the engine queue.
+/// Timestamps are engine-clock seconds (see [`Clock`]).
 #[cfg(not(pjrt_backend))]
-struct Queued {
-    unit: usize,
-    id: usize,
-    arrival: Instant,
+pub(crate) struct Queued {
+    pub(crate) unit: usize,
+    pub(crate) id: usize,
+    pub(crate) arrival: f64,
     /// Steps completed so far.
-    steps: usize,
-    first_deq: Option<Instant>,
-    first_done: Option<Instant>,
+    pub(crate) steps: usize,
+    pub(crate) first_deq: Option<f64>,
+    pub(crate) first_done: Option<f64>,
 }
 
 /// Queue state shared between the generator and the workers.
@@ -267,34 +408,56 @@ struct Shared {
     shed: Vec<usize>,
 }
 
-/// A type-erased fleet unit: the workload, its resolved plans, and its
-/// pre-synthesized payloads, closed over a step function so units with
-/// different `Workload::Req` types share one queue and one worker pool.
+/// Aggregated KV-cache telemetry for one unit, summed over its plan rungs
+/// (each rung owns its own pool; peaks are summed as an upper bound on
+/// simultaneous residency).
 #[cfg(not(pjrt_backend))]
-struct Unit<'s> {
-    label: &'static str,
-    requests: usize,
-    policy: DispatchPolicy,
-    #[allow(clippy::type_complexity)]
-    step: Box<dyn Fn(&[usize], usize) -> Result<Vec<StepOutcome>> + Sync + 's>,
-    /// KV-cache telemetry snapshot: `(dispatches, appended bytes, pool)`;
-    /// `None` for units without a decode plan.
-    #[allow(clippy::type_complexity)]
-    kv: Box<dyn Fn() -> Option<(u64, u64, KvPoolStats)> + Sync + 's>,
+#[derive(Default, Clone, Copy)]
+pub(crate) struct KvAgg {
+    pub(crate) steps: u64,
+    pub(crate) bytes: u64,
+    pub(crate) peak_bytes: u64,
+    pub(crate) blocks_in_use: usize,
+    pub(crate) allocs: u64,
+    pub(crate) shared_hits: u64,
+    pub(crate) cow_copies: u64,
 }
 
-/// Build one unit: resolve the plans, pre-synthesize every payload (request
-/// id == eval-stream index, so data synthesis never pollutes the timed
-/// region), and warm the dispatch path before the clock starts.
+/// A type-erased fleet unit: the workload, its resolved plan ladder, and
+/// its pre-synthesized payloads, closed over a step function so units with
+/// different `Workload::Req` types share one queue and one worker pool.
 #[cfg(not(pjrt_backend))]
-fn make_unit<'s, W: Workload>(
+pub(crate) struct Unit<'s> {
+    pub(crate) label: &'static str,
+    pub(crate) requests: usize,
+    pub(crate) policy: DispatchPolicy,
+    /// This member's p99 budget (ms; 0 = defer to the fleet default).
+    pub(crate) slo_p99_ms: f64,
+    /// The plan ladder every step dispatches through; the controller flips
+    /// the active rung between batches.
+    pub(crate) plans: Arc<Plans<'s, 's>>,
+    #[allow(clippy::type_complexity)]
+    pub(crate) step: Box<dyn Fn(&[usize], usize) -> Result<Vec<StepOutcome>> + Sync + 's>,
+    /// KV-cache telemetry snapshot; `None` for units without decode plans.
+    #[allow(clippy::type_complexity)]
+    pub(crate) kv: Box<dyn Fn() -> Option<KvAgg> + Sync + 's>,
+}
+
+/// Build one unit: resolve one plan rung per weight store (rung 0 = the
+/// primary, usually dense, store), pre-synthesize every payload (request
+/// id == eval-stream index, so data synthesis never pollutes the timed
+/// region), and warm every rung's dispatch path before the clock starts.
+#[cfg(not(pjrt_backend))]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn make_unit<'s, W: Workload>(
     exec: &Executor<'s>,
-    w: &'s WeightStore,
+    stores: &[&'s WeightStore],
     workload: &'s W,
     requests: usize,
     max_batch: usize,
     policy: DispatchPolicy,
     kv_opts: KvPoolOpts,
+    slo_p99_ms: f64,
 ) -> Result<Unit<'s>> {
     let cfg = exec.cfg;
     if workload.cfg() != cfg {
@@ -305,68 +468,99 @@ fn make_unit<'s, W: Workload>(
             cfg.name
         );
     }
+    if stores.is_empty() {
+        bail!("make_unit: a member needs at least one weight store");
+    }
     // Resolve exactly the plan the workload dispatches through: decode
     // workloads never touch the full-forward plan (the decode plan owns its
     // own prefill fallback), and resolving both would shape-check every
-    // parameter twice and warm names that are never dispatched. Plans are
-    // shared (`Arc`) between the step closure and the telemetry closure.
-    let plans = Arc::new(match workload.decode() {
-        Some(mode) => Plans {
-            fwd: None,
-            dec: Some(exec.decode_plan_opts(
-                w,
-                mode.resolve(exec.rt.prefers_fixed_shapes()),
-                kv_opts,
-            )?),
-        },
-        None => Plans { fwd: Some(exec.forward_plan(w)?), dec: None },
-    });
+    // parameter twice and warm names that are never dispatched. One rung
+    // per store; plans are shared (`Arc`) between the step closure, the
+    // telemetry closure, and the engine (for controller rung switches).
+    let mut pairs: Vec<PlanPair<'s, 's>> = Vec::with_capacity(stores.len());
+    for &w in stores {
+        pairs.push(match workload.decode() {
+            Some(mode) => PlanPair {
+                fwd: None,
+                dec: Some(exec.decode_plan_opts(
+                    w,
+                    mode.resolve(exec.rt.prefers_fixed_shapes()),
+                    kv_opts,
+                )?),
+            },
+            None => PlanPair { fwd: Some(exec.forward_plan(w)?), dec: None },
+        });
+    }
+    let plans = Arc::new(Plans::ladder(pairs)?);
     let payloads: Vec<W::Req> = threads::parallel_map(requests, |i| workload.synth(i));
 
-    // Warmup before the clock starts: run the full artifact batch AND batch
-    // size 1 (first-touch allocation, PJRT compilation when gated in), and
-    // under exact/auto dispatch pre-populate the plans' artifact-name
-    // caches for every size a batch could dispatch at — so no batch pays
-    // first-use name formatting inside its timed region. Warm payloads are
-    // synthesized *past* the request id range: multi-step workloads carry
-    // per-request state, and warmup must never pre-advance a real request.
-    {
+    // Warmup before the clock starts, once per rung: run the full artifact
+    // batch AND batch size 1 (first-touch allocation, PJRT compilation when
+    // gated in), and under exact/auto dispatch pre-populate the rung's
+    // artifact-name caches for every size a batch could dispatch at — so
+    // no batch pays first-use name formatting inside its timed region, and
+    // a controller rung switch never pays cold-plan costs mid-run. Warm
+    // payloads are synthesized *past* the request id range (fresh per
+    // rung): multi-step workloads carry per-request state, and warmup must
+    // never pre-advance a real request.
+    for v in 0..plans.variants() {
+        plans.set_active(v);
         let warm: Vec<W::Req> = (0..max_batch + 1).map(|i| workload.synth(requests + i)).collect();
         let refs: Vec<&W::Req> = warm.iter().take(max_batch).collect();
         workload.run_step(&plans, &refs, max_batch)?;
+        let pair = plans.pair(v);
         if policy != DispatchPolicy::Padded {
             workload.run_step(&plans, &[&warm[max_batch]], 1)?;
             for b in 1..=max_batch {
-                if let Some(f) = &plans.fwd {
+                if let Some(f) = &pair.fwd {
                     f.artifact(b);
                 }
-                if let Some(d) = &plans.dec {
+                if let Some(d) = &pair.dec {
                     d.warm_names(b);
                 }
             }
-        } else if let Some(d) = &plans.dec {
+        } else if let Some(d) = &pair.dec {
             d.warm_names(max_batch);
         }
     }
+    plans.set_active(0);
 
-    // Baseline counters after warmup, so per-step means cover only the
-    // measured run (pool-level stats like peak blocks keep warmup — the
-    // registry it warmed stays live).
-    let (kv_s0, kv_b0) = plans.dec.as_ref().map(|d| d.kv_counters()).unwrap_or((0, 0));
+    // Baseline counters after warmup, per rung, so per-step means cover
+    // only the measured run (pool-level stats like peak blocks keep warmup
+    // — the registry it warmed stays live).
+    let kv0: Vec<(u64, u64)> = (0..plans.variants())
+        .map(|v| plans.pair(v).dec.as_ref().map(|d| d.kv_counters()).unwrap_or((0, 0)))
+        .collect();
+    let step_plans = plans.clone();
     let kv_plans = plans.clone();
     Ok(Unit {
         label: workload.label(),
         requests,
         policy,
+        slo_p99_ms,
+        plans,
         step: Box::new(move |ids: &[usize], dispatch: usize| {
             let reqs: Vec<&W::Req> = ids.iter().map(|&i| &payloads[i]).collect();
-            workload.run_step(&plans, &reqs, dispatch)
+            workload.run_step(&step_plans, &reqs, dispatch)
         }),
         kv: Box::new(move || {
-            kv_plans.dec.as_ref().map(|d| {
-                let (s, b) = d.kv_counters();
-                (s - kv_s0, b - kv_b0, d.pool_stats().unwrap_or_default())
-            })
+            let mut agg = KvAgg::default();
+            let mut any = false;
+            for v in 0..kv_plans.variants() {
+                if let Some(d) = kv_plans.pair(v).dec.as_ref() {
+                    any = true;
+                    let (s, b) = d.kv_counters();
+                    agg.steps += s - kv0[v].0;
+                    agg.bytes += b - kv0[v].1;
+                    let p = d.pool_stats().unwrap_or_default();
+                    agg.peak_bytes += p.peak_bytes();
+                    agg.blocks_in_use += p.blocks_in_use;
+                    agg.allocs += p.allocs;
+                    agg.shared_hits += p.shared_hits;
+                    agg.cow_copies += p.cow_copies;
+                }
+            }
+            any.then_some(agg)
         }),
     })
 }
@@ -386,83 +580,136 @@ pub fn run_engine<W: Workload>(
 ) -> Result<EngineStats> {
     opts.validate()?;
     let policy = opts.dispatch.resolve(exec.rt.prefers_fixed_shapes());
-    let unit =
-        make_unit(exec, w, workload, opts.requests, opts.max_batch, policy, opts.kv_pool_opts())?;
+    let unit = make_unit(
+        exec,
+        &[w],
+        workload,
+        opts.requests,
+        opts.max_batch,
+        policy,
+        opts.kv_pool_opts(),
+        opts.slo_p99_ms,
+    )?;
     let mut stats = run_units(vec![unit], opts)?;
     Ok(stats.remove(0))
 }
 
-/// Run two workloads — possibly over different models — through one queue
+/// Run N workloads — possibly over different models — through one queue
 /// and one worker pool: a mixed fleet. Member arrivals interleave
-/// round-robin (a.0, b.0, a.1, b.1, …) on one seeded Poisson schedule;
-/// workers form single-unit batches, so a dispatch never mixes models.
-/// Returns per-member stats in argument order. Per-example math makes each
-/// member's outputs identical to a single-workload [`run_engine`] run with
-/// the same seeds — asserted by `tests/serve_engine`.
+/// round-robin (m0.0, m1.0, …, m0.1, m1.1, …) on one seeded Poisson
+/// schedule; workers form single-unit batches, so a dispatch never mixes
+/// models. Returns per-member stats in argument order. Per-example math
+/// makes each member's outputs identical to a single-workload
+/// [`run_engine`] run with the same seeds — asserted by
+/// `tests/serve_engine`.
 #[cfg(not(pjrt_backend))]
-pub fn run_fleet<A: Workload, B: Workload>(
-    a: FleetMember<'_, '_, '_, A>,
-    b: FleetMember<'_, '_, '_, B>,
-    opts: &EngineOpts,
-) -> Result<[EngineStats; 2]> {
-    EngineOpts { requests: a.requests + b.requests, ..opts.clone() }.validate()?;
-    if a.requests == 0 || b.requests == 0 {
+pub fn run_fleet(members: Vec<ErasedMember<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>> {
+    if members.is_empty() {
+        bail!("run_fleet: the fleet needs at least one member");
+    }
+    if members.iter().any(|m| m.requests == 0) {
         bail!("run_fleet: every member needs at least one request");
     }
-    let pa = opts.dispatch.resolve(a.exec.rt.prefers_fixed_shapes());
-    let pb = opts.dispatch.resolve(b.exec.rt.prefers_fixed_shapes());
-    let kv = opts.kv_pool_opts();
-    let ua = make_unit(a.exec, a.weights, a.workload, a.requests, opts.max_batch, pa, kv)?;
-    let ub = make_unit(b.exec, b.weights, b.workload, b.requests, opts.max_batch, pb, kv)?;
-    let mut stats = run_units(vec![ua, ub], opts)?;
-    let sb = stats.remove(1);
-    let sa = stats.remove(0);
-    Ok([sa, sb])
+    let total: usize = members.iter().map(|m| m.requests).sum();
+    EngineOpts { requests: total, ..opts.clone() }.validate()?;
+    let mut units = Vec::with_capacity(members.len());
+    for m in members {
+        units.push((m.mk)(opts)?);
+    }
+    run_units(units, opts)
 }
 
-/// The shared queueing/batching core: one generator, one bounded queue, one
-/// worker pool over any number of type-erased units.
+/// Seeded arrival schedule shared by the threaded engine and the
+/// simulator: Poisson offsets (seconds from engine start) at `rate`, with
+/// the middle third of the schedule offered at `rate * spike`.
 #[cfg(not(pjrt_backend))]
-fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>> {
-    let b_art = opts.max_batch;
-    let workers = opts.workers;
-    let total: usize = units.iter().map(|u| u.requests).sum();
+pub(crate) fn arrival_times(total: usize, rate: f64, spike: f64, seed: u64) -> Vec<f64> {
+    let rate = if rate.is_finite() && rate > 0.0 { rate } else { f64::INFINITY };
+    let spike = if spike.is_finite() && spike > 0.0 { spike } else { 1.0 };
+    let (lo, hi) = (total / 3, total - total / 3);
+    let mut rng = Pcg64::new(seed);
+    let mut out = Vec::with_capacity(total);
+    let mut t = 0.0f64;
+    for i in 0..total {
+        let r = if i >= lo && i < hi { rate * spike } else { rate };
+        t += -rng.uniform().max(1e-12).ln() / r;
+        out.push(t);
+    }
+    out
+}
 
-    // Deterministic round-robin interleave of unit arrivals: (unit, id)
-    // pairs in offered order, independent of timing.
+/// Deterministic round-robin interleave of unit arrivals: (unit, id) pairs
+/// in offered order, independent of timing.
+#[cfg(not(pjrt_backend))]
+pub(crate) fn arrival_order(units: &[Unit<'_>]) -> Vec<(usize, usize)> {
+    let total: usize = units.iter().map(|u| u.requests).sum();
     let mut order: Vec<(usize, usize)> = Vec::with_capacity(total);
-    {
-        let mut issued = vec![0usize; units.len()];
-        while order.len() < total {
-            for (u, unit) in units.iter().enumerate() {
-                if issued[u] < unit.requests {
-                    order.push((u, issued[u]));
-                    issued[u] += 1;
-                }
+    let mut issued = vec![0usize; units.len()];
+    while order.len() < total {
+        for (u, unit) in units.iter().enumerate() {
+            if issued[u] < unit.requests {
+                order.push((u, issued[u]));
+                issued[u] += 1;
             }
         }
     }
+    order
+}
 
-    // Seeded Poisson arrival offsets (seconds from engine start).
-    let rate = if opts.rate.is_finite() && opts.rate > 0.0 { opts.rate } else { f64::INFINITY };
-    let mut rng = Pcg64::new(opts.seed);
-    let mut arrivals = Vec::with_capacity(total);
-    let mut t = 0.0f64;
-    for _ in 0..total {
-        t += -rng.uniform().max(1e-12).ln() / rate;
-        arrivals.push(t);
-    }
+/// Controller state shared between the worker pool and the control thread.
+#[cfg(not(pjrt_backend))]
+struct Ctl {
+    /// Adapted batch-formation deadline, seconds (f64 bits).
+    max_wait_bits: AtomicU64,
+    /// Adapted auto-dispatch fill threshold in `[0, 1]` (f64 bits).
+    thresh_bits: AtomicU64,
+    /// Online per-dispatch-size cost curve, fed by the workers.
+    est: Mutex<CostEstimator>,
+    /// Windowed per-member completion latencies (ms), drained every tick.
+    lat: Mutex<Vec<Vec<f64>>>,
+    /// Cumulative offered arrivals (shed ones included).
+    arrivals: AtomicUsize,
+    done: AtomicBool,
+}
+
+/// The shared queueing/batching core: one generator, one bounded queue,
+/// one worker pool over any number of type-erased units, plus (when
+/// configured) one control thread — all timed by `clock`.
+#[cfg(not(pjrt_backend))]
+fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>> {
+    run_units_on(units, opts, &WallClock::new())
+}
+
+#[cfg(not(pjrt_backend))]
+fn run_units_on(
+    units: Vec<Unit<'_>>,
+    opts: &EngineOpts,
+    clock: &dyn Clock,
+) -> Result<Vec<EngineStats>> {
+    let b_art = opts.max_batch;
+    let workers = opts.workers;
+    let base_wait = opts.max_wait.max(0.0);
+
+    let order = arrival_order(&units);
+    let arrivals = arrival_times(order.len(), opts.rate, opts.spike, opts.seed);
 
     let shared =
         Mutex::new(Shared { queue: VecDeque::new(), closed: false, shed: vec![0; units.len()] });
     let cv = Condvar::new();
     let results: Mutex<Vec<Vec<RequestRecord>>> = Mutex::new(vec![Vec::new(); units.len()]);
-    // Per executed batch: (unit, requests carried, dispatch size, exec ms).
-    let batches: Mutex<Vec<(usize, usize, usize, f64)>> = Mutex::new(Vec::new());
-    let wait_dur = Duration::from_secs_f64(opts.max_wait.max(0.0));
-    let wall0 = Instant::now();
+    // Per executed batch: (unit, requests carried, dispatch size, exec ms,
+    // active plan rung).
+    let batches: Mutex<Vec<(usize, usize, usize, f64, usize)>> = Mutex::new(Vec::new());
+    let ctl = opts.controller.as_ref().map(|_| Ctl {
+        max_wait_bits: AtomicU64::new(base_wait.to_bits()),
+        thresh_bits: AtomicU64::new(DispatchPolicy::AUTO_FILL_THRESHOLD.to_bits()),
+        est: Mutex::new(CostEstimator::new(b_art)),
+        lat: Mutex::new(vec![Vec::new(); units.len()]),
+        arrivals: AtomicUsize::new(0),
+        done: AtomicBool::new(false),
+    });
 
-    std::thread::scope(|s| -> Result<()> {
+    let transitions = std::thread::scope(|s| -> Result<Vec<Transition>> {
         // ---- open-loop generator ----
         s.spawn(|| {
             'replay: for (&(unit, id), &at) in order.iter().zip(&arrivals) {
@@ -473,11 +720,14 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
                     if shared.lock().unwrap().closed {
                         break 'replay;
                     }
-                    let now = wall0.elapsed().as_secs_f64();
+                    let now = clock.now();
                     if now >= at {
                         break;
                     }
-                    std::thread::sleep(Duration::from_secs_f64((at - now).min(0.005)));
+                    clock.sleep((at - now).min(0.005));
+                }
+                if let Some(c) = &ctl {
+                    c.arrivals.fetch_add(1, Ordering::AcqRel);
                 }
                 let mut g = shared.lock().unwrap();
                 if g.closed {
@@ -489,7 +739,7 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
                     g.queue.push_back(Queued {
                         unit,
                         id,
-                        arrival: wall0 + Duration::from_secs_f64(at),
+                        arrival: at,
                         steps: 0,
                         first_deq: None,
                         first_done: None,
@@ -499,6 +749,71 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
             }
             shared.lock().unwrap().closed = true;
             cv.notify_all();
+        });
+
+        // ---- control thread ----
+        let ctl_handle = ctl.as_ref().map(|c| {
+            let copts = opts.controller.clone().expect("ctl implies controller opts");
+            let members: Vec<MemberCfg> = units
+                .iter()
+                .map(|u| MemberCfg {
+                    slo_p99_ms: if u.slo_p99_ms > 0.0 { u.slo_p99_ms } else { copts.slo_p99_ms },
+                    variants: u.plans.variants(),
+                })
+                .collect();
+            let units = &units;
+            let shared = &shared;
+            s.spawn(move || -> Vec<Transition> {
+                let mut controller = Controller::new(copts.clone(), base_wait, b_art, &members);
+                let mut prev_arrivals = 0usize;
+                loop {
+                    clock.sleep(copts.tick_s.max(1e-4));
+                    if c.done.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let t = clock.now();
+                    let queue_frac = shared.lock().unwrap().queue.len() as f64
+                        / opts.queue_cap.max(1) as f64;
+                    let arr = c.arrivals.load(Ordering::Acquire);
+                    let arrival_rate =
+                        (arr - prev_arrivals) as f64 / copts.tick_s.max(1e-4);
+                    prev_arrivals = arr;
+                    let p99: Vec<Option<f64>> = {
+                        let mut lat = c.lat.lock().unwrap();
+                        lat.iter_mut()
+                            .map(|w| {
+                                if w.is_empty() {
+                                    None
+                                } else {
+                                    w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                                    let p = percentile(w, 0.99);
+                                    w.clear();
+                                    Some(p)
+                                }
+                            })
+                            .collect()
+                    };
+                    let est = c.est.lock().unwrap().clone();
+                    let actions = controller.tick(
+                        &Obs { t, queue_frac, arrival_rate, p99_ms: &p99 },
+                        &est,
+                    );
+                    for a in actions {
+                        match a {
+                            Action::MaxWait(w) => {
+                                c.max_wait_bits.store(w.to_bits(), Ordering::Release)
+                            }
+                            Action::FillThreshold(th) => {
+                                c.thresh_bits.store(th.to_bits(), Ordering::Release)
+                            }
+                            Action::Variant { member, variant } => {
+                                units[member].plans.set_active(variant)
+                            }
+                        }
+                    }
+                }
+                controller.transitions().to_vec()
+            })
         });
 
         // ---- worker pool ----
@@ -524,9 +839,16 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
                             // Hold the batch open until full, closed, or the
                             // batching deadline expires — draining only
                             // requests of the head's unit (a batch never
-                            // mixes models).
+                            // mixes models). The deadline comes from the
+                            // controller when one is running.
                             let unit = batch[0].unit;
-                            let deadline = Instant::now() + wait_dur;
+                            let wait_s = match &ctl {
+                                Some(c) => {
+                                    f64::from_bits(c.max_wait_bits.load(Ordering::Acquire))
+                                }
+                                None => base_wait,
+                            };
+                            let deadline = clock.now() + wait_s.max(0.0);
                             loop {
                                 let mut i = 0;
                                 while batch.len() < b_art && i < g.queue.len() {
@@ -539,11 +861,16 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
                                 if batch.len() >= b_art || g.closed {
                                     break;
                                 }
-                                let now = Instant::now();
+                                let now = clock.now();
                                 if now >= deadline {
                                     break;
                                 }
-                                let (g2, _) = cv.wait_timeout(g, deadline - now).unwrap();
+                                let (g2, _) = cv
+                                    .wait_timeout(
+                                        g,
+                                        Duration::from_secs_f64((deadline - now).max(0.0)),
+                                    )
+                                    .unwrap();
                                 g = g2;
                             }
                             // Hand leftover work to an idle worker: our
@@ -554,8 +881,22 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
                         }
                         let unit = batch[0].unit;
                         let take = batch.len();
-                        let dispatch = units[unit].policy.dispatch_size(take, b_art);
-                        let t_deq = Instant::now();
+                        // Dispatch shape: the learned cost curve replaces the
+                        // static fill threshold under `auto` once a
+                        // controller is running.
+                        let dispatch = match &ctl {
+                            Some(c) if units[unit].policy == DispatchPolicy::Auto => {
+                                let th = f64::from_bits(c.thresh_bits.load(Ordering::Acquire));
+                                if (take as f64) < th * b_art as f64 {
+                                    take
+                                } else {
+                                    b_art
+                                }
+                            }
+                            _ => units[unit].policy.dispatch_size(take, b_art),
+                        };
+                        let variant = units[unit].plans.active();
+                        let t_deq = clock.now();
                         for q in batch.iter_mut() {
                             if q.first_deq.is_none() {
                                 q.first_deq = Some(t_deq);
@@ -590,16 +931,17 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
                             );
                         }
                         if opts.exec_floor > 0.0 {
-                            let spent = t_deq.elapsed().as_secs_f64();
+                            let spent = clock.now() - t_deq;
                             if spent < opts.exec_floor {
-                                std::thread::sleep(Duration::from_secs_f64(
-                                    opts.exec_floor - spent,
-                                ));
+                                clock.sleep(opts.exec_floor - spent);
                             }
                         }
-                        let t_done = Instant::now();
-                        let exec_ms =
-                            t_done.saturating_duration_since(t_deq).as_secs_f64() * 1e3;
+                        let t_done = clock.now();
+                        let exec_s = (t_done - t_deq).max(0.0);
+                        let exec_ms = exec_s * 1e3;
+                        if let Some(c) = &ctl {
+                            c.est.lock().unwrap().observe(dispatch, exec_s);
+                        }
                         let mut requeue: Vec<Queued> = Vec::new();
                         {
                             let mut recs = results.lock().unwrap();
@@ -611,21 +953,16 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
                                 match out {
                                     StepOutcome::Done(o) => {
                                         let first = q.first_done.expect("set above");
-                                        let first_ms = first
-                                            .saturating_duration_since(q.arrival)
-                                            .as_secs_f64()
-                                            * 1e3;
-                                        let total_ms = t_done
-                                            .saturating_duration_since(q.arrival)
-                                            .as_secs_f64()
-                                            * 1e3;
+                                        let first_ms = (first - q.arrival).max(0.0) * 1e3;
+                                        let total_ms = (t_done - q.arrival).max(0.0) * 1e3;
+                                        if let Some(c) = &ctl {
+                                            c.lat.lock().unwrap()[q.unit].push(total_ms);
+                                        }
                                         recs[q.unit].push(RequestRecord {
                                             id: q.id,
-                                            queue_ms: q
-                                                .first_deq
-                                                .expect("set above")
-                                                .saturating_duration_since(q.arrival)
-                                                .as_secs_f64()
+                                            queue_ms: (q.first_deq.expect("set above")
+                                                - q.arrival)
+                                                .max(0.0)
                                                 * 1e3,
                                             exec_ms,
                                             total_ms,
@@ -638,13 +975,14 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
                                             },
                                             pred: o.pred,
                                             tokens: o.tokens,
+                                            variant,
                                         });
                                     }
                                     StepOutcome::Continue => requeue.push(q),
                                 }
                             }
                         }
-                        batches.lock().unwrap().push((unit, take, dispatch, exec_ms));
+                        batches.lock().unwrap().push((unit, take, dispatch, exec_ms, variant));
                         if !requeue.is_empty() {
                             // Continuations of admitted requests bypass the
                             // queue bound: shedding one mid-generation would
@@ -660,17 +998,47 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
                 })
             })
             .collect();
+        // Join workers first, then release the control thread — even when
+        // a worker failed, so the scope never deadlocks on the ticker.
+        let mut worker_err: Option<anyhow::Error> = None;
         for h in handles {
-            h.join().expect("serve worker panicked")?;
+            if let Err(e) = h.join().expect("serve worker panicked") {
+                worker_err.get_or_insert(e);
+            }
         }
-        Ok(())
+        if let Some(c) = &ctl {
+            c.done.store(true, Ordering::Release);
+        }
+        let transitions = match ctl_handle {
+            Some(h) => h.join().expect("serve controller panicked"),
+            None => Vec::new(),
+        };
+        match worker_err {
+            Some(e) => Err(e),
+            None => Ok(transitions),
+        }
     })?;
 
-    let total_s = wall0.elapsed().as_secs_f64();
+    let total_s = clock.now();
     let shed = std::mem::take(&mut shared.lock().unwrap().shed);
     let per_unit = results.into_inner().unwrap();
     let batch_log = batches.into_inner().unwrap();
+    let slo_default = opts.controller.as_ref().map(|c| c.slo_p99_ms).unwrap_or(opts.slo_p99_ms);
+    Ok(finalize_stats(&units, per_unit, shed, &batch_log, &transitions, total_s, slo_default))
+}
 
+/// Aggregate per-unit records + the batch log into [`EngineStats`] — the
+/// one accounting path shared by the threaded engine and the simulator.
+#[cfg(not(pjrt_backend))]
+pub(crate) fn finalize_stats(
+    units: &[Unit<'_>],
+    per_unit: Vec<Vec<RequestRecord>>,
+    shed: Vec<usize>,
+    batch_log: &[(usize, usize, usize, f64, usize)],
+    transitions: &[Transition],
+    total_s: f64,
+    slo_default: f64,
+) -> Vec<EngineStats> {
     let mut out = Vec::with_capacity(units.len());
     for (u, mut records) in per_unit.into_iter().enumerate() {
         records.sort_by_key(|r| r.id);
@@ -681,12 +1049,29 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
         let mut firsts: Vec<f64> = records.iter().map(|r| r.first_ms).collect();
         firsts.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let multi: Vec<&RequestRecord> = records.iter().filter(|r| r.steps > 1).collect();
-        let ub: Vec<&(usize, usize, usize, f64)> =
-            batch_log.iter().filter(|&&(bu, _, _, _)| bu == u).collect();
+        let ub: Vec<&(usize, usize, usize, f64, usize)> =
+            batch_log.iter().filter(|&&(bu, ..)| bu == u).collect();
         let n_batches = ub.len();
         let tokens: usize = records.iter().map(|r| r.tokens).sum();
-        let (kv_steps, kv_bytes, kv_pool) =
-            (units[u].kv)().unwrap_or((0, 0, KvPoolStats::default()));
+        let kv = (units[u].kv)().unwrap_or_default();
+        let variants = units[u].plans.variants();
+        let mut served_by_variant = vec![0usize; variants];
+        for r in &records {
+            served_by_variant[r.variant.min(variants - 1)] += 1;
+        }
+        let my_transitions: Vec<Transition> =
+            transitions.iter().filter(|t| t.member == u).copied().collect();
+        let mut time_in_variant_s = vec![0.0f64; variants];
+        {
+            let (mut cur, mut t0) = (0usize, 0.0f64);
+            for tr in &my_transitions {
+                let t = tr.t.clamp(0.0, total_s);
+                time_in_variant_s[cur.min(variants - 1)] += (t - t0).max(0.0);
+                cur = tr.to;
+                t0 = t;
+            }
+            time_in_variant_s[cur.min(variants - 1)] += (total_s - t0).max(0.0);
+        }
         out.push(EngineStats {
             served: records.len(),
             shed: shed[u],
@@ -694,12 +1079,12 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
             mean_batch: if n_batches == 0 {
                 0.0
             } else {
-                ub.iter().map(|&&(_, take, _, _)| take).sum::<usize>() as f64 / n_batches as f64
+                ub.iter().map(|&&(_, take, ..)| take).sum::<usize>() as f64 / n_batches as f64
             },
             mean_dispatch: if n_batches == 0 {
                 0.0
             } else {
-                ub.iter().map(|&&(_, _, d, _)| d).sum::<usize>() as f64 / n_batches as f64
+                ub.iter().map(|&&(_, _, d, ..)| d).sum::<usize>() as f64 / n_batches as f64
             },
             steps_mean: if records.is_empty() {
                 0.0
@@ -708,6 +1093,8 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
             },
             p50_ms: if totals.is_empty() { 0.0 } else { percentile(&totals, 0.50) },
             p95_ms: if totals.is_empty() { 0.0 } else { percentile(&totals, 0.95) },
+            p99_ms: if totals.is_empty() { 0.0 } else { percentile(&totals, 0.99) },
+            slo_p99_ms: if units[u].slo_p99_ms > 0.0 { units[u].slo_p99_ms } else { slo_default },
             queue_p50_ms: if queues.is_empty() { 0.0 } else { percentile(&queues, 0.50) },
             first_p50_ms: if firsts.is_empty() { 0.0 } else { percentile(&firsts, 0.50) },
             itl_mean_ms: if multi.is_empty() {
@@ -718,20 +1105,23 @@ fn run_units(units: Vec<Unit<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>
             exec_mean_ms: if n_batches == 0 {
                 0.0
             } else {
-                ub.iter().map(|&&(_, _, _, ms)| ms).sum::<f64>() / n_batches as f64
+                ub.iter().map(|&&(_, _, _, ms, _)| ms).sum::<f64>() / n_batches as f64
             },
             throughput_fps: records.len() as f64 / total_s.max(1e-12),
             throughput_tps: tokens as f64 / total_s.max(1e-12),
-            kv_bytes_per_step: if kv_steps == 0 { 0.0 } else { kv_bytes as f64 / kv_steps as f64 },
-            kv_peak_bytes: kv_pool.peak_bytes(),
-            kv_blocks_in_use: kv_pool.blocks_in_use,
-            kv_allocs: kv_pool.allocs,
-            kv_shared_hits: kv_pool.shared_hits,
-            kv_cow_copies: kv_pool.cow_copies,
+            kv_bytes_per_step: if kv.steps == 0 { 0.0 } else { kv.bytes as f64 / kv.steps as f64 },
+            kv_peak_bytes: kv.peak_bytes,
+            kv_blocks_in_use: kv.blocks_in_use,
+            kv_allocs: kv.allocs,
+            kv_shared_hits: kv.shared_hits,
+            kv_cow_copies: kv.cow_copies,
+            served_by_variant,
+            time_in_variant_s,
+            transitions: my_transitions,
             records,
         });
     }
-    Ok(out)
+    out
 }
 
 /// Deliberate compile-out for the `--cfg pjrt_backend` build: the engine
@@ -746,8 +1136,9 @@ pub fn run_engine<W: Workload>(
     _exec: &Executor<'_>,
     _w: &WeightStore,
     _workload: &W,
-    _opts: &EngineOpts,
+    opts: &EngineOpts,
 ) -> Result<EngineStats> {
+    opts.validate()?;
     bail!(
         "the concurrent serving engine is unavailable in the pjrt_backend build \
          (PJRT executables are not shared across threads); use serve::measure"
@@ -755,13 +1146,19 @@ pub fn run_engine<W: Workload>(
 }
 
 /// Stub mirror of the fleet entry point for the gated build (see
-/// [`run_engine`] above).
+/// [`run_engine`] above). Configuration errors still surface as errors —
+/// never as panics — so a user-settable knob like `--exec-floor` fails the
+/// same way on both builds.
 #[cfg(pjrt_backend)]
-pub fn run_fleet<A: Workload, B: Workload>(
-    _a: FleetMember<'_, '_, '_, A>,
-    _b: FleetMember<'_, '_, '_, B>,
-    _opts: &EngineOpts,
-) -> Result<[EngineStats; 2]> {
+pub fn run_fleet(members: Vec<ErasedMember<'_>>, opts: &EngineOpts) -> Result<Vec<EngineStats>> {
+    if members.is_empty() {
+        bail!("run_fleet: the fleet needs at least one member");
+    }
+    if members.iter().any(|m| m.requests == 0) {
+        bail!("run_fleet: every member needs at least one request");
+    }
+    let total: usize = members.iter().map(|m| m.requests).sum();
+    EngineOpts { requests: total, ..opts.clone() }.validate()?;
     bail!(
         "the concurrent serving engine is unavailable in the pjrt_backend build \
          (PJRT executables are not shared across threads); use serve::measure"
@@ -779,6 +1176,8 @@ mod tests {
         assert!(o.queue_cap >= o.max_batch);
         assert!(o.max_wait >= 0.0 && o.exec_floor == 0.0);
         assert_eq!(o.dispatch, DispatchPolicy::Auto);
+        assert_eq!(o.spike, 1.0);
+        assert!(o.controller.is_none());
         assert!(o.validate().is_ok());
     }
 
@@ -789,9 +1188,35 @@ mod tests {
             (EngineOpts { max_batch: 0, ..Default::default() }, "max_batch"),
             (EngineOpts { queue_cap: 0, ..Default::default() }, "queue_cap"),
             (EngineOpts { workers: 0, ..Default::default() }, "workers"),
+            // Regression: a bad --exec-floor used to *panic* in an assert;
+            // it must be a plain error naming the flag.
+            (EngineOpts { exec_floor: -1.0, ..Default::default() }, "--exec-floor"),
+            (EngineOpts { exec_floor: f64::NAN, ..Default::default() }, "--exec-floor"),
+            (EngineOpts { spike: 0.0, ..Default::default() }, "--spike"),
+            (EngineOpts { spike: f64::INFINITY, ..Default::default() }, "--spike"),
         ] {
             let err = opts.validate().unwrap_err().to_string();
             assert!(err.contains(needle), "{err}");
         }
+    }
+
+    #[test]
+    fn arrival_times_spike_compresses_middle_third() {
+        let flat = arrival_times(90, 100.0, 1.0, 42);
+        let spiked = arrival_times(90, 100.0, 3.0, 42);
+        assert_eq!(flat.len(), 90);
+        // Same RNG stream: the first third is identical, the spiked middle
+        // third accumulates 3x slower, and every sequence is increasing.
+        for i in 0..30 {
+            assert!((flat[i] - spiked[i]).abs() < 1e-12);
+        }
+        let flat_mid = flat[59] - flat[30];
+        let spiked_mid = spiked[59] - spiked[30];
+        assert!((spiked_mid - flat_mid / 3.0).abs() < 1e-9, "{spiked_mid} vs {flat_mid}");
+        for w in spiked.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        // Saturated rate still yields an all-zero schedule.
+        assert!(arrival_times(8, 0.0, 3.0, 1).iter().all(|&t| t == 0.0));
     }
 }

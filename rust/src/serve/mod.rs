@@ -17,9 +17,22 @@
 //!   is full. Multi-step requests (autoregressive generation via
 //!   [`GenWorkload`] + the KV-cached [`crate::exec::DecodePlan`]) are
 //!   re-enqueued between steps so decode steps from different sequences
-//!   batch together, and [`engine::run_fleet`] serves two workloads —
+//!   batch together, and [`engine::run_fleet`] serves N workloads —
 //!   possibly over different models — through one queue. See
 //!   [`engine::run_engine`].
+//!
+//! Riding on the engine:
+//!
+//! * [`controller`] — the SLO-aware feedback controller: an online
+//!   per-batch-size cost-curve estimator (replacing the static auto-fill
+//!   threshold), adaptive batch-formation deadlines, and — CORP's knob —
+//!   hysteretic dense → pruned+compensated variant degradation under
+//!   sustained queue pressure, with recovery when load clears.
+//! * [`clock`] — the [`Clock`](clock::Clock) abstraction all engine time
+//!   flows through: wall clock in production, virtual clock in tests.
+//! * [`sim`] — a single-thread discrete-event replay of the engine's
+//!   queueing semantics on the virtual clock, for bit-reproducible
+//!   controller trajectories (`run_fleet_sim`).
 //!
 //! The engine shares one `Runtime` across workers — the native backend is
 //! pure Rust and thread-safe. The gated PJRT path stays on the closed-loop
@@ -27,12 +40,20 @@
 //! fixed-shape dispatch (its artifacts are lowered at one batch size), and
 //! on prefill-per-step decode (no `dec_*` AOT lowering).
 
+pub mod clock;
+pub mod controller;
 pub mod engine;
+pub mod sim;
 pub mod workload;
 
-pub use engine::{run_engine, run_fleet, EngineOpts, EngineStats, FleetMember, RequestRecord};
+pub use controller::{Action, Controller, ControllerOpts, CostEstimator, MemberCfg, Obs, Transition};
+pub use engine::{
+    run_engine, run_fleet, EngineOpts, EngineStats, ErasedMember, FleetMember, RequestRecord,
+};
+#[cfg(not(pjrt_backend))]
+pub use sim::{run_fleet_sim, SimCost};
 pub use workload::{
-    default_min_prompt, DispatchPolicy, GenRequest, GenWorkload, GptWorkload, Plans,
+    default_min_prompt, DispatchPolicy, GenRequest, GenWorkload, GptWorkload, PlanPair, Plans,
     RequestOutput, StepOutcome, TextRequest, VisionWorkload, Workload,
 };
 

@@ -1,0 +1,502 @@
+//! Deterministic discrete-event simulation of the serving engine.
+//!
+//! The threaded engine (`serve/engine.rs`) cannot give bit-reproducible
+//! controller trajectories: condvar wakeups and OS scheduling order are
+//! outside any seed's control. This module replays the *same* queueing
+//! semantics — bounded FIFO, single-unit batch formation with a deadline,
+//! dispatch-policy shapes, continuation re-enqueue, shed-on-full-queue,
+//! controller ticks — as a single-real-thread event loop on a
+//! [`VirtualClock`], with `opts.workers` modeled as simulated servers and
+//! per-batch service times drawn from a [`SimCost`] model instead of the
+//! wall clock. Every source of ordering is a seeded RNG or a deterministic
+//! tie-break (lowest event time, then insertion order; lowest server index
+//! first), so a run is a pure function of its inputs: the same seed gives
+//! the same trajectory at any worker count, and tests can assert exact
+//! transition sequences.
+//!
+//! Batches still execute the *real* workload step (real plans, real
+//! predictions) — only *time* is synthetic. The controller's cost
+//! estimator observes the simulated service times, so its decisions track
+//! the cost model exactly as they would track measured wall time in
+//! production.
+
+#![cfg(not(pjrt_backend))]
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::serve::clock::{Clock, VirtualClock};
+use crate::serve::controller::{Action, Controller, CostEstimator, MemberCfg, Obs, Transition};
+use crate::serve::engine::{
+    arrival_order, arrival_times, finalize_stats, EngineOpts, EngineStats, ErasedMember, Queued,
+    RequestRecord, Unit,
+};
+use crate::serve::workload::{DispatchPolicy, StepOutcome};
+use crate::util::Pcg64;
+
+/// Per-member service-time model: `tables[variant][dispatch - 1]` is the
+/// batch execution time in seconds for a dispatch of that size on that
+/// plan rung, optionally perturbed by a seeded multiplicative jitter in
+/// `[1 - jitter, 1 + jitter]`.
+#[derive(Debug, Clone)]
+pub struct SimCost {
+    tables: Vec<Vec<f64>>,
+    jitter: f64,
+}
+
+impl SimCost {
+    /// Affine cost `scale * (base_s + per_row_s * dispatch)` per rung —
+    /// one `scales` entry per variant (empty = single dense rung at 1.0).
+    /// A degraded rung's scale < 1 models CORP's cheaper pruned GEMMs.
+    pub fn affine(max_batch: usize, base_s: f64, per_row_s: f64, scales: &[f64]) -> Self {
+        let scales: &[f64] = if scales.is_empty() { &[1.0] } else { scales };
+        let tables = scales
+            .iter()
+            .map(|&sc| (1..=max_batch.max(1)).map(|b| sc * (base_s + per_row_s * b as f64)).collect())
+            .collect();
+        SimCost { tables, jitter: 0.0 }
+    }
+
+    /// Measured per-rung cost tables (`tables[variant][dispatch - 1]`,
+    /// seconds) — e.g. timed on the real executor by the bench harness.
+    pub fn measured(tables: Vec<Vec<f64>>) -> Result<Self> {
+        if tables.is_empty() || tables.iter().any(|t| t.is_empty()) {
+            bail!("SimCost::measured: every variant needs a non-empty cost table");
+        }
+        Ok(SimCost { tables, jitter: 0.0 })
+    }
+
+    /// Multiplicative service-time jitter amplitude (0 = deterministic
+    /// costs; the jitter *stream* is seeded either way).
+    pub fn with_jitter(mut self, jitter: f64) -> Self {
+        self.jitter = jitter.clamp(0.0, 0.99);
+        self
+    }
+
+    /// Service time for one batch: `u` is a uniform draw in `[0, 1)`.
+    fn cost(&self, variant: usize, dispatch: usize, u: f64) -> f64 {
+        let t = &self.tables[variant.min(self.tables.len() - 1)];
+        let c = t[dispatch.clamp(1, t.len()) - 1];
+        (c * (1.0 + self.jitter * (2.0 * u - 1.0))).max(0.0)
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum EvKind {
+    /// The k-th offered arrival (index into the interleaved order).
+    Arrival(usize),
+    /// A waiting server's batch-formation deadline; stale if the server's
+    /// generation moved on.
+    Deadline { server: usize, gen: u64 },
+    /// A busy server finishes its batch.
+    Done { server: usize },
+    /// Controller tick.
+    Tick,
+}
+
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    // Reversed so the std max-heap pops the earliest event; ties break by
+    // insertion order for full determinism.
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        other.t.total_cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+enum ServerState {
+    Idle,
+    /// Holding a partial batch open for more same-unit arrivals.
+    Waiting { unit: usize, batch: Vec<Queued>, gen: u64 },
+    /// Executing; outcomes were computed at dispatch time.
+    Busy { batch: Vec<Queued>, outs: Vec<StepOutcome>, exec_ms: f64, variant: usize },
+}
+
+struct Sim<'u, 's> {
+    units: &'u [Unit<'s>],
+    costs: &'u [SimCost],
+    opts: &'u EngineOpts,
+    clock: VirtualClock,
+    b_art: usize,
+    seq: u64,
+    gen: u64,
+    heap: BinaryHeap<Ev>,
+    queue: VecDeque<Queued>,
+    servers: Vec<ServerState>,
+    shed: Vec<usize>,
+    records: Vec<Vec<RequestRecord>>,
+    batch_log: Vec<(usize, usize, usize, f64, usize)>,
+    /// Windowed per-member completion latencies, drained every tick.
+    lat: Vec<Vec<f64>>,
+    est: CostEstimator,
+    controller: Option<Controller>,
+    wait_s: f64,
+    thresh: f64,
+    jitter_rng: Pcg64,
+    order: Vec<(usize, usize)>,
+    arrivals: Vec<f64>,
+    fired: usize,
+    tick_arr_mark: usize,
+    closed: bool,
+}
+
+impl Sim<'_, '_> {
+    fn push_ev(&mut self, t: f64, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Ev { t, seq: self.seq, kind });
+    }
+
+    /// Move every queued same-unit request into server `s`'s open batch.
+    fn top_up(&mut self, s: usize) {
+        if let ServerState::Waiting { unit, batch, .. } = &mut self.servers[s] {
+            let unit = *unit;
+            let mut i = 0;
+            while batch.len() < self.b_art && i < self.queue.len() {
+                if self.queue[i].unit == unit {
+                    batch.push(self.queue.remove(i).expect("indexed item"));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Dispatch server `s`'s held batch: compute real outcomes now, draw
+    /// the simulated service time, and schedule its completion.
+    fn start_exec(&mut self, s: usize) -> Result<()> {
+        let (unit, mut batch) =
+            match std::mem::replace(&mut self.servers[s], ServerState::Idle) {
+                ServerState::Waiting { unit, batch, .. } => (unit, batch),
+                other => {
+                    self.servers[s] = other;
+                    return Ok(());
+                }
+            };
+        let take = batch.len();
+        let dispatch = if self.controller.is_some()
+            && self.units[unit].policy == DispatchPolicy::Auto
+        {
+            if (take as f64) < self.thresh * self.b_art as f64 {
+                take
+            } else {
+                self.b_art
+            }
+        } else {
+            self.units[unit].policy.dispatch_size(take, self.b_art)
+        };
+        let variant = self.units[unit].plans.active();
+        let now = self.clock.now();
+        for q in batch.iter_mut() {
+            if q.first_deq.is_none() {
+                q.first_deq = Some(now);
+            }
+        }
+        let ids: Vec<usize> = batch.iter().map(|q| q.id).collect();
+        let outs = (self.units[unit].step)(&ids, dispatch)?;
+        if outs.len() != batch.len() {
+            bail!(
+                "workload '{}' returned {} outcomes for a batch of {}",
+                self.units[unit].label,
+                outs.len(),
+                batch.len()
+            );
+        }
+        let u = self.jitter_rng.uniform();
+        let cost = self.costs[unit.min(self.costs.len() - 1)].cost(variant, dispatch, u);
+        let service = cost.max(self.opts.exec_floor);
+        self.est.observe(dispatch, service);
+        let exec_ms = service * 1e3;
+        self.batch_log.push((unit, take, dispatch, exec_ms, variant));
+        self.servers[s] = ServerState::Busy { batch, outs, exec_ms, variant };
+        self.push_ev(now + service, EvKind::Done { server: s });
+        Ok(())
+    }
+
+    /// Assign queued work to servers: waiting servers top up (they hold
+    /// the oldest heads), idle servers pick up new heads, and anything
+    /// full — or anything at all, once the arrival schedule is exhausted —
+    /// dispatches. Lowest server index first, for determinism.
+    fn schedule_pass(&mut self) -> Result<()> {
+        for s in 0..self.servers.len() {
+            if matches!(self.servers[s], ServerState::Waiting { .. }) {
+                self.top_up(s);
+                let full = matches!(
+                    &self.servers[s],
+                    ServerState::Waiting { batch, .. } if batch.len() >= self.b_art
+                );
+                if full || self.closed {
+                    self.start_exec(s)?;
+                }
+            }
+        }
+        for s in 0..self.servers.len() {
+            while matches!(self.servers[s], ServerState::Idle) {
+                let Some(head) = self.queue.pop_front() else { break };
+                let unit = head.unit;
+                self.gen += 1;
+                let gen = self.gen;
+                self.servers[s] = ServerState::Waiting { unit, batch: vec![head], gen };
+                self.top_up(s);
+                let full = matches!(
+                    &self.servers[s],
+                    ServerState::Waiting { batch, .. } if batch.len() >= self.b_art
+                );
+                if full || self.closed || self.wait_s <= 0.0 {
+                    self.start_exec(s)?;
+                } else {
+                    self.push_ev(self.clock.now() + self.wait_s, EvKind::Deadline { server: s, gen });
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_arrival(&mut self, k: usize) {
+        let (unit, id) = self.order[k];
+        self.fired += 1;
+        if self.fired == self.order.len() {
+            // Mirror of the threaded generator setting `closed`: waiting
+            // servers stop holding batches open once no more arrivals can
+            // come.
+            self.closed = true;
+        }
+        if self.queue.len() >= self.opts.queue_cap {
+            self.shed[unit] += 1;
+        } else {
+            self.queue.push_back(Queued {
+                unit,
+                id,
+                arrival: self.arrivals[k],
+                steps: 0,
+                first_deq: None,
+                first_done: None,
+            });
+        }
+    }
+
+    fn on_done(&mut self, s: usize) {
+        let (batch, outs, exec_ms, variant) =
+            match std::mem::replace(&mut self.servers[s], ServerState::Idle) {
+                ServerState::Busy { batch, outs, exec_ms, variant } => {
+                    (batch, outs, exec_ms, variant)
+                }
+                other => {
+                    self.servers[s] = other;
+                    return;
+                }
+            };
+        let t_done = self.clock.now();
+        for (mut q, out) in batch.into_iter().zip(outs) {
+            q.steps += 1;
+            if q.first_done.is_none() {
+                q.first_done = Some(t_done);
+            }
+            match out {
+                StepOutcome::Done(o) => {
+                    let first = q.first_done.expect("set above");
+                    let first_ms = (first - q.arrival).max(0.0) * 1e3;
+                    let total_ms = (t_done - q.arrival).max(0.0) * 1e3;
+                    self.lat[q.unit].push(total_ms);
+                    self.records[q.unit].push(RequestRecord {
+                        id: q.id,
+                        queue_ms: (q.first_deq.expect("set above") - q.arrival).max(0.0) * 1e3,
+                        exec_ms,
+                        total_ms,
+                        steps: q.steps,
+                        first_ms,
+                        itl_ms: if q.steps > 1 {
+                            (total_ms - first_ms) / (q.steps - 1) as f64
+                        } else {
+                            0.0
+                        },
+                        pred: o.pred,
+                        tokens: o.tokens,
+                        variant,
+                    });
+                }
+                // Continuations bypass the queue bound, as in the engine.
+                StepOutcome::Continue => self.queue.push_back(q),
+            }
+        }
+    }
+
+    fn on_tick(&mut self) {
+        let Some(controller) = self.controller.as_mut() else { return };
+        let copts = self.opts.controller.as_ref().expect("controller implies opts");
+        let t = self.clock.now();
+        let queue_frac = self.queue.len() as f64 / self.opts.queue_cap.max(1) as f64;
+        let arrival_rate =
+            (self.fired - self.tick_arr_mark) as f64 / copts.tick_s.max(1e-4);
+        self.tick_arr_mark = self.fired;
+        let p99: Vec<Option<f64>> = self
+            .lat
+            .iter_mut()
+            .map(|w| {
+                if w.is_empty() {
+                    None
+                } else {
+                    w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    let p = crate::util::bench::percentile(w, 0.99);
+                    w.clear();
+                    Some(p)
+                }
+            })
+            .collect();
+        let actions =
+            controller.tick(&Obs { t, queue_frac, arrival_rate, p99_ms: &p99 }, &self.est);
+        for a in actions {
+            match a {
+                Action::MaxWait(w) => self.wait_s = w.max(0.0),
+                Action::FillThreshold(th) => self.thresh = th,
+                Action::Variant { member, variant } => {
+                    self.units[member].plans.set_active(variant)
+                }
+            }
+        }
+        self.push_ev(t + copts.tick_s.max(1e-4), EvKind::Tick);
+    }
+
+    fn finished(&self) -> bool {
+        self.fired == self.order.len()
+            && self.queue.is_empty()
+            && self.servers.iter().all(|s| matches!(s, ServerState::Idle))
+    }
+
+    fn run(mut self) -> Result<Vec<EngineStats>> {
+        for (k, &at) in self.arrivals.clone().iter().enumerate() {
+            self.push_ev(at, EvKind::Arrival(k));
+        }
+        if let Some(copts) = self.opts.controller.as_ref() {
+            self.push_ev(copts.tick_s.max(1e-4), EvKind::Tick);
+        }
+        while let Some(ev) = self.heap.pop() {
+            self.clock.set(ev.t);
+            match ev.kind {
+                EvKind::Arrival(k) => self.on_arrival(k),
+                EvKind::Deadline { server, gen } => {
+                    let live = matches!(
+                        &self.servers[server],
+                        ServerState::Waiting { gen: g, .. } if *g == gen
+                    );
+                    if live {
+                        self.start_exec(server)?;
+                    }
+                }
+                EvKind::Done { server } => self.on_done(server),
+                EvKind::Tick => self.on_tick(),
+            }
+            self.schedule_pass()?;
+            if self.finished() {
+                break;
+            }
+        }
+        let total_s = self.clock.now();
+        let transitions: Vec<Transition> = self
+            .controller
+            .as_ref()
+            .map(|c| c.transitions().to_vec())
+            .unwrap_or_default();
+        let slo_default = self
+            .opts
+            .controller
+            .as_ref()
+            .map(|c| c.slo_p99_ms)
+            .unwrap_or(self.opts.slo_p99_ms);
+        Ok(finalize_stats(
+            self.units,
+            std::mem::take(&mut self.records),
+            std::mem::take(&mut self.shed),
+            &self.batch_log,
+            &transitions,
+            total_s,
+            slo_default,
+        ))
+    }
+}
+
+/// Run a fleet through the discrete-event simulator: same members, same
+/// options, same real per-batch model execution as [`super::run_fleet`],
+/// but service *times* come from `costs` (one [`SimCost`] per member; the
+/// last one covers any excess members) and all time is virtual — the
+/// result is bit-reproducible for a given `(members, costs, opts)` at any
+/// `opts.workers`. KV telemetry still reflects the real plans' pools.
+pub fn run_fleet_sim(
+    members: Vec<ErasedMember<'_>>,
+    costs: &[SimCost],
+    opts: &EngineOpts,
+) -> Result<Vec<EngineStats>> {
+    if members.is_empty() {
+        bail!("run_fleet_sim: the fleet needs at least one member");
+    }
+    if members.iter().any(|m| m.requests == 0) {
+        bail!("run_fleet_sim: every member needs at least one request");
+    }
+    if costs.is_empty() {
+        bail!("run_fleet_sim: needs at least one SimCost model");
+    }
+    let total: usize = members.iter().map(|m| m.requests).sum();
+    EngineOpts { requests: total, ..opts.clone() }.validate()?;
+    let mut units = Vec::with_capacity(members.len());
+    for m in members {
+        units.push((m.mk)(opts)?);
+    }
+
+    let order = arrival_order(&units);
+    let arrivals = arrival_times(order.len(), opts.rate, opts.spike, opts.seed);
+    let n_units = units.len();
+    let controller = opts.controller.as_ref().map(|copts| {
+        let member_cfgs: Vec<MemberCfg> = units
+            .iter()
+            .map(|u| MemberCfg {
+                slo_p99_ms: if u.slo_p99_ms > 0.0 { u.slo_p99_ms } else { copts.slo_p99_ms },
+                variants: u.plans.variants(),
+            })
+            .collect();
+        Controller::new(copts.clone(), opts.max_wait.max(0.0), opts.max_batch, &member_cfgs)
+    });
+    let sim = Sim {
+        units: &units,
+        costs,
+        opts,
+        clock: VirtualClock::new(),
+        b_art: opts.max_batch,
+        seq: 0,
+        gen: 0,
+        heap: BinaryHeap::new(),
+        queue: VecDeque::new(),
+        servers: (0..opts.workers).map(|_| ServerState::Idle).collect(),
+        shed: vec![0; n_units],
+        records: vec![Vec::new(); n_units],
+        batch_log: Vec::new(),
+        lat: vec![Vec::new(); n_units],
+        est: CostEstimator::new(opts.max_batch),
+        controller,
+        wait_s: opts.max_wait.max(0.0),
+        thresh: DispatchPolicy::AUTO_FILL_THRESHOLD,
+        jitter_rng: Pcg64::new(opts.seed ^ 0x6a69_7474_6572), // "jitter"
+        order,
+        arrivals,
+        fired: 0,
+        tick_arr_mark: 0,
+        closed: false,
+    };
+    sim.run()
+}

@@ -29,8 +29,10 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use std::collections::BTreeMap;
+
 use crate::data::{Split, TextGen, VisionGen};
-use crate::exec::{argmax, DecodeMode, DecodePlan, DecodeState, ForwardPlan};
+use crate::exec::{argmax, DecodeMode, DecodePlan, DecodeState, ForwardPlan, PlanLadder};
 use crate::model::{ModelConfig, ModelKind};
 use crate::tensor::Tensor;
 use crate::util::Pcg64;
@@ -127,26 +129,81 @@ pub enum StepOutcome {
     Continue,
 }
 
-/// The resolved dispatch plans the engine hands every [`Workload::run_step`].
-/// Exactly the plan the workload declared is built: the batch-polymorphic
-/// full forward for single-shot workloads, the incremental decode plan for
-/// workloads with a [`Workload::decode`] mode — the other stays `None`
-/// (resolving both would shape-check every parameter tensor twice and warm
-/// artifact names that are never dispatched).
-pub struct Plans<'rt, 'w> {
+/// One variant's resolved dispatch plans. Exactly the plan the workload
+/// declared is built: the batch-polymorphic full forward for single-shot
+/// workloads, the incremental decode plan for workloads with a
+/// [`Workload::decode`] mode — the other stays `None` (resolving both
+/// would shape-check every parameter tensor twice and warm artifact names
+/// that are never dispatched).
+pub struct PlanPair<'rt, 'w> {
     pub fwd: Option<ForwardPlan<'rt, 'w>>,
     pub dec: Option<DecodePlan<'rt, 'w>>,
 }
 
+/// The plans the engine hands every [`Workload::run_step`]: a
+/// [`PlanLadder`] of [`PlanPair`] rungs — rung 0 is the primary (dense)
+/// variant, higher rungs are the degraded (pruned+compensated) variants
+/// the controller switches to under load. Runs without `--degrade` carry a
+/// single rung, so `fwd()` / `dec()` behave exactly as before.
+pub struct Plans<'rt, 'w> {
+    ladder: PlanLadder<PlanPair<'rt, 'w>>,
+}
+
 impl<'rt, 'w> Plans<'rt, 'w> {
-    /// The full-forward plan, or a clear error for an engine mismatch.
-    pub fn fwd(&self) -> Result<&ForwardPlan<'rt, 'w>> {
-        self.fwd.as_ref().context("workload needs a forward plan but the engine built none")
+    /// A one-rung ladder (the no-controller, no-degrade common case).
+    pub fn single(fwd: Option<ForwardPlan<'rt, 'w>>, dec: Option<DecodePlan<'rt, 'w>>) -> Self {
+        Plans {
+            ladder: PlanLadder::new(vec![PlanPair { fwd, dec }])
+                .expect("one rung is never empty"),
+        }
     }
 
-    /// The decode plan, or a clear error for a workload/engine mismatch.
+    /// A multi-rung ladder; rung 0 (the dense plan) starts active.
+    pub fn ladder(pairs: Vec<PlanPair<'rt, 'w>>) -> Result<Self> {
+        Ok(Plans { ladder: PlanLadder::new(pairs)? })
+    }
+
+    /// Number of plan rungs (variants) available.
+    pub fn variants(&self) -> usize {
+        self.ladder.len()
+    }
+
+    /// Index of the active rung (0 = dense).
+    pub fn active(&self) -> usize {
+        self.ladder.active()
+    }
+
+    /// Switch the active rung (clamped; called by the controller at batch
+    /// boundaries only — in-flight sequences stay pinned to their rung).
+    pub fn set_active(&self, i: usize) {
+        self.ladder.set_active(i)
+    }
+
+    /// Rung `i`'s plan pair (clamped into range).
+    pub fn pair(&self, i: usize) -> &PlanPair<'rt, 'w> {
+        self.ladder.get(i.min(self.ladder.len() - 1)).expect("clamped index in range")
+    }
+
+    /// The active rung's full-forward plan, or a clear error for an engine
+    /// mismatch.
+    pub fn fwd(&self) -> Result<&ForwardPlan<'rt, 'w>> {
+        self.fwd_at(self.active())
+    }
+
+    /// The active rung's decode plan, or a clear error for a
+    /// workload/engine mismatch.
     pub fn dec(&self) -> Result<&DecodePlan<'rt, 'w>> {
-        self.dec.as_ref().context("workload needs a decode plan but the engine built none")
+        self.dec_at(self.active())
+    }
+
+    /// Rung `i`'s full-forward plan.
+    pub fn fwd_at(&self, i: usize) -> Result<&ForwardPlan<'rt, 'w>> {
+        self.pair(i).fwd.as_ref().context("workload needs a forward plan but the engine built none")
+    }
+
+    /// Rung `i`'s decode plan.
+    pub fn dec_at(&self, i: usize) -> Result<&DecodePlan<'rt, 'w>> {
+        self.pair(i).dec.as_ref().context("workload needs a decode plan but the engine built none")
     }
 }
 
@@ -428,6 +485,12 @@ struct GenState {
     next: i32,
     /// Predictions made so far.
     produced: usize,
+    /// Plan rung the sequence was begun on. KV pool dims differ across
+    /// rungs (pruned dqk ≠ dense dqk), so a live sequence is pinned to the
+    /// rung that created its [`DecodeState`] even if the controller
+    /// switches the active rung mid-flight; new sequences pick up the
+    /// switch on their first step.
+    variant: usize,
 }
 
 impl GenWorkload {
@@ -525,7 +588,7 @@ impl Workload for GenWorkload {
             prompt,
             prompt_len: plen,
             target_new: target,
-            state: Mutex::new(GenState { dec: None, fed: 0, next: 0, produced: 0 }),
+            state: Mutex::new(GenState { dec: None, fed: 0, next: 0, produced: 0, variant: 0 }),
         }
     }
 
@@ -535,7 +598,6 @@ impl Workload for GenWorkload {
         reqs: &[&GenRequest],
         dispatch: usize,
     ) -> Result<Vec<StepOutcome>> {
-        let dec = plans.dec()?;
         if reqs.is_empty() || dispatch < reqs.len() {
             bail!("run_step: {} requests into dispatch size {dispatch}", reqs.len());
         }
@@ -544,13 +606,18 @@ impl Workload for GenWorkload {
         // fed-back argmax token. Both kinds batch together in one dispatch
         // (per-sequence lengths ride along), which is exactly how a long
         // chunked prefill interleaves with other sequences' decode steps.
+        let active = plans.active();
         let mut toks: Vec<Vec<i32>> = Vec::with_capacity(reqs.len());
         let mut prefilled = Vec::with_capacity(reqs.len());
         for (r, g) in reqs.iter().zip(guards.iter_mut()) {
             if g.dec.is_none() {
+                // Pin the sequence to the rung active at its first step:
+                // KV pool dims differ across rungs, so the whole sequence
+                // runs the plan that created its state.
+                g.variant = active;
                 // Adopt registered shared-prefix blocks where available;
                 // `fed` counts the adopted positions as already cached.
-                let (st, skip) = dec.begin_prompt(&r.prompt)?;
+                let (st, skip) = plans.dec_at(g.variant)?.begin_prompt(&r.prompt)?;
                 g.dec = Some(st);
                 g.fed = skip;
             }
@@ -568,11 +635,34 @@ impl Workload for GenWorkload {
                 prefilled.push(false);
             }
         }
-        let mut states: Vec<&mut DecodeState> =
-            guards.iter_mut().map(|g| g.dec.as_mut().expect("state initialized above")).collect();
-        let new: Vec<&[i32]> = toks.iter().map(|t| t.as_slice()).collect();
-        let rows = dec.extend_at(&mut states, &new, dispatch)?;
-        drop(states);
+        // Group rows by pinned rung. Single-rung batches (every batch when
+        // the controller is off, and most batches when it is on — switches
+        // happen at batch boundaries) keep the engine's dispatch size;
+        // mixed batches straddling a switch dispatch each rung's group at
+        // its own exact size.
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, g) in guards.iter().enumerate() {
+            groups.entry(g.variant).or_default().push(i);
+        }
+        let mut rows: Vec<Vec<f32>> = vec![Vec::new(); reqs.len()];
+        for (&v, idxs) in &groups {
+            let dec = plans.dec_at(v)?;
+            let disp = if groups.len() == 1 { dispatch } else { idxs.len() };
+            let mut states: Vec<&mut DecodeState> = Vec::with_capacity(idxs.len());
+            let mut want = idxs.iter().peekable();
+            for (i, g) in guards.iter_mut().enumerate() {
+                if want.peek() == Some(&&i) {
+                    want.next();
+                    states.push(g.dec.as_mut().expect("state initialized above"));
+                }
+            }
+            let new: Vec<&[i32]> = idxs.iter().map(|&i| toks[i].as_slice()).collect();
+            let out = dec.extend_at(&mut states, &new, disp)?;
+            drop(states);
+            for (&i, row) in idxs.iter().zip(out) {
+                rows[i] = row;
+            }
+        }
         let vocab = self.cfg.vocab;
         let mut outs = Vec::with_capacity(reqs.len());
         for (((r, g), row), pre) in reqs.iter().zip(guards.iter_mut()).zip(rows).zip(prefilled) {
@@ -581,7 +671,9 @@ impl Workload for GenWorkload {
                 // Prompt complete: publish the stamped opening's blocks for
                 // adoption by later requests (registering once is enough —
                 // repeat registrations of the same opening are no-ops).
-                dec.share_prefix(g.dec.as_ref().expect("state live"), self.shared_prefix.min(plen))?;
+                plans
+                    .dec_at(g.variant)?
+                    .share_prefix(g.dec.as_ref().expect("state live"), self.shared_prefix.min(plen))?;
             }
             if pre && g.fed < plen {
                 // Interior prefill chunk: its logits are prompt-interior

@@ -1,0 +1,351 @@
+//! SLO-controller integration tests on the deterministic simulator.
+//!
+//! The threaded engine cannot promise bit-reproducible controller
+//! trajectories (condvar wakeups are OS-scheduled), so everything here
+//! drives `serve::run_fleet_sim`: the same queueing semantics replayed as
+//! a discrete-event loop on the virtual clock, with per-batch service
+//! times drawn from a seeded `SimCost` model. That makes the load-spike
+//! scenario a pure function of its inputs — the tests assert the exact
+//! degrade → recover transition sequence, byte-identical repeat runs, and
+//! strictly less shedding than the controller-off baseline, at every
+//! worker count in {1, 2, 4}.
+//!
+//! Compiled out under `--cfg pjrt_backend` (no threaded engine, no sim).
+#![cfg(not(pjrt_backend))]
+
+use anyhow::{bail, Result};
+
+use corp::exec::Executor;
+use corp::model::{ModelConfig, WeightStore};
+use corp::runtime::Runtime;
+use corp::serve::{
+    run_fleet_sim, Action, Controller, ControllerOpts, CostEstimator, EngineOpts, EngineStats,
+    FleetMember, MemberCfg, Obs, Plans, RequestOutput, SimCost, StepOutcome, Workload,
+};
+use corp::util::Pcg64;
+
+fn native_runtime() -> Runtime {
+    Runtime::new(std::env::temp_dir().join("corp_serve_controller_no_artifacts")).unwrap()
+}
+
+fn vit_t() -> &'static ModelConfig {
+    ModelConfig::by_name("vit_t").unwrap()
+}
+
+/// A trivial single-shot workload whose outputs are a pure function of the
+/// request id: the spike tests exercise *queueing and control* dynamics,
+/// so model execution is reduced to a deterministic echo — time comes from
+/// the `SimCost` model either way.
+struct EchoWorkload {
+    cfg: &'static ModelConfig,
+}
+
+impl Workload for EchoWorkload {
+    type Req = usize;
+
+    fn cfg(&self) -> &'static ModelConfig {
+        self.cfg
+    }
+
+    fn label(&self) -> &'static str {
+        "echo"
+    }
+
+    fn synth(&self, id: usize) -> usize {
+        id
+    }
+
+    fn run_step(
+        &self,
+        _plans: &Plans<'_, '_>,
+        reqs: &[&usize],
+        dispatch: usize,
+    ) -> Result<Vec<StepOutcome>> {
+        if reqs.is_empty() || dispatch < reqs.len() {
+            bail!("echo run_step: {} requests into dispatch {dispatch}", reqs.len());
+        }
+        Ok(reqs
+            .iter()
+            .map(|&&id| {
+                StepOutcome::Done(RequestOutput { pred: ((id as i32) * 31) % 97, tokens: 1 })
+            })
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cost-curve estimator properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn estimator_monotone_and_converges_to_oracle_across_seeds() {
+    // True cost strongly increasing in dispatch size, observed under ±5%
+    // multiplicative noise: the learned curve must stay monotone (it is a
+    // running max by construction) and the exact-vs-padded decision must
+    // converge to the oracle's ("exact is always cheaper here").
+    let truth = |b: usize| 1e-3 * (1.0 + b as f64);
+    for seed in [1u64, 7, 23, 99, 1234] {
+        let mut rng = Pcg64::new(seed);
+        let mut est = CostEstimator::new(12);
+        for _ in 0..600 {
+            let b = 1 + rng.below(12);
+            let noise = 1.0 + 0.05 * (2.0 * rng.uniform() - 1.0);
+            est.observe(b, truth(b) * noise);
+        }
+        let costs: Vec<f64> = (1..=12).map(|b| est.cost(b).expect("observed")).collect();
+        for w in costs.windows(2) {
+            assert!(w[1] >= w[0], "seed {seed}: learned curve not monotone: {costs:?}");
+        }
+        for take in 1..12 {
+            assert_eq!(
+                est.dispatch_size(take, 12),
+                take,
+                "seed {seed}: exact dispatch is cheaper at every partial size"
+            );
+        }
+        assert_eq!(est.dispatch_size(12, 12), 12);
+        // With exact always winning, the learned fill threshold says "never
+        // pad a partial batch".
+        assert!(est.fill_threshold(12) > 0.9, "seed {seed}: {}", est.fill_threshold(12));
+    }
+}
+
+#[test]
+fn estimator_ignores_garbage_observations() {
+    let mut est = CostEstimator::new(8);
+    est.observe(0, 1.0);
+    est.observe(3, f64::NAN);
+    est.observe(3, -1.0);
+    assert!(est.cost(8).is_none(), "garbage must not create cost data");
+    // Out-of-range dispatches clamp into the top bucket instead of
+    // panicking.
+    est.observe(64, 0.5);
+    assert!(est.cost(8).is_some());
+}
+
+#[test]
+fn controller_never_flaps_within_dwell_under_adversarial_load() {
+    // Random (seeded) observation streams alternating pressure and calm:
+    // however hostile the load, two variant switches of one member must be
+    // at least `min_dwell_ticks` controller ticks apart.
+    let dwell = 5u64;
+    for seed in [3u64, 17, 41, 77] {
+        let mut rng = Pcg64::new(seed);
+        let opts = ControllerOpts {
+            degrade: true,
+            degrade_after: 1,
+            recover_after: 1,
+            min_dwell_ticks: dwell as u32,
+            ..Default::default()
+        };
+        let mut c =
+            Controller::new(opts, 0.01, 8, &[MemberCfg { slo_p99_ms: 100.0, variants: 3 }]);
+        let est = CostEstimator::new(8);
+        let mut last_switch: Option<u64> = None;
+        for tick in 0..400u64 {
+            let queue_frac = rng.uniform();
+            let p99 = [Some(20.0 + 300.0 * rng.uniform())];
+            let acts = c.tick(
+                &Obs {
+                    t: tick as f64 * 0.01,
+                    queue_frac,
+                    arrival_rate: 100.0 + 900.0 * rng.uniform(),
+                    p99_ms: &p99,
+                },
+                &est,
+            );
+            if acts.iter().any(|a| matches!(a, Action::Variant { .. })) {
+                if let Some(prev) = last_switch {
+                    assert!(
+                        tick - prev >= dwell,
+                        "seed {seed}: switches at ticks {prev} and {tick} violate dwell {dwell}"
+                    );
+                }
+                last_switch = Some(tick);
+            }
+        }
+        assert!(last_switch.is_some(), "seed {seed}: adversarial load never switched at all");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Load-spike regression on the virtual clock
+// ---------------------------------------------------------------------------
+
+/// Dense per-batch cost model: 8 ms + 0.5 ms/row; the degraded rung runs
+/// at 0.4× (CORP's pruned+compensated GEMMs are cheaper).
+const BASE_S: f64 = 0.008;
+const PER_ROW_S: f64 = 0.0005;
+const MAX_BATCH: usize = 8;
+const SLO_P99_MS: f64 = 250.0;
+
+fn dense_capacity(workers: usize) -> f64 {
+    workers as f64 * MAX_BATCH as f64 / (BASE_S + PER_ROW_S * MAX_BATCH as f64)
+}
+
+/// Run the two-member echo fleet through the simulator: offered load at
+/// half the dense fleet capacity, 3× spike over the middle third (so the
+/// spike offers 1.5× dense capacity — overload — but only 0.6× of the
+/// degraded rung's capacity).
+fn spike_run(workers: usize, with_controller: bool) -> Vec<EngineStats> {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 5);
+    let degraded = WeightStore::init(cfg, 6);
+    let wl = EchoWorkload { cfg };
+    // Per-member counts scale with workers so the spike lasts the same
+    // virtual duration (~8 controller ticks) at every worker count.
+    let per_member = 120 * workers;
+    let eopts = EngineOpts {
+        workers,
+        rate: 0.5 * dense_capacity(workers),
+        requests: 1, // ignored by run_fleet_sim (per-member counts used)
+        max_batch: MAX_BATCH,
+        max_wait: 0.004,
+        queue_cap: 16,
+        seed: 11,
+        spike: 3.0,
+        slo_p99_ms: SLO_P99_MS,
+        controller: with_controller.then(|| ControllerOpts {
+            tick_s: 0.01,
+            slo_p99_ms: SLO_P99_MS,
+            degrade: true,
+            degrade_after: 3,
+            recover_after: 3,
+            min_dwell_ticks: 10,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let members = vec![
+        // Member 0 carries an explicit per-member SLO override; member 1
+        // defers to the fleet default — both resolve to the same budget.
+        FleetMember::new(&exec, &dense, &wl, per_member)
+            .with_slo_p99_ms(SLO_P99_MS)
+            .with_fallback(&degraded)
+            .erased(),
+        FleetMember::new(&exec, &dense, &wl, per_member).with_fallback(&degraded).erased(),
+    ];
+    let cost = SimCost::affine(MAX_BATCH, BASE_S, PER_ROW_S, &[1.0, 0.4]).with_jitter(0.02);
+    run_fleet_sim(members, &[cost.clone(), cost], &eopts).unwrap()
+}
+
+/// Bit-level digest of everything a trajectory determines: per-request
+/// records, shedding, percentiles, and the transition log.
+fn digest(stats: &[EngineStats]) -> Vec<u64> {
+    let mut d = Vec::new();
+    for s in stats {
+        d.push(s.served as u64);
+        d.push(s.shed as u64);
+        d.push(s.p50_ms.to_bits());
+        d.push(s.p99_ms.to_bits());
+        for r in &s.records {
+            d.push(r.id as u64);
+            d.push(r.pred as u64);
+            d.push(r.steps as u64);
+            d.push(r.variant as u64);
+            d.push(r.total_ms.to_bits());
+            d.push(r.queue_ms.to_bits());
+        }
+        for t in &s.transitions {
+            d.push(t.t.to_bits());
+            d.push(t.member as u64);
+            d.push(t.from as u64);
+            d.push(t.to as u64);
+        }
+    }
+    d
+}
+
+#[test]
+fn load_spike_controller_holds_slo_and_sheds_less_at_every_worker_count() {
+    for workers in [1usize, 2, 4] {
+        let base = spike_run(workers, false);
+        let ctl = spike_run(workers, true);
+        let base_shed: usize = base.iter().map(|s| s.shed).sum();
+        let ctl_shed: usize = ctl.iter().map(|s| s.shed).sum();
+        assert!(
+            base_shed > 0,
+            "workers {workers}: the spike must overload the uncontrolled engine"
+        );
+        assert!(
+            ctl_shed < base_shed,
+            "workers {workers}: controller shed {ctl_shed}, baseline shed {base_shed}"
+        );
+        for (m, s) in ctl.iter().enumerate() {
+            assert_eq!(s.slo_p99_ms, SLO_P99_MS, "workers {workers} member {m}");
+            assert!(
+                s.p99_ms <= SLO_P99_MS,
+                "workers {workers} member {m}: p99 {:.2}ms over the {SLO_P99_MS}ms budget",
+                s.p99_ms
+            );
+            // The exact hysteresis trajectory: one degrade into the spike,
+            // one recovery after it — never a flap.
+            let seq: Vec<(usize, usize)> =
+                s.transitions.iter().map(|t| (t.from, t.to)).collect();
+            assert_eq!(
+                seq,
+                vec![(0, 1), (1, 0)],
+                "workers {workers} member {m}: transition sequence {seq:?}"
+            );
+            assert!(s.transitions.iter().all(|t| t.member == m));
+            assert!(
+                s.transitions[0].t < s.transitions[1].t,
+                "workers {workers} member {m}: transitions out of order"
+            );
+            // Some — but not all — requests rode the degraded rung.
+            let degraded: usize = s.served_by_variant.iter().skip(1).sum();
+            assert!(degraded > 0, "workers {workers} member {m}: nothing served degraded");
+            assert!(
+                degraded < s.served,
+                "workers {workers} member {m}: everything served degraded"
+            );
+            assert!(s.time_in_variant_s[1] > 0.0, "workers {workers} member {m}");
+            // Everything offered is accounted for.
+            assert_eq!(s.served + s.shed, 120 * workers, "workers {workers} member {m}");
+        }
+        // The baseline never switches variants and serves dense only.
+        for s in &base {
+            assert!(s.transitions.is_empty());
+            assert!(s.served_by_variant.iter().skip(1).all(|&n| n == 0));
+        }
+        // Bit-reproducible: the same inputs give byte-identical
+        // trajectories, including the transition log.
+        assert_eq!(
+            digest(&ctl),
+            digest(&spike_run(workers, true)),
+            "workers {workers}: controller trajectory not reproducible"
+        );
+        assert_eq!(
+            digest(&base),
+            digest(&spike_run(workers, false)),
+            "workers {workers}: baseline trajectory not reproducible"
+        );
+    }
+}
+
+#[test]
+fn sim_rejects_degenerate_fleets() {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 5);
+    let wl = EchoWorkload { cfg };
+    let cost = SimCost::affine(4, 0.001, 0.0001, &[]);
+    let opts = EngineOpts::default();
+    let err = run_fleet_sim(vec![], &[cost.clone()], &opts).unwrap_err().to_string();
+    assert!(err.contains("at least one member"), "{err}");
+    let err = run_fleet_sim(
+        vec![FleetMember::new(&exec, &dense, &wl, 0).erased()],
+        &[cost.clone()],
+        &opts,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("at least one request"), "{err}");
+    let err = run_fleet_sim(vec![FleetMember::new(&exec, &dense, &wl, 4).erased()], &[], &opts)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("SimCost"), "{err}");
+}

@@ -324,10 +324,11 @@ fn partial_batch_padding_matches_unbatched() {
 
 #[test]
 fn mixed_fleet_matches_single_workload_runs() {
-    // Vision + generation requests through ONE engine run (one queue, one
-    // worker pool, two models) must produce exactly the per-request outputs
-    // of two single-workload runs with the same seeds: workers form
-    // single-unit batches and per-example math is composition-invariant.
+    // Vision + text + generation requests through ONE engine run (one
+    // queue, one worker pool, three units over two models) must produce
+    // exactly the per-request outputs of three single-workload runs with
+    // the same seeds: workers form single-unit batches and per-example
+    // math is composition-invariant.
     let rt = native_runtime();
     let vit = vit_t();
     let gpt = ModelConfig::by_name("gpt_s").unwrap();
@@ -336,8 +337,9 @@ fn mixed_fleet_matches_single_workload_runs() {
     let wv = WeightStore::init(vit, 5);
     let wg = WeightStore::init(gpt, 6);
     let vwl = VisionWorkload::new(vit, corp::data::DATA_SEED).unwrap();
+    let twl = GptWorkload::new(gpt, corp::data::DATA_SEED).unwrap();
     let gwl = GenWorkload::new(gpt, corp::data::DATA_SEED).unwrap().with_max_new(3);
-    let (nv, ng) = (12usize, 8usize);
+    let (nv, nt, ng) = (12usize, 6usize, 8usize);
     let opts = EngineOpts {
         workers: 2,
         rate: 1e12,
@@ -347,34 +349,53 @@ fn mixed_fleet_matches_single_workload_runs() {
         queue_cap: 1024,
         ..Default::default()
     };
-    let [fv, fg] = run_fleet(
-        FleetMember { exec: &ev, weights: &wv, workload: &vwl, requests: nv },
-        FleetMember { exec: &eg, weights: &wg, workload: &gwl, requests: ng },
+    let fleet = run_fleet(
+        vec![
+            FleetMember::new(&ev, &wv, &vwl, nv).erased(),
+            FleetMember::new(&eg, &wg, &twl, nt).erased(),
+            FleetMember::new(&eg, &wg, &gwl, ng).erased(),
+        ],
         &opts,
     )
     .unwrap();
+    assert_eq!(fleet.len(), 3);
+    let [fv, ft, fg] = [&fleet[0], &fleet[1], &fleet[2]];
     let sv = run_engine(&ev, &wv, &vwl, &EngineOpts { requests: nv, ..opts.clone() }).unwrap();
+    let st = run_engine(&eg, &wg, &twl, &EngineOpts { requests: nt, ..opts.clone() }).unwrap();
     let sg = run_engine(&eg, &wg, &gwl, &EngineOpts { requests: ng, ..opts.clone() }).unwrap();
     let key = |s: &corp::serve::EngineStats| -> Vec<(usize, i32, usize, usize)> {
         s.records.iter().map(|r| (r.id, r.pred, r.tokens, r.steps)).collect()
     };
     assert_eq!(fv.served, nv);
+    assert_eq!(ft.served, nt);
     assert_eq!(fg.served, ng);
-    assert_eq!(fv.shed + fg.shed, 0);
-    assert_eq!(key(&fv), key(&sv), "fleet vision outputs diverged from the solo run");
-    assert_eq!(key(&fg), key(&sg), "fleet gen outputs diverged from the solo run");
-    // Generation is multi-step; vision is single-shot — visible in the
-    // per-unit step accounting of the same fleet run.
+    assert_eq!(fv.shed + ft.shed + fg.shed, 0);
+    assert_eq!(key(fv), key(&sv), "fleet vision outputs diverged from the solo run");
+    assert_eq!(key(ft), key(&st), "fleet text outputs diverged from the solo run");
+    assert_eq!(key(fg), key(&sg), "fleet gen outputs diverged from the solo run");
+    // Generation is multi-step; vision and single-shot text are not —
+    // visible in the per-unit step accounting of the same fleet run.
     assert!(fv.records.iter().all(|r| r.steps == 1));
+    assert!(ft.records.iter().all(|r| r.steps == 1));
     assert!(fg.records.iter().any(|r| r.steps > 1));
     assert!((fv.steps_mean - 1.0).abs() < 1e-9);
-    // A degenerate member count is rejected up front.
-    assert!(run_fleet(
-        FleetMember { exec: &ev, weights: &wv, workload: &vwl, requests: 0 },
-        FleetMember { exec: &eg, weights: &wg, workload: &gwl, requests: ng },
+    // Without a controller every request is served on the dense rung.
+    assert_eq!(fv.served_by_variant, vec![nv]);
+    assert!(fv.transitions.is_empty());
+    // Degenerate fleets are rejected up front: no members at all, and a
+    // member that offers zero requests.
+    let err = run_fleet(vec![], &opts).unwrap_err().to_string();
+    assert!(err.contains("at least one member"), "{err}");
+    let err = run_fleet(
+        vec![
+            FleetMember::new(&ev, &wv, &vwl, 0).erased(),
+            FleetMember::new(&eg, &wg, &gwl, ng).erased(),
+        ],
         &opts,
     )
-    .is_err());
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("at least one request"), "{err}");
 }
 
 #[test]
@@ -417,6 +438,11 @@ fn degenerate_engine_configs_error_and_mismatched_workload_rejected() {
         (EngineOpts { max_batch: 0, ..Default::default() }, "max_batch"),
         (EngineOpts { workers: 0, ..Default::default() }, "workers"),
         (EngineOpts { requests: 0, ..Default::default() }, "requests"),
+        // Regression: a negative or non-finite floor used to trip a debug
+        // assert instead of surfacing a named-flag error.
+        (EngineOpts { exec_floor: -1.0, ..Default::default() }, "--exec-floor"),
+        (EngineOpts { exec_floor: f64::NAN, ..Default::default() }, "--exec-floor"),
+        (EngineOpts { spike: 0.0, ..Default::default() }, "--spike"),
     ] {
         let err = run_engine(&exec, &w, &workload, &opts).unwrap_err().to_string();
         assert!(err.contains(needle), "{err}");

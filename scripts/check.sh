@@ -39,8 +39,10 @@ if [[ "${1:-}" != "--no-bench" ]]; then
 
     # The smoke grid sweeps all three workloads (vision + text + gen, the
     # gen cells on kv, kv+chunked/shared-prefix, and prefill decode) and
-    # both dispatch policies — corp-bench-serve/v4 axes with the paged-KV
-    # telemetry columns. A failed cell exits non-zero and leaves no stale
+    # both dispatch policies — corp-bench-serve/v5 axes with the paged-KV
+    # telemetry columns plus the load-spike controller cell (controller
+    # off vs on, measured cost tables through the deterministic
+    # simulator). A failed cell exits non-zero and leaves no stale
     # BENCH_serve.json behind.
     echo "==> bench serve smoke (CORP_BENCH_MODE=smoke)"
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- bench serve --json --out BENCH_serve.json
@@ -52,6 +54,17 @@ if [[ "${1:-}" != "--no-bench" ]]; then
         serve --model gpt_s --sparsity 0 --requests 16 --rate 0 --max-batch 4 --dispatch padded
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
         serve --model gpt_s --workload gen --sparsity 0 --requests 12 --rate 0 --max-batch 4 --max-new 4
+
+    # Controller smoke: a 3× load spike over the middle third of the
+    # schedule with the SLO feedback controller on and variant
+    # degradation armed (dense primary + compensated fallback at 50%
+    # sparsity) — exercises the threaded control loop, the adaptive
+    # dispatch threshold, and the controller summary line end to end.
+    echo "==> serve CLI smoke (controller + degrade, 3x load spike)"
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
+        serve --model vit_t --sparsity 0.5 --workload vision --requests 48 --rate 300 --spike 3 \
+        --workers 1 --max-batch 8 --queue-cap 16 --exec-floor 0.01 \
+        --controller --degrade --slo-p99-ms 500
 
     # Paged-KV smoke: same gen workload with prefills chunked to 8 tokens
     # and a 16-token shared prompt opening — exercises chunked prefill
