@@ -1,19 +1,28 @@
 //! `corp bench linalg` — the perf-trajectory harness behind
 //! `BENCH_linalg.json`.
 //!
-//! Benchmarks the packed parallel kernels against the seed's scalar
-//! baselines (preserved in `linalg::gemm::reference`), sweeps the SYRK
-//! worker count, and times the end-to-end calibrate+prune pipeline on the
-//! native backend, all scaled by `CORP_BENCH_MODE`. Results print as a
-//! table and are optionally emitted as machine-readable JSON so the numbers
-//! are tracked PR-over-PR.
+//! Benchmarks every micro-kernel along the full dispatch ladder — the
+//! runtime-selected SIMD tile (AVX2 where detected), the portable packed
+//! tile (`CORP_SIMD=off` forced around the timed region), and the seed's
+//! scalar baselines (preserved in `linalg::gemm::reference`) — plus the
+//! int8 weight-quantized GEMM against its f32 counterpart at
+//! pipeline-realistic activation×weight shapes, the SYRK worker-count
+//! sweep, and the end-to-end calibrate+prune pipeline on the native
+//! backend, all scaled by `CORP_BENCH_MODE`. Results print as a table and
+//! are optionally emitted as machine-readable JSON (schema
+//! `corp-bench-linalg/v2`) so the numbers are tracked PR-over-PR.
+//!
+//! Like `bench serve`: a failed cell aborts the sweep with the cell's
+//! coordinates in the error (non-zero exit through the CLI), and any
+//! pre-existing `--out` file is removed up front — a crashed sweep can
+//! never leave a stale JSON that looks like fresh results.
 
 use anyhow::{Context, Result};
 
 use super::{num, obj};
 use crate::exec::Executor;
-use crate::linalg::gemm::{matmul_f32, reference, syrk_upper_f32};
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::gemm::{matmul_f32, reference, simd_label, syrk_upper_f32};
+use crate::linalg::{matmul_q8, quantize, Cholesky, Mat};
 use crate::model::{ModelConfig, Scope, Sparsity, WeightStore};
 use crate::prune::{calibrate, prune, Method, PruneOpts};
 use crate::runtime::Runtime;
@@ -23,17 +32,25 @@ use crate::util::prop::gen;
 use crate::util::threads;
 use crate::util::{Pcg64, Stopwatch};
 
+/// One kernel's row: the runtime-dispatched path (AVX2 where the host has
+/// it), the portable packed tile, and the seed scalar baseline on the
+/// same inputs.
 struct KernelResult {
     name: String,
     dims: String,
     flops: f64,
-    new_s: f64,
+    simd_s: f64,
+    packed_s: f64,
     seed_s: f64,
 }
 
 impl KernelResult {
-    fn speedup(&self) -> f64 {
-        self.seed_s / self.new_s.max(1e-12)
+    fn speedup_vs_seed(&self) -> f64 {
+        self.seed_s / self.simd_s.max(1e-12)
+    }
+
+    fn speedup_vs_packed(&self) -> f64 {
+        self.packed_s / self.simd_s.max(1e-12)
     }
 
     fn gflops(&self, secs: f64) -> f64 {
@@ -42,14 +59,18 @@ impl KernelResult {
 
     fn print(&self) {
         println!(
-            "{:24} {:>14} | packed {:9.3} ms ({:6.2} GF/s) | seed {:9.3} ms ({:6.2} GF/s) | {:5.2}x",
+            "{:12} {:>14} | {:8} {:8.3} ms ({:6.2} GF/s) | packed {:8.3} ms ({:6.2} GF/s) | \
+             seed {:8.3} ms | {:4.2}x packed {:5.2}x seed",
             self.name,
             self.dims,
-            self.new_s * 1e3,
-            self.gflops(self.new_s),
+            simd_label(),
+            self.simd_s * 1e3,
+            self.gflops(self.simd_s),
+            self.packed_s * 1e3,
+            self.gflops(self.packed_s),
             self.seed_s * 1e3,
-            self.gflops(self.seed_s),
-            self.speedup()
+            self.speedup_vs_packed(),
+            self.speedup_vs_seed()
         );
     }
 
@@ -57,14 +78,31 @@ impl KernelResult {
         obj(vec![
             ("name", Json::Str(self.name.clone())),
             ("dims", Json::Str(self.dims.clone())),
+            ("dispatch", Json::Str(simd_label().to_string())),
             ("flops", num(self.flops)),
-            ("packed_s", num(self.new_s)),
-            ("packed_gflops", num(self.gflops(self.new_s))),
+            ("simd_s", num(self.simd_s)),
+            ("simd_gflops", num(self.gflops(self.simd_s))),
+            ("packed_s", num(self.packed_s)),
+            ("packed_gflops", num(self.gflops(self.packed_s))),
             ("seed_s", num(self.seed_s)),
             ("seed_gflops", num(self.gflops(self.seed_s))),
-            ("speedup_vs_seed", num(self.speedup())),
+            ("speedup_simd_vs_packed", num(self.speedup_vs_packed())),
+            ("speedup_vs_seed", num(self.speedup_vs_seed())),
         ])
     }
+}
+
+/// Run `f` with `CORP_SIMD=off` forced, restoring the caller's env after —
+/// how the packed column is timed on hosts where dispatch picks AVX2.
+fn with_simd_off<R>(f: impl FnOnce() -> R) -> R {
+    let prev = std::env::var_os("CORP_SIMD");
+    std::env::set_var("CORP_SIMD", "off");
+    let out = f();
+    match prev {
+        Some(v) => std::env::set_var("CORP_SIMD", v),
+        None => std::env::remove_var("CORP_SIMD"),
+    }
+    out
 }
 
 /// Sizes per mode: (gemm n, syrk (rows, channels), cholesky n, iters).
@@ -73,6 +111,17 @@ fn mode_sizes() -> (usize, (usize, usize), usize, usize) {
         BenchMode::Smoke => (128, (512, 256), 160, 3),
         BenchMode::Fast => (256, (2048, 768), 640, 5),
         BenchMode::Full => (512, (4096, 1280), 1024, 7),
+    }
+}
+
+/// Int8 GEMM cell shape per mode: (rows, din, dout) — an activation panel
+/// against one weight matrix, the serving fast path's shape (rows = batch
+/// × tokens; din/dout = layer widths).
+fn mode_q8() -> (usize, usize, usize) {
+    match bench_mode() {
+        BenchMode::Smoke => (256, 256, 256),
+        BenchMode::Fast => (1024, 512, 512),
+        BenchMode::Full => (2048, 768, 768),
     }
 }
 
@@ -86,8 +135,13 @@ fn mode_e2e() -> (&'static str, usize) {
 }
 
 /// Run the linalg benchmark suite; when `json_out` is set, write
-/// `BENCH_linalg.json`-style output there.
+/// `BENCH_linalg.json`-style output there (schema `corp-bench-linalg/v2`).
 pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
+    // Fail loudly, never stale-ly (same contract as `bench serve`): a
+    // pre-existing output file must not survive a crashed sweep.
+    if let Some(path) = json_out {
+        let _ = std::fs::remove_file(path);
+    }
     let (gemm_n, (syrk_rows, syrk_n), chol_n, iters) = mode_sizes();
     let mut rng = Pcg64::new(1);
     let mut kernels: Vec<KernelResult> = Vec::new();
@@ -98,9 +152,15 @@ pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
         let a = gen::matrix(&mut rng, n, n, 1.0);
         let b = gen::matrix(&mut rng, n, n, 1.0);
         let mut c = vec![0.0f32; n * n];
-        let s_new = bench("gemm_packed", 2, iters, || {
+        let s_simd = bench("gemm_simd", 2, iters, || {
             c.iter_mut().for_each(|v| *v = 0.0);
             matmul_f32(&a, &b, &mut c, n, n, n);
+        });
+        let s_packed = with_simd_off(|| {
+            bench("gemm_packed", 1, iters, || {
+                c.iter_mut().for_each(|v| *v = 0.0);
+                matmul_f32(&a, &b, &mut c, n, n, n);
+            })
         });
         let s_seed = bench("gemm_seed", 1, iters, || {
             c.iter_mut().for_each(|v| *v = 0.0);
@@ -110,7 +170,8 @@ pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
             name: "gemm".into(),
             dims: format!("{n}x{n}x{n}"),
             flops: 2.0 * (n * n * n) as f64,
-            new_s: s_new.mean_s,
+            simd_s: s_simd.mean_s,
+            packed_s: s_packed.mean_s,
             seed_s: s_seed.mean_s,
         });
     }
@@ -120,9 +181,15 @@ pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
         let (rows, n) = (syrk_rows, syrk_n);
         let x = gen::matrix(&mut rng, rows, n, 1.0);
         let mut c = vec![0.0f32; n * n];
-        let s_new = bench("syrk_packed", 1, iters, || {
+        let s_simd = bench("syrk_simd", 1, iters, || {
             c.iter_mut().for_each(|v| *v = 0.0);
             syrk_upper_f32(&x, &mut c, rows, n);
+        });
+        let s_packed = with_simd_off(|| {
+            bench("syrk_packed", 1, iters, || {
+                c.iter_mut().for_each(|v| *v = 0.0);
+                syrk_upper_f32(&x, &mut c, rows, n);
+            })
         });
         let s_seed = bench("syrk_seed", 1, iters, || {
             c.iter_mut().for_each(|v| *v = 0.0);
@@ -132,7 +199,8 @@ pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
             name: "syrk".into(),
             dims: format!("{rows}x{n}"),
             flops: (rows * n * n) as f64, // ~half of full gemm
-            new_s: s_new.mean_s,
+            simd_s: s_simd.mean_s,
+            packed_s: s_packed.mean_s,
             seed_s: s_seed.mean_s,
         });
     }
@@ -143,9 +211,15 @@ pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
         let a = gen::matrix(&mut rng, rows, n, 1.0);
         let b = gen::matrix(&mut rng, rows, n, 1.0);
         let mut c = vec![0.0f32; n * n];
-        let s_new = bench("tn_packed", 1, iters, || {
+        let s_simd = bench("tn_simd", 1, iters, || {
             c.iter_mut().for_each(|v| *v = 0.0);
             crate::linalg::gemm::matmul_tn_f32(&a, &b, &mut c, rows, n, n);
+        });
+        let s_packed = with_simd_off(|| {
+            bench("tn_packed", 1, iters, || {
+                c.iter_mut().for_each(|v| *v = 0.0);
+                crate::linalg::gemm::matmul_tn_f32(&a, &b, &mut c, rows, n, n);
+            })
         });
         let s_seed = bench("tn_seed", 1, iters, || {
             c.iter_mut().for_each(|v| *v = 0.0);
@@ -155,19 +229,78 @@ pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
             name: "gemm_tn".into(),
             dims: format!("{rows}x{n}x{n}"),
             flops: 2.0 * (rows * n * n) as f64,
-            new_s: s_new.mean_s,
+            simd_s: s_simd.mean_s,
+            packed_s: s_packed.mean_s,
             seed_s: s_seed.mean_s,
         });
     }
 
     println!(
-        "linalg microbench — mode {:?}, {} worker(s)",
+        "linalg microbench — mode {:?}, dispatch {}, {} worker(s)",
         bench_mode(),
+        simd_label(),
         threads::threads()
     );
     for k in &kernels {
         k.print();
     }
+
+    // ---- int8 weight-quantized GEMM vs f32 (the serving fast path) ----
+    let q8 = {
+        let (rows, din, dout) = mode_q8();
+        let x = gen::matrix(&mut rng, rows, din, 1.0);
+        let w = gen::matrix(&mut rng, din, dout, 0.1);
+        let qm = quantize(&w, din, dout);
+        let mut out_f = vec![0.0f32; rows * dout];
+        let mut out_q = vec![0.0f32; rows * dout];
+        let s_f32 = bench("gemm_f32", 1, iters, || {
+            out_f.iter_mut().for_each(|v| *v = 0.0);
+            matmul_f32(&x, &w, &mut out_f, rows, din, dout);
+        });
+        let s_q8 = bench("gemm_q8", 1, iters, || {
+            out_q.iter_mut().for_each(|v| *v = 0.0);
+            matmul_q8(&x, &qm, &mut out_q, rows);
+        });
+        // Per-cell sanity at full grid coordinates: the int8 path must
+        // track f32 within quantization tolerance, or the row is noise.
+        let scale = out_f.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1.0);
+        let maxd = out_f
+            .iter()
+            .zip(&out_q)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        if maxd > 0.05 * scale {
+            anyhow::bail!(
+                "linalg bench cell failed: gemm_q8 {rows}x{din}x{dout} drifted {maxd:.3e} \
+                 from f32 (max |out| {scale:.3e})"
+            );
+        }
+        let flops = 2.0 * (rows * din * dout) as f64;
+        let gf_q8 = flops / s_q8.mean_s.max(1e-12) / 1e9;
+        let gf_f32 = flops / s_f32.mean_s.max(1e-12) / 1e9;
+        println!(
+            "{:12} {:>14} | int8 {:8.3} ms ({gf_q8:6.2} GF/s) | f32 {:8.3} ms ({gf_f32:6.2} GF/s) \
+             | {:4.2}x | max |Δ| {maxd:.2e}",
+            "gemm_q8",
+            format!("{rows}x{din}x{dout}"),
+            s_q8.mean_s * 1e3,
+            s_f32.mean_s * 1e3,
+            s_f32.mean_s / s_q8.mean_s.max(1e-12)
+        );
+        obj(vec![
+            ("name", Json::Str("gemm_q8".into())),
+            ("dims", Json::Str(format!("{rows}x{din}x{dout}"))),
+            ("dispatch", Json::Str(simd_label().to_string())),
+            ("flops", num(flops)),
+            ("q8_s", num(s_q8.mean_s)),
+            ("q8_gflops", num(gf_q8)),
+            ("f32_s", num(s_f32.mean_s)),
+            ("f32_gflops", num(gf_f32)),
+            ("speedup_q8_vs_f32", num(s_f32.mean_s / s_q8.mean_s.max(1e-12))),
+            ("q8_bytes", num(qm.bytes() as f64)),
+            ("f32_bytes", num((w.len() * 4) as f64)),
+            ("max_abs_err", num(maxd as f64)),
+        ])
+    };
 
     // ---- Cholesky + parallel multi-RHS solve (no seed counterpart delta;
     // reported for the trajectory) ----
@@ -175,11 +308,12 @@ pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
         let n = chol_n;
         let a = Mat::from_f32(n, n, &gen::spd(&mut rng, n, 0.5));
         let s_fac = bench("cholesky", 1, iters.min(3), || Cholesky::new(&a).unwrap());
-        let f = Cholesky::new(&a).unwrap();
+        let f = Cholesky::new(&a)
+            .with_context(|| format!("linalg bench cell failed: cholesky {n}x{n}"))?;
         let rhs = Mat::from_f32(n, 64, &gen::matrix(&mut rng, n, 64, 1.0));
         let s_solve = bench("chol_solve64", 1, iters.min(3), || f.solve_mat(&rhs));
         println!(
-            "{:24} {:>14} | factor {:9.3} ms | 64-rhs solve {:9.3} ms",
+            "{:12} {:>14} | factor {:9.3} ms | 64-rhs solve {:9.3} ms",
             "cholesky",
             format!("{n}x{n}"),
             s_fac.mean_s * 1e3,
@@ -211,7 +345,7 @@ pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
                 })
             });
             let gf = (rows * n * n) as f64 / s.mean_s.max(1e-12) / 1e9;
-            println!("{:24} {:>14} | {w} worker(s): {:9.3} ms ({gf:6.2} GF/s)", "syrk_sweep", format!("{rows}x{n}"), s.mean_s * 1e3);
+            println!("{:12} {:>14} | {w} worker(s): {:9.3} ms ({gf:6.2} GF/s)", "syrk_sweep", format!("{rows}x{n}"), s.mean_s * 1e3);
             sweep.push(obj(vec![
                 ("threads", num(w as f64)),
                 ("syrk_s", num(s.mean_s)),
@@ -234,10 +368,14 @@ pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
             ..PruneOpts::default()
         };
         let sw = Stopwatch::start();
-        let stats = calibrate(&exec, &dense, &opts)?;
+        let stats = calibrate(&exec, &dense, &opts).with_context(|| {
+            format!("linalg bench cell failed: e2e calibrate model {model} calib {calib_batches}")
+        })?;
         let calib_s = sw.secs();
         let sw2 = Stopwatch::start();
-        let result = prune(&exec, &dense, &stats, &opts)?;
+        let result = prune(&exec, &dense, &stats, &opts).with_context(|| {
+            format!("linalg bench cell failed: e2e prune model {model} calib {calib_batches}")
+        })?;
         let prune_s = sw2.secs();
         println!(
             "e2e {model} (calib {calib_batches} batches): calibrate {calib_s:.3}s  prune {prune_s:.3}s  (sections: rank {:.3}s comp {:.3}s)",
@@ -257,7 +395,7 @@ pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
 
     if let Some(path) = json_out {
         let root = obj(vec![
-            ("schema", Json::Str("corp-bench-linalg/v1".into())),
+            ("schema", Json::Str("corp-bench-linalg/v2".into())),
             (
                 "mode",
                 Json::Str(
@@ -269,8 +407,10 @@ pub fn bench_linalg(json_out: Option<&str>) -> Result<()> {
                     .into(),
                 ),
             ),
+            ("dispatch", Json::Str(simd_label().to_string())),
             ("threads", num(threads::threads() as f64)),
             ("kernels", Json::Arr(kernels.iter().map(|k| k.json()).collect())),
+            ("quantized", q8),
             ("cholesky", chol),
             ("thread_sweep", Json::Arr(sweep)),
             ("e2e", e2e),
@@ -291,6 +431,8 @@ mod tests {
         // Pure functions of the mode env; just exercise the mapping tables.
         let (g, (sr, sn), c, it) = mode_sizes();
         assert!(g >= 64 && sr > sn / 8 && c >= 64 && it >= 1);
+        let (rows, din, dout) = mode_q8();
+        assert!(rows >= 64 && din >= 64 && dout >= 64);
         let (m, cb) = mode_e2e();
         assert!(ModelConfig::by_name(m).is_some());
         assert!(cb >= 1);
@@ -302,14 +444,26 @@ mod tests {
             name: "x".into(),
             dims: "1".into(),
             flops: 2e9,
-            new_s: 0.5,
+            simd_s: 0.5,
+            packed_s: 1.0,
             seed_s: 2.0,
         };
-        assert!((k.speedup() - 4.0).abs() < 1e-12);
+        assert!((k.speedup_vs_seed() - 4.0).abs() < 1e-12);
+        assert!((k.speedup_vs_packed() - 2.0).abs() < 1e-12);
         assert!((k.gflops(0.5) - 4.0).abs() < 1e-12);
         // json round-trips through the serializer
         let j = k.json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("speedup_vs_seed").as_f64(), Some(4.0));
+        assert_eq!(parsed.get("speedup_simd_vs_packed").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn with_simd_off_passes_closure_result_through() {
+        // Env *values* are not asserted here: gemm's own env-override test
+        // may flip CORP_SIMD concurrently (dispatch is result-invariant,
+        // so that race is benign for every numeric test — but not for a
+        // string equality on the var itself).
+        assert_eq!(with_simd_off(|| 42), 42);
     }
 }

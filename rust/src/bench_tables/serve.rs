@@ -2,14 +2,14 @@
 //!
 //! Drives the concurrent engine (`serve::run_engine`) over a grid of
 //! workload (vision / text / gen) × model variant (dense / pruned /
-//! compensated at 50% joint sparsity) × worker count × arrival rate ×
-//! dispatch policy (padded / exact) — and, for the generation workload, a
-//! decode axis (KV-cache vs prefill-per-step, with a paged-KV cell that
-//! turns on chunked prefill + a shared prompt opening) — reporting
-//! per-cell p50/p95/p99 latency, queueing delay, mean formed and
-//! dispatched batch sizes, steps per request, TTFT/ITL, and
-//! requests+tokens/sec (schema `corp-bench-serve/v5`). The "saturated"
-//! rate offers the whole
+//! compensated / compensated+int8 at 50% joint sparsity) × worker count ×
+//! arrival rate × dispatch policy (padded / exact) — and, for the
+//! generation workload, a decode axis (KV-cache vs prefill-per-step, with
+//! a paged-KV cell that turns on chunked prefill + a shared prompt
+//! opening) — reporting per-cell p50/p95/p99 latency, queueing delay,
+//! mean formed and dispatched batch sizes, steps per request, TTFT/ITL,
+//! and requests+tokens/sec (schema `corp-bench-serve/v6`). The
+//! "saturated" rate offers the whole
 //! request set at t = 0 with an ample queue, so the throughput column is
 //! the engine's capacity — this is where the pruned fast path has to beat
 //! dense, since its GEMMs run at the retained widths, and where KV-cache
@@ -28,6 +28,13 @@
 //! shared-prefix cell doubles as the prefill-interference probe: its
 //! `itl_mean_ms` shows decode cadence while long prefills are split into
 //! bounded chunks and interleaved into the same batches.
+//!
+//! v6 adds the int8 row axis (`variant = "compensated_int8"`,
+//! `quantized = true` on every grid row): the pruned+compensated store
+//! weight-quantized to int8 with the dequant correction folded from the
+//! same calibration pass, dispatched through `serve::run_engine_q8` and
+//! the `_w8` plan rung — the row where int8 throughput has to beat f32 at
+//! matching predictions (pinned by `tests/quant_equality`).
 //!
 //! v5 adds the load-spike cell (`cell = "load_spike"`): the fleet served
 //! through the deterministic discrete-event simulator under a 3× arrival
@@ -50,7 +57,8 @@ use crate::model::{ModelConfig, ModelKind, Scope, Sparsity, WeightStore};
 use crate::prune::{calibrate, prune, Method, PruneOpts};
 use crate::runtime::Runtime;
 use crate::serve::{
-    run_engine, DispatchPolicy, EngineOpts, GenWorkload, GptWorkload, VisionWorkload, Workload,
+    run_engine, run_engine_q8, DispatchPolicy, EngineOpts, GenWorkload, GptWorkload, StoreRef,
+    VisionWorkload, Workload,
 };
 use crate::util::bench::{bench_mode, BenchMode};
 use crate::util::json::Json;
@@ -174,7 +182,7 @@ fn mode_grids() -> Vec<WorkloadGrid> {
 /// Sweep one workload's grid cells and append a JSON row per cell.
 fn grid_runs<W: Workload>(
     exec: &Executor<'_>,
-    variants: &[(&str, &WeightStore)],
+    variants: &[(&str, StoreRef<'_>)],
     workload: &W,
     g: &WorkloadGrid,
     // `(prefill_chunk, shared_prefix)` for generation cells (0 = off);
@@ -183,7 +191,7 @@ fn grid_runs<W: Workload>(
     runs: &mut Vec<Json>,
 ) -> Result<()> {
     let decode = workload.decode().map(|m| m.label());
-    for &(label, w) in variants {
+    for &(label, store) in variants {
         for &nw in &g.workers {
             for &rate in &g.rates {
                 for dispatch in DISPATCHES {
@@ -205,7 +213,11 @@ fn grid_runs<W: Workload>(
                     };
                     // A failing cell aborts the whole sweep with its
                     // coordinates — never a silently partial grid.
-                    let s = run_engine(exec, w, workload, &eopts).with_context(|| {
+                    let s = match store {
+                        StoreRef::F32(w) => run_engine(exec, w, workload, &eopts),
+                        StoreRef::Q8(qs) => run_engine_q8(exec, qs, workload, &eopts),
+                    }
+                    .with_context(|| {
                         format!(
                             "serve bench cell failed: workload {}{} model {} variant {label} \
                              workers {nw} rate {rate_label} dispatch {}",
@@ -238,6 +250,7 @@ fn grid_runs<W: Workload>(
                         ("rate_rps", num(rate)),
                         ("saturated", Json::Bool(rate >= SATURATED_RATE)),
                         ("dispatch", Json::Str(dispatch.label().to_string())),
+                        ("quantized", Json::Bool(matches!(store, StoreRef::Q8(_)))),
                         ("requests", num(g.requests as f64)),
                         ("max_batch", num(g.max_batch as f64)),
                         ("served", num(s.served as f64)),
@@ -408,7 +421,7 @@ fn spike_cells(rt: &Runtime, runs: &mut Vec<Json>) -> Result<()> {
 }
 
 /// The gated PJRT build has no threaded engine or simulator — the
-/// load-spike cell is a no-op there; the grid rows still carry the v5
+/// load-spike cell is a no-op there; the grid rows still carry the v6
 /// schema.
 #[cfg(pjrt_backend)]
 fn spike_cells(_rt: &Runtime, _runs: &mut Vec<Json>) -> Result<()> {
@@ -416,7 +429,7 @@ fn spike_cells(_rt: &Runtime, _runs: &mut Vec<Json>) -> Result<()> {
 }
 
 /// Run the serving benchmark grid; when `json_out` is set, write
-/// `BENCH_serve.json`-style output there (schema `corp-bench-serve/v5`).
+/// `BENCH_serve.json`-style output there (schema `corp-bench-serve/v6`).
 pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
     let rt = Runtime::from_default_dir()?;
     // Fail loudly, never stale-ly: if a cell errors mid-sweep the run
@@ -444,8 +457,22 @@ pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
             prune(&exec, &dense, &stats, &PruneOpts { method: Method::Naive, ..popts.clone() })?;
         let comp =
             prune(&exec, &dense, &stats, &PruneOpts { method: Method::Corp, ..popts.clone() })?;
-        let variants: [(&str, &WeightStore); 3] =
-            [("dense", &dense), ("pruned", &pruned.weights), ("compensated", &comp.weights)];
+        // The int8 variant: the compensated store quantized with the
+        // dequant correction fitted on the same calibration moments.
+        let kept = crate::compensate::mlp_kept_indices(cfg, &dense, &stats, &popts)?;
+        let (quant, _) = crate::compensate::quantize_weights_corrected(
+            cfg,
+            &comp.weights,
+            &stats,
+            &kept,
+            popts.lambda,
+        )?;
+        let variants: [(&str, StoreRef); 4] = [
+            ("dense", StoreRef::F32(&dense)),
+            ("pruned", StoreRef::F32(&pruned.weights)),
+            ("compensated", StoreRef::F32(&comp.weights)),
+            ("compensated_int8", StoreRef::Q8(&quant)),
+        ];
 
         println!(
             "serve bench — mode {:?}, {} workload, model {}, {} requests, max batch {}, \
@@ -489,7 +516,7 @@ pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
 
     if let Some(path) = json_out {
         let root = obj(vec![
-            ("schema", Json::Str("corp-bench-serve/v5".into())),
+            ("schema", Json::Str("corp-bench-serve/v6".into())),
             (
                 "mode",
                 Json::Str(

@@ -188,23 +188,33 @@ fn cmd_prune(argv: &[String]) -> Result<()> {
 
 /// Serve one workload, routing through [`crate::serve::run_fleet`] when a
 /// degraded-variant fallback store is present (the controller needs a
-/// second plan rung to switch to) and the plain single-store
-/// [`crate::serve::run_engine`] otherwise.
+/// second plan rung to switch to), the int8 engine entry point
+/// ([`crate::serve::run_engine_q8`]) when serving a quantized store
+/// directly, and the plain single-store [`crate::serve::run_engine`]
+/// otherwise. With both a fallback and a quantized store, the int8 rung
+/// is appended *after* the pruned+compensated one — the controller's
+/// cheapest last resort (dense → pruned+compensated →
+/// pruned+compensated+int8).
 fn serve_one<W: crate::serve::Workload>(
     exec: &crate::exec::Executor<'_>,
     weights: &crate::model::WeightStore,
     fallback: Option<&crate::model::WeightStore>,
+    quant: Option<&crate::model::QuantStore>,
     workload: &W,
     eopts: &crate::serve::EngineOpts,
 ) -> Result<crate::serve::EngineStats> {
-    match fallback {
-        Some(fb) => {
-            let m = crate::serve::FleetMember::new(exec, weights, workload, eopts.requests)
+    match (fallback, quant) {
+        (Some(fb), q) => {
+            let mut m = crate::serve::FleetMember::new(exec, weights, workload, eopts.requests)
                 .with_fallback(fb);
+            if let Some(qs) = q {
+                m = m.with_quant_fallback(qs);
+            }
             let mut v = crate::serve::run_fleet(vec![m.erased()], eopts)?;
             Ok(v.remove(0))
         }
-        None => crate::serve::run_engine(exec, weights, workload, eopts),
+        (None, Some(qs)) => crate::serve::run_engine_q8(exec, qs, workload, eopts),
+        (None, None) => crate::serve::run_engine(exec, weights, workload, eopts),
     }
 }
 
@@ -231,12 +241,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("spike", "arrival-rate multiplier over the middle third of the schedule", "1")
         .opt("slo-p99-ms", "p99 latency budget, ms (0 = none)", "0")
         .flag("controller", "enable the SLO feedback controller (adaptive wait + dispatch threshold)")
-        .flag("degrade", "let the controller fall back to the pruned+compensated variant under load");
+        .flag("degrade", "let the controller fall back to the pruned+compensated variant under load")
+        .flag("quantize", "int8 weight-quantized serving (dequant correction folded from calibration)");
     let args = cmd.parse(argv)?;
     let cfg = cfg_of(&args.str("model"))?;
     let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
     let controller_on = args.has_flag("controller");
     let degrade = args.has_flag("degrade");
+    let quantize = args.has_flag("quantize");
     if degrade && !controller_on {
         bail!("--degrade needs --controller (variant switching is the controller's knob)");
     }
@@ -244,25 +256,44 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         bail!("--degrade needs --sparsity > 0 (the degraded rung is the pruned+compensated variant)");
     }
     let mut coord = Coordinator::new()?;
-    let opts = PruneOpts::default();
+    let popts = PruneOpts { sparsity: Sparsity::of(Scope::Both, s10), ..PruneOpts::default() };
     // Under --degrade the primary rung is always dense and the
     // pruned+compensated store becomes the controller's fallback rung;
     // otherwise --sparsity picks the single store served, as before.
-    let pruned = if s10 == 0 {
-        None
-    } else {
-        let o = PruneOpts { sparsity: Sparsity::of(Scope::Both, s10), ..opts };
-        Some(coord.prune_job(cfg, &o)?.weights)
-    };
-    let dense;
+    let pruned = if s10 == 0 { None } else { Some(coord.prune_job(cfg, &popts)?.weights) };
+    let dense = coord.dense(cfg)?.clone();
     let (weights, fallback) = if degrade {
-        dense = coord.dense(cfg)?.clone();
         (&dense, pruned.as_ref())
     } else if let Some(p) = &pruned {
         (p, None)
     } else {
-        dense = coord.dense(cfg)?.clone();
         (&dense, None)
+    };
+    // --quantize: int8-quantize the ladder's cheapest store (the
+    // pruned+compensated one when present, else dense) with the dequant
+    // correction fitted on the same calibration moments pruning used.
+    // Without --degrade the quantized store is served directly; with it,
+    // the store becomes the controller's last degrade rung.
+    let quant = if quantize {
+        let base = pruned.as_ref().unwrap_or(&dense);
+        coord.calib(cfg, &popts)?;
+        let key = format!("{}@{}", cfg.name, popts.calib_batches);
+        let stats = coord.calib_stats(&key);
+        let kept = crate::compensate::mlp_kept_indices(cfg, &dense, stats, &popts)?;
+        let (qs, report) =
+            crate::compensate::quantize_weights_corrected(cfg, base, stats, &kept, popts.lambda)?;
+        println!(
+            "quantize: int8 weights ({:.2} MiB vs {:.2} MiB f32), dequant correction on {} \
+             layer(s): residual mse {:.3e} → {:.3e}",
+            qs.bytes() as f64 / (1024.0 * 1024.0),
+            base.param_count() as f64 * 4.0 / (1024.0 * 1024.0),
+            report.layers_corrected,
+            report.mse_identity,
+            report.mse_fitted
+        );
+        Some(qs)
+    } else {
+        None
     };
     let exec = coord.executor(cfg);
     let slo_p99_ms = args.f64("slo-p99-ms")?;
@@ -292,11 +323,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let (label, stats) = match (cfg.kind, wl_name.as_str()) {
         (ModelKind::Vit, "auto" | "vision") => {
             let wl = crate::serve::VisionWorkload::new(cfg, crate::data::DATA_SEED)?;
-            ("vision", serve_one(&exec, weights, fallback, &wl, &eopts)?)
+            ("vision", serve_one(&exec, weights, fallback, quant.as_ref(), &wl, &eopts)?)
         }
         (ModelKind::Gpt, "auto" | "text") => {
             let wl = crate::serve::GptWorkload::new(cfg, crate::data::DATA_SEED)?;
-            ("text", serve_one(&exec, weights, fallback, &wl, &eopts)?)
+            ("text", serve_one(&exec, weights, fallback, quant.as_ref(), &wl, &eopts)?)
         }
         (ModelKind::Gpt, "gen") => {
             let max_new = args.usize("max-new")?;
@@ -315,7 +346,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             if decode != "auto" {
                 wl = wl.with_decode(DecodeMode::parse(&decode)?);
             }
-            ("gen", serve_one(&exec, weights, fallback, &wl, &eopts)?)
+            ("gen", serve_one(&exec, weights, fallback, quant.as_ref(), &wl, &eopts)?)
         }
         (kind, other) => bail!(
             "workload '{other}' does not fit model '{}' (kind {kind:?}; \

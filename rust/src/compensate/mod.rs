@@ -11,6 +11,11 @@
 
 pub mod mlp;
 pub mod attn;
+pub mod quant;
 
 pub use attn::{compensate_attn_head, AttnCompensation};
 pub use mlp::{compensate_mlp, mlp_distortion, MlpCompensation};
+pub use quant::{
+    fit_dequant_correction, mlp_kept_indices, quantize_weights, quantize_weights_corrected,
+    QuantCorrection, QuantReport,
+};

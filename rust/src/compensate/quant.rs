@@ -1,0 +1,406 @@
+//! Closed-form dequant correction for the int8 `quantize` weight transform.
+//!
+//! Per-output-channel int8 quantization of `mlp.w2` replaces the exact
+//! column w_j with a dequantized ŵ_j = s_j·q_j. On calibration activations
+//! x with second moment G = E[xxᵀ] and mean μ (the *same* accumulators the
+//! pruning compensator uses, `stats::MomentAccumulator`), the quantized
+//! output u_j = xᵀŵ_j drifts from the exact t_j = xᵀw_j. The best affine
+//! repair t_j ≈ g_j·u_j + c_j has the 1-D ridge closed form
+//!
+//!   g_j = Cov(u_j, t_j) / (Var(u_j) + λ·s̄),   c_j = E[t_j] − g_j·E[u_j]
+//!
+//! with every moment read off G and μ:  E[u t] = ŵᵀGw,  E[u²] = ŵᵀGŵ,
+//! E[u] = μᵀŵ,  E[t] = μᵀw. The fit folds *into the stored artifacts* —
+//! `scales[j] *= g_j` and `b2[j] += c_j` — so serving pays nothing: the
+//! int8 GEMM epilogue already multiplies by `scales` and the bias add was
+//! already there. A per-column no-harm guard keeps the identity (g=1, c=0)
+//! whenever the fit would not reduce the calibration-set residual, so the
+//! corrected store is never worse than plain quantization on the
+//! calibration distribution.
+//!
+//! Only `mlp.w2` is corrected: it is the one quantized GEMM whose input
+//! moments calibration captures exactly (the MLP hidden Gram). The other
+//! five projections keep their plain per-channel scales — their inputs are
+//! LayerNorm outputs with no accumulated Gram, and their quantization error
+//! is already bounded by the per-channel step.
+//!
+//! For pruned stores the hidden Gram is subset to the kept channels
+//! (`mlp_kept_indices` re-derives the kept set from the cached calibration
+//! exactly as `prune` ranked it — ranking is deterministic), which is the
+//! standard CORP approximation: compensators are fitted on dense
+//! calibration statistics and applied to the pruned network.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::qgemm::{dequant, QuantMat};
+use crate::linalg::Mat;
+use crate::model::{ModelConfig, QuantStore, WeightStore};
+use crate::prune::{CalibStats, PruneOpts};
+use crate::rank::{partition, score_mlp};
+use crate::tensor::Tensor;
+
+/// Fitted per-output-channel affine repair of one quantized `mlp.w2`.
+pub struct QuantCorrection {
+    /// Per-channel gain g_j, folded into the stored scales.
+    pub gains: Vec<f32>,
+    /// Per-channel offset c_j, folded into `mlp.b2`.
+    pub offsets: Vec<f32>,
+    /// Calibration-set residual Σ_j E[(t_j − u_j)²] of plain dequant.
+    pub mse_identity: f64,
+    /// Residual after the affine repair (never above `mse_identity`).
+    pub mse_fitted: f64,
+}
+
+/// Aggregate report of a corrected quantization pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QuantReport {
+    /// Layers whose `mlp.w2` received a correction fold.
+    pub layers_corrected: usize,
+    pub mse_identity: f64,
+    pub mse_fitted: f64,
+}
+
+/// Quantize a (dense or pruned+compensated) store with plain per-channel
+/// scales — the uncorrected `quantize` transform.
+pub fn quantize_weights(cfg: &ModelConfig, w: &WeightStore) -> Result<QuantStore> {
+    QuantStore::from_store(cfg, w)
+}
+
+/// Fit the affine dequant repair for one quantized `w2` against the input
+/// second moment `gram` = E[xxᵀ] and mean `μ` (widths must match the stored
+/// `w2` rows). Pure closed form; no data pass.
+pub fn fit_dequant_correction(
+    w2: &Tensor,
+    qm: &QuantMat,
+    gram: &Mat,
+    mean: &[f64],
+    lambda: f64,
+) -> QuantCorrection {
+    let (o, d) = (w2.shape()[0], w2.shape()[1]);
+    assert_eq!((qm.din, qm.dout), (o, d), "quantized shape mismatch");
+    assert_eq!((gram.r, gram.c), (o, o), "gram width mismatch");
+    assert_eq!(mean.len(), o, "mean width mismatch");
+    let wf = Mat::from_f32(o, d, w2.data());
+    let wq = Mat::from_f32(o, d, &dequant(qm));
+    // One [o,o]·[o,d] product per side; every per-channel moment is then a
+    // column dot, so the whole fit costs two GEMMs per layer.
+    let gw = gram.mul(&wf);
+    let gq = gram.mul(&wq);
+
+    // Per-channel second moments, then a shared ridge normalizer so one λ
+    // works across channels of different magnitude (the `ridge_right`
+    // convention).
+    let mut moms = Vec::with_capacity(d);
+    let mut var_sum = 0.0f64;
+    for j in 0..d {
+        let (mut e_ut, mut e_uu, mut e_tt, mut e_u, mut e_t) = (0.0f64, 0.0, 0.0, 0.0, 0.0);
+        for i in 0..o {
+            e_ut += wq.at(i, j) * gw.at(i, j);
+            e_uu += wq.at(i, j) * gq.at(i, j);
+            e_tt += wf.at(i, j) * gw.at(i, j);
+            e_u += mean[i] * wq.at(i, j);
+            e_t += mean[i] * wf.at(i, j);
+        }
+        var_sum += (e_uu - e_u * e_u).max(0.0);
+        moms.push((e_ut, e_uu, e_tt, e_u, e_t));
+    }
+    let var_scale = (var_sum / d.max(1) as f64).max(1e-12);
+
+    let mut gains = Vec::with_capacity(d);
+    let mut offsets = Vec::with_capacity(d);
+    let (mut mse_identity, mut mse_fitted) = (0.0f64, 0.0f64);
+    // Residual of t ≈ g·u + c given the raw moments.
+    let mse_of = |g: f64, c: f64, m: &(f64, f64, f64, f64, f64)| -> f64 {
+        let (e_ut, e_uu, e_tt, e_u, e_t) = *m;
+        e_tt - 2.0 * g * e_ut - 2.0 * c * e_t + g * g * e_uu + 2.0 * g * c * e_u + c * c
+    };
+    for m in &moms {
+        let (e_ut, e_uu, _e_tt, e_u, e_t) = *m;
+        let var_u = (e_uu - e_u * e_u).max(0.0);
+        let cov = e_ut - e_u * e_t;
+        let (mut g, mut c) = if var_u > 1e-12 * var_scale {
+            let g = (cov / (var_u + lambda * var_scale)).clamp(0.25, 4.0);
+            (g, e_t - g * e_u)
+        } else {
+            // Degenerate channel (zero weight column or constant input):
+            // the offset alone absorbs any constant drift.
+            (1.0, e_t - e_u)
+        };
+        let id = mse_of(1.0, 0.0, m).max(0.0);
+        let fit = mse_of(g, c, m).max(0.0);
+        // No-harm guard: keep plain dequant when the ridge-shrunk fit would
+        // not reduce the calibration residual.
+        if fit > id {
+            g = 1.0;
+            c = 0.0;
+        }
+        mse_identity += id;
+        mse_fitted += fit.min(id);
+        gains.push(g as f32);
+        offsets.push(c as f32);
+    }
+    QuantCorrection { gains, offsets, mse_identity, mse_fitted }
+}
+
+/// The kept MLP hidden channels per layer for a store pruned at
+/// `opts.sparsity` — re-derived from the cached calibration with the same
+/// deterministic ranking `prune` used, so the indices match the stored `w2`
+/// rows exactly. Identity when the MLP scope is unpruned.
+pub fn mlp_kept_indices(
+    cfg: &ModelConfig,
+    dense: &WeightStore,
+    stats: &CalibStats,
+    opts: &PruneOpts,
+) -> Result<Vec<Vec<usize>>> {
+    if stats.layers.len() != cfg.layers {
+        bail!("mlp_kept_indices: {} layer stats for {} layers", stats.layers.len(), cfg.layers);
+    }
+    let mut out = Vec::with_capacity(cfg.layers);
+    for l in 0..cfg.layers {
+        if opts.sparsity.mlp_s10 == 0 {
+            out.push((0..cfg.mlp).collect());
+            continue;
+        }
+        let ls = &stats.layers[l];
+        let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
+        let scores = score_mlp(opts.criterion, &ls.hidden.energy(), &ls.active.active_prob(), w2);
+        let (kept, _pruned) = partition(&scores, opts.sparsity.mlp_s10);
+        out.push(kept);
+    }
+    Ok(out)
+}
+
+/// Quantize `w` and fold the closed-form dequant correction into every
+/// layer's `mlp.w2` scales and `mlp.b2`. `kept[l]` maps the stored layer-l
+/// `w2` rows to dense hidden channel indices (identity for unpruned
+/// stores; [`mlp_kept_indices`] for pruned ones) — the calibration Gram is
+/// subset accordingly.
+pub fn quantize_weights_corrected(
+    cfg: &ModelConfig,
+    w: &WeightStore,
+    stats: &CalibStats,
+    kept: &[Vec<usize>],
+    lambda: f64,
+) -> Result<(QuantStore, QuantReport)> {
+    if stats.layers.len() != cfg.layers || kept.len() != cfg.layers {
+        bail!(
+            "dequant correction: {} layer stats / {} kept sets for {} layers",
+            stats.layers.len(),
+            kept.len(),
+            cfg.layers
+        );
+    }
+    let mut qs = QuantStore::from_store(cfg, w)?;
+    let mut report = QuantReport::default();
+    for l in 0..cfg.layers {
+        let name = format!("blocks.{l}.mlp.w2");
+        let w2 = w.expect(&name)?;
+        let o = w2.shape()[0];
+        let idx = &kept[l];
+        if idx.len() != o {
+            bail!("dequant correction: layer {l} kept {} channels, stored w2 has {o} rows", idx.len());
+        }
+        let hidden = &stats.layers[l].hidden;
+        if idx.iter().any(|&i| i >= hidden.d) {
+            bail!("dequant correction: layer {l} kept index out of range (gram width {})", hidden.d);
+        }
+        let full_gram = hidden.second_moment();
+        let full_mean = hidden.mean();
+        let identity = o == hidden.d && idx.iter().enumerate().all(|(i, &v)| i == v);
+        let (gram, mean) = if identity {
+            (full_gram, full_mean)
+        } else {
+            (full_gram.submatrix(idx, idx), idx.iter().map(|&i| full_mean[i]).collect())
+        };
+        let corr = fit_dequant_correction(w2, qs.expect_q(&name)?, &gram, &mean, lambda);
+        {
+            let qm = qs.get_q_mut(&name).expect("quantized w2 present");
+            for (s, &g) in qm.scales.iter_mut().zip(&corr.gains) {
+                *s *= g;
+            }
+        }
+        let b2_name = format!("blocks.{l}.mlp.b2");
+        let mut b2 = qs.base().expect(&b2_name)?.data().to_vec();
+        for (b, &c) in b2.iter_mut().zip(&corr.offsets) {
+            *b += c;
+        }
+        let len = b2.len();
+        qs.base_mut().insert(b2_name, Tensor::from_vec(&[len], b2));
+        report.layers_corrected += 1;
+        report.mse_identity += corr.mse_identity;
+        report.mse_fitted += corr.mse_fitted;
+    }
+    Ok((qs, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qgemm::quantize;
+    use crate::stats::MomentAccumulator;
+    use crate::util::prop::{gen, run_prop};
+    use crate::util::Pcg64;
+
+    fn moments(x: &[f32], rows: usize, o: usize) -> (Mat, Vec<f64>) {
+        let mut acc = MomentAccumulator::new(o);
+        acc.add_batch(x, rows);
+        (acc.second_moment(), acc.mean())
+    }
+
+    /// The fitted residual never exceeds plain dequant's on the calibration
+    /// moments themselves — the no-harm guard, as a property.
+    #[test]
+    fn fit_never_worse_than_identity() {
+        run_prop("quant.fit no-harm", 8, |rng| {
+            let o = 8 + rng.below(24);
+            let d = 2 + rng.below(6);
+            let rows = 200;
+            let x = gen::matrix(rng, rows, o, 1.0);
+            let (gram, mean) = moments(&x, rows, o);
+            let w2 = Tensor::from_vec(&[o, d], gen::matrix(rng, o, d, 1.0));
+            let qm = quantize(w2.data(), o, d);
+            let corr = fit_dequant_correction(&w2, &qm, &gram, &mean, 1e-2);
+            assert!(
+                corr.mse_fitted <= corr.mse_identity * (1.0 + 1e-3) + 1e-9,
+                "fitted {} identity {}",
+                corr.mse_fitted,
+                corr.mse_identity
+            );
+            // Quantization is a near-identity perturbation: gains hug 1.
+            for &g in &corr.gains {
+                assert!((0.5..=2.0).contains(&g), "gain {g}");
+            }
+        });
+    }
+
+    /// The closed-form residual matches the empirical residual measured by
+    /// replaying the calibration rows through both layers.
+    #[test]
+    fn fitted_mse_matches_empirical() {
+        let mut rng = Pcg64::new(11);
+        let (o, d, rows) = (24, 5, 400);
+        // Correlated channels + a mean offset so both g and c matter.
+        let basis = gen::matrix(&mut rng, 4, o, 1.0);
+        let mut x = vec![0.0f32; rows * o];
+        for r in 0..rows {
+            let z: Vec<f32> = (0..4).map(|_| rng.normal_f32(0.4, 1.0)).collect();
+            for c in 0..o {
+                let mut v = 0.3;
+                for k in 0..4 {
+                    v += z[k] * basis[k * o + c];
+                }
+                x[r * o + c] = v + rng.normal_f32(0.0, 0.05);
+            }
+        }
+        let (gram, mean) = moments(&x, rows, o);
+        let w2 = Tensor::from_vec(&[o, d], gen::matrix(&mut rng, o, d, 1.0));
+        let qm = quantize(w2.data(), o, d);
+        let corr = fit_dequant_correction(&w2, &qm, &gram, &mean, 1e-6);
+        let dq = dequant(&qm);
+        let (mut emp_id, mut emp_fit) = (0.0f64, 0.0f64);
+        for r in 0..rows {
+            let xr = &x[r * o..(r + 1) * o];
+            for j in 0..d {
+                let t: f64 = (0..o).map(|i| (xr[i] * w2.at2(i, j)) as f64).sum();
+                let u: f64 = (0..o).map(|i| (xr[i] * dq[i * d + j]) as f64).sum();
+                let e_id = t - u;
+                let e_fit = t - (corr.gains[j] as f64 * u + corr.offsets[j] as f64);
+                emp_id += e_id * e_id;
+                emp_fit += e_fit * e_fit;
+            }
+        }
+        emp_id /= rows as f64;
+        emp_fit /= rows as f64;
+        assert!((emp_id - corr.mse_identity).abs() <= 0.05 * (1.0 + emp_id), "{emp_id} vs {}", corr.mse_identity);
+        assert!((emp_fit - corr.mse_fitted).abs() <= 0.05 * (1.0 + emp_fit), "{emp_fit} vs {}", corr.mse_fitted);
+        assert!(emp_fit <= emp_id * (1.0 + 1e-3) + 1e-9);
+    }
+
+    /// End-to-end fold on a real store: corrected scales/bias differ from
+    /// plain quantization, shapes survive, and the report improves (or
+    /// ties) the calibration residual.
+    #[test]
+    fn corrected_quantize_folds_into_store() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let w = WeightStore::init(cfg, 7);
+        // Synthetic calibration moments at the dense hidden width.
+        let mut rng = Pcg64::new(5);
+        let rows = 64;
+        let stats = CalibStats {
+            layers: (0..cfg.layers)
+                .map(|_| {
+                    let mut hidden = MomentAccumulator::new(cfg.mlp);
+                    hidden.add_batch(&gen::matrix(&mut rng, rows, cfg.mlp, 1.0), rows);
+                    crate::prune::LayerStats {
+                        hidden,
+                        active: crate::stats::ActiveCounter::new(cfg.mlp, 0.05),
+                        q: Tensor::from_vec(&[1, 1, 1, 1], vec![0.0]),
+                        k: Tensor::from_vec(&[1, 1, 1, 1], vec![0.0]),
+                    }
+                })
+                .collect(),
+            sections: crate::util::timer::Sections::new(),
+        };
+        let kept: Vec<Vec<usize>> = (0..cfg.layers).map(|_| (0..cfg.mlp).collect()).collect();
+        let plain = quantize_weights(cfg, &w).unwrap();
+        let (qs, report) = quantize_weights_corrected(cfg, &w, &stats, &kept, 1e-2).unwrap();
+        assert_eq!(report.layers_corrected, cfg.layers);
+        assert!(report.mse_fitted <= report.mse_identity * (1.0 + 1e-3) + 1e-9);
+        // Codes untouched, scales re-folded.
+        let (p0, c0) = (
+            plain.expect_q("blocks.0.mlp.w2").unwrap(),
+            qs.expect_q("blocks.0.mlp.w2").unwrap(),
+        );
+        assert_eq!(p0.data, c0.data);
+        assert_eq!(p0.scales.len(), c0.scales.len());
+        // Non-w2 projections keep their plain scales.
+        assert_eq!(
+            plain.expect_q("blocks.0.attn.wq").unwrap().scales,
+            qs.expect_q("blocks.0.attn.wq").unwrap().scales
+        );
+        // Bias fold kept shape.
+        assert_eq!(
+            qs.base().expect("blocks.0.mlp.b2").unwrap().shape(),
+            plain.base().expect("blocks.0.mlp.b2").unwrap().shape()
+        );
+    }
+
+    #[test]
+    fn kept_indices_identity_when_unpruned() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let w = WeightStore::init(cfg, 1);
+        let mut rng = Pcg64::new(9);
+        let stats = CalibStats {
+            layers: (0..cfg.layers)
+                .map(|_| {
+                    let mut hidden = MomentAccumulator::new(cfg.mlp);
+                    hidden.add_batch(&gen::matrix(&mut rng, 8, cfg.mlp, 1.0), 8);
+                    let mut active = crate::stats::ActiveCounter::new(cfg.mlp, 0.05);
+                    active.add_batch(&gen::matrix(&mut rng, 8, cfg.mlp, 1.0), 8);
+                    crate::prune::LayerStats {
+                        hidden,
+                        active,
+                        q: Tensor::from_vec(&[1, 1, 1, 1], vec![0.0]),
+                        k: Tensor::from_vec(&[1, 1, 1, 1], vec![0.0]),
+                    }
+                })
+                .collect(),
+            sections: crate::util::timer::Sections::new(),
+        };
+        let dense_opts = PruneOpts {
+            sparsity: crate::model::Sparsity { mlp_s10: 0, attn_s10: 0 },
+            ..PruneOpts::default()
+        };
+        let kept = mlp_kept_indices(cfg, &w, &stats, &dense_opts).unwrap();
+        assert_eq!(kept.len(), cfg.layers);
+        assert_eq!(kept[0], (0..cfg.mlp).collect::<Vec<_>>());
+        // Pruned: kept sets shrink and stay ascending.
+        let pruned_opts = PruneOpts {
+            sparsity: crate::model::Sparsity { mlp_s10: 5, attn_s10: 0 },
+            ..PruneOpts::default()
+        };
+        let kept = mlp_kept_indices(cfg, &w, &stats, &pruned_opts).unwrap();
+        assert!(kept[0].len() < cfg.mlp);
+        assert!(kept[0].windows(2).all(|p| p[0] < p[1]));
+    }
+}

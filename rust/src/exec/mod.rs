@@ -38,7 +38,8 @@ use anyhow::{bail, Context, Result};
 
 pub use kv_pool::{KvPool, KvPoolOpts, KvPoolStats, PagedSeq};
 
-use crate::model::{ModelConfig, ModelKind, WeightStore};
+use crate::linalg::QuantMat;
+use crate::model::{is_q8_param, ModelConfig, ModelKind, QuantStore, WeightStore};
 use crate::runtime::native::forward::PagedKv;
 use crate::runtime::{Input, Runtime};
 use crate::tensor::Tensor;
@@ -52,6 +53,27 @@ pub fn argmax(row: &[f32]) -> i32 {
         }
     }
     best as i32
+}
+
+/// A resolved parameter reference held by a dispatch plan: an f32 tensor
+/// borrowed from a [`WeightStore`], or an int8 matrix borrowed from a
+/// [`QuantStore`] (the `quantize` weight transform). Plans map these to
+/// runtime [`Input`]s at dispatch; the `_w8` artifact suffix tells the
+/// interpreter which parameter slots arrive quantized.
+enum ParamRef<'w> {
+    F32(&'w Tensor),
+    Q8(&'w QuantMat),
+}
+
+impl<'w> ParamRef<'w> {
+    fn input(&self) -> Input<'w> {
+        match self {
+            ParamRef::F32(t) => Input::F32(t),
+            ParamRef::Q8(qm) => {
+                Input::Q8 { data: &qm.data, scales: &qm.scales, din: qm.din, dout: qm.dout }
+            }
+        }
+    }
 }
 
 /// Interior batch-size → artifact-name cache shared by the dispatch plans:
@@ -110,7 +132,9 @@ pub struct ForwardPlan<'rt, 'w> {
     pub dqk: usize,
     /// Retained MLP hidden width derived from the stored `mlp.w1` shape.
     pub o: usize,
-    params: Vec<&'w Tensor>,
+    params: Vec<ParamRef<'w>>,
+    /// Serve the int8 weight-quantized (`_w8`) artifact family.
+    w8: bool,
     /// batch size → fused artifact name (interior per-batch-size cache).
     arts: ArtCache,
 }
@@ -120,7 +144,18 @@ impl ForwardPlan<'_, '_> {
     /// repeat callers share one allocation per batch size ([`Arc`] handle
     /// identity is observable — tests assert reuse).
     pub fn artifact(&self, batch: usize) -> Arc<str> {
-        self.arts.get(batch, || self.cfg.fwd_artifact(self.dqk, self.o, batch))
+        self.arts.get(batch, || {
+            let mut s = self.cfg.fwd_artifact(self.dqk, self.o, batch);
+            if self.w8 {
+                s.push_str("_w8");
+            }
+            s
+        })
+    }
+
+    /// Does this plan serve int8-quantized block projections?
+    pub fn is_quantized(&self) -> bool {
+        self.w8
     }
 
     /// Number of batch sizes resolved so far (cache telemetry).
@@ -131,7 +166,7 @@ impl ForwardPlan<'_, '_> {
     fn dispatch(&self, data: Input<'_>, art: &str) -> Result<Tensor> {
         let mut inputs: Vec<Input> = Vec::with_capacity(1 + self.params.len());
         inputs.push(data);
-        inputs.extend(self.params.iter().map(|&t| Input::F32(t)));
+        inputs.extend(self.params.iter().map(|p| p.input()));
         let mut out = self.rt.execute(art, &inputs)?;
         Ok(out.remove(0))
     }
@@ -279,7 +314,9 @@ pub struct DecodePlan<'rt, 'w> {
     /// How steps are computed (KV-cache incremental vs prefill-per-step).
     /// Fixed at construction, so one name cache serves the plan.
     pub mode: DecodeMode,
-    params: Vec<&'w Tensor>,
+    params: Vec<ParamRef<'w>>,
+    /// Serve the int8 weight-quantized (`_w8`) artifact family.
+    w8: bool,
     arts: ArtCache,
     /// Paged block allocator behind every KV-cache sequence of this plan
     /// (`None` in prefill mode, which keeps no cache at all).
@@ -298,10 +335,21 @@ impl DecodePlan<'_, '_> {
     /// mode (`dec_*` for KV-cache, `fwd_*` for prefill-per-step), cached
     /// per batch size like [`ForwardPlan::artifact`].
     pub fn artifact(&self, batch: usize) -> Arc<str> {
-        self.arts.get(batch, || match self.mode {
-            DecodeMode::KvCache => self.cfg.dec_artifact(self.dqk, self.o, batch),
-            DecodeMode::Prefill => self.cfg.fwd_artifact(self.dqk, self.o, batch),
+        self.arts.get(batch, || {
+            let mut s = match self.mode {
+                DecodeMode::KvCache => self.cfg.dec_artifact(self.dqk, self.o, batch),
+                DecodeMode::Prefill => self.cfg.fwd_artifact(self.dqk, self.o, batch),
+            };
+            if self.w8 {
+                s.push_str("_w8");
+            }
+            s
         })
+    }
+
+    /// Does this plan serve int8-quantized block projections?
+    pub fn is_quantized(&self) -> bool {
+        self.w8
     }
 
     /// Pre-format the artifact name at `batch` (engine warmup).
@@ -464,7 +512,7 @@ impl DecodePlan<'_, '_> {
         let views: Vec<PagedKv> =
             states.iter().map(|st| st.paged.as_ref().unwrap().view()).collect();
         let art = self.artifact(b);
-        let params: Vec<Input> = self.params.iter().map(|&t| Input::F32(t)).collect();
+        let params: Vec<Input> = self.params.iter().map(|p| p.input()).collect();
         let logits = self.rt.execute_decode_paged(&art, &ids, &past, &fresh, &views, &params)?;
         // The interpreter wrote the new K/V rows into the blocks in place;
         // commit the lengths and account the appended rows — the only
@@ -504,7 +552,7 @@ impl DecodePlan<'_, '_> {
         let art = self.artifact(b);
         let mut inputs: Vec<Input> = Vec::with_capacity(1 + self.params.len());
         inputs.push(Input::I32(&ids, vec![b, n]));
-        inputs.extend(self.params.iter().map(|&t| Input::F32(t)));
+        inputs.extend(self.params.iter().map(|p| p.input()));
         let mut out = self.rt.execute(&art, &inputs)?;
         let logits = out.remove(0); // [b, n, vocab]
         let mut rows = Vec::with_capacity(states.len());
@@ -782,12 +830,22 @@ impl<'rt> Executor<'rt> {
     /// across all worker threads and dispatches any batch at its true size.
     pub fn forward_plan<'w>(&self, w: &'w WeightStore) -> Result<ForwardPlan<'rt, 'w>> {
         let (dqk, o, params) = self.resolve_params(w)?;
-        Ok(ForwardPlan { rt: self.rt, cfg: self.cfg, dqk, o, params, arts: ArtCache::new() })
+        Ok(ForwardPlan { rt: self.rt, cfg: self.cfg, dqk, o, params, w8: false, arts: ArtCache::new() })
+    }
+
+    /// [`Executor::forward_plan`] over an int8 weight-quantized store: the
+    /// six per-block GEMM projections dispatch as [`Input::Q8`] and the
+    /// plan serves the `_w8` artifact family (native backend only). The
+    /// non-quantized remainder resolves from the store's f32 base exactly
+    /// like the dense path.
+    pub fn forward_plan_q8<'w>(&self, qs: &'w QuantStore) -> Result<ForwardPlan<'rt, 'w>> {
+        let (dqk, o, params) = self.resolve_params_q8(qs)?;
+        Ok(ForwardPlan { rt: self.rt, cfg: self.cfg, dqk, o, params, w8: true, arts: ArtCache::new() })
     }
 
     /// Resolve `(dqk, o)` and every parameter tensor in canonical
     /// `param_spec_at` order — the shared front half of the dispatch plans.
-    fn resolve_params<'w>(&self, w: &'w WeightStore) -> Result<(usize, usize, Vec<&'w Tensor>)> {
+    fn resolve_params<'w>(&self, w: &'w WeightStore) -> Result<(usize, usize, Vec<ParamRef<'w>>)> {
         let (dqk, o) = self.stored_dims(w)?;
         let spec = self.cfg.param_spec_at(dqk, o);
         let mut params = Vec::with_capacity(spec.len());
@@ -799,7 +857,53 @@ impl<'rt> Executor<'rt> {
                     t.shape()
                 );
             }
-            params.push(t);
+            params.push(ParamRef::F32(t));
+        }
+        Ok((dqk, o, params))
+    }
+
+    /// Infer (dqk, o) from the quantized block-0 projection shapes.
+    pub fn stored_dims_q8(&self, qs: &QuantStore) -> Result<(usize, usize)> {
+        let wq = qs
+            .shape_of("blocks.0.attn.wq")
+            .context("missing quantized weight 'blocks.0.attn.wq'")?;
+        let w1 = qs
+            .shape_of("blocks.0.mlp.w1")
+            .context("missing quantized weight 'blocks.0.mlp.w1'")?;
+        Ok((wq[1] / self.cfg.heads, w1[1]))
+    }
+
+    /// [`Executor::resolve_params`] over a [`QuantStore`]: the per-block
+    /// GEMM projections resolve to int8 matrices, everything else to f32
+    /// tensors from the base store, in the same canonical order.
+    fn resolve_params_q8<'w>(
+        &self,
+        qs: &'w QuantStore,
+    ) -> Result<(usize, usize, Vec<ParamRef<'w>>)> {
+        let (dqk, o) = self.stored_dims_q8(qs)?;
+        let spec = self.cfg.param_spec_at(dqk, o);
+        let mut params = Vec::with_capacity(spec.len());
+        for (name, shape) in &spec {
+            if is_q8_param(name) {
+                let qm = qs.expect_q(name)?;
+                if [qm.din, qm.dout] != shape.as_slice() {
+                    bail!(
+                        "resolve_params_q8: weight '{name}' has shape [{}, {}], expected {shape:?}",
+                        qm.din,
+                        qm.dout
+                    );
+                }
+                params.push(ParamRef::Q8(qm));
+            } else {
+                let t = qs.base().expect(name)?;
+                if t.shape() != shape.as_slice() {
+                    bail!(
+                        "resolve_params_q8: weight '{name}' has shape {:?}, expected {shape:?}",
+                        t.shape()
+                    );
+                }
+                params.push(ParamRef::F32(t));
+            }
         }
         Ok((dqk, o, params))
     }
@@ -837,6 +941,34 @@ impl<'rt> Executor<'rt> {
             bail!("decode_plan on non-gpt model '{}'", self.cfg.name);
         }
         let (dqk, o, params) = self.resolve_params(w)?;
+        self.build_decode_plan(dqk, o, params, false, mode, pool_opts)
+    }
+
+    /// [`Executor::decode_plan_opts`] over an int8 weight-quantized store:
+    /// decode steps dispatch the `dec_*_w8` (or `fwd_*_w8` in prefill
+    /// mode) artifacts with the block projections as [`Input::Q8`].
+    pub fn decode_plan_opts_q8<'w>(
+        &self,
+        qs: &'w QuantStore,
+        mode: DecodeMode,
+        pool_opts: KvPoolOpts,
+    ) -> Result<DecodePlan<'rt, 'w>> {
+        if self.cfg.kind != ModelKind::Gpt {
+            bail!("decode_plan on non-gpt model '{}'", self.cfg.name);
+        }
+        let (dqk, o, params) = self.resolve_params_q8(qs)?;
+        self.build_decode_plan(dqk, o, params, true, mode, pool_opts)
+    }
+
+    fn build_decode_plan<'w>(
+        &self,
+        dqk: usize,
+        o: usize,
+        params: Vec<ParamRef<'w>>,
+        w8: bool,
+        mode: DecodeMode,
+        pool_opts: KvPoolOpts,
+    ) -> Result<DecodePlan<'rt, 'w>> {
         let pool = match mode {
             DecodeMode::KvCache => {
                 Some(KvPool::new(self.cfg.layers, self.cfg.heads, dqk, self.cfg.dh(), pool_opts))
@@ -850,6 +982,7 @@ impl<'rt> Executor<'rt> {
             o,
             mode,
             params,
+            w8,
             arts: ArtCache::new(),
             pool,
             kv_steps: AtomicU64::new(0),
@@ -938,6 +1071,30 @@ mod tests {
             assert_eq!(m.resolve(true), DecodeMode::Prefill);
             assert_eq!(m.resolve(false), m);
         }
+    }
+
+    #[test]
+    fn quantized_plans_use_w8_artifacts() {
+        let rt = Runtime::new(std::env::temp_dir().join("corp_exec_no_artifacts")).unwrap();
+        let cfg = ModelConfig::by_name("gpt_s").unwrap();
+        let exec = Executor::new(&rt, cfg);
+        let w = WeightStore::init(cfg, 3);
+        let qs = QuantStore::from_store(cfg, &w).unwrap();
+
+        let fp = exec.forward_plan(&w).unwrap();
+        let qp = exec.forward_plan_q8(&qs).unwrap();
+        assert!(!fp.is_quantized());
+        assert!(qp.is_quantized());
+        assert_eq!((qp.dqk, qp.o), (fp.dqk, fp.o));
+        assert!(!fp.artifact(4).ends_with("_w8"));
+        assert_eq!(*qp.artifact(4), format!("{}_w8", fp.artifact(4)));
+
+        let dp = exec
+            .decode_plan_opts_q8(&qs, DecodeMode::KvCache, KvPoolOpts::default())
+            .unwrap();
+        assert!(dp.is_quantized());
+        assert!(dp.artifact(2).starts_with("dec_"));
+        assert!(dp.artifact(2).ends_with("_w8"));
     }
 
     #[test]

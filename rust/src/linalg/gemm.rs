@@ -7,12 +7,22 @@
 //!
 //! * **Packing** — each MC-row panel of A is repacked per KC-depth block
 //!   into MR-interleaved micro-tiles (`pack[kk*MR + r] = A[i0+r, k0+kk]`),
-//!   so the micro-kernel reads A contiguously and LLVM keeps the panel in
+//!   so the micro-kernel reads A contiguously and keeps the panel in
 //!   L1/L2 across the j sweep.
 //! * **Register micro-kernel** — an MR×NR (4×8) accumulator tile updated
-//!   with one A broadcast and one 8-wide B row load per FMA group; the
-//!   NR-exact fast path uses fixed-size arrays so the compiler fully
-//!   unrolls and vectorizes it.
+//!   with one A broadcast and one 8-wide B row load per step; the NR-exact
+//!   fast path is written as explicit `std::arch` AVX2 (one `__m256`
+//!   accumulator per tile row), with the portable fixed-size-array tile
+//!   kept as the always-available fallback and as the remainder path.
+//! * **Runtime dispatch** — `is_x86_feature_detected!("avx2")` is probed
+//!   once (cached); the `CORP_SIMD=off` env override forces the portable
+//!   tile and is re-read on every top-level kernel call so tests can flip
+//!   it at runtime. The AVX2 tile deliberately uses `add(mul(..))` rather
+//!   than FMA: it is **bitwise identical** to the portable tile (same
+//!   per-lane multiply-round-add-round sequence, same accumulation order),
+//!   so dispatch never changes results — calibration Grams, compensation
+//!   solves, and served predictions are invariant to the CPU the run lands
+//!   on.
 //! * **No zero-skip branches** — the seed kernels tested `a_ik == 0.0`
 //!   inside the innermost loop, which blocked vectorization entirely;
 //!   dense panels are always cheaper than a data-dependent branch.
@@ -24,10 +34,14 @@
 //! `matmul_tn_f32` (the Gram shape C += AᵀB with A stored [k, m]) first
 //! transposes A into row-major once — O(k·m) against the O(k·m·n) multiply —
 //! then runs the same packed kernel. `syrk_upper_f32` packs Xᵀ and computes
-//! only the block-upper triangle before mirroring.
+//! only the block-upper triangle before mirroring. Both therefore inherit
+//! the SIMD micro-kernel, as do `dot_f32` / `matvec_f32` (an 8-lane
+//! accumulator with the same left-fold horizontal reduction as the
+//! portable multi-accumulator).
 //!
 //! The seed's scalar kernels are preserved in [`reference`] as the
-//! before/after baseline for `corp bench linalg` / `BENCH_linalg.json`.
+//! before/after baseline for `corp bench linalg` / `BENCH_linalg.json`;
+//! the int8 weight-quantized sibling lives in [`super::qgemm`].
 
 use crate::util::threads;
 
@@ -40,6 +54,66 @@ const KC: usize = 256;
 /// Rows of C per parallel work unit.
 const MC: usize = 64;
 
+#[cfg(test)]
+thread_local! {
+    /// Test-only dispatch override (see [`force_simd`]). Read on the
+    /// calling thread before the parallel region fans out, so it governs
+    /// the whole kernel call.
+    static SIMD_OVERRIDE: std::cell::Cell<Option<bool>> = const { std::cell::Cell::new(None) };
+}
+
+/// Run `f` with kernel dispatch pinned to SIMD (`Some(true)`, a no-op on
+/// hosts without AVX2), the portable tile (`Some(false)`), or the normal
+/// env/CPUID decision (`None`). Test-only: the equivalence tests use it to
+/// compare both paths on one host.
+#[cfg(test)]
+pub(crate) fn force_simd<R>(on: Option<bool>, f: impl FnOnce() -> R) -> R {
+    SIMD_OVERRIDE.with(|c| {
+        let prev = c.replace(on);
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
+/// Cached CPUID probe for AVX2. Always `false` off x86-64.
+pub fn avx2_detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Runtime kernel dispatch decision: AVX2 when the CPU supports it, unless
+/// `CORP_SIMD=off` (or `0`) forces the portable tile. The env var is
+/// re-read on every top-level kernel call (cheap next to any GEMM) so the
+/// override can be flipped at runtime; the CPUID probe is cached.
+pub fn simd_enabled() -> bool {
+    #[cfg(test)]
+    if let Some(forced) = SIMD_OVERRIDE.with(|c| c.get()) {
+        return forced && avx2_detected();
+    }
+    if matches!(std::env::var("CORP_SIMD").as_deref(), Ok("off") | Ok("0")) {
+        return false;
+    }
+    avx2_detected()
+}
+
+/// Label for the dispatch decision `simd_enabled` would make right now —
+/// `"avx2"` or `"portable"` — recorded in the bench tables.
+pub fn simd_label() -> &'static str {
+    if simd_enabled() {
+        "avx2"
+    } else {
+        "portable"
+    }
+}
+
 /// C[m,n] += A[m,k] · B[k,n], all row-major.
 pub fn matmul_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
@@ -48,10 +122,11 @@ pub fn matmul_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: us
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    let simd = simd_enabled();
     threads::parallel_chunks_mut(c, MC * n, |panel, cpan| {
         let i0 = panel * MC;
         let rows = cpan.len() / n;
-        gemm_panel(&a[i0 * k..(i0 + rows) * k], b, cpan, rows, k, n, 0);
+        gemm_panel(&a[i0 * k..(i0 + rows) * k], b, cpan, rows, k, n, 0, simd);
     });
 }
 
@@ -65,11 +140,12 @@ pub fn matmul_tn_f32(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n:
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    let simd = simd_enabled();
     let at = transpose(a, k, m); // [m, k]
     threads::parallel_chunks_mut(c, MC * n, |panel, cpan| {
         let i0 = panel * MC;
         let rows = cpan.len() / n;
-        gemm_panel(&at[i0 * k..(i0 + rows) * k], b, cpan, rows, k, n, 0);
+        gemm_panel(&at[i0 * k..(i0 + rows) * k], b, cpan, rows, k, n, 0, simd);
     });
 }
 
@@ -87,11 +163,12 @@ pub fn syrk_upper_f32(x: &[f32], c: &mut [f32], rows: usize, n: usize) {
         return;
     }
     if rows > 0 {
+        let simd = simd_enabled();
         let xt = transpose(x, rows, n); // [n, rows]: row i = channel i over samples
         threads::parallel_chunks_mut(c, MC * n, |panel, cpan| {
             let i0 = panel * MC;
             let pr = cpan.len() / n;
-            gemm_panel(&xt[i0 * rows..(i0 + pr) * rows], x, cpan, pr, rows, n, i0);
+            gemm_panel(&xt[i0 * rows..(i0 + pr) * rows], x, cpan, pr, rows, n, i0, simd);
         });
     }
     // Mirror upper -> lower.
@@ -110,19 +187,40 @@ pub fn matvec_f32(a: &[f32], x: &[f32], y: &mut [f32], m: usize, n: usize) {
     if m == 0 {
         return;
     }
+    let simd = simd_enabled();
     threads::parallel_chunks_mut(y, 128, |blk, ychunk| {
         let r0 = blk * 128;
         for (dy, yv) in ychunk.iter_mut().enumerate() {
             let row = &a[(r0 + dy) * n..(r0 + dy + 1) * n];
-            *yv += dot_f32(row, x);
+            *yv += dot_dispatch(row, x, simd);
         }
     });
 }
 
-/// Multi-accumulator dot product (vectorizes without a zero-skip branch).
+/// Multi-accumulator dot product (one dispatch decision per call; `matvec`
+/// amortizes the decision over all rows via [`dot_dispatch`]).
 #[inline]
 pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    dot_dispatch(a, b, simd_enabled())
+}
+
+#[inline]
+fn dot_dispatch(a: &[f32], b: &[f32], simd: bool) -> f32 {
     debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        // Safety: `simd` is only true when the AVX2 probe succeeded.
+        return unsafe { dot_avx2(a, b) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    dot_portable(a, b)
+}
+
+/// Portable 8-lane multi-accumulator dot (vectorizes without a zero-skip
+/// branch); the exact reference the AVX2 path reproduces bitwise.
+#[inline]
+fn dot_portable(a: &[f32], b: &[f32]) -> f32 {
     let mut acc = [0.0f32; NR];
     let chunks = a.len() / NR;
     for i in 0..chunks {
@@ -133,6 +231,32 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
         }
     }
     let mut s = acc.iter().sum::<f32>();
+    for i in chunks * NR..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// AVX2 dot: one 8-lane vector accumulator updated with `add(mul(..))` —
+/// per lane the identical multiply/add/rounding sequence as
+/// [`dot_portable`]'s `acc[j] += av[j] * bv[j]` — then the same sequential
+/// left-fold over lanes 0..8 and the same scalar tail.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let chunks = a.len() / NR;
+    let mut vacc = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let av = _mm256_loadu_ps(a.as_ptr().add(i * NR));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(i * NR));
+        // No FMA: fused multiply-add rounds once where the portable kernel
+        // rounds twice, which would break bitwise dispatch invariance.
+        vacc = _mm256_add_ps(vacc, _mm256_mul_ps(av, bv));
+    }
+    let mut lanes = [0.0f32; NR];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
+    let mut s = lanes.iter().sum::<f32>();
     for i in chunks * NR..a.len() {
         s += a[i] * b[i];
     }
@@ -161,8 +285,19 @@ fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
 
 /// One MC-row panel of C += A_panel · B, with columns restricted to
 /// [jlo, n). `a` holds the panel's rows [rows, k] row-major; `cpan` is the
-/// panel's slice of C (full n-column rows).
-fn gemm_panel(a: &[f32], b: &[f32], cpan: &mut [f32], rows: usize, k: usize, n: usize, jlo: usize) {
+/// panel's slice of C (full n-column rows). `simd` is the dispatch decision
+/// made once at the public entry point.
+#[allow(clippy::too_many_arguments)]
+fn gemm_panel(
+    a: &[f32],
+    b: &[f32],
+    cpan: &mut [f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    jlo: usize,
+    simd: bool,
+) {
     let mut pack = [0.0f32; KC * MR];
     for k0 in (0..k).step_by(KC) {
         let kc = KC.min(k - k0);
@@ -177,14 +312,17 @@ fn gemm_panel(a: &[f32], b: &[f32], cpan: &mut [f32], rows: usize, k: usize, n: 
                         if r < mr { a[(i + r) * k + k0 + kk] } else { 0.0 };
                 }
             }
-            micro_kernel(&pack, kc, b, k0, n, jlo, cpan, i, mr);
+            micro_kernel(&pack, kc, b, k0, n, jlo, cpan, i, mr, simd);
             i += mr;
         }
     }
 }
 
 /// MR×NR register-tile micro-kernel: for each NR-wide column strip of C,
-/// accumulate over the packed depth block, then add into C.
+/// accumulate over the packed depth block, then add into C. The NR-exact
+/// strip dispatches to the AVX2 tile when `simd` is set; NR-remainder
+/// strips always take the portable path (the AVX2 tile has no masked
+/// loads, and remainders are a vanishing fraction of the work).
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn micro_kernel(
@@ -197,21 +335,35 @@ fn micro_kernel(
     cpan: &mut [f32],
     i: usize,
     mr: usize,
+    simd: bool,
 ) {
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
     let mut j0 = jlo;
     while j0 < n {
         let nr = NR.min(n - j0);
         let mut acc = [[0.0f32; NR]; MR];
         if nr == NR {
-            // Fast path: fixed-size B loads, fully unrolled FMA tile.
-            for kk in 0..kc {
-                let ap = &pack[kk * MR..kk * MR + MR];
-                let base = (k0 + kk) * n + j0;
-                let brow: &[f32; NR] = b[base..base + NR].try_into().unwrap();
-                for r in 0..MR {
-                    let arv = ap[r];
-                    for (jj, accv) in acc[r].iter_mut().enumerate() {
-                        *accv += arv * brow[jj];
+            let mut done = false;
+            #[cfg(target_arch = "x86_64")]
+            if simd {
+                // Safety: `simd` is only true when the AVX2 probe
+                // succeeded; `j0 + NR <= n` and `k0 + kc <= k` bound every
+                // load.
+                unsafe { tile_full_avx2(pack, kc, b, k0, n, j0, &mut acc) };
+                done = true;
+            }
+            if !done {
+                // Portable fast path: fixed-size B loads, fully unrolled.
+                for kk in 0..kc {
+                    let ap = &pack[kk * MR..kk * MR + MR];
+                    let base = (k0 + kk) * n + j0;
+                    let brow: &[f32; NR] = b[base..base + NR].try_into().unwrap();
+                    for r in 0..MR {
+                        let arv = ap[r];
+                        for (jj, accv) in acc[r].iter_mut().enumerate() {
+                            *accv += arv * brow[jj];
+                        }
                     }
                 }
             }
@@ -235,6 +387,38 @@ fn micro_kernel(
             }
         }
         j0 += nr;
+    }
+}
+
+/// AVX2 NR-exact tile: one `__m256` accumulator per tile row, updated with
+/// a broadcast A value and an unaligned 8-wide B load per depth step.
+/// `add(mul(..))` keeps each lane's rounding sequence identical to the
+/// portable tile; the accumulation order (kk outer, row inner, lane-wise)
+/// is also identical, so the stored `acc` is bitwise what the portable
+/// path produces.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn tile_full_avx2(
+    pack: &[f32; KC * MR],
+    kc: usize,
+    b: &[f32],
+    k0: usize,
+    n: usize,
+    j0: usize,
+    acc: &mut [[f32; NR]; MR],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!((k0 + kc - 1) * n + j0 + NR <= b.len());
+    let mut vacc = [_mm256_setzero_ps(); MR];
+    for kk in 0..kc {
+        let bv = _mm256_loadu_ps(b.as_ptr().add((k0 + kk) * n + j0));
+        for (r, va) in vacc.iter_mut().enumerate() {
+            let av = _mm256_set1_ps(pack[kk * MR + r]);
+            *va = _mm256_add_ps(*va, _mm256_mul_ps(av, bv));
+        }
+    }
+    for (r, va) in vacc.iter().enumerate() {
+        _mm256_storeu_ps(acc[r].as_mut_ptr(), *va);
     }
 }
 
@@ -432,6 +616,121 @@ mod tests {
             reference::matmul_f32_seed(&a, &b, &mut c_seed, m, k, n);
             assert_close(&c_new, &c_seed, 1e-3);
         });
+    }
+
+    /// Tentpole acceptance: the AVX2 path is **bitwise** identical to the
+    /// portable tile across shapes straddling the MR=4 / NR=8 / KC=256
+    /// boundaries (row remainders, column remainders, multi-KC depth).
+    /// Trivially passes on hosts without AVX2 (both runs take the portable
+    /// tile).
+    #[test]
+    fn simd_matches_portable_bitwise() {
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 7, 7),
+            (4, 8, 8),
+            (5, 9, 9),
+            (8, 255, 16),
+            (9, 256, 17),
+            (12, 257, 24),
+            (13, 300, 31),
+            (64, 512, 40),
+            (65, 513, 41),
+        ];
+        let mut rng = crate::util::Pcg64::new(77);
+        for &(m, k, n) in &shapes {
+            let a = gen::matrix(&mut rng, m, k, 1.0);
+            let b = gen::matrix(&mut rng, k, n, 1.0);
+            let mut c_simd = vec![0.0f32; m * n];
+            force_simd(Some(true), || matmul_f32(&a, &b, &mut c_simd, m, k, n));
+            let mut c_port = vec![0.0f32; m * n];
+            force_simd(Some(false), || matmul_f32(&a, &b, &mut c_port, m, k, n));
+            assert_eq!(
+                c_simd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                c_port.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "matmul simd!=portable at m={m} k={k} n={n}"
+            );
+
+            // tn / syrk / matvec funnel through the same micro-kernel and
+            // dot; check them on the same straddling shapes.
+            let x = gen::matrix(&mut rng, k, n, 1.0);
+            let mut s_simd = vec![0.0f32; n * n];
+            force_simd(Some(true), || syrk_upper_f32(&x, &mut s_simd, k, n));
+            let mut s_port = vec![0.0f32; n * n];
+            force_simd(Some(false), || syrk_upper_f32(&x, &mut s_port, k, n));
+            assert_eq!(
+                s_simd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                s_port.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "syrk simd!=portable at rows={k} n={n}"
+            );
+
+            let xv = gen::matrix(&mut rng, 1, k, 1.0);
+            let av = gen::matrix(&mut rng, m, k, 1.0);
+            let mut y_simd = vec![0.0f32; m];
+            force_simd(Some(true), || matvec_f32(&av, &xv, &mut y_simd, m, k));
+            let mut y_port = vec![0.0f32; m];
+            force_simd(Some(false), || matvec_f32(&av, &xv, &mut y_port, m, k));
+            assert_eq!(
+                y_simd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y_port.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "matvec simd!=portable at m={m} n={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn tn_simd_matches_portable_bitwise() {
+        let mut rng = crate::util::Pcg64::new(78);
+        for &(k, m, n) in &[(255usize, 5usize, 9usize), (257, 12, 16), (64, 33, 40)] {
+            let a = gen::matrix(&mut rng, k, m, 1.0);
+            let b = gen::matrix(&mut rng, k, n, 1.0);
+            let mut c_simd = vec![0.0f32; m * n];
+            force_simd(Some(true), || matmul_tn_f32(&a, &b, &mut c_simd, k, m, n));
+            let mut c_port = vec![0.0f32; m * n];
+            force_simd(Some(false), || matmul_tn_f32(&a, &b, &mut c_port, k, m, n));
+            assert_eq!(
+                c_simd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                c_port.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "tn simd!=portable at k={k} m={m} n={n}"
+            );
+        }
+    }
+
+    /// `CORP_SIMD=off` forces the portable tile through the env path (as
+    /// opposed to the test override). Safe under parallel tests: dispatch
+    /// is bitwise result-invariant, so other tests racing this env flip
+    /// cannot observe a difference.
+    #[test]
+    fn corp_simd_off_env_forces_fallback() {
+        let mut rng = crate::util::Pcg64::new(79);
+        let (m, k, n) = (9, 260, 17);
+        let a = gen::matrix(&mut rng, m, k, 1.0);
+        let b = gen::matrix(&mut rng, k, n, 1.0);
+        std::env::set_var("CORP_SIMD", "off");
+        assert!(!simd_enabled(), "CORP_SIMD=off must force the portable tile");
+        assert_eq!(simd_label(), "portable");
+        let mut c_off = vec![0.0f32; m * n];
+        matmul_f32(&a, &b, &mut c_off, m, k, n);
+        std::env::remove_var("CORP_SIMD");
+        let mut c_on = vec![0.0f32; m * n];
+        matmul_f32(&a, &b, &mut c_on, m, k, n);
+        assert_eq!(
+            c_off.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            c_on.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn dot_simd_matches_portable_bitwise() {
+        let mut rng = crate::util::Pcg64::new(80);
+        for len in [0usize, 1, 7, 8, 9, 16, 17, 255, 256, 257, 1000] {
+            let a = gen::matrix(&mut rng, 1, len.max(1), 1.0);
+            let b = gen::matrix(&mut rng, 1, len.max(1), 1.0);
+            let (a, b) = (&a[..len], &b[..len]);
+            let s = force_simd(Some(true), || dot_f32(a, b));
+            let p = force_simd(Some(false), || dot_f32(a, b));
+            assert_eq!(s.to_bits(), p.to_bits(), "dot simd!=portable at len={len}");
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! Layer-3 target of the §Perf pass.
 
 pub mod gemm;
+pub mod qgemm;
 pub mod chol;
 pub mod eig;
 pub mod svd;
@@ -16,6 +17,7 @@ pub mod kron;
 pub use chol::{cholesky_solve, Cholesky};
 pub use eig::sym_eig;
 pub use gemm::{matmul_f32, matmul_tn_f32, syrk_upper_f32};
+pub use qgemm::{dequant, matmul_q8, matmul_q8_raw, quantize, QuantMat};
 pub use svd::svd;
 
 use std::fmt;

@@ -1,0 +1,408 @@
+//! Int8 weight-quantized GEMM for the serving forward path.
+//!
+//! Weights are quantized **per output channel** (symmetric, round to
+//! nearest, clamp to ±127): channel j stores `q[i] = round(w[i][j] / s_j)`
+//! with `s_j = max_i |w[i][j]| / 127`, laid out channel-major (`[dout,
+//! din]` row-major) so each output channel's weights are one contiguous
+//! i8 run. Activations are quantized **per row, dynamically** at dispatch
+//! time with the same symmetric rule. The kernel accumulates the i8×i8
+//! products in i32 — *exact* integer arithmetic, so the AVX2 path
+//! (`_mm256_madd_epi16` over sign-extended 16-lane chunks) and the scalar
+//! multi-accumulator produce identical sums in any order — and applies one
+//! f32 dequant epilogue per output: `out += x_scale · s_j · acc`.
+//!
+//! Two consequences the serving stack leans on:
+//!
+//! * **Determinism** — quantization, the integer dot, and the epilogue are
+//!   all order-insensitive or fixed-order, so int8 predictions are
+//!   invariant to worker count, dispatch policy, and SIMD dispatch (the
+//!   same guarantee the f32 kernels give, tested bitwise).
+//! * **Correctable error** — the f32→int8 output residual of a channel is
+//!   an affine function of that channel's exact output on any fixed input
+//!   distribution, which is why `compensate::quant` can fit it in closed
+//!   form from the calibration Gram accumulators and fold the fix into
+//!   `s_j` and the bias (see `compensate/quant.rs`).
+//!
+//! Dispatch reuses [`super::gemm::simd_enabled`] (`CORP_SIMD=off` forces
+//! the scalar path); parallelism reuses the worker pool with the same
+//! row-ownership scheme as the f32 kernels.
+
+use super::gemm::simd_enabled;
+use crate::util::threads;
+
+/// Rows of the output per parallel work unit.
+const RB: usize = 16;
+
+/// A per-output-channel symmetric int8 quantized weight matrix for a
+/// linear layer `y = x · W` with `W` logically `[din, dout]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantMat {
+    /// Channel-major quantized weights: `data[j * din + i]` is channel j's
+    /// weight for input i.
+    pub data: Vec<i8>,
+    /// Per-output-channel dequant scales (`s_j`); zero for all-zero
+    /// channels.
+    pub scales: Vec<f32>,
+    pub din: usize,
+    pub dout: usize,
+}
+
+impl QuantMat {
+    /// In-memory footprint of the quantized payload in bytes.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+}
+
+/// Quantize a row-major `[din, dout]` f32 weight matrix per output
+/// channel: `s_j = max_i |w[i][j]| / 127`, `q = round(w / s_j)` clamped to
+/// ±127 (`f32::round` — half away from zero). All-zero channels store
+/// `s_j = 0` and zero codes.
+pub fn quantize(w: &[f32], din: usize, dout: usize) -> QuantMat {
+    assert_eq!(w.len(), din * dout);
+    let mut data = vec![0i8; din * dout];
+    let mut scales = vec![0.0f32; dout];
+    for j in 0..dout {
+        let mut amax = 0.0f32;
+        for i in 0..din {
+            amax = amax.max(w[i * dout + j].abs());
+        }
+        if amax == 0.0 {
+            continue; // scale 0, codes 0
+        }
+        let scale = amax / 127.0;
+        let inv = 127.0 / amax;
+        scales[j] = scale;
+        let chan = &mut data[j * din..(j + 1) * din];
+        for (i, q) in chan.iter_mut().enumerate() {
+            *q = (w[i * dout + j] * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    QuantMat { data, scales, din, dout }
+}
+
+/// Reconstruct the row-major `[din, dout]` f32 matrix `q · s_j` — the
+/// matrix the int8 kernel effectively multiplies by (up to activation
+/// quantization). Used by the round-trip tests and the dequant-correction
+/// fit.
+pub fn dequant(qm: &QuantMat) -> Vec<f32> {
+    let mut out = vec![0.0f32; qm.din * qm.dout];
+    for j in 0..qm.dout {
+        let s = qm.scales[j];
+        let chan = &qm.data[j * qm.din..(j + 1) * qm.din];
+        for (i, &q) in chan.iter().enumerate() {
+            out[i * qm.dout + j] = q as f32 * s;
+        }
+    }
+    out
+}
+
+/// Symmetric per-row activation quantization: returns the row's codes in
+/// `xq` and its dequant scale (`max|x| / 127`; zero rows get scale 0).
+#[inline]
+fn quantize_row(x: &[f32], xq: &mut [i8]) -> f32 {
+    let mut amax = 0.0f32;
+    for &v in x {
+        amax = amax.max(v.abs());
+    }
+    if amax == 0.0 {
+        xq.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / amax;
+    for (q, &v) in xq.iter_mut().zip(x) {
+        *q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    amax / 127.0
+}
+
+/// out[rows, dout] += x[rows, din] · W where W is the int8 matrix `qm`
+/// stands for. Per-row dynamic activation quantization, i32 accumulation,
+/// f32 dequant epilogue. Same accumulate-into-C semantics and row-panel
+/// parallelism as [`super::gemm::matmul_f32`].
+pub fn matmul_q8(x: &[f32], qm: &QuantMat, out: &mut [f32], rows: usize) {
+    matmul_q8_raw(x, &qm.data, &qm.scales, qm.din, qm.dout, out, rows);
+}
+
+/// [`matmul_q8`] over borrowed code/scale slices (channel-major codes as in
+/// [`QuantMat`]) — the runtime's `Input::Q8` path, where the quantized
+/// weight is a view into a store rather than an owned matrix.
+pub fn matmul_q8_raw(
+    x: &[f32],
+    data: &[i8],
+    scales: &[f32],
+    din: usize,
+    dout: usize,
+    out: &mut [f32],
+    rows: usize,
+) {
+    assert_eq!(x.len(), rows * din);
+    assert_eq!(data.len(), din * dout);
+    assert_eq!(scales.len(), dout);
+    assert_eq!(out.len(), rows * dout);
+    if rows == 0 || dout == 0 || din == 0 {
+        return;
+    }
+    let simd = simd_enabled();
+    threads::parallel_chunks_mut(out, RB * dout, |panel, opan| {
+        let r0 = panel * RB;
+        let pr = opan.len() / dout;
+        let mut xq = vec![0i8; din];
+        for r in 0..pr {
+            let xrow = &x[(r0 + r) * din..(r0 + r + 1) * din];
+            let xs = quantize_row(xrow, &mut xq);
+            let orow = &mut opan[r * dout..(r + 1) * dout];
+            if xs == 0.0 {
+                continue; // zero row contributes nothing
+            }
+            for (j, ov) in orow.iter_mut().enumerate() {
+                let ws = scales[j];
+                if ws == 0.0 {
+                    continue;
+                }
+                let chan = &data[j * din..(j + 1) * din];
+                let acc = dot_i8_dispatch(&xq, chan, simd);
+                *ov += xs * ws * acc as f32;
+            }
+        }
+    });
+}
+
+#[inline]
+fn dot_i8_dispatch(a: &[i8], b: &[i8], simd: bool) -> i32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        // Safety: `simd` is only true when the AVX2 probe succeeded.
+        return unsafe { dot_i8_avx2(a, b) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    dot_i8(a, b)
+}
+
+/// Scalar i8·i8 → i32 dot with an 8-lane multi-accumulator (integer adds
+/// are associative, so LLVM is free to vectorize this; the explicit AVX2
+/// path below is exactly equal by integer exactness).
+#[inline]
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0i32; 8];
+    let chunks = a.len() / 8;
+    for i in 0..chunks {
+        let av = &a[i * 8..(i + 1) * 8];
+        let bv = &b[i * 8..(i + 1) * 8];
+        for j in 0..8 {
+            acc[j] += av[j] as i32 * bv[j] as i32;
+        }
+    }
+    let mut s: i32 = acc.iter().sum();
+    for i in chunks * 8..a.len() {
+        s += a[i] as i32 * b[i] as i32;
+    }
+    s
+}
+
+/// AVX2 i8 dot: sign-extend 16 codes a side to i16, `madd` the pairs into
+/// 8 i32 lanes, accumulate. Products are ≤ 127² and the depth of any layer
+/// here is ≪ 2³¹/127²/2, so the i32 lanes cannot overflow; the result is
+/// exactly the scalar sum.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 16;
+    let mut vacc = _mm256_setzero_si256();
+    for i in 0..chunks {
+        let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(i * 16) as *const __m128i));
+        let bv = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(i * 16) as *const __m128i));
+        vacc = _mm256_add_epi32(vacc, _mm256_madd_epi16(av, bv));
+    }
+    let mut lanes = [0i32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, vacc);
+    let mut s: i32 = lanes.iter().sum();
+    for i in chunks * 16..a.len() {
+        s += a[i] as i32 * b[i] as i32;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, run_prop};
+
+    fn naive_f64(x: &[f32], w: &[f32], rows: usize, din: usize, dout: usize) -> Vec<f64> {
+        let mut out = vec![0.0f64; rows * dout];
+        for r in 0..rows {
+            for j in 0..dout {
+                out[r * dout + j] = (0..din)
+                    .map(|i| x[r * din + i] as f64 * w[i * dout + j] as f64)
+                    .sum();
+            }
+        }
+        out
+    }
+
+    /// Satellite: quantize→dequant round-trip error is bounded per entry by
+    /// half a quantization step of its channel, and scales match the
+    /// max-abs rule.
+    #[test]
+    fn quantize_dequant_roundtrip_bounds() {
+        run_prop("qgemm.roundtrip bound", 20, |rng| {
+            let (din, dout) = (gen::dim(rng, 1, 60), gen::dim(rng, 1, 40));
+            let w = gen::matrix(rng, din, dout, 1.0);
+            let qm = quantize(&w, din, dout);
+            let dq = dequant(&qm);
+            for j in 0..dout {
+                let amax = (0..din).map(|i| w[i * dout + j].abs()).fold(0.0f32, f32::max);
+                assert!(
+                    (qm.scales[j] - amax / 127.0).abs() <= 1e-6 * (1.0 + amax),
+                    "scale rule violated at j={j}"
+                );
+                for i in 0..din {
+                    let err = (w[i * dout + j] - dq[i * dout + j]).abs();
+                    assert!(
+                        err <= 0.5 * qm.scales[j] + 1e-6,
+                        "entry ({i},{j}) err {err} > step/2 {}",
+                        0.5 * qm.scales[j]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn zero_channel_gets_zero_scale() {
+        let din = 5;
+        let mut w = vec![0.0f32; din * 3];
+        for i in 0..din {
+            w[i * 3] = (i as f32) - 2.0; // channel 0 nonzero
+            // channel 1 all zero
+            w[i * 3 + 2] = 1.0; // channel 2 constant
+        }
+        let qm = quantize(&w, din, 3);
+        assert_eq!(qm.scales[1], 0.0);
+        assert!(qm.data[din..2 * din].iter().all(|&q| q == 0));
+        let dq = dequant(&qm);
+        for i in 0..din {
+            assert_eq!(dq[i * 3 + 1], 0.0);
+        }
+    }
+
+    /// The kernel result differs from the exact f64 product by at most the
+    /// analytic quantization bound: per (row r, channel j),
+    /// |Δ| ≤ Σᵢ|xᵢ|·(s_j/2) + (xs/2)·Σᵢ|ŵᵢⱼ| + din·(xs/2)·(s_j/2).
+    #[test]
+    fn matmul_q8_within_analytic_bound() {
+        run_prop("qgemm.analytic bound", 12, |rng| {
+            let (rows, din, dout) =
+                (gen::dim(rng, 1, 20), gen::dim(rng, 1, 80), gen::dim(rng, 1, 30));
+            let x = gen::matrix(rng, rows, din, 1.0);
+            let w = gen::matrix(rng, din, dout, 1.0);
+            let qm = quantize(&w, din, dout);
+            let dq = dequant(&qm);
+            let mut out = vec![0.0f32; rows * dout];
+            matmul_q8(&x, &qm, &mut out, rows);
+            let want = naive_f64(&x, &w, rows, din, dout);
+            for r in 0..rows {
+                let xrow = &x[r * din..(r + 1) * din];
+                let amax = xrow.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let xs = amax / 127.0;
+                let sum_absx: f64 = xrow.iter().map(|v| v.abs() as f64).sum();
+                for j in 0..dout {
+                    let sj = qm.scales[j] as f64;
+                    let sum_absw: f64 =
+                        (0..din).map(|i| dq[i * dout + j].abs() as f64).sum();
+                    let bound = sum_absx * sj * 0.5
+                        + (xs as f64) * 0.5 * sum_absw
+                        + din as f64 * (xs as f64) * 0.5 * sj * 0.5
+                        + 1e-3;
+                    let got = out[r * dout + j] as f64;
+                    let err = (got - want[r * dout + j]).abs();
+                    assert!(
+                        err <= bound,
+                        "({r},{j}) err {err} > bound {bound} (got {got}, want {})",
+                        want[r * dout + j]
+                    );
+                }
+            }
+        });
+    }
+
+    /// Codes that need no rounding reproduce the f32 product exactly (up
+    /// to the f32 epilogue): weights and activations on an exact grid.
+    #[test]
+    fn matmul_q8_exact_on_grid() {
+        let (rows, din, dout) = (3usize, 16usize, 5usize);
+        let mut rng = crate::util::Pcg64::new(11);
+        let x: Vec<f32> = (0..rows * din).map(|_| (rng.below(255) as i64 - 127) as f32).collect();
+        let w: Vec<f32> = (0..din * dout).map(|_| (rng.below(255) as i64 - 127) as f32).collect();
+        let qm = quantize(&w, din, dout);
+        let mut out = vec![0.0f32; rows * dout];
+        matmul_q8(&x, &qm, &mut out, rows);
+        let want = naive_f64(&x, &w, rows, din, dout);
+        for (g, w) in out.iter().zip(&want) {
+            // i32-exact accumulation; only the two-factor f32 epilogue
+            // rounds, so the products agree to f32 precision.
+            assert!(
+                (*g as f64 - w).abs() <= 1e-2 * (1.0 + w.abs()),
+                "{g} vs {w}"
+            );
+        }
+    }
+
+    /// SIMD dispatch does not change the int8 result at all (integer
+    /// accumulation is exact in any order; the epilogue is identical).
+    #[test]
+    fn matmul_q8_simd_matches_scalar_bitwise() {
+        use crate::linalg::gemm::force_simd;
+        let mut rng = crate::util::Pcg64::new(21);
+        for &(rows, din, dout) in
+            &[(1usize, 1usize, 1usize), (2, 15, 9), (3, 16, 8), (4, 17, 33), (5, 130, 20)]
+        {
+            let x = gen::matrix(&mut rng, rows, din, 1.0);
+            let w = gen::matrix(&mut rng, din, dout, 1.0);
+            let qm = quantize(&w, din, dout);
+            let mut o_simd = vec![0.0f32; rows * dout];
+            force_simd(Some(true), || matmul_q8(&x, &qm, &mut o_simd, rows));
+            let mut o_scal = vec![0.0f32; rows * dout];
+            force_simd(Some(false), || matmul_q8(&x, &qm, &mut o_scal, rows));
+            assert_eq!(
+                o_simd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                o_scal.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "q8 simd!=scalar at rows={rows} din={din} dout={dout}"
+            );
+        }
+    }
+
+    #[test]
+    fn accumulates_into_out() {
+        let x = [1.0f32, 2.0];
+        let w = [3.0f32, 4.0]; // [din=2, dout=1]
+        let qm = quantize(&w, 2, 1);
+        let mut out = vec![10.0f32];
+        matmul_q8(&x, &qm, &mut out, 1);
+        assert!((out[0] - 21.0).abs() < 0.1, "{}", out[0]);
+    }
+
+    #[test]
+    fn worker_count_invariance() {
+        use crate::util::threads::with_threads;
+        let mut rng = crate::util::Pcg64::new(31);
+        let (rows, din, dout) = (70usize, 64usize, 24usize);
+        let x = gen::matrix(&mut rng, rows, din, 1.0);
+        let w = gen::matrix(&mut rng, din, dout, 1.0);
+        let qm = quantize(&w, din, dout);
+        let mut o1 = vec![0.0f32; rows * dout];
+        with_threads(1, || matmul_q8(&x, &qm, &mut o1, rows));
+        for wkr in [2usize, 4] {
+            let mut ow = vec![0.0f32; rows * dout];
+            with_threads(wkr, || matmul_q8(&x, &qm, &mut ow, rows));
+            assert_eq!(
+                ow.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                o1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            );
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Int8 weight-quantized store: the post-pruning `quantize` weight
+//! transform.
+//!
+//! A [`QuantStore`] holds a model's six per-block GEMM projections
+//! (`attn.wq/wk/wv/wo`, `mlp.w1/w2`) as per-output-channel int8
+//! [`QuantMat`]s and everything else (norms, biases, embeddings, head)
+//! as f32 in an ordinary [`WeightStore`]. It is produced *after* pruning
+//! and compensation — quantization composes with CORP's structural edits,
+//! and the dequant-correction pass in `compensate::quant` then folds the
+//! quantization residual of `mlp.w2` into the stored scales/bias using the
+//! same calibration Gram accumulators the pruning compensator uses.
+//!
+//! The base store keeps the param-spec *shapes* observable through
+//! [`QuantStore::shape_of`] so the executor can derive the served
+//! `(dqk, o)` dims exactly as it does from a dense store.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::config::ModelConfig;
+use super::weights::WeightStore;
+use crate::linalg::qgemm::{quantize, QuantMat};
+
+/// Is `name` one of the per-block GEMM projections the int8 path
+/// quantizes? (`attn.wq/wk/wv/wo` and `mlp.w1/w2`, with or without the
+/// `blocks.{l}.` prefix — `block_param_spec` names are unprefixed;
+/// embeddings, head, norms, and all biases stay f32.)
+pub fn is_q8_param(name: &str) -> bool {
+    name.contains("attn.w") || name.contains("mlp.w")
+}
+
+/// A weight store whose block GEMM projections are int8-quantized.
+#[derive(Clone, Default)]
+pub struct QuantStore {
+    /// All non-quantized parameters (f32), under their usual names.
+    base: WeightStore,
+    /// The quantized projections, keyed by the same param names.
+    q: BTreeMap<String, QuantMat>,
+}
+
+impl QuantStore {
+    /// Quantize a (dense or pruned/compensated) store. The input may carry
+    /// pruned shapes; shapes are read off the stored tensors, matching the
+    /// fused-artifact convention.
+    pub fn from_store(cfg: &ModelConfig, w: &WeightStore) -> Result<Self> {
+        let mut base = WeightStore::new();
+        let mut q = BTreeMap::new();
+        for (name, t) in w.iter() {
+            if is_q8_param(name) {
+                let s = t.shape();
+                if s.len() != 2 {
+                    bail!("quantize: '{name}' is not a matrix (shape {s:?})");
+                }
+                q.insert(name.to_string(), quantize(t.data(), s[0], s[1]));
+            } else {
+                base.insert(name, t.clone());
+            }
+        }
+        if q.is_empty() {
+            bail!("quantize: no block GEMM projections found ({} params)", w.len());
+        }
+        // Sanity: every layer contributed its six projections.
+        let expected = 6 * cfg.layers;
+        if q.len() != expected {
+            bail!("quantize: {} quantized projections, expected {expected}", q.len());
+        }
+        Ok(Self { base, q })
+    }
+
+    /// The f32 remainder (norms, biases, embeddings, head).
+    pub fn base(&self) -> &WeightStore {
+        &self.base
+    }
+
+    pub fn get_q(&self, name: &str) -> Option<&QuantMat> {
+        self.q.get(name)
+    }
+
+    pub fn expect_q(&self, name: &str) -> Result<&QuantMat> {
+        self.q.get(name).with_context(|| format!("missing quantized weight '{name}'"))
+    }
+
+    /// Mutable access for the dequant-correction fold (scales only; codes
+    /// are never rewritten).
+    pub fn get_q_mut(&mut self, name: &str) -> Option<&mut QuantMat> {
+        self.q.get_mut(name)
+    }
+
+    /// Mutable access to the f32 remainder (bias folds).
+    pub fn base_mut(&mut self) -> &mut WeightStore {
+        &mut self.base
+    }
+
+    /// Shape of any parameter, quantized or not — `[din, dout]` for
+    /// quantized projections, the tensor shape otherwise.
+    pub fn shape_of(&self, name: &str) -> Option<Vec<usize>> {
+        if let Some(qm) = self.q.get(name) {
+            return Some(vec![qm.din, qm.dout]);
+        }
+        self.base.get(name).map(|t| t.shape().to_vec())
+    }
+
+    pub fn quantized_names(&self) -> impl Iterator<Item = &str> {
+        self.q.keys().map(|s| s.as_str())
+    }
+
+    /// Payload bytes of the store (int8 codes + scales + f32 remainder) —
+    /// the memory win `bench linalg` reports against the f32 store.
+    pub fn bytes(&self) -> usize {
+        self.q.values().map(|qm| qm.bytes()).sum::<usize>() + self.base.param_count() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qgemm::dequant;
+
+    #[test]
+    fn is_q8_param_selects_projections_only() {
+        for n in [
+            "blocks.0.attn.wq",
+            "blocks.3.attn.wk",
+            "blocks.1.attn.wv",
+            "blocks.5.attn.wo",
+            "blocks.2.mlp.w1",
+            "blocks.0.mlp.w2",
+            // block_param_spec's unprefixed forms
+            "attn.wq",
+            "mlp.w2",
+        ] {
+            assert!(is_q8_param(n), "{n}");
+        }
+        for n in [
+            "blocks.0.attn.bq",
+            "blocks.0.mlp.b1",
+            "blocks.0.ln1.g",
+            "embed.w",
+            "embed.pos",
+            "head.w",
+            "head.ln.g",
+        ] {
+            assert!(!is_q8_param(n), "{n}");
+        }
+    }
+
+    #[test]
+    fn from_store_partitions_params() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let w = WeightStore::init(cfg, 1);
+        let qs = QuantStore::from_store(cfg, &w).unwrap();
+        assert_eq!(qs.quantized_names().count(), 6 * cfg.layers);
+        // Base lacks the projections, keeps everything else.
+        assert!(qs.base().get("blocks.0.attn.wq").is_none());
+        assert!(qs.base().get("blocks.0.attn.bq").is_some());
+        assert!(qs.base().get("embed.w").is_some());
+        assert!(qs.base().get("head.w").is_some());
+        // Shapes survive.
+        assert_eq!(qs.shape_of("blocks.0.attn.wq").unwrap(), vec![cfg.d, cfg.d]);
+        assert_eq!(qs.shape_of("blocks.0.mlp.w1").unwrap(), vec![cfg.d, cfg.mlp]);
+        assert_eq!(
+            qs.shape_of("embed.pos").unwrap(),
+            w.get("embed.pos").unwrap().shape().to_vec()
+        );
+        // Int8 payload is meaningfully smaller than f32.
+        assert!(qs.bytes() < w.param_count() * 4);
+    }
+
+    #[test]
+    fn quantized_payload_reconstructs() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let w = WeightStore::init(cfg, 2);
+        let qs = QuantStore::from_store(cfg, &w).unwrap();
+        let qm = qs.expect_q("blocks.0.mlp.w2").unwrap();
+        let dq = dequant(qm);
+        let orig = w.get("blocks.0.mlp.w2").unwrap().data();
+        for (a, b) in dq.iter().zip(orig) {
+            // Round-trip within half a step of the channel scale; scales
+            // are bounded by the column max.
+            assert!((a - b).abs() <= 0.5 * qm.scales.iter().fold(0.0f32, |m, &s| m.max(s)) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn from_store_rejects_empty() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let w = WeightStore::new();
+        assert!(QuantStore::from_store(cfg, &w).is_err());
+    }
+}

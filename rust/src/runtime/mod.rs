@@ -159,6 +159,11 @@ pub enum Input<'a> {
     F32(&'a Tensor),
     I32(&'a [i32], Vec<usize>),
     Scalar(f32),
+    /// An int8 weight-quantized matrix (per-output-channel scales), consumed
+    /// only by the `_w8` fused forward/decode artifacts in parameter slots
+    /// whose `param_spec` name is a block GEMM projection. Native backend
+    /// only — the PJRT path never sees `_w8` names.
+    Q8 { data: &'a [i8], scales: &'a [f32], din: usize, dout: usize },
 }
 
 #[cfg(test)]
@@ -173,6 +178,9 @@ mod tests {
         assert!(rt.has_artifact("embed_vit_t_b16"));
         assert!(rt.has_artifact("train_gpt_s"));
         assert!(rt.has_artifact("dec_gpt_s_q32_o512_b2"));
+        // Int8 weight-quantized serving variants of the fused paths.
+        assert!(rt.has_artifact("fwd_gpt_s_q32_o512_b4_w8"));
+        assert!(rt.has_artifact("dec_gpt_s_q32_o512_b2_w8"));
         assert!(!rt.has_artifact("definitely_not_an_artifact"));
         assert_eq!(rt.exec_count(), 0);
         // No manifest → shapes are synthesized per request; exact-size

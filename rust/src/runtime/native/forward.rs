@@ -11,6 +11,8 @@ use anyhow::{bail, Result};
 
 use super::In;
 use crate::linalg::gemm::{dot_f32, matmul_f32};
+use crate::linalg::qgemm::matmul_q8_raw;
+use crate::model::is_q8_param;
 use crate::model::{ModelConfig, ModelKind};
 use crate::tensor::Tensor;
 use crate::util::threads;
@@ -72,6 +74,55 @@ pub(crate) fn linear(
     }
     matmul_f32(x, w, &mut out, rows, din, dout);
     out
+}
+
+/// A block GEMM projection weight view: full-precision f32, or the int8
+/// weight-quantized form (per-output-channel scales, channel-major codes)
+/// the `_w8` fused artifacts carry. Everything outside the six per-block
+/// projections stays f32 — see `model::quant`.
+#[derive(Clone, Copy)]
+pub(crate) enum WMat<'a> {
+    F32(&'a [f32]),
+    Q8 { data: &'a [i8], scales: &'a [f32], din: usize, dout: usize },
+}
+
+impl<'a> WMat<'a> {
+    /// The f32 view. Panics on a quantized weight — callers that require
+    /// f32 (the train path, the capture/calibration artifacts) never see
+    /// `_w8` inputs.
+    pub(crate) fn f32(&self) -> &'a [f32] {
+        match self {
+            WMat::F32(w) => w,
+            WMat::Q8 { .. } => panic!("f32 view of an int8-quantized weight"),
+        }
+    }
+}
+
+/// [`linear`] over a [`WMat`]: the f32 GEMM, or the int8 kernel with its
+/// f32 dequant epilogue — same `y = x · W (+ b)` contract either way.
+pub(crate) fn linear_w(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    w: &WMat<'_>,
+    dout: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    match w {
+        WMat::F32(wf) => linear(x, rows, din, wf, dout, bias),
+        WMat::Q8 { data, scales, din: d, dout: n } => {
+            debug_assert_eq!((*d, *n), (din, dout));
+            let mut out = vec![0.0f32; rows * dout];
+            if let Some(b) = bias {
+                debug_assert_eq!(b.len(), dout);
+                for r in 0..rows {
+                    out[r * dout..(r + 1) * dout].copy_from_slice(b);
+                }
+            }
+            matmul_q8_raw(x, data, scales, din, dout, &mut out, rows);
+            out
+        }
+    }
 }
 
 /// Row-wise softmax in place.
@@ -207,23 +258,25 @@ pub(crate) fn attention_cached(
     att
 }
 
-/// Per-block parameter views in `block_param_spec` order.
+/// Per-block parameter views in `block_param_spec` order. The six GEMM
+/// projections are [`WMat`]s — f32 everywhere except the `_w8` fused
+/// serving artifacts, where they arrive int8-quantized.
 pub(crate) struct BlockParams<'a> {
     pub ln1g: &'a [f32],
     pub ln1b: &'a [f32],
-    pub wq: &'a [f32],
+    pub wq: WMat<'a>,
     pub bq: &'a [f32],
-    pub wk: &'a [f32],
+    pub wk: WMat<'a>,
     pub bk: &'a [f32],
-    pub wv: &'a [f32],
+    pub wv: WMat<'a>,
     pub bv: &'a [f32],
-    pub wo: &'a [f32],
+    pub wo: WMat<'a>,
     pub bo: &'a [f32],
     pub ln2g: &'a [f32],
     pub ln2b: &'a [f32],
-    pub w1: &'a [f32],
+    pub w1: WMat<'a>,
     pub b1: &'a [f32],
-    pub w2: &'a [f32],
+    pub w2: WMat<'a>,
     pub b2: &'a [f32],
 }
 
@@ -234,30 +287,65 @@ impl<'a> BlockParams<'a> {
         BlockParams {
             ln1g: s[0],
             ln1b: s[1],
-            wq: s[2],
+            wq: WMat::F32(s[2]),
             bq: s[3],
-            wk: s[4],
+            wk: WMat::F32(s[4]),
             bk: s[5],
-            wv: s[6],
+            wv: WMat::F32(s[6]),
             bv: s[7],
-            wo: s[8],
+            wo: WMat::F32(s[8]),
             bo: s[9],
             ln2g: s[10],
             ln2b: s[11],
-            w1: s[12],
+            w1: WMat::F32(s[12]),
             b1: s[13],
-            w2: s[14],
+            w2: WMat::F32(s[14]),
             b2: s[15],
         }
     }
 
     pub(crate) fn read(cfg: &ModelConfig, dqk: usize, o: usize, inp: &mut In<'_, 'a>) -> Result<Self> {
+        Self::read_w(cfg, dqk, o, false, inp)
+    }
+
+    /// [`BlockParams::read`] with an int8 flag: when `w8` is set the six
+    /// GEMM projections are consumed as [`crate::runtime::Input::Q8`]
+    /// matrices (shape-checked against the spec); everything else stays f32.
+    pub(crate) fn read_w(
+        cfg: &ModelConfig,
+        dqk: usize,
+        o: usize,
+        w8: bool,
+        inp: &mut In<'_, 'a>,
+    ) -> Result<Self> {
         let spec = cfg.block_param_spec(dqk, o);
-        let mut slices: Vec<&'a [f32]> = Vec::with_capacity(16);
+        let mut mats: Vec<WMat<'a>> = Vec::with_capacity(16);
         for (name, shape) in &spec {
-            slices.push(inp.slice(shape.iter().product(), name)?);
+            if w8 && is_q8_param(name) {
+                let (data, scales) = inp.q8(shape[0], shape[1], name)?;
+                mats.push(WMat::Q8 { data, scales, din: shape[0], dout: shape[1] });
+            } else {
+                mats.push(WMat::F32(inp.slice(shape.iter().product(), name)?));
+            }
         }
-        Ok(Self::from_slices(&slices))
+        Ok(BlockParams {
+            ln1g: mats[0].f32(),
+            ln1b: mats[1].f32(),
+            wq: mats[2],
+            bq: mats[3].f32(),
+            wk: mats[4],
+            bk: mats[5].f32(),
+            wv: mats[6],
+            bv: mats[7].f32(),
+            wo: mats[8],
+            bo: mats[9].f32(),
+            ln2g: mats[10].f32(),
+            ln2b: mats[11].f32(),
+            w1: mats[12],
+            b1: mats[13].f32(),
+            w2: mats[14],
+            b2: mats[15].f32(),
+        })
     }
 }
 
@@ -289,9 +377,9 @@ pub(crate) fn block_one(
     let scale = 1.0 / (dh as f32).sqrt();
 
     let xn = layernorm(x, n, d, p.ln1g, p.ln1b);
-    let qf = linear(&xn, n, d, p.wq, h * dqk, Some(p.bq));
-    let kf = linear(&xn, n, d, p.wk, h * dqk, Some(p.bk));
-    let vf = linear(&xn, n, d, p.wv, h * dh, Some(p.bv));
+    let qf = linear_w(&xn, n, d, &p.wq, h * dqk, Some(p.bq));
+    let kf = linear_w(&xn, n, d, &p.wk, h * dqk, Some(p.bk));
+    let vf = linear_w(&xn, n, d, &p.wv, h * dh, Some(p.bv));
 
     let mut merged = vec![0.0f32; n * h * dh];
     let mut qcap = if capture { Some(vec![0.0f32; h * n * dqk]) } else { None };
@@ -309,15 +397,15 @@ pub(crate) fn block_one(
             kc[head * n * dqk..(head + 1) * n * dqk].copy_from_slice(&kh);
         }
     }
-    let attn_out = linear(&merged, n, h * dh, p.wo, d, Some(p.bo));
+    let attn_out = linear_w(&merged, n, h * dh, &p.wo, d, Some(p.bo));
     let y: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
 
     let yn = layernorm(&y, n, d, p.ln2g, p.ln2b);
-    let mut hidden = linear(&yn, n, d, p.w1, o, Some(p.b1));
+    let mut hidden = linear_w(&yn, n, d, &p.w1, o, Some(p.b1));
     for v in hidden.iter_mut() {
         *v = gelu(*v);
     }
-    let mlp_out = linear(&hidden, n, o, p.w2, d, Some(p.b2));
+    let mlp_out = linear_w(&hidden, n, o, &p.w2, d, Some(p.b2));
     let z: Vec<f32> = y.iter().zip(&mlp_out).map(|(a, b)| a + b).collect();
     BlockOut { y: z, hidden: capture.then_some(hidden), q: qcap, k: kcap }
 }
@@ -581,10 +669,22 @@ impl<'a> ModelParams<'a> {
         o: usize,
         inp: &mut In<'_, 'a>,
     ) -> Result<Self> {
+        Self::read_at_w(cfg, dqk, o, false, inp)
+    }
+
+    /// [`ModelParams::read_at`] with the int8 flag of the `_w8` artifacts:
+    /// block GEMM projections arrive quantized, everything else f32.
+    pub(crate) fn read_at_w(
+        cfg: &ModelConfig,
+        dqk: usize,
+        o: usize,
+        w8: bool,
+        inp: &mut In<'_, 'a>,
+    ) -> Result<Self> {
         let embed = EmbedParams::read(cfg, inp)?;
         let mut blocks = Vec::with_capacity(cfg.layers);
         for _ in 0..cfg.layers {
-            blocks.push(BlockParams::read(cfg, dqk, o, inp)?);
+            blocks.push(BlockParams::read_w(cfg, dqk, o, w8, inp)?);
         }
         let out_dim = match cfg.kind {
             ModelKind::Vit => cfg.classes,
@@ -764,6 +864,7 @@ pub(crate) fn run_forward(
     dqk: usize,
     o: usize,
     b: usize,
+    w8: bool,
     inp: &mut In<'_, '_>,
 ) -> Result<Vec<Tensor>> {
     let n = cfg.n_ctx;
@@ -771,7 +872,7 @@ pub(crate) fn run_forward(
         ModelKind::Vit => {
             let tokens = inp.tensor()?;
             check_slab(tokens, &[b, cfg.patches, cfg.patch_dim], "fwd tokens")?;
-            let p = ModelParams::read_at(cfg, dqk, o, inp)?;
+            let p = ModelParams::read_at_w(cfg, dqk, o, w8, inp)?;
             let per = cfg.patches * cfg.patch_dim;
             let rows: Vec<Result<Vec<f32>>> = threads::parallel_map(b, |e| {
                 forward_example(
@@ -793,7 +894,7 @@ pub(crate) fn run_forward(
             if ids.len() != b * n {
                 bail!("fwd ids: {} values, expected {}", ids.len(), b * n);
             }
-            let p = ModelParams::read_at(cfg, dqk, o, inp)?;
+            let p = ModelParams::read_at_w(cfg, dqk, o, w8, inp)?;
             let rows: Vec<Result<Vec<f32>>> = threads::parallel_map(b, |e| {
                 forward_example(cfg, dqk, o, &p, ExampleInput::Gpt(&ids[e * n..(e + 1) * n]))
             });
@@ -859,9 +960,9 @@ pub(crate) fn decode_example(
     let mut vnew = vec![0.0f32; cfg.layers * h * m * dh];
     for (l, bp) in p.blocks.iter().enumerate() {
         let xn = layernorm(&x, m, d, bp.ln1g, bp.ln1b);
-        let qf = linear(&xn, m, d, bp.wq, h * dqk, Some(bp.bq));
-        let kf = linear(&xn, m, d, bp.wk, h * dqk, Some(bp.bk));
-        let vf = linear(&xn, m, d, bp.wv, h * dh, Some(bp.bv));
+        let qf = linear_w(&xn, m, d, &bp.wq, h * dqk, Some(bp.bq));
+        let kf = linear_w(&xn, m, d, &bp.wk, h * dqk, Some(bp.bk));
+        let vf = linear_w(&xn, m, d, &bp.wv, h * dh, Some(bp.bv));
         let mut merged = vec![0.0f32; m * h * dh];
         for head in 0..h {
             let qh = gather_cols(&qf, m, h * dqk, head * dqk, dqk);
@@ -874,14 +975,14 @@ pub(crate) fn decode_example(
             knew[(l * h + head) * m * dqk..(l * h + head + 1) * m * dqk].copy_from_slice(&kh);
             vnew[(l * h + head) * m * dh..(l * h + head + 1) * m * dh].copy_from_slice(&vh);
         }
-        let attn_out = linear(&merged, m, h * dh, bp.wo, d, Some(bp.bo));
+        let attn_out = linear_w(&merged, m, h * dh, &bp.wo, d, Some(bp.bo));
         let y: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
         let yn = layernorm(&y, m, d, bp.ln2g, bp.ln2b);
-        let mut hidden = linear(&yn, m, d, bp.w1, o, Some(bp.b1));
+        let mut hidden = linear_w(&yn, m, d, &bp.w1, o, Some(bp.b1));
         for v in hidden.iter_mut() {
             *v = gelu(*v);
         }
-        let mlp_out = linear(&hidden, m, o, bp.w2, d, Some(bp.b2));
+        let mlp_out = linear_w(&hidden, m, o, &bp.w2, d, Some(bp.b2));
         x = y.iter().zip(&mlp_out).map(|(a, b)| a + b).collect();
     }
     let xn = layernorm(&x, m, d, p.head_ln_g, p.head_ln_b);
@@ -905,6 +1006,7 @@ pub(crate) fn run_decode(
     dqk: usize,
     o: usize,
     b: usize,
+    w8: bool,
     inp: &mut In<'_, '_>,
 ) -> Result<Vec<Tensor>> {
     if cfg.kind != ModelKind::Gpt {
@@ -925,7 +1027,7 @@ pub(crate) fn run_decode(
     check_slab(kc, &[b, layers, h, n, dqk], "dec kcache")?;
     let vc = inp.tensor()?;
     check_slab(vc, &[b, layers, h, n, dh], "dec vcache")?;
-    let p = ModelParams::read_at(cfg, dqk, o, inp)?;
+    let p = ModelParams::read_at_w(cfg, dqk, o, w8, inp)?;
     let clen_k = layers * h * n * dqk;
     let clen_v = layers * h * n * dh;
     let outs: Vec<Result<(Vec<f32>, Vec<f32>, Vec<f32>)>> = threads::parallel_map(b, |e| {
@@ -1134,9 +1236,9 @@ pub(crate) fn decode_example_paged(
 
     for (l, bp) in p.blocks.iter().enumerate() {
         let xn = layernorm(&x, m, d, bp.ln1g, bp.ln1b);
-        let qf = linear(&xn, m, d, bp.wq, h * dqk, Some(bp.bq));
-        let kf = linear(&xn, m, d, bp.wk, h * dqk, Some(bp.bk));
-        let vf = linear(&xn, m, d, bp.wv, h * dh, Some(bp.bv));
+        let qf = linear_w(&xn, m, d, &bp.wq, h * dqk, Some(bp.bq));
+        let kf = linear_w(&xn, m, d, &bp.wk, h * dqk, Some(bp.bk));
+        let vf = linear_w(&xn, m, d, &bp.wv, h * dh, Some(bp.bv));
         let mut merged = vec![0.0f32; m * h * dh];
         for head in 0..h {
             let qh = gather_cols(&qf, m, h * dqk, head * dqk, dqk);
@@ -1158,14 +1260,14 @@ pub(crate) fn decode_example_paged(
             let att = attention_paged(&qh, kv, lh, past, m, dqk, dh, scale);
             scatter_cols(&mut merged, &att, m, h * dh, head * dh, dh);
         }
-        let attn_out = linear(&merged, m, h * dh, bp.wo, d, Some(bp.bo));
+        let attn_out = linear_w(&merged, m, h * dh, &bp.wo, d, Some(bp.bo));
         let y: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
         let yn = layernorm(&y, m, d, bp.ln2g, bp.ln2b);
-        let mut hidden = linear(&yn, m, d, bp.w1, o, Some(bp.b1));
+        let mut hidden = linear_w(&yn, m, d, &bp.w1, o, Some(bp.b1));
         for v in hidden.iter_mut() {
             *v = gelu(*v);
         }
-        let mlp_out = linear(&hidden, m, o, bp.w2, d, Some(bp.b2));
+        let mlp_out = linear_w(&hidden, m, o, &bp.w2, d, Some(bp.b2));
         x = y.iter().zip(&mlp_out).map(|(a, b)| a + b).collect();
     }
     let xn = layernorm(&x, m, d, p.head_ln_g, p.head_ln_b);
@@ -1184,6 +1286,7 @@ pub(crate) fn run_decode_paged(
     dqk: usize,
     o: usize,
     b: usize,
+    w8: bool,
     ids: &[i32],
     past: &[i32],
     fresh: &[i32],
@@ -1204,7 +1307,7 @@ pub(crate) fn run_decode_paged(
     if seqs.len() > b {
         bail!("dec paged: {} block tables for batch {b}", seqs.len());
     }
-    let p = ModelParams::read_at(cfg, dqk, o, inp)?;
+    let p = ModelParams::read_at_w(cfg, dqk, o, w8, inp)?;
     let outs: Vec<Result<Vec<f32>>> = threads::parallel_map(seqs.len(), |e| {
         let (pe, fe) = (past[e], fresh[e]);
         if pe < 0 || fe < 1 || fe as usize > m {

@@ -31,10 +31,13 @@ pub(crate) enum Op {
     Lnf { cfg: &'static ModelConfig, b: usize },
     Block { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize },
     BlockCap { cfg: &'static ModelConfig, b: usize },
-    /// Fused full forward at pruned dims (the serving fast path).
-    Forward { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize },
-    /// Incremental KV-cached decode at pruned dims (autoregressive serving).
-    Decode { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize },
+    /// Fused full forward at pruned dims (the serving fast path). `w8`
+    /// (name suffix `_w8`) selects the int8 weight-quantized variant: the
+    /// six block GEMM projections arrive as [`Input::Q8`] instead of f32.
+    Forward { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize, w8: bool },
+    /// Incremental KV-cached decode at pruned dims (autoregressive serving);
+    /// `w8` as in [`Op::Forward`].
+    Decode { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize, w8: bool },
     MlpOnly { cfg: &'static ModelConfig, o: usize, b: usize },
     EvLoss { cfg: &'static ModelConfig },
     Train { cfg: &'static ModelConfig },
@@ -58,16 +61,24 @@ pub(crate) fn parse(name: &str) -> Option<Op> {
         return ModelConfig::by_name(m).map(|cfg| Op::Block { cfg, dqk, o, b });
     }
     if let Some(rest) = name.strip_prefix("fwd_") {
+        let (rest, w8) = match rest.strip_suffix("_w8") {
+            Some(r) => (r, true),
+            None => (rest, false),
+        };
         let (rest, b) = tail_num(rest, "_b")?;
         let (rest, o) = tail_num(rest, "_o")?;
         let (m, dqk) = tail_num(rest, "_q")?;
-        return ModelConfig::by_name(m).map(|cfg| Op::Forward { cfg, dqk, o, b });
+        return ModelConfig::by_name(m).map(|cfg| Op::Forward { cfg, dqk, o, b, w8 });
     }
     if let Some(rest) = name.strip_prefix("dec_") {
+        let (rest, w8) = match rest.strip_suffix("_w8") {
+            Some(r) => (r, true),
+            None => (rest, false),
+        };
         let (rest, b) = tail_num(rest, "_b")?;
         let (rest, o) = tail_num(rest, "_o")?;
         let (m, dqk) = tail_num(rest, "_q")?;
-        return ModelConfig::by_name(m).map(|cfg| Op::Decode { cfg, dqk, o, b });
+        return ModelConfig::by_name(m).map(|cfg| Op::Decode { cfg, dqk, o, b, w8 });
     }
     if let Some(rest) = name.strip_prefix("mlponly_") {
         let (rest, b) = tail_num(rest, "_b")?;
@@ -115,10 +126,11 @@ pub(crate) fn execute_decode_paged(
     params: &[Input<'_>],
 ) -> Result<Tensor> {
     match parse(name) {
-        Some(Op::Decode { cfg, dqk, o, b }) => {
+        Some(Op::Decode { cfg, dqk, o, b, w8 }) => {
             let mut inp = In::new(params);
-            let mut out = forward::run_decode_paged(cfg, dqk, o, b, ids, past, fresh, seqs, &mut inp)
-                .with_context(|| format!("interpreting '{name}' (paged)"))?;
+            let mut out =
+                forward::run_decode_paged(cfg, dqk, o, b, w8, ids, past, fresh, seqs, &mut inp)
+                    .with_context(|| format!("interpreting '{name}' (paged)"))?;
             Ok(out.remove(0))
         }
         _ => bail!("'{name}' is not a dec_* artifact (paged decode)"),
@@ -140,8 +152,8 @@ pub fn execute(name: &str, inputs: &[Input<'_>]) -> Result<Vec<Tensor>> {
         Op::BlockCap { cfg, b } => {
             forward::run_block(cfg, cfg.dh(), cfg.mlp, b, true, &mut inp)
         }
-        Op::Forward { cfg, dqk, o, b } => forward::run_forward(cfg, dqk, o, b, &mut inp),
-        Op::Decode { cfg, dqk, o, b } => forward::run_decode(cfg, dqk, o, b, &mut inp),
+        Op::Forward { cfg, dqk, o, b, w8 } => forward::run_forward(cfg, dqk, o, b, w8, &mut inp),
+        Op::Decode { cfg, dqk, o, b, w8 } => forward::run_decode(cfg, dqk, o, b, w8, &mut inp),
         Op::MlpOnly { cfg, o, b } => forward::run_mlponly(cfg, o, b, &mut inp),
         Op::EvLoss { cfg } => forward::run_evloss(cfg, &mut inp),
         Op::Train { cfg } => train::run_train(cfg, &mut inp),
@@ -182,6 +194,35 @@ impl<'i, 'a> In<'i, 'a> {
             bail!("parameter '{what}': {} values, expected {expect_len}", t.len());
         }
         Ok(t.data())
+    }
+
+    /// Next int8 weight-quantized matrix, validated against the expected
+    /// `[din, dout]` shape of the named projection.
+    pub(crate) fn q8(
+        &mut self,
+        din: usize,
+        dout: usize,
+        what: &str,
+    ) -> Result<(&'a [i8], &'a [f32])> {
+        let i = self.pos;
+        self.pos += 1;
+        match self.items.get(i) {
+            Some(Input::Q8 { data, scales, din: d, dout: n }) => {
+                if (*d, *n) != (din, dout) {
+                    bail!("parameter '{what}': q8 shape [{d}, {n}], expected [{din}, {dout}]");
+                }
+                if data.len() != din * dout || scales.len() != dout {
+                    bail!(
+                        "parameter '{what}': {} codes / {} scales for [{din}, {dout}]",
+                        data.len(),
+                        scales.len()
+                    );
+                }
+                Ok((*data, *scales))
+            }
+            Some(_) => bail!("input {i}: expected an int8 quantized matrix ('{what}')"),
+            None => bail!("input {i}: missing (have {})", self.items.len()),
+        }
     }
 
     pub(crate) fn ints(&mut self) -> Result<&'a [i32]> {
@@ -230,16 +271,31 @@ mod tests {
         }
         assert!(matches!(parse("mlponly_vit_t_o384_b16"), Some(Op::MlpOnly { o: 384, b: 16, .. })));
         match parse("fwd_vit_b_q16_o384_b8") {
-            Some(Op::Forward { cfg, dqk, o, b }) => {
+            Some(Op::Forward { cfg, dqk, o, b, w8 }) => {
                 assert_eq!(cfg.name, "vit_b");
-                assert_eq!((dqk, o, b), (16, 384, 8));
+                assert_eq!((dqk, o, b, w8), (16, 384, 8, false));
             }
             other => panic!("bad parse: {other:?}"),
         }
         match parse("dec_gpt_s_q16_o256_b4") {
-            Some(Op::Decode { cfg, dqk, o, b }) => {
+            Some(Op::Decode { cfg, dqk, o, b, w8 }) => {
                 assert_eq!(cfg.name, "gpt_s");
-                assert_eq!((dqk, o, b), (16, 256, 4));
+                assert_eq!((dqk, o, b, w8), (16, 256, 4, false));
+            }
+            other => panic!("bad parse: {other:?}"),
+        }
+        // `_w8` marks the int8 weight-quantized fused variants.
+        match parse("fwd_gpt_s_q32_o512_b4_w8") {
+            Some(Op::Forward { cfg, dqk, o, b, w8 }) => {
+                assert_eq!(cfg.name, "gpt_s");
+                assert_eq!((dqk, o, b, w8), (32, 512, 4, true));
+            }
+            other => panic!("bad parse: {other:?}"),
+        }
+        match parse("dec_gpt_s_q16_o256_b2_w8") {
+            Some(Op::Decode { cfg, dqk, o, b, w8 }) => {
+                assert_eq!(cfg.name, "gpt_s");
+                assert_eq!((dqk, o, b, w8), (16, 256, 2, true));
             }
             other => panic!("bad parse: {other:?}"),
         }
@@ -255,5 +311,8 @@ mod tests {
         assert!(parse("embed_unknown_b16").is_none());
         assert!(parse("bogus").is_none());
         assert!(!supports(""));
+        // `_w8` is only meaningful on fwd_/dec_; elsewhere it breaks parse.
+        assert!(parse("block_vit_t_q32_o384_b16_w8").is_none());
+        assert!(parse("fwd_gpt_s_q32_o512_b4_w16").is_none());
     }
 }

@@ -96,9 +96,9 @@ fn block_forward_tape(
     let scale = 1.0 / (dh as f32).sqrt();
 
     let xn = layernorm(&x, n, d, p.ln1g, p.ln1b);
-    let qf = linear(&xn, n, d, p.wq, h * dh, Some(p.bq));
-    let kf = linear(&xn, n, d, p.wk, h * dh, Some(p.bk));
-    let vf = linear(&xn, n, d, p.wv, h * dh, Some(p.bv));
+    let qf = linear(&xn, n, d, p.wq.f32(), h * dh, Some(p.bq));
+    let kf = linear(&xn, n, d, p.wk.f32(), h * dh, Some(p.bk));
+    let vf = linear(&xn, n, d, p.wv.f32(), h * dh, Some(p.bv));
     let mut merged = vec![0.0f32; n * h * dh];
     let mut probs_all = vec![0.0f32; h * n * n];
     for head in 0..h {
@@ -109,13 +109,13 @@ fn block_forward_tape(
         scatter_cols(&mut merged, &att, n, h * dh, head * dh, dh);
         probs_all[head * n * n..(head + 1) * n * n].copy_from_slice(&probs);
     }
-    let attn_out = linear(&merged, n, h * dh, p.wo, d, Some(p.bo));
+    let attn_out = linear(&merged, n, h * dh, p.wo.f32(), d, Some(p.bo));
     let y: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
 
     let yn = layernorm(&y, n, d, p.ln2g, p.ln2b);
-    let hpre = linear(&yn, n, d, p.w1, o, Some(p.b1));
+    let hpre = linear(&yn, n, d, p.w1.f32(), o, Some(p.b1));
     let hidden: Vec<f32> = hpre.iter().map(|&v| gelu(v)).collect();
-    let mlp_out = linear(&hidden, n, o, p.w2, d, Some(p.b2));
+    let mlp_out = linear(&hidden, n, o, p.w2.f32(), d, Some(p.b2));
     let z: Vec<f32> = y.iter().zip(&mlp_out).map(|(a, b)| a + b).collect();
     let tape =
         BlockTape { x, xn, qf, kf, vf, probs: probs_all, merged, y, yn, hpre, hidden };
@@ -244,13 +244,13 @@ fn block_backward(
 
     // ---- MLP: z = y + gelu(yn·W1 + b1)·W2 + b2 ----
     let mut d_hidden = vec![0.0f32; n * o];
-    matmul_nt_acc(dz, p.w2, &mut d_hidden, n, d, o);
+    matmul_nt_acc(dz, p.w2.f32(), &mut d_hidden, n, d, o);
     matmul_tn_f32(&tape.hidden, dz, &mut grads[idx.block(l, W2)], n, o, d);
     colsum_add(dz, n, d, &mut grads[idx.block(l, B2)]);
     let d_hpre: Vec<f32> =
         d_hidden.iter().zip(&tape.hpre).map(|(g, &x)| g * gelu_grad(x)).collect();
     let mut d_yn = vec![0.0f32; n * d];
-    matmul_nt_acc(&d_hpre, p.w1, &mut d_yn, n, o, d);
+    matmul_nt_acc(&d_hpre, p.w1.f32(), &mut d_yn, n, o, d);
     matmul_tn_f32(&tape.yn, &d_hpre, &mut grads[idx.block(l, W1)], n, d, o);
     colsum_add(&d_hpre, n, o, &mut grads[idx.block(l, B1)]);
     let (d_y_ln, dg2, db2) = ln_backward(&tape.y, p.ln2g, &d_yn, n, d);
@@ -261,7 +261,7 @@ fn block_backward(
 
     // ---- attention: y = x + merged·Wo + bo ----
     let mut d_merged = vec![0.0f32; n * h * dh];
-    matmul_nt_acc(&dy, p.wo, &mut d_merged, n, d, h * dh);
+    matmul_nt_acc(&dy, p.wo.f32(), &mut d_merged, n, d, h * dh);
     matmul_tn_f32(&tape.merged, &dy, &mut grads[idx.block(l, WO)], n, h * dh, d);
     colsum_add(&dy, n, d, &mut grads[idx.block(l, BO)]);
 
@@ -281,13 +281,13 @@ fn block_backward(
     }
 
     let mut dxn = vec![0.0f32; n * d];
-    matmul_nt_acc(&dqf, p.wq, &mut dxn, n, h * dh, d);
+    matmul_nt_acc(&dqf, p.wq.f32(), &mut dxn, n, h * dh, d);
     matmul_tn_f32(&tape.xn, &dqf, &mut grads[idx.block(l, WQ)], n, d, h * dh);
     colsum_add(&dqf, n, h * dh, &mut grads[idx.block(l, BQ)]);
-    matmul_nt_acc(&dkf, p.wk, &mut dxn, n, h * dh, d);
+    matmul_nt_acc(&dkf, p.wk.f32(), &mut dxn, n, h * dh, d);
     matmul_tn_f32(&tape.xn, &dkf, &mut grads[idx.block(l, WK)], n, d, h * dh);
     colsum_add(&dkf, n, h * dh, &mut grads[idx.block(l, BK)]);
-    matmul_nt_acc(&dvf, p.wv, &mut dxn, n, h * dh, d);
+    matmul_nt_acc(&dvf, p.wv.f32(), &mut dxn, n, h * dh, d);
     matmul_tn_f32(&tape.xn, &dvf, &mut grads[idx.block(l, WV)], n, d, h * dh);
     colsum_add(&dvf, n, h * dh, &mut grads[idx.block(l, BV)]);
 

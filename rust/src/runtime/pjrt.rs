@@ -131,6 +131,11 @@ fn to_literal(input: &Input<'_>, spec: &IoSpec, artifact: &str) -> Result<xla::L
             }
             Ok(xla::Literal::from(*v))
         }
+        Input::Q8 { .. } => {
+            // `_w8` artifact names never appear in an AOT manifest; int8
+            // weights are a native-interpreter feature.
+            bail!("{artifact}/{}: int8 weights are not supported by the PJRT backend", spec.name)
+        }
     }
 }
 

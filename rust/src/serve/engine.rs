@@ -39,7 +39,9 @@
 //! adapts `max_wait`, the auto-dispatch fill threshold (from the online
 //! [`CostEstimator`]), and — with `degrade` — the active plan rung of each
 //! member ([`Plans::set_active`]): dense under normal load, the
-//! pruned+compensated fallback under sustained pressure (see
+//! pruned+compensated fallback under sustained pressure, and — when an
+//! int8 rung is configured ([`FleetMember::with_quant_fallback`]) — the
+//! weight-quantized variant as the cheapest last resort (see
 //! `serve/controller.rs` for the hysteresis state machine).
 //!
 //! Accounting is per request: queueing delay (intended arrival → first
@@ -59,7 +61,7 @@
 use anyhow::{bail, Result};
 
 use crate::exec::Executor;
-use crate::model::WeightStore;
+use crate::model::{QuantStore, WeightStore};
 use crate::serve::controller::{ControllerOpts, Transition};
 use crate::serve::workload::{DispatchPolicy, Workload};
 
@@ -295,6 +297,17 @@ pub struct EngineStats {
     pub records: Vec<RequestRecord>,
 }
 
+/// A borrowed weight store of either precision, so plan ladders can mix
+/// f32 rungs with int8 weight-quantized rungs (the cheapest degrade
+/// target). Plan resolution picks the matching [`Executor`] builder per
+/// rung: [`Executor::forward_plan`]/[`Executor::decode_plan_opts`] for
+/// f32, the `_q8` twins for int8.
+#[derive(Clone, Copy)]
+pub enum StoreRef<'w> {
+    F32(&'w WeightStore),
+    Q8(&'w QuantStore),
+}
+
 /// One model + workload bound into a fleet run (see [`run_fleet`]).
 pub struct FleetMember<'x, 'rt, 'w, W: Workload> {
     pub exec: &'x Executor<'rt>,
@@ -307,8 +320,10 @@ pub struct FleetMember<'x, 'rt, 'w, W: Workload> {
     pub slo_p99_ms: f64,
     /// Degraded-variant weight stores, cheapest last: rung 1.. of the
     /// member's plan ladder (rung 0 is `weights`). Same model config,
-    /// different (pruned+compensated) folded weights.
-    pub fallbacks: Vec<&'w WeightStore>,
+    /// different folded weights — pruned+compensated f32 via
+    /// [`Self::with_fallback`], or int8 weight-quantized via
+    /// [`Self::with_quant_fallback`].
+    pub fallbacks: Vec<StoreRef<'w>>,
 }
 
 impl<'x, 'rt, 'w, W: Workload> FleetMember<'x, 'rt, 'w, W> {
@@ -329,7 +344,15 @@ impl<'x, 'rt, 'w, W: Workload> FleetMember<'x, 'rt, 'w, W> {
 
     /// Append a degraded-variant weight store (the controller's next rung).
     pub fn with_fallback(mut self, weights: &'w WeightStore) -> Self {
-        self.fallbacks.push(weights);
+        self.fallbacks.push(StoreRef::F32(weights));
+        self
+    }
+
+    /// Append an int8 weight-quantized rung (typically the cheapest,
+    /// appended last so the controller degrades to it only under the most
+    /// sustained pressure).
+    pub fn with_quant_fallback(mut self, quant: &'w QuantStore) -> Self {
+        self.fallbacks.push(StoreRef::Q8(quant));
         self
     }
 
@@ -350,8 +373,8 @@ impl<'x, 'rt, 'w, W: Workload> FleetMember<'x, 'rt, 'w, W> {
                 requests,
                 mk: Box::new(move |opts: &EngineOpts| {
                     let policy = opts.dispatch.resolve(exec.rt.prefers_fixed_shapes());
-                    let mut stores: Vec<&'e WeightStore> = Vec::with_capacity(1 + fallbacks.len());
-                    stores.push(weights);
+                    let mut stores: Vec<StoreRef<'e>> = Vec::with_capacity(1 + fallbacks.len());
+                    stores.push(StoreRef::F32(weights));
                     for &f in fallbacks.iter() {
                         stores.push(f);
                     }
@@ -451,7 +474,7 @@ pub(crate) struct Unit<'s> {
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn make_unit<'s, W: Workload>(
     exec: &Executor<'s>,
-    stores: &[&'s WeightStore],
+    stores: &[StoreRef<'s>],
     workload: &'s W,
     requests: usize,
     max_batch: usize,
@@ -478,9 +501,9 @@ pub(crate) fn make_unit<'s, W: Workload>(
     // per store; plans are shared (`Arc`) between the step closure, the
     // telemetry closure, and the engine (for controller rung switches).
     let mut pairs: Vec<PlanPair<'s, 's>> = Vec::with_capacity(stores.len());
-    for &w in stores {
-        pairs.push(match workload.decode() {
-            Some(mode) => PlanPair {
+    for &store in stores {
+        pairs.push(match (workload.decode(), store) {
+            (Some(mode), StoreRef::F32(w)) => PlanPair {
                 fwd: None,
                 dec: Some(exec.decode_plan_opts(
                     w,
@@ -488,7 +511,18 @@ pub(crate) fn make_unit<'s, W: Workload>(
                     kv_opts,
                 )?),
             },
-            None => PlanPair { fwd: Some(exec.forward_plan(w)?), dec: None },
+            (Some(mode), StoreRef::Q8(qs)) => PlanPair {
+                fwd: None,
+                dec: Some(exec.decode_plan_opts_q8(
+                    qs,
+                    mode.resolve(exec.rt.prefers_fixed_shapes()),
+                    kv_opts,
+                )?),
+            },
+            (None, StoreRef::F32(w)) => PlanPair { fwd: Some(exec.forward_plan(w)?), dec: None },
+            (None, StoreRef::Q8(qs)) => {
+                PlanPair { fwd: Some(exec.forward_plan_q8(qs)?), dec: None }
+            }
         });
     }
     let plans = Arc::new(Plans::ladder(pairs)?);
@@ -579,10 +613,35 @@ pub fn run_engine<W: Workload>(
     opts: &EngineOpts,
 ) -> Result<EngineStats> {
     opts.validate()?;
+    run_engine_on(exec, StoreRef::F32(w), workload, opts)
+}
+
+/// [`run_engine`] over an int8 weight-quantized store: every weight GEMM
+/// dispatches through the quantized `_w8` plan rung. Predictions track the
+/// f32 run to quantization tolerance (pinned by `tests/quant_equality`);
+/// batching, shedding, and accounting semantics are identical.
+#[cfg(not(pjrt_backend))]
+pub fn run_engine_q8<W: Workload>(
+    exec: &Executor<'_>,
+    qs: &QuantStore,
+    workload: &W,
+    opts: &EngineOpts,
+) -> Result<EngineStats> {
+    opts.validate()?;
+    run_engine_on(exec, StoreRef::Q8(qs), workload, opts)
+}
+
+#[cfg(not(pjrt_backend))]
+fn run_engine_on<W: Workload>(
+    exec: &Executor<'_>,
+    store: StoreRef<'_>,
+    workload: &W,
+    opts: &EngineOpts,
+) -> Result<EngineStats> {
     let policy = opts.dispatch.resolve(exec.rt.prefers_fixed_shapes());
     let unit = make_unit(
         exec,
-        &[w],
+        &[store],
         workload,
         opts.requests,
         opts.max_batch,
@@ -1142,6 +1201,24 @@ pub fn run_engine<W: Workload>(
     bail!(
         "the concurrent serving engine is unavailable in the pjrt_backend build \
          (PJRT executables are not shared across threads); use serve::measure"
+    )
+}
+
+/// Stub mirror of [`run_engine_q8`] for the gated build; int8 weights are
+/// additionally a native-interpreter feature, so there is nothing for PJRT
+/// to dispatch even single-threaded.
+#[cfg(pjrt_backend)]
+pub fn run_engine_q8<W: Workload>(
+    _exec: &Executor<'_>,
+    _qs: &QuantStore,
+    _workload: &W,
+    opts: &EngineOpts,
+) -> Result<EngineStats> {
+    opts.validate()?;
+    bail!(
+        "the concurrent serving engine is unavailable in the pjrt_backend build \
+         (PJRT executables are not shared across threads, and int8 weights are \
+         native-only); use serve::measure"
     )
 }
 

@@ -48,7 +48,8 @@ pub mod workload;
 
 pub use controller::{Action, Controller, ControllerOpts, CostEstimator, MemberCfg, Obs, Transition};
 pub use engine::{
-    run_engine, run_fleet, EngineOpts, EngineStats, ErasedMember, FleetMember, RequestRecord,
+    run_engine, run_engine_q8, run_fleet, EngineOpts, EngineStats, ErasedMember, FleetMember,
+    RequestRecord, StoreRef,
 };
 #[cfg(not(pjrt_backend))]
 pub use sim::{run_fleet_sim, SimCost};

@@ -30,19 +30,35 @@ cargo build --manifest-path "$MANIFEST" --release
 echo "==> cargo test -q"
 cargo test --manifest-path "$MANIFEST" -q
 
+# The kernel suites run twice: once under runtime dispatch (AVX2 where
+# the host has it) above, and once with CORP_SIMD=off forcing the
+# portable tile — the dispatch ladder promises bitwise-identical results
+# on both rungs, so the same tests must pass on each.
+echo "==> cargo test -q --lib linalg (CORP_SIMD=off, forced portable tile)"
+CORP_SIMD=off cargo test --manifest-path "$MANIFEST" -q --lib linalg
+
 echo "==> cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --manifest-path "$MANIFEST" --no-deps --quiet
 
 if [[ "${1:-}" != "--no-bench" ]]; then
+    # corp-bench-linalg/v2: every kernel cell times the full dispatch
+    # ladder (runtime-selected SIMD tile, forced-portable via
+    # CORP_SIMD=off, seed scalar baseline) and the quantized section
+    # benches the int8 gemm_q8 cell against f32 — so this one run covers
+    # the int8 row the quantized serving path rides on. A failed cell
+    # exits non-zero with its grid coordinates and leaves no stale
+    # BENCH_linalg.json behind.
     echo "==> bench linalg (CORP_BENCH_MODE=${CORP_BENCH_MODE:-fast})"
     cargo run --manifest-path "$MANIFEST" --release -- bench linalg --json --out BENCH_linalg.json
 
     # The smoke grid sweeps all three workloads (vision + text + gen, the
     # gen cells on kv, kv+chunked/shared-prefix, and prefill decode) and
-    # both dispatch policies — corp-bench-serve/v5 axes with the paged-KV
-    # telemetry columns plus the load-spike controller cell (controller
+    # both dispatch policies — corp-bench-serve/v6 axes with the paged-KV
+    # telemetry columns, the load-spike controller cell (controller
     # off vs on, measured cost tables through the deterministic
-    # simulator). A failed cell exits non-zero and leaves no stale
+    # simulator), and the compensated_int8 variant rows (the
+    # pruned+compensated store weight-quantized to int8, served through
+    # run_engine_q8). A failed cell exits non-zero and leaves no stale
     # BENCH_serve.json behind.
     echo "==> bench serve smoke (CORP_BENCH_MODE=smoke)"
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- bench serve --json --out BENCH_serve.json
@@ -65,6 +81,20 @@ if [[ "${1:-}" != "--no-bench" ]]; then
         serve --model vit_t --sparsity 0.5 --workload vision --requests 48 --rate 300 --spike 3 \
         --workers 1 --max-batch 8 --queue-cap 16 --exec-floor 0.01 \
         --controller --degrade --slo-p99-ms 500
+
+    # Int8 smoke: the quantized serving path end to end. First serve the
+    # int8 store directly (run_engine_q8 — per-channel scales with the
+    # compensation-folded dequant correction fitted from the calibration
+    # stats), then re-run the controller spike with --quantize appending
+    # the int8 store as the cheapest rung of the degrade ladder
+    # (dense -> pruned+compensated -> int8).
+    echo "==> serve CLI smoke (int8 direct + int8 degrade rung)"
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
+        serve --model vit_t --sparsity 0.5 --quantize --requests 32 --rate 0 --max-batch 8
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
+        serve --model vit_t --sparsity 0.5 --workload vision --requests 48 --rate 300 --spike 3 \
+        --workers 1 --max-batch 8 --queue-cap 16 --exec-floor 0.01 \
+        --controller --degrade --quantize --slo-p99-ms 500
 
     # Paged-KV smoke: same gen workload with prefills chunked to 8 tokens
     # and a 16-token shared prompt opening — exercises chunked prefill
