@@ -7,6 +7,7 @@ pub mod tables;
 pub mod nlp;
 pub mod dense;
 pub mod linalg;
+pub mod prune;
 pub mod serve;
 
 use std::collections::BTreeMap;

@@ -1,0 +1,267 @@
+//! `corp bench prune` — the criterion-zoo accuracy harness behind
+//! `BENCH_prune.json`.
+//!
+//! Sweeps the ranking-criterion zoo (`rank::Criterion::zoo()`) against the
+//! mode's sparsity grid, scoring each cell both compensated (CORP) and
+//! uncompensated (naive) so the table shows what closed-form compensation
+//! buys on top of every criterion. A second sweep exercises the global
+//! FLOPs-targeted allocator at mode-scaled budgets, recording the achieved
+//! FLOPs fraction (measured by `flops_layered` on the allocator's per-layer
+//! keep counts — the ±2% acceptance gate) next to the resulting top-1.
+//! Results print as a table and are optionally emitted as machine-readable
+//! JSON (schema `corp-bench-prune/v1`) so the numbers are tracked
+//! PR-over-PR.
+//!
+//! Like `bench linalg`/`bench serve`: a failed cell aborts the sweep with
+//! the cell's coordinates in the error, and any pre-existing `--out` file
+//! is removed up front so a crashed sweep can never leave a stale JSON
+//! that looks like fresh results.
+
+use anyhow::{Context, Result};
+
+use super::{large_model, num, obj, sparsity_grid};
+use crate::coordinator::Coordinator;
+use crate::model::{Scope, Sparsity};
+use crate::prune::{allocate_flops, Method, PruneOpts};
+use crate::rank::Criterion;
+use crate::util::bench::{bench_mode, BenchMode};
+use crate::util::json::Json;
+
+/// One (criterion, sparsity) cell: compensated vs uncompensated top-1 at
+/// the same kept set, plus the analytic cost of the uniform shape.
+struct GridRow {
+    criterion: &'static str,
+    s10: u8,
+    corp_top1: f64,
+    naive_top1: f64,
+    flops: usize,
+    flops_reduction_pct: f64,
+}
+
+impl GridRow {
+    fn comp_delta(&self) -> f64 {
+        self.corp_top1 - self.naive_top1
+    }
+
+    fn print(&self) {
+        println!(
+            "{:9} s={:.1} | corp {:6.2}% | naive {:6.2}% | Δcomp {:+6.2}pp | flops -{:.1}%",
+            self.criterion,
+            self.s10 as f64 / 10.0,
+            self.corp_top1,
+            self.naive_top1,
+            self.comp_delta(),
+            self.flops_reduction_pct
+        );
+    }
+
+    fn json(&self) -> Json {
+        obj(vec![
+            ("criterion", Json::Str(self.criterion.to_string())),
+            ("sparsity", num(self.s10 as f64 / 10.0)),
+            ("corp_top1", num(self.corp_top1)),
+            ("naive_top1", num(self.naive_top1)),
+            ("compensation_delta_pp", num(self.comp_delta())),
+            ("flops", num(self.flops as f64)),
+            ("flops_reduction_pct", num(self.flops_reduction_pct)),
+        ])
+    }
+}
+
+/// One allocator cell: criterion × budget → per-layer keep counts,
+/// achieved FLOPs fraction, and the compensated top-1 on those shapes.
+struct AllocRow {
+    criterion: &'static str,
+    budget_pct: f64,
+    achieved_pct: f64,
+    top1: f64,
+    mlp_keep: Vec<usize>,
+    qk_keep: Vec<usize>,
+}
+
+impl AllocRow {
+    fn print(&self) {
+        println!(
+            "{:9} budget {:5.1}% | achieved {:5.1}% | top-1 {:6.2}% | mlp {:?} qk {:?}",
+            self.criterion, self.budget_pct, self.achieved_pct, self.top1, self.mlp_keep, self.qk_keep
+        );
+    }
+
+    fn json(&self) -> Json {
+        obj(vec![
+            ("criterion", Json::Str(self.criterion.to_string())),
+            ("budget_pct", num(self.budget_pct)),
+            ("achieved_pct", num(self.achieved_pct)),
+            ("top1", num(self.top1)),
+            ("mlp_keep", Json::Arr(self.mlp_keep.iter().map(|&k| num(k as f64)).collect())),
+            ("qk_keep", Json::Arr(self.qk_keep.iter().map(|&k| num(k as f64)).collect())),
+        ])
+    }
+}
+
+/// FLOPs budgets (% of dense) the allocator sweep targets, by mode.
+fn mode_budgets() -> Vec<f64> {
+    match bench_mode() {
+        BenchMode::Smoke => vec![60.0],
+        BenchMode::Fast => vec![50.0, 70.0],
+        BenchMode::Full => vec![40.0, 60.0, 80.0],
+    }
+}
+
+/// Run the pruning benchmark suite; when `json_out` is set, write
+/// `BENCH_prune.json`-style output there (schema `corp-bench-prune/v1`).
+pub fn bench_prune(json_out: Option<&str>) -> Result<()> {
+    // Fail loudly, never stale-ly (same contract as the other benches).
+    if let Some(path) = json_out {
+        let _ = std::fs::remove_file(path);
+    }
+    let cfg = large_model();
+    let mut coord = Coordinator::new()?;
+    let base = PruneOpts { calib_batches: coord.scale.calib_batches, ..PruneOpts::default() };
+    let dense = coord.dense(cfg)?.clone();
+    let dense_top1 = coord.top1(cfg, &dense, base.seed)?;
+    println!(
+        "prune bench — mode {:?}, model {}, dense top-1 {dense_top1:.2}%",
+        bench_mode(),
+        cfg.name
+    );
+
+    // ---- criterion × sparsity × compensation grid ----
+    let mut rows: Vec<GridRow> = Vec::new();
+    for crit in Criterion::zoo() {
+        for s10 in sparsity_grid().into_iter().filter(|&s| s > 0) {
+            let sp = Sparsity::of(Scope::Both, s10);
+            let mut top = [0.0f64; 2];
+            for (i, method) in [Method::Corp, Method::Naive].into_iter().enumerate() {
+                let opts =
+                    PruneOpts { sparsity: sp, method, criterion: crit, ..base.clone() };
+                let r = coord.prune_job(cfg, &opts).with_context(|| {
+                    format!(
+                        "prune bench cell failed: criterion {} s10 {s10} method {}",
+                        crit.label(),
+                        method.label()
+                    )
+                })?;
+                top[i] = coord.top1(cfg, &r.weights, opts.seed)?;
+            }
+            let f = crate::flops::flops(cfg, sp);
+            let fd = crate::flops::flops(cfg, Sparsity::dense());
+            let row = GridRow {
+                criterion: crit.label(),
+                s10,
+                corp_top1: top[0],
+                naive_top1: top[1],
+                flops: f,
+                flops_reduction_pct: crate::flops::reduction_pct(fd, f),
+            };
+            row.print();
+            rows.push(row);
+        }
+    }
+
+    // ---- global FLOPs-targeted allocation ----
+    let mut alloc_rows: Vec<AllocRow> = Vec::new();
+    coord.calib(cfg, &base)?;
+    let calib_key = format!("{}@{}", cfg.name, base.calib_batches);
+    for crit in Criterion::zoo() {
+        for budget in mode_budgets() {
+            let alloc = {
+                let stats = coord.calib_stats(&calib_key);
+                allocate_flops(cfg, &dense, stats, crit, base.lambda, budget)
+            }
+            .with_context(|| {
+                format!(
+                    "prune bench cell failed: allocation criterion {} budget {budget}%",
+                    crit.label()
+                )
+            })?;
+            let opts =
+                PruneOpts { criterion: crit, alloc: Some(alloc.clone()), ..base.clone() };
+            let r = coord.prune_job(cfg, &opts).with_context(|| {
+                format!(
+                    "prune bench cell failed: allocated prune criterion {} budget {budget}%",
+                    crit.label()
+                )
+            })?;
+            let row = AllocRow {
+                criterion: crit.label(),
+                budget_pct: budget,
+                achieved_pct: alloc.achieved_pct(cfg),
+                top1: coord.top1(cfg, &r.weights, opts.seed)?,
+                mlp_keep: alloc.mlp_keep,
+                qk_keep: alloc.qk_keep,
+            };
+            row.print();
+            alloc_rows.push(row);
+        }
+    }
+
+    if let Some(path) = json_out {
+        let root = obj(vec![
+            ("schema", Json::Str("corp-bench-prune/v1".into())),
+            (
+                "mode",
+                Json::Str(
+                    match bench_mode() {
+                        BenchMode::Smoke => "smoke",
+                        BenchMode::Fast => "fast",
+                        BenchMode::Full => "full",
+                    }
+                    .into(),
+                ),
+            ),
+            ("model", Json::Str(cfg.name.to_string())),
+            ("calib_batches", num(base.calib_batches as f64)),
+            ("dense_top1", num(dense_top1)),
+            ("grid", Json::Arr(rows.iter().map(|r| r.json()).collect())),
+            ("allocation", Json::Arr(alloc_rows.iter().map(|r| r.json()).collect())),
+        ]);
+        std::fs::write(path, root.to_string() + "\n")
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_budgets_sane() {
+        let b = mode_budgets();
+        assert!(!b.is_empty());
+        assert!(b.iter().all(|&p| p > 0.0 && p <= 100.0));
+    }
+
+    #[test]
+    fn grid_row_json_round_trips() {
+        let row = GridRow {
+            criterion: "energy",
+            s10: 5,
+            corp_top1: 61.5,
+            naive_top1: 58.0,
+            flops: 1_000_000,
+            flops_reduction_pct: 40.0,
+        };
+        let parsed = Json::parse(&row.json().to_string()).unwrap();
+        assert_eq!(parsed.get("criterion").as_str(), Some("energy"));
+        assert_eq!(parsed.get("sparsity").as_f64(), Some(0.5));
+        assert_eq!(parsed.get("compensation_delta_pp").as_f64(), Some(3.5));
+    }
+
+    #[test]
+    fn alloc_row_json_round_trips() {
+        let row = AllocRow {
+            criterion: "obs",
+            budget_pct: 60.0,
+            achieved_pct: 59.1,
+            top1: 60.2,
+            mlp_keep: vec![3, 2],
+            qk_keep: vec![4, 4],
+        };
+        let parsed = Json::parse(&row.json().to_string()).unwrap();
+        assert_eq!(parsed.get("budget_pct").as_f64(), Some(60.0));
+        assert_eq!(parsed.get("achieved_pct").as_f64(), Some(59.1));
+    }
+}

@@ -218,7 +218,7 @@ fn eval_mlponly(
         let c = cfg.classes;
         for (j, &label) in labels.iter().enumerate() {
             let rowv = &logits.data()[j * c..(j + 1) * c];
-            let best = (0..c).max_by(|&a, &bb| rowv[a].partial_cmp(&rowv[bb]).unwrap()).unwrap();
+            let best = (0..c).max_by(|&a, &bb| rowv[a].total_cmp(&rowv[bb])).unwrap();
             if best == label as usize {
                 correct += 1;
             }
@@ -437,7 +437,7 @@ pub fn fig5(coord: &mut Coordinator) -> Result<()> {
     for crit in MlpCriterion::all() {
         let mut accs = Vec::new();
         for method in [Method::Corp, Method::Naive] {
-            let o = PruneOpts { criterion: crit, ..opts.clone() };
+            let o = PruneOpts { criterion: crate::rank::Criterion::Mlp(crit), ..opts.clone() };
             let (acc, _, _, _) =
                 coord.accuracy_at(cfg, Sparsity::of(Scope::Both, 5), method, &o)?;
             csv.row(&[cfg.name.into(), crit.label().into(), method.label().into(), format!("{acc:.2}")]);

@@ -15,7 +15,7 @@ use crate::coordinator::Coordinator;
 use crate::exec::{DecodeMode, KvPoolOpts};
 use crate::model::{ModelConfig, ModelKind, Scope, Sparsity};
 use crate::prune::{Method, PruneOpts};
-use crate::rank::MlpCriterion;
+use crate::rank::{Criterion, MlpCriterion};
 use crate::util::cli::Command;
 
 fn parse_scope(s: &str) -> Result<Scope> {
@@ -37,13 +37,16 @@ fn parse_method(s: &str) -> Result<Method> {
     })
 }
 
-fn parse_criterion(s: &str) -> Result<MlpCriterion> {
+fn parse_criterion(s: &str) -> Result<Criterion> {
     Ok(match s {
-        "act" => MlpCriterion::ActEnergy,
-        "mag" => MlpCriterion::Magnitude,
-        "combined" => MlpCriterion::Combined,
-        "active" => MlpCriterion::ActiveProb,
-        _ => bail!("criterion must be act|mag|combined|active, got '{s}'"),
+        "act" => Criterion::Mlp(MlpCriterion::ActEnergy),
+        "mag" => Criterion::Mlp(MlpCriterion::Magnitude),
+        "combined" => Criterion::Mlp(MlpCriterion::Combined),
+        "active" => Criterion::Mlp(MlpCriterion::ActiveProb),
+        "variance" => Criterion::Variance,
+        "obs" => Criterion::Obs,
+        "energy" => Criterion::Energy,
+        _ => bail!("criterion must be combined|act|mag|active|variance|obs|energy, got '{s}'"),
     })
 }
 
@@ -79,12 +82,13 @@ fn print_usage() {
          subcommands:\n  \
          train  --model vit_b [--steps N]        train/load the dense checkpoint\n  \
          prune  --model vit_b --scope both --sparsity 0.5 [--method corp] [--criterion combined]\n  \
+         prune  --model vit_b --flops-budget 60 [--criterion energy]   global FLOPs-targeted allocation\n  \
          serve  --model vit_b --sparsity 0.5 [--workers 2] [--rate 200] [--dispatch auto]\n  \
          serve  --model gpt_s [--workload text|gen] [--prefill-chunk N] [--shared-prefix N]\n  \
          serve  ... [--controller] [--slo-p99-ms 50] [--degrade] [--spike 3]   SLO feedback loop\n  \
          generate --model gpt_s --tokens 8 [--decode kv|prefill] [--prefill-chunk N] [--verify]\n  \
          stats  --model vit_b                    Table-9 redundancy statistics\n  \
-         bench  linalg|serve [--json] [--out PATH]  perf harnesses (BENCH_*.json)\n  \
+         bench  linalg|serve|prune [--json] [--out PATH]  perf harnesses (BENCH_*.json)\n  \
          list                                    models + artifact status"
     );
 }
@@ -101,7 +105,8 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     match target {
         "linalg" => crate::bench_tables::linalg::bench_linalg(json),
         "serve" => crate::bench_tables::serve::bench_serve(json),
-        other => bail!("unknown bench target '{other}' (available: linalg, serve)"),
+        "prune" => crate::bench_tables::prune::bench_prune(json),
+        other => bail!("unknown bench target '{other}' (available: linalg, serve, prune)"),
     }
 }
 
@@ -140,7 +145,8 @@ fn cmd_prune(argv: &[String]) -> Result<()> {
         .opt("scope", "mlp|attn|both", "both")
         .opt("sparsity", "0.0-0.7", "0.5")
         .opt("method", "corp|naive|grail|vbp", "corp")
-        .opt("criterion", "act|mag|combined|active", "combined")
+        .opt("criterion", "combined|act|mag|active|variance|obs|energy", "combined")
+        .opt("flops-budget", "global FLOPs budget, % of dense (0 = uniform --sparsity)", "0")
         .opt("lambda", "ridge strength", "0.01")
         .opt("calib", "calibration batches", "16");
     let args = cmd.parse(argv)?;
@@ -149,6 +155,10 @@ fn cmd_prune(argv: &[String]) -> Result<()> {
     let s10 = (args.f64("sparsity")? * 10.0).round() as u8;
     if s10 > 7 {
         bail!("sparsity must be <= 0.7 (artifact grid)");
+    }
+    let budget = args.f64("flops-budget")?;
+    if budget > 0.0 && scope != Scope::Both {
+        bail!("--flops-budget allocates both scopes jointly; drop --scope or use 'both'");
     }
     let mut coord = Coordinator::new()?;
     let opts = PruneOpts {
@@ -162,6 +172,9 @@ fn cmd_prune(argv: &[String]) -> Result<()> {
         let w = coord.dense(cfg)?.clone();
         coord.top1(cfg, &w, 99)?
     };
+    if budget > 0.0 {
+        return prune_with_budget(&mut coord, cfg, opts, budget, dense_acc);
+    }
     let sp = Sparsity::of(scope, s10);
     let (acc, p, f, sections) = coord.accuracy_at(cfg, sp, opts.method, &opts)?;
     let pd = crate::flops::params(cfg, Sparsity::dense());
@@ -182,6 +195,56 @@ fn cmd_prune(argv: &[String]) -> Result<()> {
         sections.get("calibration"),
         sections.get("ranking"),
         sections.get("compensation")
+    );
+    Ok(())
+}
+
+/// `corp prune --flops-budget <pct>`: global FLOPs-targeted allocation.
+/// Calibrates once, lets the greedy allocator pick per-layer keep counts
+/// under the budget, prunes with those counts, and reports the achieved
+/// FLOPs measured on the *actual* pruned per-layer shapes.
+fn prune_with_budget(
+    coord: &mut Coordinator,
+    cfg: &'static ModelConfig,
+    opts: PruneOpts,
+    budget: f64,
+    dense_acc: f64,
+) -> Result<()> {
+    let dense = coord.dense(cfg)?.clone();
+    coord.calib(cfg, &opts)?;
+    let key = format!("{}@{}", cfg.name, opts.calib_batches);
+    let alloc = {
+        let stats = coord.calib_stats(&key);
+        crate::prune::allocate_flops(cfg, &dense, stats, opts.criterion, opts.lambda, budget)?
+    };
+    let opts = PruneOpts { alloc: Some(alloc.clone()), ..opts };
+    let result = coord.prune_job(cfg, &opts)?;
+    let acc = coord.top1(cfg, &result.weights, opts.seed)?;
+    // Measure on the shapes the pruner actually produced, not the plan.
+    let exec = coord.executor(cfg);
+    let dims = exec.stored_layer_dims(&result.weights)?;
+    let p = crate::flops::params_layered(cfg, &dims);
+    let f = crate::flops::flops_layered(cfg, &dims);
+    let pd = crate::flops::params(cfg, Sparsity::dense());
+    let fd = crate::flops::flops(cfg, Sparsity::dense());
+    println!(
+        "{} flops-budget {budget:.1}% [{} / {}]: top-1 {acc:.2}% (dense {dense_acc:.2}%)  \
+         params {:.2}M (-{:.1}%)  flops {:.1}M (-{:.1}%, achieved {:.1}% of dense)",
+        cfg.name,
+        opts.method.label(),
+        opts.criterion.label(),
+        p as f64 / 1e6,
+        crate::flops::reduction_pct(pd, p),
+        f as f64 / 1e6,
+        crate::flops::reduction_pct(fd, f),
+        100.0 * f as f64 / fd as f64,
+    );
+    println!("allocation: mlp keep {:?}  qk keep {:?}", alloc.mlp_keep, alloc.qk_keep);
+    println!(
+        "pipeline: calibration {:.2}s  ranking {:.3}s  compensation {:.2}s",
+        result.sections.get("calibration"),
+        result.sections.get("ranking"),
+        result.sections.get("compensation")
     );
     Ok(())
 }
@@ -616,8 +679,15 @@ mod tests {
         assert!(parse_scope("bogus").is_err());
         assert_eq!(parse_method("corp").unwrap(), Method::Corp);
         assert!(parse_method("x").is_err());
-        assert_eq!(parse_criterion("combined").unwrap(), MlpCriterion::Combined);
+        assert_eq!(parse_criterion("combined").unwrap(), Criterion::Mlp(MlpCriterion::Combined));
+        assert_eq!(parse_criterion("variance").unwrap(), Criterion::Variance);
+        assert_eq!(parse_criterion("obs").unwrap(), Criterion::Obs);
+        assert_eq!(parse_criterion("energy").unwrap(), Criterion::Energy);
         assert!(parse_criterion("y").is_err());
+        // Every zoo member's label round-trips through the parser.
+        for crit in Criterion::zoo() {
+            assert_eq!(parse_criterion(crit.label()).unwrap(), crit);
+        }
     }
 
     #[test]
@@ -641,6 +711,17 @@ mod tests {
     #[test]
     fn no_args_prints_usage() {
         run_cli(&[]).unwrap();
+    }
+
+    #[test]
+    fn prune_budget_needs_both_scope() {
+        let argv: Vec<String> =
+            ["prune", "--model", "vit_t", "--scope", "mlp", "--flops-budget", "60"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let err = run_cli(&argv).unwrap_err().to_string();
+        assert!(err.contains("--flops-budget"), "{err}");
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::linalg::qgemm::{dequant, QuantMat};
 use crate::linalg::Mat;
 use crate::model::{ModelConfig, QuantStore, WeightStore};
 use crate::prune::{CalibStats, PruneOpts};
-use crate::rank::{partition, score_mlp};
+use crate::rank::{partition_k, score_mlp_zoo};
 use crate::tensor::Tensor;
 
 /// Fitted per-output-channel affine repair of one quantized `mlp.w2`.
@@ -157,14 +157,16 @@ pub fn mlp_kept_indices(
     }
     let mut out = Vec::with_capacity(cfg.layers);
     for l in 0..cfg.layers {
-        if opts.sparsity.mlp_s10 == 0 {
+        let keep = opts.mlp_keep(cfg, l);
+        if keep >= cfg.mlp {
             out.push((0..cfg.mlp).collect());
             continue;
         }
         let ls = &stats.layers[l];
         let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
-        let scores = score_mlp(opts.criterion, &ls.hidden.energy(), &ls.active.active_prob(), w2);
-        let (kept, _pruned) = partition(&scores, opts.sparsity.mlp_s10);
+        let scores =
+            score_mlp_zoo(opts.criterion, &ls.hidden, &ls.active.active_prob(), w2, opts.lambda);
+        let (kept, _pruned) = partition_k(&scores, keep);
         out.push(kept);
     }
     Ok(out)

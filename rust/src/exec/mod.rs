@@ -39,7 +39,7 @@ use anyhow::{bail, Context, Result};
 pub use kv_pool::{KvPool, KvPoolOpts, KvPoolStats, PagedSeq};
 
 use crate::linalg::QuantMat;
-use crate::model::{is_q8_param, ModelConfig, ModelKind, QuantStore, WeightStore};
+use crate::model::{is_q8_param, LayerDims, ModelConfig, ModelKind, QuantStore, WeightStore};
 use crate::runtime::native::forward::PagedKv;
 use crate::runtime::{Input, Runtime};
 use crate::tensor::Tensor;
@@ -128,10 +128,16 @@ pub struct Executor<'rt> {
 pub struct ForwardPlan<'rt, 'w> {
     rt: &'rt Runtime,
     pub cfg: &'static ModelConfig,
-    /// Retained per-head q/k width derived from the stored `attn.wq` shape.
+    /// Retained per-head q/k width of block 0 (on uniform stores, of every
+    /// block — the usual serving case).
     pub dqk: usize,
-    /// Retained MLP hidden width derived from the stored `mlp.w1` shape.
+    /// Retained MLP hidden width of block 0 (uniform stores: every block).
     pub o: usize,
+    /// Per-layer retained dims read off the stored weight shapes. Uniform
+    /// stores dispatch the classic `fwd_*_q{dqk}_o{o}` family; stores
+    /// written by the global FLOPs allocator dispatch the layered
+    /// `fwd_*_qv..._ov...` family.
+    dims: LayerDims,
     params: Vec<ParamRef<'w>>,
     /// Serve the int8 weight-quantized (`_w8`) artifact family.
     w8: bool,
@@ -145,12 +151,20 @@ impl ForwardPlan<'_, '_> {
     /// identity is observable — tests assert reuse).
     pub fn artifact(&self, batch: usize) -> Arc<str> {
         self.arts.get(batch, || {
-            let mut s = self.cfg.fwd_artifact(self.dqk, self.o, batch);
+            let mut s = match self.dims.as_uniform() {
+                Some((dqk, o)) => self.cfg.fwd_artifact(dqk, o, batch),
+                None => self.cfg.fwd_artifact_layered(&self.dims, batch),
+            };
             if self.w8 {
                 s.push_str("_w8");
             }
             s
         })
+    }
+
+    /// Per-layer retained dims this plan was resolved at.
+    pub fn layer_dims(&self) -> &LayerDims {
+        &self.dims
     }
 
     /// Does this plan serve int8-quantized block projections?
@@ -693,6 +707,21 @@ impl<'rt> Executor<'rt> {
         Ok((wq.shape()[1] / self.cfg.heads, w1.shape()[1]))
     }
 
+    /// Infer per-layer (dqk, o) from *each* stored block's weight shapes —
+    /// the source of truth for stores written by the global FLOPs
+    /// allocator, where retained widths differ across layers.
+    pub fn stored_layer_dims(&self, w: &WeightStore) -> Result<LayerDims> {
+        let mut dqk = Vec::with_capacity(self.cfg.layers);
+        let mut o = Vec::with_capacity(self.cfg.layers);
+        for l in 0..self.cfg.layers {
+            let wq = w.expect(&format!("blocks.{l}.attn.wq"))?;
+            let w1 = w.expect(&format!("blocks.{l}.mlp.w1"))?;
+            dqk.push(wq.shape()[1] / self.cfg.heads);
+            o.push(w1.shape()[1]);
+        }
+        Ok(LayerDims { dqk, o })
+    }
+
     fn push_params<'a>(
         &self,
         w: &'a WeightStore,
@@ -728,9 +757,14 @@ impl<'rt> Executor<'rt> {
         Ok(out.remove(0))
     }
 
-    /// Run one block (layer index `l`) on x [B, n, d].
+    /// Run one block (layer index `l`) on x [B, n, d]. Dims come from layer
+    /// `l`'s *own* stored weight shapes, so the stitched path serves
+    /// non-uniform (globally allocated) stores through the existing
+    /// per-shape `block_*` artifacts.
     pub fn block(&self, w: &WeightStore, l: usize, x: &Tensor, batch: usize) -> Result<Tensor> {
-        let (dqk, o) = self.stored_dims(w)?;
+        let wq = w.expect(&format!("blocks.{l}.attn.wq"))?;
+        let w1 = w.expect(&format!("blocks.{l}.mlp.w1"))?;
+        let (dqk, o) = (wq.shape()[1] / self.cfg.heads, w1.shape()[1]);
         let art = self.cfg.block_artifact(dqk, o, batch);
         let mut inputs: Vec<Input> = vec![Input::F32(x)];
         self.push_params(
@@ -829,8 +863,18 @@ impl<'rt> Executor<'rt> {
     /// is behind a lock), so the serving engine shares one per variant
     /// across all worker threads and dispatches any batch at its true size.
     pub fn forward_plan<'w>(&self, w: &'w WeightStore) -> Result<ForwardPlan<'rt, 'w>> {
-        let (dqk, o, params) = self.resolve_params(w)?;
-        Ok(ForwardPlan { rt: self.rt, cfg: self.cfg, dqk, o, params, w8: false, arts: ArtCache::new() })
+        let (dims, params) = self.resolve_params(w)?;
+        let (dqk, o) = (dims.dqk[0], dims.o[0]);
+        Ok(ForwardPlan {
+            rt: self.rt,
+            cfg: self.cfg,
+            dqk,
+            o,
+            dims,
+            params,
+            w8: false,
+            arts: ArtCache::new(),
+        })
     }
 
     /// [`Executor::forward_plan`] over an int8 weight-quantized store: the
@@ -840,14 +884,25 @@ impl<'rt> Executor<'rt> {
     /// like the dense path.
     pub fn forward_plan_q8<'w>(&self, qs: &'w QuantStore) -> Result<ForwardPlan<'rt, 'w>> {
         let (dqk, o, params) = self.resolve_params_q8(qs)?;
-        Ok(ForwardPlan { rt: self.rt, cfg: self.cfg, dqk, o, params, w8: true, arts: ArtCache::new() })
+        Ok(ForwardPlan {
+            rt: self.rt,
+            cfg: self.cfg,
+            dqk,
+            o,
+            dims: LayerDims::uniform(self.cfg, dqk, o),
+            params,
+            w8: true,
+            arts: ArtCache::new(),
+        })
     }
 
-    /// Resolve `(dqk, o)` and every parameter tensor in canonical
-    /// `param_spec_at` order — the shared front half of the dispatch plans.
-    fn resolve_params<'w>(&self, w: &'w WeightStore) -> Result<(usize, usize, Vec<ParamRef<'w>>)> {
-        let (dqk, o) = self.stored_dims(w)?;
-        let spec = self.cfg.param_spec_at(dqk, o);
+    /// Resolve per-layer dims and every parameter tensor in canonical
+    /// `param_spec_layered` order — the shared front half of the dispatch
+    /// plans. At uniform dims the spec (and order) is identical to
+    /// `param_spec_at`, so uniform stores behave exactly as before.
+    fn resolve_params<'w>(&self, w: &'w WeightStore) -> Result<(LayerDims, Vec<ParamRef<'w>>)> {
+        let dims = self.stored_layer_dims(w)?;
+        let spec = self.cfg.param_spec_layered(&dims);
         let mut params = Vec::with_capacity(spec.len());
         for (name, shape) in &spec {
             let t = w.expect(name)?;
@@ -859,7 +914,7 @@ impl<'rt> Executor<'rt> {
             }
             params.push(ParamRef::F32(t));
         }
-        Ok((dqk, o, params))
+        Ok((dims, params))
     }
 
     /// Infer (dqk, o) from the quantized block-0 projection shapes.
@@ -880,6 +935,25 @@ impl<'rt> Executor<'rt> {
         &self,
         qs: &'w QuantStore,
     ) -> Result<(usize, usize, Vec<ParamRef<'w>>)> {
+        let mut q_dims = LayerDims { dqk: Vec::new(), o: Vec::new() };
+        for l in 0..self.cfg.layers {
+            let wq = qs
+                .shape_of(&format!("blocks.{l}.attn.wq"))
+                .with_context(|| format!("missing quantized weight 'blocks.{l}.attn.wq'"))?;
+            let w1 = qs
+                .shape_of(&format!("blocks.{l}.mlp.w1"))
+                .with_context(|| format!("missing quantized weight 'blocks.{l}.mlp.w1'"))?;
+            q_dims.dqk.push(wq[1] / self.cfg.heads);
+            q_dims.o.push(w1[1]);
+        }
+        if q_dims.as_uniform().is_none() {
+            bail!(
+                "int8 serving requires uniform per-layer dims (the _w8 artifact family \
+                 has no layered lowering); store has per-layer dqk {:?} / mlp {:?}",
+                q_dims.dqk,
+                q_dims.o
+            );
+        }
         let (dqk, o) = self.stored_dims_q8(qs)?;
         let spec = self.cfg.param_spec_at(dqk, o);
         let mut params = Vec::with_capacity(spec.len());
@@ -940,7 +1014,15 @@ impl<'rt> Executor<'rt> {
         if self.cfg.kind != ModelKind::Gpt {
             bail!("decode_plan on non-gpt model '{}'", self.cfg.name);
         }
-        let (dqk, o, params) = self.resolve_params(w)?;
+        let (dims, params) = self.resolve_params(w)?;
+        let Some((dqk, o)) = dims.as_uniform() else {
+            bail!(
+                "decode plans require uniform per-layer dims (the dec_* artifact family \
+                 has no layered lowering); store has per-layer dqk {:?} / mlp {:?}",
+                dims.dqk,
+                dims.o
+            );
+        };
         self.build_decode_plan(dqk, o, params, false, mode, pool_opts)
     }
 
@@ -1095,6 +1177,48 @@ mod tests {
         assert!(dp.is_quantized());
         assert!(dp.artifact(2).starts_with("dec_"));
         assert!(dp.artifact(2).ends_with("_w8"));
+    }
+
+    #[test]
+    fn nonuniform_store_resolves_layered_plan() {
+        let rt = Runtime::new(std::env::temp_dir().join("corp_exec_no_artifacts")).unwrap();
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let exec = Executor::new(&rt, cfg);
+        let mut w = WeightStore::init(cfg, 7);
+        // Shrink layer 2's MLP hidden width to 100 (allocator-style store).
+        let d = cfg.d;
+        w.insert("blocks.2.mlp.w1", Tensor::zeros(&[d, 100]));
+        w.insert("blocks.2.mlp.b1", Tensor::zeros(&[100]));
+        w.insert("blocks.2.mlp.w2", Tensor::zeros(&[100, d]));
+
+        let dims = exec.stored_layer_dims(&w).unwrap();
+        assert_eq!(dims.o[2], 100);
+        assert_eq!(dims.dqk, vec![cfg.dh(); cfg.layers]);
+        assert!(dims.as_uniform().is_none());
+
+        let plan = exec.forward_plan(&w).unwrap();
+        assert_eq!(plan.layer_dims(), &dims);
+        let art = plan.artifact(4);
+        assert!(art.starts_with("fwd_vit_t_qv"), "{art}");
+        assert!(art.contains("_ov192-192-100-192-192-192_b4"), "{art}");
+    }
+
+    #[test]
+    fn nonuniform_store_rejects_decode_and_q8() {
+        let rt = Runtime::new(std::env::temp_dir().join("corp_exec_no_artifacts")).unwrap();
+        let cfg = ModelConfig::by_name("gpt_s").unwrap();
+        let exec = Executor::new(&rt, cfg);
+        let mut w = WeightStore::init(cfg, 7);
+        let d = cfg.d;
+        w.insert("blocks.1.mlp.w1", Tensor::zeros(&[d, 64]));
+        w.insert("blocks.1.mlp.b1", Tensor::zeros(&[64]));
+        w.insert("blocks.1.mlp.w2", Tensor::zeros(&[64, d]));
+
+        let err = exec.decode_plan(&w).unwrap_err().to_string();
+        assert!(err.contains("uniform per-layer dims"), "{err}");
+        let qs = QuantStore::from_store(cfg, &w).unwrap();
+        let err = exec.forward_plan_q8(&qs).unwrap_err().to_string();
+        assert!(err.contains("uniform per-layer dims"), "{err}");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! FLOPs count multiply–adds as 2 ops, per forward pass of one example, for
 //! the exact pruned shapes the runtime executes.
 
-use crate::model::{ModelConfig, ModelKind, Sparsity};
+use crate::model::{LayerDims, ModelConfig, ModelKind, Sparsity};
 
 /// Total parameter count at a sparsity setting.
 pub fn params(cfg: &ModelConfig, sp: Sparsity) -> usize {
@@ -18,24 +18,14 @@ pub fn params(cfg: &ModelConfig, sp: Sparsity) -> usize {
     embed + per_block * cfg.layers + head
 }
 
-/// Forward FLOPs for one example at a sparsity setting.
-pub fn flops(cfg: &ModelConfig, sp: Sparsity) -> usize {
-    let (dqk, o) = cfg.pruned_dims(sp);
-    let n = cfg.n_ctx;
-    let d = cfg.d;
-    let h = cfg.heads;
-    let dh = cfg.dh();
-    let mut f = 0usize;
+/// Total parameter count at explicit per-layer dims.
+pub fn params_layered(cfg: &ModelConfig, dims: &LayerDims) -> usize {
+    cfg.param_spec_layered(dims).iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+}
 
-    // Embedding.
-    f += match cfg.kind {
-        ModelKind::Vit => 2 * cfg.patches * cfg.patch_dim * d,
-        // one-hot matmul is a gather in practice; count the gather-free cost
-        // of the d-dim add + pos add only.
-        ModelKind::Gpt => 2 * n * d,
-    };
-
-    // Per block.
+/// Forward FLOPs of one transformer block at pruned dims `(dqk, o)`.
+fn block_flops(cfg: &ModelConfig, dqk: usize, o: usize) -> usize {
+    let (n, d, h, dh) = (cfg.n_ctx, cfg.d, cfg.heads, cfg.dh());
     let mut blk = 0usize;
     blk += 2 * n * d * (h * dqk) * 2; // Q, K projections
     blk += 2 * n * d * (h * dh); // V projection
@@ -44,14 +34,59 @@ pub fn flops(cfg: &ModelConfig, sp: Sparsity) -> usize {
     blk += 2 * n * (h * dh) * d; // output projection
     blk += 2 * n * d * o * 2; // MLP in + out
     blk += 8 * n * d + 5 * n * o; // layernorms + GELU (approximate elementwise)
-    f += blk * cfg.layers;
+    blk
+}
 
-    // Head.
-    f += match cfg.kind {
+/// Embedding + head FLOPs (independent of pruned dims).
+fn fixed_flops(cfg: &ModelConfig) -> usize {
+    let (n, d) = (cfg.n_ctx, cfg.d);
+    let embed = match cfg.kind {
+        ModelKind::Vit => 2 * cfg.patches * cfg.patch_dim * d,
+        // one-hot matmul is a gather in practice; count the gather-free cost
+        // of the d-dim add + pos add only.
+        ModelKind::Gpt => 2 * n * d,
+    };
+    let head = match cfg.kind {
         ModelKind::Vit => 2 * d * cfg.classes,
         ModelKind::Gpt => 2 * n * d * cfg.vocab,
     };
-    f
+    embed + head
+}
+
+/// Forward FLOPs for one example at a sparsity setting.
+pub fn flops(cfg: &ModelConfig, sp: Sparsity) -> usize {
+    let (dqk, o) = cfg.pruned_dims(sp);
+    fixed_flops(cfg) + block_flops(cfg, dqk, o) * cfg.layers
+}
+
+/// Forward FLOPs for one example at explicit per-layer dims — the cost the
+/// global-budget allocator is measured against.
+pub fn flops_layered(cfg: &ModelConfig, dims: &LayerDims) -> usize {
+    assert_eq!(dims.dqk.len(), cfg.layers);
+    assert_eq!(dims.o.len(), cfg.layers);
+    fixed_flops(cfg)
+        + dims
+            .dqk
+            .iter()
+            .zip(&dims.o)
+            .map(|(&dqk, &o)| block_flops(cfg, dqk, o))
+            .sum::<usize>()
+}
+
+/// Marginal FLOPs of one MLP hidden unit in any block: ∂(block FLOPs)/∂o.
+/// The allocator's cost for removing one hidden channel from one layer.
+pub fn mlp_unit_flops(cfg: &ModelConfig) -> usize {
+    let (n, d) = (cfg.n_ctx, cfg.d);
+    4 * n * d + 5 * n
+}
+
+/// Marginal FLOPs of one per-head QK dim in any block: ∂(block FLOPs)/∂dqk.
+/// Removing one QK dim drops it from *every* head of the layer at once
+/// (the fused `[d, h·dqk]` layout keeps heads uniform), so the unit spans
+/// all `h` heads.
+pub fn qk_unit_flops(cfg: &ModelConfig) -> usize {
+    let (n, d, h) = (cfg.n_ctx, cfg.d, cfg.heads);
+    4 * n * d * h + 2 * n * n * h
 }
 
 /// Percentage reduction of `pruned` relative to `dense`.
@@ -110,5 +145,33 @@ mod tests {
     fn reduction_pct_basic() {
         assert_eq!(reduction_pct(100, 50), 50.0);
         assert_eq!(reduction_pct(0, 0), 0.0);
+    }
+
+    #[test]
+    fn layered_matches_uniform_at_equal_dims() {
+        use crate::model::LayerDims;
+        for name in ["vit_t", "vit_b", "gpt_s"] {
+            let cfg = ModelConfig::by_name(name).unwrap();
+            for sp in [Sparsity::dense(), Sparsity::of(Scope::Both, 5)] {
+                let (dqk, o) = cfg.pruned_dims(sp);
+                let dims = LayerDims::uniform(cfg, dqk, o);
+                assert_eq!(flops_layered(cfg, &dims), flops(cfg, sp), "{name} flops");
+                assert_eq!(params_layered(cfg, &dims), params(cfg, sp), "{name} params");
+            }
+        }
+    }
+
+    #[test]
+    fn unit_costs_are_exact_marginals() {
+        use crate::model::LayerDims;
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let base = LayerDims::uniform(cfg, cfg.dh(), cfg.mlp);
+        let f0 = flops_layered(cfg, &base);
+        let mut one_mlp = base.clone();
+        one_mlp.o[3] -= 1;
+        assert_eq!(f0 - flops_layered(cfg, &one_mlp), mlp_unit_flops(cfg));
+        let mut one_qk = base.clone();
+        one_qk.dqk[1] -= 1;
+        assert_eq!(f0 - flops_layered(cfg, &one_qk), qk_unit_flops(cfg));
     }
 }

@@ -65,7 +65,7 @@ pub fn sym_eig(a: &Mat) -> (Vec<f64>, Mat) {
     let mut vals: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
     // Sort descending, permuting V's columns accordingly.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
+    order.sort_by(|&i, &j| vals[j].total_cmp(&vals[i]));
     let sorted_vals: Vec<f64> = order.iter().map(|&i| vals[i]).collect();
     let mut sorted_v = Mat::zeros(n, n);
     for (new_c, &old_c) in order.iter().enumerate() {

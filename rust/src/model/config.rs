@@ -68,6 +68,36 @@ pub fn keep_count(dim: usize, s10: u8) -> usize {
     ((dim * (10 - s10 as usize) + 5) / 10).max(1)
 }
 
+/// Per-layer retained dims: `dqk[l]` per-head q/k width and `o[l]` MLP
+/// hidden width of layer `l`. The global-FLOPs-budget allocator produces
+/// these; the uniform `Sparsity` path is the special case where every entry
+/// is equal.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct LayerDims {
+    pub dqk: Vec<usize>,
+    pub o: Vec<usize>,
+}
+
+impl LayerDims {
+    /// Uniform dims (one `(dqk, o)` repeated across layers).
+    pub fn uniform(cfg: &ModelConfig, dqk: usize, o: usize) -> Self {
+        Self { dqk: vec![dqk; cfg.layers], o: vec![o; cfg.layers] }
+    }
+
+    /// `Some((dqk, o))` when every layer shares one shape — such stores can
+    /// use the uniform `fwd_*`/`dec_*` artifacts and the q8/decode paths.
+    pub fn as_uniform(&self) -> Option<(usize, usize)> {
+        let (&q0, &o0) = (self.dqk.first()?, self.o.first()?);
+        (self.dqk.iter().all(|&q| q == q0) && self.o.iter().all(|&o| o == o0))
+            .then_some((q0, o0))
+    }
+
+    /// Dash-joined dim list for layered artifact names (`16-16-12`).
+    fn dims_token(dims: &[usize]) -> String {
+        dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("-")
+    }
+}
+
 /// Static model configuration.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ModelConfig {
@@ -168,6 +198,22 @@ impl ModelConfig {
         ]
     }
 
+    /// Full-model parameter order at per-layer dims — the layered analogue
+    /// of [`ModelConfig::param_spec_at`], consumed by the layered `fwd_*`
+    /// artifacts the allocator's non-uniform stores dispatch through.
+    pub fn param_spec_layered(&self, dims: &LayerDims) -> Vec<(String, Vec<usize>)> {
+        assert_eq!(dims.dqk.len(), self.layers);
+        assert_eq!(dims.o.len(), self.layers);
+        let mut spec = self.embed_param_spec();
+        for layer in 0..self.layers {
+            for (n, s) in self.block_param_spec(dims.dqk[layer], dims.o[layer]) {
+                spec.push((format!("blocks.{layer}.{n}"), s));
+            }
+        }
+        spec.extend(self.head_param_spec());
+        spec
+    }
+
     pub fn head_param_spec(&self) -> Vec<(String, Vec<usize>)> {
         let out = match self.kind {
             ModelKind::Vit => self.classes,
@@ -194,6 +240,20 @@ impl ModelConfig {
     /// dispatch) at pruned dims `(dqk, o)` — the serving fast path.
     pub fn fwd_artifact(&self, dqk: usize, o: usize, batch: usize) -> String {
         format!("fwd_{}_q{dqk}_o{o}_b{batch}", self.name)
+    }
+
+    /// Layered fused-forward artifact for per-layer retained dims: the
+    /// dims are dash-joined per layer (`fwd_vit_t_qv16-16-12_ov192-200-88_b8`).
+    /// Uniform dims still use [`ModelConfig::fwd_artifact`] — the layered
+    /// name exists only for allocator-produced non-uniform stores and is
+    /// served by the native interpreter only.
+    pub fn fwd_artifact_layered(&self, dims: &LayerDims, batch: usize) -> String {
+        format!(
+            "fwd_{}_qv{}_ov{}_b{batch}",
+            self.name,
+            LayerDims::dims_token(&dims.dqk),
+            LayerDims::dims_token(&dims.o)
+        )
     }
 
     /// Incremental (KV-cached) decode artifact at pruned dims `(dqk, o)` —
@@ -349,6 +409,37 @@ mod tests {
         assert_eq!(w1.1, vec![c.d, 192]);
         // The dense spec is the (dh, mlp) instance of the pruned spec.
         assert_eq!(c.param_spec(), c.param_spec_at(c.dh(), c.mlp));
+    }
+
+    #[test]
+    fn layer_dims_uniform_roundtrip() {
+        let c = ModelConfig::by_name("vit_t").unwrap();
+        let u = LayerDims::uniform(c, 16, 192);
+        assert_eq!(u.as_uniform(), Some((16, 192)));
+        let mut nu = u.clone();
+        nu.o[2] = 200;
+        assert_eq!(nu.as_uniform(), None);
+        // Layered spec at uniform dims == the uniform spec.
+        assert_eq!(c.param_spec_layered(&u), c.param_spec_at(16, 192));
+        // Non-uniform spec reflects each layer's own dims.
+        let spec = c.param_spec_layered(&nu);
+        let w1 = spec.iter().find(|(n, _)| n == "blocks.2.mlp.w1").unwrap();
+        assert_eq!(w1.1, vec![c.d, 200]);
+        let w1b = spec.iter().find(|(n, _)| n == "blocks.0.mlp.w1").unwrap();
+        assert_eq!(w1b.1, vec![c.d, 192]);
+    }
+
+    #[test]
+    fn layered_artifact_name() {
+        let c = ModelConfig::by_name("vit_t").unwrap();
+        let dims = LayerDims {
+            dqk: vec![16, 16, 12, 16, 16, 16],
+            o: vec![192, 200, 88, 192, 192, 192],
+        };
+        assert_eq!(
+            c.fwd_artifact_layered(&dims, 8),
+            "fwd_vit_t_qv16-16-12-16-16-16_ov192-200-88-192-192-192_b8"
+        );
     }
 
     #[test]

@@ -6,6 +6,6 @@ pub mod config;
 pub mod quant;
 pub mod weights;
 
-pub use config::{keep_count, ModelConfig, ModelKind, Scope, Sparsity};
+pub use config::{keep_count, LayerDims, ModelConfig, ModelKind, Scope, Sparsity};
 pub use quant::{is_q8_param, QuantStore};
 pub use weights::WeightStore;

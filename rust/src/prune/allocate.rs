@@ -1,0 +1,306 @@
+//! Global FLOPs-targeted allocation: given one FLOPs budget for the whole
+//! model, pick per-layer, per-component retention (MLP hidden widths and
+//! per-head QK widths) by marginal score-per-FLOP greedy selection.
+//!
+//! Replaces the uniform `Sparsity{mlp_s10, attn_s10}` setting with a
+//! per-layer [`Allocation`]: layers whose calibration statistics carry more
+//! criterion mass keep more units. The cost model is the analytic
+//! [`crate::flops`] accounting — each MLP hidden unit costs
+//! [`mlp_unit_flops`] and each QK dim (spanning every head of a layer at
+//! once, the fused `[d, h·dqk]` layout) costs [`qk_unit_flops`]; both are
+//! exact marginals of `flops_layered`, so the achieved budget is measured
+//! on the very shapes the pruner then produces.
+//!
+//! Within one (layer, component) the units are sorted by descending
+//! criterion score and the unit cost is constant, so a single global
+//! sort-and-sweep over score-per-FLOP densities preserves the within-layer
+//! ranking order: a component's `m+1`-th unit is never taken before its
+//! `m`-th. CORP compensation then applies unchanged on top of whatever
+//! per-layer keep counts come out.
+
+use anyhow::{bail, Result};
+
+use super::{per_head, CalibStats};
+use crate::flops::{flops, flops_layered, mlp_unit_flops, qk_unit_flops};
+use crate::model::{LayerDims, ModelConfig, Sparsity, WeightStore};
+use crate::rank::{nan_last_desc, score_attn_zoo, score_mlp_zoo, Criterion};
+
+/// Per-layer keep counts chosen by the global allocator: `mlp_keep[l]`
+/// hidden channels and `qk_keep[l]` per-head QK dims are retained in layer
+/// `l`. Every entry is ≥ 1 (a layer is never emptied).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct Allocation {
+    pub mlp_keep: Vec<usize>,
+    pub qk_keep: Vec<usize>,
+}
+
+impl Allocation {
+    /// The pruned per-layer dims this allocation produces.
+    pub fn layer_dims(&self) -> LayerDims {
+        LayerDims { dqk: self.qk_keep.clone(), o: self.mlp_keep.clone() }
+    }
+
+    /// Achieved fraction of the dense forward FLOPs, in percent — the
+    /// number the ±2% budget acceptance is checked against.
+    pub fn achieved_pct(&self, cfg: &ModelConfig) -> f64 {
+        let dense = flops(cfg, Sparsity::dense());
+        100.0 * flops_layered(cfg, &self.layer_dims()) as f64 / dense as f64
+    }
+}
+
+/// One marginal retention unit considered by the greedy sweep.
+struct Unit {
+    layer: usize,
+    /// false = MLP hidden channel, true = per-head QK dim.
+    qk: bool,
+    /// Within-component rank (the floor unit `m = 0` is always kept).
+    m: usize,
+    /// Criterion score per FLOP (scope-normalized).
+    density: f64,
+    cost: usize,
+}
+
+/// Normalize a scope's unit scores so its finite mass sums to 1 — MLP and
+/// attention criteria live on unrelated scales (energy of hidden
+/// activations vs logit energy), and the greedy sweep compares their
+/// densities directly. Per-*scope* (not per-layer) normalization keeps the
+/// inter-layer signal that global allocation exists to exploit.
+fn normalize_scope(scores: &mut [Vec<f64>]) {
+    let total: f64 = scores
+        .iter()
+        .flat_map(|v| v.iter())
+        .filter(|s| s.is_finite() && **s > 0.0)
+        .sum();
+    if total > 0.0 {
+        for v in scores.iter_mut() {
+            for s in v.iter_mut() {
+                *s /= total;
+            }
+        }
+    }
+}
+
+/// Pick per-layer keep counts so the pruned model's forward FLOPs land at
+/// `budget_pct`% of dense (from below; the gap is bounded by one unit
+/// cost). `dense` supplies the `mlp.w2` rows the weight-aware criteria
+/// score; `stats` is the same one-pass calibration cache the compensator
+/// uses — the allocator costs no extra passes.
+pub fn allocate_flops(
+    cfg: &'static ModelConfig,
+    dense: &WeightStore,
+    stats: &CalibStats,
+    crit: Criterion,
+    lambda: f64,
+    budget_pct: f64,
+) -> Result<Allocation> {
+    if !(budget_pct > 0.0 && budget_pct <= 100.0) {
+        bail!("flops budget must be in (0, 100] percent, got {budget_pct}");
+    }
+    if stats.layers.len() != cfg.layers {
+        bail!("calibration stats cover {} layers, model has {}", stats.layers.len(), cfg.layers);
+    }
+    let (h, dh) = (cfg.heads, cfg.dh());
+
+    // Per-layer unit scores, sorted descending (NaN-last) within each
+    // component so index m is the m-th most important unit.
+    let mut mlp_scores: Vec<Vec<f64>> = Vec::with_capacity(cfg.layers);
+    let mut qk_scores: Vec<Vec<f64>> = Vec::with_capacity(cfg.layers);
+    for (l, ls) in stats.layers.iter().enumerate() {
+        let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
+        let mut ms = score_mlp_zoo(crit, &ls.hidden, &ls.active.active_prob(), w2, lambda);
+        ms.sort_by(|a, b| nan_last_desc(*a, *b));
+        mlp_scores.push(ms);
+        // The fused layout removes a QK dim from every head of the layer at
+        // once, so the m-th QK unit's value is the sum over heads of each
+        // head's m-th best dim (heads rank independently, exactly as the
+        // pruner partitions them).
+        let mut per_m = vec![0.0f64; dh];
+        for head in 0..h {
+            let qh = per_head(&ls.q, head);
+            let kh = per_head(&ls.k, head);
+            let mut s = score_attn_zoo(crit, &qh, &kh, lambda);
+            s.sort_by(|a, b| nan_last_desc(*a, *b));
+            for (m, v) in s.iter().enumerate() {
+                per_m[m] += v;
+            }
+        }
+        qk_scores.push(per_m);
+    }
+    normalize_scope(&mut mlp_scores);
+    normalize_scope(&mut qk_scores);
+
+    // Floor: one unit of each component per layer; everything above the
+    // floor competes globally.
+    let mut alloc = Allocation { mlp_keep: vec![1; cfg.layers], qk_keep: vec![1; cfg.layers] };
+    let mut spent = flops_layered(cfg, &alloc.layer_dims());
+    let dense_total = flops(cfg, Sparsity::dense());
+    let target = (budget_pct / 100.0 * dense_total as f64).round() as usize;
+    if spent > target {
+        bail!(
+            "flops budget {budget_pct}% is below the 1-unit-per-layer floor \
+             ({spent} of {dense_total} dense flops = {:.1}%)",
+            100.0 * spent as f64 / dense_total as f64
+        );
+    }
+
+    let (mlp_cost, qk_cost) = (mlp_unit_flops(cfg), qk_unit_flops(cfg));
+    let mut units: Vec<Unit> = Vec::with_capacity(cfg.layers * (cfg.mlp + dh));
+    for l in 0..cfg.layers {
+        for m in 1..cfg.mlp {
+            units.push(Unit {
+                layer: l,
+                qk: false,
+                m,
+                density: mlp_scores[l][m] / mlp_cost as f64,
+                cost: mlp_cost,
+            });
+        }
+        for m in 1..dh {
+            units.push(Unit {
+                layer: l,
+                qk: true,
+                m,
+                density: qk_scores[l][m] / qk_cost as f64,
+                cost: qk_cost,
+            });
+        }
+    }
+    // Highest density first; ties (and NaN runs) break on (layer, comp, m)
+    // so the sweep is deterministic and within-component order is kept even
+    // for equal scores.
+    units.sort_by(|a, b| {
+        nan_last_desc(a.density, b.density)
+            .then(a.layer.cmp(&b.layer))
+            .then(a.qk.cmp(&b.qk))
+            .then(a.m.cmp(&b.m))
+    });
+    // Greedy sweep. Unit costs are constant within a component, so once a
+    // unit is skipped for budget, every later unit of the same cost is
+    // skipped too — the kept set is always a per-component prefix.
+    for u in &units {
+        if spent + u.cost > target {
+            continue;
+        }
+        spent += u.cost;
+        if u.qk {
+            alloc.qk_keep[u.layer] += 1;
+        } else {
+            alloc.mlp_keep[u.layer] += 1;
+        }
+    }
+    debug_assert_eq!(spent, flops_layered(cfg, &alloc.layer_dims()));
+    Ok(alloc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::prune::LayerStats;
+    use crate::stats::{ActiveCounter, MomentAccumulator};
+    use crate::tensor::Tensor;
+    use crate::util::Pcg64;
+
+    /// Synthetic calibration stats: layer `hot` gets 4× the activation
+    /// scale, so score-aware allocation should favor it.
+    fn synth_stats(cfg: &'static ModelConfig, hot: usize) -> CalibStats {
+        let (h, dh, o) = (cfg.heads, cfg.dh(), cfg.mlp);
+        let (samples, n) = (2usize, 4usize);
+        let mut rng = Pcg64::new(42);
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            let scale = if l == hot { 4.0 } else { 1.0 };
+            let rows = 32;
+            let mut x = vec![0.0f32; rows * o];
+            for v in x.iter_mut() {
+                *v = rng.normal_f32(0.0, scale);
+            }
+            let mut hidden = MomentAccumulator::new(o);
+            hidden.add_batch(&x, rows);
+            let mut active = ActiveCounter::new(o, 0.05);
+            active.add_batch(&x, rows);
+            let mut q = vec![0.0f32; samples * h * n * dh];
+            let mut k = vec![0.0f32; samples * h * n * dh];
+            for v in q.iter_mut().chain(k.iter_mut()) {
+                *v = rng.normal_f32(0.0, scale);
+            }
+            layers.push(LayerStats {
+                hidden,
+                active,
+                q: Tensor::from_vec(&[samples, h, n, dh], q),
+                k: Tensor::from_vec(&[samples, h, n, dh], k),
+            });
+        }
+        CalibStats { layers, sections: crate::util::timer::Sections::new() }
+    }
+
+    #[test]
+    fn allocator_hits_budget_within_two_pct() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let dense = crate::model::WeightStore::init(cfg, 11);
+        let stats = synth_stats(cfg, 2);
+        for crit in Criterion::zoo() {
+            for budget in [40.0, 60.0, 80.0] {
+                let a = allocate_flops(cfg, &dense, &stats, crit, 1e-2, budget).unwrap();
+                let got = a.achieved_pct(cfg);
+                assert!(
+                    (got - budget).abs() <= 2.0,
+                    "{} @ {budget}%: achieved {got:.2}%",
+                    crit.label()
+                );
+                // Floors and caps.
+                assert!(a.mlp_keep.iter().all(|&k| k >= 1 && k <= cfg.mlp));
+                assert!(a.qk_keep.iter().all(|&k| k >= 1 && k <= cfg.dh()));
+            }
+        }
+    }
+
+    #[test]
+    fn allocator_favors_high_score_layers() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let dense = crate::model::WeightStore::init(cfg, 11);
+        let hot = 2usize;
+        let stats = synth_stats(cfg, hot);
+        let a = allocate_flops(cfg, &dense, &stats, Criterion::Energy, 1e-2, 55.0).unwrap();
+        // The hot layer's activation energy dominates, so it keeps at least
+        // as many units as every other layer in both components.
+        for l in 0..cfg.layers {
+            assert!(a.mlp_keep[hot] >= a.mlp_keep[l], "mlp {:?}", a.mlp_keep);
+            assert!(a.qk_keep[hot] >= a.qk_keep[l], "qk {:?}", a.qk_keep);
+        }
+        // And the allocation is genuinely non-uniform.
+        assert!(a.layer_dims().as_uniform().is_none(), "{a:?}");
+    }
+
+    #[test]
+    fn allocator_spends_more_at_higher_budget() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let dense = crate::model::WeightStore::init(cfg, 11);
+        let stats = synth_stats(cfg, 0);
+        let lo = allocate_flops(cfg, &dense, &stats, Criterion::Variance, 1e-2, 50.0).unwrap();
+        let hi = allocate_flops(cfg, &dense, &stats, Criterion::Variance, 1e-2, 75.0).unwrap();
+        // Achieved FLOPs track the requested budgets (greedy packs from
+        // below, so ordering of the achieved fractions is guaranteed even
+        // though individual layer counts may re-mix between budgets).
+        assert!(hi.achieved_pct(cfg) > lo.achieved_pct(cfg));
+        let total = |a: &Allocation| -> usize {
+            a.mlp_keep.iter().sum::<usize>() + a.qk_keep.iter().sum::<usize>()
+        };
+        assert!(total(&hi) > total(&lo), "hi {hi:?} lo {lo:?}");
+    }
+
+    #[test]
+    fn allocator_rejects_bad_budgets() {
+        let cfg = ModelConfig::by_name("vit_t").unwrap();
+        let dense = crate::model::WeightStore::init(cfg, 11);
+        let stats = synth_stats(cfg, 0);
+        for bad in [0.0, -5.0, 101.0] {
+            assert!(allocate_flops(cfg, &dense, &stats, Criterion::Energy, 1e-2, bad).is_err());
+        }
+        // Below the 1-unit floor: clear error, not a panic.
+        let err = allocate_flops(cfg, &dense, &stats, Criterion::Energy, 1e-2, 0.01)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("floor"), "{err}");
+    }
+}

@@ -20,7 +20,7 @@ use crate::exec::Executor;
 use crate::linalg::chol::Cholesky;
 use crate::linalg::Mat;
 use crate::model::WeightStore;
-use crate::rank::partition;
+use crate::rank::{nan_last_desc, partition_k};
 
 use crate::tensor::Tensor;
 use crate::util::timer::Sections;
@@ -43,18 +43,25 @@ pub fn prune_grail(
     let cfg = exec.cfg;
     let mut sections = Sections::new();
 
-    if opts.sparsity.mlp_s10 > 0 {
+    {
         for l in 0..cfg.layers {
+            let keep = opts.mlp_keep(cfg, l);
+            if keep >= cfg.mlp {
+                continue;
+            }
             let ls = &stats.layers[l];
             let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
             let (kept, _pruned) = {
-                let scores = crate::rank::score_mlp(
+                // Same zoo ranking as the naive pass above, so the refit
+                // targets exactly the surviving channels.
+                let scores = crate::rank::score_mlp_zoo(
                     opts.criterion,
-                    &ls.hidden.energy(),
+                    &ls.hidden,
                     &ls.active.active_prob(),
                     w2,
+                    opts.lambda,
                 );
-                partition(&scores, opts.sparsity.mlp_s10)
+                partition_k(&scores, keep)
             };
             let w2_hat = sections.time("compensation", || {
                 let second = ls.hidden.second_moment(); // E[x xᵀ], uncentered
@@ -92,20 +99,21 @@ pub fn prune_vbp(
     let mut result = super::prune_corp(exec, dense, stats, &naive_opts, false)?;
     let mut sections = Sections::new();
 
-    if opts.sparsity.mlp_s10 > 0 {
+    {
         for l in 0..cfg.layers {
+            let keep = opts.mlp_keep(cfg, l);
+            if keep >= cfg.mlp {
+                continue;
+            }
             let ls = &stats.layers[l];
             let w1 = dense.expect(&format!("blocks.{l}.mlp.w1"))?;
             let b1 = dense.expect(&format!("blocks.{l}.mlp.b1"))?;
             let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
             let b2 = dense.expect(&format!("blocks.{l}.mlp.b2"))?;
             let (kept, pruned) = sections.time("ranking", || {
-                // Variance = E[x²] − μ² per channel.
-                let energy = ls.hidden.energy();
-                let mean = ls.hidden.mean();
-                let var: Vec<f64> =
-                    energy.iter().zip(&mean).map(|(e, m)| (e - m * m).max(0.0)).collect();
-                partition(&var, opts.sparsity.mlp_s10)
+                // Variance ranking, clamped at the accumulator boundary
+                // (`MomentAccumulator::variance` owns the ≥ 0 contract).
+                partition_k(&ls.hidden.variance(), keep)
             });
             result.weights.insert(format!("blocks.{l}.mlp.w1"), w1.gather_cols(&kept));
             result.weights.insert(format!("blocks.{l}.mlp.b1"), b1.gather_cols(&kept));
@@ -191,7 +199,7 @@ fn snows_mask_and_recover(w2: &Tensor, energy: &[f64], second: &Mat, lambda: f64
             idx.sort_by(|&a, &b| {
                 let sa = col[a].abs() * energy[a].sqrt();
                 let sb = col[b].abs() * energy[b].sqrt();
-                sb.partial_cmp(&sa).unwrap()
+                nan_last_desc(sa, sb)
             });
             let keep = idx.len().div_ceil(2);
             let mut kept: Vec<usize> = idx[..keep].to_vec();
@@ -224,7 +232,7 @@ fn mask24_only(w: &Tensor) -> Tensor {
             let end = (g + 4).min(r);
             let mut idx: Vec<usize> = (g..end).collect();
             idx.sort_by(|&a, &b| {
-                w.at2(b, j).abs().partial_cmp(&w.at2(a, j).abs()).unwrap()
+                nan_last_desc(w.at2(a, j).abs() as f64, w.at2(b, j).abs() as f64)
             });
             let keep = idx.len().div_ceil(2);
             for &i in &idx[keep..] {
@@ -262,7 +270,9 @@ pub fn prune_dcvit(
             (l, e)
         })
         .collect();
-    energies.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    // Ascending energy; `total_cmp` keeps degenerate (NaN) layers last so
+    // they are never selected for attention removal.
+    energies.sort_by(|a, b| a.1.total_cmp(&b.1));
     let removed: Vec<usize> = energies.iter().take(remove_attn_layers).map(|&(l, _)| l).collect();
 
     // MLP pruning with CORP-style compensation (DC-ViT recovers with feature
@@ -271,6 +281,12 @@ pub fn prune_dcvit(
     let corp_opts = PruneOpts {
         method: super::Method::Corp,
         sparsity: crate::model::Sparsity { mlp_s10: opts.sparsity.mlp_s10, attn_s10: 0 },
+        // DC-ViT removes whole attention modules instead of QK dims: keep
+        // any global allocation's MLP counts but leave attention dense.
+        alloc: opts.alloc.clone().map(|mut a| {
+            a.qk_keep = vec![exec.cfg.dh(); exec.cfg.layers];
+            a
+        }),
         ..opts.clone()
     };
     let result = super::prune_corp(exec, dense, stats, &corp_opts, true)?;
@@ -299,7 +315,7 @@ mod tests {
             for g in (0..8).step_by(4) {
                 let mut mags: Vec<(f32, usize)> =
                     (g..g + 4).map(|i| (w.at2(i, j).abs(), i)).collect();
-                mags.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                mags.sort_by(|a, b| b.0.total_cmp(&a.0));
                 for &(_, i) in &mags[..2] {
                     assert_ne!(m.at2(i, j), 0.0);
                 }

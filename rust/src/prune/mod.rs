@@ -5,16 +5,19 @@
 //! then ranks, compensates, and folds — producing a pruned `WeightStore`
 //! whose shapes match the corresponding block artifacts.
 
+pub mod allocate;
 pub mod baselines;
 
 use anyhow::Result;
+
+pub use allocate::{allocate_flops, Allocation};
 
 use crate::compensate::compensate_attn_head;
 use crate::data::{Split, TextGen, VisionGen};
 use crate::exec::{Executor, LayerCapture};
 use crate::linalg::Mat;
-use crate::model::{ModelKind, Scope, Sparsity, WeightStore};
-use crate::rank::{partition, score_attn_logit_energy, score_mlp, MlpCriterion};
+use crate::model::{keep_count, ModelConfig, ModelKind, Scope, Sparsity, WeightStore};
+use crate::rank::{partition_k, score_attn_zoo, score_mlp_zoo, Criterion, MlpCriterion};
 use crate::stats::{cov_blocks, ActiveCounter, MomentAccumulator};
 use crate::tensor::Tensor;
 use crate::util::timer::Sections;
@@ -51,9 +54,17 @@ impl Method {
 /// Pipeline options.
 #[derive(Clone, Debug)]
 pub struct PruneOpts {
+    /// Uniform per-layer sparsity — the retention default when no global
+    /// allocation is set.
     pub sparsity: Sparsity,
     pub method: Method,
-    pub criterion: MlpCriterion,
+    /// Ranking criterion from the zoo (`rank::Criterion`); applies to both
+    /// scopes. The paper's default wraps the combined MLP signal.
+    pub criterion: Criterion,
+    /// Per-layer keep counts from the global FLOPs allocator. When set it
+    /// overrides `sparsity` everywhere retention counts are derived
+    /// (ranking, compensation, artifact shapes).
+    pub alloc: Option<Allocation>,
     /// Ridge strength λ shared by the Eq. 9 affine solve and the Alg. 5
     /// Kronecker system (normalized by the mean Gram diagonal, see
     /// `linalg::ridge::ridge_right`).
@@ -74,13 +85,33 @@ impl Default for PruneOpts {
         Self {
             sparsity: Sparsity::of(Scope::Both, 5),
             method: Method::Corp,
-            criterion: MlpCriterion::Combined,
+            criterion: Criterion::Mlp(MlpCriterion::Combined),
+            alloc: None,
             lambda: 1e-2,
             calib_batches: 16,
             attn_max_samples: 128,
             active_eps: 0.05,
             diagnostics: false,
             seed: 1234,
+        }
+    }
+}
+
+impl PruneOpts {
+    /// MLP hidden channels layer `l` keeps: the allocator's per-layer count
+    /// when a global allocation is set, the uniform `keep_count` otherwise.
+    pub fn mlp_keep(&self, cfg: &ModelConfig, l: usize) -> usize {
+        match &self.alloc {
+            Some(a) => a.mlp_keep[l],
+            None => keep_count(cfg.mlp, self.sparsity.mlp_s10),
+        }
+    }
+
+    /// Per-head QK dims layer `l` keeps (see [`PruneOpts::mlp_keep`]).
+    pub fn attn_keep(&self, cfg: &ModelConfig, l: usize) -> usize {
+        match &self.alloc {
+            Some(a) => a.qk_keep[l],
+            None => keep_count(cfg.dh(), self.sparsity.attn_s10),
         }
     }
 }
@@ -281,16 +312,17 @@ fn prune_corp(
     let mut sections = Sections::new();
     let dh = cfg.dh();
     let h = cfg.heads;
-    let dqk = crate::model::keep_count(dh, opts.sparsity.attn_s10);
 
+    // A layer contributes a job only when it actually sheds units — under a
+    // global allocation layers may differ (some staying dense).
     let mut jobs: Vec<Job> = Vec::new();
-    if opts.sparsity.mlp_s10 > 0 {
-        for l in 0..cfg.layers {
+    for l in 0..cfg.layers {
+        if opts.mlp_keep(cfg, l) < cfg.mlp {
             jobs.push(Job::Mlp { l });
         }
     }
-    if opts.sparsity.attn_s10 > 0 {
-        for l in 0..cfg.layers {
+    for l in 0..cfg.layers {
+        if opts.attn_keep(cfg, l) < dh {
             for head in 0..h {
                 jobs.push(Job::Head { l, head });
             }
@@ -310,13 +342,14 @@ fn prune_corp(
                 let w2 = dense.expect(&format!("blocks.{l}.mlp.w2"))?;
                 let b2 = dense.expect(&format!("blocks.{l}.mlp.b2"))?;
                 let rank_t = crate::util::Stopwatch::start();
-                let scores = score_mlp(
+                let scores = score_mlp_zoo(
                     opts.criterion,
-                    &ls.hidden.energy(),
+                    &ls.hidden,
                     &ls.active.active_prob(),
                     w2,
+                    opts.lambda,
                 );
-                let (kept, pruned) = partition(&scores, opts.sparsity.mlp_s10);
+                let (kept, pruned) = partition_k(&scores, opts.mlp_keep(cfg, l));
                 let rank_s = rank_t.secs();
                 // First layer: always a column gather.
                 let w1g = w1.gather_cols(&kept);
@@ -350,9 +383,10 @@ fn prune_corp(
                 let bk = dense.expect(&format!("blocks.{l}.attn.bk"))?;
                 let qh = per_head(&ls.q, head);
                 let kh = per_head(&ls.k, head);
+                let dqk = opts.attn_keep(cfg, l);
                 let rank_t = crate::util::Stopwatch::start();
-                let scores = score_attn_logit_energy(&qh, &kh);
-                let (kept, pruned) = partition(&scores, opts.sparsity.attn_s10);
+                let scores = score_attn_zoo(opts.criterion, &qh, &kh, opts.lambda);
+                let (kept, pruned) = partition_k(&scores, dqk);
                 let rank_s = rank_t.secs();
                 let comp_t = crate::util::Stopwatch::start();
                 let jo = if compensate {
@@ -428,6 +462,7 @@ fn prune_corp(
                 }
             }
             JobOut::Head { l, head, wq, bq, wk, bk, rho2 } => {
+                let dqk = opts.attn_keep(cfg, l);
                 let slot = attn_new[l].get_or_insert_with(|| {
                     (
                         vec![0.0f32; cfg.d * h * dqk],
@@ -450,6 +485,7 @@ fn prune_corp(
     }
     for (l, slot) in attn_new.into_iter().enumerate() {
         if let Some((nwq, nbq, nwk, nbk)) = slot {
+            let dqk = opts.attn_keep(cfg, l);
             out.insert(format!("blocks.{l}.attn.wq"), Tensor::from_vec(&[cfg.d, h * dqk], nwq));
             out.insert(format!("blocks.{l}.attn.bq"), Tensor::from_vec(&[h * dqk], nbq));
             out.insert(format!("blocks.{l}.attn.wk"), Tensor::from_vec(&[cfg.d, h * dqk], nwk));
@@ -535,7 +571,22 @@ mod tests {
     fn default_opts_sane() {
         let o = PruneOpts::default();
         assert_eq!(o.method, Method::Corp);
-        assert_eq!(o.criterion, MlpCriterion::Combined);
+        assert_eq!(o.criterion, Criterion::Mlp(MlpCriterion::Combined));
+        assert!(o.alloc.is_none());
         assert!(o.lambda > 0.0);
+    }
+
+    #[test]
+    fn keep_helpers_prefer_allocation() {
+        let cfg = crate::model::ModelConfig::by_name("vit_t").unwrap();
+        let mut o = PruneOpts::default();
+        assert_eq!(o.mlp_keep(cfg, 0), keep_count(cfg.mlp, 5));
+        assert_eq!(o.attn_keep(cfg, 0), keep_count(cfg.dh(), 5));
+        o.alloc = Some(Allocation {
+            mlp_keep: (0..cfg.layers).map(|l| cfg.mlp - l).collect(),
+            qk_keep: vec![3; cfg.layers],
+        });
+        assert_eq!(o.mlp_keep(cfg, 2), cfg.mlp - 2);
+        assert_eq!(o.attn_keep(cfg, 1), 3);
     }
 }

@@ -4,7 +4,11 @@
 //! head dimensions with expected logit energy. Per the paper's thesis, the
 //! ranking is deliberately simple — compensation does the heavy lifting.
 
+use std::cmp::Ordering;
+
+use crate::linalg::{Cholesky, Mat};
 use crate::model::keep_count;
+use crate::stats::MomentAccumulator;
 use crate::tensor::Tensor;
 
 /// MLP channel ranking criterion.
@@ -32,6 +36,158 @@ impl MlpCriterion {
 
     pub fn all() -> [MlpCriterion; 4] {
         [MlpCriterion::ActEnergy, MlpCriterion::Magnitude, MlpCriterion::Combined, MlpCriterion::ActiveProb]
+    }
+}
+
+/// Pruning criterion for the full zoo: the paper's simple MLP signals plus
+/// the calibration-statistics-only criteria from related one-shot work.
+/// Every member is computable from the one-pass calibration statistics the
+/// compensation path already streams — no gradients, no extra passes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Criterion {
+    /// The existing per-scope signals (`score_mlp` for channels,
+    /// logit energy for head dims) — the paper's defaults.
+    Mlp(MlpCriterion),
+    /// Variance-based (VBP/Berisha-style): rank by activation variance
+    /// (MLP channels) / var(q)·var(k) (head dims).
+    Variance,
+    /// OBS/CAP-style correlation-aware saliency from the calibration Gram:
+    /// ‖W₂[i,:]‖² / [(Σ + λ·scale·I)⁻¹]_ii for MLP channels, and the
+    /// analogous inverse-Gram diagonal for head dims.
+    Obs,
+    /// Attention-logit-energy signal applied to both scopes (for MLP
+    /// channels this degrades to plain activation energy).
+    Energy,
+}
+
+impl Criterion {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Criterion::Mlp(c) => c.label(),
+            Criterion::Variance => "variance",
+            Criterion::Obs => "obs",
+            Criterion::Energy => "energy",
+        }
+    }
+
+    /// The criterion zoo swept by the bench table: one representative of the
+    /// paper's combined default plus each alternative scoring family.
+    pub fn zoo() -> [Criterion; 4] {
+        [Criterion::Mlp(MlpCriterion::Combined), Criterion::Variance, Criterion::Obs, Criterion::Energy]
+    }
+}
+
+/// Diagonal of `(m + λ·scale·I)⁻¹` via Cholesky (scale = mean diagonal, so
+/// λ is unitless like the compensation ridge). Shared by the OBS-style
+/// scores for both scopes.
+fn ridge_inverse_diag(m: &Mat, lambda: f64) -> Vec<f64> {
+    let d = m.r;
+    let scale = (m.trace() / d.max(1) as f64).max(1e-12);
+    let reg = m.add_diag(lambda * scale);
+    let (f, _) = Cholesky::new_with_jitter(&reg);
+    let inv = f.solve_mat(&Mat::eye(d));
+    (0..d).map(|i| inv.at(i, i)).collect()
+}
+
+/// Score MLP hidden channels under any zoo criterion, straight from the
+/// layer's calibration accumulator. `Mlp(_)` delegates to [`score_mlp`];
+/// the alternatives use the variance / inverse-Gram views of the same
+/// one-pass statistics.
+pub fn score_mlp_zoo(
+    crit: Criterion,
+    acc: &MomentAccumulator,
+    active_prob: &[f64],
+    w2: &Tensor,
+    lambda: f64,
+) -> Vec<f64> {
+    match crit {
+        Criterion::Mlp(c) => score_mlp(c, &acc.energy(), active_prob, w2),
+        Criterion::Energy => acc.energy(),
+        Criterion::Variance => acc.variance(),
+        Criterion::Obs => {
+            // OBS saliency for removing channel i of the output projection:
+            // ‖W₂[i,:]‖² / [H⁻¹]_ii with H = E[xxᵀ] + λ·scale·I (the layer's
+            // local Hessian under squared reconstruction error).
+            let o = acc.d;
+            assert_eq!(w2.shape()[0], o);
+            let inv_diag = ridge_inverse_diag(&acc.second_moment(), lambda);
+            (0..o)
+                .map(|i| {
+                    let wn: f64 = w2.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum();
+                    wn / inv_diag[i].max(1e-300)
+                })
+                .collect()
+        }
+    }
+}
+
+/// Per-dimension variance over all `[B·n]` rows of a per-head `[B, n, dh]`
+/// slab (clamped at 0, matching the accumulator contract).
+fn slab_variance(t: &Tensor) -> Vec<f64> {
+    let shape = t.shape();
+    let (b, n, dh) = (shape[0], shape[1], shape[2]);
+    let rows = (b * n) as f64;
+    let mut sum = vec![0.0f64; dh];
+    let mut sq = vec![0.0f64; dh];
+    for r in 0..b * n {
+        for j in 0..dh {
+            let v = t.data()[r * dh + j] as f64;
+            sum[j] += v;
+            sq[j] += v * v;
+        }
+    }
+    (0..dh)
+        .map(|j| {
+            let m = sum[j] / rows;
+            (sq[j] / rows - m * m).max(0.0)
+        })
+        .collect()
+}
+
+/// `[dh, dh]` uncentered Gram over all rows of a per-head `[B, n, dh]` slab.
+fn slab_gram(t: &Tensor) -> Mat {
+    let shape = t.shape();
+    let (b, n, dh) = (shape[0], shape[1], shape[2]);
+    let mut g = Mat::zeros(dh, dh);
+    for r in 0..b * n {
+        let row = &t.data()[r * dh..(r + 1) * dh];
+        for i in 0..dh {
+            let vi = row[i] as f64;
+            for j in i..dh {
+                g.a[i * dh + j] += vi * row[j] as f64;
+            }
+        }
+    }
+    for i in 0..dh {
+        for j in 0..i {
+            g.a[i * dh + j] = g.a[j * dh + i];
+        }
+    }
+    let rows = (b * n).max(1) as f64;
+    for v in g.a.iter_mut() {
+        *v /= rows;
+    }
+    g
+}
+
+/// Score one head's QK dimensions under any zoo criterion. `q`, `k`:
+/// `[B, n, dh]` captured calibration slabs for that head.
+/// `Mlp(_)` and `Energy` use the paper's logit-energy signal (Alg. 4);
+/// `Variance` ranks by var(q_j)·var(k_j); `Obs` by the inverse-Gram
+/// saliency 1 / ([(G_q+λI)⁻¹]_jj · [(G_k+λI)⁻¹]_jj).
+pub fn score_attn_zoo(crit: Criterion, q: &Tensor, k: &Tensor, lambda: f64) -> Vec<f64> {
+    match crit {
+        Criterion::Mlp(_) | Criterion::Energy => score_attn_logit_energy(q, k),
+        Criterion::Variance => {
+            let vq = slab_variance(q);
+            let vk = slab_variance(k);
+            vq.iter().zip(&vk).map(|(&a, &b)| a * b).collect()
+        }
+        Criterion::Obs => {
+            let iq = ridge_inverse_diag(&slab_gram(q), lambda);
+            let ik = ridge_inverse_diag(&slab_gram(k), lambda);
+            iq.iter().zip(&ik).map(|(&a, &b)| 1.0 / (a * b).max(1e-300)).collect()
+        }
     }
 }
 
@@ -87,20 +243,39 @@ pub fn score_attn_logit_energy(q: &Tensor, k: &Tensor) -> Vec<f64> {
     scores
 }
 
-/// Partition 0..dim into (kept, pruned) keeping the `keep_count(dim, s10)`
-/// highest-scoring indices. Kept/pruned lists are sorted ascending so that
-/// gathers are deterministic.
-pub fn partition(scores: &[f64], s10: u8) -> (Vec<usize>, Vec<usize>) {
+/// Descending comparator with NaN pinned last. `total_cmp` alone is NaN-safe
+/// but orders +NaN *above* +∞ — a descending `total_cmp` sort would rank a
+/// NaN score as the most important channel. Degenerate calibration stats
+/// must instead prune NaN-scored channels first, so NaN sorts after every
+/// finite (and infinite) value regardless of sign bit.
+pub fn nan_last_desc(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => b.total_cmp(&a),
+    }
+}
+
+/// Partition 0..dim into (kept, pruned) keeping the `k` highest-scoring
+/// indices. Kept/pruned lists are sorted ascending so that gathers are
+/// deterministic. NaN scores deterministically land in the pruned set
+/// (see [`nan_last_desc`]); ties break on index.
+pub fn partition_k(scores: &[f64], k: usize) -> (Vec<usize>, Vec<usize>) {
     let dim = scores.len();
-    let k = keep_count(dim, s10);
+    let k = k.min(dim);
     let mut idx: Vec<usize> = (0..dim).collect();
-    // Sort by score descending, tie-break on index for determinism.
-    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    idx.sort_by(|&a, &b| nan_last_desc(scores[a], scores[b]).then(a.cmp(&b)));
     let mut kept: Vec<usize> = idx[..k].to_vec();
     let mut pruned: Vec<usize> = idx[k..].to_vec();
     kept.sort_unstable();
     pruned.sort_unstable();
     (kept, pruned)
+}
+
+/// [`partition_k`] at the uniform-sparsity keep count `keep_count(dim, s10)`.
+pub fn partition(scores: &[f64], s10: u8) -> (Vec<usize>, Vec<usize>) {
+    partition_k(scores, keep_count(scores.len(), s10))
 }
 
 #[cfg(test)]
@@ -183,7 +358,82 @@ mod tests {
         let qs = Tensor::from_vec(&[b, n, dh], q);
         let ks = Tensor::from_vec(&[b, n, dh], k);
         let scores = score_attn_logit_energy(&qs, &ks);
-        let best = scores.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let best = scores.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
         assert_eq!(best, 1);
+    }
+
+    #[test]
+    fn partition_nan_and_zero_variance_regression() {
+        // A calibration distribution with a constant (zero-variance) channel
+        // scores 0.0 and a degenerate channel scores NaN: ranking must not
+        // panic, and the NaN channel must deterministically be pruned first.
+        let scores = vec![0.7, f64::NAN, 0.0, 3.0, f64::NAN, 1.2];
+        let (kept, pruned) = partition(&scores, 5); // keep 3 of 6
+        assert_eq!(kept, vec![0, 3, 5]);
+        assert_eq!(pruned, vec![1, 2, 4]);
+        // NaN sorts below everything, including -inf and the zero-variance 0.0.
+        let (kept2, pruned2) = partition_k(&[f64::NAN, f64::NEG_INFINITY, 0.0], 2);
+        assert_eq!(kept2, vec![1, 2]);
+        assert_eq!(pruned2, vec![0]);
+        // All-NaN stays deterministic: index order.
+        let (kept3, _) = partition_k(&[f64::NAN, f64::NAN, f64::NAN], 2);
+        assert_eq!(kept3, vec![0, 1]);
+    }
+
+    #[test]
+    fn zoo_scores_from_degenerate_stats_rank_without_panic() {
+        // Constant-zero channel + constant non-zero channel + varying channel:
+        // every zoo criterion must produce finite, non-negative scores that
+        // feed partition without panicking.
+        let o = 3;
+        let rows = 32;
+        let mut x = vec![0.0f32; rows * o];
+        for r in 0..rows {
+            x[r * o] = 0.0;
+            x[r * o + 1] = 0.5;
+            x[r * o + 2] = if r % 2 == 0 { 2.0 } else { -2.0 };
+        }
+        let mut acc = MomentAccumulator::new(o);
+        acc.add_batch(&x, rows);
+        let active = vec![0.0, 1.0, 1.0];
+        let w2 = Tensor::from_vec(&[o, 2], vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        for crit in Criterion::zoo() {
+            let scores = score_mlp_zoo(crit, &acc, &active, &w2, 1e-2);
+            assert_eq!(scores.len(), o);
+            assert!(
+                scores.iter().all(|s| s.is_finite() && *s >= 0.0),
+                "{}: {scores:?}",
+                crit.label()
+            );
+            let (kept, pruned) = partition_k(&scores, 2);
+            assert_eq!(kept.len(), 2);
+            assert_eq!(pruned.len(), 1);
+            // The varying high-energy channel always survives.
+            assert!(kept.contains(&2), "{}: kept {kept:?}", crit.label());
+        }
+    }
+
+    #[test]
+    fn attn_zoo_scores_identify_hot_dimension() {
+        let (b, n, dh) = (3, 5, 4);
+        let mut rng = crate::util::Pcg64::new(5);
+        let mut q = vec![0.0f32; b * n * dh];
+        let mut k = vec![0.0f32; b * n * dh];
+        for i in 0..b * n {
+            for j in 0..dh {
+                let scale = if j == 2 { 8.0 } else { 1.0 };
+                q[i * dh + j] = rng.normal_f32(0.0, scale);
+                k[i * dh + j] = rng.normal_f32(0.0, scale);
+            }
+        }
+        let qs = Tensor::from_vec(&[b, n, dh], q);
+        let ks = Tensor::from_vec(&[b, n, dh], k);
+        for crit in Criterion::zoo() {
+            let scores = score_attn_zoo(crit, &qs, &ks, 1e-2);
+            assert_eq!(scores.len(), dh);
+            assert!(scores.iter().all(|s| s.is_finite()), "{}: {scores:?}", crit.label());
+            let best = scores.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+            assert_eq!(best, 2, "{}: {scores:?}", crit.label());
+        }
     }
 }

@@ -700,6 +700,44 @@ impl<'a> ModelParams<'a> {
         })
     }
 
+    /// [`ModelParams::read_at_w`] with *per-layer* pruned dims — the input
+    /// convention of the layered `fwd_*` artifacts produced by the global
+    /// FLOPs-budget allocator. Each block's 16 parameters are validated
+    /// against that layer's own `(dqk, o)`.
+    pub(crate) fn read_layered_w(
+        cfg: &ModelConfig,
+        dqk: &[usize],
+        o: &[usize],
+        w8: bool,
+        inp: &mut In<'_, 'a>,
+    ) -> Result<Self> {
+        if dqk.len() != cfg.layers || o.len() != cfg.layers {
+            bail!(
+                "layered dims: {} qk / {} mlp entries for {} layers",
+                dqk.len(),
+                o.len(),
+                cfg.layers
+            );
+        }
+        let embed = EmbedParams::read(cfg, inp)?;
+        let mut blocks = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            blocks.push(BlockParams::read_w(cfg, dqk[l], o[l], w8, inp)?);
+        }
+        let out_dim = match cfg.kind {
+            ModelKind::Vit => cfg.classes,
+            ModelKind::Gpt => cfg.vocab,
+        };
+        Ok(ModelParams {
+            embed,
+            blocks,
+            head_ln_g: inp.slice(cfg.d, "head.ln.g")?,
+            head_ln_b: inp.slice(cfg.d, "head.ln.b")?,
+            head_w: inp.slice(cfg.d * out_dim, "head.w")?,
+            head_b: inp.slice(out_dim, "head.b")?,
+        })
+    }
+
     /// Build from a flat slice list in spec order (the train path, where
     /// parameters live in mutable buffers rather than `Input`s).
     pub(crate) fn from_slices(cfg: &ModelConfig, flat: &[&'a [f32]]) -> Self {
@@ -750,6 +788,45 @@ pub(crate) fn forward_example(
     };
     for bp in &p.blocks {
         x = block_one(cfg, dqk, o, bp, &x, causal, false).y;
+    }
+    let xn = layernorm(&x, n, d, p.head_ln_g, p.head_ln_b);
+    let out_dim = match cfg.kind {
+        ModelKind::Vit => cfg.classes,
+        ModelKind::Gpt => cfg.vocab,
+    };
+    match cfg.kind {
+        ModelKind::Vit => {
+            let mut logits = p.head_b.to_vec();
+            for (c, &xv) in xn[..d].iter().enumerate() {
+                let wrow = &p.head_w[c * out_dim..(c + 1) * out_dim];
+                for (j, lv) in logits.iter_mut().enumerate() {
+                    *lv += xv * wrow[j];
+                }
+            }
+            Ok(logits)
+        }
+        ModelKind::Gpt => Ok(linear(&xn, n, d, p.head_w, out_dim, Some(p.head_b))),
+    }
+}
+
+/// [`forward_example`] at per-layer pruned dims: block `l` runs at
+/// `(dqk[l], o[l])`. The uniform path is the special case where every layer
+/// shares one shape.
+pub(crate) fn forward_example_layered(
+    cfg: &ModelConfig,
+    dqk: &[usize],
+    o: &[usize],
+    p: &ModelParams<'_>,
+    inp: ExampleInput<'_>,
+) -> Result<Vec<f32>> {
+    let (n, d) = (cfg.n_ctx, cfg.d);
+    let causal = cfg.kind == ModelKind::Gpt;
+    let mut x = match inp {
+        ExampleInput::Vit(tokens) => vit_embed_one(cfg, &p.embed, tokens),
+        ExampleInput::Gpt(ids) => gpt_embed_one(cfg, &p.embed, ids)?,
+    };
+    for (l, bp) in p.blocks.iter().enumerate() {
+        x = block_one(cfg, dqk[l], o[l], bp, &x, causal, false).y;
     }
     let xn = layernorm(&x, n, d, p.head_ln_g, p.head_ln_b);
     let out_dim = match cfg.kind {
@@ -897,6 +974,65 @@ pub(crate) fn run_forward(
             let p = ModelParams::read_at_w(cfg, dqk, o, w8, inp)?;
             let rows: Vec<Result<Vec<f32>>> = threads::parallel_map(b, |e| {
                 forward_example(cfg, dqk, o, &p, ExampleInput::Gpt(&ids[e * n..(e + 1) * n]))
+            });
+            let mut logits = Vec::with_capacity(b * n * cfg.vocab);
+            for r in rows {
+                logits.extend_from_slice(&r?);
+            }
+            Ok(vec![Tensor::from_vec(&[b, n, cfg.vocab], logits)])
+        }
+    }
+}
+
+/// `fwd_*` with `_qv`/`_ov` per-layer dim lists: the layered analogue of
+/// [`run_forward`], serving the allocator's non-uniform stores. Same input
+/// convention (data first, then `param_spec_layered` order), same parallel
+/// per-example fan-out — each block's GEMMs just run at that layer's own
+/// retained widths.
+pub(crate) fn run_forward_layered(
+    cfg: &'static ModelConfig,
+    dqk: &[usize],
+    o: &[usize],
+    b: usize,
+    w8: bool,
+    inp: &mut In<'_, '_>,
+) -> Result<Vec<Tensor>> {
+    let n = cfg.n_ctx;
+    match cfg.kind {
+        ModelKind::Vit => {
+            let tokens = inp.tensor()?;
+            check_slab(tokens, &[b, cfg.patches, cfg.patch_dim], "fwd tokens")?;
+            let p = ModelParams::read_layered_w(cfg, dqk, o, w8, inp)?;
+            let per = cfg.patches * cfg.patch_dim;
+            let rows: Vec<Result<Vec<f32>>> = threads::parallel_map(b, |e| {
+                forward_example_layered(
+                    cfg,
+                    dqk,
+                    o,
+                    &p,
+                    ExampleInput::Vit(&tokens.data()[e * per..(e + 1) * per]),
+                )
+            });
+            let mut logits = Vec::with_capacity(b * cfg.classes);
+            for r in rows {
+                logits.extend_from_slice(&r?);
+            }
+            Ok(vec![Tensor::from_vec(&[b, cfg.classes], logits)])
+        }
+        ModelKind::Gpt => {
+            let ids = inp.ints()?;
+            if ids.len() != b * n {
+                bail!("fwd ids: {} values, expected {}", ids.len(), b * n);
+            }
+            let p = ModelParams::read_layered_w(cfg, dqk, o, w8, inp)?;
+            let rows: Vec<Result<Vec<f32>>> = threads::parallel_map(b, |e| {
+                forward_example_layered(
+                    cfg,
+                    dqk,
+                    o,
+                    &p,
+                    ExampleInput::Gpt(&ids[e * n..(e + 1) * n]),
+                )
             });
             let mut logits = Vec::with_capacity(b * n * cfg.vocab);
             for r in rows {

@@ -23,8 +23,9 @@ use crate::model::ModelConfig;
 use crate::runtime::Input;
 use crate::tensor::Tensor;
 
-/// A parsed artifact name.
-#[derive(Clone, Copy, Debug)]
+/// A parsed artifact name. (Not `Copy`: the layered fused-forward variant
+/// carries per-layer dim vectors.)
+#[derive(Clone, Debug)]
 pub(crate) enum Op {
     Embed { cfg: &'static ModelConfig, b: usize },
     Head { cfg: &'static ModelConfig, b: usize },
@@ -35,6 +36,10 @@ pub(crate) enum Op {
     /// (name suffix `_w8`) selects the int8 weight-quantized variant: the
     /// six block GEMM projections arrive as [`Input::Q8`] instead of f32.
     Forward { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize, w8: bool },
+    /// Fused full forward at *per-layer* pruned dims
+    /// (`fwd_vit_t_qv16-16-12_ov192-200-88_b8`) — the allocator's
+    /// non-uniform stores. Native-only; `w8` as in [`Op::Forward`].
+    ForwardLayered { cfg: &'static ModelConfig, dqk: Vec<usize>, o: Vec<usize>, b: usize, w8: bool },
     /// Incremental KV-cached decode at pruned dims (autoregressive serving);
     /// `w8` as in [`Op::Forward`].
     Decode { cfg: &'static ModelConfig, dqk: usize, o: usize, b: usize, w8: bool },
@@ -46,6 +51,17 @@ pub(crate) enum Op {
 fn tail_num<'s>(s: &'s str, sep: &str) -> Option<(&'s str, usize)> {
     let (head, num) = s.rsplit_once(sep)?;
     num.parse().ok().map(|n| (head, n))
+}
+
+/// Like [`tail_num`] but for a dash-joined per-layer dim list
+/// (`..._qv16-16-12` → `[16, 16, 12]`). Empty lists fail the parse.
+fn tail_dims<'s>(s: &'s str, sep: &str) -> Option<(&'s str, Vec<usize>)> {
+    let (head, list) = s.rsplit_once(sep)?;
+    let dims: Option<Vec<usize>> = list.split('-').map(|t| t.parse().ok()).collect();
+    match dims {
+        Some(d) if !d.is_empty() => Some((head, d)),
+        _ => None,
+    }
 }
 
 pub(crate) fn parse(name: &str) -> Option<Op> {
@@ -66,6 +82,18 @@ pub(crate) fn parse(name: &str) -> Option<Op> {
             None => (rest, false),
         };
         let (rest, b) = tail_num(rest, "_b")?;
+        // Layered form first: `_qv`/`_ov` carry dash-joined per-layer dims.
+        // (Unambiguous with the uniform `_q`/`_o` form — a `_o` rsplit on a
+        // layered name would leave a leading `v`, which fails the numeric
+        // parse.)
+        if rest.contains("_ov") {
+            let (rest, o) = tail_dims(rest, "_ov")?;
+            let (m, dqk) = tail_dims(rest, "_qv")?;
+            return ModelConfig::by_name(m).and_then(|cfg| {
+                (dqk.len() == cfg.layers && o.len() == cfg.layers)
+                    .then_some(Op::ForwardLayered { cfg, dqk, o, b, w8 })
+            });
+        }
         let (rest, o) = tail_num(rest, "_o")?;
         let (m, dqk) = tail_num(rest, "_q")?;
         return ModelConfig::by_name(m).map(|cfg| Op::Forward { cfg, dqk, o, b, w8 });
@@ -153,6 +181,9 @@ pub fn execute(name: &str, inputs: &[Input<'_>]) -> Result<Vec<Tensor>> {
             forward::run_block(cfg, cfg.dh(), cfg.mlp, b, true, &mut inp)
         }
         Op::Forward { cfg, dqk, o, b, w8 } => forward::run_forward(cfg, dqk, o, b, w8, &mut inp),
+        Op::ForwardLayered { cfg, dqk, o, b, w8 } => {
+            forward::run_forward_layered(cfg, &dqk, &o, b, w8, &mut inp)
+        }
         Op::Decode { cfg, dqk, o, b, w8 } => forward::run_decode(cfg, dqk, o, b, w8, &mut inp),
         Op::MlpOnly { cfg, o, b } => forward::run_mlponly(cfg, o, b, &mut inp),
         Op::EvLoss { cfg } => forward::run_evloss(cfg, &mut inp),
@@ -299,6 +330,23 @@ mod tests {
             }
             other => panic!("bad parse: {other:?}"),
         }
+        // Layered fused forward: per-layer dims, dash-joined.
+        match parse("fwd_vit_t_qv16-16-12-16-16-16_ov192-200-88-192-192-192_b8") {
+            Some(Op::ForwardLayered { cfg, dqk, o, b, w8 }) => {
+                assert_eq!(cfg.name, "vit_t");
+                assert_eq!(dqk, vec![16, 16, 12, 16, 16, 16]);
+                assert_eq!(o, vec![192, 200, 88, 192, 192, 192]);
+                assert_eq!((b, w8), (8, false));
+            }
+            other => panic!("bad parse: {other:?}"),
+        }
+        match parse("fwd_vit_t_qv32-32-32-32-32-32_ov384-384-384-384-384-384_b16_w8") {
+            Some(Op::ForwardLayered { cfg, w8, .. }) => {
+                assert_eq!(cfg.name, "vit_t");
+                assert!(w8);
+            }
+            other => panic!("bad parse: {other:?}"),
+        }
         assert!(matches!(parse("head_gpt_s_b8"), Some(Op::Head { b: 8, .. })));
         assert!(matches!(parse("lnf_vit_t_b16"), Some(Op::Lnf { .. })));
         assert!(matches!(parse("evloss_gpt_s"), Some(Op::EvLoss { .. })));
@@ -314,5 +362,8 @@ mod tests {
         // `_w8` is only meaningful on fwd_/dec_; elsewhere it breaks parse.
         assert!(parse("block_vit_t_q32_o384_b16_w8").is_none());
         assert!(parse("fwd_gpt_s_q32_o512_b4_w16").is_none());
+        // Layered dim lists must match the model's layer count exactly.
+        assert!(parse("fwd_vit_t_qv16-16_ov192-192_b8").is_none());
+        assert!(parse("fwd_vit_t_qv16-16-12-16-16-x_ov192-192-192-192-192-192_b8").is_none());
     }
 }

@@ -844,7 +844,7 @@ fn run_units_on(
                                 if w.is_empty() {
                                     None
                                 } else {
-                                    w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                                    w.sort_by(|a, b| a.total_cmp(b));
                                     let p = percentile(w, 0.99);
                                     w.clear();
                                     Some(p)
@@ -1102,11 +1102,11 @@ pub(crate) fn finalize_stats(
     for (u, mut records) in per_unit.into_iter().enumerate() {
         records.sort_by_key(|r| r.id);
         let mut totals: Vec<f64> = records.iter().map(|r| r.total_ms).collect();
-        totals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        totals.sort_by(|a, b| a.total_cmp(b));
         let mut queues: Vec<f64> = records.iter().map(|r| r.queue_ms).collect();
-        queues.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        queues.sort_by(|a, b| a.total_cmp(b));
         let mut firsts: Vec<f64> = records.iter().map(|r| r.first_ms).collect();
-        firsts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        firsts.sort_by(|a, b| a.total_cmp(b));
         let multi: Vec<&RequestRecord> = records.iter().filter(|r| r.steps > 1).collect();
         let ub: Vec<&(usize, usize, usize, f64, usize)> =
             batch_log.iter().filter(|&&(bu, ..)| bu == u).collect();

@@ -353,7 +353,7 @@ impl Sim<'_, '_> {
                 if w.is_empty() {
                     None
                 } else {
-                    w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    w.sort_by(|a, b| a.total_cmp(b));
                     let p = crate::util::bench::percentile(w, 0.99);
                     w.clear();
                     Some(p)

@@ -72,9 +72,29 @@ impl MomentAccumulator {
 
     /// Per-channel second moment E[x_i²] (the activation-energy ranking
     /// signal of Alg. 2).
+    ///
+    /// Clamped at 0: the Gram diagonal is mathematically non-negative, but
+    /// the f32 SYRK accumulation can drift a hair below zero for channels
+    /// that are (near-)constant zero. Downstream score derivations take
+    /// `sqrt(energy)` and feed sort comparators, so the clamp lives here at
+    /// the accumulator boundary rather than at every call site.
     pub fn energy(&self) -> Vec<f64> {
         assert!(self.count > 0);
-        (0..self.d).map(|i| self.gram[i * self.d + i] as f64 / self.count as f64).collect()
+        (0..self.d)
+            .map(|i| (self.gram[i * self.d + i] as f64 / self.count as f64).max(0.0))
+            .collect()
+    }
+
+    /// Per-channel variance E[x_i²] − μ_i², clamped at 0.
+    ///
+    /// The clamp is part of the accumulator contract (same reasoning as
+    /// [`MomentAccumulator::energy`]): for a constant channel the two terms
+    /// cancel only up to floating-point error, and a tiny negative variance
+    /// turns into NaN under `sqrt` in variance-based rankings.
+    pub fn variance(&self) -> Vec<f64> {
+        assert!(self.count > 0);
+        let mu = self.mean();
+        self.energy().iter().zip(&mu).map(|(&e, &m)| (e - m * m).max(0.0)).collect()
     }
 
     /// Full covariance Σ = E[xxᵀ] − μμᵀ as an f64 matrix.
@@ -298,6 +318,47 @@ mod tests {
         let e = acc.energy();
         assert!((e[0] - 5.0).abs() < 1e-6); // (1+9)/2
         assert!((e[1] - 10.0).abs() < 1e-6); // (4+16)/2
+    }
+
+    #[test]
+    fn accumulator_contract_energy_and_variance_nonnegative() {
+        // Constant channel (variance exactly 0 up to fp error) next to a
+        // varying one: energy/variance must come back finite and >= 0, and
+        // the constant channel's variance must be clamped to exactly 0.
+        let mut acc = MomentAccumulator::new(3);
+        let rows = 64;
+        let mut x = vec![0.0f32; rows * 3];
+        for r in 0..rows {
+            x[r * 3] = 0.3; // constant
+            x[r * 3 + 1] = if r % 2 == 0 { 1.0 } else { -1.0 };
+            x[r * 3 + 2] = 0.0; // constant zero
+        }
+        acc.add_batch(&x, rows);
+        let e = acc.energy();
+        let v = acc.variance();
+        for (i, (&ei, &vi)) in e.iter().zip(&v).enumerate() {
+            assert!(ei.is_finite() && ei >= 0.0, "energy[{i}] = {ei}");
+            assert!(vi.is_finite() && vi >= 0.0, "variance[{i}] = {vi}");
+            // sqrt must be safe on the contract outputs.
+            assert!(ei.sqrt().is_finite() && vi.sqrt().is_finite());
+        }
+        assert_eq!(v[0], 0.0, "constant channel variance not clamped: {}", v[0]);
+        assert_eq!(v[2], 0.0);
+        assert!((v[1] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn variance_matches_covariance_diagonal() {
+        let mut rng = Pcg64::new(77);
+        let d = 7;
+        let x = gen::matrix(&mut rng, 120, d, 1.5);
+        let mut acc = MomentAccumulator::new(d);
+        acc.add_batch(&x, 120);
+        let v = acc.variance();
+        let cov = acc.covariance();
+        for i in 0..d {
+            assert!((v[i] - cov.at(i, i).max(0.0)).abs() < 1e-6, "channel {i}");
+        }
     }
 
     #[test]

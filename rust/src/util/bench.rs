@@ -42,7 +42,7 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
 /// its own timing, e.g. latency-per-request inside the serve engine).
 pub fn stats_from(name: &str, samples: &[f64]) -> BenchStats {
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
     BenchStats {
         name: name.to_string(),

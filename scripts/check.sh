@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI entrypoint: format check (advisory), clippy, tier-1 build+test, rustdoc
-# (deny warnings), and the perf harnesses (BENCH_linalg.json + a smoke run
-# of the serving engine emitting BENCH_serve.json at the repo root).
+# (deny warnings), the NaN-safe-ordering grep gate, and the perf harnesses
+# (BENCH_linalg.json + smoke runs of the serving and pruning harnesses
+# emitting BENCH_serve.json / BENCH_prune.json at the repo root).
 #
 # Usage: scripts/check.sh [--no-bench]
 set -euo pipefail
@@ -40,6 +41,17 @@ CORP_SIMD=off cargo test --manifest-path "$MANIFEST" -q --lib linalg
 echo "==> cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --manifest-path "$MANIFEST" --no-deps --quiet
 
+# NaN-safety gate: float-key orderings must use total_cmp or the
+# rank::nan_last_desc comparator. A same-line `partial_cmp(..)` +
+# `.unwrap()` in non-test source reintroduces the panic-on-NaN sorts
+# this gate exists to keep out (test code under rust/tests/ is exempt;
+# #[cfg(test)] modules inside src still trip it, deliberately).
+echo "==> grep gate: no partial_cmp(..).unwrap() orderings in rust/src"
+if grep -rn --include='*.rs' 'partial_cmp(.*)\.unwrap()' rust/src/; then
+    echo "error: NaN-unsafe float ordering (use total_cmp or rank::nan_last_desc)" >&2
+    exit 1
+fi
+
 if [[ "${1:-}" != "--no-bench" ]]; then
     # corp-bench-linalg/v2: every kernel cell times the full dispatch
     # ladder (runtime-selected SIMD tile, forced-portable via
@@ -62,6 +74,24 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # BENCH_serve.json behind.
     echo "==> bench serve smoke (CORP_BENCH_MODE=smoke)"
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- bench serve --json --out BENCH_serve.json
+
+    # corp-bench-prune/v1: the criterion zoo (combined + variance + obs +
+    # energy) × the smoke sparsity grid, each cell scored compensated
+    # (CORP) and uncompensated (naive), plus the global FLOPs allocator
+    # cells (achieved-vs-requested budget, per-layer keep vectors). A
+    # failed cell exits non-zero and leaves no stale BENCH_prune.json.
+    echo "==> bench prune smoke (CORP_BENCH_MODE=smoke)"
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- bench prune --json --out BENCH_prune.json
+
+    # Allocator CLI smoke: one global FLOPs budget on vit_t end to end —
+    # calibrate, greedy-allocate per-layer keeps, prune with compensation
+    # on the non-uniform shapes, report achieved FLOPs from the actual
+    # pruned store.
+    echo "==> prune CLI smoke (criterion zoo + --flops-budget)"
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
+        prune --model vit_t --criterion obs --sparsity 0.5 --calib 2
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
+        prune --model vit_t --criterion energy --flops-budget 60 --calib 2
 
     echo "==> serve CLI smoke (vision/exact + text/padded + gen)"
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
