@@ -8,7 +8,7 @@
 //! a paged-KV cell that turns on chunked prefill + a shared prompt
 //! opening) — reporting per-cell p50/p95/p99 latency, queueing delay,
 //! mean formed and dispatched batch sizes, steps per request, TTFT/ITL,
-//! and requests+tokens/sec (schema `corp-bench-serve/v6`). The
+//! and requests+tokens/sec (schema `corp-bench-serve/v7`). The
 //! "saturated" rate offers the whole
 //! request set at t = 0 with an ample queue, so the throughput column is
 //! the engine's capacity — this is where the pruned fast path has to beat
@@ -35,6 +35,16 @@
 //! same calibration pass, dispatched through `serve::run_engine_q8` and
 //! the `_w8` plan rung — the row where int8 throughput has to beat f32 at
 //! matching predictions (pinned by `tests/quant_equality`).
+//!
+//! v7 adds the chaos cell (`cell = "chaos"`): the same fleet served
+//! through the simulator with a deterministic fault plan injected —
+//! worker kills, dispatch faults, and a service-time delay — under
+//! per-request deadlines and a retry budget, controller off and then on
+//! (with the fault-rate degrade signal armed). The row reports goodput
+//! (non-failed fraction of offered requests), p99, and the full fault
+//! accounting (`failures`/`retries`/`timeouts`/`worker_respawns`), using
+//! a deterministic affine cost model so the trajectory is bit-stable
+//! run-to-run.
 //!
 //! v5 adds the load-spike cell (`cell = "load_spike"`): the fleet served
 //! through the deterministic discrete-event simulator under a 3× arrival
@@ -420,16 +430,124 @@ fn spike_cells(rt: &Runtime, runs: &mut Vec<Json>) -> Result<()> {
     Ok(())
 }
 
+/// The v7 chaos cell: the fleet served through the deterministic
+/// simulator with an injected fault plan — two worker kills, two dispatch
+/// faults, one service-time delay — under per-request deadlines and a
+/// retry budget, controller off and then on (fault-rate degrade signal
+/// armed). Costs are a fixed affine model, so the whole trajectory
+/// (goodput, p99, fault tallies) is bit-stable run-to-run and across
+/// machines.
+#[cfg(not(pjrt_backend))]
+fn chaos_cells(rt: &Runtime, runs: &mut Vec<Json>) -> Result<()> {
+    use crate::serve::{run_fleet_sim, ControllerOpts, FaultPlan, FleetMember, SimCost};
+
+    let (model, requests) = match bench_mode() {
+        BenchMode::Smoke => ("vit_t", 96usize),
+        BenchMode::Fast => ("vit_t", 192),
+        BenchMode::Full => ("vit_b", 256),
+    };
+    let (workers, max_batch) = (2usize, 8usize);
+    let cfg = ModelConfig::by_name(model).context("chaos cell model")?;
+    let exec = Executor::new(rt, cfg);
+    let dense = WeightStore::init(cfg, 1);
+    let popts =
+        PruneOpts { sparsity: Sparsity::of(Scope::Both, 5), calib_batches: 2, ..PruneOpts::default() };
+    let stats = calibrate(&exec, &dense, &popts)?;
+    let comp = prune(&exec, &dense, &stats, &PruneOpts { method: Method::Corp, ..popts })?;
+
+    // Deterministic affine costs (degraded rung at 40%): full-batch cost
+    // 8 ms → fleet capacity 2·8/0.008 = 2000 req/s; offer 60% of it.
+    let (base_s, per_row_s) = (0.004, 0.0005);
+    let cost = SimCost::affine(max_batch, base_s, per_row_s, &[1.0, 0.4]);
+    let cost_full = base_s + per_row_s * max_batch as f64;
+    let rate = 0.6 * (workers * max_batch) as f64 / cost_full;
+    let slo_p99_ms = 10.0 * cost_full * 1e3;
+    let chaos = FaultPlan::parse("kill=0@1,kill=1@4,fail=3,fail=7@0,delay=5:30")?;
+    let wl = VisionWorkload::new(cfg, crate::data::DATA_SEED)?;
+    for controller_on in [false, true] {
+        let eopts = EngineOpts {
+            workers,
+            rate,
+            requests,
+            max_batch,
+            max_wait: 0.004,
+            queue_cap: 64,
+            dispatch: DispatchPolicy::Auto,
+            slo_p99_ms,
+            request_timeout: 20.0 * cost_full,
+            max_retries: 2,
+            retry_backoff: 0.001,
+            chaos: Some(chaos.clone()),
+            controller: controller_on.then(|| ControllerOpts {
+                tick_s: 0.01,
+                slo_p99_ms,
+                degrade: true,
+                recover_after: 3,
+                fault_hi: 50.0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let member = FleetMember::new(&exec, &dense, &wl, requests).with_fallback(&comp.weights);
+        let s = run_fleet_sim(vec![member.erased()], std::slice::from_ref(&cost), &eopts)
+            .context("serve bench cell failed: chaos")?
+            .remove(0);
+        let goodput = s.served as f64 / requests.max(1) as f64;
+        println!(
+            "chaos  {model:12} controller={controller_on:5} w={workers} rate {rate:7.0}/s: \
+             p99 {:8.2}ms | served {:3} shed {:3} failed {:2} | {} retries {} timeouts \
+             {} respawn(s) | goodput {:5.1}%",
+            s.p99_ms,
+            s.served,
+            s.shed,
+            s.failures,
+            s.retries,
+            s.timeouts,
+            s.worker_respawns,
+            goodput * 100.0
+        );
+        runs.push(obj(vec![
+            ("cell", Json::Str("chaos".into())),
+            ("workload", Json::Str("vision".into())),
+            ("model", Json::Str(model.to_string())),
+            ("controller", Json::Bool(controller_on)),
+            ("workers", num(workers as f64)),
+            ("rate_rps", num(rate)),
+            ("requests", num(requests as f64)),
+            ("max_batch", num(max_batch as f64)),
+            ("slo_p99_ms", num(slo_p99_ms)),
+            ("request_timeout_ms", num(eopts.request_timeout * 1e3)),
+            ("retries_budget", num(eopts.max_retries as f64)),
+            ("p50_ms", num(s.p50_ms)),
+            ("p99_ms", num(s.p99_ms)),
+            ("served", num(s.served as f64)),
+            ("shed", num(s.shed as f64)),
+            ("failures", num(s.failures as f64)),
+            ("retries", num(s.retries as f64)),
+            ("timeouts", num(s.timeouts as f64)),
+            ("worker_respawns", num(s.worker_respawns as f64)),
+            ("kv_reclaimed_blocks", num(s.kv_reclaimed_blocks as f64)),
+            ("goodput_frac", num(goodput)),
+        ]));
+    }
+    Ok(())
+}
+
 /// The gated PJRT build has no threaded engine or simulator — the
-/// load-spike cell is a no-op there; the grid rows still carry the v6
-/// schema.
+/// load-spike and chaos cells are no-ops there; the grid rows still carry
+/// the v7 schema.
 #[cfg(pjrt_backend)]
 fn spike_cells(_rt: &Runtime, _runs: &mut Vec<Json>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(pjrt_backend)]
+fn chaos_cells(_rt: &Runtime, _runs: &mut Vec<Json>) -> Result<()> {
+    Ok(())
+}
+
 /// Run the serving benchmark grid; when `json_out` is set, write
-/// `BENCH_serve.json`-style output there (schema `corp-bench-serve/v6`).
+/// `BENCH_serve.json`-style output there (schema `corp-bench-serve/v7`).
 pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
     let rt = Runtime::from_default_dir()?;
     // Fail loudly, never stale-ly: if a cell errors mid-sweep the run
@@ -513,10 +631,11 @@ pub fn bench_serve(json_out: Option<&str>) -> Result<()> {
         }
     }
     spike_cells(&rt, &mut runs)?;
+    chaos_cells(&rt, &mut runs)?;
 
     if let Some(path) = json_out {
         let root = obj(vec![
-            ("schema", Json::Str("corp-bench-serve/v6".into())),
+            ("schema", Json::Str("corp-bench-serve/v7".into())),
             (
                 "mode",
                 Json::Str(

@@ -86,6 +86,7 @@ fn print_usage() {
          serve  --model vit_b --sparsity 0.5 [--workers 2] [--rate 200] [--dispatch auto]\n  \
          serve  --model gpt_s [--workload text|gen] [--prefill-chunk N] [--shared-prefix N]\n  \
          serve  ... [--controller] [--slo-p99-ms 50] [--degrade] [--spike 3]   SLO feedback loop\n  \
+         serve  ... [--request-timeout-ms 250] [--retries 2] [--chaos kill=0@1,fail=3]   fault tolerance\n  \
          generate --model gpt_s --tokens 8 [--decode kv|prefill] [--prefill-chunk N] [--verify]\n  \
          stats  --model vit_b                    Table-9 redundancy statistics\n  \
          bench  linalg|serve|prune [--json] [--out PATH]  perf harnesses (BENCH_*.json)\n  \
@@ -303,6 +304,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("shared-prefix", "gen workload: common prompt-opening length to stamp (0 = off)", "0")
         .opt("spike", "arrival-rate multiplier over the middle third of the schedule", "1")
         .opt("slo-p99-ms", "p99 latency budget, ms (0 = none)", "0")
+        .opt("request-timeout-ms", "per-request deadline per attempt, ms (0 = none)", "0")
+        .opt("retries", "retry budget for timed-out/faulted requests", "0")
+        .opt("retry-backoff-ms", "base re-enqueue backoff, ms (doubles per retry; 0 = immediate)", "0")
+        .opt("chaos", "deterministic fault plan: kill=W@B,fail=ID[@STEP],delay=ID:MS (empty = off)", "")
         .flag("controller", "enable the SLO feedback controller (adaptive wait + dispatch threshold)")
         .flag("degrade", "let the controller fall back to the pruned+compensated variant under load")
         .flag("quantize", "int8 weight-quantized serving (dequant correction folded from calibration)");
@@ -318,6 +323,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if degrade && s10 == 0 {
         bail!("--degrade needs --sparsity > 0 (the degraded rung is the pruned+compensated variant)");
     }
+    // Parse the fault plan before any model work so a malformed spec
+    // fails fast.
+    let chaos_spec = args.str("chaos");
+    let chaos = if chaos_spec.trim().is_empty() {
+        None
+    } else {
+        Some(crate::serve::FaultPlan::parse(&chaos_spec)?)
+    };
     let mut coord = Coordinator::new()?;
     let popts = PruneOpts { sparsity: Sparsity::of(Scope::Both, s10), ..PruneOpts::default() };
     // Under --degrade the primary rung is always dense and the
@@ -374,6 +387,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         kv_blocks: args.usize("kv-blocks")?,
         spike: args.f64("spike")?,
         slo_p99_ms,
+        request_timeout: args.f64("request-timeout-ms")? / 1e3,
+        max_retries: args.usize("retries")?,
+        retry_backoff: args.f64("retry-backoff-ms")? / 1e3,
+        chaos,
         controller: controller_on.then(|| crate::serve::ControllerOpts {
             slo_p99_ms,
             degrade,
@@ -450,6 +467,31 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             stats.kv_allocs,
             stats.kv_shared_hits,
             stats.kv_cow_copies
+        );
+    }
+    if stats.failures + stats.retries + stats.timeouts + stats.worker_respawns > 0
+        || eopts.chaos.is_some()
+        || eopts.request_timeout > 0.0
+    {
+        println!(
+            "faults: {} failed, {} retries, {} timeouts, {} worker respawn(s), \
+             {} kv block(s) reclaimed",
+            stats.failures,
+            stats.retries,
+            stats.timeouts,
+            stats.worker_respawns,
+            stats.kv_reclaimed_blocks
+        );
+    }
+    // Post-run leak check: every block still referenced must be pinned by
+    // the prefix registry (a deliberate cache). Anything beyond that was
+    // leaked by an aborted request — fail the run so the CI smoke catches
+    // it.
+    if stats.kv_blocks_in_use > stats.kv_registered_blocks {
+        bail!(
+            "kv pool leak: {} block(s) in use at end but only {} registry-pinned",
+            stats.kv_blocks_in_use,
+            stats.kv_registered_blocks
         );
     }
     if eopts.controller.is_some() {
@@ -730,6 +772,16 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("--controller"), "{err}");
+    }
+
+    #[test]
+    fn serve_rejects_malformed_chaos_spec() {
+        let argv: Vec<String> = ["serve", "--model", "vit_t", "--chaos", "kill=zero@1"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let err = run_cli(&argv).unwrap_err().to_string();
+        assert!(err.contains("--chaos"), "{err}");
     }
 
     #[test]

@@ -36,12 +36,13 @@
 //! freed blocks are recycled, never deallocated.
 
 use std::cell::UnsafeCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Result};
 
 use crate::runtime::native::forward::PagedKv;
+use crate::util::lock;
 
 /// Upper bound on distinct registered prefixes — keeps the registry (and
 /// the blocks it pins) from growing without bound on long serving runs.
@@ -122,6 +123,11 @@ pub struct KvPoolStats {
     pub cow_copies: u64,
     /// Prefix entries currently registered.
     pub registered_prefixes: usize,
+    /// Distinct blocks pinned by the prefix registry. These count toward
+    /// `blocks_in_use` even with no live sequence holding them — they are a
+    /// deliberate cache, not a leak, so the post-run leak check compares
+    /// `blocks_in_use` against this.
+    pub registered_blocks: usize,
 }
 
 impl KvPoolStats {
@@ -207,28 +213,31 @@ impl KvPool {
     }
 
     pub fn stats(&self) -> KvPoolStats {
-        let st = self.state.lock().unwrap();
+        let st = lock::lock(&self.state);
+        let registered: HashSet<u32> =
+            st.registry.values().flat_map(|t| t.iter().copied()).collect();
         KvPoolStats {
             block_positions: self.block,
             block_bytes: self.block_bytes(),
             blocks_in_use: st.in_use,
             peak_blocks: st.peak_in_use,
-            allocated_blocks: self.mem.read().unwrap().len(),
+            allocated_blocks: lock::read(&self.mem).len(),
             allocs: st.allocs,
             shared_hits: st.shared_hits,
             cow_copies: st.cow_copies,
             registered_prefixes: st.registry.len(),
+            registered_blocks: registered.len(),
         }
     }
 
     /// Acquire one block (refcount 1), recycling a freed block when one is
     /// available and growing the pool otherwise.
     fn alloc(&self) -> Result<u32> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock::lock(&self.state);
         let id = match st.free.pop() {
             Some(id) => id,
             None => {
-                let mut mem = self.mem.write().unwrap();
+                let mut mem = lock::write(&self.mem);
                 if self.max_blocks > 0 && mem.len() >= self.max_blocks {
                     bail!(
                         "kv pool exhausted: {} blocks in use of max {} (raise the \
@@ -255,12 +264,12 @@ impl KvPool {
     }
 
     fn retain(&self, id: u32) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock::lock(&self.state);
         st.refs[id as usize] += 1;
     }
 
     fn release(&self, id: u32) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock::lock(&self.state);
         let rc = &mut st.refs[id as usize];
         debug_assert!(*rc > 0, "release of a free block");
         *rc -= 1;
@@ -271,13 +280,13 @@ impl KvPool {
     }
 
     fn refcount(&self, id: u32) -> u32 {
-        self.state.lock().unwrap().refs[id as usize]
+        lock::lock(&self.state).refs[id as usize]
     }
 
     /// Raw (K, V) plane base pointers of `id`. Stable for the pool's
     /// lifetime.
     fn planes(&self, id: u32) -> (*mut f32, *mut f32) {
-        let mem = self.mem.read().unwrap();
+        let mem = lock::read(&self.mem);
         let bm = &mem[id as usize];
         (bm.kptr(), bm.vptr())
     }
@@ -294,7 +303,7 @@ impl KvPool {
         if max_nb == 0 {
             return None;
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock::lock(&self.state);
         for nb in (1..=max_nb).rev() {
             if let Some(blocks) = st.registry.get(&prompt[..nb * self.block]) {
                 let table = blocks.clone();
@@ -318,7 +327,7 @@ impl KvPool {
             return;
         }
         let nb = (prefix.len() / self.block).min(table.len());
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock::lock(&self.state);
         for k in 1..=nb {
             let key = &prefix[..k * self.block];
             if st.registry.contains_key(key) {
@@ -412,7 +421,7 @@ impl PagedSeq {
                 }
                 *self.table.last_mut().unwrap() = fresh_id;
                 self.pool.release(tail);
-                self.pool.state.lock().unwrap().cow_copies += 1;
+                lock::lock(&self.pool.state).cow_copies += 1;
             }
         }
         let need = (self.len + fresh).div_ceil(block);
@@ -504,6 +513,7 @@ mod tests {
         drop(a);
         let s = p.stats();
         assert_eq!(s.blocks_in_use, 0);
+        assert_eq!(s.registered_blocks, 0);
         assert_eq!(s.peak_blocks, 3);
         // A new sequence reuses the freed blocks instead of growing.
         let mut b = PagedSeq::new(p.clone());
@@ -595,8 +605,11 @@ mod tests {
         write_row0(&a, 7, 2.25);
         a.register_prefix(&prompt);
         drop(a);
-        // The registry's refcount keeps both blocks alive.
-        assert_eq!(p.stats().blocks_in_use, 2);
+        // The registry's refcount keeps both blocks alive, and the stats
+        // attribute them to the registry — no sequence leaked them.
+        let s = p.stats();
+        assert_eq!(s.blocks_in_use, 2);
+        assert_eq!(s.registered_blocks, 2);
         let mut ext = prompt.clone();
         ext.push(0);
         let (b, matched) = PagedSeq::begin(&p, &ext);

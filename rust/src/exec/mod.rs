@@ -43,6 +43,7 @@ use crate::model::{is_q8_param, LayerDims, ModelConfig, ModelKind, QuantStore, W
 use crate::runtime::native::forward::PagedKv;
 use crate::runtime::{Input, Runtime};
 use crate::tensor::Tensor;
+use crate::util::lock;
 
 /// First-max argmax over a logits row (shared by serving and generation).
 pub fn argmax(row: &[f32]) -> i32 {
@@ -88,14 +89,14 @@ impl ArtCache {
     }
 
     fn get(&self, batch: usize, make: impl FnOnce() -> String) -> Arc<str> {
-        if let Some(a) = self.0.read().unwrap().get(&batch) {
+        if let Some(a) = lock::read(&self.0).get(&batch) {
             return a.clone();
         }
-        self.0.write().unwrap().entry(batch).or_insert_with(|| Arc::from(make())).clone()
+        lock::write(&self.0).entry(batch).or_insert_with(|| Arc::from(make())).clone()
     }
 
     fn len(&self) -> usize {
-        self.0.read().unwrap().len()
+        lock::read(&self.0).len()
     }
 }
 

@@ -10,7 +10,9 @@
 //!   exact-vs-padded choice compares the *learned* cost of dispatching at
 //!   the formed size against dispatching at the padded artifact size.
 //! * [`Controller`] — per control tick, observes queue depth, arrival
-//!   rate, and per-member p99 latency ([`Obs`]) and emits [`Action`]s:
+//!   rate, per-member p99 latency, and the request fault rate
+//!   (timeouts + retries + failures per second, see [`Obs`]) and emits
+//!   [`Action`]s:
 //!   a new batch-formation `max_wait`, a new auto-dispatch fill
 //!   threshold, and — the CORP-specific knob — *variant switches*. Under
 //!   sustained pressure a member degrades from the dense plan rung to the
@@ -166,6 +168,10 @@ pub struct ControllerOpts {
     pub queue_lo: f64,
     /// Floor for the adapted batch-formation `max_wait` (seconds).
     pub wait_lo: f64,
+    /// Request faults per second (timeouts + retries + failures) at or
+    /// above which a tick counts as breached, alongside queue and latency
+    /// pressure. 0 disables the fault signal.
+    pub fault_hi: f64,
 }
 
 impl Default for ControllerOpts {
@@ -180,6 +186,7 @@ impl Default for ControllerOpts {
             queue_hi: 0.5,
             queue_lo: 0.125,
             wait_lo: 0.0005,
+            fault_hi: 0.0,
         }
     }
 }
@@ -212,6 +219,9 @@ pub struct Obs<'a> {
     pub queue_frac: f64,
     /// Arrivals per second observed over the last tick window.
     pub arrival_rate: f64,
+    /// Request faults (timeouts + retries + terminal failures) per second
+    /// over the last tick window.
+    pub fault_rate: f64,
     /// Windowed p99 latency per member (ms); `None` when the member
     /// completed nothing in the window.
     pub p99_ms: &'a [Option<f64>],
@@ -312,9 +322,12 @@ impl Controller {
             let slo = if m.cfg.slo_p99_ms > 0.0 { m.cfg.slo_p99_ms } else { self.opts.slo_p99_ms };
             let p99 = obs.p99_ms.get(i).copied().flatten();
             let lat_breach = slo > 0.0 && p99.map_or(false, |p| p > slo);
-            let breach = obs.queue_frac >= self.opts.queue_hi || lat_breach;
+            let fault_breach =
+                self.opts.fault_hi > 0.0 && obs.fault_rate >= self.opts.fault_hi;
+            let breach = obs.queue_frac >= self.opts.queue_hi || lat_breach || fault_breach;
             let clear = obs.queue_frac <= self.opts.queue_lo
-                && (slo <= 0.0 || p99.map_or(true, |p| p < 0.5 * slo));
+                && (slo <= 0.0 || p99.map_or(true, |p| p < 0.5 * slo))
+                && (self.opts.fault_hi <= 0.0 || obs.fault_rate < 0.5 * self.opts.fault_hi);
 
             if breach {
                 m.breach_ticks += 1;
@@ -428,14 +441,20 @@ mod tests {
         for _ in 0..2 {
             t += 0.02;
             let (tt, qf, p99) = obs(t, 0.9, Some(250.0));
-            c.tick(&Obs { t: tt, queue_frac: qf, arrival_rate: 500.0, p99_ms: &p99 }, &est);
+            c.tick(
+                &Obs { t: tt, queue_frac: qf, arrival_rate: 500.0, fault_rate: 0.0, p99_ms: &p99 },
+                &est,
+            );
         }
         assert_eq!(c.variant(0), 1);
         // Clear ticks: recovery blocked by dwell until 3 ticks passed.
         for _ in 0..4 {
             t += 0.02;
             let (tt, qf, p99) = obs(t, 0.0, Some(5.0));
-            c.tick(&Obs { t: tt, queue_frac: qf, arrival_rate: 10.0, p99_ms: &p99 }, &est);
+            c.tick(
+                &Obs { t: tt, queue_frac: qf, arrival_rate: 10.0, fault_rate: 0.0, p99_ms: &p99 },
+                &est,
+            );
         }
         assert_eq!(c.variant(0), 0);
         let seq: Vec<(usize, usize)> = c.transitions().iter().map(|tr| (tr.from, tr.to)).collect();
@@ -469,6 +488,7 @@ mod tests {
                     t: k as f64 * 0.02,
                     queue_frac: if hot { 1.0 } else { 0.0 },
                     arrival_rate: 100.0,
+                    fault_rate: 0.0,
                     p99_ms: &p99,
                 },
                 &est,
@@ -492,10 +512,62 @@ mod tests {
         let wait_lo = opts.wait_lo;
         let mut c = Controller::new(opts, 0.01, 8, &[]);
         let est = CostEstimator::new(8);
-        let acts =
-            c.tick(&Obs { t: 0.0, queue_frac: 0.9, arrival_rate: 1000.0, p99_ms: &[] }, &est);
+        let acts = c.tick(
+            &Obs { t: 0.0, queue_frac: 0.9, arrival_rate: 1000.0, fault_rate: 0.0, p99_ms: &[] },
+            &est,
+        );
         assert!(acts.contains(&Action::MaxWait(wait_lo)), "pressure should floor max_wait");
-        let acts = c.tick(&Obs { t: 0.1, queue_frac: 0.0, arrival_rate: 0.0, p99_ms: &[] }, &est);
+        let acts = c.tick(
+            &Obs { t: 0.1, queue_frac: 0.0, arrival_rate: 0.0, fault_rate: 0.0, p99_ms: &[] },
+            &est,
+        );
         assert!(acts.contains(&Action::MaxWait(0.01)), "idle should restore base wait");
+    }
+
+    #[test]
+    fn sustained_faults_degrade_even_with_empty_queue() {
+        let opts = ControllerOpts {
+            degrade: true,
+            degrade_after: 2,
+            recover_after: 2,
+            min_dwell_ticks: 1,
+            fault_hi: 5.0,
+            ..Default::default()
+        };
+        let mut c = Controller::new(
+            opts,
+            0.01,
+            8,
+            &[MemberCfg { slo_p99_ms: 0.0, variants: 2 }],
+        );
+        let est = CostEstimator::new(8);
+        // Queue and latency are healthy, but requests keep faulting.
+        for k in 0..2 {
+            c.tick(
+                &Obs {
+                    t: k as f64 * 0.02,
+                    queue_frac: 0.0,
+                    arrival_rate: 100.0,
+                    fault_rate: 20.0,
+                    p99_ms: &[Some(1.0)],
+                },
+                &est,
+            );
+        }
+        assert_eq!(c.variant(0), 1, "fault pressure alone should degrade");
+        // A fault rate below half the threshold counts as clear again.
+        for k in 2..4 {
+            c.tick(
+                &Obs {
+                    t: k as f64 * 0.02,
+                    queue_frac: 0.0,
+                    arrival_rate: 100.0,
+                    fault_rate: 1.0,
+                    p99_ms: &[Some(1.0)],
+                },
+                &est,
+            );
+        }
+        assert_eq!(c.variant(0), 0, "calm faults should recover");
     }
 }

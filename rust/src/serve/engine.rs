@@ -57,8 +57,25 @@
 //! the per-example fan-out inside the native backend runs serial on them,
 //! so total parallelism equals the engine's worker count and the host is
 //! never oversubscribed by nested pools.
+//!
+//! Fault tolerance: every worker runs a *supervised* loop — a panic inside
+//! a batch cycle (a workload bug, or an injected chaos kill) is caught
+//! with `catch_unwind`, the in-flight batch is recovered and routed
+//! through the retry policy, and the worker respawns in place under a
+//! bounded budget with exponential backoff; only an exhausted budget fails
+//! the run, and then with a typed error, never a process abort. Requests
+//! carry a deadline ([`EngineOpts::request_timeout`], checked at dispatch
+//! time so state never half-advances) and a retry budget
+//! ([`EngineOpts::max_retries`]); past the budget they are counted in
+//! [`EngineStats::failures`] and their engine-side state — a generation's
+//! paged KV blocks — is reclaimed via [`Workload::reclaim`]
+//! ([`EngineStats::kv_reclaimed_blocks`]). The deterministic [`FaultPlan`]
+//! injects worker kills, per-request dispatch failures, and batch delays,
+//! keyed on schedule-independent identities (request id + step, worker
+//! index + its own batch ordinal) so the discrete-event simulator replays
+//! the same fault trajectory bit-for-bit (`tests/serve_faults`).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::exec::Executor;
 use crate::model::{QuantStore, WeightStore};
@@ -76,12 +93,152 @@ use {
     crate::serve::controller::{Action, Controller, CostEstimator, MemberCfg, Obs},
     crate::serve::workload::{PlanPair, Plans, StepOutcome},
     crate::util::bench::percentile,
-    crate::util::{threads, Pcg64},
+    crate::util::{lock, threads, Pcg64},
     std::collections::VecDeque,
+    std::panic::{catch_unwind, AssertUnwindSafe},
     std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering},
     std::sync::{Arc, Condvar, Mutex},
     std::time::Duration,
 };
+
+/// Deterministic fault-injection plan (the chaos layer).
+///
+/// Faults key on *schedule-independent* identities — a request id plus its
+/// step index, or a worker index plus that worker's own batch ordinal —
+/// never on wall time or global dispatch order, so one plan produces the
+/// same set of faulted requests in the threaded engine at any worker
+/// count, and a bit-identical trajectory in the discrete-event simulator.
+/// Every entry fires at most once (a retried request is not re-faulted by
+/// the same entry).
+///
+/// Spec grammar for [`FaultPlan::parse`] (comma-separated entries):
+///
+/// * `kill=W@B` — worker `W` panics at the start of its `B`-th dispatched
+///   batch (both 0-based); the supervisor absorbs the panic, retries the
+///   batch, and respawns the worker.
+/// * `fail=ID[@STEP]` — request `ID`'s dispatch at step `STEP` (default 0)
+///   reports a fault before the step runs; the request retries or, past
+///   its budget, fails.
+/// * `delay=ID:MS` — the batch carrying request `ID` runs `MS` ms long
+///   (timing-only; predictions are unaffected).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// `(worker, batch_ordinal)`: panic that worker at the start of that
+    /// (0-based, per-worker) batch.
+    pub kills: Vec<(usize, usize)>,
+    /// `(request_id, step)`: fault that request's dispatch at that step.
+    pub fails: Vec<(usize, usize)>,
+    /// `(request_id, extra_seconds)`: stretch the batch carrying that
+    /// request by the given service-time delay.
+    pub delays: Vec<(usize, f64)>,
+}
+
+fn chaos_idx(s: &str, entry: &str) -> Result<usize> {
+    match s.trim().parse::<usize>() {
+        Ok(v) => Ok(v),
+        Err(_) => bail!("--chaos entry '{entry}': '{s}' is not a non-negative integer"),
+    }
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty() && self.fails.is_empty() && self.delays.is_empty()
+    }
+
+    /// Parse a `--chaos` spec, e.g. `kill=0@1,fail=3,fail=5@2,delay=7:20`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let Some((kind, val)) = entry.split_once('=') else {
+                bail!(
+                    "--chaos entry '{entry}': expected kind=value \
+                     (kill=W@B, fail=ID[@STEP], delay=ID:MS)"
+                );
+            };
+            match kind.trim() {
+                "kill" => {
+                    let Some((w, b)) = val.split_once('@') else {
+                        bail!("--chaos kill '{val}': expected W@B (worker@batch-ordinal)");
+                    };
+                    plan.kills.push((chaos_idx(w, entry)?, chaos_idx(b, entry)?));
+                }
+                "fail" => {
+                    plan.fails.push(match val.split_once('@') {
+                        Some((id, step)) => (chaos_idx(id, entry)?, chaos_idx(step, entry)?),
+                        None => (chaos_idx(val, entry)?, 0),
+                    });
+                }
+                "delay" => {
+                    let Some((id, ms)) = val.split_once(':') else {
+                        bail!("--chaos delay '{val}': expected ID:MS");
+                    };
+                    let ms: f64 = match ms.trim().parse() {
+                        Ok(v) => v,
+                        Err(_) => bail!("--chaos entry '{entry}': '{ms}' is not a number"),
+                    };
+                    if !ms.is_finite() || ms < 0.0 {
+                        bail!("--chaos delay '{entry}': delay must be a finite ms >= 0");
+                    }
+                    plan.delays.push((chaos_idx(id, entry)?, ms / 1e3));
+                }
+                other => {
+                    bail!("--chaos entry '{entry}': unknown fault kind '{other}' (kill/fail/delay)")
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// One-shot fired-tracking over a [`FaultPlan`]: each entry is claimed
+/// atomically, so exactly one dispatch observes it — in the threaded
+/// engine *and* (trivially) in the single-threaded simulator, which reuses
+/// this type so both replay identical trajectories.
+#[cfg(not(pjrt_backend))]
+pub(crate) struct FaultState {
+    plan: FaultPlan,
+    kill_fired: Vec<AtomicBool>,
+    fail_fired: Vec<AtomicBool>,
+    delay_fired: Vec<AtomicBool>,
+}
+
+#[cfg(not(pjrt_backend))]
+impl FaultState {
+    pub(crate) fn new(plan: FaultPlan) -> Self {
+        let flags = |n: usize| (0..n).map(|_| AtomicBool::new(false)).collect();
+        FaultState {
+            kill_fired: flags(plan.kills.len()),
+            fail_fired: flags(plan.fails.len()),
+            delay_fired: flags(plan.delays.len()),
+            plan,
+        }
+    }
+
+    /// Claim a kill of `worker` at its `ord`-th dispatched batch.
+    pub(crate) fn take_kill(&self, worker: usize, ord: usize) -> bool {
+        self.plan.kills.iter().enumerate().any(|(i, &(w, b))| {
+            w == worker && b == ord && !self.kill_fired[i].swap(true, Ordering::AcqRel)
+        })
+    }
+
+    /// Claim a dispatch fault for request `id` at step `step`.
+    pub(crate) fn take_fail(&self, id: usize, step: usize) -> bool {
+        self.plan.fails.iter().enumerate().any(|(i, &(rid, s))| {
+            rid == id && s == step && !self.fail_fired[i].swap(true, Ordering::AcqRel)
+        })
+    }
+
+    /// Claim the service-time delay attached to request `id`, seconds.
+    pub(crate) fn take_delay(&self, id: usize) -> Option<f64> {
+        for (i, &(rid, s)) in self.plan.delays.iter().enumerate() {
+            if rid == id && !self.delay_fired[i].swap(true, Ordering::AcqRel) {
+                return Some(s);
+            }
+        }
+        None
+    }
+}
 
 /// Serving-engine options.
 #[derive(Clone, Debug)]
@@ -126,6 +283,20 @@ pub struct EngineOpts {
     /// Default per-member p99 latency budget, ms (`0` = no SLO). A
     /// [`FleetMember::with_slo_p99_ms`] override wins per member.
     pub slo_p99_ms: f64,
+    /// Per-request deadline, seconds from the intended arrival (`0` = no
+    /// deadline). Checked at dispatch time; each retry extends the
+    /// deadline by one more budget (attempt `k` expires at
+    /// `arrival + (k+1) * request_timeout`), so a retried request gets a
+    /// fresh attempt instead of expiring the instant it re-enqueues.
+    pub request_timeout: f64,
+    /// Retry budget for timed-out / faulted requests; past it they are
+    /// counted in [`EngineStats::failures`] and their KV state reclaimed.
+    pub max_retries: usize,
+    /// Base backoff before a retried request is eligible to dispatch
+    /// again, seconds (doubles per attempt; `0` = immediately eligible).
+    pub retry_backoff: f64,
+    /// Deterministic fault injection (`None` = no chaos).
+    pub chaos: Option<FaultPlan>,
     /// Feedback-controller configuration (`None` = static knobs, the
     /// pre-controller behavior).
     pub controller: Option<ControllerOpts>,
@@ -147,6 +318,10 @@ impl Default for EngineOpts {
             kv_blocks: 0,
             spike: 1.0,
             slo_p99_ms: 0.0,
+            request_timeout: 0.0,
+            max_retries: 0,
+            retry_backoff: 0.0,
+            chaos: None,
             controller: None,
         }
     }
@@ -178,6 +353,18 @@ impl EngineOpts {
         }
         if !self.spike.is_finite() || self.spike <= 0.0 {
             bail!("run_engine: --spike must be a finite rate multiplier > 0 (got {})", self.spike);
+        }
+        if !self.request_timeout.is_finite() || self.request_timeout < 0.0 {
+            bail!(
+                "run_engine: --request-timeout-ms must be a finite deadline >= 0 (got {} s)",
+                self.request_timeout
+            );
+        }
+        if !self.retry_backoff.is_finite() || self.retry_backoff < 0.0 {
+            bail!(
+                "run_engine: --retry-backoff-ms must be a finite backoff >= 0 (got {} s)",
+                self.retry_backoff
+            );
         }
         Ok(())
     }
@@ -285,6 +472,27 @@ pub struct EngineStats {
     pub kv_shared_hits: u64,
     /// Copy-on-write block copies (a shared tail diverged).
     pub kv_cow_copies: u64,
+    /// Pool blocks pinned by the shared-prefix registry at the end of the
+    /// run (a deliberate cache, not a leak: the leak check is
+    /// `kv_blocks_in_use == kv_registered_blocks`).
+    pub kv_registered_blocks: usize,
+    /// Requests that exhausted their retry budget (never served, excluded
+    /// from every latency percentile). Per member,
+    /// `served + shed + failures` accounts for every offered request.
+    pub failures: usize,
+    /// Re-enqueue events: timed-out, fault-injected, and panic-recovered
+    /// requests sent back to the queue with their original arrival.
+    pub retries: usize,
+    /// Deadline expirations observed at dispatch time.
+    pub timeouts: usize,
+    /// Worker panics absorbed by the supervisor (an engine-wide count,
+    /// reported on every member; the simulator counts absorbed server
+    /// kills the same way).
+    pub worker_respawns: usize,
+    /// Paged-KV blocks released by reclaiming failed / aborted
+    /// generations (timeout past the retry budget, injected fault, or a
+    /// run torn down with continuations still queued).
+    pub kv_reclaimed_blocks: usize,
     /// Served requests whose final step dispatched on each plan rung
     /// (index 0 = dense). Length = the member's rung count.
     pub served_by_variant: Vec<usize>,
@@ -412,6 +620,7 @@ pub struct ErasedMember<'e> {
 /// A request (or a re-enqueued continuation) sitting in the engine queue.
 /// Timestamps are engine-clock seconds (see [`Clock`]).
 #[cfg(not(pjrt_backend))]
+#[derive(Clone)]
 pub(crate) struct Queued {
     pub(crate) unit: usize,
     pub(crate) id: usize,
@@ -420,6 +629,23 @@ pub(crate) struct Queued {
     pub(crate) steps: usize,
     pub(crate) first_deq: Option<f64>,
     pub(crate) first_done: Option<f64>,
+    /// Retry attempts consumed (timeouts, injected faults, recovered
+    /// panics). The deadline stretches with each attempt.
+    pub(crate) tries: usize,
+    /// Earliest engine-clock time this entry may dispatch again (retry
+    /// backoff; `0` = immediately eligible).
+    pub(crate) not_before: f64,
+}
+
+/// Per-unit fault accounting, merged into [`EngineStats`] by
+/// [`finalize_stats`] — shared by the threaded engine and the simulator.
+#[cfg(not(pjrt_backend))]
+#[derive(Default, Clone, Copy)]
+pub(crate) struct FaultTally {
+    pub(crate) failures: usize,
+    pub(crate) retries: usize,
+    pub(crate) timeouts: usize,
+    pub(crate) reclaimed_blocks: usize,
 }
 
 /// Queue state shared between the generator and the workers.
@@ -444,6 +670,7 @@ pub(crate) struct KvAgg {
     pub(crate) allocs: u64,
     pub(crate) shared_hits: u64,
     pub(crate) cow_copies: u64,
+    pub(crate) registered_blocks: usize,
 }
 
 /// A type-erased fleet unit: the workload, its resolved plan ladder, and
@@ -464,6 +691,10 @@ pub(crate) struct Unit<'s> {
     /// KV-cache telemetry snapshot; `None` for units without decode plans.
     #[allow(clippy::type_complexity)]
     pub(crate) kv: Box<dyn Fn() -> Option<KvAgg> + Sync + 's>,
+    /// Release the engine-side state (paged KV blocks) of aborted
+    /// requests; returns the number of pool blocks returned.
+    #[allow(clippy::type_complexity)]
+    pub(crate) reclaim: Box<dyn Fn(&[usize]) -> usize + Sync + 's>,
 }
 
 /// Build one unit: resolve one plan rung per weight store (rung 0 = the
@@ -526,7 +757,9 @@ pub(crate) fn make_unit<'s, W: Workload>(
         });
     }
     let plans = Arc::new(Plans::ladder(pairs)?);
-    let payloads: Vec<W::Req> = threads::parallel_map(requests, |i| workload.synth(i));
+    // Shared between the step and reclaim closures: the engine retries or
+    // fails requests by id, and reclamation needs the same payload slots.
+    let payloads: Arc<Vec<W::Req>> = Arc::new(threads::parallel_map(requests, |i| workload.synth(i)));
 
     // Warmup before the clock starts, once per rung: run the full artifact
     // batch AND batch size 1 (first-touch allocation, PJRT compilation when
@@ -567,6 +800,7 @@ pub(crate) fn make_unit<'s, W: Workload>(
         .collect();
     let step_plans = plans.clone();
     let kv_plans = plans.clone();
+    let step_payloads = payloads.clone();
     Ok(Unit {
         label: workload.label(),
         requests,
@@ -574,7 +808,7 @@ pub(crate) fn make_unit<'s, W: Workload>(
         slo_p99_ms,
         plans,
         step: Box::new(move |ids: &[usize], dispatch: usize| {
-            let reqs: Vec<&W::Req> = ids.iter().map(|&i| &payloads[i]).collect();
+            let reqs: Vec<&W::Req> = ids.iter().map(|&i| &step_payloads[i]).collect();
             workload.run_step(&step_plans, &reqs, dispatch)
         }),
         kv: Box::new(move || {
@@ -592,9 +826,13 @@ pub(crate) fn make_unit<'s, W: Workload>(
                     agg.allocs += p.allocs;
                     agg.shared_hits += p.shared_hits;
                     agg.cow_copies += p.cow_copies;
+                    agg.registered_blocks += p.registered_blocks;
                 }
             }
             any.then_some(agg)
+        }),
+        reclaim: Box::new(move |ids: &[usize]| {
+            ids.iter().map(|&i| workload.reclaim(&payloads[i])).sum()
         }),
     })
 }
@@ -728,8 +966,22 @@ struct Ctl {
     lat: Mutex<Vec<Vec<f64>>>,
     /// Cumulative offered arrivals (shed ones included).
     arrivals: AtomicUsize,
+    /// Cumulative fault events (timeouts + injected faults + recovered
+    /// panics) — the controller's degrade-pressure signal.
+    faults: AtomicUsize,
     done: AtomicBool,
 }
+
+/// Worker panics absorbed per worker before the run fails with a typed
+/// error (never a process abort). Shared with the simulator so both
+/// supervision loops agree.
+#[cfg(not(pjrt_backend))]
+pub(crate) const RESPAWN_BUDGET: usize = 8;
+
+/// Initial supervisor backoff after an absorbed panic, seconds; doubles
+/// per respawn, capped at 50 ms.
+#[cfg(not(pjrt_backend))]
+pub(crate) const RESPAWN_BACKOFF_S: f64 = 0.001;
 
 /// The shared queueing/batching core: one generator, one bounded queue,
 /// one worker pool over any number of type-erased units, plus (when
@@ -748,6 +1000,8 @@ fn run_units_on(
     let b_art = opts.max_batch;
     let workers = opts.workers;
     let base_wait = opts.max_wait.max(0.0);
+    let timeout_s = opts.request_timeout;
+    let max_retries = opts.max_retries;
 
     let order = arrival_order(&units);
     let arrivals = arrival_times(order.len(), opts.rate, opts.spike, opts.seed);
@@ -759,14 +1013,52 @@ fn run_units_on(
     // Per executed batch: (unit, requests carried, dispatch size, exec ms,
     // active plan rung).
     let batches: Mutex<Vec<(usize, usize, usize, f64, usize)>> = Mutex::new(Vec::new());
+    let faults = opts.chaos.clone().filter(|p| !p.is_empty()).map(FaultState::new);
+    let tally: Mutex<Vec<FaultTally>> = Mutex::new(vec![FaultTally::default(); units.len()]);
+    let respawns = AtomicUsize::new(0);
+    // Per-worker in-flight batch, registered before anything fallible in
+    // the batch cycle so the supervisor can recover it after a panic.
+    let inflight: Vec<Mutex<Option<Vec<Queued>>>> =
+        (0..workers).map(|_| Mutex::new(None)).collect();
     let ctl = opts.controller.as_ref().map(|_| Ctl {
         max_wait_bits: AtomicU64::new(base_wait.to_bits()),
         thresh_bits: AtomicU64::new(DispatchPolicy::AUTO_FILL_THRESHOLD.to_bits()),
         est: Mutex::new(CostEstimator::new(b_art)),
         lat: Mutex::new(vec![Vec::new(); units.len()]),
         arrivals: AtomicUsize::new(0),
+        faults: AtomicUsize::new(0),
         done: AtomicBool::new(false),
     });
+
+    // Route a timed-out / faulted / panic-recovered request: back into the
+    // queue with its ORIGINAL arrival (latency accounting keeps the full
+    // story) while retry budget remains; past the budget, a counted
+    // failure whose engine-side KV state is reclaimed on the spot.
+    let retry_or_fail = |mut q: Queued, timed_out: bool, now: f64| {
+        let mut t = lock::lock(&tally);
+        if timed_out {
+            t[q.unit].timeouts += 1;
+        }
+        if let Some(c) = &ctl {
+            c.faults.fetch_add(1, Ordering::AcqRel);
+        }
+        if q.tries < max_retries {
+            q.tries += 1;
+            t[q.unit].retries += 1;
+            drop(t);
+            q.not_before = if opts.retry_backoff > 0.0 {
+                now + opts.retry_backoff * (1u64 << (q.tries - 1).min(16)) as f64
+            } else {
+                0.0
+            };
+            let mut g = lock::lock(&shared);
+            g.queue.push_back(q);
+            cv.notify_one();
+        } else {
+            t[q.unit].failures += 1;
+            t[q.unit].reclaimed_blocks += (units[q.unit].reclaim)(&[q.id]);
+        }
+    };
 
     let transitions = std::thread::scope(|s| -> Result<Vec<Transition>> {
         // ---- open-loop generator ----
@@ -776,7 +1068,7 @@ fn run_units_on(
                     // A failed worker poisons the run by setting `closed`;
                     // stop replaying the schedule so the error surfaces
                     // promptly instead of after the full arrival tail.
-                    if shared.lock().unwrap().closed {
+                    if lock::lock(&shared).closed {
                         break 'replay;
                     }
                     let now = clock.now();
@@ -788,7 +1080,7 @@ fn run_units_on(
                 if let Some(c) = &ctl {
                     c.arrivals.fetch_add(1, Ordering::AcqRel);
                 }
-                let mut g = shared.lock().unwrap();
+                let mut g = lock::lock(&shared);
                 if g.closed {
                     break 'replay;
                 }
@@ -802,11 +1094,13 @@ fn run_units_on(
                         steps: 0,
                         first_deq: None,
                         first_done: None,
+                        tries: 0,
+                        not_before: 0.0,
                     });
                     cv.notify_one();
                 }
             }
-            shared.lock().unwrap().closed = true;
+            lock::lock(&shared).closed = true;
             cv.notify_all();
         });
 
@@ -825,20 +1119,24 @@ fn run_units_on(
             s.spawn(move || -> Vec<Transition> {
                 let mut controller = Controller::new(copts.clone(), base_wait, b_art, &members);
                 let mut prev_arrivals = 0usize;
+                let mut prev_faults = 0usize;
                 loop {
                     clock.sleep(copts.tick_s.max(1e-4));
                     if c.done.load(Ordering::Acquire) {
                         break;
                     }
                     let t = clock.now();
-                    let queue_frac = shared.lock().unwrap().queue.len() as f64
-                        / opts.queue_cap.max(1) as f64;
+                    let queue_frac =
+                        lock::lock(shared).queue.len() as f64 / opts.queue_cap.max(1) as f64;
                     let arr = c.arrivals.load(Ordering::Acquire);
                     let arrival_rate =
                         (arr - prev_arrivals) as f64 / copts.tick_s.max(1e-4);
                     prev_arrivals = arr;
+                    let flt = c.faults.load(Ordering::Acquire);
+                    let fault_rate = (flt - prev_faults) as f64 / copts.tick_s.max(1e-4);
+                    prev_faults = flt;
                     let p99: Vec<Option<f64>> = {
-                        let mut lat = c.lat.lock().unwrap();
+                        let mut lat = lock::lock(&c.lat);
                         lat.iter_mut()
                             .map(|w| {
                                 if w.is_empty() {
@@ -852,9 +1150,9 @@ fn run_units_on(
                             })
                             .collect()
                     };
-                    let est = c.est.lock().unwrap().clone();
+                    let est = lock::lock(&c.est).clone();
                     let actions = controller.tick(
-                        &Obs { t, queue_frac, arrival_rate, p99_ms: &p99 },
+                        &Obs { t, queue_frac, arrival_rate, fault_rate, p99_ms: &p99 },
                         &est,
                     );
                     for a in actions {
@@ -877,199 +1175,335 @@ fn run_units_on(
 
         // ---- worker pool ----
         let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                s.spawn(|| -> Result<()> {
+            .map(|w| {
+                let units = &units;
+                let shared = &shared;
+                let cv = &cv;
+                let ctl = &ctl;
+                let results = &results;
+                let batches = &batches;
+                let faults = &faults;
+                let inflight = &inflight;
+                let respawns = &respawns;
+                let retry_or_fail = &retry_or_fail;
+                s.spawn(move || -> Result<()> {
                     threads::serialize_nested_regions();
+                    // Supervised loop: a panic inside a batch cycle (a
+                    // workload bug, or an injected chaos kill) is caught,
+                    // the in-flight batch recovered for retry, and the
+                    // worker respawned in place under a bounded budget
+                    // with exponential backoff. Only an exhausted budget
+                    // fails the run — with a typed error, not an abort.
+                    let mut budget = RESPAWN_BUDGET;
+                    let mut backoff = RESPAWN_BACKOFF_S;
+                    let ord = AtomicUsize::new(0);
                     loop {
-                        let mut batch: Vec<Queued> = Vec::with_capacity(b_art);
-                        {
-                            let mut g = shared.lock().unwrap();
-                            // Block for the batch head (or a clean shutdown).
+                        let ran = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
                             loop {
-                                if let Some(q) = g.queue.pop_front() {
-                                    batch.push(q);
-                                    break;
-                                }
-                                if g.closed {
-                                    return Ok(());
-                                }
-                                g = cv.wait(g).unwrap();
-                            }
-                            // Hold the batch open until full, closed, or the
-                            // batching deadline expires — draining only
-                            // requests of the head's unit (a batch never
-                            // mixes models). The deadline comes from the
-                            // controller when one is running.
-                            let unit = batch[0].unit;
-                            let wait_s = match &ctl {
-                                Some(c) => {
-                                    f64::from_bits(c.max_wait_bits.load(Ordering::Acquire))
-                                }
-                                None => base_wait,
-                            };
-                            let deadline = clock.now() + wait_s.max(0.0);
-                            loop {
-                                let mut i = 0;
-                                while batch.len() < b_art && i < g.queue.len() {
-                                    if g.queue[i].unit == unit {
-                                        batch.push(g.queue.remove(i).expect("indexed item"));
-                                    } else {
-                                        i += 1;
-                                    }
-                                }
-                                if batch.len() >= b_art || g.closed {
-                                    break;
-                                }
-                                let now = clock.now();
-                                if now >= deadline {
-                                    break;
-                                }
-                                let (g2, _) = cv
-                                    .wait_timeout(
-                                        g,
-                                        Duration::from_secs_f64((deadline - now).max(0.0)),
-                                    )
-                                    .unwrap();
-                                g = g2;
-                            }
-                            // Hand leftover work to an idle worker: our
-                            // wait_timeout may have consumed its wakeup.
-                            if !g.queue.is_empty() {
-                                cv.notify_one();
-                            }
-                        }
-                        let unit = batch[0].unit;
-                        let take = batch.len();
-                        // Dispatch shape: the learned cost curve replaces the
-                        // static fill threshold under `auto` once a
-                        // controller is running.
-                        let dispatch = match &ctl {
-                            Some(c) if units[unit].policy == DispatchPolicy::Auto => {
-                                let th = f64::from_bits(c.thresh_bits.load(Ordering::Acquire));
-                                if (take as f64) < th * b_art as f64 {
-                                    take
-                                } else {
-                                    b_art
-                                }
-                            }
-                            _ => units[unit].policy.dispatch_size(take, b_art),
-                        };
-                        let variant = units[unit].plans.active();
-                        let t_deq = clock.now();
-                        for q in batch.iter_mut() {
-                            if q.first_deq.is_none() {
-                                q.first_deq = Some(t_deq);
-                            }
-                        }
-                        let ids: Vec<usize> = batch.iter().map(|q| q.id).collect();
-                        // On any workload failure, poison the run (`closed`
-                        // stops the generator's replay and drains the other
-                        // workers) so the error surfaces promptly instead
-                        // of after the full arrival schedule.
-                        let poison = || {
-                            shared.lock().unwrap().closed = true;
-                            cv.notify_all();
-                        };
-                        let outs: Vec<StepOutcome> = match (units[unit].step)(&ids, dispatch) {
-                            Ok(outs) => outs,
-                            Err(e) => {
-                                poison();
-                                return Err(e);
-                            }
-                        };
-                        if outs.len() != batch.len() {
-                            // Fail fast on a broken Workload impl rather
-                            // than silently dropping records (served + shed
-                            // == requests must hold per unit).
-                            poison();
-                            bail!(
-                                "workload '{}' returned {} outcomes for a batch of {}",
-                                units[unit].label,
-                                outs.len(),
-                                batch.len()
-                            );
-                        }
-                        if opts.exec_floor > 0.0 {
-                            let spent = clock.now() - t_deq;
-                            if spent < opts.exec_floor {
-                                clock.sleep(opts.exec_floor - spent);
-                            }
-                        }
-                        let t_done = clock.now();
-                        let exec_s = (t_done - t_deq).max(0.0);
-                        let exec_ms = exec_s * 1e3;
-                        if let Some(c) = &ctl {
-                            c.est.lock().unwrap().observe(dispatch, exec_s);
-                        }
-                        let mut requeue: Vec<Queued> = Vec::new();
-                        {
-                            let mut recs = results.lock().unwrap();
-                            for (mut q, out) in batch.into_iter().zip(outs) {
-                                q.steps += 1;
-                                if q.first_done.is_none() {
-                                    q.first_done = Some(t_done);
-                                }
-                                match out {
-                                    StepOutcome::Done(o) => {
-                                        let first = q.first_done.expect("set above");
-                                        let first_ms = (first - q.arrival).max(0.0) * 1e3;
-                                        let total_ms = (t_done - q.arrival).max(0.0) * 1e3;
-                                        if let Some(c) = &ctl {
-                                            c.lat.lock().unwrap()[q.unit].push(total_ms);
+                                let mut batch: Vec<Queued> = Vec::with_capacity(b_art);
+                                {
+                                    let mut g = lock::lock(shared);
+                                    // Block for the batch head (or a clean
+                                    // shutdown). Backoff-deferred retries are
+                                    // skipped until they come eligible.
+                                    loop {
+                                        let now = clock.now();
+                                        if let Some(i) =
+                                            g.queue.iter().position(|q| q.not_before <= now)
+                                        {
+                                            batch.push(g.queue.remove(i).expect("indexed item"));
+                                            break;
                                         }
-                                        recs[q.unit].push(RequestRecord {
-                                            id: q.id,
-                                            queue_ms: (q.first_deq.expect("set above")
-                                                - q.arrival)
-                                                .max(0.0)
-                                                * 1e3,
-                                            exec_ms,
-                                            total_ms,
-                                            steps: q.steps,
-                                            first_ms,
-                                            itl_ms: if q.steps > 1 {
-                                                (total_ms - first_ms) / (q.steps - 1) as f64
-                                            } else {
-                                                0.0
-                                            },
-                                            pred: o.pred,
-                                            tokens: o.tokens,
-                                            variant,
-                                        });
+                                        if g.closed && g.queue.is_empty() {
+                                            return Ok(());
+                                        }
+                                        g = if g.queue.is_empty() {
+                                            lock::wait(cv, g)
+                                        } else {
+                                            lock::wait_timeout(cv, g, Duration::from_millis(1))
+                                        };
                                     }
-                                    StepOutcome::Continue => requeue.push(q),
+                                    // Hold the batch open until full, closed, or
+                                    // the batching deadline expires — draining
+                                    // only requests of the head's unit (a batch
+                                    // never mixes models). The deadline comes
+                                    // from the controller when one is running.
+                                    let unit = batch[0].unit;
+                                    let wait_s = match ctl {
+                                        Some(c) => {
+                                            f64::from_bits(c.max_wait_bits.load(Ordering::Acquire))
+                                        }
+                                        None => base_wait,
+                                    };
+                                    let deadline = clock.now() + wait_s.max(0.0);
+                                    loop {
+                                        let now = clock.now();
+                                        let mut i = 0;
+                                        while batch.len() < b_art && i < g.queue.len() {
+                                            if g.queue[i].unit == unit
+                                                && g.queue[i].not_before <= now
+                                            {
+                                                batch.push(
+                                                    g.queue.remove(i).expect("indexed item"),
+                                                );
+                                            } else {
+                                                i += 1;
+                                            }
+                                        }
+                                        if batch.len() >= b_art || g.closed {
+                                            break;
+                                        }
+                                        if now >= deadline {
+                                            break;
+                                        }
+                                        g = lock::wait_timeout(
+                                            cv,
+                                            g,
+                                            Duration::from_secs_f64((deadline - now).max(0.0)),
+                                        );
+                                    }
+                                    // Hand leftover work to an idle worker: our
+                                    // wait_timeout may have consumed its wakeup.
+                                    if !g.queue.is_empty() {
+                                        cv.notify_one();
+                                    }
+                                }
+                                // Deadlines and injected dispatch faults resolve
+                                // *before* the step runs, so a rejected
+                                // request's state never half-advances and a
+                                // retried one reproduces its fault-free
+                                // prediction bit-for-bit.
+                                if timeout_s > 0.0 || faults.is_some() {
+                                    let now = clock.now();
+                                    let kept: Vec<Queued> = batch
+                                        .drain(..)
+                                        .filter_map(|q| {
+                                            if timeout_s > 0.0
+                                                && now
+                                                    > q.arrival
+                                                        + (q.tries + 1) as f64 * timeout_s
+                                            {
+                                                retry_or_fail(q, true, now);
+                                                None
+                                            } else if faults
+                                                .as_ref()
+                                                .map_or(false, |f| f.take_fail(q.id, q.steps))
+                                            {
+                                                retry_or_fail(q, false, now);
+                                                None
+                                            } else {
+                                                Some(q)
+                                            }
+                                        })
+                                        .collect();
+                                    batch = kept;
+                                    if batch.is_empty() {
+                                        continue;
+                                    }
+                                }
+                                // Register the in-flight batch, then fire any
+                                // injected kill keyed on this worker's own
+                                // batch ordinal — the supervisor recovers the
+                                // registered batch for retry.
+                                *lock::lock(&inflight[w]) = Some(batch.clone());
+                                let my_ord = ord.fetch_add(1, Ordering::AcqRel);
+                                if let Some(f) = faults {
+                                    if f.take_kill(w, my_ord) {
+                                        panic!(
+                                            "chaos: injected kill of worker {w} at batch {my_ord}"
+                                        );
+                                    }
+                                }
+                                let unit = batch[0].unit;
+                                let take = batch.len();
+                                // Dispatch shape: the learned cost curve
+                                // replaces the static fill threshold under
+                                // `auto` once a controller is running.
+                                let dispatch = match ctl {
+                                    Some(c) if units[unit].policy == DispatchPolicy::Auto => {
+                                        let th =
+                                            f64::from_bits(c.thresh_bits.load(Ordering::Acquire));
+                                        if (take as f64) < th * b_art as f64 {
+                                            take
+                                        } else {
+                                            b_art
+                                        }
+                                    }
+                                    _ => units[unit].policy.dispatch_size(take, b_art),
+                                };
+                                let variant = units[unit].plans.active();
+                                let t_deq = clock.now();
+                                for q in batch.iter_mut() {
+                                    if q.first_deq.is_none() {
+                                        q.first_deq = Some(t_deq);
+                                    }
+                                }
+                                let ids: Vec<usize> = batch.iter().map(|q| q.id).collect();
+                                // On a *typed* workload failure, poison the run
+                                // (`closed` stops the generator's replay and
+                                // drains the other workers) so the error
+                                // surfaces promptly instead of after the full
+                                // arrival schedule. Panics take the supervised
+                                // retry path instead.
+                                let poison = || {
+                                    lock::lock(shared).closed = true;
+                                    cv.notify_all();
+                                };
+                                let outs: Vec<StepOutcome> =
+                                    match (units[unit].step)(&ids, dispatch) {
+                                        Ok(outs) => outs,
+                                        Err(e) => {
+                                            poison();
+                                            return Err(e);
+                                        }
+                                    };
+                                if outs.len() != batch.len() {
+                                    // Fail fast on a broken Workload impl
+                                    // rather than silently dropping records
+                                    // (served + shed + failures == requests
+                                    // must hold per unit).
+                                    poison();
+                                    bail!(
+                                        "workload '{}' returned {} outcomes for a batch of {}",
+                                        units[unit].label,
+                                        outs.len(),
+                                        batch.len()
+                                    );
+                                }
+                                if opts.exec_floor > 0.0 {
+                                    let spent = clock.now() - t_deq;
+                                    if spent < opts.exec_floor {
+                                        clock.sleep(opts.exec_floor - spent);
+                                    }
+                                }
+                                if let Some(f) = faults {
+                                    // Injected service-time stretch: timing
+                                    // only, predictions unaffected.
+                                    let extra: f64 =
+                                        batch.iter().filter_map(|q| f.take_delay(q.id)).sum();
+                                    if extra > 0.0 {
+                                        clock.sleep(extra);
+                                    }
+                                }
+                                let t_done = clock.now();
+                                let exec_s = (t_done - t_deq).max(0.0);
+                                let exec_ms = exec_s * 1e3;
+                                if let Some(c) = ctl {
+                                    lock::lock(&c.est).observe(dispatch, exec_s);
+                                }
+                                let mut requeue: Vec<Queued> = Vec::new();
+                                {
+                                    let mut recs = lock::lock(results);
+                                    for (mut q, out) in batch.into_iter().zip(outs) {
+                                        q.steps += 1;
+                                        if q.first_done.is_none() {
+                                            q.first_done = Some(t_done);
+                                        }
+                                        match out {
+                                            StepOutcome::Done(o) => {
+                                                let first = q.first_done.expect("set above");
+                                                let first_ms =
+                                                    (first - q.arrival).max(0.0) * 1e3;
+                                                let total_ms =
+                                                    (t_done - q.arrival).max(0.0) * 1e3;
+                                                if let Some(c) = ctl {
+                                                    lock::lock(&c.lat)[q.unit].push(total_ms);
+                                                }
+                                                recs[q.unit].push(RequestRecord {
+                                                    id: q.id,
+                                                    queue_ms: (q.first_deq.expect("set above")
+                                                        - q.arrival)
+                                                        .max(0.0)
+                                                        * 1e3,
+                                                    exec_ms,
+                                                    total_ms,
+                                                    steps: q.steps,
+                                                    first_ms,
+                                                    itl_ms: if q.steps > 1 {
+                                                        (total_ms - first_ms)
+                                                            / (q.steps - 1) as f64
+                                                    } else {
+                                                        0.0
+                                                    },
+                                                    pred: o.pred,
+                                                    tokens: o.tokens,
+                                                    variant,
+                                                });
+                                            }
+                                            StepOutcome::Continue => requeue.push(q),
+                                        }
+                                    }
+                                }
+                                lock::lock(batches).push((unit, take, dispatch, exec_ms, variant));
+                                // The batch is fully accounted — nothing left
+                                // for the supervisor to recover.
+                                *lock::lock(&inflight[w]) = None;
+                                if !requeue.is_empty() {
+                                    // Continuations of admitted requests bypass
+                                    // the queue bound: shedding one
+                                    // mid-generation would strand its state and
+                                    // break served + shed + failures
+                                    // accounting.
+                                    let mut g = lock::lock(shared);
+                                    for q in requeue {
+                                        g.queue.push_back(q);
+                                    }
+                                    cv.notify_one();
                                 }
                             }
-                        }
-                        batches.lock().unwrap().push((unit, take, dispatch, exec_ms, variant));
-                        if !requeue.is_empty() {
-                            // Continuations of admitted requests bypass the
-                            // queue bound: shedding one mid-generation would
-                            // strand its state and break served + shed
-                            // accounting.
-                            let mut g = shared.lock().unwrap();
-                            for q in requeue {
-                                g.queue.push_back(q);
+                        }));
+                        match ran {
+                            Ok(done) => return done,
+                            Err(_) => {
+                                let now = clock.now();
+                                if let Some(b) = lock::lock(&inflight[w]).take() {
+                                    for q in b {
+                                        retry_or_fail(q, false, now);
+                                    }
+                                }
+                                if budget == 0 {
+                                    lock::lock(shared).closed = true;
+                                    cv.notify_all();
+                                    bail!("serve worker {w}: panic respawn budget exhausted");
+                                }
+                                budget -= 1;
+                                respawns.fetch_add(1, Ordering::AcqRel);
+                                clock.sleep(backoff);
+                                backoff = (backoff * 2.0).min(0.05);
                             }
-                            cv.notify_one();
                         }
                     }
                 })
             })
             .collect();
         // Join workers first, then release the control thread — even when
-        // a worker failed, so the scope never deadlocks on the ticker.
+        // a worker failed, so the scope never deadlocks on the ticker. A
+        // join-level panic can only come from outside the supervised
+        // region; it surfaces as a typed error, never a process abort.
         let mut worker_err: Option<anyhow::Error> = None;
         for h in handles {
-            if let Err(e) = h.join().expect("serve worker panicked") {
-                worker_err.get_or_insert(e);
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    worker_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    worker_err
+                        .get_or_insert(anyhow!("serve worker panicked outside supervision"));
+                }
             }
         }
         if let Some(c) = &ctl {
             c.done.store(true, Ordering::Release);
         }
         let transitions = match ctl_handle {
-            Some(h) => h.join().expect("serve controller panicked"),
+            Some(h) => match h.join() {
+                Ok(t) => t,
+                Err(_) => {
+                    worker_err.get_or_insert(anyhow!("serve controller panicked"));
+                    Vec::new()
+                }
+            },
             None => Vec::new(),
         };
         match worker_err {
@@ -1079,16 +1513,40 @@ fn run_units_on(
     })?;
 
     let total_s = clock.now();
-    let shed = std::mem::take(&mut shared.lock().unwrap().shed);
-    let per_unit = results.into_inner().unwrap();
-    let batch_log = batches.into_inner().unwrap();
+    // Teardown reclamation: anything still queued (continuations of a
+    // poisoned run) is failed and its KV state released, so the pool's
+    // post-run leak check holds on every exit path.
+    let leftovers: Vec<Queued> = {
+        let mut g = lock::lock(&shared);
+        g.queue.drain(..).collect()
+    };
+    for q in leftovers {
+        let mut t = lock::lock(&tally);
+        t[q.unit].failures += 1;
+        t[q.unit].reclaimed_blocks += (units[q.unit].reclaim)(&[q.id]);
+    }
+    let shed = std::mem::take(&mut lock::lock(&shared).shed);
+    let per_unit = lock::into_inner(results);
+    let batch_log = lock::into_inner(batches);
+    let fault_tally = lock::lock(&tally).clone();
     let slo_default = opts.controller.as_ref().map(|c| c.slo_p99_ms).unwrap_or(opts.slo_p99_ms);
-    Ok(finalize_stats(&units, per_unit, shed, &batch_log, &transitions, total_s, slo_default))
+    Ok(finalize_stats(
+        &units,
+        per_unit,
+        shed,
+        &batch_log,
+        &transitions,
+        total_s,
+        slo_default,
+        &fault_tally,
+        respawns.load(Ordering::Acquire),
+    ))
 }
 
 /// Aggregate per-unit records + the batch log into [`EngineStats`] — the
 /// one accounting path shared by the threaded engine and the simulator.
 #[cfg(not(pjrt_backend))]
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn finalize_stats(
     units: &[Unit<'_>],
     per_unit: Vec<Vec<RequestRecord>>,
@@ -1097,6 +1555,8 @@ pub(crate) fn finalize_stats(
     transitions: &[Transition],
     total_s: f64,
     slo_default: f64,
+    faults: &[FaultTally],
+    respawns: usize,
 ) -> Vec<EngineStats> {
     let mut out = Vec::with_capacity(units.len());
     for (u, mut records) in per_unit.into_iter().enumerate() {
@@ -1174,6 +1634,12 @@ pub(crate) fn finalize_stats(
             kv_allocs: kv.allocs,
             kv_shared_hits: kv.shared_hits,
             kv_cow_copies: kv.cow_copies,
+            kv_registered_blocks: kv.registered_blocks,
+            failures: faults.get(u).map_or(0, |f| f.failures),
+            retries: faults.get(u).map_or(0, |f| f.retries),
+            timeouts: faults.get(u).map_or(0, |f| f.timeouts),
+            worker_respawns: respawns,
+            kv_reclaimed_blocks: faults.get(u).map_or(0, |f| f.reclaimed_blocks),
             served_by_variant,
             time_in_variant_s,
             transitions: my_transitions,
@@ -1271,10 +1737,67 @@ mod tests {
             (EngineOpts { exec_floor: f64::NAN, ..Default::default() }, "--exec-floor"),
             (EngineOpts { spike: 0.0, ..Default::default() }, "--spike"),
             (EngineOpts { spike: f64::INFINITY, ..Default::default() }, "--spike"),
+            (
+                EngineOpts { request_timeout: -1.0, ..Default::default() },
+                "--request-timeout-ms",
+            ),
+            (
+                EngineOpts { request_timeout: f64::NAN, ..Default::default() },
+                "--request-timeout-ms",
+            ),
+            (EngineOpts { retry_backoff: -0.5, ..Default::default() }, "--retry-backoff-ms"),
+            (
+                EngineOpts { retry_backoff: f64::INFINITY, ..Default::default() },
+                "--retry-backoff-ms",
+            ),
         ] {
             let err = opts.validate().unwrap_err().to_string();
             assert!(err.contains(needle), "{err}");
         }
+    }
+
+    #[test]
+    fn fault_plan_parses_all_kinds() {
+        let p = FaultPlan::parse("kill=1@3, fail=7, fail=5@2, delay=9:250").unwrap();
+        assert_eq!(p.kills, vec![(1, 3)]);
+        assert_eq!(p.fails, vec![(7, 0), (5, 2)]);
+        assert_eq!(p.delays.len(), 1);
+        assert_eq!(p.delays[0].0, 9);
+        assert!((p.delays[0].1 - 0.25).abs() < 1e-12);
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ,  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_plan_rejects_malformed_specs() {
+        for (spec, needle) in [
+            ("kill", "kind=value"),
+            ("boom=3", "unknown fault kind"),
+            ("kill=2", "W@B"),
+            ("kill=x@1", "not a non-negative integer"),
+            ("fail=-3", "not a non-negative integer"),
+            ("delay=3", "ID:MS"),
+            ("delay=3:abc", "not a number"),
+            ("delay=3:-5", ">= 0"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn fault_state_entries_fire_once() {
+        let fs = FaultState::new(FaultPlan::parse("kill=0@1,fail=4@1,delay=2:10").unwrap());
+        assert!(!fs.take_kill(0, 0));
+        assert!(!fs.take_kill(1, 1));
+        assert!(fs.take_kill(0, 1));
+        assert!(!fs.take_kill(0, 1), "kill entries are one-shot");
+        assert!(!fs.take_fail(4, 0));
+        assert!(fs.take_fail(4, 1));
+        assert!(!fs.take_fail(4, 1), "fail entries are one-shot");
+        assert!(fs.take_delay(2).is_some());
+        assert!(fs.take_delay(2).is_none(), "delay entries are one-shot");
     }
 
     #[test]

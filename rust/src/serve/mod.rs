@@ -34,6 +34,14 @@
 //!   queueing semantics on the virtual clock, for bit-reproducible
 //!   controller trajectories (`run_fleet_sim`).
 //!
+//! The engine is fault-tolerant: worker panics are caught and supervised
+//! (bounded respawns, exponential backoff), requests carry deadlines and
+//! a retry budget ([`EngineOpts`]), aborted generations return their
+//! paged KV blocks, and a deterministic chaos layer ([`FaultPlan`],
+//! `corp serve --chaos`) injects kills/faults/delays identically into the
+//! live engine and the simulator. See `engine`'s module docs for the
+//! failure model.
+//!
 //! The engine shares one `Runtime` across workers — the native backend is
 //! pure Rust and thread-safe. The gated PJRT path stays on the closed-loop
 //! `measure` (its executables are not shared across threads), on padded
@@ -48,8 +56,8 @@ pub mod workload;
 
 pub use controller::{Action, Controller, ControllerOpts, CostEstimator, MemberCfg, Obs, Transition};
 pub use engine::{
-    run_engine, run_engine_q8, run_fleet, EngineOpts, EngineStats, ErasedMember, FleetMember,
-    RequestRecord, StoreRef,
+    run_engine, run_engine_q8, run_fleet, EngineOpts, EngineStats, ErasedMember, FaultPlan,
+    FleetMember, RequestRecord, StoreRef,
 };
 #[cfg(not(pjrt_backend))]
 pub use sim::{run_fleet_sim, SimCost};

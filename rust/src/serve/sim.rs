@@ -19,6 +19,14 @@
 //! estimator observes the simulated service times, so its decisions track
 //! the cost model exactly as they would track measured wall time in
 //! production.
+//!
+//! The chaos layer (`EngineOpts::chaos`) is threaded through here too:
+//! injected kills take a simulated server dark for the supervisor backoff
+//! and route its batch through the retry path, dispatch faults and
+//! deadline expiries resolve before the step runs, and delays stretch the
+//! drawn service time — all keyed on schedule-independent identities
+//! (request id, per-server dispatch ordinal), so a fault trajectory is as
+//! bit-reproducible as a fault-free one.
 
 #![cfg(not(pjrt_backend))]
 
@@ -30,8 +38,8 @@ use anyhow::{bail, Result};
 use crate::serve::clock::{Clock, VirtualClock};
 use crate::serve::controller::{Action, Controller, CostEstimator, MemberCfg, Obs, Transition};
 use crate::serve::engine::{
-    arrival_order, arrival_times, finalize_stats, EngineOpts, EngineStats, ErasedMember, Queued,
-    RequestRecord, Unit,
+    arrival_order, arrival_times, finalize_stats, EngineOpts, EngineStats, ErasedMember,
+    FaultState, FaultTally, Queued, RequestRecord, Unit, RESPAWN_BACKOFF_S, RESPAWN_BUDGET,
 };
 use crate::serve::workload::{DispatchPolicy, StepOutcome};
 use crate::util::Pcg64;
@@ -94,6 +102,11 @@ enum EvKind {
     Done { server: usize },
     /// Controller tick.
     Tick,
+    /// A killed server comes back after its supervisor backoff.
+    Respawn { server: usize },
+    /// A retried request's backoff (`not_before`) expires; the event
+    /// carries nothing — it exists to re-run the schedule pass.
+    Wake,
 }
 
 struct Ev {
@@ -155,6 +168,22 @@ struct Sim<'u, 's> {
     fired: usize,
     tick_arr_mark: usize,
     closed: bool,
+    /// The same one-shot chaos plan the threaded engine consumes; keys
+    /// are schedule-independent (request id / server dispatch ordinal),
+    /// so the replayed trajectory is identical.
+    faults: Option<FaultState>,
+    tally: Vec<FaultTally>,
+    /// Per-server: alive flag, remaining respawn budget, next backoff,
+    /// and the server's own dispatch ordinal (the `kill=W@B` key).
+    alive: Vec<bool>,
+    budget: Vec<usize>,
+    backoff: Vec<f64>,
+    dispatch_ord: Vec<usize>,
+    respawns: usize,
+    /// Cumulative fault events (timeouts + retries + failures), windowed
+    /// per controller tick into `Obs::fault_rate`.
+    fault_events: usize,
+    tick_fault_mark: usize,
 }
 
 impl Sim<'_, '_> {
@@ -164,17 +193,48 @@ impl Sim<'_, '_> {
     }
 
     /// Move every queued same-unit request into server `s`'s open batch.
+    /// Requests whose retry backoff (`not_before`) has not expired are
+    /// left in place, as in the threaded workers.
     fn top_up(&mut self, s: usize) {
+        let now = self.clock.now();
         if let ServerState::Waiting { unit, batch, .. } = &mut self.servers[s] {
             let unit = *unit;
             let mut i = 0;
             while batch.len() < self.b_art && i < self.queue.len() {
-                if self.queue[i].unit == unit {
+                if self.queue[i].unit == unit && self.queue[i].not_before <= now {
                     batch.push(self.queue.remove(i).expect("indexed item"));
                 } else {
                     i += 1;
                 }
             }
+        }
+    }
+
+    /// Route a timed-out / faulted / kill-recovered request: re-enqueue
+    /// with its original arrival while retry budget remains, else a
+    /// counted failure whose engine-side KV state is reclaimed. Mirrors
+    /// the threaded engine's `retry_or_fail` exactly.
+    fn retry_or_fail(&mut self, mut q: Queued, timed_out: bool) {
+        let now = self.clock.now();
+        if timed_out {
+            self.tally[q.unit].timeouts += 1;
+        }
+        self.fault_events += 1;
+        if q.tries < self.opts.max_retries {
+            q.tries += 1;
+            self.tally[q.unit].retries += 1;
+            q.not_before = if self.opts.retry_backoff > 0.0 {
+                now + self.opts.retry_backoff * (1u64 << (q.tries - 1).min(16)) as f64
+            } else {
+                0.0
+            };
+            if q.not_before > now {
+                self.push_ev(q.not_before, EvKind::Wake);
+            }
+            self.queue.push_back(q);
+        } else {
+            self.tally[q.unit].failures += 1;
+            self.tally[q.unit].reclaimed_blocks += (self.units[q.unit].reclaim)(&[q.id]);
         }
     }
 
@@ -189,6 +249,50 @@ impl Sim<'_, '_> {
                     return Ok(());
                 }
             };
+        // Deadlines and injected dispatch faults resolve before the step
+        // runs — same ordering as the threaded workers, so a retried
+        // request reproduces its fault-free prediction bit-for-bit.
+        if self.opts.request_timeout > 0.0 || self.faults.is_some() {
+            let now = self.clock.now();
+            let timeout_s = self.opts.request_timeout;
+            for q in std::mem::take(&mut batch) {
+                if timeout_s > 0.0 && now > q.arrival + (q.tries + 1) as f64 * timeout_s {
+                    self.retry_or_fail(q, true);
+                } else if self
+                    .faults
+                    .as_ref()
+                    .map_or(false, |f| f.take_fail(q.id, q.steps))
+                {
+                    self.retry_or_fail(q, false);
+                } else {
+                    batch.push(q);
+                }
+            }
+            if batch.is_empty() {
+                return Ok(());
+            }
+        }
+        // Injected kill, keyed on this server's own dispatch ordinal: the
+        // batch never executes; its requests take the retry path, the
+        // server goes dark and comes back after the supervisor backoff.
+        let my_ord = self.dispatch_ord[s];
+        self.dispatch_ord[s] += 1;
+        if self.faults.as_ref().map_or(false, |f| f.take_kill(s, my_ord)) {
+            if self.budget[s] == 0 {
+                bail!("serve worker {s}: panic respawn budget exhausted");
+            }
+            self.budget[s] -= 1;
+            self.respawns += 1;
+            for q in batch {
+                self.retry_or_fail(q, false);
+            }
+            self.alive[s] = false;
+            let back = self.backoff[s];
+            self.backoff[s] = (back * 2.0).min(0.05);
+            let t = self.clock.now() + back;
+            self.push_ev(t, EvKind::Respawn { server: s });
+            return Ok(());
+        }
         let take = batch.len();
         let dispatch = if self.controller.is_some()
             && self.units[unit].policy == DispatchPolicy::Auto
@@ -220,7 +324,13 @@ impl Sim<'_, '_> {
         }
         let u = self.jitter_rng.uniform();
         let cost = self.costs[unit.min(self.costs.len() - 1)].cost(variant, dispatch, u);
-        let service = cost.max(self.opts.exec_floor);
+        let mut service = cost.max(self.opts.exec_floor);
+        if let Some(f) = self.faults.as_ref() {
+            // Injected service-time stretch: timing only; the engine's
+            // measured exec time includes it, so the estimator sees it
+            // here too.
+            service += batch.iter().filter_map(|q| f.take_delay(q.id)).sum::<f64>();
+        }
         self.est.observe(dispatch, service);
         let exec_ms = service * 1e3;
         self.batch_log.push((unit, take, dispatch, exec_ms, variant));
@@ -247,8 +357,14 @@ impl Sim<'_, '_> {
             }
         }
         for s in 0..self.servers.len() {
-            while matches!(self.servers[s], ServerState::Idle) {
-                let Some(head) = self.queue.pop_front() else { break };
+            while self.alive[s] && matches!(self.servers[s], ServerState::Idle) {
+                // Head = oldest queued request whose retry backoff has
+                // expired (the threaded workers scan the same way).
+                let now = self.clock.now();
+                let Some(at) = self.queue.iter().position(|q| q.not_before <= now) else {
+                    break;
+                };
+                let head = self.queue.remove(at).expect("indexed item");
                 let unit = head.unit;
                 self.gen += 1;
                 let gen = self.gen;
@@ -288,6 +404,8 @@ impl Sim<'_, '_> {
                 steps: 0,
                 first_deq: None,
                 first_done: None,
+                tries: 0,
+                not_before: 0.0,
             });
         }
     }
@@ -346,6 +464,9 @@ impl Sim<'_, '_> {
         let arrival_rate =
             (self.fired - self.tick_arr_mark) as f64 / copts.tick_s.max(1e-4);
         self.tick_arr_mark = self.fired;
+        let fault_rate =
+            (self.fault_events - self.tick_fault_mark) as f64 / copts.tick_s.max(1e-4);
+        self.tick_fault_mark = self.fault_events;
         let p99: Vec<Option<f64>> = self
             .lat
             .iter_mut()
@@ -360,8 +481,8 @@ impl Sim<'_, '_> {
                 }
             })
             .collect();
-        let actions =
-            controller.tick(&Obs { t, queue_frac, arrival_rate, p99_ms: &p99 }, &self.est);
+        let actions = controller
+            .tick(&Obs { t, queue_frac, arrival_rate, fault_rate, p99_ms: &p99 }, &self.est);
         for a in actions {
             match a {
                 Action::MaxWait(w) => self.wait_s = w.max(0.0),
@@ -402,11 +523,21 @@ impl Sim<'_, '_> {
                 }
                 EvKind::Done { server } => self.on_done(server),
                 EvKind::Tick => self.on_tick(),
+                EvKind::Respawn { server } => self.alive[server] = true,
+                EvKind::Wake => {}
             }
             self.schedule_pass()?;
             if self.finished() {
                 break;
             }
+        }
+        // Anything still queued at teardown (every server dead, or the
+        // run poisoned) is a counted failure whose KV state is reclaimed
+        // — the engine's teardown drain, so the leak check holds on
+        // every exit path.
+        for q in std::mem::take(&mut self.queue) {
+            self.tally[q.unit].failures += 1;
+            self.tally[q.unit].reclaimed_blocks += (self.units[q.unit].reclaim)(&[q.id]);
         }
         let total_s = self.clock.now();
         let transitions: Vec<Transition> = self
@@ -428,6 +559,8 @@ impl Sim<'_, '_> {
             &transitions,
             total_s,
             slo_default,
+            &self.tally,
+            self.respawns,
         ))
     }
 }
@@ -497,6 +630,15 @@ pub fn run_fleet_sim(
         fired: 0,
         tick_arr_mark: 0,
         closed: false,
+        faults: opts.chaos.clone().filter(|p| !p.is_empty()).map(FaultState::new),
+        tally: vec![FaultTally::default(); n_units],
+        alive: vec![true; opts.workers],
+        budget: vec![RESPAWN_BUDGET; opts.workers],
+        backoff: vec![RESPAWN_BACKOFF_S; opts.workers],
+        dispatch_ord: vec![0; opts.workers],
+        respawns: 0,
+        fault_events: 0,
+        tick_fault_mark: 0,
     };
     sim.run()
 }

@@ -35,7 +35,7 @@ use crate::data::{Split, TextGen, VisionGen};
 use crate::exec::{argmax, DecodeMode, DecodePlan, DecodeState, ForwardPlan, PlanLadder};
 use crate::model::{ModelConfig, ModelKind};
 use crate::tensor::Tensor;
-use crate::util::Pcg64;
+use crate::util::{lock, Pcg64};
 
 /// How a formed batch of `take ≤ max_batch` requests is dispatched.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -247,6 +247,15 @@ pub trait Workload: Sync {
         reqs: &[&Self::Req],
         dispatch: usize,
     ) -> Result<Vec<StepOutcome>>;
+
+    /// Release any engine-side state a request still holds when the engine
+    /// aborts it (retry budget exhausted, injected fault, or a run torn
+    /// down with the request still queued). Returns the number of KV pool
+    /// blocks returned to the free list. Single-shot workloads hold no
+    /// such state — the default is a no-op.
+    fn reclaim(&self, _req: &Self::Req) -> usize {
+        0
+    }
 }
 
 /// Wrap a single-shot batch's outputs: every request finishes in one step.
@@ -601,7 +610,7 @@ impl Workload for GenWorkload {
         if reqs.is_empty() || dispatch < reqs.len() {
             bail!("run_step: {} requests into dispatch size {dispatch}", reqs.len());
         }
-        let mut guards: Vec<_> = reqs.iter().map(|r| r.state.lock().unwrap()).collect();
+        let mut guards: Vec<_> = reqs.iter().map(|r| lock::lock(&r.state)).collect();
         // Prefill steps feed (a chunk of) the prompt; decode steps feed the
         // fed-back argmax token. Both kinds batch together in one dispatch
         // (per-sequence lengths ride along), which is exactly how a long
@@ -697,6 +706,15 @@ impl Workload for GenWorkload {
             }
         }
         Ok(outs)
+    }
+
+    /// Abort a generation mid-flight: drop its decode state so any paged
+    /// KV blocks it still holds go back to the pool immediately. Returns
+    /// the block count released (shared/registered blocks stay pinned by
+    /// their other referents).
+    fn reclaim(&self, req: &GenRequest) -> usize {
+        let mut g = lock::lock(&req.state);
+        g.dec.take().map_or(0, |d| d.kv_blocks())
     }
 }
 

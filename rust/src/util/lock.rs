@@ -1,0 +1,97 @@
+//! Poison-recovering lock helpers.
+//!
+//! `std`'s `Mutex`/`RwLock` poison their guard when a holder panics; the
+//! idiomatic `.lock().unwrap()` then *cascades* that panic into every other
+//! thread touching the lock — one worker's bug tears down the whole serving
+//! fleet. The fault-tolerant engine treats a panic as a per-request failure
+//! (see `serve/engine.rs`), so the shared state must stay usable after one.
+//!
+//! Every structure guarded by these helpers is written transactionally —
+//! state is mutated after the fallible work, or is a plain counter/queue
+//! whose partial update is harmless — so recovering the guard with
+//! [`std::sync::PoisonError::into_inner`] is sound: the worst case is one
+//! request's bookkeeping missing, which the failure accounting records
+//! anyway. A grep gate in `scripts/check.sh` keeps bare `.lock().unwrap()`
+//! out of `serve/` and `exec/` so new call sites go through here.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Acquire a read guard, recovering from writer poisoning.
+pub fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Acquire a write guard, recovering from poisoning.
+pub fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Consume a mutex, recovering its value even if poisoned.
+pub fn into_inner<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(|e| e.into_inner())
+}
+
+/// [`Condvar::wait`] that recovers a poisoned guard instead of panicking.
+pub fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+/// [`Condvar::wait_timeout`] with the same poison recovery; the timeout
+/// flag is dropped (callers re-check their own deadline anyway).
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> MutexGuard<'a, T> {
+    cv.wait_timeout(g, dur).map(|(g, _)| g).unwrap_or_else(|e| e.into_inner().0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recovers_after_holder_panic() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7);
+        *lock(&m) = 9;
+        assert_eq!(into_inner(Arc::try_unwrap(m).unwrap()), 9);
+    }
+
+    #[test]
+    fn rwlock_recovers_after_writer_panic() {
+        let l = Arc::new(RwLock::new(vec![1, 2]));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(read(&l).len(), 2);
+        write(&l).push(3);
+        assert_eq!(read(&l).len(), 3);
+    }
+
+    #[test]
+    fn condvar_wrappers_pass_through() {
+        let m = Mutex::new(false);
+        let cv = Condvar::new();
+        let g = lock(&m);
+        let g = wait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(!*g);
+    }
+}

@@ -12,6 +12,7 @@ pub mod json;
 pub mod log;
 pub mod timer;
 pub mod cli;
+pub mod lock;
 pub mod prop;
 pub mod bench;
 pub mod threads;

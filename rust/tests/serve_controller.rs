@@ -150,6 +150,7 @@ fn controller_never_flaps_within_dwell_under_adversarial_load() {
                     t: tick as f64 * 0.01,
                     queue_frac,
                     arrival_rate: 100.0 + 900.0 * rng.uniform(),
+                    fault_rate: 0.0,
                     p99_ms: &p99,
                 },
                 &est,

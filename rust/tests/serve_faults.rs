@@ -1,0 +1,401 @@
+//! Fault-tolerance integration tests: the deterministic chaos layer
+//! ([`FaultPlan`]) driven through both the threaded engine and the
+//! discrete-event simulator.
+//!
+//! The contract under test: injected worker kills, dispatch faults, and
+//! deadline expiries change *when* requests run (retries, respawns,
+//! failures) but never *what* surviving requests compute — every
+//! non-failed request's prediction is bitwise-equal to the fault-free
+//! run's, accounting balances (`served + shed + failures == offered`),
+//! and aborted generations return their paged KV blocks
+//! (`kv_blocks_in_use == kv_registered_blocks` on every exit path).
+//!
+//! Compiled out under `--cfg pjrt_backend` (no threaded engine, no sim).
+#![cfg(not(pjrt_backend))]
+
+use anyhow::{bail, Result};
+
+use corp::data::DATA_SEED;
+use corp::exec::Executor;
+use corp::model::{ModelConfig, WeightStore};
+use corp::runtime::Runtime;
+use corp::serve::{
+    run_engine, run_fleet_sim, EngineOpts, EngineStats, FaultPlan, FleetMember, GenWorkload,
+    Plans, RequestOutput, SimCost, StepOutcome, VisionWorkload, Workload,
+};
+
+fn native_runtime() -> Runtime {
+    Runtime::new(std::env::temp_dir().join("corp_serve_faults_no_artifacts")).unwrap()
+}
+
+fn vit_t() -> &'static ModelConfig {
+    ModelConfig::by_name("vit_t").unwrap()
+}
+
+/// `(id, pred)` per served request — records are sorted by id, so two
+/// runs agree iff they served the same requests with identical outputs.
+fn preds(s: &EngineStats) -> Vec<(usize, i32)> {
+    s.records.iter().map(|r| (r.id, r.pred)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// FaultPlan grammar
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fault_plan_parse_accepts_and_rejects() {
+    let p = FaultPlan::parse(" kill=0@1 , fail=3, fail=5@2 ,delay=7:20.5,, ").unwrap();
+    assert_eq!(p.kills, vec![(0, 1)]);
+    assert_eq!(p.fails, vec![(3, 0), (5, 2)]);
+    assert_eq!(p.delays.len(), 1);
+    assert_eq!(p.delays[0].0, 7);
+    assert!((p.delays[0].1 - 0.0205).abs() < 1e-12, "ms spec parses into seconds");
+    assert!(FaultPlan::parse("").unwrap().is_empty());
+    assert!(!p.is_empty());
+    for (spec, needle) in [
+        ("kill=0", "W@B"),
+        ("kill=zero@1", "not a non-negative integer"),
+        ("fail=x", "not a non-negative integer"),
+        ("delay=3", "ID:MS"),
+        ("delay=3:abc", "not a number"),
+        ("delay=3:-5", ">= 0"),
+        ("oops=1", "unknown fault kind"),
+        ("fail3", "kind=value"),
+    ] {
+        let err = FaultPlan::parse(spec).unwrap_err().to_string();
+        assert!(err.contains(needle), "{spec}: {err}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded engine: chaos changes timing, never results
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chaos_engine_matches_fault_free_predictions_bitwise() {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 7);
+    let workload = VisionWorkload::new(cfg, DATA_SEED).unwrap();
+    let mk = |chaos: Option<FaultPlan>| EngineOpts {
+        workers: 1, // every batch is worker 0's → the kill ordinal is exact
+        rate: 1e12,
+        requests: 24,
+        max_batch: 8,
+        max_wait: 0.002,
+        queue_cap: 1024,
+        max_retries: 2,
+        chaos,
+        ..Default::default()
+    };
+    let base = run_engine(&exec, &w, &workload, &mk(None)).unwrap();
+    let plan = FaultPlan::parse("kill=0@1,fail=3,fail=7@0,delay=5:5").unwrap();
+    let chaos = run_engine(&exec, &w, &workload, &mk(Some(plan))).unwrap();
+    // The kill is absorbed (no process abort, no run error), the killed
+    // batch and both faulted dispatches retry, and everything is served.
+    assert_eq!(chaos.served, 24);
+    assert_eq!(chaos.shed, 0);
+    assert_eq!(chaos.failures, 0);
+    assert_eq!(chaos.timeouts, 0);
+    assert_eq!(chaos.worker_respawns, 1);
+    // ≥ 1 request rode the killed batch + the two injected dispatch faults.
+    assert!(chaos.retries >= 3, "retries {}", chaos.retries);
+    assert_eq!(base.worker_respawns, 0);
+    assert_eq!(base.retries, 0);
+    // The headline guarantee: per-request outputs are bitwise-unchanged.
+    assert_eq!(preds(&base), preds(&chaos), "chaos changed served predictions");
+}
+
+#[test]
+fn retry_budget_exhaustion_counts_failures() {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 9);
+    let workload = VisionWorkload::new(cfg, DATA_SEED).unwrap();
+    let opts = EngineOpts {
+        workers: 2,
+        rate: 1e12,
+        requests: 12,
+        max_batch: 4,
+        max_wait: 0.002,
+        queue_cap: 1024,
+        max_retries: 0, // no budget: the injected fault is terminal
+        chaos: Some(FaultPlan::parse("fail=5").unwrap()),
+        ..Default::default()
+    };
+    let s = run_engine(&exec, &w, &workload, &opts).unwrap();
+    assert_eq!(s.failures, 1);
+    assert_eq!(s.served, 11);
+    assert_eq!(s.served + s.shed + s.failures, 12, "accounting must balance");
+    assert_eq!(s.retries, 0);
+    assert!(s.records.iter().all(|r| r.id != 5), "failed requests leave no record");
+    // Vision requests hold no KV state — nothing to reclaim.
+    assert_eq!(s.kv_reclaimed_blocks, 0);
+}
+
+#[test]
+fn timeouts_retry_then_fail_with_balanced_accounting() {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let w = WeightStore::init(cfg, 11);
+    let workload = VisionWorkload::new(cfg, DATA_SEED).unwrap();
+    // Saturated arrivals into a floored (20 ms/batch) single worker with a
+    // 1 ms deadline: most requests expire at dispatch, burn their one
+    // retry, and fail — the wall-clock timings vary but the accounting
+    // identity and the counter directions are invariant.
+    let opts = EngineOpts {
+        workers: 1,
+        rate: 1e12,
+        requests: 32,
+        max_batch: 4,
+        max_wait: 0.0,
+        queue_cap: 1024,
+        exec_floor: 0.02,
+        request_timeout: 0.001,
+        max_retries: 1,
+        retry_backoff: 0.0005,
+        ..Default::default()
+    };
+    let s = run_engine(&exec, &w, &workload, &opts).unwrap();
+    assert_eq!(s.served + s.shed + s.failures, 32, "accounting must balance");
+    assert!(s.timeouts > 0, "the deadline must fire under a 20 ms floor");
+    assert!(s.failures > 0, "double-expired requests must fail");
+    assert!(s.retries > 0, "first expiries must retry");
+    assert!(s.timeouts >= s.failures, "every failure here expired at least twice");
+    assert_eq!(s.worker_respawns, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Generation workloads: aborts return their paged KV blocks
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gen_fault_reclaims_kv_blocks_mid_generation() {
+    let rt = native_runtime();
+    let gpt = ModelConfig::by_name("gpt_s").unwrap();
+    let exec = Executor::new(&rt, gpt);
+    let w = WeightStore::init(gpt, 6);
+    // Chunked prefill guarantees every request reaches a step 1 holding
+    // live KV blocks from its first chunk, so the injected fault below
+    // always lands mid-sequence with state to reclaim (prompts are ≥ 4
+    // tokens — `default_min_prompt` — hence ≥ 2 chunks of 2).
+    let wl =
+        GenWorkload::new(gpt, DATA_SEED).unwrap().with_max_new(4).with_prefill_chunk(2);
+    let victim = 2usize;
+    let mk = |chaos: Option<FaultPlan>| EngineOpts {
+        workers: 2,
+        rate: 1e12,
+        requests: 6,
+        max_batch: 4,
+        max_wait: 0.002,
+        queue_cap: 1024,
+        max_retries: 0,
+        chaos,
+        ..Default::default()
+    };
+    let base = run_engine(&exec, &w, &wl, &mk(None)).unwrap();
+    let plan = FaultPlan { fails: vec![(victim, 1)], ..Default::default() };
+    let s = run_engine(&exec, &w, &wl, &mk(Some(plan))).unwrap();
+    assert_eq!(s.failures, 1);
+    assert_eq!(s.served, 5);
+    assert!(s.records.iter().all(|r| r.id != victim));
+    // The aborted sequence's prefill blocks went back to the pool …
+    assert!(s.kv_reclaimed_blocks > 0, "mid-generation abort must return KV blocks");
+    // … and nothing leaked: only registry-pinned blocks may remain.
+    assert_eq!(s.kv_blocks_in_use, s.kv_registered_blocks, "leaked KV blocks");
+    assert_eq!(base.kv_blocks_in_use, base.kv_registered_blocks);
+    // Survivors are bitwise-unchanged relative to the fault-free run.
+    let survivors: Vec<(usize, i32)> =
+        preds(&base).into_iter().filter(|&(id, _)| id != victim).collect();
+    assert_eq!(survivors, preds(&s), "fault changed surviving generations");
+}
+
+#[test]
+fn gen_shedding_under_overload_leaks_no_kv_blocks() {
+    let rt = native_runtime();
+    let gpt = ModelConfig::by_name("gpt_s").unwrap();
+    let exec = Executor::new(&rt, gpt);
+    let w = WeightStore::init(gpt, 6);
+    // Chunked prefill forces every request through ≥ 2 steps, so admitted
+    // generations always re-enqueue continuations into the full queue.
+    let wl =
+        GenWorkload::new(gpt, DATA_SEED).unwrap().with_max_new(3).with_prefill_chunk(2);
+    // Saturated arrivals into a 2-deep queue: fresh arrivals are shed, but
+    // admitted generations' continuations bypass the bound — a shed
+    // continuation would strand its KV blocks (the regression this pins).
+    let opts = EngineOpts {
+        workers: 1,
+        rate: 1e12,
+        requests: 16,
+        max_batch: 2,
+        max_wait: 0.0,
+        queue_cap: 2,
+        exec_floor: 0.005,
+        ..Default::default()
+    };
+    let s = run_engine(&exec, &w, &wl, &opts).unwrap();
+    assert!(s.shed > 0, "a 2-deep queue must shed under saturation");
+    assert_eq!(s.served + s.shed + s.failures, 16, "accounting must balance");
+    assert!(s.records.iter().any(|r| r.steps > 1), "some generation decoded");
+    assert_eq!(
+        s.kv_blocks_in_use, s.kv_registered_blocks,
+        "shed/served churn leaked KV blocks"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Simulator: chaos trajectories are bit-reproducible
+// ---------------------------------------------------------------------------
+
+/// Single-shot echo (prediction = pure function of the id): fault tests
+/// exercise *routing*, so model math is reduced to arithmetic.
+struct EchoWorkload {
+    cfg: &'static ModelConfig,
+}
+
+impl Workload for EchoWorkload {
+    type Req = usize;
+
+    fn cfg(&self) -> &'static ModelConfig {
+        self.cfg
+    }
+
+    fn label(&self) -> &'static str {
+        "echo"
+    }
+
+    fn synth(&self, id: usize) -> usize {
+        id
+    }
+
+    fn run_step(
+        &self,
+        _plans: &Plans<'_, '_>,
+        reqs: &[&usize],
+        dispatch: usize,
+    ) -> Result<Vec<StepOutcome>> {
+        if reqs.is_empty() || dispatch < reqs.len() {
+            bail!("echo run_step: {} requests into dispatch {dispatch}", reqs.len());
+        }
+        Ok(reqs
+            .iter()
+            .map(|&&id| {
+                StepOutcome::Done(RequestOutput { pred: ((id as i32) * 31) % 97, tokens: 1 })
+            })
+            .collect())
+    }
+}
+
+/// Bit-level digest of a simulated trajectory, fault accounting included.
+fn digest(stats: &[EngineStats]) -> Vec<u64> {
+    let mut d = Vec::new();
+    for s in stats {
+        for n in [s.served, s.shed, s.failures, s.retries, s.timeouts] {
+            d.push(n as u64);
+        }
+        d.push(s.worker_respawns as u64);
+        d.push(s.kv_reclaimed_blocks as u64);
+        d.push(s.p50_ms.to_bits());
+        d.push(s.p99_ms.to_bits());
+        for r in &s.records {
+            d.push(r.id as u64);
+            d.push(r.pred as u64);
+            d.push(r.steps as u64);
+            d.push(r.total_ms.to_bits());
+            d.push(r.queue_ms.to_bits());
+        }
+    }
+    d
+}
+
+fn chaos_sim(workers: usize) -> Vec<EngineStats> {
+    let rt = native_runtime();
+    let cfg = vit_t();
+    let exec = Executor::new(&rt, cfg);
+    let dense = WeightStore::init(cfg, 5);
+    let wl = EchoWorkload { cfg };
+    let opts = EngineOpts {
+        workers,
+        rate: 500.0 * workers as f64, // 0.5× fleet capacity: no shedding
+        requests: 1,                  // ignored (per-member count below)
+        max_batch: 8,
+        max_wait: 0.004,
+        queue_cap: 64,
+        seed: 11,
+        max_retries: 3,
+        chaos: Some(FaultPlan::parse("kill=0@1,fail=3,fail=9@0,delay=5:20").unwrap()),
+        ..Default::default()
+    };
+    let members = vec![FleetMember::new(&exec, &dense, &wl, 60).erased()];
+    let cost = SimCost::affine(8, 0.004, 0.0005, &[1.0]);
+    run_fleet_sim(members, &[cost], &opts).unwrap()
+}
+
+#[test]
+fn sim_chaos_deterministic_and_served_outputs_worker_invariant() {
+    let mut all_preds: Vec<Vec<(usize, i32)>> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let s = chaos_sim(workers);
+        assert_eq!(s.len(), 1);
+        let s0 = &s[0];
+        // The retry budget absorbs every injected fault: nothing fails.
+        assert_eq!(s0.served, 60, "workers {workers}");
+        assert_eq!(s0.shed, 0, "workers {workers}");
+        assert_eq!(s0.failures, 0, "workers {workers}");
+        assert_eq!(s0.worker_respawns, 1, "workers {workers}: kill=0@1 must fire");
+        assert!(s0.retries >= 3, "workers {workers}: retries {}", s0.retries);
+        for r in &s0.records {
+            assert_eq!(r.pred, ((r.id as i32) * 31) % 97, "workers {workers} id {}", r.id);
+        }
+        // Same inputs → byte-identical trajectory, fault tallies included.
+        assert_eq!(
+            digest(&s),
+            digest(&chaos_sim(workers)),
+            "workers {workers}: chaos trajectory not reproducible"
+        );
+        all_preds.push(preds(s0));
+    }
+    // Faults key on request ids and per-server ordinals — never on global
+    // schedule order — so served outputs are invariant across fleet sizes.
+    assert_eq!(all_preds[0], all_preds[1], "1 vs 2 workers diverged");
+    assert_eq!(all_preds[0], all_preds[2], "1 vs 4 workers diverged");
+}
+
+#[test]
+fn sim_timeout_accounting_balances_deterministically() {
+    let run = || {
+        let rt = native_runtime();
+        let cfg = vit_t();
+        let exec = Executor::new(&rt, cfg);
+        let dense = WeightStore::init(cfg, 5);
+        let wl = EchoWorkload { cfg };
+        let opts = EngineOpts {
+            workers: 1,
+            rate: 1e12, // everything due at t = 0 behind a 50 ms/batch server
+            requests: 1,
+            max_batch: 4,
+            max_wait: 0.0,
+            queue_cap: 64,
+            seed: 3,
+            request_timeout: 0.06,
+            max_retries: 1,
+            ..Default::default()
+        };
+        let members = vec![FleetMember::new(&exec, &dense, &wl, 40).erased()];
+        let cost = SimCost::affine(4, 0.05, 0.0, &[1.0]);
+        run_fleet_sim(members, &[cost], &opts).unwrap()
+    };
+    let s = run();
+    let s0 = &s[0];
+    assert_eq!(s0.served + s0.shed + s0.failures, 40, "accounting must balance");
+    assert!(s0.served > 0, "the head of the queue beats its deadline");
+    assert!(s0.timeouts > 0);
+    assert!(s0.retries > 0);
+    assert!(s0.failures > 0, "double-expired requests must fail");
+    assert!(s0.timeouts >= s0.failures);
+    // The virtual clock makes even the failure pattern bit-reproducible.
+    assert_eq!(digest(&s), digest(&run()), "timeout trajectory not reproducible");
+}

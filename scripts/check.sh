@@ -52,6 +52,17 @@ if grep -rn --include='*.rs' 'partial_cmp(.*)\.unwrap()' rust/src/; then
     exit 1
 fi
 
+# Poison-safety gate: serving and execution code must take mutexes through
+# the util::lock helpers (which recover the data from a poisoned lock after
+# an absorbed worker panic) — a bare `.lock().unwrap()` / `.read().unwrap()`
+# / `.write().unwrap()` there would turn one supervised panic into a
+# cascade of poison panics on every other thread.
+echo "==> grep gate: no bare .lock()/.read()/.write().unwrap() in rust/src/serve + rust/src/exec"
+if grep -rn --include='*.rs' -E '\.(lock|read|write)\(\)\s*\.unwrap\(\)' rust/src/serve/ rust/src/exec/; then
+    echo "error: poison-unsafe mutex access (use crate::util::lock::{lock,read,write})" >&2
+    exit 1
+fi
+
 if [[ "${1:-}" != "--no-bench" ]]; then
     # corp-bench-linalg/v2: every kernel cell times the full dispatch
     # ladder (runtime-selected SIMD tile, forced-portable via
@@ -65,13 +76,16 @@ if [[ "${1:-}" != "--no-bench" ]]; then
 
     # The smoke grid sweeps all three workloads (vision + text + gen, the
     # gen cells on kv, kv+chunked/shared-prefix, and prefill decode) and
-    # both dispatch policies — corp-bench-serve/v6 axes with the paged-KV
+    # both dispatch policies — corp-bench-serve/v7 axes with the paged-KV
     # telemetry columns, the load-spike controller cell (controller
     # off vs on, measured cost tables through the deterministic
-    # simulator), and the compensated_int8 variant rows (the
+    # simulator), the compensated_int8 variant rows (the
     # pruned+compensated store weight-quantized to int8, served through
-    # run_engine_q8). A failed cell exits non-zero and leaves no stale
-    # BENCH_serve.json behind.
+    # run_engine_q8), and the chaos cell (seeded kill/fail/delay plan
+    # through the simulator with the fault-rate degrade signal armed,
+    # reporting failures/retries/timeouts/respawns/reclaims and goodput).
+    # A failed cell exits non-zero and leaves no stale BENCH_serve.json
+    # behind.
     echo "==> bench serve smoke (CORP_BENCH_MODE=smoke)"
     CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- bench serve --json --out BENCH_serve.json
 
@@ -111,6 +125,17 @@ if [[ "${1:-}" != "--no-bench" ]]; then
         serve --model vit_t --sparsity 0.5 --workload vision --requests 48 --rate 300 --spike 3 \
         --workers 1 --max-batch 8 --queue-cap 16 --exec-floor 0.01 \
         --controller --degrade --slo-p99-ms 500
+
+    # Chaos smoke: the fault-tolerant serving path end to end — an
+    # injected worker kill, two dispatch faults, and a delay against a
+    # retry budget of 2. The CLI exits non-zero on a process abort, an
+    # unsupervised worker death, or leaked KV blocks (the post-run
+    # `blocks_in_use == registered_blocks` check), so a zero exit here IS
+    # the assertion.
+    echo "==> serve CLI smoke (chaos: kill + fail + delay, retries)"
+    CORP_BENCH_MODE=smoke cargo run --manifest-path "$MANIFEST" --release -- \
+        serve --model vit_t --sparsity 0 --requests 32 --rate 0 --max-batch 8 --workers 2 \
+        --chaos kill=0@1,fail=3,fail=7@0,delay=5:10 --retries 2 --request-timeout-ms 60000
 
     # Int8 smoke: the quantized serving path end to end. First serve the
     # int8 store directly (run_engine_q8 — per-channel scales with the
